@@ -1,0 +1,65 @@
+//! Network transparency (paper §3.1 "location transparency" + §3.5's
+//! mem_ref restriction): two actor systems on one host talk over TCP; the
+//! client drives the server's published OpenCL actor through a proxy handle
+//! that is indistinguishable from a local one — and sending a `mem_ref`
+//! across the wire raises the documented error.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example distributed
+//! ```
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::net::Node;
+use caf_ocl::opencl::{Manager, MemRef, Mode, OpenClSystemExt};
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(60);
+
+fn main() -> anyhow::Result<()> {
+    // ---- "server" process: owns the device, publishes the kernel actor ---
+    let server_sys = ActorSystem::new(SystemConfig::default());
+    Manager::load(&server_sys);
+    let server_mngr = server_sys.opencl_manager();
+    let kernel_actor = server_mngr.spawn_simple("empty_1024", Mode::Val, Mode::Val)?;
+    // facades register under names like any actor
+    server_sys.registry().put("device-worker", kernel_actor);
+    // a ref-producing facade for the negative test
+    let ref_actor = server_mngr.spawn_simple("empty_1024", Mode::Val, Mode::Ref)?;
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0")?;
+    println!("server published 'device-worker' at {addr}");
+
+    // ---- "client" process: no device of its own ---------------------------
+    let client_sys = ActorSystem::new(SystemConfig::default());
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "device-worker")?;
+    println!("client proxy: {remote:?}");
+
+    let me = client_sys.scoped();
+    let data: Vec<u32> = (0..1024).map(|i| i * 7).collect();
+    let out: Vec<u32> = me
+        .request(&remote, data.clone())
+        .receive(T)
+        .map_err(|e| anyhow::anyhow!(e.reason))?;
+    assert_eq!(out, data);
+    println!("remote kernel round-trip OK ({} words)", out.len());
+
+    // ---- the mem_ref restriction (design option (a)) ----------------------
+    let server_me = server_sys.scoped();
+    let r: MemRef = server_me
+        .request(&ref_actor, data.clone())
+        .receive(T)
+        .map_err(|e| anyhow::anyhow!(e.reason))?;
+    let err = server_me.request(&remote, r).receive_msg(T);
+    match err {
+        Err(e) => println!("sending a mem_ref over the wire correctly failed:\n  {}", e.reason),
+        Ok(_) => anyhow::bail!("mem_ref crossed the network — restriction broken!"),
+    }
+
+    println!("distributed OK");
+    server.stop();
+    server_mngr.stop_devices();
+    client_sys.shutdown();
+    server_sys.shutdown();
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Heterogeneous offload (paper §5.4, Fig 7): split a Mandelbrot image
+//! between CPU actors and an OpenCL device actor in 10% steps and watch the
+//! total runtime as work shifts to the device.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example mandelbrot_hetero \
+//!     [-- --device tesla|phi|host]
+//! ```
+
+use caf_ocl::actor::{ActorSystem, Behavior, SystemConfig};
+use caf_ocl::opencl::{Manager, Mode, OpenClSystemExt};
+use caf_ocl::sim::{tesla_c2075, xeon_phi_5110p};
+use caf_ocl::util::cli::Args;
+use caf_ocl::workload::mandelbrot_rows;
+use std::time::{Duration, Instant};
+
+const W: usize = 960;
+const H: usize = 540;
+const CHUNK_ROWS: usize = 54; // 10% of the image per device dispatch
+const ITERS: u32 = 100;
+const T: Duration = Duration::from_secs(600);
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let which = args.get_or("device", "tesla");
+    let spec = match which {
+        "tesla" => tesla_c2075(),
+        "phi" => xeon_phi_5110p(),
+        _ => caf_ocl::opencl::DeviceSpec::host(),
+    };
+    println!("offload target: {}", spec.name);
+
+    let system = ActorSystem::new(SystemConfig::default());
+    Manager::load_with(&system, vec![spec]);
+    let mngr = system.opencl_manager();
+
+    // the device actor renders 54-row chunks given a row offset
+    let kernel = format!("mandel_w{W}_h{H}_c{CHUNK_ROWS}_it{ITERS}");
+    let device_actor = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val)?;
+
+    // a CPU actor renders arbitrary row bands natively
+    let cpu_actor = system.spawn(|_| {
+        Behavior::new().on(|_ctx, &(y0, rows): &(usize, usize)| {
+            caf_ocl::actor::reply(mandelbrot_rows(W, H, y0, rows, ITERS))
+        })
+    });
+
+    let me = system.scoped();
+    println!(
+        "{:>8} {:>12} {:>12} {:>12}",
+        "offload", "total [ms]", "cpu [ms]", "device [ms]"
+    );
+    for step in 0..=10usize {
+        let device_chunks = step; // each chunk is 10% of the rows
+        let cpu_rows = H - device_chunks * CHUNK_ROWS;
+        let t0 = Instant::now();
+        // launch device chunks first (async), CPU band in parallel
+        let pending: Vec<_> = (0..device_chunks)
+            .map(|k| {
+                let y0 = (cpu_rows + k * CHUNK_ROWS) as u32;
+                me.request(&device_actor, vec![y0])
+            })
+            .collect();
+        let cpu_pending =
+            (cpu_rows > 0).then(|| me.request(&cpu_actor, (0usize, cpu_rows)));
+        let t_cpu0 = Instant::now();
+        let cpu_part: Vec<u32> = match cpu_pending {
+            Some(p) => p.receive(T).map_err(|e| anyhow::anyhow!(e.reason))?,
+            None => Vec::new(),
+        };
+        let cpu_ms = t_cpu0.elapsed().as_secs_f64() * 1e3;
+        let t_dev0 = Instant::now();
+        let mut dev_part: Vec<u32> = Vec::new();
+        for p in pending {
+            dev_part.extend(p.receive::<Vec<u32>>(T).map_err(|e| anyhow::anyhow!(e.reason))?);
+        }
+        let dev_ms = t_dev0.elapsed().as_secs_f64() * 1e3;
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // verify the composed image equals the all-CPU render
+        if step == 0 || step == 10 {
+            let whole = mandelbrot_rows(W, H, 0, H, ITERS);
+            let mut composed = cpu_part.clone();
+            composed.extend(&dev_part);
+            assert_eq!(composed, whole, "split render must equal whole render");
+        }
+        println!(
+            "{:>7}% {:>12.2} {:>12.2} {:>12.2}",
+            step * 10,
+            total_ms,
+            cpu_ms,
+            dev_ms
+        );
+    }
+
+    println!("mandelbrot_hetero OK");
+    mngr.stop_devices();
+    system.shutdown();
+    Ok(())
+}

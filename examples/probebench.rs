@@ -1,0 +1,23 @@
+use caf_ocl::runtime::*;
+use std::time::{Duration, Instant};
+fn main() {
+    let m = Manifest::load("/tmp/probes").unwrap();
+    let q = DeviceQueue::start("probe", None).unwrap();
+    let t = Duration::from_secs(300);
+    let vals: Vec<u32> = (0..65536u32).map(|i| i.wrapping_mul(2654435761) % 60000).collect();
+    let (b, e) = q.upload(HostData::U32(vals)); e.wait(t).unwrap();
+    let mut names = m.names(); names.sort();
+    for k in names {
+        let meta = m.get(k).unwrap();
+        q.compile(k, m.hlo_path(meta)).wait(t).unwrap();
+        let (o, d) = q.execute(k, vec![b], Dtype::U32, vec![]);
+        d.wait(t).unwrap(); q.free(o);
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            let (o, d) = q.execute(k, vec![b], Dtype::U32, vec![]);
+            d.wait(t).unwrap(); q.free(o);
+        }
+        println!("{:20} {:9.2} ms", k, t0.elapsed().as_secs_f64()/3.0*1e3);
+    }
+    q.stop();
+}

@@ -1,0 +1,52 @@
+//! Quickstart (paper §3.3/§3.4, Listings 1+2): spawn an OpenCL actor for
+//! the square-matrix-multiply kernel and `request` a product.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::opencl::{Manager, Mode, OpenClSystemExt};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // paper Listing 2: load the module, grab the manager
+    let system = ActorSystem::new(SystemConfig::default());
+    Manager::load(&system);
+    let mngr = system.opencl_manager();
+
+    // spawn the OpenCL actor for the 256x256 matmul kernel
+    let mx_dim = 256usize;
+    let worker = mngr.spawn_simple("matmul_256", Mode::Val, Mode::Val)?;
+
+    // request(worker, m, m) ... receive(result)
+    let m: Vec<f32> = (0..mx_dim * mx_dim).map(|i| (i % 7) as f32 * 0.5).collect();
+    let me = system.scoped();
+    let result: Vec<f32> = me
+        .request(&worker, (m.clone(), m.clone()))
+        .receive(Duration::from_secs(60))
+        .map_err(|e| anyhow::anyhow!(e.reason))?;
+
+    // verify against the native CPU baseline and print a corner
+    let want = caf_ocl::workload::matmul_naive(&m, &m, mx_dim);
+    let max_err = result
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("matmul {mx_dim}x{mx_dim} on device \"{}\"", mngr.default_device().name);
+    println!("top-left 4x4 of the product:");
+    for r in 0..4 {
+        let row: Vec<String> = (0..4)
+            .map(|c| format!("{:8.1}", result[r * mx_dim + c]))
+            .collect();
+        println!("  {}", row.join(" "));
+    }
+    println!("max |device - cpu| = {max_err:e}");
+    assert!(max_err < 1e-2, "device result diverges from CPU");
+    println!("quickstart OK");
+
+    mngr.stop_devices();
+    system.shutdown();
+    Ok(())
+}

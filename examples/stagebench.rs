@@ -1,0 +1,44 @@
+use caf_ocl::runtime::*;
+use std::time::{Duration, Instant};
+fn main() {
+    let m = Manifest::load("artifacts").unwrap();
+    let q = DeviceQueue::start("bench", None).unwrap();
+    let n = 65536usize;
+    let names: Vec<String> = ["sort","chunklit","fillslit","interleave","count","scan","move","lut"]
+        .iter().map(|s| format!("wah_{s}_{n}")).collect();
+    for k in &names {
+        let meta = m.get(k).unwrap();
+        q.compile(k, m.hlo_path(meta)).wait(Duration::from_secs(120)).unwrap();
+    }
+    let t = Duration::from_secs(300);
+    let vals: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2654435761) % 512).collect();
+    let (b, e) = q.upload(HostData::U32(vals)); e.wait(t).unwrap();
+    let time_stage = |name: &str, args: Vec<u64>| -> u64 {
+        let (out, done) = q.execute(name, args.clone(), Dtype::U32, vec![]);
+        done.wait(t).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            let (o2, d2) = q.execute(name, args.clone(), Dtype::U32, vec![]);
+            d2.wait(t).unwrap();
+            q.free(o2);
+        }
+        println!("{:24} {:9.2} ms", name, t0.elapsed().as_secs_f64()/3.0*1e3);
+        out
+    };
+    let sp = time_stage(&names[0], vec![b]);
+    let cl = time_stage(&names[1], vec![sp]);
+    let fl = time_stage(&names[2], vec![cl]);
+    let idx = time_stage(&names[3], vec![fl]);
+    let cts = time_stage(&names[4], vec![idx]);
+    let scn = time_stage(&names[5], vec![cts]);
+    let _mv = time_stage(&names[6], vec![idx, scn]);
+    let _lt = time_stage(&names[7], vec![fl, sp]);
+    // sort-stage ablation: device-native bitonic network vs lax.sort
+    let bit = "wah_bitonic_65536";
+    if m.contains(bit) {
+        let meta = m.get(bit).unwrap();
+        q.compile(bit, m.hlo_path(meta)).wait(Duration::from_secs(120)).unwrap();
+        let _ = time_stage(bit, vec![b]);
+    }
+    q.stop();
+}

@@ -1,0 +1,153 @@
+"""AOT compile path: lower every artifact to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. The rust coordinator reads ``artifacts/manifest.txt`` and
+compiles each HLO module on its PJRT client at program-creation time — the
+analog of OpenCL's runtime kernel compilation (``clBuildProgram``).
+
+HLO text (NOT ``lowered.compiler_ir("hlo")`` protos and NOT ``.serialize()``)
+is the interchange format: jax >= 0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=False`` so single-array outputs produce
+plain (chainable) array buffers.
+
+Manifest line format (no JSON dependency on the rust side)::
+
+    name|file|in_dtype:shape[,shape...] .. |out_dtype:shape|key=val key=val
+
+Shapes are ``x``-separated dims, e.g. ``f32:256x256``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import sortk
+
+CFG = model.CFG
+GROUP = model.GROUP
+
+# capacities for the WAH pipeline sweep (Fig 3); paper: 10k..20M values
+WAH_SIZES = [4096, 16384, 65536, 262144, 1048576]
+WAH_CARD = 1024
+# matmul sizes (Fig 5); paper: 1000..12000
+MATMUL_SIZES = [64, 128, 256, 384, 512]
+# mandelbrot chunk shapes (Fig 7/8); paper: 1920x1080 and 16000x16000
+MANDEL = [
+    (960, 540, 54, 100),     # Fig 7 (small image), 10%-row chunks
+    (2048, 2040, 204, 100),  # Fig 8a (large image)
+    (2048, 2040, 204, 1000),  # Fig 8b (large image, deep iteration)
+]
+EMPTY_N = 1024
+
+U32 = jnp.uint32
+F32 = jnp.float32
+
+
+def spec(dtype, *dims):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+def artifact_table():
+    """Yield (name, fn, [input ShapeDtypeStruct], extras dict)."""
+    for n in MATMUL_SIZES:
+        yield (f"matmul_{n}", model.build_matmul(n),
+               [spec(F32, n, n), spec(F32, n, n)],
+               {"n": n, "range": f"{n}x{n}"})
+    for (w, h, ch, it) in MANDEL:
+        name = f"mandel_w{w}_h{h}_c{ch}_it{it}"
+        yield (name, model.build_mandel(w, h, ch, it), [spec(U32, 1)],
+               {"w": w, "h": h, "ch": ch, "it": it, "range": f"{ch}x{w}"})
+    for n in WAH_SIZES:
+        g = 2 * n // GROUP
+        c = WAH_CARD
+        stages = {
+            "sort": ([spec(U32, n)], {}),
+            "chunklit": ([spec(U32, 2 * n)], {}),
+            "fillslit": ([spec(U32, 2 * n)], {}),
+            "interleave": ([spec(U32, 2 * n)], {}),
+            "count": ([spec(U32, 2 * n)], {"group": GROUP}),
+            "scan": ([spec(U32, g)], {}),
+            "move": ([spec(U32, 2 * n), spec(U32, CFG + g)],
+                     {"group": GROUP}),
+            "lut": ([spec(U32, 2 * n), spec(U32, 2 * n)], {"c": c}),
+        }
+        for stage, (ins, extra) in stages.items():
+            yield (f"wah_{stage}_{n}", model.build_wah_stage(stage, n, c),
+                   ins, {"n": n, "range": str(ins[0].shape[0]), **extra})
+        yield (f"wah_fused_{n}", model.build_wah_fused(n, c),
+               [spec(U32, n)], {"n": n, "c": c, "range": str(n)})
+    # sort-stage ablation: device-native bitonic network (DESIGN.md §6)
+    for n in [4096, 16384, 65536]:
+        yield (f"wah_bitonic_{n}", sortk.build(n), [spec(U32, n)],
+               {"n": n, "range": str(n)})
+    yield (f"empty_{EMPTY_N}", model.build_empty(EMPTY_N),
+           [spec(U32, EMPTY_N)], {"n": EMPTY_N, "range": str(EMPTY_N)})
+
+
+def to_hlo_text(fn, in_specs) -> str:
+    lowered = jax.jit(fn).lower(*in_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+_SHORT = {"uint32": "u32", "float32": "f32", "int32": "s32",
+          "uint64": "u64", "float64": "f64"}
+
+
+def fmt_spec(s) -> str:
+    dt = _SHORT[str(jnp.dtype(s.dtype))]
+    dims = "x".join(str(d) for d in s.shape)
+    return f"{dt}:{dims}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the HLO file already exists")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    n_lowered = 0
+    for name, fn, ins, extras in artifact_table():
+        if args.only and args.only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        out_spec = jax.eval_shape(fn, *ins)
+        line = "|".join([
+            name, fname,
+            " ".join(fmt_spec(s) for s in ins),
+            fmt_spec(out_spec),
+            " ".join(f"{k}={v}" for k, v in extras.items()),
+        ])
+        manifest.append(line)
+        if os.path.exists(path) and not args.force:
+            continue
+        text = to_hlo_text(fn, ins)
+        with open(path, "w") as f:
+            f.write(text)
+        n_lowered += 1
+        print(f"  lowered {name} ({len(text) // 1024} KiB)", flush=True)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"aot: {len(manifest)} artifacts ({n_lowered} lowered) -> "
+          f"{args.out}/manifest.txt")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""L1 Pallas kernels: Billeter-style stream compaction (paper §4.1).
+
+The paper uses the stream-compaction algorithm of Billeter et al. (HPG'09)
+with work-groups of 128: ``count_elements`` counts the valid entries of each
+group into local memory, an exclusive scan over group counts assigns output
+windows, and ``move_valid_elements`` scatters each group's survivors into its
+window.
+
+TPU adaptation: an OpenCL work-group of 128 items sharing local memory maps
+to a 128-word tile; the in-group shuffle becomes an in-tile rank (local
+exclusive cumsum). The *global* scatter of the move phase is expressed at L2
+as an XLA scatter over the per-group windows (see ``model.py``) — on a real
+TPU Mosaic would emit the same dynamic-store pattern.
+
+Interpret-mode note (measured, see EXPERIMENTS.md §Perf): a Pallas ``grid``
+under ``interpret=True`` lowers to a sequential loop that re-slices the full
+array every step — O(grid x N) instead of O(N). The group structure is
+therefore expressed as a *reshape to (G, 128) tiles inside one kernel
+invocation* here; on a real Mosaic lowering the commented BlockSpec variant
+(one grid step per work-group) is the shape to use.  The arithmetic per
+group is identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import scanops
+
+GROUP = 128
+
+
+def _count_kernel(x_ref, o_ref, *, g):
+    tiles = x_ref[...].reshape(g, GROUP)  # one row per OpenCL work-group
+    o_ref[...] = scanops.row_sums((tiles != 0).astype(jnp.uint32))
+
+
+def count_elements(idx: jax.Array) -> jax.Array:
+    """u32[M] -> u32[M/128]: non-zero count of each 128-word group.
+
+    Mosaic/TPU variant (grid over work-groups):
+        grid=(g,), in_specs=[BlockSpec((GROUP,), lambda i: (i,))],
+        out_specs=BlockSpec((1,), lambda i: (i,))
+    """
+    m = idx.shape[0]
+    assert m % GROUP == 0, "index length must be a multiple of the group size"
+    g = m // GROUP
+    return pl.pallas_call(
+        functools.partial(_count_kernel, g=g),
+        out_shape=jax.ShapeDtypeStruct((g,), jnp.uint32),
+        interpret=True,
+    )(idx)
+
+
+def _scan_kernel(c_ref, o_ref):
+    o_ref[...] = scanops.excl_scan_1d(c_ref[...])
+
+
+def scan_counts(counts: jax.Array) -> jax.Array:
+    """u32[G] -> u32[G]: exclusive prefix sum (single-tile kernel).
+
+    G = M/128 is small (<= 16384 for our largest capacity), so a single
+    VMEM-resident tile suffices — the classic single-workgroup scan phase.
+    """
+    return pl.pallas_call(
+        _scan_kernel,
+        out_shape=jax.ShapeDtypeStruct(counts.shape, jnp.uint32),
+        interpret=True,
+    )(counts)
+
+
+def _rank_kernel(x_ref, o_ref, *, g):
+    tiles = x_ref[...].reshape(g, GROUP)
+    v = (tiles != 0).astype(jnp.uint32)
+    o_ref[...] = scanops.excl_scan_rows(v).reshape(g * GROUP)
+
+
+def group_ranks(idx: jax.Array) -> jax.Array:
+    """u32[M] -> u32[M]: rank of each element among its group's survivors."""
+    m = idx.shape[0]
+    g = m // GROUP
+    return pl.pallas_call(
+        functools.partial(_rank_kernel, g=g),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.uint32),
+        interpret=True,
+    )(idx)
+
+
+def move_valid(idx: jax.Array, scan_excl: jax.Array) -> jax.Array:
+    """Scatter survivors into their windows; zero-padded to len(idx).
+
+    ``tgt[i] = scan_excl[group(i)] + rank_in_group(i)`` — the Billeter move
+    phase. The in-tile rank is the Pallas kernel above; the global scatter is
+    an XLA ``.at[].set`` (see module docstring).
+    """
+    m = idx.shape[0]
+    ranks = group_ranks(idx)
+    group_of = jnp.arange(m, dtype=jnp.uint32) // jnp.uint32(GROUP)
+    tgt = scan_excl[group_of] + ranks
+    valid = idx != 0
+    dest = jnp.where(valid, tgt, jnp.uint32(m))  # invalid -> overflow slot
+    out = jnp.zeros((m + 1,), jnp.uint32).at[dest].set(idx)
+    return out[:m]

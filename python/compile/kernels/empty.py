@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: the empty stage (paper §3.6).
+
+The paper estimates stage-messaging cost with "an actor with an empty kernel"
+that receives a memory reference and answers once its (no-op) kernel ran.
+This is that kernel: an identity copy over a u32 buffer — the cheapest
+possible device dispatch, so end-to-end latency measures pure actor +
+command-queue overhead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _empty_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def empty(x: jax.Array) -> jax.Array:
+    """Identity dispatch: u32[N] -> u32[N]."""
+    return pl.pallas_call(
+        _empty_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def build(n: int):
+    """Artifact function f(x: u32[n]) -> x."""
+
+    def fn(x):
+        return empty(x)
+
+    return fn

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: Mandelbrot escape iterations (paper §5.4).
+
+The heterogeneous-scaling benchmark (Fig 7/8) renders a cut of the Mandelbrot
+set covering ``[-0.5 - 0.7375i, 0.1 - 0.1375i]`` and offloads the image to a
+device in 10% steps. We therefore compile a *chunk* kernel: it renders
+``rows`` consecutive image rows starting at a row offset that arrives as a
+(tiny) u32[1] input, so one artifact serves every offload fraction.
+
+TPU adaptation: one grid step renders a ``TR x width`` row tile held in VMEM
+(the OpenCL version used one work-item per pixel). The escape loop is a
+``fori_loop`` over full VPU-width f32 tiles — this is an elementwise
+workload, so the roofline is VPU/memory bound, not MXU (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+X0, X1 = -0.5, 0.1
+Y0, Y1 = -0.7375, -0.1375
+
+
+def _mandel_kernel(y0_ref, o_ref, *, width, height, rows_per_block, iters):
+    tile = pl.program_id(0)
+    base = y0_ref[0] + tile.astype(jnp.uint32) * jnp.uint32(rows_per_block)
+    shape = (rows_per_block, width)
+    row = (jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+           + base).astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.uint32, shape, 1).astype(jnp.float32)
+    cx = jnp.float32(X0) + jnp.float32(X1 - X0) * col / jnp.float32(width)
+    cy = jnp.float32(Y0) + jnp.float32(Y1 - Y0) * row / jnp.float32(height)
+
+    def body(_, state):
+        zx, zy, count = state
+        live = zx * zx + zy * zy <= jnp.float32(4.0)
+        count = count + live.astype(jnp.uint32)
+        nzx = zx * zx - zy * zy + cx
+        nzy = jnp.float32(2.0) * zx * zy + cy
+        zx = jnp.where(live, nzx, zx)
+        zy = jnp.where(live, nzy, zy)
+        return zx, zy, count
+
+    zx = jnp.zeros(shape, jnp.float32)
+    zy = jnp.zeros(shape, jnp.float32)
+    count = jnp.zeros(shape, jnp.uint32)
+    _, _, count = jax.lax.fori_loop(0, iters, body, (zx, zy, count))
+    o_ref[...] = count
+
+
+def pick_rows_per_block(rows: int) -> int:
+    """Row-tile height: keeps the VMEM tile around <=1 MiB for wide images."""
+    for r in (8, 6, 4, 3, 2):
+        if rows % r == 0:
+            return r
+    return 1
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def mandelbrot_chunk(y_start: jax.Array, width: int, height: int,
+                     rows: int, iters: int) -> jax.Array:
+    """Render ``rows`` rows of the ``width x height`` image from ``y_start``.
+
+    ``y_start`` is u32[1] (runtime input — the offload split point);
+    everything else is baked into the artifact.
+    """
+    rpb = pick_rows_per_block(rows)
+    kernel = functools.partial(_mandel_kernel, width=width, height=height,
+                               rows_per_block=rpb, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // rpb,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rpb, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), jnp.uint32),
+        interpret=True,
+    )(y_start)
+
+
+def build(width: int, height: int, rows: int, iters: int):
+    """Artifact function f(y0: u32[1]) -> u32[rows, width]."""
+
+    def fn(y0):
+        return mandelbrot_chunk(y0, width, height, rows, iters)
+
+    return fn

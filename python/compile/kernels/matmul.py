@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: tiled square matrix multiply (paper Listing 1).
+
+The OpenCL kernel ``m_mult`` assigns one work-item per output element with a
+2-D NDRange. The TPU adaptation (DESIGN.md §2) instead tiles the *output*
+into MXU-shaped blocks: one grid step computes a ``TILE x TILE`` output block
+from a ``TILE x N`` row panel of A and an ``N x TILE`` column panel of B, all
+resident in VMEM. ``jnp.dot`` inside the kernel targets the MXU systolic
+array; ``preferred_element_type=float32`` keeps f32 accumulation like the
+OpenCL original.
+
+VMEM footprint per grid step (f32): ``2 * TILE * N + TILE^2`` words — for
+N=512, TILE=128 that is 516 KiB, comfortably inside the ~16 MiB budget.
+Run under ``interpret=True`` on CPU PJRT (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def pick_tile(n: int) -> int:
+    """Largest MXU-friendly tile dividing ``n`` (128 preferred)."""
+    for t in (128, 64, 32, 16, 8):
+        if n % t == 0:
+            return t
+    return n
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def matmul(a: jax.Array, b: jax.Array, tile: int | None = None) -> jax.Array:
+    """``a @ b`` for square f32 matrices via the tiled Pallas kernel."""
+    n = a.shape[0]
+    t = tile or pick_tile(n)
+    grid = (n // t, n // t)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, t), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def build(n: int):
+    """Return the artifact function f(a, b) -> a @ b for size ``n``."""
+    t = pick_tile(n)
+
+    def fn(a, b):
+        return matmul(a, b, t)
+
+    return fn

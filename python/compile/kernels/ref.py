@@ -1,0 +1,251 @@
+"""Pure numpy oracles for every kernel in this package.
+
+These are the CORE correctness signal: pytest checks each Pallas kernel and
+each composed L2 stage against the functions here, and the Rust side checks
+its CPU WAH encoder against the very same algorithm (mirrored in
+``rust/src/indexing/wah.rs``).
+
+Conventions (shared with the Rust coordinator — see DESIGN.md §5):
+
+* all WAH arrays are ``uint32``;
+* a *chunk* covers 31 bit positions (the payload width of a WAH literal);
+* a literal word has the MSB clear, a fill word is ``(1<<31) | run_length``
+  (only zero-fills occur in this index: gaps between occupied chunks);
+* ``cid = (value << 16) | chunk`` — values are restricted to ``< 2**16``
+  and input length to ``31 * 2**16`` so cid is collision-free;
+* stages exchange a single u32 array; multi-output stages pack a ``CFG``-word
+  config prefix (the paper's "configuration array", Listing 5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+CFG = 8  # config prefix words
+FILL_FLAG = np.uint32(1 << 31)
+INVALID = np.uint32(0xFFFFFFFF)
+GROUP = 128  # Billeter stream-compaction work-group size (paper §4.1)
+CHUNK_BITS = 31
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+def matmul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Row-major square matrix product, f32 accumulation (paper Listing 1)."""
+    return (a.astype(np.float32) @ b.astype(np.float32)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# mandelbrot
+# ---------------------------------------------------------------------------
+
+# Paper §5.4: the image covers the region [-0.5 - 0.7375i, 0.1 - 0.1375i].
+MANDEL_X0, MANDEL_X1 = -0.5, 0.1
+MANDEL_Y0, MANDEL_Y1 = -0.7375, -0.1375
+
+
+def mandelbrot(width: int, height: int, y_start: int, rows: int,
+               iters: int) -> np.ndarray:
+    """Escape-iteration counts for ``rows`` rows starting at ``y_start``.
+
+    Returns u32[rows, width]. The chunked form mirrors the offload split of
+    the heterogeneous benchmark (Fig 7/8): each 10% chunk of the image is
+    one kernel execution with a row offset.
+    """
+    xs = MANDEL_X0 + (MANDEL_X1 - MANDEL_X0) * (
+        np.arange(width, dtype=np.float32) / np.float32(width))
+    ys = MANDEL_Y0 + (MANDEL_Y1 - MANDEL_Y0) * (
+        (y_start + np.arange(rows, dtype=np.float32)) / np.float32(height))
+    cx = np.broadcast_to(xs[None, :], (rows, width)).astype(np.float32)
+    cy = np.broadcast_to(ys[:, None], (rows, width)).astype(np.float32)
+    zx = np.zeros_like(cx)
+    zy = np.zeros_like(cy)
+    count = np.zeros((rows, width), dtype=np.uint32)
+    for _ in range(iters):
+        live = zx * zx + zy * zy <= np.float32(4.0)
+        count += live.astype(np.uint32)
+        nzx = zx * zx - zy * zy + cx
+        nzy = np.float32(2.0) * zx * zy + cy
+        zx = np.where(live, nzx, zx)
+        zy = np.where(live, nzy, zy)
+    return count
+
+
+# ---------------------------------------------------------------------------
+# WAH bitmap index — per-stage oracles
+# ---------------------------------------------------------------------------
+
+def wah_sort(values: np.ndarray) -> np.ndarray:
+    """Stage 1: stable sort by value; returns sorted_values ++ positions."""
+    values = values.astype(np.uint32)
+    order = np.argsort(values, kind="stable").astype(np.uint32)
+    return np.concatenate([values[order], order])
+
+
+def wah_chunklit(sorted_pairs: np.ndarray) -> np.ndarray:
+    """Stage 2: chunk ids + run-merged literals; returns cid ++ mlit.
+
+    ``mlit[i]`` is the OR of the literals of the run *starting* at ``i`` —
+    only meaningful at run heads, which is all downstream stages read.
+    """
+    n = sorted_pairs.shape[0] // 2
+    val = sorted_pairs[:n].astype(np.uint64)
+    pos = sorted_pairs[n:].astype(np.uint64)
+    chunk = pos // CHUNK_BITS
+    bit = pos % CHUNK_BITS
+    cid = ((val << np.uint64(16)) | chunk).astype(np.uint32)
+    lit = (np.uint32(1) << bit.astype(np.uint32)).astype(np.uint32)
+    # suffix OR within equal-cid segments (runs are at most 31 long)
+    mlit = lit.copy()
+    for i in range(n - 2, -1, -1):
+        if cid[i] == cid[i + 1]:
+            mlit[i] |= mlit[i + 1]
+    return np.concatenate([cid, mlit])
+
+
+def wah_fillslit(chunklit: np.ndarray) -> np.ndarray:
+    """Stage 3: per-head fill words and head literals; fills ++ headlits."""
+    n = chunklit.shape[0] // 2
+    cid = chunklit[:n]
+    mlit = chunklit[n:]
+    val = cid >> np.uint32(16)
+    chunk = cid & np.uint32(0xFFFF)
+    fills = np.zeros(n, dtype=np.uint32)
+    headlits = np.zeros(n, dtype=np.uint32)
+    for i in range(n):
+        head = i == 0 or cid[i] != cid[i - 1]
+        if not head:
+            continue
+        headlits[i] = mlit[i]
+        if i == 0 or val[i] != val[i - 1]:
+            gap = int(chunk[i])  # fill from chunk 0 of a fresh bitmap
+        else:
+            gap = int(chunk[i]) - int(chunk[i - 1]) - 1
+        if gap > 0:
+            fills[i] = FILL_FLAG | np.uint32(gap)
+    return np.concatenate([fills, headlits])
+
+
+def wah_interleave(fillslit: np.ndarray) -> np.ndarray:
+    """Stage 4 (paper's prepare_index): idx[2i]=fill[i], idx[2i+1]=lit[i]."""
+    n = fillslit.shape[0] // 2
+    out = np.zeros(2 * n, dtype=np.uint32)
+    out[0::2] = fillslit[:n]
+    out[1::2] = fillslit[n:]
+    return out
+
+
+def wah_count(idx: np.ndarray) -> np.ndarray:
+    """Stage 5 (count_elements): non-zero count per group of 128."""
+    g = idx.shape[0] // GROUP
+    return (idx.reshape(g, GROUP) != 0).sum(axis=1).astype(np.uint32)
+
+
+def wah_scan(counts: np.ndarray) -> np.ndarray:
+    """Stage 6: cfg ++ exclusive scan of group counts; cfg[0] = total."""
+    excl = np.concatenate([[np.uint32(0)],
+                           np.cumsum(counts)[:-1].astype(np.uint32)])
+    cfg = np.zeros(CFG, dtype=np.uint32)
+    cfg[0] = counts.sum()
+    return np.concatenate([cfg, excl.astype(np.uint32)])
+
+
+def wah_move(idx: np.ndarray, scan: np.ndarray) -> np.ndarray:
+    """Stage 7 (move_valid_elements): cfg ++ zero-padded compacted index."""
+    out = np.zeros(CFG + idx.shape[0], dtype=np.uint32)
+    out[0] = scan[0]  # total survivors
+    survivors = idx[idx != 0]
+    out[CFG:CFG + survivors.shape[0]] = survivors
+    return out
+
+
+def wah_lut(fillslit: np.ndarray, sorted_pairs: np.ndarray,
+            cardinality: int) -> np.ndarray:
+    """Stage 8: cfg ++ per-value offset table into the compacted index.
+
+    cfg[0] = number of distinct non-pad values, cfg[1] = total surviving
+    words belonging to non-pad values, cfg[2] = total surviving words.
+    Pad entries carry value ``cardinality - 1`` and sort to the end.
+    """
+    n = fillslit.shape[0] // 2
+    val = sorted_pairs[:n]
+    pad = np.uint32(cardinality - 1)
+    idx = wah_interleave(fillslit)
+    valid = idx != 0
+    vscan = np.concatenate([[0], np.cumsum(valid)[:-1]]).astype(np.uint32)
+    lut = np.full(cardinality, INVALID, dtype=np.uint32)
+    n_distinct = 0
+    for i in range(n):
+        vhead = i == 0 or val[i] != val[i - 1]
+        if vhead and val[i] != pad:
+            lut[val[i]] = vscan[2 * i]
+            n_distinct += 1
+    slot_val = np.repeat(val, 2)
+    words_real = int((valid & (slot_val != pad)).sum())
+    cfg = np.zeros(CFG, dtype=np.uint32)
+    cfg[0] = n_distinct
+    cfg[1] = words_real
+    cfg[2] = int(valid.sum())
+    return np.concatenate([cfg, lut])
+
+
+def wah_pipeline(values: np.ndarray, cardinality: int):
+    """All stages chained; returns (move_out, lut_out)."""
+    s = wah_sort(values)
+    cl = wah_chunklit(s)
+    fl = wah_fillslit(cl)
+    idx = wah_interleave(fl)
+    counts = wah_count(idx)
+    scan = wah_scan(counts)
+    moved = wah_move(idx, scan)
+    lut = wah_lut(fl, s, cardinality)
+    return moved, lut
+
+
+def wah_fused(values: np.ndarray, cardinality: int) -> np.ndarray:
+    """Monolithic variant (ablation A): cfg ++ compacted[2N] ++ lut[C]."""
+    moved, lut = wah_pipeline(values, cardinality)
+    n2 = values.shape[0] * 2
+    cfg = moved[:CFG].copy()
+    cfg[1] = lut[1]  # words belonging to non-pad values
+    cfg[3] = lut[0]  # number of distinct values
+    return np.concatenate([cfg, moved[CFG:CFG + n2], lut[CFG:]])
+
+
+# ---------------------------------------------------------------------------
+# WAH decode (verification only — used by tests to close the loop)
+# ---------------------------------------------------------------------------
+
+def wah_decode(words: np.ndarray) -> list[int]:
+    """Decode a WAH word sequence into the list of set bit positions."""
+    positions = []
+    chunk = 0
+    for w in words:
+        w = int(w)
+        if w & (1 << 31):
+            chunk += w & 0x3FFFFFFF
+        else:
+            for b in range(CHUNK_BITS):
+                if w & (1 << b):
+                    positions.append(chunk * CHUNK_BITS + b)
+            chunk += 1
+    return positions
+
+
+def wah_index_positions(moved: np.ndarray, lut: np.ndarray,
+                        cardinality: int) -> dict[int, list[int]]:
+    """Extract per-value positions from pipeline output (test utility)."""
+    words_real = int(lut[1])
+    offsets = lut[CFG:]
+    body = moved[CFG:]
+    # bitmap of value v spans [offsets[v], next valid offset)
+    order = [(int(offsets[v]), v) for v in range(cardinality)
+             if offsets[v] != INVALID]
+    order.sort()
+    out = {}
+    for k, (off, v) in enumerate(order):
+        end = order[k + 1][0] if k + 1 < len(order) else words_real
+        out[v] = wah_decode(body[off:end])
+    return out

@@ -1,0 +1,51 @@
+"""Log-step prefix sums (Hillis-Steele doubling).
+
+The deployment target is xla_extension 0.5.1 (the version the rust `xla`
+crate links); that XLA lowers ``jnp.cumsum`` to a ``reduce_window`` which its
+CPU backend executes in O(N x window) — measured 16 s for one 131072-element
+scan (EXPERIMENTS.md §Perf). These helpers express the same scans as
+O(log N) shift-adds, which both old and new XLA compile to tight
+vectorized loops — and which is also exactly how a GPU/TPU work-group scan
+is written (the Billeter scan phase the paper uses).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def excl_scan_1d(x: jax.Array) -> jax.Array:
+    """Exclusive prefix sum of a 1-D array, log-step."""
+    n = x.shape[0]
+    inc = x
+    s = 1
+    while s < n:
+        pad = jnp.zeros((s,), x.dtype)
+        inc = inc + jnp.concatenate([pad, inc[:-s]])
+        s *= 2
+    return inc - x
+
+
+def incl_scan_rows(x: jax.Array) -> jax.Array:
+    """Inclusive prefix sum along axis 1 of a 2-D array, log-step."""
+    g, w = x.shape
+    inc = x
+    s = 1
+    while s < w:
+        pad = jnp.zeros((g, s), x.dtype)
+        inc = inc + jnp.concatenate([pad, inc[:, :-s]], axis=1)
+        s *= 2
+    return inc
+
+
+def excl_scan_rows(x: jax.Array) -> jax.Array:
+    """Exclusive prefix sum along axis 1 of a 2-D array, log-step."""
+    return incl_scan_rows(x) - x
+
+
+def row_sums(x: jax.Array) -> jax.Array:
+    """Per-row sums via an f32 GEMV (old XLA's row reduce is slow; the
+    values are group counts <= 128, exactly representable in f32)."""
+    ones = jnp.ones((x.shape[1],), jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), ones).astype(x.dtype)

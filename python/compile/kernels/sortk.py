@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: bitonic key-value sort (sort-stage ablation).
+
+The paper's GPU indexer uses a 16-bit-cardinality radix sort; our production
+sort stage uses XLA's variadic sort (`model.stage_sort`), which profiling
+shows is ~85% of the whole pipeline (EXPERIMENTS.md §Perf). This kernel is
+the device-native alternative: a full bitonic network over packed u32 keys
+(`value << 16 | position` — this jaxlib build has x64 disabled, and both
+fields fit 16 bits for the ablation capacities), which is exactly the
+data-parallel sorting network a GPU/TPU work-group implementation uses.
+Packing makes the sort stable in (value, position) — the property the
+downstream chunk/fill stages rely on — because positions are unique.
+
+O(n log^2 n) compare-exchanges in log^2(n)/2 fully-vectorized steps; each
+step is a gather + select over the whole array (one VMEM-resident tile under
+interpret mode; a Mosaic lowering would tile the early small-stride stages).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_kernel(v_ref, o_ref, *, n):
+    vals = v_ref[...]
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (n,), 0)
+    keys = (vals << jnp.uint32(16)) | pos
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (n,), 0)
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            partner = idx ^ jnp.uint32(j)
+            pk = keys[partner]
+            is_lo = idx < partner
+            ascending = (idx & jnp.uint32(k)) == 0
+            kmin = jnp.minimum(keys, pk)
+            kmax = jnp.maximum(keys, pk)
+            # in an ascending block the lower index keeps the minimum
+            want_min = is_lo == ascending
+            keys = jnp.where(want_min, kmin, kmax)
+            j //= 2
+        k *= 2
+    o_ref[:n] = keys >> jnp.uint32(16)
+    o_ref[n:] = keys & jnp.uint32(0xFFFF)
+
+
+def bitonic_sort(values: jax.Array) -> jax.Array:
+    """u32[N] -> u32[2N]: sorted values ++ original positions.
+
+    Drop-in replacement for ``model.stage_sort``; N must be a power of two.
+    """
+    n = values.shape[0]
+    assert n & (n - 1) == 0, "bitonic sort needs a power-of-two length"
+    assert n <= 1 << 16, "positions must fit 16 bits (u32 packed keys)"
+    return pl.pallas_call(
+        functools.partial(_bitonic_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((2 * n,), jnp.uint32),
+        interpret=True,
+    )(values)
+
+
+def build(n: int):
+    """Artifact function f(values: u32[n]) -> u32[2n]."""
+
+    def fn(values):
+        return bitonic_sort(values)
+
+    return fn

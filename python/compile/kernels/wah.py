@@ -1,0 +1,125 @@
+"""L1 Pallas kernels for the WAH bitmap-index pipeline (paper §4, DESIGN.md §5).
+
+Each kernel is one *stage* of the Fusco-style GPU indexing algorithm and maps
+one-to-one onto an OpenCL actor in the Rust coordinator. All arrays are u32;
+stage outputs are single arrays (PJRT tuple buffers cannot be split by the
+rust `xla` crate, see DESIGN.md §2) with halves packed back-to-back.
+
+TPU adaptation notes: the shift-OR run merge (``_chunklit``) needs a 31-wide
+halo between tiles; under ``interpret=True`` we use one whole-array block and
+document the halo-tiling strategy for a real Mosaic lowering instead of
+emulating it. The per-group kernels (``compaction.py``) are genuinely tiled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+CFG = 8
+CHUNK_BITS = 31
+# numpy scalars embed as jaxpr literals (jnp arrays would be captured consts,
+# which pallas kernels reject)
+FILL_FLAG = np.uint32(1 << 31)
+INVALID = np.uint32(0xFFFFFFFF)
+
+
+def _shift_up(x, s, fill):
+    """x[i] <- x[i+s], tail padded with ``fill`` (suffix neighbour)."""
+    return jnp.concatenate([x[s:], jnp.full((s,), fill, x.dtype)])
+
+
+def _shift_down(x, s, fill):
+    """x[i] <- x[i-s], head padded with ``fill`` (prefix neighbour)."""
+    return jnp.concatenate([jnp.full((s,), fill, x.dtype), x[:-s]])
+
+
+# ---------------------------------------------------------------------------
+# stage 2: chunk ids + run-merged literals
+# ---------------------------------------------------------------------------
+
+def _chunklit_kernel(sp_ref, o_ref, *, n):
+    val = sp_ref[:n]
+    pos = sp_ref[n:]
+    chunk = pos // jnp.uint32(CHUNK_BITS)
+    bit = pos % jnp.uint32(CHUNK_BITS)
+    cid = (val << jnp.uint32(16)) | chunk
+    lit = jnp.uint32(1) << bit
+    # Suffix OR across equal-cid runs. A run has <= 31 members (31 distinct
+    # bit positions per chunk), so 5 doubling steps cover any run: after the
+    # step of stride s, lit[i] holds the OR of positions i..i+2s-1 of its
+    # segment. Segment guard: only fold when the neighbour shares the cid.
+    for s in (1, 2, 4, 8, 16):
+        lit_s = _shift_up(lit, s, jnp.uint32(0))
+        cid_s = _shift_up(cid, s, INVALID)
+        lit = jnp.where(cid_s == cid, lit | lit_s, lit)
+    o_ref[:n] = cid
+    o_ref[n:] = lit
+
+
+def chunklit(sorted_pairs: jax.Array) -> jax.Array:
+    """u32[2N] (values ++ positions, sorted) -> u32[2N] (cid ++ mlit)."""
+    n = sorted_pairs.shape[0] // 2
+    return pl.pallas_call(
+        functools.partial(_chunklit_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((2 * n,), jnp.uint32),
+        interpret=True,
+    )(sorted_pairs)
+
+
+# ---------------------------------------------------------------------------
+# stage 3: fill words + head literals
+# ---------------------------------------------------------------------------
+
+def _fillslit_kernel(cl_ref, o_ref, *, n):
+    cid = cl_ref[:n]
+    mlit = cl_ref[n:]
+    cid_prev = _shift_down(cid, 1, INVALID)
+    val = cid >> jnp.uint32(16)
+    chunk = cid & jnp.uint32(0xFFFF)
+    val_prev = cid_prev >> jnp.uint32(16)
+    chunk_prev = cid_prev & jnp.uint32(0xFFFF)
+    head = cid != cid_prev
+    head = head.at[0].set(True)
+    vhead = val != val_prev
+    vhead = vhead.at[0].set(True)
+    # fresh bitmap: zero-fill covering chunks [0, chunk); continuation:
+    # zero-fill covering the gap between consecutive occupied chunks.
+    gap = jnp.where(vhead, chunk, chunk - chunk_prev - jnp.uint32(1))
+    fill = jnp.where(head & (gap > 0), FILL_FLAG | gap, jnp.uint32(0))
+    o_ref[:n] = fill
+    o_ref[n:] = jnp.where(head, mlit, jnp.uint32(0))
+
+
+def fillslit(chunklit_out: jax.Array) -> jax.Array:
+    """u32[2N] (cid ++ mlit) -> u32[2N] (fills ++ head literals)."""
+    n = chunklit_out.shape[0] // 2
+    return pl.pallas_call(
+        functools.partial(_fillslit_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((2 * n,), jnp.uint32),
+        interpret=True,
+    )(chunklit_out)
+
+
+# ---------------------------------------------------------------------------
+# stage 4: interleave (the paper's prepare_index, Listing 5)
+# ---------------------------------------------------------------------------
+
+def _interleave_kernel(fl_ref, o_ref, *, n):
+    fills = fl_ref[:n]
+    lits = fl_ref[n:]
+    o_ref[...] = jnp.stack([fills, lits], axis=1).reshape(2 * n)
+
+
+def interleave(fillslit_out: jax.Array) -> jax.Array:
+    """u32[2N] (fills ++ lits) -> u32[2N] with idx[2i]=fill, idx[2i+1]=lit."""
+    n = fillslit_out.shape[0] // 2
+    return pl.pallas_call(
+        functools.partial(_interleave_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((2 * n,), jnp.uint32),
+        interpret=True,
+    )(fillslit_out)

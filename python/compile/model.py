@@ -1,0 +1,172 @@
+"""L2: the compute graphs behind every AOT artifact.
+
+Each ``build_*`` function returns a plain jax function with *fixed shapes*
+(OpenCL actors are likewise spawned for a fixed ``nd_range``). ``aot.py``
+lowers them to HLO text; ``python/tests`` exercise them against the numpy
+oracles in ``kernels/ref.py``.
+
+Single-output convention: the rust `xla` crate cannot split tuple-typed PJRT
+buffers, so every artifact returns exactly one array. Multi-quantity stages
+pack a CFG-word config prefix — the paper's "configuration array passed along
+the pipeline" (Listing 5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import compaction, empty as empty_k, mandelbrot, matmul, scanops, wah
+
+CFG = wah.CFG
+INVALID = np.uint32(0xFFFFFFFF)
+GROUP = compaction.GROUP
+
+
+# ---------------------------------------------------------------------------
+# WAH pipeline stages (one artifact per stage per capacity)
+# ---------------------------------------------------------------------------
+
+def stage_sort(values: jax.Array) -> jax.Array:
+    """u32[N] -> u32[2N]: sorted values ++ original positions.
+
+    The paper's GPU implementation used a 16-bit-cardinality radix sort; the
+    substrate-native equivalent here is XLA's stable variadic sort (DESIGN.md
+    §5 — a Pallas bitonic pass exists as an ablation in ``sortk.py``).
+    """
+    n = values.shape[0]
+    pos = jnp.arange(n, dtype=jnp.uint32)
+    sv, sp = jax.lax.sort((values, pos), dimension=0, is_stable=True,
+                          num_keys=1)
+    return jnp.concatenate([sv, sp])
+
+
+def stage_chunklit(sorted_pairs: jax.Array) -> jax.Array:
+    return wah.chunklit(sorted_pairs)
+
+
+def stage_fillslit(chunklit_out: jax.Array) -> jax.Array:
+    return wah.fillslit(chunklit_out)
+
+
+def stage_interleave(fillslit_out: jax.Array) -> jax.Array:
+    return wah.interleave(fillslit_out)
+
+
+def stage_count(idx: jax.Array) -> jax.Array:
+    return compaction.count_elements(idx)
+
+
+def stage_scan(counts: jax.Array) -> jax.Array:
+    """u32[G] -> u32[CFG+G]: cfg[0]=total survivors, then exclusive scan."""
+    excl = compaction.scan_counts(counts)
+    cfg = jnp.zeros((CFG,), jnp.uint32).at[0].set(jnp.sum(counts))
+    return jnp.concatenate([cfg, excl])
+
+
+def stage_move(idx: jax.Array, scan_out: jax.Array) -> jax.Array:
+    """(u32[2N], u32[CFG+G]) -> u32[CFG+2N]: cfg[0]=m, compacted index."""
+    compacted = compaction.move_valid(idx, scan_out[CFG:])
+    cfg = jnp.zeros((CFG,), jnp.uint32).at[0].set(scan_out[0])
+    return jnp.concatenate([cfg, compacted])
+
+
+def stage_lut(fillslit_out: jax.Array, sorted_pairs: jax.Array,
+              cardinality: int) -> jax.Array:
+    """(u32[2N], u32[2N]) -> u32[CFG+C]: per-value offsets into the index.
+
+    cfg[0]=distinct non-pad values, cfg[1]=surviving words of non-pad values,
+    cfg[2]=total surviving words. Pad entries carry value C-1.
+    """
+    n = fillslit_out.shape[0] // 2
+    c = cardinality
+    pad = jnp.uint32(c - 1)
+    val = sorted_pairs[:n]
+    fills = fillslit_out[:n]
+    lits = fillslit_out[n:]
+    vf = (fills != 0).astype(jnp.uint32)
+    vl = (lits != 0).astype(jnp.uint32)
+    # offset of sorted-index i's fill slot (2i) in the interleaved order:
+    # vscan[2i] = sum_{j<i} (vf[j] + vl[j]) — no 2N-array materialisation
+    offs = scanops.excl_scan_1d(vf + vl)
+    val_prev = jnp.concatenate([jnp.full((1,), INVALID, jnp.uint32),
+                                val[:-1]])
+    vhead = (val != val_prev)
+    key = jnp.where(vhead & (val != pad), val, jnp.uint32(c))
+    lut = jnp.full((c + 1,), INVALID, jnp.uint32).at[key].set(offs)[:c]
+    real = (val != pad).astype(jnp.uint32)
+    n_distinct = jnp.sum((vhead & (val != pad)).astype(jnp.uint32))
+    words_real = jnp.sum((vf + vl) * real)
+    words_all = jnp.sum(vf + vl)
+    cfg = (jnp.zeros((CFG,), jnp.uint32)
+           .at[0].set(n_distinct)
+           .at[1].set(words_real)
+           .at[2].set(words_all))
+    return jnp.concatenate([cfg, lut])
+
+
+def build_wah_stage(stage: str, n: int, cardinality: int = 1024):
+    """Return the artifact function for one pipeline stage at capacity n."""
+    g = 2 * n // GROUP
+    if stage == "sort":
+        return stage_sort
+    if stage == "chunklit":
+        return stage_chunklit
+    if stage == "fillslit":
+        return stage_fillslit
+    if stage == "interleave":
+        return stage_interleave
+    if stage == "count":
+        return stage_count
+    if stage == "scan":
+        return stage_scan
+    if stage == "move":
+        return stage_move
+    if stage == "lut":
+        return lambda fl, sp: stage_lut(fl, sp, cardinality)
+    raise ValueError(f"unknown stage {stage!r} (n={n}, g={g})")
+
+
+def wah_fused(values: jax.Array, cardinality: int) -> jax.Array:
+    """Monolithic WAH index build (ablation A, design discussion §3.6).
+
+    The same kernels chained inside ONE jit — the "actor wrapping multiple
+    kernel executions" alternative. Output: cfg ++ compacted[2N] ++ lut[C];
+    cfg[0]=m survivors, cfg[1]=non-pad words, cfg[3]=distinct values.
+    """
+    sp = stage_sort(values)
+    cl = stage_chunklit(sp)
+    fl = stage_fillslit(cl)
+    idx = stage_interleave(fl)
+    counts = stage_count(idx)
+    scan = stage_scan(counts)
+    moved = stage_move(idx, scan)
+    lut = stage_lut(fl, sp, cardinality)
+    cfg = (moved[:CFG]
+           .at[1].set(lut[1])
+           .at[3].set(lut[0]))
+    return jnp.concatenate([cfg, moved[CFG:], lut[CFG:]])
+
+
+def build_wah_fused(n: int, cardinality: int = 1024):
+    def fn(values):
+        return wah_fused(values, cardinality)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# other artifacts
+# ---------------------------------------------------------------------------
+
+def build_matmul(n: int):
+    return matmul.build(n)
+
+
+def build_mandel(width: int, height: int, rows: int, iters: int):
+    return mandelbrot.build(width, height, rows, iters)
+
+
+def build_empty(n: int):
+    return empty_k.build(n)

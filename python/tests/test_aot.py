@@ -1,0 +1,78 @@
+"""AOT path: artifact table is well-formed and lowers to parseable HLO text."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_artifact_table_shapes_consistent():
+    """eval_shape succeeds for every artifact and matches the manifest fmt."""
+    seen = set()
+    for name, fn, ins, extras in aot.artifact_table():
+        assert name not in seen, f"duplicate artifact {name}"
+        seen.add(name)
+        out = jax.eval_shape(fn, *ins)
+        assert not isinstance(out, (tuple, list)), \
+            f"{name}: artifacts must have exactly one output array"
+        assert aot.fmt_spec(out)  # formattable
+        for s in ins:
+            assert aot.fmt_spec(s)
+    # every figure's artifacts are present
+    names = seen
+    assert "matmul_256" in names
+    assert "empty_1024" in names
+    assert any(n.startswith("wah_fused_") for n in names)
+    assert any(n.startswith("mandel_") for n in names)
+
+
+def test_wah_stage_shapes_chain():
+    """Output shape of each stage equals the input shape of the next."""
+    n = 4096
+    g = 2 * n // aot.GROUP
+    sort_out = jax.eval_shape(model.build_wah_stage("sort", n),
+                              aot.spec(jnp.uint32, n))
+    assert sort_out.shape == (2 * n,)
+    cl_out = jax.eval_shape(model.build_wah_stage("chunklit", n), sort_out)
+    assert cl_out.shape == (2 * n,)
+    fl_out = jax.eval_shape(model.build_wah_stage("fillslit", n), cl_out)
+    il_out = jax.eval_shape(model.build_wah_stage("interleave", n), fl_out)
+    ct_out = jax.eval_shape(model.build_wah_stage("count", n), il_out)
+    assert ct_out.shape == (g,)
+    sc_out = jax.eval_shape(model.build_wah_stage("scan", n), ct_out)
+    assert sc_out.shape == (aot.CFG + g,)
+    mv_out = jax.eval_shape(model.build_wah_stage("move", n), il_out, sc_out)
+    assert mv_out.shape == (aot.CFG + 2 * n,)
+    lut_out = jax.eval_shape(model.build_wah_stage("lut", n), fl_out,
+                             sort_out)
+    assert lut_out.shape == (aot.CFG + aot.WAH_CARD,)
+
+
+def test_lowering_produces_hlo_text():
+    """Small artifact lowers to HLO text with a single-array entry layout."""
+    fn = model.build_empty(1024)
+    text = aot.to_hlo_text(fn, [aot.spec(jnp.uint32, 1024)])
+    assert "ENTRY" in text
+    assert "u32[1024]" in text
+    # non-tuple root: the entry layout maps u32[1024] -> u32[1024]
+    assert "->u32[1024]" in text.replace(" ", "")
+
+
+def test_hlo_text_is_deterministic():
+    fn = model.build_matmul(64)
+    ins = [aot.spec(jnp.float32, 64, 64)] * 2
+    assert aot.to_hlo_text(fn, ins) == aot.to_hlo_text(fn, ins)
+
+
+def test_fmt_spec():
+    assert aot.fmt_spec(aot.spec(jnp.uint32, 5)) == "u32:5"
+    assert aot.fmt_spec(aot.spec(jnp.float32, 2, 3)) == "f32:2x3"
+
+
+def test_values_fit_cid_packing():
+    """Manifest capacities respect the cid collision-freedom bound."""
+    for n in aot.WAH_SIZES:
+        assert n <= 31 * (1 << 16)
+        assert (2 * n) % aot.GROUP == 0
+    assert aot.WAH_CARD <= 1 << 16

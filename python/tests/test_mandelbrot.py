@@ -1,0 +1,58 @@
+"""Pallas mandelbrot kernel vs the numpy oracle + chunking invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mandelbrot as mbk
+from compile.kernels import ref
+
+
+def run(width, height, y0, rows, iters):
+    y = jnp.asarray(np.array([y0], dtype=np.uint32))
+    return np.array(mbk.mandelbrot_chunk(y, width, height, rows, iters))
+
+
+@settings(max_examples=15, deadline=None)
+@given(width=st.sampled_from([16, 32, 64]),
+       rows=st.sampled_from([4, 8, 16]),
+       y0=st.integers(0, 48),
+       iters=st.sampled_from([1, 10, 50]))
+def test_chunk_matches_ref(width, rows, y0, iters):
+    height = 64
+    got = run(width, height, y0, rows, iters)
+    want = ref.mandelbrot(width, height, y0, rows, iters)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_chunks_tile_the_full_image():
+    """Rendering in 4 chunks equals rendering the whole image at once."""
+    w, h, it = 32, 32, 30
+    whole = ref.mandelbrot(w, h, 0, h, it)
+    parts = [run(w, h, y0, 8, it) for y0 in range(0, h, 8)]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), whole)
+
+
+def test_counts_bounded_by_iters():
+    out = run(32, 32, 0, 32, 25)
+    assert out.max() <= 25
+    assert out.dtype == np.uint32
+
+
+def test_interior_point_never_escapes():
+    """The paper picked an inner cut; points inside the set hit max iters."""
+    w = h = 64
+    it = 40
+    img = ref.mandelbrot(w, h, 0, h, it)
+    # c = -0.2 - 0.55i is inside the main cardioid; find its pixel
+    col = int((-0.2 - ref.MANDEL_X0) / (ref.MANDEL_X1 - ref.MANDEL_X0) * w)
+    row = int((-0.55 - ref.MANDEL_Y0) / (ref.MANDEL_Y1 - ref.MANDEL_Y0) * h)
+    assert img[row, col] == it
+
+
+def test_row_offset_consistency():
+    """chunk(y0)[i] == chunk(0 at full height)[y0+i]."""
+    w, h, it = 32, 64, 20
+    full = ref.mandelbrot(w, h, 0, h, it)
+    part = run(w, h, 24, 8, it)
+    np.testing.assert_array_equal(part, full[24:32])

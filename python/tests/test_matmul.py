@@ -1,0 +1,70 @@
+"""Pallas matmul kernel vs the numpy oracle (hypothesis sweep over shapes)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mmk
+from compile.kernels import ref
+
+
+def run(a, b, tile=None):
+    return np.array(mmk.matmul(jnp.asarray(a), jnp.asarray(b),
+                               tile or mmk.pick_tile(a.shape[0])))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([8, 16, 32, 64, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    np.testing.assert_allclose(run(a, b), ref.matmul(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([32, 64]), t=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_tile_invariance(n, t, seed):
+    """Result must not depend on the tiling choice."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    np.testing.assert_allclose(run(a, b, t), run(a, b, n), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_matmul_identity():
+    n = 64
+    eye = np.eye(n, dtype=np.float32)
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    np.testing.assert_allclose(run(a, eye), a, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(run(eye, a), a, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_zeros_and_dtype():
+    n = 32
+    z = np.zeros((n, n), np.float32)
+    out = run(z, z)
+    assert out.dtype == np.float32
+    assert not out.any()
+
+
+def test_pick_tile_divides():
+    for n in (8, 16, 64, 128, 256, 384, 512, 1000):
+        t = mmk.pick_tile(n)
+        assert n % t == 0
+
+
+@pytest.mark.parametrize("n", [64, 128, 256])
+def test_matmul_artifact_sizes(n):
+    """The exact sizes shipped as artifacts stay correct."""
+    rng = np.random.default_rng(n)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    b = rng.standard_normal((n, n)).astype(np.float32)
+    np.testing.assert_allclose(run(a, b), ref.matmul(a, b),
+                               rtol=1e-4, atol=1e-4)

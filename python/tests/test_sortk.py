@@ -1,0 +1,31 @@
+"""Bitonic sort kernel vs the sort-stage oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sortk
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([64, 256, 1024]), seed=st.integers(0, 2**31 - 1),
+       card=st.sampled_from([4, 64, 1024]))
+def test_bitonic_matches_stable_sort(n, seed, card):
+    card = min(card, 65535)
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, card, n).astype(np.uint32)
+    got = np.array(sortk.bitonic_sort(jnp.asarray(vals)))
+    want = ref.wah_sort(vals)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bitonic_is_stable_on_duplicates():
+    vals = np.zeros(256, np.uint32)  # all equal: positions must stay sorted
+    got = np.array(sortk.bitonic_sort(jnp.asarray(vals)))
+    np.testing.assert_array_equal(got[256:], np.arange(256, dtype=np.uint32))
+
+
+def test_bitonic_reverse_input():
+    vals = np.arange(512, dtype=np.uint32)[::-1].copy()
+    got = np.array(sortk.bitonic_sort(jnp.asarray(vals)))
+    np.testing.assert_array_equal(got, ref.wah_sort(vals))

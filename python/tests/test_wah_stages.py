@@ -1,0 +1,125 @@
+"""Each WAH pipeline stage (Pallas/L2) vs its numpy oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+N = 256  # capacity used throughout (2N divisible by the 128 group size)
+C = 64
+
+
+def gen_values(seed, n=N, card=C, pad_frac=0.0):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, card - 1, n).astype(np.uint32)
+    n_pad = int(n * pad_frac)
+    if n_pad:
+        vals[n - n_pad:] = card - 1
+    return vals
+
+
+values_st = st.builds(gen_values, seed=st.integers(0, 2**31 - 1),
+                      pad_frac=st.sampled_from([0.0, 0.1, 0.5]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=values_st)
+def test_sort_stage(vals):
+    got = np.array(model.stage_sort(jnp.asarray(vals)))
+    np.testing.assert_array_equal(got, ref.wah_sort(vals))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=values_st)
+def test_chunklit_stage(vals):
+    sp = ref.wah_sort(vals)
+    got = np.array(model.stage_chunklit(jnp.asarray(sp)))
+    np.testing.assert_array_equal(got, ref.wah_chunklit(sp))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=values_st)
+def test_fillslit_stage(vals):
+    cl = ref.wah_chunklit(ref.wah_sort(vals))
+    got = np.array(model.stage_fillslit(jnp.asarray(cl)))
+    np.testing.assert_array_equal(got, ref.wah_fillslit(cl))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=values_st)
+def test_interleave_stage(vals):
+    fl = ref.wah_fillslit(ref.wah_chunklit(ref.wah_sort(vals)))
+    got = np.array(model.stage_interleave(jnp.asarray(fl)))
+    np.testing.assert_array_equal(got, ref.wah_interleave(fl))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=values_st)
+def test_lut_stage(vals):
+    sp = ref.wah_sort(vals)
+    fl = ref.wah_fillslit(ref.wah_chunklit(sp))
+    got = np.array(model.stage_lut(jnp.asarray(fl), jnp.asarray(sp), C))
+    np.testing.assert_array_equal(got, ref.wah_lut(fl, sp, C))
+
+
+# -- edge cases ------------------------------------------------------------
+
+def _stage_chain(vals):
+    sp = np.array(model.stage_sort(jnp.asarray(vals)))
+    cl = np.array(model.stage_chunklit(jnp.asarray(sp)))
+    fl = np.array(model.stage_fillslit(jnp.asarray(cl)))
+    return sp, cl, fl
+
+
+def test_all_same_value():
+    """One value everywhere: a single bitmap of dense literals."""
+    vals = np.full(N, 3, np.uint32)
+    sp, cl, fl = _stage_chain(vals)
+    np.testing.assert_array_equal(cl, ref.wah_chunklit(ref.wah_sort(vals)))
+    np.testing.assert_array_equal(
+        fl, ref.wah_fillslit(ref.wah_chunklit(ref.wah_sort(vals))))
+    # every chunk is fully or partially occupied: no fills except none at all
+    fills = fl[:N]
+    assert (fills == 0).all()
+
+
+def test_all_distinct_values():
+    """Values 0..62 cycling: many sparse bitmaps with fills."""
+    vals = (np.arange(N, dtype=np.uint32) % (C - 1)).astype(np.uint32)
+    sp, cl, fl = _stage_chain(vals)
+    np.testing.assert_array_equal(
+        fl, ref.wah_fillslit(ref.wah_chunklit(ref.wah_sort(vals))))
+
+
+def test_all_pad():
+    """Degenerate input: every slot is the pad value."""
+    vals = np.full(N, C - 1, np.uint32)
+    sp = ref.wah_sort(vals)
+    fl = ref.wah_fillslit(ref.wah_chunklit(sp))
+    got = np.array(model.stage_lut(jnp.asarray(fl), jnp.asarray(sp), C))
+    want = ref.wah_lut(fl, sp, C)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] == 0  # no distinct real values
+    assert got[1] == 0  # no real words
+
+
+def test_single_occurrence_per_chunk_boundary():
+    """Positions straddling chunk boundaries (30, 31, 61, 62)."""
+    vals = np.full(N, C - 1, np.uint32)
+    for pos in (0, 30, 31, 61, 62, 93):
+        vals[pos] = 5
+    sp, cl, fl = _stage_chain(vals)
+    np.testing.assert_array_equal(
+        fl, ref.wah_fillslit(ref.wah_chunklit(ref.wah_sort(vals))))
+
+
+def test_mlit_merges_full_chunk():
+    """31 occurrences of one value in one chunk -> one full literal."""
+    vals = np.full(N, C - 1, np.uint32)
+    vals[:31] = 9
+    sp = ref.wah_sort(vals)
+    cl = np.array(model.stage_chunklit(jnp.asarray(sp)))
+    # head of the run for value 9 is at sorted index 0, full 31-bit literal
+    assert cl[N] == (1 << 31) - 1

@@ -1,0 +1,71 @@
+//! Ablation B: the cost of the actor-composition operator itself (§3.5's
+//! "downside of this approach is the messaging overhead [to] pass memory
+//! references from actor to actor") — measured with pure CPU actors so no
+//! device time obscures the messaging.
+//!
+//! Three ways to run a K-stage increment chain: a composed actor
+//! (`compose` fold), explicit sequential requests from the driver, and a
+//! single actor doing all K increments (the no-messaging floor).
+
+use caf_ocl::actor::*;
+use caf_ocl::bench::{sample, samples_per_point, Series};
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(60);
+
+fn main() {
+    let n_samples = samples_per_point(300, 2000);
+    let sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+    let me = sys.scoped();
+
+    let mut composed_s = Series::new("ablB_composed");
+    let mut manual_s = Series::new("ablB_manual");
+    let mut single_s = Series::new("ablB_single");
+
+    for k in [2usize, 4, 8, 16] {
+        let stages: Vec<ActorRef> = (0..k)
+            .map(|_| sys.spawn(|_| Behavior::new().on(|_c, &x: &u64| reply(x + 1))))
+            .collect();
+        let composed = pipeline(&sys, &stages);
+        let all_in_one = {
+            let k = k as u64;
+            sys.spawn(move |_| Behavior::new().on(move |_c, &x: &u64| reply(x + k)))
+        };
+        // warm
+        let _: u64 = me.request(&composed, 0u64).receive(T).unwrap();
+
+        composed_s.push(k as f64, "composed", &sample(20, n_samples, || {
+            let r: u64 = me.request(&composed, 0u64).receive(T).unwrap();
+            assert_eq!(r, k as u64);
+        }));
+        manual_s.push(k as f64, "manual chain", &sample(20, n_samples, || {
+            let mut x = 0u64;
+            for s in &stages {
+                x = me.request(s, x).receive(T).unwrap();
+            }
+            assert_eq!(x, k as u64);
+        }));
+        single_s.push(k as f64, "single actor", &sample(20, n_samples, || {
+            let r: u64 = me.request(&all_in_one, 0u64).receive(T).unwrap();
+            assert_eq!(r, k as u64);
+        }));
+    }
+
+    composed_s.finish("stages", "s");
+    manual_s.finish("stages", "s");
+    single_s.finish("stages", "s");
+
+    println!("\nper-stage messaging cost [us]:");
+    for ((c, m), s) in composed_s.rows.iter().zip(&manual_s.rows).zip(&single_s.rows) {
+        let k = c.x;
+        println!(
+            "  K={:>2}: composed {:.2}, manual {:.2}, floor {:.2}",
+            k,
+            (c.summary.mean - s.summary.mean) / k * 1e6,
+            (m.summary.mean - s.summary.mean) / k * 1e6,
+            s.summary.mean * 1e6
+        );
+    }
+
+    sys.shutdown();
+}

@@ -1,0 +1,72 @@
+//! Ablation A (paper §3.6 design discussion): composed per-kernel actors —
+//! "an interface that integrates into the actor model and allows for
+//! composition" — versus "an actor that handles multiple kernel stages"
+//! (our monolithic fused artifact), which "removes the need for message
+//! passing between kernel executions and could prevent idling of the
+//! OpenCL device".
+//!
+//! Both build identical WAH indexes (asserted); the delta quantifies the
+//! price of stage-wise composition.
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{sample, samples_per_point, Series};
+use caf_ocl::indexing::gpu_pipeline::{FusedIndexer, GpuIndexer};
+use caf_ocl::opencl::Manager;
+use caf_ocl::workload::ValueStream;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(600);
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("abl_staged_vs_fused: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let sizes: &[usize] = if caf_ocl::bench::full_mode() {
+        &[4096, 16384, 65536, 262144]
+    } else {
+        &[4096, 16384, 65536]
+    };
+    let n_samples = samples_per_point(3, 10);
+
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load(&sys);
+    let me = sys.scoped();
+
+    let mut staged_s = Series::new("abl_staged");
+    let mut fused_s = Series::new("abl_fused");
+
+    for &n in sizes {
+        let values = ValueStream::Uniform { cardinality: 512 }.generate(n, 77 + n as u64);
+        let staged = GpuIndexer::build(&mngr, 0, n).unwrap();
+        let fused = FusedIndexer::build(&mngr, 0, n).unwrap();
+        // warm + correctness cross-check
+        let a = staged.index(&me, &values, T).unwrap();
+        let b = fused.index(&me, &values, T).unwrap();
+        assert_eq!(a.words, b.words, "ablation variants must agree");
+
+        staged_s.push(n as f64, "8 composed actors", &sample(0, n_samples, || {
+            std::hint::black_box(staged.index(&me, &values, T).unwrap());
+        }));
+        fused_s.push(n as f64, "1 fused actor", &sample(0, n_samples, || {
+            std::hint::black_box(fused.index(&me, &values, T).unwrap());
+        }));
+    }
+
+    staged_s.finish("N values", "s");
+    fused_s.finish("N values", "s");
+
+    println!("\ncomposition cost (staged vs fused):");
+    for (s, f) in staged_s.rows.iter().zip(&fused_s.rows) {
+        println!(
+            "  N={:>8}: staged {:.3} ms, fused {:.3} ms ({:+.1}%)",
+            s.x,
+            s.summary.mean * 1e3,
+            f.summary.mean * 1e3,
+            (s.summary.mean / f.summary.mean - 1.0) * 100.0
+        );
+    }
+
+    mngr.stop_devices();
+    sys.shutdown();
+}

@@ -1,0 +1,107 @@
+//! Fig 3: "Runtime for building a WAH index as a function of index size —
+//! comparing GPU with CPU performance." (paper §4.2)
+//!
+//! Paper setup: 10k..20M values, Tesla C2075 vs 24-core server, log-log,
+//! means of 10. Here: the AOT pipeline capacities (4k..1M), the CPU
+//! streaming indexer as baseline, and two device series — real PJRT
+//! wall-clock, and the Tesla cost model applied to the measured kernel time
+//! (launch + PCIe transfer + 0.5x compute; see sim::devices).
+//!
+//! Expected shape: both linear; device sub-linear at small N (dispatch
+//! dominated). NOTE an honest inversion: the paper's GPU wins by ~2x; our
+//! "device" is the same CPU running the O(N log N) sort-based GPU
+//! algorithm, so the O(N) CPU encoder keeps winning in wall-clock — the
+//! modeled-Tesla series shows what the cost structure gives real silicon.
+//! Run with CAF_OCL_BENCH_FULL=1 for the full size sweep + 10 samples.
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{sample, samples_per_point, Series};
+use caf_ocl::indexing::gpu_pipeline::GpuIndexer;
+use caf_ocl::indexing::CpuIndexer;
+use caf_ocl::opencl::{DeviceSpec, Manager};
+use caf_ocl::util::stats::linear_fit;
+use caf_ocl::workload::ValueStream;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(600);
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("fig3: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let full = caf_ocl::bench::full_mode();
+    let sizes: &[usize] = if full {
+        &[4096, 16384, 65536, 262144, 1048576]
+    } else {
+        &[4096, 16384, 65536]
+    };
+    let n_samples = samples_per_point(3, 10);
+    let tesla = caf_ocl::sim::tesla_c2075();
+    let tesla_pad = tesla.pad.unwrap();
+
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load_with(&sys, vec![DeviceSpec::host()]);
+    let me = sys.scoped();
+
+    let mut cpu_s = Series::new("fig3_cpu");
+    let mut gpu_s = Series::new("fig3_gpu_real");
+    let mut tesla_s = Series::new("fig3_gpu_tesla_model");
+
+    for &n in sizes {
+        let values = ValueStream::Zipf {
+            cardinality: 512,
+            s: 1.1,
+        }
+        .generate(n, 0xF163 + n as u64);
+        let cpu = CpuIndexer::new(1024);
+        cpu_s.push(
+            n as f64,
+            "cpu",
+            &sample(1, n_samples, || {
+                std::hint::black_box(cpu.index(&values));
+            }),
+        );
+
+        let gpu = GpuIndexer::build(&mngr, 0, n).expect("pipeline");
+        let _ = gpu.index(&me, &values, T).unwrap(); // warm
+        let device = mngr.default_device();
+        let stats = device.queue.stats();
+        let exec_ns_before = stats.exec_ns.load(Ordering::Relaxed);
+        let samples_gpu = sample(0, n_samples, || {
+            std::hint::black_box(gpu.index(&me, &values, T).unwrap());
+        });
+        let exec_s = (stats.exec_ns.load(Ordering::Relaxed) - exec_ns_before) as f64
+            / n_samples as f64
+            / 1e9;
+        gpu_s.push(n as f64, "pjrt-real", &samples_gpu);
+        // Tesla model: dispatch per stage (8) + up/down transfers + 0.5x exec
+        let bytes = (n * 4 + (2 * n + 1024 + 16) * 4) as f64;
+        let modeled = 8.0 * tesla_pad.launch.as_secs_f64()
+            + bytes / tesla_pad.bytes_per_sec
+            + exec_s * tesla_pad.compute_scale;
+        tesla_s.push(n as f64, "tesla-modeled", &[modeled]);
+    }
+
+    cpu_s.finish("N values", "s");
+    gpu_s.finish("N values", "s");
+    tesla_s.finish("N values", "s");
+
+    // slopes (paper: "the GPU also exhibits linear scaling with about half
+    // the slope" — report ours)
+    let xs: Vec<f64> = sizes.iter().map(|&n| n as f64).collect();
+    let cpu_y: Vec<f64> = cpu_s.rows.iter().map(|r| r.summary.mean).collect();
+    let gpu_y: Vec<f64> = gpu_s.rows.iter().map(|r| r.summary.mean).collect();
+    let (_, cpu_b) = linear_fit(&xs, &cpu_y);
+    let (_, gpu_b) = linear_fit(&xs, &gpu_y);
+    println!(
+        "\nslopes [ns/value]: cpu {:.2}, device-real {:.2} (ratio {:.2})",
+        cpu_b * 1e9,
+        gpu_b * 1e9,
+        gpu_b / cpu_b
+    );
+
+    mngr.stop_devices();
+    sys.shutdown();
+}

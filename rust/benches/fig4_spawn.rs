@@ -1,0 +1,94 @@
+//! Fig 4: "Comparing the wall-clock time for spawning OpenCL versus
+//! event-based actors." (paper §5.1)
+//!
+//! Paper setup: spawn 1..N actors in a loop, then send a message to the
+//! last one and await the response to ensure all are live; event-based
+//! actors use lazy_init for a fair comparison; means of 50 with 95% CIs.
+//! Expected shape: both linear in N, OpenCL actors with the larger slope.
+
+use caf_ocl::actor::{no_reply, ActorSystem, Behavior, SpawnOptions, SystemConfig};
+use caf_ocl::bench::{sample, samples_per_point, Series};
+use caf_ocl::opencl::{KernelSpawn, Manager, Mode};
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(60);
+
+fn main() {
+    let full = caf_ocl::bench::full_mode();
+    let counts: &[usize] = if full {
+        &[250, 500, 1000, 2000, 4000]
+    } else {
+        &[100, 250, 500, 1000]
+    };
+    let n_samples = samples_per_point(5, 50);
+    let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
+
+    let mut ev_s = Series::new("fig4_event_based");
+    let mut cl_s = Series::new("fig4_opencl");
+
+    for &k in counts {
+        // event-based actors, lazy_init (the paper's setup)
+        ev_s.push(
+            k as f64,
+            "event-based",
+            &sample(1, n_samples, || {
+                let sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+                let mut last = None;
+                for _ in 0..k {
+                    last = Some(sys.spawn_opts(
+                        |_| Behavior::new().on(|_c, _: &u32| no_reply()),
+                        SpawnOptions::lazy(),
+                    ));
+                }
+                // confirm liveness through the last actor
+                let me = sys.scoped();
+                let _ = me.request(&last.unwrap(), 1u32).receive_msg(T).unwrap();
+                sys.shutdown();
+            }),
+        );
+
+        if have_artifacts {
+            cl_s.push(
+                k as f64,
+                "opencl",
+                &sample(1, n_samples, || {
+                    let sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+                    let mngr = Manager::load(&sys);
+                    // program creation (kernel compilation) happens once,
+                    // inside the measured window — like the OpenCL runtime
+                    // init in the paper's measurement
+                    let program = mngr.create_kernel_program("empty_1024").unwrap();
+                    let mut last = None;
+                    for _ in 0..k {
+                        last = Some(
+                            mngr.spawn_cl(
+                                KernelSpawn::new(program.clone(), "empty_1024")
+                                    .inputs(Mode::Val, 1)
+                                    .output(Mode::Val),
+                            )
+                            .unwrap(),
+                        );
+                    }
+                    let me = sys.scoped();
+                    let data: Vec<u32> = vec![0; 1024];
+                    let _: Vec<u32> = me.request(&last.unwrap(), data).receive(T).unwrap();
+                    mngr.stop_devices();
+                    sys.shutdown();
+                }),
+            );
+        }
+    }
+
+    ev_s.finish("actors", "s");
+    if have_artifacts {
+        cl_s.finish("actors", "s");
+        let per_ev = ev_s.rows.last().unwrap().summary.mean / *counts.last().unwrap() as f64;
+        let per_cl = cl_s.rows.last().unwrap().summary.mean / *counts.last().unwrap() as f64;
+        println!(
+            "\nper-actor spawn cost: event-based {:.2} us, opencl {:.2} us (x{:.1})",
+            per_ev * 1e6,
+            per_cl * 1e6,
+            per_cl / per_ev
+        );
+    }
+}

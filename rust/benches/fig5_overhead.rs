@@ -1,0 +1,98 @@
+//! Fig 5: "Overhead of the CAF messaging when multiplying N x N matrices."
+//! (paper §5.2)
+//!
+//! Two measurements per problem size: (a) the whole calculation, from
+//! sending the message to receiving the answer; (b) the time from enqueuing
+//! the kernel until the completion callback (data transfer + execution).
+//! Fig 5(b) plots the difference — the paper found a flat 5.7–8.6 ms with
+//! "no discernible slope", i.e. actor overhead independent of problem size.
+//!
+//! Paper sizes 1000..12000 (GTX 780M); ours 64..512 (interpret-mode PJRT).
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{samples_per_point, Series};
+use caf_ocl::opencl::{FacadeStats, KernelSpawn, Manager, Mode, NdRange};
+use caf_ocl::util::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(300);
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("fig5: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let sizes: &[usize] = &[64, 128, 256, 384, 512];
+    let n_samples = samples_per_point(10, 50);
+
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load(&sys);
+    let me = sys.scoped();
+
+    let mut total_s = Series::new("fig5a_total");
+    let mut device_s = Series::new("fig5a_device");
+    let mut diff_s = Series::new("fig5b_difference");
+
+    for &n in sizes {
+        let kernel = format!("matmul_{n}");
+        let stats = Arc::new(FacadeStats::default());
+        let program = mngr.create_kernel_program(&kernel).unwrap();
+        let worker = mngr
+            .spawn_cl(
+                KernelSpawn::new(program, &kernel)
+                    .range(NdRange::d2(n, n))
+                    .inputs(Mode::Val, 2)
+                    .output(Mode::Val)
+                    .with_stats(stats.clone()),
+            )
+            .unwrap();
+        let mut rng = Rng::new(n as u64);
+        let a = rng.fill_f32(n * n);
+        let b = rng.fill_f32(n * n);
+        // one message, cheaply cloned per request (Arc payload) — keeps
+        // payload construction out of the measured window, like the paper's
+        // pre-allocated matrices
+        let msg = caf_ocl::actor::Message::new(vec![
+            caf_ocl::opencl::ArgValue::from(a),
+            caf_ocl::opencl::ArgValue::from(b),
+        ]);
+        let _ = me.request_msg(&worker, msg.clone()).receive_msg(T).unwrap();
+
+        let mut totals = Vec::new();
+        let mut devices = Vec::new();
+        let mut diffs = Vec::new();
+        for _ in 0..n_samples {
+            let dev_before = stats.device_ns.load(Ordering::Relaxed);
+            let t0 = Instant::now();
+            let out = me.request_msg(&worker, msg.clone()).receive_msg(T).unwrap();
+            assert!(out.is::<Vec<f32>>());
+            let total = t0.elapsed().as_secs_f64();
+            let device =
+                (stats.device_ns.load(Ordering::Relaxed) - dev_before) as f64 / 1e9;
+            totals.push(total);
+            devices.push(device);
+            diffs.push(total - device);
+        }
+        total_s.push(n as f64, "request->reply", &totals);
+        device_s.push(n as f64, "enqueue->callback", &devices);
+        diff_s.push(n as f64, "difference", &diffs);
+    }
+
+    total_s.finish("N (matrix dim)", "s");
+    device_s.finish("N (matrix dim)", "s");
+    diff_s.finish("N (matrix dim)", "s");
+
+    // the Fig 5b check: the difference must not grow with the problem size
+    let first = diff_s.rows.first().unwrap().summary.mean;
+    let last = diff_s.rows.last().unwrap().summary.mean;
+    println!(
+        "\nFig5b flatness: difference at N=64: {:.3} ms, at N=512: {:.3} ms",
+        first * 1e3,
+        last * 1e3
+    );
+
+    mngr.stop_devices();
+    sys.shutdown();
+}

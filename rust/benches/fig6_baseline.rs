@@ -1,0 +1,98 @@
+//! Fig 6: "Comparing the runtime of iterated tasks in CAF versus native
+//! OpenCL." (paper §5.3)
+//!
+//! A sequence of dependent matmuls: the CAF variant issues the next request
+//! when the previous response arrives; the native variant drives the device
+//! queue directly (upload/execute/download, next task from the completion
+//! callback) without any actor messaging. Paper: both linear, CAF 8.3%
+//! over native at 1000 iterations decaying to 7.4% at 10000.
+//!
+//! Paper: 1000x1000 matrices, 1000..10000 iterations; ours: 256x256,
+//! 100..1000 (quick: 100..500).
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{samples_per_point, Series};
+use caf_ocl::opencl::{Manager, Mode};
+use caf_ocl::runtime::{Dtype, HostData};
+use caf_ocl::util::Rng;
+use std::time::{Duration, Instant};
+
+const T: Duration = Duration::from_secs(600);
+const N: usize = 256;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("fig6: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let full = caf_ocl::bench::full_mode();
+    let iters: Vec<usize> = if full {
+        (1..=10).map(|k| k * 100).collect()
+    } else {
+        (1..=5).map(|k| k * 100).collect()
+    };
+    let n_samples = samples_per_point(3, 10);
+
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load(&sys);
+    let me = sys.scoped();
+    let kernel = format!("matmul_{N}");
+    let worker = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val).unwrap();
+    let queue = mngr.default_device().queue.clone();
+
+    let mut rng = Rng::new(6);
+    let a = rng.fill_f32(N * N);
+    let b = rng.fill_f32(N * N);
+    // warm both paths
+    let _: Vec<f32> = me.request(&worker, (a.clone(), b.clone())).receive(T).unwrap();
+
+    let mut caf_s = Series::new("fig6_caf");
+    let mut native_s = Series::new("fig6_native");
+
+    for &k in &iters {
+        let mut caf = Vec::new();
+        let mut native = Vec::new();
+        for _ in 0..n_samples {
+            // CAF path: sequential requests through the actor
+            let t0 = Instant::now();
+            for _ in 0..k {
+                let _: Vec<f32> = me
+                    .request(&worker, (a.clone(), b.clone()))
+                    .receive(T)
+                    .unwrap();
+            }
+            caf.push(t0.elapsed().as_secs_f64());
+
+            // native path: the device queue without actors
+            let t0 = Instant::now();
+            for _ in 0..k {
+                let (ba, e1) = queue.upload(HostData::F32(a.clone()));
+                let (bb, e2) = queue.upload(HostData::F32(b.clone()));
+                let (out, done) = queue.execute(&kernel, vec![ba, bb], Dtype::F32, vec![e1, e2]);
+                queue.free(ba);
+                queue.free(bb);
+                done.wait(T).map_err(|e| e.to_string()).unwrap();
+                let _ = queue.download(out, T).unwrap();
+                queue.free(out);
+            }
+            native.push(t0.elapsed().as_secs_f64());
+        }
+        caf_s.push(k as f64, "caf", &caf);
+        native_s.push(k as f64, "native", &native);
+    }
+
+    caf_s.finish("iterations", "s");
+    native_s.finish("iterations", "s");
+
+    println!("\nrelative overhead of the actor path (paper: 8.3% -> 7.4%):");
+    for (c, n) in caf_s.rows.iter().zip(&native_s.rows) {
+        println!(
+            "  {:>6} iterations: {:+.2}%",
+            c.x,
+            (c.summary.mean / n.summary.mean - 1.0) * 100.0
+        );
+    }
+
+    mngr.stop_devices();
+    sys.shutdown();
+}

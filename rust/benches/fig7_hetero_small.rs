@@ -1,0 +1,81 @@
+//! Fig 7: "Moving a small workload to OpenCL devices." (paper §5.4)
+//!
+//! Mandelbrot of the inner cut, offloaded to (a) the Tesla and (b) the
+//! Xeon Phi in 10% steps. Paper: 1920x1080, 100 iterations; Tesla declines
+//! monotonically to its minimum at 100% offload, while the Phi's dispatch +
+//! transfer overhead makes *any* offload of this small problem a loss
+//! ("the total execution time doubles when offloading 10%").
+//!
+//! Ours: 960x540 @ 100 iterations on the simulated device profiles.
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{hetero_step, samples_per_point, Series};
+use caf_ocl::opencl::{Manager, Mode};
+use caf_ocl::sim::{tesla_c2075, xeon_phi_5110p};
+use caf_ocl::util::stats::summarize;
+
+const W: usize = 960;
+const H: usize = 540;
+const CHUNK: usize = 54;
+const ITERS: u32 = 100;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("fig7: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let n_samples = samples_per_point(3, 10);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let kernel = format!("mandel_w{W}_h{H}_c{CHUNK}_it{ITERS}");
+
+    for (tag, spec) in [("tesla", tesla_c2075()), ("phi", xeon_phi_5110p())] {
+        let sys = ActorSystem::new(SystemConfig::default());
+        let mngr = Manager::load_with(&sys, vec![spec]);
+        let device_actor = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val).unwrap();
+        let me = sys.scoped();
+        // warm the device path
+        let _ = hetero_step(&me, &device_actor, W, H, CHUNK, ITERS, 1, threads);
+
+        let mut total_s = Series::new(format!("fig7_{tag}_total"));
+        let mut cpu_s = Series::new(format!("fig7_{tag}_cpu"));
+        let mut dev_s = Series::new(format!("fig7_{tag}_device"));
+        for step in 0..=10usize {
+            let mut totals = Vec::new();
+            let mut cpus = Vec::new();
+            let mut devs = Vec::new();
+            for _ in 0..n_samples {
+                let (t, c, d) =
+                    hetero_step(&me, &device_actor, W, H, CHUNK, ITERS, step, threads);
+                totals.push(t);
+                cpus.push(c);
+                devs.push(d);
+            }
+            let x = (step * 10) as f64;
+            total_s.push(x, "total", &totals);
+            cpu_s.push(x, "cpu-part", &cpus);
+            dev_s.push(x, "device-part", &devs);
+            let s = summarize(&totals);
+            println!("{tag}: offload {:>3}% -> total {:.2} ms", x, s.mean * 1e3);
+        }
+        total_s.finish("offload %", "s");
+        cpu_s.finish("offload %", "s");
+        dev_s.finish("offload %", "s");
+
+        // shape checks from the paper
+        let t0 = total_s.rows[0].summary.mean;
+        let t100 = total_s.rows[10].summary.mean;
+        let min = total_s
+            .rows
+            .iter()
+            .map(|r| r.summary.mean)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "{tag}: total(0%)={:.1} ms, total(100%)={:.1} ms, min={:.1} ms\n",
+            t0 * 1e3,
+            t100 * 1e3,
+            min * 1e3
+        );
+        mngr.stop_devices();
+        sys.shutdown();
+    }
+}

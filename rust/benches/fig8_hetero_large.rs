@@ -1,0 +1,71 @@
+//! Fig 8: "Moving large workloads to OpenCL devices." (paper §5.4)
+//!
+//! Same sweep as Fig 7 with a drastically larger image so the offload cost
+//! amortizes. Paper: 16000x16000, (a) 100 and (b) 1000 iterations; at 100
+//! iterations the optimum sits around 80% (Tesla) / 60% (Phi); at 1000
+//! iterations "the Phi and Tesla perform equally well" — the Phi's
+//! transfer penalty vanishes when compute dominates.
+//!
+//! Ours: 2048x2040; quick mode runs it100 with a coarse sweep, full mode
+//! (CAF_OCL_BENCH_FULL=1) adds it1000 and all 11 steps.
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{full_mode, hetero_step, Series};
+use caf_ocl::opencl::{Manager, Mode};
+use caf_ocl::sim::{tesla_c2075, xeon_phi_5110p};
+
+const W: usize = 2048;
+const H: usize = 2040;
+const CHUNK: usize = 204;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("fig8: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let full = full_mode();
+    let iters_list: &[u32] = if full { &[100, 1000] } else { &[100] };
+    let steps: Vec<usize> = if full {
+        (0..=10).collect()
+    } else {
+        vec![0, 2, 4, 6, 8, 10]
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    for &iters in iters_list {
+        let kernel = format!("mandel_w{W}_h{H}_c{CHUNK}_it{iters}");
+        for (tag, spec) in [("tesla", tesla_c2075()), ("phi", xeon_phi_5110p())] {
+            let sys = ActorSystem::new(SystemConfig::default());
+            let mngr = Manager::load_with(&sys, vec![spec]);
+            let device_actor = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val).unwrap();
+            let me = sys.scoped();
+            let _ = hetero_step(&me, &device_actor, W, H, CHUNK, iters, 1, threads);
+
+            let mut total_s = Series::new(format!("fig8_it{iters}_{tag}_total"));
+            let mut best = (0usize, f64::INFINITY);
+            for &step in &steps {
+                let (t, c, d) =
+                    hetero_step(&me, &device_actor, W, H, CHUNK, iters, step, threads);
+                total_s.push((step * 10) as f64, "total", &[t]);
+                if t < best.1 {
+                    best = (step * 10, t);
+                }
+                println!(
+                    "it{iters} {tag}: offload {:>3}% -> total {:8.1} ms (cpu {:8.1}, dev {:8.1})",
+                    step * 10,
+                    t * 1e3,
+                    c * 1e3,
+                    d * 1e3
+                );
+            }
+            total_s.finish("offload %", "s");
+            println!(
+                "it{iters} {tag}: best split {}% at {:.1} ms\n",
+                best.0,
+                best.1 * 1e3
+            );
+            mngr.stop_devices();
+            sys.shutdown();
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! §3.6's stage-messaging estimate: "we created an actor with an empty
+//! kernel and passed it a memory reference to execute its kernel. Measuring
+//! the time from sending the message to receiving an answer should give an
+//! estimate of the baseline required to process an 'empty' stage. ...the
+//! measurements mainly remain below 1 ms. Looking only at the time between
+//! the mapping functions ... the measurements remain around a few
+//! microseconds."
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::{sample, samples_per_point, Series};
+use caf_ocl::opencl::{FacadeStats, KernelSpawn, Manager, MemRef, Mode};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(60);
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("tbl_stage_latency: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let n = samples_per_point(200, 1000);
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load(&sys);
+    let me = sys.scoped();
+
+    // producer puts data on the device once; the empty stage consumes the
+    // reference and answers with a fresh reference
+    let producer = mngr.spawn_simple("empty_1024", Mode::Val, Mode::Ref).unwrap();
+    let stats = Arc::new(FacadeStats::default());
+    let program = mngr.create_kernel_program("empty_1024").unwrap();
+    let empty_stage = mngr
+        .spawn_cl(
+            KernelSpawn::new(program, "empty_1024")
+                .inputs(Mode::Ref, 1)
+                .output(Mode::Ref)
+                .with_stats(stats.clone()),
+        )
+        .unwrap();
+
+    let data: Vec<u32> = (0..1024).collect();
+    let seed: MemRef = me.request(&producer, data).receive(T).unwrap();
+    seed.ready_event().wait(T).unwrap();
+
+    // keep the returned refs alive until after each measurement
+    let hold: Mutex<Option<MemRef>> = Mutex::new(None);
+    let roundtrip = sample(50, n, || {
+        let r: MemRef = me.request(&empty_stage, seed.clone()).receive(T).unwrap();
+        *hold.lock().unwrap() = Some(r);
+    });
+
+    let mut s = Series::new("tbl_stage_latency");
+    s.push(0.0, "empty-stage round-trip", &roundtrip);
+    let launched = stats.launched.load(Ordering::Relaxed).max(1);
+    let device_mean = stats.device_ns.load(Ordering::Relaxed) as f64 / launched as f64 / 1e9;
+    s.push(1.0, "device enqueue->complete", &[device_mean]);
+    let msg_only: Vec<f64> = roundtrip.iter().map(|t| (t - device_mean).max(0.0)).collect();
+    s.push(2.0, "actor messaging only", &msg_only);
+    s.finish("row", "s");
+
+    let mean_ms = s.rows[0].summary.mean * 1e3;
+    println!(
+        "\npaper bound: < 1 ms per empty stage; measured {:.3} ms ({})",
+        mean_ms,
+        if mean_ms < 1.0 { "PASS" } else { "above bound on this testbed" }
+    );
+    println!(
+        "messaging-only (mapper-to-mapper analog): {:.1} us",
+        s.rows[2].summary.mean * 1e6
+    );
+
+    mngr.stop_devices();
+    sys.shutdown();
+}

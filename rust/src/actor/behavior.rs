@@ -1,0 +1,100 @@
+//! Message-handler behaviors: CAF's partial-function pattern matching,
+//! expressed as an ordered list of typed handlers (the "internal DSL for
+//! pattern matching", paper §2.1).
+
+use super::cell::Ctx;
+use super::message::Message;
+use std::any::Any;
+
+/// What a handler produced for the current message.
+pub enum Reply {
+    /// Void handler: for requests, a unit response is still sent so that
+    /// requester continuations fire (CAF sends an empty message).
+    None,
+    /// Immediate response payload.
+    Msg(Message),
+    /// The response will be produced later via a [`ResponsePromise`]
+    /// (or was delegated to another actor).
+    ///
+    /// [`ResponsePromise`]: super::request::ResponsePromise
+    Promised,
+}
+
+/// Respond with a typed value.
+pub fn reply<T: Any + Send + Sync>(v: T) -> Reply {
+    Reply::Msg(Message::new(v))
+}
+
+/// Respond with an already-built message.
+pub fn reply_msg(m: Message) -> Reply {
+    Reply::Msg(m)
+}
+
+/// Void handler result.
+pub fn no_reply() -> Reply {
+    Reply::None
+}
+
+type Handler = Box<dyn FnMut(&mut Ctx, &Message) -> Option<Reply> + Send>;
+
+/// An ordered set of typed message handlers; the first whose parameter type
+/// matches the payload wins. Unmatched messages are stashed until the next
+/// behavior change (CAF: "messages that cannot be matched stay in the
+/// buffer").
+#[derive(Default)]
+pub struct Behavior {
+    handlers: Vec<Handler>,
+}
+
+impl Behavior {
+    pub fn new() -> Self {
+        Behavior { handlers: Vec::new() }
+    }
+
+    /// Add a handler for payload type `T`.
+    pub fn on<T, F>(mut self, mut f: F) -> Self
+    where
+        T: Any + Send + Sync,
+        F: FnMut(&mut Ctx, &T) -> Reply + Send + 'static,
+    {
+        self.handlers.push(Box::new(move |ctx, msg| {
+            msg.downcast_ref::<T>().map(|v| f(ctx, v))
+        }));
+        self
+    }
+
+    /// Add a catch-all handler receiving the raw message (used e.g. by the
+    /// composition actor, which forwards anything).
+    pub fn on_any<F>(mut self, mut f: F) -> Self
+    where
+        F: FnMut(&mut Ctx, &Message) -> Reply + Send + 'static,
+    {
+        self.handlers.push(Box::new(move |ctx, msg| Some(f(ctx, msg))));
+        self
+    }
+
+    /// Number of handlers (diagnostics).
+    pub fn len(&self) -> usize {
+        self.handlers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handlers.is_empty()
+    }
+
+    /// Try all handlers in order; `None` means the message did not match.
+    pub(crate) fn invoke(&mut self, ctx: &mut Ctx, msg: &Message) -> Option<Reply> {
+        for h in self.handlers.iter_mut() {
+            if let Some(r) = h(ctx, msg) {
+                return Some(r);
+            }
+        }
+        None
+    }
+}
+
+impl std::fmt::Debug for Behavior {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Behavior({} handlers)", self.handlers.len())
+    }
+}

@@ -1,0 +1,163 @@
+//! Blocking (scoped) actors: thread-bound mailboxes for interacting with
+//! the actor system from ordinary threads (CAF's `scoped_actor`), used by
+//! examples, tests, and benches (`request(...).receive(...)`).
+
+use super::envelope::{ActorId, Envelope, MessageId};
+use super::message::Message;
+use super::monitor::ErrorMsg;
+use super::system::ActorSystem;
+use super::{AbstractActor, ActorRef};
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct SharedBox {
+    id: ActorId,
+    queue: Mutex<VecDeque<Envelope>>,
+    cv: Condvar,
+}
+
+impl AbstractActor for SharedBox {
+    fn enqueue(&self, env: Envelope) {
+        self.queue.lock().unwrap().push_back(env);
+        self.cv.notify_all();
+    }
+
+    fn id(&self) -> ActorId {
+        self.id
+    }
+
+    fn attach_monitor(&self, _watcher: ActorRef) {}
+
+    fn attach_link(&self, _peer: ActorRef) {}
+
+    fn kind(&self) -> &'static str {
+        "scoped"
+    }
+}
+
+/// A thread-bound blocking actor.
+pub struct ScopedActor {
+    system: ActorSystem,
+    inbox: Arc<SharedBox>,
+}
+
+/// Awaitable response of [`ScopedActor::request`].
+pub struct PendingResponse<'a> {
+    owner: &'a ScopedActor,
+    mid: MessageId,
+}
+
+impl ScopedActor {
+    pub(crate) fn new(system: ActorSystem, id: ActorId) -> ScopedActor {
+        ScopedActor {
+            system,
+            inbox: Arc::new(SharedBox {
+                id,
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn me(&self) -> ActorRef {
+        ActorRef::new(self.inbox.clone() as Arc<dyn AbstractActor>)
+    }
+
+    pub fn system(&self) -> &ActorSystem {
+        &self.system
+    }
+
+    /// Fire-and-forget send with this scoped actor as sender.
+    pub fn send<T: Any + Send + Sync>(&self, target: &ActorRef, v: T) {
+        target.enqueue(Envelope::asynchronous(Some(self.me()), Message::new(v)));
+    }
+
+    /// Issue a request; await it with [`PendingResponse::receive`].
+    pub fn request<T: Any + Send + Sync>(&self, target: &ActorRef, v: T) -> PendingResponse<'_> {
+        self.request_msg(target, Message::new(v))
+    }
+
+    pub fn request_msg(&self, target: &ActorRef, m: Message) -> PendingResponse<'_> {
+        let mid = MessageId::fresh_request();
+        target.enqueue(Envelope {
+            sender: Some(self.me()),
+            mid,
+            msg: m,
+        });
+        PendingResponse { owner: self, mid }
+    }
+
+    /// Pop the next envelope, blocking up to `timeout`.
+    pub fn receive_any(&self, timeout: Duration) -> Option<Envelope> {
+        let deadline = Instant::now() + timeout;
+        let mut q = self.inbox.queue.lock().unwrap();
+        loop {
+            if let Some(e) = q.pop_front() {
+                return Some(e);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (q2, _) = self
+                .inbox
+                .cv
+                .wait_timeout(q, deadline - now)
+                .unwrap();
+            q = q2;
+        }
+    }
+
+    /// Wait for the response correlated to `mid`, buffering (and keeping)
+    /// any unrelated traffic that arrives meanwhile.
+    fn await_response(&self, mid: MessageId, timeout: Duration) -> Result<Message, ErrorMsg> {
+        let want = mid.response_for();
+        let deadline = Instant::now() + timeout;
+        let mut q = self.inbox.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|e| e.mid == want) {
+                let env = q.remove(pos).unwrap();
+                return match env.msg.downcast_ref::<ErrorMsg>() {
+                    Some(e) => Err(e.clone()),
+                    None => Ok(env.msg),
+                };
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(ErrorMsg::new("request timed out"));
+            }
+            let (q2, _) = self
+                .inbox
+                .cv
+                .wait_timeout(q, deadline - now)
+                .unwrap();
+            q = q2;
+        }
+    }
+}
+
+impl Drop for ScopedActor {
+    fn drop(&mut self) {
+        self.system.actor_terminated(self.inbox.id);
+    }
+}
+
+impl PendingResponse<'_> {
+    /// Await the raw response message.
+    pub fn receive_msg(self, timeout: Duration) -> Result<Message, ErrorMsg> {
+        self.owner.await_response(self.mid, timeout)
+    }
+
+    /// Await and extract a typed response.
+    pub fn receive<R: Any + Clone>(self, timeout: Duration) -> Result<R, ErrorMsg> {
+        let msg = self.receive_msg(timeout)?;
+        msg.take::<R>().ok_or_else(|| {
+            ErrorMsg::new(format!(
+                "response type mismatch: got {}",
+                msg.type_name()
+            ))
+        })
+    }
+}

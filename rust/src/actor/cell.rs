@@ -1,0 +1,569 @@
+//! The event-based actor: mailbox-driven lifecycle, handler dispatch,
+//! behavior changes, continuations, monitors/links, panic isolation.
+
+use super::behavior::{Behavior, Reply};
+use super::envelope::{ActorId, Envelope, MessageId};
+use super::mailbox::{EnqueueResult, Mailbox};
+use super::message::{Message, UnitReply};
+use super::monitor::{Down, ErrorMsg, Exit, ExitReason, RequestTimeout};
+use super::request::{Continuation, RequestBuilder, ResponsePromise};
+use super::system::ActorSystem;
+use super::{AbstractActor, ActorRef};
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
+use std::time::Duration;
+
+/// Lock helper that survives mutex poisoning (a panicking handler must not
+/// wedge the whole actor system — CAF likewise contains actor failures).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+const IDLE: u8 = 0;
+const SCHEDULED: u8 = 1;
+const RUNNING: u8 = 2;
+const CLOSED: u8 = 3;
+
+/// Outcome of one scheduler slice.
+pub enum ResumeResult {
+    /// Mailbox drained (or actor terminated); do not requeue.
+    Done,
+    /// Throughput exhausted with messages left; requeue.
+    Reschedule,
+}
+
+type InitFn = Box<dyn FnOnce(&mut Ctx) -> Behavior + Send>;
+
+pub(crate) struct CellInner {
+    behavior: Option<Behavior>,
+    init: Option<InitFn>,
+    continuations: HashMap<u64, Continuation>,
+    stash: Vec<Envelope>,
+    trap_exit: bool,
+}
+
+/// The state block of an event-based actor (CAF's `actor_cell` / the
+/// scheduling unit of the cooperative scheduler).
+pub struct ActorCell {
+    id: ActorId,
+    system: ActorSystem,
+    state: AtomicU8,
+    mailbox: Mailbox,
+    inner: Mutex<CellInner>,
+    watchers: Mutex<Vec<ActorRef>>,
+    links: Mutex<Vec<ActorRef>>,
+    exit_reason: Mutex<Option<ExitReason>>,
+    self_weak: Weak<ActorCell>,
+}
+
+/// Marker that triggers eager initialization right after spawn (the default;
+/// `lazy_init` skips it, matching the paper's Fig 4 setup).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct InitNow;
+
+impl ActorCell {
+    pub(crate) fn create(system: ActorSystem, id: ActorId, init: InitFn) -> Arc<ActorCell> {
+        Arc::new_cyclic(|weak| ActorCell {
+            id,
+            system,
+            state: AtomicU8::new(IDLE),
+            mailbox: Mailbox::new(),
+            inner: Mutex::new(CellInner {
+                behavior: None,
+                init: Some(init),
+                continuations: HashMap::new(),
+                stash: Vec::new(),
+                trap_exit: false,
+            }),
+            watchers: Mutex::new(Vec::new()),
+            links: Mutex::new(Vec::new()),
+            exit_reason: Mutex::new(None),
+            self_weak: weak.clone(),
+        })
+    }
+
+    pub fn actor_ref(self: &Arc<Self>) -> ActorRef {
+        ActorRef::new(self.clone() as Arc<dyn AbstractActor>)
+    }
+
+    fn self_ref(&self) -> Option<ActorRef> {
+        self.self_weak
+            .upgrade()
+            .map(|c| ActorRef::new(c as Arc<dyn AbstractActor>))
+    }
+
+    fn schedule(self: &Arc<Self>) {
+        if self
+            .state
+            .compare_exchange(IDLE, SCHEDULED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.system.scheduler().submit(self.clone());
+        }
+    }
+
+    /// Run up to `throughput` messages; called by a scheduler worker.
+    pub(crate) fn resume(self: &Arc<Self>, throughput: usize) -> ResumeResult {
+        if self
+            .state
+            .compare_exchange(SCHEDULED, RUNNING, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return ResumeResult::Done; // already closed
+        }
+        for _ in 0..throughput {
+            let Some(env) = self.mailbox.dequeue() else { break };
+            let me = self.clone();
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                me.process(env);
+            }));
+            if let Err(p) = res {
+                let what = panic_to_string(&p);
+                self.terminate(ExitReason::Panic(what));
+            }
+            if self.state.load(Ordering::Acquire) == CLOSED {
+                return ResumeResult::Done;
+            }
+        }
+        if self.state.load(Ordering::Acquire) == CLOSED {
+            return ResumeResult::Done;
+        }
+        // leave RUNNING: either back to IDLE (and re-check for races with
+        // concurrent enqueues) or straight to SCHEDULED when work remains.
+        if self.mailbox.is_empty() {
+            self.state.store(IDLE, Ordering::Release);
+            if !self.mailbox.is_empty() {
+                self.schedule();
+            }
+            ResumeResult::Done
+        } else {
+            self.state.store(SCHEDULED, Ordering::Release);
+            ResumeResult::Reschedule
+        }
+    }
+
+    fn process(self: &Arc<Self>, env: Envelope) {
+        let Envelope { sender, mid, msg } = env;
+        let mut guard = lock(&self.inner);
+
+        // lazy/eager initialization: build the behavior on first dispatch
+        if let Some(init) = guard.init.take() {
+            let mut ctx = Ctx::new(self, None, MessageId::ASYNC, &mut guard);
+            let behavior = init(&mut ctx);
+            let (become_next, exit) = ctx.finish();
+            guard.behavior = Some(become_next.unwrap_or(behavior));
+            if let Some(reason) = exit {
+                drop(guard);
+                self.terminate(reason);
+                return;
+            }
+        }
+        if msg.is::<InitNow>() {
+            return; // init already ran above
+        }
+
+        // responses resolve pending continuations
+        if mid.is_response() {
+            let cont = guard.continuations.remove(&mid.request_of());
+            if let Some(cont) = cont {
+                let result = match msg.downcast_ref::<ErrorMsg>() {
+                    Some(e) => Err(e.clone()),
+                    None => Ok(msg),
+                };
+                let mut ctx = Ctx::new(self, sender, MessageId::ASYNC, &mut guard);
+                cont(&mut ctx, result);
+                let (become_next, exit) = ctx.finish();
+                self.apply_transitions(guard, become_next, exit);
+            }
+            return;
+        }
+
+        // request timeouts fire the continuation with an error
+        if let Some(t) = msg.downcast_ref::<RequestTimeout>() {
+            if let Some(cont) = guard.continuations.remove(&t.request_id) {
+                let mut ctx = Ctx::new(self, sender, MessageId::ASYNC, &mut guard);
+                cont(&mut ctx, Err(ErrorMsg::new("request timed out")));
+                let (become_next, exit) = ctx.finish();
+                self.apply_transitions(guard, become_next, exit);
+            }
+            return;
+        }
+
+        // exit propagation (links)
+        if let Some(x) = msg.downcast_ref::<Exit>() {
+            if !guard.trap_exit && !x.reason.is_normal() {
+                drop(guard);
+                self.terminate(x.reason.clone());
+                return;
+            }
+            // trapped: fall through to the behavior like a normal message
+        }
+
+        // ordinary dispatch
+        let mut behavior = guard.behavior.take();
+        let mut ctx = Ctx::new(self, sender.clone(), mid, &mut guard);
+        let outcome = behavior.as_mut().and_then(|b| b.invoke(&mut ctx, &msg));
+        let promised = ctx.promised;
+        let (become_next, exit) = ctx.finish();
+        match outcome {
+            Some(Reply::Msg(m)) => respond(&sender, mid, self.self_ref(), m),
+            Some(Reply::None) => {
+                if !promised {
+                    respond(&sender, mid, self.self_ref(), Message::new(UnitReply));
+                }
+            }
+            Some(Reply::Promised) => {}
+            None => {
+                // unmatched: system messages are dropped, ordinary traffic is
+                // stashed until the next behavior change (CAF semantics)
+                if !is_system_payload(&msg) {
+                    if guard.stash.len() < self.system.config().max_stash {
+                        guard.stash.push(Envelope { sender, mid, msg });
+                    } else if mid.is_request() {
+                        respond(
+                            &sender,
+                            mid,
+                            self.self_ref(),
+                            Message::new(ErrorMsg::new("unexpected message (stash full)")),
+                        );
+                    }
+                }
+            }
+        }
+        // restore or replace behavior, then drain the stash on change
+        let changed = become_next.is_some();
+        guard.behavior = become_next.or(behavior);
+        if changed {
+            let stash = std::mem::take(&mut guard.stash);
+            for e in stash.into_iter().rev() {
+                self.mailbox.push_front(e);
+            }
+        }
+        self.apply_transitions(guard, None, exit);
+    }
+
+    fn apply_transitions(
+        self: &Arc<Self>,
+        mut guard: MutexGuard<'_, CellInner>,
+        become_next: Option<Behavior>,
+        exit: Option<ExitReason>,
+    ) {
+        if let Some(b) = become_next {
+            guard.behavior = Some(b);
+            let stash = std::mem::take(&mut guard.stash);
+            for e in stash.into_iter().rev() {
+                self.mailbox.push_front(e);
+            }
+        }
+        drop(guard);
+        if let Some(reason) = exit {
+            self.terminate(reason);
+        }
+    }
+
+    /// Terminate: close the mailbox, bounce pending requests, notify
+    /// monitors and links, release the system bookkeeping.
+    pub(crate) fn terminate(self: &Arc<Self>, reason: ExitReason) {
+        let prev = self.state.swap(CLOSED, Ordering::AcqRel);
+        if prev == CLOSED {
+            return;
+        }
+        *lock(&self.exit_reason) = Some(reason.clone());
+        let drained = self.mailbox.close();
+        let me = self.self_ref();
+        for env in drained {
+            if env.mid.is_request() {
+                respond(
+                    &env.sender,
+                    env.mid,
+                    me.clone(),
+                    Message::new(ErrorMsg::new("actor terminated")),
+                );
+            }
+        }
+        {
+            let mut inner = lock(&self.inner);
+            inner.behavior = None;
+            inner.init = None;
+            inner.continuations.clear();
+            inner.stash.clear();
+        }
+        let down = Message::new(Down {
+            source: self.id,
+            reason: reason.clone(),
+        });
+        for w in lock(&self.watchers).drain(..) {
+            w.enqueue(Envelope::asynchronous(me.clone(), down.clone()));
+        }
+        let exit = Message::new(Exit {
+            source: self.id,
+            reason,
+        });
+        for l in lock(&self.links).drain(..) {
+            l.enqueue(Envelope::asynchronous(me.clone(), exit.clone()));
+        }
+        self.system.actor_terminated(self.id);
+    }
+
+    pub fn is_terminated(&self) -> bool {
+        self.state.load(Ordering::Acquire) == CLOSED
+    }
+}
+
+fn respond(sender: &Option<ActorRef>, mid: MessageId, me: Option<ActorRef>, m: Message) {
+    if mid.is_request() {
+        if let Some(s) = sender {
+            s.enqueue(Envelope {
+                sender: me,
+                mid: mid.response_for(),
+                msg: m,
+            });
+        }
+    }
+}
+
+pub(crate) fn is_system_payload(msg: &Message) -> bool {
+    msg.is::<Down>() || msg.is::<Exit>() || msg.is::<RequestTimeout>() || msg.is::<InitNow>()
+}
+
+fn panic_to_string(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+impl AbstractActor for ActorCell {
+    fn enqueue(&self, env: Envelope) {
+        let system_lane = is_system_payload(&env.msg);
+        let sender = env.sender.clone();
+        let mid = env.mid;
+        match self.mailbox.enqueue(env, system_lane) {
+            EnqueueResult::NeedsSchedule => {
+                if let Some(me) = self.self_weak.upgrade() {
+                    me.schedule();
+                }
+            }
+            EnqueueResult::Stored => {}
+            EnqueueResult::Closed => {
+                respond(
+                    &sender,
+                    mid,
+                    self.self_ref(),
+                    Message::new(ErrorMsg::new("actor terminated")),
+                );
+            }
+        }
+    }
+
+    fn id(&self) -> ActorId {
+        self.id
+    }
+
+    fn attach_monitor(&self, watcher: ActorRef) {
+        if self.is_terminated() {
+            let reason = lock(&self.exit_reason)
+                .clone()
+                .unwrap_or(ExitReason::Normal);
+            watcher.enqueue(Envelope::asynchronous(
+                self.self_ref(),
+                Message::new(Down {
+                    source: self.id,
+                    reason,
+                }),
+            ));
+        } else {
+            lock(&self.watchers).push(watcher);
+        }
+    }
+
+    fn attach_link(&self, peer: ActorRef) {
+        if self.is_terminated() {
+            let reason = lock(&self.exit_reason)
+                .clone()
+                .unwrap_or(ExitReason::Normal);
+            peer.enqueue(Envelope::asynchronous(
+                self.self_ref(),
+                Message::new(Exit {
+                    source: self.id,
+                    reason,
+                }),
+            ));
+        } else {
+            lock(&self.links).push(peer);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ctx — the handler-visible actor context
+// ---------------------------------------------------------------------------
+
+/// What a running handler sees of its actor (CAF's `self` pointer): send,
+/// request, promise, delegate, behavior change, spawn, quit.
+pub struct Ctx<'a> {
+    cell: &'a Arc<ActorCell>,
+    sender: Option<ActorRef>,
+    mid: MessageId,
+    inner: &'a mut CellInner,
+    become_next: Option<Behavior>,
+    exit: Option<ExitReason>,
+    pub(crate) promised: bool,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(
+        cell: &'a Arc<ActorCell>,
+        sender: Option<ActorRef>,
+        mid: MessageId,
+        guard: &'a mut MutexGuard<'_, CellInner>,
+    ) -> Ctx<'a> {
+        // reborrow the guard's target for the context lifetime
+        let inner: &'a mut CellInner = &mut **guard;
+        Ctx {
+            cell,
+            sender,
+            mid,
+            inner,
+            become_next: None,
+            exit: None,
+            promised: false,
+        }
+    }
+
+    fn finish(self) -> (Option<Behavior>, Option<ExitReason>) {
+        (self.become_next, self.exit)
+    }
+
+    /// Handle to the running actor itself.
+    pub fn me(&self) -> ActorRef {
+        self.cell.actor_ref()
+    }
+
+    pub fn id(&self) -> ActorId {
+        self.cell.id
+    }
+
+    pub fn system(&self) -> &ActorSystem {
+        &self.cell.system
+    }
+
+    /// Sender of the message being processed.
+    pub fn sender(&self) -> Option<&ActorRef> {
+        self.sender.as_ref()
+    }
+
+    /// Correlation id of the message being processed.
+    pub fn message_id(&self) -> MessageId {
+        self.mid
+    }
+
+    /// Fire-and-forget send with `self` as sender.
+    pub fn send<T: Any + Send + Sync>(&self, target: &ActorRef, v: T) {
+        self.send_msg(target, Message::new(v));
+    }
+
+    pub fn send_msg(&self, target: &ActorRef, m: Message) {
+        target.enqueue(Envelope::asynchronous(Some(self.me()), m));
+    }
+
+    /// Issue a request; register the response continuation via
+    /// [`RequestBuilder::then`].
+    pub fn request<T: Any + Send + Sync>(
+        &mut self,
+        target: &ActorRef,
+        v: T,
+    ) -> RequestBuilder<'_, 'a> {
+        self.request_msg(target, Message::new(v))
+    }
+
+    pub fn request_msg(&mut self, target: &ActorRef, m: Message) -> RequestBuilder<'_, 'a> {
+        let mid = MessageId::fresh_request();
+        target.enqueue(Envelope {
+            sender: Some(self.me()),
+            mid,
+            msg: m,
+        });
+        RequestBuilder {
+            rid: mid.0,
+            ctx: self,
+        }
+    }
+
+    pub(crate) fn store_continuation(&mut self, rid: u64, cont: Continuation) {
+        self.inner.continuations.insert(rid, cont);
+    }
+
+    pub(crate) fn arm_request_timeout(&mut self, rid: u64, d: Duration) {
+        let me = self.me();
+        self.system().timer().schedule(
+            d,
+            me,
+            Message::new(RequestTimeout { request_id: rid }),
+        );
+    }
+
+    /// Capture the current request for a deferred reply (CAF
+    /// `make_response_promise`). The handler should return
+    /// [`Reply::Promised`].
+    pub fn make_promise(&mut self) -> ResponsePromise {
+        self.promised = true;
+        ResponsePromise::new(self.sender.clone(), self.mid, Some(self.me()))
+    }
+
+    /// Forward the current request to `target`, which becomes responsible
+    /// for replying to the original requester (CAF delegation — the
+    /// composition primitive, §3.5).
+    pub fn delegate(&mut self, target: &ActorRef, m: Message) {
+        self.promised = true;
+        target.enqueue(Envelope {
+            sender: self.sender.clone(),
+            mid: self.mid,
+            msg: m,
+        });
+    }
+
+    /// Replace the behavior after this handler returns; stashed messages
+    /// are replayed.
+    pub fn become_(&mut self, b: Behavior) {
+        self.become_next = Some(b);
+    }
+
+    /// Receive `Exit` messages as ordinary messages instead of dying.
+    pub fn trap_exit(&mut self, on: bool) {
+        self.inner.trap_exit = on;
+    }
+
+    /// Monitor `who`: a [`Down`] message arrives when it terminates.
+    pub fn monitor(&self, who: &ActorRef) {
+        who.monitor_with(self.me());
+    }
+
+    /// Link with `who`: exits propagate in both directions.
+    pub fn link_to(&self, who: &ActorRef) {
+        who.link_with(self.me());
+        self.cell_links_push(who.clone());
+    }
+
+    fn cell_links_push(&self, peer: ActorRef) {
+        lock(&self.cell.links).push(peer);
+    }
+
+    /// Terminate after this handler returns.
+    pub fn quit(&mut self, reason: ExitReason) {
+        self.exit = Some(reason);
+    }
+
+    /// Spawn a child actor (same as `system().spawn`).
+    pub fn spawn<F>(&self, init: F) -> ActorRef
+    where
+        F: FnOnce(&mut Ctx) -> Behavior + Send + 'static,
+    {
+        self.system().spawn(init)
+    }
+}

@@ -1,0 +1,47 @@
+//! Actor composition: `C = B ∘ A` (paper §3.5).
+//!
+//! "We denote C = B ⊙ A to define an actor C which takes any messages it
+//! receives as input of A and uses the result as input for B" — intuitively
+//! function composition, `h(x) = f(g(x))`. Realized with a response promise
+//! for the original requester plus chained request continuations, exactly
+//! like CAF's composed actors. OpenCL kernel pipelines (`opencl::stage`)
+//! build on this operator.
+
+use super::behavior::{Behavior, Reply};
+use super::system::ActorSystem;
+use super::ActorRef;
+
+/// Compose two actors: the result forwards every message to `inner` and
+/// pipes the response through `outer` (i.e. `outer ∘ inner`).
+pub fn compose(sys: &ActorSystem, outer: ActorRef, inner: ActorRef) -> ActorRef {
+    sys.spawn(move |_ctx| {
+        let outer = outer.clone();
+        let inner = inner.clone();
+        Behavior::new().on_any(move |ctx, msg| {
+            let promise = ctx.make_promise();
+            let outer = outer.clone();
+            ctx.request_msg(&inner, msg.clone()).then(move |ctx, res| {
+                match res {
+                    Ok(m) => {
+                        ctx.request_msg(&outer, m).then(move |_ctx, res2| {
+                            promise.deliver_result(res2);
+                        });
+                    }
+                    Err(e) => promise.deliver_err(e),
+                }
+            });
+            Reply::Promised
+        })
+    })
+}
+
+/// Compose a whole pipeline: `stages = [a, b, c]` yields `c ∘ b ∘ a`,
+/// i.e. messages flow a → b → c (the paper's
+/// `move_elems * count_elems * prepare` reads right-to-left; this helper
+/// takes stages in flow order instead, which is less error-prone).
+pub fn pipeline(sys: &ActorSystem, stages: &[ActorRef]) -> ActorRef {
+    assert!(!stages.is_empty(), "pipeline needs at least one stage");
+    let mut it = stages.iter().cloned();
+    let first = it.next().unwrap();
+    it.fold(first, |acc, next| compose(sys, next, acc))
+}

@@ -1,0 +1,115 @@
+//! Message envelopes and request/response correlation ids.
+
+use super::message::Message;
+use super::ActorRef;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Globally unique actor id within one actor system (CAF's `actor_id`).
+pub type ActorId = u64;
+
+/// Correlates requests with responses (CAF's `message_id`).
+///
+/// Bit 63 flags a response; id 0 is the plain asynchronous send. Every
+/// `request` draws a fresh id from a process-wide counter, and the matching
+/// response carries the same id with the response bit set.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MessageId(pub u64);
+
+static NEXT_REQUEST: AtomicU64 = AtomicU64::new(1);
+
+const RESPONSE_BIT: u64 = 1 << 63;
+
+impl MessageId {
+    /// Plain asynchronous message: no response expected.
+    pub const ASYNC: MessageId = MessageId(0);
+
+    /// Draw a fresh request id.
+    pub fn fresh_request() -> MessageId {
+        MessageId(NEXT_REQUEST.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// The id a response to this request must carry.
+    pub fn response_for(self) -> MessageId {
+        debug_assert!(self.is_request());
+        MessageId(self.0 | RESPONSE_BIT)
+    }
+
+    /// The request id a response correlates to.
+    pub fn request_of(self) -> u64 {
+        self.0 & !RESPONSE_BIT
+    }
+
+    pub fn is_async(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn is_request(self) -> bool {
+        self.0 != 0 && self.0 & RESPONSE_BIT == 0
+    }
+
+    pub fn is_response(self) -> bool {
+        self.0 & RESPONSE_BIT != 0
+    }
+}
+
+impl std::fmt::Debug for MessageId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_async() {
+            write!(f, "mid:async")
+        } else if self.is_response() {
+            write!(f, "mid:resp({})", self.request_of())
+        } else {
+            write!(f, "mid:req({})", self.0)
+        }
+    }
+}
+
+/// A message in flight: payload plus routing metadata.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    /// Who sent it (None for anonymous/system-internal sends).
+    pub sender: Option<ActorRef>,
+    /// Correlation id; see [`MessageId`].
+    pub mid: MessageId,
+    /// The payload.
+    pub msg: Message,
+}
+
+impl Envelope {
+    pub fn asynchronous(sender: Option<ActorRef>, msg: Message) -> Self {
+        Envelope {
+            sender,
+            mid: MessageId::ASYNC,
+            msg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_response_correlation() {
+        let r = MessageId::fresh_request();
+        assert!(r.is_request());
+        assert!(!r.is_response());
+        let resp = r.response_for();
+        assert!(resp.is_response());
+        assert_eq!(resp.request_of(), r.0);
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let a = MessageId::fresh_request();
+        let b = MessageId::fresh_request();
+        assert_ne!(a.0, b.0);
+    }
+
+    #[test]
+    fn async_is_neither_request_nor_response() {
+        assert!(MessageId::ASYNC.is_async());
+        assert!(!MessageId::ASYNC.is_request());
+        assert!(!MessageId::ASYNC.is_response());
+    }
+}

@@ -1,0 +1,151 @@
+//! Actor mailboxes: FIFO per priority class, with system messages (down,
+//! exit, timeouts) overtaking ordinary traffic — CAF's two-queue design.
+
+use super::envelope::Envelope;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Result of an enqueue, telling the caller whether it must schedule the
+/// owning actor.
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub enum EnqueueResult {
+    /// Message stored; the mailbox was empty, caller should schedule.
+    NeedsSchedule,
+    /// Message stored; actor already has work queued.
+    Stored,
+    /// Mailbox closed (actor terminated); message was rejected.
+    Closed,
+}
+
+#[derive(Default)]
+struct Inner {
+    normal: VecDeque<Envelope>,
+    system: VecDeque<Envelope>,
+    closed: bool,
+}
+
+/// Two-priority FIFO mailbox.
+pub struct Mailbox {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mailbox {
+    pub fn new() -> Self {
+        Mailbox {
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn enqueue(&self, env: Envelope, system: bool) -> EnqueueResult {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return EnqueueResult::Closed;
+        }
+        let was_empty = inner.normal.is_empty() && inner.system.is_empty();
+        if system {
+            inner.system.push_back(env);
+        } else {
+            inner.normal.push_back(env);
+        }
+        if was_empty {
+            EnqueueResult::NeedsSchedule
+        } else {
+            EnqueueResult::Stored
+        }
+    }
+
+    /// Push a message back to the *front* of the normal queue (used when a
+    /// behavior change un-stashes skipped messages).
+    pub fn push_front(&self, env: Envelope) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.closed {
+            inner.normal.push_front(env);
+        }
+    }
+
+    /// Dequeue the next message, system queue first.
+    pub fn dequeue(&self) -> Option<Envelope> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.system.pop_front().or_else(|| inner.normal.pop_front())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.normal.is_empty() && inner.system.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.normal.len() + inner.system.len()
+    }
+
+    /// Close the mailbox and drain everything still queued.
+    pub fn close(&self) -> Vec<Envelope> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        let mut out: Vec<Envelope> = inner.system.drain(..).collect();
+        out.extend(inner.normal.drain(..));
+        out
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::message::Message;
+
+    fn env(tag: u32) -> Envelope {
+        Envelope::asynchronous(None, Message::new(tag))
+    }
+
+    fn tag(e: &Envelope) -> u32 {
+        *e.msg.downcast_ref::<u32>().unwrap()
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mb = Mailbox::new();
+        assert_eq!(mb.enqueue(env(1), false), EnqueueResult::NeedsSchedule);
+        assert_eq!(mb.enqueue(env(2), false), EnqueueResult::Stored);
+        assert_eq!(tag(&mb.dequeue().unwrap()), 1);
+        assert_eq!(tag(&mb.dequeue().unwrap()), 2);
+        assert!(mb.dequeue().is_none());
+    }
+
+    #[test]
+    fn system_messages_overtake() {
+        let mb = Mailbox::new();
+        mb.enqueue(env(1), false);
+        mb.enqueue(env(99), true);
+        assert_eq!(tag(&mb.dequeue().unwrap()), 99);
+        assert_eq!(tag(&mb.dequeue().unwrap()), 1);
+    }
+
+    #[test]
+    fn closed_mailbox_rejects() {
+        let mb = Mailbox::new();
+        mb.enqueue(env(1), false);
+        let drained = mb.close();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(mb.enqueue(env(2), false), EnqueueResult::Closed);
+        assert!(mb.is_closed());
+    }
+
+    #[test]
+    fn push_front_reorders() {
+        let mb = Mailbox::new();
+        mb.enqueue(env(2), false);
+        mb.push_front(env(1));
+        assert_eq!(tag(&mb.dequeue().unwrap()), 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Dynamically typed message payloads.
+//!
+//! CAF messages are copy-on-write tuples matched by runtime type; here a
+//! [`Message`] wraps an `Arc<dyn Any>` so clones are cheap (the paper relies
+//! on zero-copy message passing for `mem_ref` pipelines) and handlers match
+//! by downcasting to their parameter type.
+
+use std::any::Any;
+use std::sync::Arc;
+
+/// A type-erased, cheaply clonable message payload.
+#[derive(Clone)]
+pub struct Message {
+    payload: Arc<dyn Any + Send + Sync>,
+    type_name: &'static str,
+}
+
+impl Message {
+    pub fn new<T: Any + Send + Sync>(value: T) -> Self {
+        Message {
+            payload: Arc::new(value),
+            type_name: std::any::type_name::<T>(),
+        }
+    }
+
+    /// Borrow the payload as `T`, if the runtime type matches.
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        self.payload.downcast_ref::<T>()
+    }
+
+    pub fn is<T: Any>(&self) -> bool {
+        self.payload.is::<T>()
+    }
+
+    /// Clone the payload out as `T` (messages may have multiple readers,
+    /// so extraction clones — mirroring CAF's copy-on-write semantics).
+    pub fn take<T: Any + Clone>(&self) -> Option<T> {
+        self.downcast_ref::<T>().cloned()
+    }
+
+    /// Move the payload out without cloning when this is the only reference;
+    /// falls back to cloning otherwise.
+    pub fn unwrap_or_clone<T: Any + Clone + Send + Sync>(self) -> Option<T> {
+        if self.payload.is::<T>() {
+            match Arc::downcast::<T>(self.payload) {
+                Ok(arc) => Some(Arc::try_unwrap(arc).unwrap_or_else(|a| (*a).clone())),
+                Err(_) => None,
+            }
+        } else {
+            None
+        }
+    }
+
+    /// The Rust type name of the payload (diagnostics only).
+    pub fn type_name(&self) -> &'static str {
+        self.type_name
+    }
+}
+
+impl std::fmt::Debug for Message {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Message<{}>", self.type_name)
+    }
+}
+
+/// Unit response payload sent for `void` handlers of requests, so that
+/// `request(...).then(...)` continuations always fire (CAF sends an empty
+/// message in this case).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UnitReply;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_typed_payload() {
+        let m = Message::new((1u32, 2u32));
+        assert!(m.is::<(u32, u32)>());
+        assert_eq!(m.take::<(u32, u32)>(), Some((1, 2)));
+        assert!(m.downcast_ref::<u64>().is_none());
+    }
+
+    #[test]
+    fn clone_shares_payload() {
+        let m = Message::new(vec![1f32; 1024]);
+        let m2 = m.clone();
+        let a = m.downcast_ref::<Vec<f32>>().unwrap().as_ptr();
+        let b = m2.downcast_ref::<Vec<f32>>().unwrap().as_ptr();
+        assert_eq!(a, b, "clones must share the payload allocation");
+    }
+
+    #[test]
+    fn unwrap_moves_unique_payload() {
+        let m = Message::new(vec![1u32, 2, 3]);
+        let v: Vec<u32> = m.unwrap_or_clone().unwrap();
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn type_name_is_informative() {
+        let m = Message::new(3.5f64);
+        assert!(m.type_name().contains("f64"));
+    }
+}

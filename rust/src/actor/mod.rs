@@ -1,0 +1,115 @@
+//! A CAF-like actor substrate: cooperative scheduling, mailboxes, typed
+//! message matching, request/response with promises, monitors/links, and the
+//! composition operator the paper builds kernel pipelines on (§3.5).
+//!
+//! This is the L3 foundation the OpenCL-actor integration (`crate::opencl`)
+//! plugs into: OpenCL actors implement the same [`AbstractActor`] interface
+//! as every CPU actor, so "from the perspective of the runtime system, an
+//! OpenCL actor is not distinguishable from any other actor" (paper §3.6).
+
+pub mod behavior;
+pub mod blocking;
+pub mod cell;
+pub mod compose;
+pub mod envelope;
+pub mod mailbox;
+pub mod message;
+pub mod monitor;
+pub mod registry;
+pub mod request;
+pub mod scheduler;
+pub mod system;
+pub mod timer;
+
+pub use behavior::{no_reply, reply, reply_msg, Behavior, Reply};
+pub use blocking::ScopedActor;
+pub use cell::{ActorCell, Ctx};
+pub use compose::{compose, pipeline};
+pub use envelope::{ActorId, Envelope, MessageId};
+pub use mailbox::Mailbox;
+pub use message::Message;
+pub use monitor::{Down, ErrorMsg, Exit, ExitReason};
+pub use registry::Registry;
+pub use system::{ActorSystem, SpawnOptions, SystemConfig};
+
+use std::sync::Arc;
+
+/// The uniform actor interface: everything addressable — event-based actors,
+/// OpenCL actor facades, blocking scoped actors, composed actors, and remote
+/// proxies — implements this, which is what makes them interchangeable
+/// (design goal "seamless integration", paper §3.1).
+pub trait AbstractActor: Send + Sync {
+    /// Deliver an envelope to this actor's mailbox.
+    fn enqueue(&self, env: Envelope);
+    /// Globally unique id within the actor system.
+    fn id(&self) -> ActorId;
+    /// Register `watcher` to receive a [`Down`] message when this actor
+    /// terminates. Fires immediately if already terminated.
+    fn attach_monitor(&self, watcher: ActorRef);
+    /// Register `peer` for bidirectional exit propagation ([`Exit`]).
+    fn attach_link(&self, peer: ActorRef);
+    /// Human-readable kind, e.g. "event-based", "opencl", "remote".
+    fn kind(&self) -> &'static str {
+        "event-based"
+    }
+}
+
+/// A network-transparent actor handle (CAF's `actor`): cheap to clone,
+/// hashable by id, usable as a message payload.
+#[derive(Clone)]
+pub struct ActorRef(pub Arc<dyn AbstractActor>);
+
+impl ActorRef {
+    pub fn new(inner: Arc<dyn AbstractActor>) -> Self {
+        ActorRef(inner)
+    }
+
+    pub fn id(&self) -> ActorId {
+        self.0.id()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.0.kind()
+    }
+
+    /// Fire-and-forget send (CAF `send`): no response is expected.
+    pub fn send_from(&self, sender: Option<ActorRef>, msg: Message) {
+        self.0.enqueue(Envelope {
+            sender,
+            mid: MessageId::ASYNC,
+            msg,
+        });
+    }
+
+    pub fn enqueue(&self, env: Envelope) {
+        self.0.enqueue(env);
+    }
+
+    pub fn monitor_with(&self, watcher: ActorRef) {
+        self.0.attach_monitor(watcher);
+    }
+
+    pub fn link_with(&self, peer: ActorRef) {
+        self.0.attach_link(peer);
+    }
+}
+
+impl std::fmt::Debug for ActorRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ActorRef(#{} {})", self.id(), self.kind())
+    }
+}
+
+impl PartialEq for ActorRef {
+    fn eq(&self, other: &Self) -> bool {
+        self.id() == other.id()
+    }
+}
+
+impl Eq for ActorRef {}
+
+impl std::hash::Hash for ActorRef {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.id().hash(state)
+    }
+}

@@ -1,0 +1,76 @@
+//! Monitoring and linking: the actor model's fault-tolerance primitives
+//! (paper §2.1 — "if an actor dies unexpectedly, the runtime system sends a
+//! message to each actor monitoring it").
+
+use super::envelope::ActorId;
+
+/// Why an actor terminated.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExitReason {
+    /// Behavior finished or the actor quit voluntarily.
+    Normal,
+    /// The surrounding system shut down.
+    Shutdown,
+    /// The actor raised an application error.
+    Error(String),
+    /// The actor's handler panicked (CAF: unhandled exception).
+    Panic(String),
+    /// A remote actor became unreachable.
+    Unreachable,
+}
+
+impl ExitReason {
+    pub fn is_normal(&self) -> bool {
+        matches!(self, ExitReason::Normal | ExitReason::Shutdown)
+    }
+}
+
+/// Delivered to monitors when the watched actor terminates (CAF
+/// `down_msg`). Travels on the system-priority lane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Down {
+    pub source: ActorId,
+    pub reason: ExitReason,
+}
+
+/// Delivered to linked actors when the peer terminates (CAF `exit_msg`).
+/// Unless the receiver traps exits, a non-normal reason propagates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Exit {
+    pub source: ActorId,
+    pub reason: ExitReason,
+}
+
+/// Error response delivered when a request cannot be served: target dead,
+/// handler failed, promise dropped, or timeout (CAF `error`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorMsg {
+    pub reason: String,
+}
+
+impl ErrorMsg {
+    pub fn new(reason: impl Into<String>) -> Self {
+        ErrorMsg {
+            reason: reason.into(),
+        }
+    }
+}
+
+/// Internal system message: a request the receiving actor issued timed out.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestTimeout {
+    pub request_id: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normality() {
+        assert!(ExitReason::Normal.is_normal());
+        assert!(ExitReason::Shutdown.is_normal());
+        assert!(!ExitReason::Error("x".into()).is_normal());
+        assert!(!ExitReason::Panic("x".into()).is_normal());
+    }
+}

@@ -1,0 +1,46 @@
+//! Named actor registry (CAF's actor registry): lookup by name for
+//! system-level services and the network layer.
+
+use super::ActorRef;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Registry {
+    names: Mutex<HashMap<String, ActorRef>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register `who` under `name`, replacing any previous entry.
+    pub fn put(&self, name: impl Into<String>, who: ActorRef) {
+        self.names.lock().unwrap().insert(name.into(), who);
+    }
+
+    pub fn get(&self, name: &str) -> Option<ActorRef> {
+        self.names.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn remove(&self, name: &str) -> Option<ActorRef> {
+        self.names.lock().unwrap().remove(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.names.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn clear(&self) {
+        self.names.lock().unwrap().clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

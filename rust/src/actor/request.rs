@@ -1,0 +1,121 @@
+//! Request/response plumbing: continuations, response promises, delegation.
+//!
+//! CAF's `request(...).then(...)` and `response_promise` — the machinery the
+//! composition operator (§3.5) and the OpenCL facade's asynchronous command
+//! completion are built on.
+
+use super::cell::Ctx;
+use super::envelope::{Envelope, MessageId};
+use super::message::Message;
+use super::monitor::ErrorMsg;
+use super::ActorRef;
+use std::time::Duration;
+
+/// A continuation invoked when the response to an issued request arrives
+/// (or the request fails / times out).
+pub type Continuation = Box<dyn FnOnce(&mut Ctx, Result<Message, ErrorMsg>) + Send>;
+
+/// Fluent handle returned by [`Ctx::request_msg`]: register a continuation
+/// and optionally arm a timeout.
+pub struct RequestBuilder<'a, 'b> {
+    pub(crate) ctx: &'a mut Ctx<'b>,
+    pub(crate) rid: u64,
+}
+
+impl RequestBuilder<'_, '_> {
+    /// Arm a timeout: if no response arrives within `d`, the continuation
+    /// fires with an error and any late response is dropped.
+    pub fn with_timeout(self, d: Duration) -> Self {
+        self.ctx.arm_request_timeout(self.rid, d);
+        self
+    }
+
+    /// Register the continuation (CAF's one-shot response handler).
+    pub fn then<F>(self, f: F)
+    where
+        F: FnOnce(&mut Ctx, Result<Message, ErrorMsg>) + Send + 'static,
+    {
+        self.ctx.store_continuation(self.rid, Box::new(f));
+    }
+}
+
+/// A deferred response (CAF `response_promise`): captures the requester and
+/// correlation id so the reply can be produced after the current handler
+/// returned — e.g. once an OpenCL command's completion event fired.
+///
+/// Dropping an unfulfilled promise sends a "broken promise" error, so
+/// requesters never hang silently.
+pub struct ResponsePromise {
+    target: Option<ActorRef>,
+    mid: MessageId,
+    me: Option<ActorRef>,
+    delivered: bool,
+}
+
+impl ResponsePromise {
+    pub(crate) fn new(target: Option<ActorRef>, mid: MessageId, me: Option<ActorRef>) -> Self {
+        // async sends expect no response: the promise becomes a sink
+        let target = if mid.is_request() { target } else { None };
+        ResponsePromise {
+            target,
+            mid,
+            me,
+            delivered: false,
+        }
+    }
+
+    /// A promise that discards its value (for async senders).
+    pub fn sink() -> Self {
+        ResponsePromise {
+            target: None,
+            mid: MessageId::ASYNC,
+            me: None,
+            delivered: false,
+        }
+    }
+
+    /// True if a requester is actually waiting on this promise.
+    pub fn is_live(&self) -> bool {
+        self.target.is_some()
+    }
+
+    pub fn deliver<T: std::any::Any + Send + Sync>(self, v: T) {
+        self.deliver_msg(Message::new(v));
+    }
+
+    pub fn deliver_msg(mut self, m: Message) {
+        if let Some(t) = self.target.take() {
+            t.enqueue(Envelope {
+                sender: self.me.clone(),
+                mid: self.mid.response_for(),
+                msg: m,
+            });
+        }
+        self.delivered = true;
+    }
+
+    pub fn deliver_err(self, e: ErrorMsg) {
+        self.deliver_msg(Message::new(e));
+    }
+
+    pub fn deliver_result(self, r: Result<Message, ErrorMsg>) {
+        match r {
+            Ok(m) => self.deliver_msg(m),
+            Err(e) => self.deliver_err(e),
+        }
+    }
+}
+
+impl Drop for ResponsePromise {
+    fn drop(&mut self) {
+        if !self.delivered {
+            if let Some(t) = self.target.take() {
+                t.enqueue(Envelope {
+                    sender: self.me.clone(),
+                    mid: self.mid.response_for(),
+                    msg: Message::new(ErrorMsg::new("broken promise")),
+                });
+            }
+        }
+    }
+}

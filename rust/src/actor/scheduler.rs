@@ -1,0 +1,162 @@
+//! Cooperative work-stealing scheduler (CAF §2.1: "actors are implemented
+//! as sub-thread entities and run in a cooperative scheduler using
+//! work-stealing").
+//!
+//! N worker threads each own a local deque; spawns/wakeups from worker
+//! threads go to the local deque, external submissions to a shared injector.
+//! Idle workers steal from the injector first, then from victims' deques.
+
+use super::cell::{ActorCell, ResumeResult};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Runnable = Arc<ActorCell>;
+
+struct Shared {
+    injector: Mutex<VecDeque<Runnable>>,
+    locals: Vec<Mutex<VecDeque<Runnable>>>,
+    sleepers: Mutex<usize>,
+    wakeup: Condvar,
+    shutdown: AtomicBool,
+    throughput: usize,
+    /// total messages processed (metrics)
+    resumes: AtomicUsize,
+}
+
+thread_local! {
+    /// Which worker the current thread is (usize::MAX = external thread).
+    static WORKER_INDEX: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    pub fn new(n_workers: usize, throughput: usize) -> Scheduler {
+        let n = n_workers.max(1);
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleepers: Mutex::new(0),
+            wakeup: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            throughput,
+            resumes: AtomicUsize::new(0),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("caf-worker-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        Scheduler {
+            shared,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Enqueue an actor for execution.
+    pub fn submit(&self, cell: Runnable) {
+        let idx = WORKER_INDEX.with(|w| w.get());
+        if idx < self.shared.locals.len() {
+            self.shared.locals[idx].lock().unwrap().push_back(cell);
+        } else {
+            self.shared.injector.lock().unwrap().push_back(cell);
+        }
+        // wake one sleeper if any
+        if *self.shared.sleepers.lock().unwrap() > 0 {
+            self.shared.wakeup.notify_one();
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shared.locals.len()
+    }
+
+    /// Total scheduler slices executed so far (metrics).
+    pub fn resume_count(&self) -> usize {
+        self.shared.resumes.load(Ordering::Relaxed)
+    }
+
+    /// Stop all workers; queued actors are dropped.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.wakeup.notify_all();
+        let mut ws = self.workers.lock().unwrap();
+        for w in ws.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, index: usize) {
+    WORKER_INDEX.with(|w| w.set(index));
+    let n = shared.locals.len();
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let job = pop_job(&shared, index, n);
+        match job {
+            Some(cell) => {
+                shared.resumes.fetch_add(1, Ordering::Relaxed);
+                if let ResumeResult::Reschedule = cell.resume(shared.throughput) {
+                    shared.locals[index].lock().unwrap().push_back(cell);
+                }
+            }
+            None => {
+                // sleep until new work arrives
+                let mut sleepers = shared.sleepers.lock().unwrap();
+                *sleepers += 1;
+                let (mut sleepers2, _timeout) = shared
+                    .wakeup
+                    .wait_timeout(sleepers, std::time::Duration::from_millis(10))
+                    .unwrap();
+                *sleepers2 -= 1;
+            }
+        }
+    }
+}
+
+fn pop_job(shared: &Shared, index: usize, n: usize) -> Option<Runnable> {
+    if let Some(c) = shared.locals[index].lock().unwrap().pop_front() {
+        return Some(c);
+    }
+    if let Some(c) = shared.injector.lock().unwrap().pop_front() {
+        return Some(c);
+    }
+    // steal: scan victims starting after ourselves
+    for k in 1..n {
+        let v = (index + k) % n;
+        if let Some(c) = shared.locals[v].lock().unwrap().pop_back() {
+            return Some(c);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_starts_and_stops() {
+        let s = Scheduler::new(4, 25);
+        assert_eq!(s.n_workers(), 4);
+        s.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_clamped_to_one() {
+        let s = Scheduler::new(0, 25);
+        assert_eq!(s.n_workers(), 1);
+        s.shutdown();
+    }
+}

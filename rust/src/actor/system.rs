@@ -1,0 +1,247 @@
+//! The actor system: configuration, spawning, module loading, lifecycle.
+
+use super::behavior::Behavior;
+use super::blocking::ScopedActor;
+use super::cell::{ActorCell, Ctx, InitNow};
+use super::envelope::{ActorId, Envelope};
+use super::message::Message;
+use super::registry::Registry;
+use super::scheduler::Scheduler;
+use super::timer::Timer;
+use super::ActorRef;
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// System configuration (CAF's `actor_system_config`).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Scheduler worker threads (default: available parallelism).
+    pub scheduler_threads: usize,
+    /// Messages one actor may process per scheduler slice.
+    pub throughput: usize,
+    /// Cap on stashed (unmatched) messages per actor.
+    pub max_stash: usize,
+    /// Directory holding the AOT artifacts + manifest for the OpenCL module.
+    pub artifacts_dir: String,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            scheduler_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            throughput: 25,
+            max_stash: 1024,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.scheduler_threads = n;
+        self
+    }
+
+    pub fn with_artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+}
+
+/// Spawn-time options (`lazy_init` mirrors the paper's Fig 4 setup: the
+/// actor is not scheduled for initialization until its first message).
+#[derive(Clone, Debug, Default)]
+pub struct SpawnOptions {
+    pub lazy_init: bool,
+    pub name: Option<String>,
+}
+
+impl SpawnOptions {
+    pub fn lazy() -> Self {
+        SpawnOptions {
+            lazy_init: true,
+            name: None,
+        }
+    }
+
+    pub fn named(name: impl Into<String>) -> Self {
+        SpawnOptions {
+            lazy_init: false,
+            name: Some(name.into()),
+        }
+    }
+}
+
+struct SystemCore {
+    config: SystemConfig,
+    scheduler: Scheduler,
+    timer: Timer,
+    registry: Registry,
+    next_id: AtomicU64,
+    alive: AtomicUsize,
+    spawned_total: AtomicUsize,
+    idle_gate: Mutex<()>,
+    idle_cv: Condvar,
+    /// Loadable modules (e.g. the OpenCL manager) keyed by name —
+    /// keeps `actor` decoupled from `opencl` at the type level.
+    modules: Mutex<HashMap<&'static str, Arc<dyn Any + Send + Sync>>>,
+}
+
+/// Cheaply clonable handle to the runtime (CAF's `actor_system`).
+#[derive(Clone)]
+pub struct ActorSystem {
+    core: Arc<SystemCore>,
+}
+
+impl ActorSystem {
+    pub fn new(config: SystemConfig) -> ActorSystem {
+        let scheduler = Scheduler::new(config.scheduler_threads, config.throughput);
+        ActorSystem {
+            core: Arc::new(SystemCore {
+                scheduler,
+                timer: Timer::new(),
+                registry: Registry::new(),
+                next_id: AtomicU64::new(1),
+                alive: AtomicUsize::new(0),
+                spawned_total: AtomicUsize::new(0),
+                idle_gate: Mutex::new(()),
+                idle_cv: Condvar::new(),
+                modules: Mutex::new(HashMap::new()),
+                config,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.core.config
+    }
+
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.core.scheduler
+    }
+
+    pub fn timer(&self) -> &Timer {
+        &self.core.timer
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.core.registry
+    }
+
+    pub(crate) fn next_actor_id(&self) -> ActorId {
+        self.core.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Spawn an event-based actor from an init function producing its
+    /// behavior (CAF `spawn`).
+    pub fn spawn<F>(&self, init: F) -> ActorRef
+    where
+        F: FnOnce(&mut Ctx) -> Behavior + Send + 'static,
+    {
+        self.spawn_opts(init, SpawnOptions::default())
+    }
+
+    /// Spawn with options (lazy initialization, registered name).
+    pub fn spawn_opts<F>(&self, init: F, opts: SpawnOptions) -> ActorRef
+    where
+        F: FnOnce(&mut Ctx) -> Behavior + Send + 'static,
+    {
+        let id = self.next_actor_id();
+        self.core.alive.fetch_add(1, Ordering::AcqRel);
+        self.core.spawned_total.fetch_add(1, Ordering::Relaxed);
+        let cell = ActorCell::create(self.clone(), id, Box::new(init));
+        let r = cell.actor_ref();
+        if let Some(name) = opts.name {
+            self.core.registry.put(name, r.clone());
+        }
+        if !opts.lazy_init {
+            r.enqueue(Envelope::asynchronous(None, Message::new(InitNow)));
+        }
+        r
+    }
+
+    /// Create a blocking actor bound to the calling thread (CAF's
+    /// `scoped_actor`) for request/receive interactions from outside the
+    /// scheduler.
+    pub fn scoped(&self) -> ScopedActor {
+        self.core.alive.fetch_add(1, Ordering::AcqRel);
+        ScopedActor::new(self.clone(), self.next_actor_id())
+    }
+
+    pub(crate) fn actor_terminated(&self, _id: ActorId) {
+        let prev = self.core.alive.fetch_sub(1, Ordering::AcqRel);
+        if prev == 1 {
+            let _g = self.core.idle_gate.lock().unwrap();
+            self.core.idle_cv.notify_all();
+        }
+    }
+
+    /// Number of live actors.
+    pub fn alive(&self) -> usize {
+        self.core.alive.load(Ordering::Acquire)
+    }
+
+    /// Total actors ever spawned (metrics, Fig 4).
+    pub fn spawned_total(&self) -> usize {
+        self.core.spawned_total.load(Ordering::Relaxed)
+    }
+
+    /// Block until every actor terminated (CAF `await_all_actors_done`).
+    pub fn await_all_actors_done(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.core.idle_gate.lock().unwrap();
+        while self.core.alive.load(Ordering::Acquire) > 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g2, _) = self
+                .core
+                .idle_cv
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = g2;
+        }
+        true
+    }
+
+    /// Register a named module (e.g. the OpenCL manager).
+    pub fn put_module(&self, name: &'static str, module: Arc<dyn Any + Send + Sync>) {
+        self.core.modules.lock().unwrap().insert(name, module);
+    }
+
+    pub fn get_module<T: Any + Send + Sync>(&self, name: &'static str) -> Option<Arc<T>> {
+        self.core
+            .modules
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .and_then(|m| m.downcast::<T>().ok())
+    }
+
+    /// Stop the runtime: clears the registry and modules, halts timer and
+    /// scheduler. Actors still queued are dropped.
+    pub fn shutdown(&self) {
+        self.core.registry.clear();
+        self.core.modules.lock().unwrap().clear();
+        self.core.timer.shutdown();
+        self.core.scheduler.shutdown();
+    }
+}
+
+impl std::fmt::Debug for ActorSystem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ActorSystem(alive={}, workers={})",
+            self.alive(),
+            self.core.scheduler.n_workers()
+        )
+    }
+}

@@ -1,0 +1,186 @@
+//! Delayed message delivery: request timeouts, delayed sends, simulated
+//! device latencies (the `sim` profiles schedule completion padding here).
+
+use super::envelope::Envelope;
+use super::message::Message;
+use super::ActorRef;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+struct Entry {
+    at: Instant,
+    seq: u64,
+    target: ActorRef,
+    msg: Message,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+#[derive(Default)]
+struct State {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+    shutdown: bool,
+}
+
+/// A single timer thread ordered by deadline (CAF's clock actor).
+pub struct Timer {
+    state: Arc<(Mutex<State>, Condvar)>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Timer {
+        let state: Arc<(Mutex<State>, Condvar)> = Arc::new((Mutex::new(State::default()), Condvar::new()));
+        let st = state.clone();
+        let worker = std::thread::Builder::new()
+            .name("caf-timer".into())
+            .spawn(move || timer_loop(st))
+            .expect("spawn timer thread");
+        Timer {
+            state,
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    /// Deliver `msg` to `target` after `delay`.
+    pub fn schedule(&self, delay: Duration, target: ActorRef, msg: Message) {
+        let (m, cv) = &*self.state;
+        let mut st = m.lock().unwrap();
+        st.seq += 1;
+        let seq = st.seq;
+        st.heap.push(Reverse(Entry {
+            at: Instant::now() + delay,
+            seq,
+            target,
+            msg,
+        }));
+        cv.notify_one();
+    }
+
+    /// Number of pending timers (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.state.0.lock().unwrap().heap.len()
+    }
+
+    pub fn shutdown(&self) {
+        {
+            let (m, cv) = &*self.state;
+            let mut st = m.lock().unwrap();
+            st.shutdown = true;
+            st.heap.clear();
+            cv.notify_all();
+        }
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn timer_loop(state: Arc<(Mutex<State>, Condvar)>) {
+    let (m, cv) = &*state;
+    let mut st = m.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let now = Instant::now();
+        // fire everything due
+        while let Some(Reverse(top)) = st.heap.peek() {
+            if top.at > now {
+                break;
+            }
+            let Reverse(e) = st.heap.pop().unwrap();
+            // deliver outside the lock to avoid holding it across enqueue
+            drop(st);
+            e.target
+                .enqueue(Envelope::asynchronous(None, e.msg));
+            st = m.lock().unwrap();
+            if st.shutdown {
+                return;
+            }
+        }
+        let wait = st
+            .heap
+            .peek()
+            .map(|Reverse(e)| e.at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        let (g, _) = cv.wait_timeout(st, wait).unwrap();
+        st = g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::envelope::{ActorId, Envelope};
+    use crate::actor::AbstractActor;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct Probe {
+        hits: AtomicUsize,
+    }
+    impl AbstractActor for Probe {
+        fn enqueue(&self, _env: Envelope) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+        }
+        fn id(&self) -> ActorId {
+            999
+        }
+        fn attach_monitor(&self, _w: ActorRef) {}
+        fn attach_link(&self, _p: ActorRef) {}
+    }
+
+    #[test]
+    fn fires_in_order_and_shutdown_is_clean() {
+        let t = Timer::new();
+        let probe = Arc::new(Probe {
+            hits: AtomicUsize::new(0),
+        });
+        let r = ActorRef::new(probe.clone());
+        t.schedule(Duration::from_millis(5), r.clone(), Message::new(1u32));
+        t.schedule(Duration::from_millis(10), r.clone(), Message::new(2u32));
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(probe.hits.load(Ordering::SeqCst), 2);
+        t.shutdown();
+    }
+
+    #[test]
+    fn pending_counts() {
+        let t = Timer::new();
+        let probe = Arc::new(Probe {
+            hits: AtomicUsize::new(0),
+        });
+        t.schedule(
+            Duration::from_secs(60),
+            ActorRef::new(probe),
+            Message::new(()),
+        );
+        assert_eq!(t.pending(), 1);
+        t.shutdown();
+    }
+}

@@ -1,0 +1,178 @@
+//! Measurement harness for the figure-regeneration benches (criterion is
+//! unavailable offline; DESIGN.md §3). Mirrors the paper's methodology:
+//! warmup, N samples, mean ± 95% CI, plus CSV emission so the series can be
+//! plotted alongside the paper's figures.
+
+use crate::util::stats::{summarize, Summary};
+use std::io::Write;
+use std::time::Instant;
+
+/// Run `f` `warmup + n` times; return per-run seconds for the measured `n`.
+pub fn sample<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// One row of a figure series.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub x: f64,
+    pub label: String,
+    pub summary: Summary,
+}
+
+/// A figure series under construction.
+pub struct Series {
+    pub name: String,
+    pub rows: Vec<Row>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series {
+            name: name.into(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, label: impl Into<String>, samples: &[f64]) {
+        self.rows.push(Row {
+            x,
+            label: label.into(),
+            summary: summarize(samples),
+        });
+    }
+
+    /// Print the paper-style table to stdout.
+    pub fn print(&self, x_name: &str, unit: &str) {
+        println!("\n== {} ==", self.name);
+        println!(
+            "{:>14}  {:>24}  {:>12}  {:>12}  {:>4}",
+            x_name, "label", &format!("mean [{unit}]"), &format!("ci95 [{unit}]"), "n"
+        );
+        for r in &self.rows {
+            println!(
+                "{:>14}  {:>24}  {:>12.6}  {:>12.6}  {:>4}",
+                r.x, r.label, r.summary.mean, r.summary.ci95, r.summary.n
+            );
+        }
+    }
+
+    /// Write `target/bench-results/<name>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/bench-results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "x,label,mean,sd,ci95,min,max,n")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                r.x,
+                r.label,
+                r.summary.mean,
+                r.summary.sd,
+                r.summary.ci95,
+                r.summary.min,
+                r.summary.max,
+                r.summary.n
+            )?;
+        }
+        Ok(path)
+    }
+
+    /// Finish: print + CSV + provenance line.
+    pub fn finish(&self, x_name: &str, unit: &str) {
+        self.print(x_name, unit);
+        match self.write_csv() {
+            Ok(p) => println!("   -> {}", p.display()),
+            Err(e) => eprintln!("   (csv write failed: {e})"),
+        }
+    }
+}
+
+/// One offload step of the heterogeneous Mandelbrot sweep (Figs 7/8):
+/// `device_chunks` tenths of the image run on the device actor, the rest on
+/// a native CPU render; returns (total, cpu-part, device-part) seconds.
+///
+/// Matches the paper's setup: "each graph displays the runtime for the CPU
+/// and OpenCL device calculations separately ... since calculations are
+/// performed in parallel, the total runtime is not a sum of the separate
+/// runtimes, but measured independently."
+#[allow(clippy::too_many_arguments)]
+pub fn hetero_step(
+    me: &crate::actor::ScopedActor,
+    device_actor: &crate::actor::ActorRef,
+    width: usize,
+    height: usize,
+    chunk_rows: usize,
+    iters: u32,
+    device_chunks: usize,
+    cpu_threads: usize,
+) -> (f64, f64, f64) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let timeout = std::time::Duration::from_secs(1800);
+    let cpu_rows = height - device_chunks * chunk_rows;
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..device_chunks)
+        .map(|k| {
+            let y0 = (cpu_rows + k * chunk_rows) as u32;
+            me.request(device_actor, vec![y0])
+        })
+        .collect();
+    let cpu_ns = AtomicU64::new(0);
+    let dev_ns = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        if cpu_rows > 0 {
+            s.spawn(|| {
+                let t = Instant::now();
+                std::hint::black_box(crate::workload::mandelbrot_rows_parallel(
+                    width,
+                    height,
+                    0,
+                    cpu_rows,
+                    iters,
+                    cpu_threads,
+                ));
+                cpu_ns.store(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            });
+        }
+        s.spawn(|| {
+            let t = Instant::now();
+            for p in pending {
+                let _: Vec<u32> = p.receive(timeout).expect("device chunk");
+            }
+            dev_ns.store(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        });
+    });
+    let total = t0.elapsed().as_secs_f64();
+    (
+        total,
+        cpu_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9,
+        dev_ns.load(std::sync::atomic::Ordering::Relaxed) as f64 / 1e9,
+    )
+}
+
+/// Quick/full switch: benches default to a fast sweep; set
+/// `CAF_OCL_BENCH_FULL=1` for the paper-scale version.
+pub fn full_mode() -> bool {
+    std::env::var("CAF_OCL_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Samples per point, honouring the quick/full switch.
+pub fn samples_per_point(quick: usize, full: usize) -> usize {
+    if full_mode() {
+        full
+    } else {
+        quick
+    }
+}

@@ -1,0 +1,202 @@
+//! CPU bitmap-index builder: the Fig 3 baseline ("comparing GPU with CPU
+//! performance") and the correctness oracle for the device pipeline.
+//!
+//! Single pass, O(N): one streaming WAH encoder state per distinct value,
+//! flushed value-by-value into the same concatenated layout the GPU
+//! pipeline emits (ascending value order + offset LUT), so the two indexes
+//! compare word-for-word.
+
+use super::wah::{FILL_FLAG, INVALID};
+use super::CHUNK_BITS;
+
+/// The index layout shared by CPU and GPU builders: concatenated per-value
+/// WAH bitmaps + a value→offset lookup table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WahIndex {
+    /// Concatenated WAH words, ascending value order.
+    pub words: Vec<u32>,
+    /// `lut[v]` = offset of value v's bitmap in `words`, or INVALID.
+    pub lut: Vec<u32>,
+    /// Distinct values present.
+    pub n_distinct: u32,
+}
+
+impl WahIndex {
+    /// Decode the positions of one value.
+    pub fn positions_of(&self, v: u32) -> Vec<u32> {
+        let off = self.lut[v as usize];
+        if off == INVALID {
+            return Vec::new();
+        }
+        let end = self.end_of(v);
+        super::wah::wah_decode(&self.words[off as usize..end])
+    }
+
+    fn end_of(&self, v: u32) -> usize {
+        let off = self.lut[v as usize];
+        // the next valid offset after `off`, else the end of `words`
+        self.lut
+            .iter()
+            .filter(|&&o| o != INVALID && o > off)
+            .min()
+            .map(|&o| o as usize)
+            .unwrap_or(self.words.len())
+    }
+
+    /// Verify against the raw value stream: each value's decoded positions
+    /// must be exactly its occurrences (the end-to-end invariant).
+    pub fn verify(&self, values: &[u32]) -> Result<(), String> {
+        for v in 0..self.lut.len() as u32 {
+            let expect: Vec<u32> = values
+                .iter()
+                .enumerate()
+                .filter(|(_, &x)| x == v)
+                .map(|(i, _)| i as u32)
+                .collect();
+            let got = self.positions_of(v);
+            if got != expect {
+                return Err(format!(
+                    "value {v}: decoded {} positions, expected {}",
+                    got.len(),
+                    expect.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Compression ratio vs verbatim bitmaps (diagnostics).
+    pub fn compression_ratio(&self, n_values: usize) -> f64 {
+        let verbatim = self.n_distinct as usize * n_values.div_ceil(CHUNK_BITS);
+        if self.words.is_empty() {
+            return f64::INFINITY;
+        }
+        verbatim as f64 / self.words.len() as f64
+    }
+}
+
+/// Streaming per-value WAH encoder state.
+#[derive(Clone, Copy)]
+struct ValueState {
+    prev_chunk: i64,
+    literal: u32,
+}
+
+/// The CPU indexer.
+pub struct CpuIndexer {
+    cardinality: usize,
+}
+
+impl CpuIndexer {
+    pub fn new(cardinality: usize) -> CpuIndexer {
+        CpuIndexer { cardinality }
+    }
+
+    /// Build the index over `values` (all `< cardinality`).
+    pub fn index(&self, values: &[u32]) -> WahIndex {
+        let c = self.cardinality;
+        let mut states = vec![
+            ValueState {
+                prev_chunk: -1,
+                literal: 0,
+            };
+            c
+        ];
+        // per-value word vectors; flushed into the shared layout at the end
+        let mut parts: Vec<Vec<u32>> = vec![Vec::new(); c];
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!((v as usize) < c, "value {v} exceeds cardinality {c}");
+            let st = &mut states[v as usize];
+            let chunk = (i / CHUNK_BITS) as i64;
+            let bit = i % CHUNK_BITS;
+            if chunk != st.prev_chunk {
+                if st.prev_chunk >= 0 {
+                    parts[v as usize].push(st.literal);
+                }
+                let gap = chunk - st.prev_chunk - 1;
+                if gap > 0 {
+                    parts[v as usize].push(FILL_FLAG | gap as u32);
+                }
+                st.prev_chunk = chunk;
+                st.literal = 0;
+            }
+            st.literal |= 1 << bit;
+        }
+        let mut words = Vec::new();
+        let mut lut = vec![INVALID; c];
+        let mut n_distinct = 0;
+        for v in 0..c {
+            if states[v].prev_chunk >= 0 {
+                parts[v].push(states[v].literal);
+            }
+            if !parts[v].is_empty() {
+                lut[v] = words.len() as u32;
+                words.extend_from_slice(&parts[v]);
+                n_distinct += 1;
+            }
+        }
+        WahIndex {
+            words,
+            lut,
+            n_distinct,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_vec, PropConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn tiny_example_by_hand() {
+        // values: [1, 0, 1, 1] -> value 0 at pos 1; value 1 at 0,2,3
+        let idx = CpuIndexer::new(4).index(&[1, 0, 1, 1]);
+        assert_eq!(idx.n_distinct, 2);
+        assert_eq!(idx.positions_of(0), vec![1]);
+        assert_eq!(idx.positions_of(1), vec![0, 2, 3]);
+        assert!(idx.positions_of(2).is_empty());
+        idx.verify(&[1, 0, 1, 1]).unwrap();
+    }
+
+    #[test]
+    fn sparse_values_compress() {
+        let mut values = vec![0u32; 10_000];
+        values[9_999] = 7; // one lone occurrence far out
+        let idx = CpuIndexer::new(8).index(&values);
+        // value 7's bitmap: fill + one literal = 2 words
+        let off = idx.lut[7] as usize;
+        assert_eq!(idx.words.len() - off, 2);
+        assert_eq!(idx.positions_of(7), vec![9_999]);
+    }
+
+    #[test]
+    fn prop_index_roundtrips_any_stream() {
+        check_vec(
+            PropConfig::default(),
+            |r: &mut Rng| {
+                let n = r.range(1, 512) as usize;
+                (0..n).map(|_| r.below(32) as u32).collect::<Vec<u32>>()
+            },
+            |values| {
+                let idx = CpuIndexer::new(32).index(values);
+                idx.verify(values).map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_zipf_streams() {
+        check_vec(
+            PropConfig { cases: 16, ..Default::default() },
+            |r: &mut Rng| {
+                (0..1024).map(|_| r.zipf(64, 1.1) as u32).collect::<Vec<u32>>()
+            },
+            |values| {
+                let idx = CpuIndexer::new(64).index(values);
+                idx.verify(values).map_err(|e| e.to_string())
+            },
+        );
+    }
+}

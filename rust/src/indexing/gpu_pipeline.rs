@@ -1,0 +1,272 @@
+//! The device-side WAH index builder (paper §4.1): eight kernel stages —
+//! sort, chunk-literals, fills, interleave (`prepare_index`), compaction
+//! count/scan/move (`count_elements` / `move_valid_elements`, work-groups
+//! of 128), and the lookup table — each wrapped in an OpenCL actor and
+//! composed into a single pipeline actor.
+//!
+//! Messages between stages carry a *context vector* of `MemRef`s; each
+//! stage's preprocess selects its kernel operands from the context and its
+//! postprocess re-packs what downstream stages still need (paper §3.5: the
+//! mappers "add, remove or configure the arguments for the execution").
+//! Data stays device-resident end to end; the requester reads the final
+//! (index, LUT) references back explicitly.
+
+use super::cpu_index::WahIndex;
+use super::{CFG, INVALID};
+use crate::actor::{compose, ActorRef, Message, ScopedActor};
+use crate::opencl::{ArgValue, KernelSpawn, Manager, Mode};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Supported pipeline capacities (fixed AOT shapes; see aot.py WAH_SIZES).
+pub const CAPACITIES: [usize; 5] = [4096, 16384, 65536, 262144, 1048576];
+/// Value cardinality of the shipped artifacts (aot.py WAH_CARD).
+pub const CARDINALITY: usize = 1024;
+/// The reserved padding value.
+pub const PAD_VALUE: u32 = (CARDINALITY - 1) as u32;
+
+/// Select context entries as kernel operands.
+fn pre_select(idxs: &'static [usize]) -> impl Fn(&Message) -> Option<Vec<ArgValue>> + Send + Sync {
+    move |msg| {
+        let ctx = msg.downcast_ref::<Vec<ArgValue>>()?;
+        idxs.iter()
+            .map(|&i| ctx.get(i).cloned())
+            .collect::<Option<Vec<_>>>()
+    }
+}
+
+/// Build the next context: the stage output (first unless `out_last`),
+/// then the kept incoming-context entries.
+fn post_ctx(
+    keep: &'static [usize],
+    out_last: bool,
+) -> impl Fn(ArgValue, &Message) -> Message + Send + Sync {
+    move |out, inc| {
+        let kept: Vec<ArgValue> = inc
+            .downcast_ref::<Vec<ArgValue>>()
+            .map(|ctx| {
+                keep.iter()
+                    .filter_map(|&i| ctx.get(i).cloned())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut next = Vec::with_capacity(kept.len() + 1);
+        if out_last {
+            next.extend(kept);
+            next.push(out);
+        } else {
+            next.push(out);
+            next.extend(kept);
+        }
+        Message::new(next)
+    }
+}
+
+/// The composed 8-stage device pipeline for one capacity.
+pub struct GpuIndexer {
+    pub capacity: usize,
+    pipe: ActorRef,
+    /// Stage actors in flow order (exposed for monitoring / reuse).
+    pub stages: Vec<ActorRef>,
+}
+
+impl GpuIndexer {
+    /// Stage kernel names at a capacity.
+    pub fn kernel_names(n: usize) -> Vec<String> {
+        ["sort", "chunklit", "fillslit", "interleave", "count", "scan", "move", "lut"]
+            .iter()
+            .map(|s| format!("wah_{s}_{n}"))
+            .collect()
+    }
+
+    /// Build the pipeline on `manager`'s device `device_id`.
+    pub fn build(manager: &Arc<Manager>, device_id: usize, capacity: usize) -> Result<GpuIndexer> {
+        if !CAPACITIES.contains(&capacity) {
+            bail!("unsupported capacity {capacity}; artifacts exist for {CAPACITIES:?}");
+        }
+        let device = manager.device(device_id)?;
+        let names = Self::kernel_names(capacity);
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let program = manager.create_program(&device, &name_refs)?;
+        let sys = manager.system_handle();
+
+        let mk = |kernel: &str| KernelSpawn::new(program.clone(), kernel).output(Mode::Ref);
+        // context evolution:            incoming ctx          -> outgoing ctx
+        let stages: Vec<KernelSpawn> = vec![
+            // 1 sort: Vec<u32> values   []                    -> [sorted]
+            mk(&names[0])
+                .inputs(Mode::Val, 1)
+                .postprocess(post_ctx(&[], false)),
+            // 2 chunklit                [sorted]              -> [cl, sorted]
+            mk(&names[1])
+                .inputs(Mode::Ref, 1)
+                .preprocess(pre_select(&[0]))
+                .postprocess(post_ctx(&[0], false)),
+            // 3 fillslit                [cl, sorted]          -> [fl, sorted]
+            mk(&names[2])
+                .inputs(Mode::Ref, 1)
+                .preprocess(pre_select(&[0]))
+                .postprocess(post_ctx(&[1], false)),
+            // 4 interleave              [fl, sorted]          -> [idx, fl, sorted]
+            mk(&names[3])
+                .inputs(Mode::Ref, 1)
+                .preprocess(pre_select(&[0]))
+                .postprocess(post_ctx(&[0, 1], false)),
+            // 5 count                   [idx, fl, sorted]     -> [counts, idx, fl, sorted]
+            mk(&names[4])
+                .inputs(Mode::Ref, 1)
+                .preprocess(pre_select(&[0]))
+                .postprocess(post_ctx(&[0, 1, 2], false)),
+            // 6 scan                    [counts, idx, fl, sorted] -> [scan, idx, fl, sorted]
+            mk(&names[5])
+                .inputs(Mode::Ref, 1)
+                .preprocess(pre_select(&[0]))
+                .postprocess(post_ctx(&[1, 2, 3], false)),
+            // 7 move(idx, scan)         [scan, idx, fl, sorted] -> [moved, fl, sorted]
+            mk(&names[6])
+                .inputs(Mode::Ref, 2)
+                .preprocess(pre_select(&[1, 0]))
+                .postprocess(post_ctx(&[2, 3], false)),
+            // 8 lut(fl, sorted)         [moved, fl, sorted]   -> [moved, lut]
+            mk(&names[7])
+                .inputs(Mode::Ref, 2)
+                .preprocess(pre_select(&[1, 2]))
+                .postprocess(post_ctx(&[0], true)),
+        ];
+
+        let mut actors = Vec::new();
+        for cfg in stages {
+            actors.push(manager.spawn_cl(cfg)?);
+        }
+        let mut it = actors.iter().cloned();
+        let first = it.next().unwrap();
+        let pipe = it.fold(first, |acc, next| compose(&sys, next, acc));
+        Ok(GpuIndexer {
+            capacity,
+            pipe,
+            stages: actors,
+        })
+    }
+
+    /// The composed pipeline actor (send it `Vec<u32>` values directly).
+    pub fn actor(&self) -> &ActorRef {
+        &self.pipe
+    }
+
+    /// Build an index: pads `values` to capacity with [`PAD_VALUE`],
+    /// drives the pipeline, reads the (index, LUT) references back.
+    pub fn index(&self, me: &ScopedActor, values: &[u32], timeout: Duration) -> Result<WahIndex> {
+        if values.len() > self.capacity {
+            bail!(
+                "{} values exceed pipeline capacity {}",
+                values.len(),
+                self.capacity
+            );
+        }
+        if let Some(v) = values.iter().find(|&&v| v >= PAD_VALUE) {
+            bail!("value {v} out of range (cardinality {CARDINALITY}, top value reserved)");
+        }
+        let mut padded = values.to_vec();
+        padded.resize(self.capacity, PAD_VALUE);
+        let ctx: Vec<ArgValue> = me
+            .request(&self.pipe, padded)
+            .receive(timeout)
+            .map_err(|e| anyhow!("pipeline failed: {}", e.reason))?;
+        let [moved, lut] = ctx.as_slice() else {
+            bail!("pipeline returned {} refs, expected 2", ctx.len());
+        };
+        let (ArgValue::Ref(moved), ArgValue::Ref(lut)) = (moved, lut) else {
+            bail!("pipeline must return device references");
+        };
+        let moved = moved.read_u32(timeout)?;
+        let lut_raw = lut.read_u32(timeout)?;
+        Ok(assemble_index(&moved, &lut_raw))
+    }
+}
+
+/// Parse (move-stage output, lut-stage output) into the shared layout.
+fn assemble_index(moved: &[u32], lut_raw: &[u32]) -> WahIndex {
+    let n_distinct = lut_raw[0];
+    let words_real = lut_raw[1] as usize;
+    let mut lut = lut_raw[CFG..].to_vec();
+    lut[CARDINALITY - 1] = INVALID; // the pad value is reserved
+    WahIndex {
+        words: moved[CFG..CFG + words_real].to_vec(),
+        lut,
+        n_distinct,
+    }
+}
+
+/// The monolithic single-actor variant (ablation A, design §3.6): the whole
+/// algorithm as ONE kernel artifact wrapped in ONE OpenCL actor — no
+/// inter-stage messaging, but also no stage reuse.
+pub struct FusedIndexer {
+    pub capacity: usize,
+    actor: ActorRef,
+}
+
+impl FusedIndexer {
+    pub fn build(manager: &Arc<Manager>, device_id: usize, capacity: usize) -> Result<FusedIndexer> {
+        let device = manager.device(device_id)?;
+        let kernel = format!("wah_fused_{capacity}");
+        let program = manager.create_program(&device, &[kernel.as_str()])?;
+        let actor = manager.spawn_cl(
+            KernelSpawn::new(program, &kernel)
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val),
+        )?;
+        Ok(FusedIndexer { capacity, actor })
+    }
+
+    pub fn actor(&self) -> &ActorRef {
+        &self.actor
+    }
+
+    pub fn index(&self, me: &ScopedActor, values: &[u32], timeout: Duration) -> Result<WahIndex> {
+        if values.len() > self.capacity {
+            bail!("{} values exceed capacity {}", values.len(), self.capacity);
+        }
+        let mut padded = values.to_vec();
+        padded.resize(self.capacity, PAD_VALUE);
+        let out: Vec<u32> = self
+            .actor
+            .pipe_request(me, padded, timeout)?;
+        // layout: cfg ++ compacted[2N] ++ lut[C]
+        let words_real = out[1] as usize;
+        let n_distinct = out[3];
+        let body = &out[CFG..CFG + 2 * self.capacity];
+        let mut lut = out[CFG + 2 * self.capacity..].to_vec();
+        lut[CARDINALITY - 1] = INVALID;
+        Ok(WahIndex {
+            words: body[..words_real].to_vec(),
+            lut,
+            n_distinct,
+        })
+    }
+}
+
+/// Small extension so indexers read like the paper's request/receive flow.
+trait PipeRequest {
+    fn pipe_request<Req, Resp>(
+        &self,
+        me: &ScopedActor,
+        req: Req,
+        timeout: Duration,
+    ) -> Result<Resp>
+    where
+        Req: std::any::Any + Send + Sync,
+        Resp: std::any::Any + Clone;
+}
+
+impl PipeRequest for ActorRef {
+    fn pipe_request<Req, Resp>(&self, me: &ScopedActor, req: Req, timeout: Duration) -> Result<Resp>
+    where
+        Req: std::any::Any + Send + Sync,
+        Resp: std::any::Any + Clone,
+    {
+        me.request(self, req)
+            .receive::<Resp>(timeout)
+            .map_err(|e| anyhow!("{}", e.reason))
+    }
+}

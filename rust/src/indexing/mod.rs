@@ -1,0 +1,20 @@
+//! The paper's use case (§4): building WAH-compressed bitmap indexes for
+//! high-volume value streams (VAST-style network forensics), both on the
+//! CPU (the Fig 3 baseline + correctness oracle) and as a multi-stage
+//! OpenCL-actor pipeline on the device (Fusco et al.'s algorithm).
+
+pub mod cpu_index;
+pub mod gpu_pipeline;
+pub mod plwah;
+pub mod wah;
+
+pub use cpu_index::{CpuIndexer, WahIndex};
+pub use gpu_pipeline::{FusedIndexer, GpuIndexer};
+pub use wah::{wah_decode, wah_encode_positions, FILL_FLAG, INVALID};
+
+/// Config-prefix length shared with the Python kernels (DESIGN.md §5).
+pub const CFG: usize = 8;
+/// Work-group size of the stream compaction (paper §4.1: groups of 128).
+pub const GROUP: usize = 128;
+/// Bit positions per WAH chunk (31-bit literal payload).
+pub const CHUNK_BITS: usize = 31;

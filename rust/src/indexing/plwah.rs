@@ -1,0 +1,151 @@
+//! PLWAH (Position List Word Aligned Hybrid, Deliège & Pedersen, EDBT'10):
+//! the paper's future-work item (2) — "extend the use case of indexing on
+//! GPUs to common indexing algorithms such as PLWAH".
+//!
+//! PLWAH improves WAH by piggybacking a *nearly-empty* literal onto the
+//! preceding fill: if the literal after a fill has exactly one set bit, its
+//! 5-bit position is stored in the fill word itself. Word layout (32-bit):
+//!
+//! * literal: MSB clear, 31 payload bits (same as WAH);
+//! * fill:    MSB set | position(5 bits) << 25 | run length (25 bits);
+//!   position 0 = no piggybacked bit, 1..=31 = bit (position-1) of the
+//!   chunk following the run.
+//!
+//! The encoder consumes WAH-identical per-value position streams, so CPU
+//! WAH and PLWAH indexes are directly comparable in the ablation bench.
+
+use super::CHUNK_BITS;
+
+pub const FILL_FLAG: u32 = 1 << 31;
+const POS_SHIFT: u32 = 25;
+const LEN_MASK: u32 = (1 << POS_SHIFT) - 1;
+
+/// Encode ascending set-bit positions into PLWAH words.
+pub fn plwah_encode_positions(positions: &[u32], out: &mut Vec<u32>) {
+    // gather per-chunk literals first (same walk as WAH)
+    let mut chunks: Vec<(u32, u32)> = Vec::new(); // (chunk, literal)
+    for &pos in positions {
+        let chunk = pos / CHUNK_BITS as u32;
+        let bit = pos % CHUNK_BITS as u32;
+        match chunks.last_mut() {
+            Some((c, lit)) if *c == chunk => *lit |= 1 << bit,
+            _ => chunks.push((chunk, 1 << bit)),
+        }
+    }
+    let mut prev: i64 = -1;
+    let mut i = 0;
+    while i < chunks.len() {
+        let (chunk, lit) = chunks[i];
+        let gap = chunk as i64 - prev - 1;
+        if gap > 0 {
+            debug_assert!((gap as u32) <= LEN_MASK, "run too long for 25 bits");
+            if lit.count_ones() == 1 {
+                // piggyback the lone bit onto the fill
+                let bit = lit.trailing_zeros(); // 0..=30
+                out.push(FILL_FLAG | ((bit + 1) << POS_SHIFT) | gap as u32);
+                prev = chunk as i64;
+                i += 1;
+                continue;
+            }
+            out.push(FILL_FLAG | gap as u32);
+        }
+        out.push(lit);
+        prev = chunk as i64;
+        i += 1;
+    }
+}
+
+/// Decode PLWAH words back into set-bit positions.
+pub fn plwah_decode(words: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut chunk = 0u32;
+    for &w in words {
+        if w & FILL_FLAG != 0 {
+            chunk += w & LEN_MASK;
+            let pos = (w >> POS_SHIFT) & 0x1F;
+            if pos != 0 {
+                out.push(chunk * CHUNK_BITS as u32 + (pos - 1));
+                chunk += 1;
+            }
+        } else {
+            for b in 0..CHUNK_BITS as u32 {
+                if w & (1 << b) != 0 {
+                    out.push(chunk * CHUNK_BITS as u32 + b);
+                }
+            }
+            chunk += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::indexing::wah;
+    use crate::util::prop::{check_vec, ensure, ensure_eq, PropConfig};
+    use crate::util::Rng;
+
+    fn roundtrip(pos: &[u32]) -> Vec<u32> {
+        let mut words = Vec::new();
+        plwah_encode_positions(pos, &mut words);
+        plwah_decode(&words)
+    }
+
+    #[test]
+    fn lone_bit_after_fill_is_piggybacked() {
+        // position 1000: WAH needs fill + literal, PLWAH needs one word
+        let mut w = Vec::new();
+        plwah_encode_positions(&[1000], &mut w);
+        assert_eq!(w.len(), 1);
+        assert_eq!(roundtrip(&[1000]), vec![1000]);
+    }
+
+    #[test]
+    fn dense_literal_not_piggybacked() {
+        let pos: Vec<u32> = vec![100, 101];
+        let mut w = Vec::new();
+        plwah_encode_positions(&pos, &mut w);
+        assert_eq!(w.len(), 2); // fill + 2-bit literal
+        assert_eq!(roundtrip(&pos), pos);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        check_vec(
+            PropConfig::default(),
+            |r: &mut Rng| {
+                let n = r.range(0, 150) as usize;
+                let mut pos: Vec<u32> = (0..n).map(|_| r.below(50_000) as u32).collect();
+                pos.sort_unstable();
+                pos.dedup();
+                pos
+            },
+            |pos| ensure_eq(roundtrip(pos), pos.to_vec()),
+        );
+    }
+
+    #[test]
+    fn prop_plwah_never_longer_than_wah() {
+        check_vec(
+            PropConfig::default(),
+            |r: &mut Rng| {
+                let n = r.range(1, 200) as usize;
+                let mut pos: Vec<u32> = (0..n).map(|_| r.below(100_000) as u32).collect();
+                pos.sort_unstable();
+                pos.dedup();
+                pos
+            },
+            |pos| {
+                let mut w = Vec::new();
+                wah::wah_encode_positions(pos, &mut w);
+                let mut p = Vec::new();
+                plwah_encode_positions(pos, &mut p);
+                ensure(
+                    p.len() <= w.len(),
+                    format!("PLWAH {} words > WAH {}", p.len(), w.len()),
+                )
+            },
+        );
+    }
+}

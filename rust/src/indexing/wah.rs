@@ -1,0 +1,145 @@
+//! Word-Aligned Hybrid (WAH) compression primitives (Wu et al., TODS'06):
+//! 32-bit words that are either a *literal* (MSB clear, 31 payload bits) or
+//! a *fill* (MSB set, run length of empty 31-bit chunks — this index only
+//! produces zero-fills).
+//!
+//! The encoding here is bit-identical to the Python oracle
+//! (`python/compile/kernels/ref.py`) and to what the device pipeline
+//! produces, so CPU and GPU indexes can be compared word-for-word.
+
+use super::CHUNK_BITS;
+
+pub const FILL_FLAG: u32 = 1 << 31;
+pub const INVALID: u32 = 0xFFFF_FFFF;
+
+/// Encode an ascending list of set-bit positions into WAH words.
+pub fn wah_encode_positions(positions: &[u32], out: &mut Vec<u32>) {
+    let mut prev_chunk: i64 = -1;
+    let mut literal: u32 = 0;
+    for &pos in positions {
+        let chunk = (pos as usize / CHUNK_BITS) as i64;
+        let bit = pos as usize % CHUNK_BITS;
+        if chunk != prev_chunk {
+            if prev_chunk >= 0 {
+                out.push(literal);
+            }
+            let gap = chunk - prev_chunk - 1;
+            if gap > 0 {
+                out.push(FILL_FLAG | gap as u32);
+            }
+            prev_chunk = chunk;
+            literal = 0;
+        }
+        literal |= 1 << bit;
+    }
+    if prev_chunk >= 0 {
+        out.push(literal);
+    }
+}
+
+/// Decode WAH words back into set-bit positions.
+pub fn wah_decode(words: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut chunk = 0usize;
+    for &w in words {
+        if w & FILL_FLAG != 0 {
+            chunk += (w & 0x3FFF_FFFF) as usize;
+        } else {
+            for b in 0..CHUNK_BITS {
+                if w & (1 << b) != 0 {
+                    out.push((chunk * CHUNK_BITS + b) as u32);
+                }
+            }
+            chunk += 1;
+        }
+    }
+    out
+}
+
+/// Number of words a literal+fill encoding of `positions` occupies without
+/// compression context (diagnostics for compression-ratio reports).
+pub fn uncompressed_words(max_pos: u32) -> usize {
+    (max_pos as usize + CHUNK_BITS) / CHUNK_BITS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_vec, ensure_eq, PropConfig};
+    use crate::util::Rng;
+
+    fn roundtrip(positions: &[u32]) -> Vec<u32> {
+        let mut words = Vec::new();
+        wah_encode_positions(positions, &mut words);
+        wah_decode(&words)
+    }
+
+    #[test]
+    fn empty() {
+        assert!(roundtrip(&[]).is_empty());
+    }
+
+    #[test]
+    fn single_bit_far_out() {
+        let pos = vec![1000];
+        let mut words = Vec::new();
+        wah_encode_positions(&pos, &mut words);
+        // 1000/31 = chunk 32 -> one fill of 32, one literal
+        assert_eq!(words.len(), 2);
+        assert_eq!(words[0], FILL_FLAG | 32);
+        assert_eq!(roundtrip(&pos), pos);
+    }
+
+    #[test]
+    fn dense_chunk() {
+        let pos: Vec<u32> = (0..31).collect();
+        let mut words = Vec::new();
+        wah_encode_positions(&pos, &mut words);
+        assert_eq!(words, vec![(1 << 31) - 1]);
+    }
+
+    #[test]
+    fn chunk_boundaries() {
+        let pos = vec![30, 31, 61, 62, 92];
+        assert_eq!(roundtrip(&pos), pos);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_position_sets() {
+        check_vec(
+            PropConfig::default(),
+            |r: &mut Rng| {
+                let n = r.range(0, 200) as usize;
+                let mut pos: Vec<u32> =
+                    (0..n).map(|_| r.below(10_000) as u32).collect();
+                pos.sort_unstable();
+                pos.dedup();
+                pos
+            },
+            |pos| ensure_eq(roundtrip(pos), pos.to_vec()),
+        );
+    }
+
+    #[test]
+    fn prop_compression_never_exceeds_two_words_per_bit() {
+        check_vec(
+            PropConfig::default(),
+            |r: &mut Rng| {
+                let n = r.range(1, 100) as usize;
+                let mut pos: Vec<u32> =
+                    (0..n).map(|_| r.below(100_000) as u32).collect();
+                pos.sort_unstable();
+                pos.dedup();
+                pos
+            },
+            |pos| {
+                let mut words = Vec::new();
+                wah_encode_positions(pos, &mut words);
+                crate::util::prop::ensure(
+                    words.len() <= 2 * pos.len(),
+                    format!("{} words for {} positions", words.len(), pos.len()),
+                )
+            },
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! caf_ocl — "OpenCL Actors" (CAF, Agere 2017) reproduced on a Rust + JAX +
+//! Pallas (AOT via PJRT) stack. See DESIGN.md for the architecture map.
+//!
+//! Layer map:
+//! * [`actor`]    — the CAF-like substrate (scheduler, mailboxes, messaging,
+//!   monitors, composition).
+//! * [`opencl`]   — the paper's contribution: OpenCL actors on top of the
+//!   PJRT runtime (manager/platform/device/program/mem_ref/actor_facade).
+//! * [`runtime`]  — PJRT command-queue threads executing AOT HLO artifacts.
+//! * [`indexing`] — the WAH bitmap-index use case (§4), CPU + device.
+//! * [`workload`] — native baselines and generators for the benchmarks.
+//! * [`sim`]      — simulated Tesla/Phi device profiles (DESIGN.md §2).
+//! * [`net`]      — network-transparent messaging between nodes.
+//! * [`bench`]    — the measurement harness used by `cargo bench`.
+//! * [`util`]     — PRNG, property testing, stats, CLI.
+pub mod actor;
+pub mod bench;
+pub mod indexing;
+pub mod net;
+pub mod opencl;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,195 @@
+//! `repro` — the launcher binary.
+//!
+//! ```text
+//! repro info                          platform / device / kernel inventory
+//! repro index  [--n 65536] [--dist zipf|uniform|runs] [--device 0]
+//! repro mandel [--device tesla|phi|host] [--offload 50]
+//! repro serve  [--addr 127.0.0.1:7000] [--kernel empty_1024]
+//! repro client --addr <addr> [--name device-worker]
+//! ```
+
+use caf_ocl::actor::{ActorSystem, SystemConfig};
+use caf_ocl::bench::hetero_step;
+use caf_ocl::indexing::gpu_pipeline::GpuIndexer;
+use caf_ocl::indexing::CpuIndexer;
+use caf_ocl::net::Node;
+use caf_ocl::opencl::{DeviceSpec, Manager, Mode, OpenClSystemExt};
+use caf_ocl::sim::{tesla_c2075, xeon_phi_5110p};
+use caf_ocl::util::cli::Args;
+use caf_ocl::workload::ValueStream;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(600);
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => info(&args),
+        Some("index") => index(&args),
+        Some("mandel") => mandel(&args),
+        Some("serve") => serve(&args),
+        Some("client") => client(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <info|index|mandel|serve|client> [--options]\n\
+                 see rust/src/main.rs for per-command flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn devices_from(args: &Args) -> Vec<DeviceSpec> {
+    let mut specs = vec![DeviceSpec::host()];
+    if args.flag("sim-devices") {
+        specs.push(tesla_c2075());
+        specs.push(xeon_phi_5110p());
+    }
+    specs
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load_with(&sys, devices_from(args));
+    let platform = mngr.platform();
+    println!("platform: {platform:?}");
+    for d in &platform.devices {
+        println!("  {d:?}");
+    }
+    let mut names = platform.manifest.names();
+    names.sort();
+    println!("kernels ({}):", names.len());
+    for n in names {
+        let meta = platform.manifest.get(n).unwrap();
+        println!(
+            "  {:32} in: {:40} out: {}",
+            n,
+            meta.inputs
+                .iter()
+                .map(|s| format!("{}[{}]", s.dtype.name(), s.elems()))
+                .collect::<Vec<_>>()
+                .join(", "),
+            format_args!("{}[{}]", meta.output.dtype.name(), meta.output.elems()),
+        );
+    }
+    mngr.stop_devices();
+    sys.shutdown();
+    Ok(())
+}
+
+fn index(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize("n", 65536);
+    let device = args.usize("device", 0);
+    let dist = match args.get_or("dist", "zipf") {
+        "uniform" => ValueStream::Uniform { cardinality: 512 },
+        "runs" => ValueStream::Runs {
+            cardinality: 512,
+            max_run: 64,
+        },
+        _ => ValueStream::Zipf {
+            cardinality: 512,
+            s: 1.1,
+        },
+    };
+    let sys = ActorSystem::new(SystemConfig::default());
+    let mngr = Manager::load_with(&sys, devices_from(args));
+    let me = sys.scoped();
+    let values = dist.generate(n, args.u64("seed", 42));
+    let capacity = caf_ocl::indexing::gpu_pipeline::CAPACITIES
+        .iter()
+        .copied()
+        .find(|&c| c >= n)
+        .ok_or_else(|| anyhow::anyhow!("n too large; max 1048576"))?;
+    let gpu = GpuIndexer::build(&mngr, device, capacity)?;
+    let t0 = std::time::Instant::now();
+    let idx = gpu.index(&me, &values, T)?;
+    let dt = t0.elapsed();
+    idx.verify(&values).map_err(|e| anyhow::anyhow!(e))?;
+    let cpu = CpuIndexer::new(1024);
+    let t1 = std::time::Instant::now();
+    let _ = cpu.index(&values);
+    let cpu_dt = t1.elapsed();
+    println!(
+        "indexed {n} values on device {} in {:.3} ms (cpu: {:.3} ms)",
+        device,
+        dt.as_secs_f64() * 1e3,
+        cpu_dt.as_secs_f64() * 1e3
+    );
+    println!(
+        "index: {} words, {} distinct values, compression x{:.2}, verified OK",
+        idx.words.len(),
+        idx.n_distinct,
+        idx.compression_ratio(n)
+    );
+    mngr.stop_devices();
+    sys.shutdown();
+    Ok(())
+}
+
+fn mandel(args: &Args) -> anyhow::Result<()> {
+    let spec = match args.get_or("device", "tesla") {
+        "phi" => xeon_phi_5110p(),
+        "host" => DeviceSpec::host(),
+        _ => tesla_c2075(),
+    };
+    let offload = args.usize("offload", 50).min(100) / 10;
+    let (w, h, chunk, iters) = (960usize, 540usize, 54usize, 100u32);
+    let sys = ActorSystem::new(SystemConfig::default());
+    println!("rendering {w}x{h} it{iters}, {}% on {}", offload * 10, spec.name);
+    let mngr = Manager::load_with(&sys, vec![spec]);
+    let kernel = format!("mandel_w{w}_h{h}_c{chunk}_it{iters}");
+    let device_actor = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val)?;
+    let me = sys.scoped();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let (total, cpu, dev) = hetero_step(&me, &device_actor, w, h, chunk, iters, offload, threads);
+    println!(
+        "total {:.2} ms (cpu part {:.2} ms, device part {:.2} ms)",
+        total * 1e3,
+        cpu * 1e3,
+        dev * 1e3
+    );
+    mngr.stop_devices();
+    sys.shutdown();
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7000").to_string();
+    let kernel = args.get_or("kernel", "empty_1024").to_string();
+    let sys = ActorSystem::new(SystemConfig::default());
+    Manager::load(&sys);
+    let mngr = sys.opencl_manager();
+    let worker = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val)?;
+    sys.registry().put("device-worker", worker);
+    let node = Node::new(&sys);
+    let bound = node.listen(&addr)?;
+    println!("serving kernel {kernel:?} as 'device-worker' at {bound} — ctrl-c to stop");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn client(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr required"))?;
+    let name = args.get_or("name", "device-worker");
+    let sys = ActorSystem::new(SystemConfig::default());
+    let node = Node::new(&sys);
+    let remote = node.remote_actor(addr, name)?;
+    let me = sys.scoped();
+    let data: Vec<u32> = (0..1024).collect();
+    let t0 = std::time::Instant::now();
+    let out: Vec<u32> = me
+        .request(&remote, data.clone())
+        .receive(T)
+        .map_err(|e| anyhow::anyhow!(e.reason))?;
+    println!(
+        "remote round-trip: {} words in {:.2} ms (payload intact: {})",
+        out.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        out == data
+    );
+    sys.shutdown();
+    Ok(())
+}

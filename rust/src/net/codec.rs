@@ -1,0 +1,262 @@
+//! Hand-rolled binary serialization for actor messages (serde is
+//! unavailable offline; DESIGN.md §3). Tag byte + little-endian payload for
+//! the message types that may legally cross node boundaries.
+//!
+//! Device references ([`MemRef`], [`ArgValue`] vectors containing them) are
+//! rejected with [`CodecError::DeviceLocal`] — the paper's design
+//! option (a).
+//!
+//! [`MemRef`]: crate::opencl::MemRef
+//! [`ArgValue`]: crate::opencl::ArgValue
+
+use crate::actor::message::UnitReply;
+use crate::actor::{ErrorMsg, Message};
+use crate::opencl::{ArgValue, MemRef};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The payload holds device-local state (mem_ref) — not serializable.
+    DeviceLocal,
+    /// The payload type has no wire representation.
+    Unsupported(&'static str),
+    /// Malformed wire data.
+    Malformed(String),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::DeviceLocal => write!(
+                f,
+                "mem_ref is bound to its local device and cannot be serialized \
+                 (transfer the data explicitly with a Val-output stage)"
+            ),
+            CodecError::Unsupported(t) => write!(f, "no wire representation for {t}"),
+            CodecError::Malformed(w) => write!(f, "malformed frame: {w}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+const TAG_U32: u8 = 1;
+const TAG_U64: u8 = 2;
+const TAG_I64: u8 = 3;
+const TAG_F64: u8 = 4;
+const TAG_STRING: u8 = 5;
+const TAG_VEC_U32: u8 = 6;
+const TAG_VEC_F32: u8 = 7;
+const TAG_VEC_U8: u8 = 8;
+const TAG_UNIT: u8 = 9;
+const TAG_ERROR: u8 = 10;
+const TAG_PAIR_VEC_U32: u8 = 11;
+const TAG_PAIR_VEC_F32: u8 = 12;
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn put_vec_u32(out: &mut Vec<u8>, v: &[u32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize a message payload.
+pub fn encode_message(msg: &Message) -> Result<Vec<u8>, CodecError> {
+    // device-local payloads first: explicit, actionable error
+    if msg.is::<MemRef>()
+        || msg.is::<(MemRef,)>()
+        || msg.is::<(MemRef, MemRef)>()
+    {
+        return Err(CodecError::DeviceLocal);
+    }
+    if let Some(args) = msg.downcast_ref::<Vec<ArgValue>>() {
+        if args.iter().any(|a| a.is_ref()) {
+            return Err(CodecError::DeviceLocal);
+        }
+        return Err(CodecError::Unsupported("Vec<ArgValue> (flatten first)"));
+    }
+    let mut out = Vec::new();
+    if let Some(&x) = msg.downcast_ref::<u32>() {
+        out.push(TAG_U32);
+        out.extend_from_slice(&x.to_le_bytes());
+    } else if let Some(&x) = msg.downcast_ref::<u64>() {
+        out.push(TAG_U64);
+        out.extend_from_slice(&x.to_le_bytes());
+    } else if let Some(&x) = msg.downcast_ref::<i64>() {
+        out.push(TAG_I64);
+        out.extend_from_slice(&x.to_le_bytes());
+    } else if let Some(&x) = msg.downcast_ref::<f64>() {
+        out.push(TAG_F64);
+        out.extend_from_slice(&x.to_le_bytes());
+    } else if let Some(s) = msg.downcast_ref::<String>() {
+        out.push(TAG_STRING);
+        put_bytes(&mut out, s.as_bytes());
+    } else if let Some(v) = msg.downcast_ref::<Vec<u32>>() {
+        out.push(TAG_VEC_U32);
+        put_vec_u32(&mut out, v);
+    } else if let Some(v) = msg.downcast_ref::<Vec<f32>>() {
+        out.push(TAG_VEC_F32);
+        put_vec_f32(&mut out, v);
+    } else if let Some(v) = msg.downcast_ref::<Vec<u8>>() {
+        out.push(TAG_VEC_U8);
+        put_bytes(&mut out, v);
+    } else if msg.is::<UnitReply>() {
+        out.push(TAG_UNIT);
+    } else if let Some(e) = msg.downcast_ref::<ErrorMsg>() {
+        out.push(TAG_ERROR);
+        put_bytes(&mut out, e.reason.as_bytes());
+    } else if let Some((a, b)) = msg.downcast_ref::<(Vec<u32>, Vec<u32>)>() {
+        out.push(TAG_PAIR_VEC_U32);
+        put_vec_u32(&mut out, a);
+        put_vec_u32(&mut out, b);
+    } else if let Some((a, b)) = msg.downcast_ref::<(Vec<f32>, Vec<f32>)>() {
+        out.push(TAG_PAIR_VEC_F32);
+        put_vec_f32(&mut out, a);
+        put_vec_f32(&mut out, b);
+    } else {
+        return Err(CodecError::Unsupported(msg.type_name()));
+    }
+    Ok(out)
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.at + n > self.buf.len() {
+            return Err(CodecError::Malformed("truncated".into()));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>, CodecError> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>, CodecError> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+/// Deserialize a message payload.
+pub fn decode_message(buf: &[u8]) -> Result<Message, CodecError> {
+    let mut r = Reader { buf, at: 1 };
+    let tag = *buf.first().ok_or(CodecError::Malformed("empty".into()))?;
+    Ok(match tag {
+        TAG_U32 => Message::new(r.u32()?),
+        TAG_U64 => Message::new(u64::from_le_bytes(r.take(8)?.try_into().unwrap())),
+        TAG_I64 => Message::new(i64::from_le_bytes(r.take(8)?.try_into().unwrap())),
+        TAG_F64 => Message::new(f64::from_le_bytes(r.take(8)?.try_into().unwrap())),
+        TAG_STRING => Message::new(
+            String::from_utf8(r.bytes()?)
+                .map_err(|_| CodecError::Malformed("bad utf8".into()))?,
+        ),
+        TAG_VEC_U32 => Message::new(r.vec_u32()?),
+        TAG_VEC_F32 => Message::new(r.vec_f32()?),
+        TAG_VEC_U8 => Message::new(r.bytes()?),
+        TAG_UNIT => Message::new(UnitReply),
+        TAG_ERROR => Message::new(ErrorMsg::new(
+            String::from_utf8_lossy(&r.bytes()?).to_string(),
+        )),
+        TAG_PAIR_VEC_U32 => {
+            let a = r.vec_u32()?;
+            let b = r.vec_u32()?;
+            Message::new((a, b))
+        }
+        TAG_PAIR_VEC_F32 => {
+            let a = r.vec_f32()?;
+            let b = r.vec_f32()?;
+            Message::new((a, b))
+        }
+        other => return Err(CodecError::Malformed(format!("unknown tag {other}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) -> Message {
+        decode_message(&encode_message(&m).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn scalars_and_vectors() {
+        assert_eq!(roundtrip(Message::new(42u32)).take::<u32>(), Some(42));
+        assert_eq!(roundtrip(Message::new(-7i64)).take::<i64>(), Some(-7));
+        assert_eq!(
+            roundtrip(Message::new("hi".to_string())).take::<String>(),
+            Some("hi".to_string())
+        );
+        let v = vec![1u32, 2, 3];
+        assert_eq!(roundtrip(Message::new(v.clone())).take::<Vec<u32>>(), Some(v));
+        let f = vec![1.5f32, -2.5];
+        assert_eq!(roundtrip(Message::new(f.clone())).take::<Vec<f32>>(), Some(f));
+    }
+
+    #[test]
+    fn pairs() {
+        let m = Message::new((vec![1u32], vec![2u32, 3]));
+        assert_eq!(
+            roundtrip(m).take::<(Vec<u32>, Vec<u32>)>(),
+            Some((vec![1], vec![2, 3]))
+        );
+    }
+
+    #[test]
+    fn error_and_unit() {
+        let e = roundtrip(Message::new(ErrorMsg::new("boom")));
+        assert_eq!(e.downcast_ref::<ErrorMsg>().unwrap().reason, "boom");
+        assert!(roundtrip(Message::new(UnitReply)).is::<UnitReply>());
+    }
+
+    #[test]
+    fn unsupported_type_is_reported() {
+        #[derive(Clone)]
+        struct Custom;
+        let err = encode_message(&Message::new(Custom)).unwrap_err();
+        assert!(matches!(err, CodecError::Unsupported(_)));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(decode_message(&[]).is_err());
+        assert!(decode_message(&[200]).is_err());
+        assert!(decode_message(&[TAG_VEC_U32, 255, 0, 0, 0]).is_err());
+    }
+}

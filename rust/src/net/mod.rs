@@ -1,0 +1,17 @@
+//! Network transparency: remote actor messaging over TCP (CAF's BASP
+//! equivalent, minimal). Publishing an actor under a name lets remote nodes
+//! obtain a proxy [`ActorRef`] that behaves like any local handle —
+//! requests round-trip transparently.
+//!
+//! `mem_ref` handles are deliberately **not** serializable (paper §3.5,
+//! design option (a)): "prohibit serialization of the reference type to
+//! raise an error when a reference would be sent over the network...
+//! making expensive copy operations explicit."
+//!
+//! [`ActorRef`]: crate::actor::ActorRef
+
+pub mod codec;
+pub mod node;
+
+pub use codec::{decode_message, encode_message, CodecError};
+pub use node::Node;

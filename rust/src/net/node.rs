@@ -1,0 +1,344 @@
+//! TCP node: publish registry-named actors, obtain remote proxies.
+//!
+//! Wire protocol (all little-endian, length-prefixed frames):
+//!
+//! ```text
+//! frame   := len:u32 kind:u8 body
+//! REQUEST := mid:u64 name_len:u16 name payload     (kind 1)
+//! REPLY   := mid:u64 payload                       (kind 2)
+//! SEND    := name_len:u16 name payload             (kind 3, fire-and-forget)
+//! ```
+//!
+//! A mem_ref in a payload fails at `encode_message` — the error surfaces on
+//! the *sender*, before any bytes move (design option (a), §3.5).
+
+use super::codec::{decode_message, encode_message};
+use crate::actor::envelope::{ActorId, Envelope, MessageId};
+use crate::actor::{AbstractActor, ActorRef, ActorSystem, ErrorMsg, Message};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const KIND_REQUEST: u8 = 1;
+const KIND_REPLY: u8 = 2;
+const KIND_SEND: u8 = 3;
+
+fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    let len = (body.len() + 1) as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(&[kind])?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    let kind = body.remove(0);
+    Ok((kind, body))
+}
+
+/// A node endpoint: can listen (publish) and connect (proxy).
+pub struct Node {
+    system: ActorSystem,
+    listener_stop: Arc<AtomicBool>,
+    listen_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    local_addr: Mutex<Option<std::net::SocketAddr>>,
+}
+
+impl Node {
+    pub fn new(system: &ActorSystem) -> Arc<Node> {
+        Arc::new(Node {
+            system: system.clone(),
+            listener_stop: Arc::new(AtomicBool::new(false)),
+            listen_thread: Mutex::new(None),
+            local_addr: Mutex::new(None),
+        })
+    }
+
+    /// Publish all registry-named actors at `addr` (CAF's `publish`).
+    /// `addr` may use port 0 to pick an ephemeral port; the bound address
+    /// is returned.
+    pub fn listen(self: &Arc<Node>, addr: &str) -> Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr).context("bind")?;
+        let bound = listener.local_addr()?;
+        *self.local_addr.lock().unwrap() = Some(bound);
+        listener.set_nonblocking(true)?;
+        let stop = self.listener_stop.clone();
+        let sys = self.system.clone();
+        let th = std::thread::Builder::new()
+            .name("caf-node-accept".into())
+            .spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            stream.set_nonblocking(false).ok();
+                            let sys = sys.clone();
+                            std::thread::spawn(move || serve_connection(sys, stream));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        *self.listen_thread.lock().unwrap() = Some(th);
+        Ok(bound)
+    }
+
+    /// Connect to a remote node and build a proxy for its published actor
+    /// `name` (CAF's `remote_actor`).
+    pub fn remote_actor(self: &Arc<Node>, addr: &str, name: &str) -> Result<ActorRef> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        let conn = Connection::start(self.system.clone(), stream)?;
+        Ok(ActorRef::new(Arc::new(RemoteProxy {
+            id: next_proxy_id(),
+            name: name.to_string(),
+            conn,
+        })))
+    }
+
+    pub fn stop(&self) {
+        self.listener_stop.store(true, Ordering::Release);
+        if let Some(t) = self.listen_thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Node {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+static NEXT_PROXY_ID: AtomicU64 = AtomicU64::new(1 << 48);
+
+fn next_proxy_id() -> ActorId {
+    NEXT_PROXY_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// server side
+// ---------------------------------------------------------------------------
+
+/// Responder handle: routes an actor's reply back over the wire.
+struct WireResponder {
+    id: ActorId,
+    mid: u64,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+impl AbstractActor for WireResponder {
+    fn enqueue(&self, env: Envelope) {
+        let body = match encode_message(&env.msg) {
+            Ok(mut payload) => {
+                let mut b = self.mid.to_le_bytes().to_vec();
+                b.append(&mut payload);
+                b
+            }
+            Err(e) => {
+                let mut b = self.mid.to_le_bytes().to_vec();
+                b.append(&mut encode_message(&Message::new(ErrorMsg::new(e.to_string())))
+                    .expect("ErrorMsg always encodes"));
+                b
+            }
+        };
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = write_frame(&mut w, KIND_REPLY, &body);
+        }
+    }
+
+    fn id(&self) -> ActorId {
+        self.id
+    }
+
+    fn attach_monitor(&self, _watcher: ActorRef) {}
+    fn attach_link(&self, _peer: ActorRef) {}
+
+    fn kind(&self) -> &'static str {
+        "wire-responder"
+    }
+}
+
+fn serve_connection(sys: ActorSystem, stream: TcpStream) {
+    let writer = Arc::new(Mutex::new(stream.try_clone().expect("clone stream")));
+    let mut reader = stream;
+    loop {
+        let (kind, body) = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return, // peer closed
+        };
+        match kind {
+            KIND_REQUEST | KIND_SEND => {
+                let mut at = 0usize;
+                let mid = if kind == KIND_REQUEST {
+                    let m = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                    at += 8;
+                    Some(m)
+                } else {
+                    None
+                };
+                let name_len =
+                    u16::from_le_bytes(body[at..at + 2].try_into().unwrap()) as usize;
+                at += 2;
+                let name = String::from_utf8_lossy(&body[at..at + name_len]).to_string();
+                at += name_len;
+                let payload = decode_message(&body[at..]);
+                let target = sys.registry().get(&name);
+                match (target, payload, mid) {
+                    (Some(t), Ok(msg), Some(mid)) => {
+                        let responder = ActorRef::new(Arc::new(WireResponder {
+                            id: next_proxy_id(),
+                            mid,
+                            writer: writer.clone(),
+                        }));
+                        t.enqueue(Envelope {
+                            sender: Some(responder),
+                            mid: MessageId(mid),
+                            msg,
+                        });
+                    }
+                    (Some(t), Ok(msg), None) => {
+                        t.enqueue(Envelope::asynchronous(None, msg));
+                    }
+                    (None, _, Some(mid)) => {
+                        let responder = WireResponder {
+                            id: 0,
+                            mid,
+                            writer: writer.clone(),
+                        };
+                        responder.enqueue(Envelope::asynchronous(
+                            None,
+                            Message::new(ErrorMsg::new(format!("no actor published as {name:?}"))),
+                        ));
+                    }
+                    (_, Err(e), _) => {
+                        log::warn!("dropping malformed remote message: {e}");
+                    }
+                    _ => {}
+                }
+            }
+            _ => return,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client side
+// ---------------------------------------------------------------------------
+
+struct Connection {
+    writer: Arc<Mutex<TcpStream>>,
+    pending: Arc<Mutex<HashMap<u64, ActorRef>>>,
+}
+
+impl Connection {
+    fn start(_sys: ActorSystem, stream: TcpStream) -> Result<Arc<Connection>> {
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let pending: Arc<Mutex<HashMap<u64, ActorRef>>> = Arc::new(Mutex::new(HashMap::new()));
+        let p2 = pending.clone();
+        let mut reader = stream;
+        std::thread::Builder::new()
+            .name("caf-node-client".into())
+            .spawn(move || loop {
+                let (kind, body) = match read_frame(&mut reader) {
+                    Ok(f) => f,
+                    Err(_) => {
+                        // connection lost: fail all pending requests
+                        let mut p = p2.lock().unwrap();
+                        for (mid, who) in p.drain() {
+                            who.enqueue(Envelope {
+                                sender: None,
+                                mid: MessageId(mid).response_for(),
+                                msg: Message::new(ErrorMsg::new("remote node disconnected")),
+                            });
+                        }
+                        return;
+                    }
+                };
+                if kind != KIND_REPLY || body.len() < 8 {
+                    continue;
+                }
+                let mid = u64::from_le_bytes(body[0..8].try_into().unwrap());
+                let Some(who) = p2.lock().unwrap().remove(&mid) else {
+                    continue;
+                };
+                match decode_message(&body[8..]) {
+                    Ok(msg) => who.enqueue(Envelope {
+                        sender: None,
+                        mid: MessageId(mid).response_for(),
+                        msg,
+                    }),
+                    Err(e) => who.enqueue(Envelope {
+                        sender: None,
+                        mid: MessageId(mid).response_for(),
+                        msg: Message::new(ErrorMsg::new(e.to_string())),
+                    }),
+                }
+            })?;
+        Ok(Arc::new(Connection { writer, pending }))
+    }
+}
+
+/// Client-side proxy: a normal [`ActorRef`] whose mailbox is a TCP stream.
+struct RemoteProxy {
+    id: ActorId,
+    name: String,
+    conn: Arc<Connection>,
+}
+
+impl AbstractActor for RemoteProxy {
+    fn enqueue(&self, env: Envelope) {
+        let payload = match encode_message(&env.msg) {
+            Ok(p) => p,
+            Err(e) => {
+                // serialization failures surface to the requester
+                if env.mid.is_request() {
+                    if let Some(s) = env.sender {
+                        s.enqueue(Envelope {
+                            sender: None,
+                            mid: env.mid.response_for(),
+                            msg: Message::new(ErrorMsg::new(e.to_string())),
+                        });
+                    }
+                }
+                return;
+            }
+        };
+        let mut body = Vec::with_capacity(payload.len() + 32);
+        let kind = if env.mid.is_request() {
+            body.extend_from_slice(&env.mid.0.to_le_bytes());
+            if let Some(s) = env.sender {
+                self.conn.pending.lock().unwrap().insert(env.mid.0, s);
+            }
+            KIND_REQUEST
+        } else {
+            KIND_SEND
+        };
+        body.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
+        body.extend_from_slice(self.name.as_bytes());
+        body.extend_from_slice(&payload);
+        if let Ok(mut w) = self.conn.writer.lock() {
+            let _ = write_frame(&mut w, kind, &body);
+        }
+    }
+
+    fn id(&self) -> ActorId {
+        self.id
+    }
+
+    fn attach_monitor(&self, _watcher: ActorRef) {}
+    fn attach_link(&self, _peer: ActorRef) {}
+
+    fn kind(&self) -> &'static str {
+        "remote"
+    }
+}

@@ -1,0 +1,164 @@
+//! Kernel argument passing: host values vs device references.
+//!
+//! The paper's spawn declarations (`in<T>`, `out<T>`, `in_out<T>` with
+//! optional `val`/`ref` tags, Listing 5) tell CAF how each kernel argument
+//! crosses the actor boundary. Artifacts on this substrate have fixed
+//! operand lists (the manifest), so the facade only needs the *mode* per
+//! operand: `Val` moves data through the message (upload/download), `Ref`
+//! passes device-resident [`MemRef`]s for pipelining.
+
+use super::mem_ref::MemRef;
+use crate::actor::Message;
+use crate::runtime::artifact::Dtype;
+use crate::runtime::HostData;
+use std::sync::Arc;
+
+/// How an operand crosses the actor boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Host values travel in messages; the facade copies to/from the device
+    /// around each invocation (the basic OpenCL actor, §3.2).
+    Val,
+    /// Device references travel in messages; data stays resident (§3.5).
+    Ref,
+}
+
+/// One kernel argument as carried by messages.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    U32(Arc<Vec<u32>>),
+    F32(Arc<Vec<f32>>),
+    Ref(MemRef),
+}
+
+impl ArgValue {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            ArgValue::U32(_) => Dtype::U32,
+            ArgValue::F32(_) => Dtype::F32,
+            ArgValue::Ref(r) => r.dtype(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ArgValue::U32(v) => v.len(),
+            ArgValue::F32(v) => v.len(),
+            ArgValue::Ref(r) => r.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_ref(&self) -> bool {
+        matches!(self, ArgValue::Ref(_))
+    }
+
+    pub(crate) fn to_host(&self) -> Option<HostData> {
+        // the Arcs are shared with the message payload: unwrap when this is
+        // the only owner (common for pipeline-internal args), clone
+        // otherwise — halves the upload-path copies (EXPERIMENTS.md §Perf)
+        match self {
+            ArgValue::U32(v) => Some(HostData::U32(
+                std::sync::Arc::try_unwrap(v.clone()).unwrap_or_else(|a| (*a).clone()),
+            )),
+            ArgValue::F32(v) => Some(HostData::F32(
+                std::sync::Arc::try_unwrap(v.clone()).unwrap_or_else(|a| (*a).clone()),
+            )),
+            ArgValue::Ref(_) => None,
+        }
+    }
+}
+
+impl From<Vec<u32>> for ArgValue {
+    fn from(v: Vec<u32>) -> Self {
+        ArgValue::U32(Arc::new(v))
+    }
+}
+
+impl From<Vec<f32>> for ArgValue {
+    fn from(v: Vec<f32>) -> Self {
+        ArgValue::F32(Arc::new(v))
+    }
+}
+
+impl From<MemRef> for ArgValue {
+    fn from(r: MemRef) -> Self {
+        ArgValue::Ref(r)
+    }
+}
+
+/// Default pattern matching: extract kernel arguments from the common
+/// message shapes (the auto-generated "pattern for extracting data from
+/// messages", §3.4). Custom extraction = a user `preprocess` function.
+pub fn extract_args(msg: &Message) -> Option<Vec<ArgValue>> {
+    if let Some(v) = msg.downcast_ref::<Vec<ArgValue>>() {
+        return Some(v.clone());
+    }
+    if let Some(r) = msg.downcast_ref::<MemRef>() {
+        return Some(vec![ArgValue::Ref(r.clone())]);
+    }
+    if let Some((a,)) = msg.downcast_ref::<(MemRef,)>() {
+        return Some(vec![ArgValue::Ref(a.clone())]);
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(MemRef, MemRef)>() {
+        return Some(vec![ArgValue::Ref(a.clone()), ArgValue::Ref(b.clone())]);
+    }
+    if let Some(v) = msg.downcast_ref::<Vec<u32>>() {
+        return Some(vec![ArgValue::U32(Arc::new(v.clone()))]);
+    }
+    if let Some(v) = msg.downcast_ref::<Vec<f32>>() {
+        return Some(vec![ArgValue::F32(Arc::new(v.clone()))]);
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(Vec<u32>, Vec<u32>)>() {
+        return Some(vec![
+            ArgValue::U32(Arc::new(a.clone())),
+            ArgValue::U32(Arc::new(b.clone())),
+        ]);
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(Vec<f32>, Vec<f32>)>() {
+        return Some(vec![
+            ArgValue::F32(Arc::new(a.clone())),
+            ArgValue::F32(Arc::new(b.clone())),
+        ]);
+    }
+    if let Some((a, b, c)) = msg.downcast_ref::<(Vec<u32>, Vec<u32>, Vec<u32>)>() {
+        return Some(vec![
+            ArgValue::U32(Arc::new(a.clone())),
+            ArgValue::U32(Arc::new(b.clone())),
+            ArgValue::U32(Arc::new(c.clone())),
+        ]);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_common_shapes() {
+        let m = Message::new(vec![1u32, 2, 3]);
+        let args = extract_args(&m).unwrap();
+        assert_eq!(args.len(), 1);
+        assert_eq!(args[0].dtype(), Dtype::U32);
+        assert_eq!(args[0].len(), 3);
+
+        let m = Message::new((vec![1f32], vec![2f32]));
+        let args = extract_args(&m).unwrap();
+        assert_eq!(args.len(), 2);
+        assert_eq!(args[1].dtype(), Dtype::F32);
+
+        let m = Message::new("not args".to_string());
+        assert!(extract_args(&m).is_none());
+    }
+
+    #[test]
+    fn from_conversions() {
+        let a: ArgValue = vec![1u32, 2].into();
+        assert!(!a.is_ref());
+        assert_eq!(a.to_host(), Some(HostData::U32(vec![1, 2])));
+    }
+}

@@ -1,0 +1,225 @@
+//! One in-flight kernel execution (the paper's `command` class, Listing 4):
+//! stage inputs, enqueue the kernel with its event dependencies, register
+//! the completion callback, and *forward arguments before the execution
+//! finished* — the asynchronous chaining that keeps multi-stage pipelines
+//! free of host round-trips.
+
+use super::arg::{ArgValue, Mode};
+use super::device::Device;
+use super::mem_ref::{Access, MemRef};
+use crate::actor::request::ResponsePromise;
+use crate::actor::Message;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::Event;
+use std::sync::Arc;
+
+/// Facade-side metrics (Fig 5: device time per request).
+#[derive(Default)]
+pub struct CommandStats {
+    pub launched: std::sync::atomic::AtomicU64,
+    pub device_ns: std::sync::atomic::AtomicU64,
+}
+
+/// Everything needed to launch one kernel invocation.
+pub struct Command {
+    pub device: Arc<Device>,
+    pub meta: ArtifactMeta,
+    pub args: Vec<ArgValue>,
+    pub out_mode: Mode,
+    pub promise: ResponsePromise,
+    /// Maps the kernel output (plus the incoming message, so pipeline
+    /// stages can re-pack context they must carry forward — §3.5: the
+    /// post-processing function "could drop unnecessary output or reorder
+    /// arguments to fit the next stage") to the response message.
+    pub post: Option<Arc<dyn Fn(ArgValue, &Message) -> Message + Send + Sync>>,
+    /// The message that triggered this command (preserved context).
+    pub incoming: Message,
+    pub stats: Option<Arc<CommandStats>>,
+}
+
+impl Command {
+    /// Validate message arguments against the kernel signature.
+    fn check(&self) -> Result<(), String> {
+        if self.args.len() != self.meta.inputs.len() {
+            return Err(format!(
+                "kernel {} expects {} arguments, message carries {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                self.args.len()
+            ));
+        }
+        for (i, (a, spec)) in self.args.iter().zip(&self.meta.inputs).enumerate() {
+            if a.dtype() != spec.dtype {
+                return Err(format!(
+                    "kernel {} argument {i}: expected {}, got {}",
+                    self.meta.name,
+                    spec.dtype.name(),
+                    a.dtype().name()
+                ));
+            }
+            if a.len() != spec.elems() {
+                return Err(format!(
+                    "kernel {} argument {i}: expected {} elements, got {}",
+                    self.meta.name,
+                    spec.elems(),
+                    a.len()
+                ));
+            }
+            if let ArgValue::Ref(r) = a {
+                if !r.same_device(&self.device) {
+                    // locality restriction of §3.5: references are bound to
+                    // their device; crossing requires an explicit Val hop
+                    return Err(format!(
+                        "kernel {}: mem_ref on device {} used on device {}",
+                        self.meta.name,
+                        r.device_id(),
+                        self.device.id
+                    ));
+                }
+                if r.access() == Access::WriteOnly {
+                    return Err(format!(
+                        "kernel {}: write-only mem_ref used as input",
+                        self.meta.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Enqueue the command (paper Listing 4's `enqueue`): uploads for Val
+    /// inputs, the kernel execution depending on every input event, then
+    /// either an immediate `MemRef` response (Ref output — forwarded before
+    /// completion) or a download whose callback fulfills the promise (Val
+    /// output).
+    pub fn enqueue(self) {
+        if let Err(e) = self.check() {
+            self.promise
+                .deliver_err(crate::actor::ErrorMsg::new(e));
+            return;
+        }
+        let queue = &self.device.queue;
+        let mut ids = Vec::with_capacity(self.args.len());
+        let mut deps: Vec<Event> = Vec::new();
+        let mut temps: Vec<u64> = Vec::new();
+        for a in &self.args {
+            match a {
+                ArgValue::Ref(r) => {
+                    ids.push(r.buffer_id());
+                    deps.push(r.ready_event().clone());
+                }
+                ArgValue::U32(v) => {
+                    // zero host-side copy: the queue thread reads straight
+                    // from the shared payload (clEnqueueWriteBuffer model)
+                    let (id, ev) = queue
+                        .upload(crate::runtime::UploadSrc::SharedU32(v.clone()));
+                    ids.push(id);
+                    deps.push(ev);
+                    temps.push(id);
+                }
+                ArgValue::F32(v) => {
+                    let (id, ev) = queue
+                        .upload(crate::runtime::UploadSrc::SharedF32(v.clone()));
+                    ids.push(id);
+                    deps.push(ev);
+                    temps.push(id);
+                }
+            }
+        }
+        let out_spec = self.meta.output.clone();
+        let (out_id, done) = queue.execute(&self.meta.name, ids, out_spec.dtype, deps);
+        // inputs uploaded for this invocation die with it (in-order queue:
+        // the Free retires after the Execute)
+        for t in temps {
+            queue.free(t);
+        }
+        // Fig 5's "enqueue -> callback" window: for Ref outputs it ends at
+        // kernel completion; for Val outputs it extends to the read-back,
+        // matching the paper's "includes data transfer as well as the
+        // kernel execution".
+        if self.out_mode == Mode::Ref {
+            if let Some(stats) = &self.stats {
+                let st = stats.clone();
+                let ev = done.clone();
+                done.on_complete(move |_| {
+                    st.launched
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if let Some(d) = ev.device_duration() {
+                        st.device_ns.fetch_add(
+                            d.as_nanos() as u64,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                    }
+                });
+            }
+        }
+        let post = self.post.clone();
+        match self.out_mode {
+            Mode::Ref => {
+                // forward the reference NOW; the ready-event carries the
+                // dependency to the next stage (§3.5)
+                let r = MemRef::new(
+                    self.device.clone(),
+                    out_id,
+                    out_spec.dtype,
+                    out_spec.elems(),
+                    Access::ReadWrite,
+                    done,
+                );
+                let msg = match &post {
+                    Some(p) => p(ArgValue::Ref(r), &self.incoming),
+                    None => Message::new(r),
+                };
+                self.promise.deliver_msg(msg);
+            }
+            Mode::Val => {
+                let promise = self.promise;
+                let incoming = self.incoming;
+                let q2 = queue.clone();
+                let stats = self.stats.clone();
+                let t_enqueue = std::time::Instant::now();
+                queue.download_with(out_id, move |res| {
+                    q2.free(out_id);
+                    if let Some(st) = &stats {
+                        st.launched
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        st.device_ns.fetch_add(
+                            t_enqueue.elapsed().as_nanos() as u64,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                    }
+                    match res {
+                        Ok(host) => {
+                            let arg = match host {
+                                crate::runtime::HostData::U32(v) => {
+                                    ArgValue::U32(Arc::new(v))
+                                }
+                                crate::runtime::HostData::F32(v) => {
+                                    ArgValue::F32(Arc::new(v))
+                                }
+                            };
+                            let msg = match &post {
+                                Some(p) => p(arg, &incoming),
+                                None => match arg {
+                                    ArgValue::U32(v) => {
+                                        Message::new(Arc::try_unwrap(v).unwrap_or_default())
+                                    }
+                                    ArgValue::F32(v) => {
+                                        Message::new(Arc::try_unwrap(v).unwrap_or_default())
+                                    }
+                                    ArgValue::Ref(_) => unreachable!(),
+                                },
+                            };
+                            promise.deliver_msg(msg);
+                        }
+                        Err(e) => {
+                            promise.deliver_err(crate::actor::ErrorMsg::new(format!(
+                                "kernel failed: {e}"
+                            )));
+                        }
+                    }
+                });
+            }
+        }
+    }
+}

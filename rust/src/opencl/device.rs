@@ -1,0 +1,87 @@
+//! A compute device: command queue + capability info (paper Fig 2's
+//! `device` class). On this substrate every device is a PJRT CPU client on
+//! its own queue thread, optionally shaped by a simulated profile
+//! (Tesla / Xeon Phi — DESIGN.md §2).
+
+use crate::runtime::client::PadModel;
+use crate::runtime::DeviceQueue;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// OpenCL's device taxonomy (paper §5.4 distinguishes CPU, GPU and
+/// accelerator devices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Accelerator,
+}
+
+/// Capability info, used for `nd_range` validation and occupancy estimates
+/// (OpenCL exposes these via `clGetDeviceInfo`).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceInfo {
+    pub compute_units: u32,
+    pub max_work_items_per_cu: u32,
+}
+
+impl DeviceInfo {
+    /// Maximum concurrent work items (paper: "14 compute units that can run
+    /// up to 1024 work items each, adding up to 14336").
+    pub fn max_concurrency(&self) -> u32 {
+        self.compute_units * self.max_work_items_per_cu
+    }
+}
+
+/// One OpenCL-style device.
+pub struct Device {
+    pub id: usize,
+    pub name: String,
+    pub kind: DeviceKind,
+    pub info: DeviceInfo,
+    pub queue: Arc<DeviceQueue>,
+}
+
+impl Device {
+    pub(crate) fn start(
+        id: usize,
+        name: &str,
+        kind: DeviceKind,
+        info: DeviceInfo,
+        pad: Option<PadModel>,
+    ) -> Result<Arc<Device>> {
+        let queue = DeviceQueue::start(name, pad)?;
+        Ok(Arc::new(Device {
+            id,
+            name: name.to_string(),
+            kind,
+            info,
+            queue,
+        }))
+    }
+}
+
+impl std::fmt::Debug for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Device#{} {:?} {} ({} CUs x {} items)",
+            self.id, self.kind, self.name, self.info.compute_units, self.info.max_work_items_per_cu
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrency_math() {
+        // the paper's Tesla C2075 figures
+        let info = DeviceInfo {
+            compute_units: 14,
+            max_work_items_per_cu: 1024,
+        };
+        assert_eq!(info.max_concurrency(), 14_336);
+    }
+}

@@ -1,0 +1,168 @@
+//! The OpenCL actor: `actor_facade` (paper §3.2).
+//!
+//! "The facade wraps the kernel execution on OpenCL devices and provides a
+//! message passing interface in form of an actor. Whenever a facade
+//! receives a message, it creates a command which preserves the original
+//! context of a message, schedules execution of the kernel and finally
+//! produces a result message."
+//!
+//! The facade is an ordinary event-based actor — the runtime cannot tell it
+//! apart from CPU actors (same [`ActorRef`] handle, monitorable, linkable,
+//! composable).
+
+use super::arg::{extract_args, ArgValue, Mode};
+use super::command::{Command, CommandStats};
+use super::nd_range::NdRange;
+use super::program::Program;
+use crate::actor::{ActorRef, ActorSystem, Behavior, Message, Reply};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Facade-level metrics: launches + cumulative device (enqueue→complete)
+/// time, the paper's Fig 5 measurement.
+pub type FacadeStats = CommandStats;
+
+type PreFn = Arc<dyn Fn(&Message) -> Option<Vec<ArgValue>> + Send + Sync>;
+type PostFn = Arc<dyn Fn(ArgValue, &Message) -> Message + Send + Sync>;
+
+/// Spawn configuration for an OpenCL actor (the argument list of the
+/// paper's `mngr.spawn(...)`, Listings 2/3/5).
+#[derive(Clone)]
+pub struct KernelSpawn {
+    pub program: Arc<Program>,
+    pub kernel: String,
+    pub range: NdRange,
+    /// Per-input boundary mode (`in<T, val|ref>` tags).
+    pub in_modes: Vec<Mode>,
+    /// Output boundary mode (`out<T, val|ref>`).
+    pub out_mode: Mode,
+    /// Custom message→arguments extraction (Listing 3's `preprocess`).
+    pub pre: Option<PreFn>,
+    /// Custom output→message mapping (Listing 3's `postprocess`).
+    pub post: Option<PostFn>,
+    /// Optional metrics sink.
+    pub stats: Option<Arc<FacadeStats>>,
+}
+
+impl KernelSpawn {
+    pub fn new(program: Arc<Program>, kernel: impl Into<String>) -> KernelSpawn {
+        KernelSpawn {
+            program,
+            kernel: kernel.into(),
+            range: NdRange::default(),
+            in_modes: Vec::new(),
+            out_mode: Mode::Val,
+            pre: None,
+            post: None,
+            stats: None,
+        }
+    }
+
+    pub fn range(mut self, range: NdRange) -> Self {
+        self.range = range;
+        self
+    }
+
+    /// All inputs in one mode (common case).
+    pub fn inputs(mut self, mode: Mode, n: usize) -> Self {
+        self.in_modes = vec![mode; n];
+        self
+    }
+
+    pub fn input_modes(mut self, modes: &[Mode]) -> Self {
+        self.in_modes = modes.to_vec();
+        self
+    }
+
+    pub fn output(mut self, mode: Mode) -> Self {
+        self.out_mode = mode;
+        self
+    }
+
+    pub fn preprocess<F>(mut self, f: F) -> Self
+    where
+        F: Fn(&Message) -> Option<Vec<ArgValue>> + Send + Sync + 'static,
+    {
+        self.pre = Some(Arc::new(f));
+        self
+    }
+
+    pub fn postprocess<F>(mut self, f: F) -> Self
+    where
+        F: Fn(ArgValue, &Message) -> Message + Send + Sync + 'static,
+    {
+        self.post = Some(Arc::new(f));
+        self
+    }
+
+    pub fn with_stats(mut self, stats: Arc<FacadeStats>) -> Self {
+        self.stats = Some(stats);
+        self
+    }
+
+    /// Validate the declaration against the kernel's manifest signature and
+    /// the device limits (the compile-time checks CAF's template machinery
+    /// performs in the paper).
+    pub fn validate(&self) -> Result<()> {
+        let meta = self.program.kernel(&self.kernel)?;
+        if !self.in_modes.is_empty() && self.in_modes.len() != meta.inputs.len() {
+            bail!(
+                "kernel {} has {} inputs but {} modes were declared",
+                self.kernel,
+                meta.inputs.len(),
+                self.in_modes.len()
+            );
+        }
+        if !self.range.global.is_empty() {
+            let max_wg = self.program.device().info.max_work_items_per_cu as usize;
+            self.range
+                .validate(max_wg.max(1024))
+                .map_err(|e| anyhow::anyhow!("nd_range: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Spawn the facade actor (used by `Manager::spawn_cl`).
+pub(crate) fn spawn_facade(sys: &ActorSystem, cfg: KernelSpawn) -> Result<ActorRef> {
+    cfg.validate()?;
+    let meta = cfg.program.kernel(&cfg.kernel)?.clone();
+    let device = cfg.program.device().clone();
+    Ok(sys.spawn(move |_ctx| {
+        let cfg = cfg.clone();
+        let meta = meta.clone();
+        let device = device.clone();
+        Behavior::new().on_any(move |ctx, msg| {
+            let args = match &cfg.pre {
+                Some(pre) => pre(msg),
+                None => extract_args(msg),
+            };
+            let Some(args) = args else {
+                // let unmatched messages follow normal actor semantics
+                // (stash) by refusing? The facade accepts exactly its kernel
+                // signature; everything else is an immediate error, which is
+                // more debuggable than a silent stash for device actors.
+                let promise = ctx.make_promise();
+                promise.deliver_err(crate::actor::ErrorMsg::new(format!(
+                    "kernel {} cannot extract arguments from {}",
+                    cfg.kernel,
+                    msg.type_name()
+                )));
+                return Reply::Promised;
+            };
+            let promise = ctx.make_promise();
+            Command {
+                device: device.clone(),
+                meta: meta.clone(),
+                args,
+                out_mode: cfg.out_mode,
+                promise,
+                post: cfg.post.clone(),
+                incoming: msg.clone(),
+                stats: cfg.stats.clone(),
+            }
+            .enqueue();
+            Reply::Promised
+        })
+    }))
+}

@@ -1,0 +1,134 @@
+//! The OpenCL manager: an actor-system module performing lazy platform
+//! discovery and offering the `spawn` interface for OpenCL actors (paper
+//! Fig 2's `manager`; loaded via `cfg.load<opencl::manager>()` in
+//! Listing 2 — here `Manager::load(&system, specs)`).
+
+use super::device::Device;
+use super::facade::{spawn_facade, KernelSpawn};
+use super::platform::{DeviceSpec, Platform};
+use super::program::Program;
+use crate::actor::{ActorRef, ActorSystem};
+use anyhow::{anyhow, Result};
+use once_cell::sync::OnceCell;
+use std::sync::Arc;
+use std::time::Duration;
+
+const MODULE_KEY: &str = "opencl";
+const BUILD_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// The module object stored in the actor system.
+pub struct Manager {
+    system: ActorSystem,
+    specs: Vec<DeviceSpec>,
+    platform: OnceCell<Platform>,
+}
+
+impl Manager {
+    /// Load the module into `system` with the default (host-only) device.
+    pub fn load(system: &ActorSystem) -> Arc<Manager> {
+        Self::load_with(system, vec![DeviceSpec::host()])
+    }
+
+    /// Load with an explicit device inventory (benches add the simulated
+    /// Tesla / Xeon Phi devices here).
+    pub fn load_with(system: &ActorSystem, specs: Vec<DeviceSpec>) -> Arc<Manager> {
+        let mgr = Arc::new(Manager {
+            system: system.clone(),
+            specs,
+            platform: OnceCell::new(),
+        });
+        system.put_module(MODULE_KEY, mgr.clone());
+        mgr
+    }
+
+    /// The platform, discovered lazily on first access (paper: "performs
+    /// platform discovery lazily on first access").
+    pub fn platform(&self) -> &Platform {
+        self.platform.get_or_init(|| {
+            Platform::discover(&self.system.config().artifacts_dir, &self.specs)
+                .expect("platform discovery failed — run `make artifacts` first")
+        })
+    }
+
+    /// Whether discovery already ran (spawn-cost accounting, Fig 4).
+    pub fn discovered(&self) -> bool {
+        self.platform.get().is_some()
+    }
+
+    pub fn device(&self, id: usize) -> Result<Arc<Device>> {
+        self.platform()
+            .device(id)
+            .cloned()
+            .ok_or_else(|| anyhow!("no device {id}"))
+    }
+
+    /// Default device: the first discovered one (paper §3.6: "the OpenCL
+    /// device binding for a kernel defaults to the first discovered
+    /// device").
+    pub fn default_device(&self) -> Arc<Device> {
+        self.platform().devices[0].clone()
+    }
+
+    /// Build a program explicitly on a chosen device (the manual flow of
+    /// §3.2 for "host systems with multiple co-processors").
+    pub fn create_program(&self, device: &Arc<Device>, kernels: &[&str]) -> Result<Arc<Program>> {
+        Program::build(
+            device.clone(),
+            &self.platform().manifest,
+            kernels,
+            BUILD_TIMEOUT,
+        )
+    }
+
+    /// One-kernel convenience program on the default device (the simple
+    /// `mngr.spawn(source, name, ...)` path of Listing 2).
+    pub fn create_kernel_program(&self, kernel: &str) -> Result<Arc<Program>> {
+        let dev = self.default_device();
+        self.create_program(&dev, &[kernel])
+    }
+
+    /// Spawn an OpenCL actor.
+    pub fn spawn_cl(&self, cfg: KernelSpawn) -> Result<ActorRef> {
+        spawn_facade(&self.system, cfg)
+    }
+
+    /// Spawn an OpenCL actor for a single kernel on the default device with
+    /// uniform input/output modes — the minimal paper-style spawn.
+    pub fn spawn_simple(
+        &self,
+        kernel: &str,
+        in_mode: super::arg::Mode,
+        out_mode: super::arg::Mode,
+    ) -> Result<ActorRef> {
+        let program = self.create_kernel_program(kernel)?;
+        let n_in = program.kernel(kernel)?.inputs.len();
+        self.spawn_cl(
+            KernelSpawn::new(program, kernel)
+                .inputs(in_mode, n_in)
+                .output(out_mode),
+        )
+    }
+
+    pub(crate) fn system_ref(&self) -> &ActorSystem {
+        &self.system
+    }
+
+    /// Stop every device queue (called on system shutdown by the owner).
+    pub fn stop_devices(&self) {
+        if let Some(p) = self.platform.get() {
+            p.stop();
+        }
+    }
+}
+
+/// `system.opencl_manager()` (paper Listing 2 line 5).
+pub trait OpenClSystemExt {
+    fn opencl_manager(&self) -> Arc<Manager>;
+}
+
+impl OpenClSystemExt for ActorSystem {
+    fn opencl_manager(&self) -> Arc<Manager> {
+        self.get_module::<Manager>(MODULE_KEY)
+            .expect("opencl module not loaded — call Manager::load(&system) first")
+    }
+}

@@ -1,0 +1,145 @@
+//! Device-resident buffer handles: the paper's `mem_ref<T>` (Fig 2, §3.5).
+//!
+//! A `MemRef` represents data living on an OpenCL device; messages between
+//! pipeline stages carry only these references, so intermediate results
+//! never cross the host boundary. A reference may be forwarded *before* the
+//! kernel producing it finished — the attached ready-event carries the
+//! dependency to the consuming stage (the paper's event-chained
+//! asynchronous scheduling).
+//!
+//! A `MemRef` is bound to its local device/process; serializing one over
+//! the network is a checked error (design option (a), §3.5).
+
+use super::device::Device;
+use crate::runtime::artifact::Dtype;
+use crate::runtime::{Event, HostData};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Buffer access rights (OpenCL buffer flags; enforced at facade level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    ReadWrite,
+    ReadOnly,
+    WriteOnly,
+}
+
+struct Inner {
+    device: Arc<Device>,
+    id: u64,
+    dtype: Dtype,
+    len: usize,
+    access: Access,
+    /// Completes when the producing command retired.
+    ready: Event,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // releasing the last reference frees the device memory ("dropping a
+        // reference argument simply releases its memory on the device")
+        self.device.queue.free(self.id);
+    }
+}
+
+/// A typed reference to device memory. Cheap to clone; the underlying
+/// buffer is freed when the last clone drops.
+#[derive(Clone)]
+pub struct MemRef {
+    inner: Arc<Inner>,
+}
+
+impl MemRef {
+    pub(crate) fn new(
+        device: Arc<Device>,
+        id: u64,
+        dtype: Dtype,
+        len: usize,
+        access: Access,
+        ready: Event,
+    ) -> MemRef {
+        MemRef {
+            inner: Arc::new(Inner {
+                device,
+                id,
+                dtype,
+                len,
+                access,
+                ready,
+            }),
+        }
+    }
+
+    pub fn device_id(&self) -> usize {
+        self.inner.device.id
+    }
+
+    pub(crate) fn buffer_id(&self) -> u64 {
+        self.inner.id
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.inner.dtype
+    }
+
+    /// Number of elements (the paper: a reference carries "the amount of
+    /// bytes it refers to" — elements * 4 here).
+    pub fn len(&self) -> usize {
+        self.inner.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.len == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inner.len * self.inner.dtype.byte_size()
+    }
+
+    pub fn access(&self) -> Access {
+        self.inner.access
+    }
+
+    /// The producing command's completion event.
+    pub fn ready_event(&self) -> &Event {
+        &self.inner.ready
+    }
+
+    pub(crate) fn same_device(&self, dev: &Device) -> bool {
+        self.inner.device.id == dev.id
+    }
+
+    /// Copy the data back to the host (the explicit transfer of §3.5 —
+    /// "usually handled by the framework" via a Val-output stage, but
+    /// available for direct inspection).
+    pub fn read(&self, timeout: Duration) -> Result<HostData> {
+        self.inner
+            .ready
+            .wait(timeout)
+            .map_err(|e| anyhow!("producer failed: {e}"))?;
+        self.inner.device.queue.download(self.inner.id, timeout)
+    }
+
+    pub fn read_u32(&self, timeout: Duration) -> Result<Vec<u32>> {
+        self.read(timeout)?.into_u32()
+    }
+
+    pub fn read_f32(&self, timeout: Duration) -> Result<Vec<f32>> {
+        self.read(timeout)?.into_f32()
+    }
+}
+
+impl std::fmt::Debug for MemRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MemRef(dev={}, buf={}, {}[{}], ready={})",
+            self.inner.device.id,
+            self.inner.id,
+            self.inner.dtype.name(),
+            self.inner.len,
+            self.inner.ready.is_complete()
+        )
+    }
+}

@@ -1,0 +1,36 @@
+//! The OpenCL-actor integration (the paper's contribution, §3), transplanted
+//! onto the PJRT substrate:
+//!
+//! * [`manager`]   — actor-system module; lazy platform discovery; `spawn`
+//!   for OpenCL actors (paper Fig 2's `manager`).
+//! * [`platform`]  — wraps the "driver" view: devices + the artifact
+//!   manifest (the kernel "sources" of this substrate).
+//! * [`device`]    — a compute device with its in-order command queue.
+//! * [`program`]   — compiled kernels by name (paper Fig 2's `program`).
+//! * [`nd_range`]  — index-space configuration (`nd_range`, `dim_vec`).
+//! * [`arg`]       — kernel argument passing: value vs device-reference
+//!   modes (the `in<T, val|ref>` tags of Listing 5).
+//! * [`mem_ref`]   — device-resident buffer handles (`mem_ref<T>`).
+//! * [`facade`]    — the OpenCL actor itself (`actor_facade`).
+//! * [`command`]   — one in-flight kernel execution (paper Listing 4).
+//! * [`stage`]     — composed kernel pipelines over resident memory (§3.5).
+
+pub mod arg;
+pub mod command;
+pub mod device;
+pub mod facade;
+pub mod manager;
+pub mod mem_ref;
+pub mod nd_range;
+pub mod platform;
+pub mod program;
+pub mod stage;
+
+pub use arg::{ArgValue, Mode};
+pub use device::{Device, DeviceInfo, DeviceKind};
+pub use facade::{FacadeStats, KernelSpawn};
+pub use manager::{Manager, OpenClSystemExt};
+pub use mem_ref::MemRef;
+pub use nd_range::{DimVec, NdRange};
+pub use platform::{DeviceSpec, Platform};
+pub use program::Program;

@@ -1,0 +1,159 @@
+//! Index-space configuration: the paper's `nd_range` / `dim_vec`
+//! (Listing 2). On this substrate the index space is baked into the AOT
+//! artifact's grid, so the range primarily serves interface fidelity,
+//! validation, and device-occupancy accounting for the scheduler.
+
+/// Up to three dimensions (OpenCL's NDRange limit).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct DimVec(pub Vec<usize>);
+
+impl DimVec {
+    pub fn d1(x: usize) -> DimVec {
+        DimVec(vec![x])
+    }
+
+    pub fn d2(x: usize, y: usize) -> DimVec {
+        DimVec(vec![x, y])
+    }
+
+    pub fn d3(x: usize, y: usize, z: usize) -> DimVec {
+        DimVec(vec![x, y, z])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn product(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// The execution index space (paper Listing 2/5):
+/// global dimensions, optional global-id offsets, optional work-group
+/// ("local") dimensions.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct NdRange {
+    pub global: DimVec,
+    pub offsets: DimVec,
+    pub local: DimVec,
+}
+
+impl NdRange {
+    pub fn new(global: DimVec) -> NdRange {
+        NdRange {
+            global,
+            offsets: DimVec::default(),
+            local: DimVec::default(),
+        }
+    }
+
+    pub fn d1(x: usize) -> NdRange {
+        Self::new(DimVec::d1(x))
+    }
+
+    pub fn d2(x: usize, y: usize) -> NdRange {
+        Self::new(DimVec::d2(x, y))
+    }
+
+    pub fn with_local(mut self, local: DimVec) -> NdRange {
+        self.local = local;
+        self
+    }
+
+    pub fn with_offsets(mut self, offsets: DimVec) -> NdRange {
+        self.offsets = offsets;
+        self
+    }
+
+    /// Total work items (one kernel "execution" per item in OpenCL terms).
+    pub fn work_items(&self) -> usize {
+        self.global.product()
+    }
+
+    /// Work-group size, if local dimensions were given.
+    pub fn work_group_size(&self) -> Option<usize> {
+        if self.local.is_empty() {
+            None
+        } else {
+            Some(self.local.product())
+        }
+    }
+
+    /// Validate OpenCL constraints: rank <= 3, local divides global,
+    /// work-group fits the device's processing elements.
+    pub fn validate(&self, max_work_group: usize) -> Result<(), String> {
+        if self.global.rank() == 0 || self.global.rank() > 3 {
+            return Err(format!(
+                "nd_range must have 1..=3 dimensions, got {}",
+                self.global.rank()
+            ));
+        }
+        if !self.local.is_empty() {
+            if self.local.rank() != self.global.rank() {
+                return Err("local rank must match global rank".to_string());
+            }
+            for (g, l) in self.global.0.iter().zip(&self.local.0) {
+                if *l == 0 || g % l != 0 {
+                    return Err(format!("local dim {l} does not divide global {g}"));
+                }
+            }
+            let wg = self.local.product();
+            if wg > max_work_group {
+                return Err(format!(
+                    "work-group size {wg} exceeds device limit {max_work_group}"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the `range=AxBxC` manifest extra.
+    pub fn parse(s: &str) -> Option<NdRange> {
+        let dims: Option<Vec<usize>> = s.split('x').map(|t| t.parse().ok()).collect();
+        let dims = dims?;
+        if dims.is_empty() || dims.len() > 3 {
+            return None;
+        }
+        Some(NdRange::new(DimVec(dims)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_products() {
+        let r = NdRange::d2(1024, 1024).with_local(DimVec::d2(16, 8));
+        assert_eq!(r.work_items(), 1024 * 1024);
+        assert_eq!(r.work_group_size(), Some(128));
+    }
+
+    #[test]
+    fn validate_catches_bad_local() {
+        let r = NdRange::d1(100).with_local(DimVec::d1(33));
+        assert!(r.validate(1024).is_err());
+        let r = NdRange::d1(128).with_local(DimVec::d1(128));
+        assert!(r.validate(64).is_err()); // exceeds device limit
+        assert!(r.validate(128).is_ok());
+    }
+
+    #[test]
+    fn validate_rank() {
+        assert!(NdRange::default().validate(1024).is_err());
+        let r = NdRange::d2(8, 8).with_local(DimVec::d1(8));
+        assert!(r.validate(1024).is_err()); // rank mismatch
+    }
+
+    #[test]
+    fn parse_manifest_range() {
+        assert_eq!(NdRange::parse("54x960").unwrap().work_items(), 54 * 960);
+        assert!(NdRange::parse("1x2x3x4").is_none());
+        assert!(NdRange::parse("abc").is_none());
+    }
+}

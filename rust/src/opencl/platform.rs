@@ -1,0 +1,90 @@
+//! Platform: the "driver entry point" — device inventory plus the kernel
+//! manifest (paper Fig 2's `platform`, which wraps the `cl_context`).
+
+use super::device::{Device, DeviceInfo, DeviceKind};
+use crate::runtime::client::PadModel;
+use crate::runtime::Manifest;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Configuration of one device to instantiate at discovery time. Real
+/// hardware would be enumerated from the driver; this substrate creates a
+/// PJRT CPU queue per spec, shaped by an optional simulated profile
+/// (`sim::devices` provides Tesla/Phi/GTX specs).
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub kind: DeviceKind,
+    pub info: DeviceInfo,
+    pub pad: Option<PadModel>,
+}
+
+impl DeviceSpec {
+    /// The plain PJRT CPU device (no simulation).
+    pub fn host() -> DeviceSpec {
+        DeviceSpec {
+            name: "pjrt-cpu".to_string(),
+            kind: DeviceKind::Cpu,
+            info: DeviceInfo {
+                compute_units: std::thread::available_parallelism()
+                    .map(|n| n.get() as u32)
+                    .unwrap_or(4),
+                max_work_items_per_cu: 1,
+            },
+            pad: None,
+        }
+    }
+}
+
+/// A discovered platform: devices + manifest.
+pub struct Platform {
+    pub name: String,
+    pub devices: Vec<Arc<Device>>,
+    pub manifest: Manifest,
+}
+
+impl Platform {
+    /// "Discover" the platform: load the manifest and start one queue
+    /// thread per device spec.
+    pub fn discover(artifacts_dir: &str, specs: &[DeviceSpec]) -> Result<Platform> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mut devices = Vec::new();
+        for (id, spec) in specs.iter().enumerate() {
+            devices.push(Device::start(id, &spec.name, spec.kind, spec.info, spec.pad)?);
+        }
+        Ok(Platform {
+            name: "pjrt".to_string(),
+            devices,
+            manifest,
+        })
+    }
+
+    pub fn device(&self, id: usize) -> Option<&Arc<Device>> {
+        self.devices.get(id)
+    }
+
+    /// First device of a kind, mirroring OpenCL's
+    /// `clGetDeviceIDs(CL_DEVICE_TYPE_GPU, ...)` selection.
+    pub fn device_of_kind(&self, kind: DeviceKind) -> Option<&Arc<Device>> {
+        self.devices.iter().find(|d| d.kind == kind)
+    }
+
+    /// Shut down all device queues.
+    pub fn stop(&self) {
+        for d in &self.devices {
+            d.queue.stop();
+        }
+    }
+}
+
+impl std::fmt::Debug for Platform {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Platform({}, {} devices, {} kernels)",
+            self.name,
+            self.devices.len(),
+            self.manifest.len()
+        )
+    }
+}

@@ -1,0 +1,80 @@
+//! Programs: compiled kernels retrievable by name (paper Fig 2's `program`
+//! — "stores compiled OpenCL kernels and provides a mapping from kernel
+//! names to objects").
+//!
+//! The OpenCL flow compiles source strings at runtime; here the "sources"
+//! are AOT HLO-text artifacts, compiled on the device's queue thread at
+//! program-creation time — same lifecycle, same laziness.
+
+use super::device::Device;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::Manifest;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A set of kernels compiled for one device.
+pub struct Program {
+    device: Arc<Device>,
+    kernels: HashMap<String, ArtifactMeta>,
+}
+
+impl Program {
+    /// Compile `names` from the manifest onto `device` (blocking until the
+    /// device reports compilation done — OpenCL's `clBuildProgram`).
+    pub fn build(
+        device: Arc<Device>,
+        manifest: &Manifest,
+        names: &[&str],
+        timeout: Duration,
+    ) -> Result<Arc<Program>> {
+        let mut kernels = HashMap::new();
+        let mut pending = Vec::new();
+        for name in names {
+            let meta = manifest.get(name)?;
+            let ev = device.queue.compile(*name, manifest.hlo_path(meta));
+            pending.push((name.to_string(), ev));
+            kernels.insert(name.to_string(), meta.clone());
+        }
+        for (name, ev) in pending {
+            ev.wait(timeout)
+                .map_err(|e| anyhow!("building kernel {name}: {e}"))?;
+        }
+        Ok(Arc::new(Program { device, kernels }))
+    }
+
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+
+    /// Look up a kernel's operand signature.
+    pub fn kernel(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel {name:?} not in program"))
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.kernels.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+}
+
+impl std::fmt::Debug for Program {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Program(device={}, {} kernels)",
+            self.device.name,
+            self.kernels.len()
+        )
+    }
+}

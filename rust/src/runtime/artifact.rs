@@ -1,0 +1,198 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust coordinator. Line format (see aot.py docstring):
+//!
+//! ```text
+//! name|file|in_dtype:shape[ in_dtype:shape...]|out_dtype:shape|k=v k=v
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a kernel operand (subset of XLA's primitive types that
+/// the kernels use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    U32,
+    F32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "u32" => Ok(Dtype::U32),
+            "f32" => Ok(Dtype::F32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U32 => "u32",
+            Dtype::F32 => "f32",
+        }
+    }
+
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one kernel operand.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `"u32:256x128"`.
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (d, dims) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed tensor spec {s:?}"))?;
+        let dims = dims
+            .split('x')
+            .map(|t| t.parse::<usize>().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            dtype: Dtype::parse(d)?,
+            dims,
+        })
+    }
+
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.byte_size()
+    }
+}
+
+/// One compiled kernel artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    /// Free-form metadata from aot.py (`n`, `range`, `group`, ...).
+    pub extras: HashMap<String, String>,
+}
+
+impl ArtifactMeta {
+    pub fn extra_usize(&self, key: &str) -> Option<usize> {
+        self.extras.get(key).and_then(|v| v.parse().ok())
+    }
+
+    fn parse(line: &str) -> Result<ArtifactMeta> {
+        let parts: Vec<&str> = line.split('|').collect();
+        if parts.len() != 5 {
+            bail!("manifest line must have 5 fields, got {}: {line:?}", parts.len());
+        }
+        let inputs = parts[2]
+            .split_whitespace()
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let output = TensorSpec::parse(parts[3])?;
+        let mut extras = HashMap::new();
+        for kv in parts[4].split_whitespace() {
+            if let Some((k, v)) = kv.split_once('=') {
+                extras.insert(k.to_string(), v.to_string());
+            }
+        }
+        Ok(ArtifactMeta {
+            name: parts[0].to_string(),
+            file: parts[1].to_string(),
+            inputs,
+            output,
+            extras,
+        })
+    }
+}
+
+/// The full artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut by_name = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let meta = ArtifactMeta::parse(line)?;
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Manifest { dir, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown kernel {name:?} (not in manifest)"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.by_name.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tensor_spec() {
+        let t = TensorSpec::parse("f32:256x128").unwrap();
+        assert_eq!(t.dtype, Dtype::F32);
+        assert_eq!(t.dims, vec![256, 128]);
+        assert_eq!(t.elems(), 32768);
+        assert_eq!(t.bytes(), 131072);
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("q8:4").is_err());
+    }
+
+    #[test]
+    fn parse_manifest_line() {
+        let m = ArtifactMeta::parse(
+            "wah_move_4096|wah_move_4096.hlo.txt|u32:8192 u32:136|u32:8200|n=4096 group=128",
+        )
+        .unwrap();
+        assert_eq!(m.name, "wah_move_4096");
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.output.elems(), 8200);
+        assert_eq!(m.extra_usize("group"), Some(128));
+        assert_eq!(m.extra_usize("nope"), None);
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(ArtifactMeta::parse("too|few|fields").is_err());
+    }
+}

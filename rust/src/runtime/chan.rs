@@ -1,0 +1,142 @@
+//! A small MPMC channel (std's `mpsc::Sender` is `!Sync`, which would
+//! poison every structure embedding it; this one is `Send + Sync + Clone`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    queue: Mutex<(VecDeque<T>, bool)>, // (items, closed)
+    cv: Condvar,
+}
+
+/// Unbounded MPMC channel handle.
+pub struct Chan<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Chan<T> {
+    fn clone(&self) -> Self {
+        Chan {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> Default for Chan<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Chan<T> {
+    pub fn new() -> Chan<T> {
+        Chan {
+            inner: Arc::new(Inner {
+                queue: Mutex::new((VecDeque::new(), false)),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Push an item; returns false if the channel is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.1 {
+            return false;
+        }
+        q.0.push_back(item);
+        self.inner.cv.notify_one();
+        true
+    }
+
+    /// Pop, blocking until an item arrives or the channel closes empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(x) = q.0.pop_front() {
+                return Some(x);
+            }
+            if q.1 {
+                return None;
+            }
+            q = self.inner.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Pop with timeout.
+    pub fn pop_timeout(&self, d: Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + d;
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(x) = q.0.pop_front() {
+                return Some(x);
+            }
+            if q.1 {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _) = self.inner.cv.wait_timeout(q, deadline - now).unwrap();
+            q = g;
+        }
+    }
+
+    /// Close: pending items still drain, new pushes fail.
+    pub fn close(&self) {
+        let mut q = self.inner.queue.lock().unwrap();
+        q.1 = true;
+        self.inner.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_close() {
+        let c = Chan::new();
+        assert!(c.push(1));
+        assert!(c.push(2));
+        assert_eq!(c.pop(), Some(1));
+        c.close();
+        assert!(!c.push(3));
+        assert_eq!(c.pop(), Some(2)); // drains
+        assert_eq!(c.pop(), None);
+    }
+
+    #[test]
+    fn cross_thread() {
+        let c = Chan::new();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                c2.push(i);
+            }
+            c2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = c.pop() {
+            got.push(x);
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_timeout_expires() {
+        let c: Chan<u32> = Chan::new();
+        assert_eq!(c.pop_timeout(Duration::from_millis(10)), None);
+    }
+}

@@ -1,0 +1,547 @@
+//! The device command-queue thread: owns a `PjRtClient`, compiled
+//! executables, and device-resident buffers; processes commands in order
+//! (OpenCL's default in-order command queue).
+//!
+//! Simulated device profiles (Tesla/Phi, DESIGN.md §2) inject their transfer
+//! and compute cost model here as sleep padding, so end-to-end measurements
+//! through the actor system reproduce the paper's heterogeneous-offload
+//! behavior on hardware we do not have.
+
+use super::artifact::Dtype;
+use super::chan::Chan;
+use super::event::Event;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Host-side tensor data (one flat array; shapes live in the manifest).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostData {
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl HostData {
+    pub fn len(&self) -> usize {
+        match self {
+            HostData::U32(v) => v.len(),
+            HostData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostData::U32(_) => Dtype::U32,
+            HostData::F32(_) => Dtype::F32,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn into_u32(self) -> Result<Vec<u32>> {
+        match self {
+            HostData::U32(v) => Ok(v),
+            _ => Err(anyhow!("expected u32 data")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostData::F32(v) => Ok(v),
+            _ => Err(anyhow!("expected f32 data")),
+        }
+    }
+}
+
+/// Cost model of a simulated device (the Tesla / Xeon Phi stand-ins).
+/// `None` paddings mean "the real PJRT CPU device".
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PadModel {
+    /// Fixed per-command dispatch latency (PCIe round trip, driver).
+    pub launch: Duration,
+    /// Host<->device copy bandwidth in bytes/second (0 = infinite).
+    pub bytes_per_sec: f64,
+    /// Kernel time multiplier relative to the real PJRT execution
+    /// (0.5 = twice as fast as the host; 1.0 = same; >1 slower).
+    pub compute_scale: f64,
+    /// Burn a core while padding instead of sleeping — models drivers whose
+    /// offload runtime busy-polls the host (the Xeon Phi's MPSS stack; this
+    /// is what makes Phi offload hurt the host side in Fig 7b).
+    pub busy_wait: bool,
+}
+
+impl PadModel {
+    fn transfer_pad(&self, bytes: usize) -> Duration {
+        let mut d = self.launch;
+        if self.bytes_per_sec > 0.0 {
+            d += Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        }
+        d
+    }
+
+    fn pad_for(&self, d: Duration) {
+        if self.busy_wait {
+            let deadline = Instant::now() + d;
+            while Instant::now() < deadline {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::sleep(d);
+        }
+    }
+
+    fn compute_pad(&self, real: Duration) -> Duration {
+        let scaled = if self.compute_scale > 0.0 {
+            real.mul_f64(self.compute_scale)
+        } else {
+            real
+        };
+        self.launch + scaled.saturating_sub(real)
+    }
+}
+
+type DownloadCb = Box<dyn FnOnce(Result<HostData, String>) + Send>;
+
+/// Upload source: owned host data or an Arc shared with actor messages —
+/// the copy into the device happens on the queue thread either way (the
+/// `clEnqueueWriteBuffer` model), so senders never pre-copy payloads.
+#[derive(Clone, Debug)]
+pub enum UploadSrc {
+    Owned(HostData),
+    SharedU32(Arc<Vec<u32>>),
+    SharedF32(Arc<Vec<f32>>),
+}
+
+impl UploadSrc {
+    pub fn bytes(&self) -> usize {
+        match self {
+            UploadSrc::Owned(d) => d.bytes(),
+            UploadSrc::SharedU32(v) => v.len() * 4,
+            UploadSrc::SharedF32(v) => v.len() * 4,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            UploadSrc::Owned(d) => d.dtype(),
+            UploadSrc::SharedU32(_) => Dtype::U32,
+            UploadSrc::SharedF32(_) => Dtype::F32,
+        }
+    }
+}
+
+impl From<HostData> for UploadSrc {
+    fn from(d: HostData) -> Self {
+        UploadSrc::Owned(d)
+    }
+}
+
+/// Commands of the in-order device queue.
+pub enum QueueCmd {
+    /// Compile the HLO-text artifact at `path` and cache it under `name`.
+    Compile {
+        name: String,
+        path: PathBuf,
+        done: Event,
+    },
+    /// Copy host data into a fresh device buffer `id`.
+    Upload {
+        id: u64,
+        data: UploadSrc,
+        done: Event,
+    },
+    /// Run executable `exec` over buffer args; result becomes buffer `out`.
+    /// Waits for `deps` (cross-queue dependencies) first.
+    Execute {
+        exec: String,
+        args: Vec<u64>,
+        out: u64,
+        out_dtype: Dtype,
+        deps: Vec<Event>,
+        done: Event,
+    },
+    /// Read a buffer back; `and_then` runs on the queue thread.
+    Download { id: u64, and_then: DownloadCb },
+    /// Release a device buffer.
+    Free { id: u64 },
+    /// Completes when every previously enqueued command retired (clFinish).
+    Barrier { done: Event },
+    Stop,
+}
+
+/// Execution statistics of one device queue (metrics for Figs 5/6).
+#[derive(Default)]
+pub struct ExecStats {
+    pub execs: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub uploads: AtomicU64,
+    pub upload_bytes: AtomicU64,
+    pub downloads: AtomicU64,
+    pub download_bytes: AtomicU64,
+    pub compiles: AtomicU64,
+}
+
+impl ExecStats {
+    pub fn snapshot(&self) -> (u64, Duration) {
+        (
+            self.execs.load(Ordering::Relaxed),
+            Duration::from_nanos(self.exec_ns.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+/// Handle to a device command-queue thread.
+pub struct DeviceQueue {
+    name: String,
+    cmds: Chan<QueueCmd>,
+    next_buf: AtomicU64,
+    stats: Arc<ExecStats>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl DeviceQueue {
+    /// Start the queue thread; fails if the PJRT client cannot be created.
+    pub fn start(name: impl Into<String>, pad: Option<PadModel>) -> Result<Arc<DeviceQueue>> {
+        let name = name.into();
+        let cmds: Chan<QueueCmd> = Chan::new();
+        let stats = Arc::new(ExecStats::default());
+        let (init_tx, init_rx) = std::sync::mpsc::channel::<Result<(), String>>();
+        let thread_cmds = cmds.clone();
+        let thread_stats = stats.clone();
+        let tname = format!("device-{name}");
+        let worker = std::thread::Builder::new()
+            .name(tname)
+            .spawn(move || queue_loop(thread_cmds, thread_stats, pad, init_tx))?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow!("device thread died during init"))?
+            .map_err(|e| anyhow!("PJRT init failed: {e}"))?;
+        Ok(Arc::new(DeviceQueue {
+            name,
+            cmds,
+            next_buf: AtomicU64::new(1),
+            stats,
+            worker: Mutex::new(Some(worker)),
+        }))
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    pub fn fresh_buffer_id(&self) -> u64 {
+        self.next_buf.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push(&self, cmd: QueueCmd) {
+        if !self.cmds.push(cmd) {
+            log::warn!("device queue {} is closed; command dropped", self.name);
+        }
+    }
+
+    /// Compile an artifact (idempotent per name).
+    pub fn compile(&self, name: impl Into<String>, path: PathBuf) -> Event {
+        let done = Event::new();
+        done.mark_enqueued();
+        self.push(QueueCmd::Compile {
+            name: name.into(),
+            path,
+            done: done.clone(),
+        });
+        done
+    }
+
+    /// Asynchronously copy host data to the device; returns (buffer id,
+    /// completion event).
+    pub fn upload(&self, data: impl Into<UploadSrc>) -> (u64, Event) {
+        self.upload_src(data.into())
+    }
+
+    fn upload_src(&self, data: UploadSrc) -> (u64, Event) {
+        let id = self.fresh_buffer_id();
+        let done = Event::new();
+        done.mark_enqueued();
+        self.push(QueueCmd::Upload {
+            id,
+            data,
+            done: done.clone(),
+        });
+        (id, done)
+    }
+
+    /// Enqueue a kernel execution; returns (output buffer id, event).
+    pub fn execute(
+        &self,
+        exec: impl Into<String>,
+        args: Vec<u64>,
+        out_dtype: Dtype,
+        deps: Vec<Event>,
+    ) -> (u64, Event) {
+        let out = self.fresh_buffer_id();
+        let done = Event::new();
+        done.mark_enqueued();
+        self.push(QueueCmd::Execute {
+            exec: exec.into(),
+            args,
+            out,
+            out_dtype,
+            deps,
+            done: done.clone(),
+        });
+        (out, done)
+    }
+
+    /// Asynchronous download; the callback runs on the queue thread (the
+    /// OpenCL completion-callback pattern — never call blocking queue ops
+    /// from inside it).
+    pub fn download_with<F>(&self, id: u64, f: F)
+    where
+        F: FnOnce(Result<HostData, String>) + Send + 'static,
+    {
+        self.push(QueueCmd::Download {
+            id,
+            and_then: Box::new(f),
+        });
+    }
+
+    /// Blocking download (must not be called from the queue thread itself).
+    pub fn download(&self, id: u64, timeout: Duration) -> Result<HostData> {
+        let reply: Chan<Result<HostData, String>> = Chan::new();
+        let r2 = reply.clone();
+        self.download_with(id, move |res| {
+            r2.push(res);
+        });
+        reply
+            .pop_timeout(timeout)
+            .ok_or_else(|| anyhow!("download timed out"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn free(&self, id: u64) {
+        self.push(QueueCmd::Free { id });
+    }
+
+    /// clFinish: block until all previously enqueued commands retired.
+    pub fn barrier(&self, timeout: Duration) -> Result<()> {
+        let done = Event::new();
+        self.push(QueueCmd::Barrier { done: done.clone() });
+        done.wait(timeout).map_err(|e| anyhow!(e))
+    }
+
+    /// Stop the queue thread (drains remaining commands first).
+    pub fn stop(&self) {
+        self.push(QueueCmd::Stop);
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
+        self.cmds.close();
+    }
+}
+
+impl Drop for DeviceQueue {
+    fn drop(&mut self) {
+        // best-effort: release the thread if the owner forgot to stop
+        self.cmds.push(QueueCmd::Stop);
+        self.cmds.close();
+        if let Some(w) = self.worker.lock().unwrap().take() {
+            let _ = w.join();
+        }
+    }
+}
+
+struct Buffer {
+    buf: xla::PjRtBuffer,
+    dtype: Dtype,
+}
+
+fn queue_loop(
+    cmds: Chan<QueueCmd>,
+    stats: Arc<ExecStats>,
+    pad: Option<PadModel>,
+    init_tx: std::sync::mpsc::Sender<Result<(), String>>,
+) {
+    // silence TfrtCpuClient created/destroyed info spam
+    if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+    }
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = init_tx.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e.to_string()));
+            return;
+        }
+    };
+    let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut buffers: HashMap<u64, Buffer> = HashMap::new();
+
+    while let Some(cmd) = cmds.pop() {
+        match cmd {
+            QueueCmd::Compile { name, path, done } => {
+                if execs.contains_key(&name) {
+                    done.complete();
+                    continue;
+                }
+                stats.compiles.fetch_add(1, Ordering::Relaxed);
+                match compile_artifact(&client, &path) {
+                    Ok(exe) => {
+                        execs.insert(name, exe);
+                        done.complete();
+                    }
+                    Err(e) => done.fail(format!("compile {name}: {e}")),
+                }
+            }
+            QueueCmd::Upload { id, data, done } => {
+                stats.uploads.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .upload_bytes
+                    .fetch_add(data.bytes() as u64, Ordering::Relaxed);
+                if let Some(p) = &pad {
+                    p.pad_for(p.transfer_pad(data.bytes()));
+                }
+                let dtype = data.dtype();
+                let res = match &data {
+                    UploadSrc::Owned(HostData::U32(v)) => {
+                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                    }
+                    UploadSrc::SharedU32(v) => {
+                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                    }
+                    UploadSrc::Owned(HostData::F32(v)) => {
+                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                    }
+                    UploadSrc::SharedF32(v) => {
+                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                    }
+                };
+                match res {
+                    Ok(buf) => {
+                        buffers.insert(id, Buffer { buf, dtype });
+                        done.complete();
+                    }
+                    Err(e) => done.fail(format!("upload: {e}")),
+                }
+            }
+            QueueCmd::Execute {
+                exec,
+                args,
+                out,
+                out_dtype,
+                deps,
+                done,
+            } => {
+                // cross-queue dependencies: block this in-order queue
+                let mut dep_err = None;
+                for d in &deps {
+                    if let Err(e) = d.wait(Duration::from_secs(300)) {
+                        dep_err = Some(e);
+                        break;
+                    }
+                }
+                if let Some(e) = dep_err {
+                    done.fail(format!("dependency failed: {e}"));
+                    continue;
+                }
+                let Some(exe) = execs.get(&exec) else {
+                    done.fail(format!("executable {exec:?} not compiled on this device"));
+                    continue;
+                };
+                let mut arg_bufs = Vec::with_capacity(args.len());
+                let mut missing = None;
+                for a in &args {
+                    match buffers.get(a) {
+                        Some(b) => arg_bufs.push(&b.buf),
+                        None => {
+                            missing = Some(*a);
+                            break;
+                        }
+                    }
+                }
+                if let Some(a) = missing {
+                    done.fail(format!("buffer {a} not resident on device"));
+                    continue;
+                }
+                let t0 = Instant::now();
+                match exe.execute_b::<&xla::PjRtBuffer>(&arg_bufs) {
+                    Ok(mut res) => {
+                        let real = t0.elapsed();
+                        stats.execs.fetch_add(1, Ordering::Relaxed);
+                        stats
+                            .exec_ns
+                            .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
+                        if let Some(p) = &pad {
+                            p.pad_for(p.compute_pad(real));
+                        }
+                        let buf = res.remove(0).remove(0);
+                        buffers.insert(
+                            out,
+                            Buffer {
+                                buf,
+                                dtype: out_dtype,
+                            },
+                        );
+                        done.complete();
+                    }
+                    Err(e) => done.fail(format!("execute {exec}: {e}")),
+                }
+            }
+            QueueCmd::Download { id, and_then } => {
+                let res = match buffers.get(&id) {
+                    Some(b) => download_buffer(b).map_err(|e| e.to_string()),
+                    None => Err(format!("buffer {id} not resident on device")),
+                };
+                if let Ok(d) = &res {
+                    stats.downloads.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .download_bytes
+                        .fetch_add(d.bytes() as u64, Ordering::Relaxed);
+                    if let Some(p) = &pad {
+                        p.pad_for(p.transfer_pad(d.bytes()));
+                    }
+                }
+                and_then(res);
+            }
+            QueueCmd::Free { id } => {
+                buffers.remove(&id);
+            }
+            QueueCmd::Barrier { done } => done.complete(),
+            QueueCmd::Stop => break,
+        }
+    }
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    path: &std::path::Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn download_buffer(b: &Buffer) -> Result<HostData> {
+    let lit = b.buf.to_literal_sync()?;
+    Ok(match b.dtype {
+        Dtype::U32 => HostData::U32(lit.to_vec::<u32>()?),
+        Dtype::F32 => HostData::F32(lit.to_vec::<f32>()?),
+    })
+}

@@ -1,0 +1,211 @@
+//! Completion events: the OpenCL `cl_event` analog (paper Listing 4).
+//!
+//! Commands on a device queue produce an [`Event`]; other commands may list
+//! events as dependencies, and callbacks can be attached
+//! (`clSetEventCallback`) — which is how the actor facade turns kernel
+//! completion into a response message without blocking any scheduler thread.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+type Callback = Box<dyn FnOnce(&Result<(), String>) + Send>;
+
+#[derive(Default)]
+struct State {
+    done: bool,
+    error: Option<String>,
+    callbacks: Vec<Callback>,
+    /// Timing of the producing command (Fig 5: enqueue -> completion).
+    enqueued_at: Option<Instant>,
+    completed_at: Option<Instant>,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// A shareable completion event.
+#[derive(Clone)]
+pub struct Event {
+    inner: Arc<Inner>,
+}
+
+impl Default for Event {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Event {
+    pub fn new() -> Event {
+        Event {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State::default()),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// An event that is already complete (for constant/ready inputs).
+    pub fn ready() -> Event {
+        let e = Event::new();
+        e.complete();
+        e
+    }
+
+    pub fn mark_enqueued(&self) {
+        self.inner.state.lock().unwrap().enqueued_at = Some(Instant::now());
+    }
+
+    /// Signal successful completion; fires callbacks in registration order.
+    pub fn complete(&self) {
+        self.finish(Ok(()))
+    }
+
+    /// Signal failure.
+    pub fn fail(&self, why: impl Into<String>) {
+        self.finish(Err(why.into()))
+    }
+
+    fn finish(&self, result: Result<(), String>) {
+        let callbacks = {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.done {
+                return;
+            }
+            st.done = true;
+            st.completed_at = Some(Instant::now());
+            st.error = result.as_ref().err().cloned();
+            std::mem::take(&mut st.callbacks)
+        };
+        self.inner.cv.notify_all();
+        let res = self.result_now();
+        for cb in callbacks {
+            cb(&res);
+        }
+    }
+
+    fn result_now(&self) -> Result<(), String> {
+        let st = self.inner.state.lock().unwrap();
+        match &st.error {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.inner.state.lock().unwrap().done
+    }
+
+    /// Attach a completion callback; fires immediately if already done.
+    pub fn on_complete<F>(&self, f: F)
+    where
+        F: FnOnce(&Result<(), String>) + Send + 'static,
+    {
+        let run_now = {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.done {
+                true
+            } else {
+                st.callbacks.push(Box::new(f));
+                return;
+            }
+        };
+        if run_now {
+            f(&self.result_now());
+        }
+    }
+
+    /// Block until complete or timeout; `Ok(())` on success.
+    pub fn wait(&self, timeout: Duration) -> Result<(), String> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        while !st.done {
+            let now = Instant::now();
+            if now >= deadline {
+                return Err("event wait timed out".to_string());
+            }
+            let (g, _) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        match &st.error {
+            Some(e) => Err(e.clone()),
+            None => Ok(()),
+        }
+    }
+
+    /// Enqueue-to-completion duration of the producing command, if both
+    /// timestamps were recorded (the Fig 5 "kernel time" measurement).
+    pub fn device_duration(&self) -> Option<Duration> {
+        let st = self.inner.state.lock().unwrap();
+        match (st.enqueued_at, st.completed_at) {
+            (Some(a), Some(b)) => Some(b.duration_since(a)),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Event(done={})", self.is_complete())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn complete_fires_callbacks_once() {
+        let e = Event::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        e.on_complete(move |r| {
+            assert!(r.is_ok());
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        e.complete();
+        e.complete(); // idempotent
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn late_callback_fires_immediately() {
+        let e = Event::ready();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        e.on_complete(move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_sees_failure() {
+        let e = Event::new();
+        let e2 = e.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            e2.fail("kernel exploded");
+        });
+        let r = e.wait(Duration::from_secs(5));
+        assert_eq!(r.unwrap_err(), "kernel exploded");
+    }
+
+    #[test]
+    fn wait_timeout() {
+        let e = Event::new();
+        assert!(e.wait(Duration::from_millis(20)).is_err());
+    }
+
+    #[test]
+    fn timing_recorded() {
+        let e = Event::new();
+        e.mark_enqueued();
+        std::thread::sleep(Duration::from_millis(5));
+        e.complete();
+        assert!(e.device_duration().unwrap() >= Duration::from_millis(4));
+    }
+}

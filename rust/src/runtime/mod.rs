@@ -1,0 +1,19 @@
+//! PJRT runtime substrate: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on per-device command-queue
+//! threads.
+//!
+//! The `xla` crate's PJRT wrappers are not `Send`, so every device owns a
+//! dedicated thread holding its `PjRtClient`, compiled executables, and
+//! device-resident buffers; all operations are commands on an in-order
+//! queue with completion events — which is *exactly* OpenCL's command-queue
+//! + event model the paper builds on (DESIGN.md §2).
+
+pub mod artifact;
+pub mod chan;
+pub mod client;
+pub mod event;
+
+pub use artifact::{ArtifactMeta, Dtype, Manifest, TensorSpec};
+pub use chan::Chan;
+pub use client::{DeviceQueue, ExecStats, HostData, QueueCmd, UploadSrc};
+pub use event::Event;

@@ -1,0 +1,15 @@
+//! Simulated device profiles: the paper evaluates on an NVIDIA Tesla C2075,
+//! an Intel Xeon Phi 5110P, and a GeForce GTX 780M — hardware this
+//! environment does not have. Per the substitution rule (DESIGN.md §2),
+//! each becomes a [`DeviceSpec`] whose [`PadModel`] injects the device's
+//! *cost structure* (dispatch latency, PCIe transfer bandwidth, relative
+//! compute speed) on top of real PJRT executions, so the heterogeneous
+//! benchmarks (Figs 7/8) reproduce the paper's qualitative behavior:
+//! crossover points, transfer-bound regimes, and scaling shapes.
+//!
+//! [`DeviceSpec`]: crate::opencl::DeviceSpec
+//! [`PadModel`]: crate::runtime::client::PadModel
+
+pub mod devices;
+
+pub use devices::{gtx_780m, tesla_c2075, xeon_phi_5110p};

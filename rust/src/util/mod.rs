@@ -1,0 +1,10 @@
+//! Substrate utilities: deterministic PRNG, a property-testing
+//! mini-framework (no crates.io proptest in this offline environment — see
+//! DESIGN.md §3), statistics for the bench harness, and a small CLI parser.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,140 @@
+//! A small property-testing framework (crates.io `proptest` is unavailable
+//! offline; see DESIGN.md §3). Deterministic seeded generation, a failure
+//! report carrying the reproducing seed, and size-based shrinking for the
+//! common case of `Vec` inputs.
+//!
+//! Used for the coordinator invariants: mailbox ordering, routing, WAH
+//! round-trips, compaction properties.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // CI-friendly default; override via CAF_OCL_PROP_CASES
+        let cases = std::env::var("CAF_OCL_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, seed: 0xCAF0 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the reproducing
+/// seed and (shrunken, when possible) input on failure.
+pub fn check<T, G, P>(cfg: PropConfig, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}): {why}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but shrinks `Vec` inputs by halving before reporting.
+pub fn check_vec<T, G, P>(cfg: PropConfig, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> Vec<T>,
+    P: FnMut(&[T]) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(why) = prop(&input) {
+            // shrink: repeatedly try dropping halves while the failure holds
+            let mut best = input.clone();
+            let mut why_best = why;
+            loop {
+                let n = best.len();
+                if n <= 1 {
+                    break;
+                }
+                let halves = [best[..n / 2].to_vec(), best[n / 2..].to_vec()];
+                let mut shrunk = false;
+                for h in halves {
+                    if let Err(w) = prop(&h) {
+                        best = h;
+                        why_best = w;
+                        shrunk = true;
+                        break;
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}): {why_best}\nshrunk input ({} elems): {best:?}",
+                best.len()
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            PropConfig { cases: 32, seed: 1 },
+            |r| r.below(100),
+            |&x| ensure(x < 100, "bound"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(
+            PropConfig { cases: 32, seed: 2 },
+            |r| r.below(100),
+            |&x| ensure(x < 50, "too big"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn vec_failures_shrink() {
+        check_vec(
+            PropConfig { cases: 8, seed: 3 },
+            |r| (0..64).map(|_| r.below(100) as u32).collect(),
+            |xs| ensure(xs.iter().all(|&x| x < 90), "found >= 90"),
+        );
+    }
+}

@@ -1,0 +1,137 @@
+//! Statistics for the bench harness: mean, standard deviation, 95%
+//! confidence intervals — the paper plots "means of 10–50 runs with error
+//! bars showing the 95% confidence intervals" (Figs 3–8).
+
+/// Summary of a sample of measurements (seconds or any unit).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub sd: f64,
+    /// Half-width of the 95% confidence interval of the mean.
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Two-sided t critical values (df -> t_{0.975}); interpolated tail.
+fn t975(df: usize) -> f64 {
+    const TABLE: [(usize, f64); 14] = [
+        (1, 12.706),
+        (2, 4.303),
+        (3, 3.182),
+        (4, 2.776),
+        (5, 2.571),
+        (6, 2.447),
+        (7, 2.365),
+        (8, 2.306),
+        (9, 2.262),
+        (10, 2.228),
+        (15, 2.131),
+        (20, 2.086),
+        (30, 2.042),
+        (60, 2.000),
+    ];
+    if df == 0 {
+        return f64::NAN;
+    }
+    for (d, t) in TABLE {
+        if df <= d {
+            return t;
+        }
+    }
+    1.96
+}
+
+/// Summarize a sample; `ci95` uses the t distribution.
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    if n == 0 {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            sd: f64::NAN,
+            ci95: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+        };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let sd = var.sqrt();
+    let ci95 = if n > 1 {
+        t975(n - 1) * sd / (n as f64).sqrt()
+    } else {
+        0.0
+    };
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Summary {
+        n,
+        mean,
+        sd,
+        ci95,
+        min,
+        max,
+    }
+}
+
+/// Ordinary least squares fit `y = a + b x`; returns `(a, b)`. Used to
+/// report slopes ("the GPU exhibits linear scaling with about half the
+/// slope", Fig 3).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let b = if den == 0.0 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constants() {
+        let s = summarize(&[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.sd, 0.0);
+        assert_eq!(s.ci95, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = summarize(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.sd - 1.0).abs() < 1e-12);
+        // t(2) = 4.303 -> ci = 4.303 / sqrt(3)
+        assert!((s.ci95 - 4.303 / 3f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_recovers_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_sample() {
+        assert!(summarize(&[]).mean.is_nan());
+    }
+}

@@ -1,0 +1,94 @@
+//! Synthetic value streams for the indexing benchmarks (Fig 3). The paper's
+//! domain is network forensics (VAST): indexed fields like ports and
+//! address bytes have skewed frequency distributions, so the generator
+//! offers uniform and Zipf-like modes.
+
+use crate::util::Rng;
+
+/// Distribution of a generated value stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ValueStream {
+    /// Uniform over `[0, cardinality)`.
+    Uniform { cardinality: u32 },
+    /// Zipf-ranked over `[0, cardinality)` with exponent `s`.
+    Zipf { cardinality: u32, s: f64 },
+    /// Runs of repeated values (favourable for fills — compression's best
+    /// case; run lengths uniform in `[1, max_run]`).
+    Runs { cardinality: u32, max_run: u32 },
+}
+
+impl ValueStream {
+    /// Generate `n` values with the stream's distribution.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        match *self {
+            ValueStream::Uniform { cardinality } => {
+                (0..n).map(|_| rng.below(cardinality as u64) as u32).collect()
+            }
+            ValueStream::Zipf { cardinality, s } => {
+                (0..n).map(|_| rng.zipf(cardinality as u64, s) as u32).collect()
+            }
+            ValueStream::Runs {
+                cardinality,
+                max_run,
+            } => {
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    let v = rng.below(cardinality as u64) as u32;
+                    let run = rng.range(1, max_run as u64 + 1) as usize;
+                    for _ in 0..run.min(n - out.len()) {
+                        out.push(v);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_range_and_deterministic() {
+        let s = ValueStream::Uniform { cardinality: 100 };
+        let a = s.generate(1000, 7);
+        let b = s.generate(1000, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v < 100));
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let s = ValueStream::Zipf {
+            cardinality: 1000,
+            s: 1.2,
+        };
+        let v = s.generate(10_000, 3);
+        let head = v.iter().filter(|&&x| x < 10).count();
+        assert!(head > 3_000);
+    }
+
+    #[test]
+    fn runs_have_requested_length() {
+        let s = ValueStream::Runs {
+            cardinality: 8,
+            max_run: 50,
+        };
+        let v = s.generate(5_000, 1);
+        assert_eq!(v.len(), 5_000);
+        // should contain some long runs
+        let mut best = 1;
+        let mut cur = 1;
+        for w in v.windows(2) {
+            if w[0] == w[1] {
+                cur += 1;
+                best = best.max(cur);
+            } else {
+                cur = 1;
+            }
+        }
+        assert!(best >= 10, "expected long runs, best={best}");
+    }
+}

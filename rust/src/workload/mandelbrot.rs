@@ -1,0 +1,102 @@
+//! Native CPU Mandelbrot (paper §5.4): renders the same inner cut
+//! `[-0.5 - 0.7375i, 0.1 - 0.1375i]` as the device kernel
+//! (`python/compile/kernels/mandelbrot.py`), bit-identically — both sides
+//! iterate in f32 with the same escape rule, so CPU/device splits can be
+//! verified by equality.
+
+/// (x0, x1, y0, y1) of the rendered region.
+pub const MANDEL_REGION: (f32, f32, f32, f32) = (-0.5, 0.1, -0.7375, -0.1375);
+
+/// Render `rows` rows starting at `y_start` of a `width x height` image;
+/// returns iteration counts row-major.
+pub fn mandelbrot_rows(
+    width: usize,
+    height: usize,
+    y_start: usize,
+    rows: usize,
+    iters: u32,
+) -> Vec<u32> {
+    let (x0, x1, y0, y1) = MANDEL_REGION;
+    let mut out = vec![0u32; rows * width];
+    for r in 0..rows {
+        let cy = y0 + (y1 - y0) * ((y_start + r) as f32) / (height as f32);
+        for c in 0..width {
+            let cx = x0 + (x1 - x0) * (c as f32) / (width as f32);
+            let mut zx = 0f32;
+            let mut zy = 0f32;
+            let mut count = 0u32;
+            for _ in 0..iters {
+                if zx * zx + zy * zy > 4.0 {
+                    break;
+                }
+                count += 1;
+                let nzx = zx * zx - zy * zy + cx;
+                zy = 2.0 * zx * zy + cy;
+                zx = nzx;
+            }
+            out[r * width + c] = count;
+        }
+    }
+    out
+}
+
+/// Multi-threaded render (the CPU actors of Fig 7 split the image in row
+/// bands; this is the equivalent dense loop for baseline timing).
+pub fn mandelbrot_rows_parallel(
+    width: usize,
+    height: usize,
+    y_start: usize,
+    rows: usize,
+    iters: u32,
+    threads: usize,
+) -> Vec<u32> {
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 || rows == 0 {
+        return mandelbrot_rows(width, height, y_start, rows, iters);
+    }
+    let mut out = vec![0u32; rows * width];
+    let band = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(band * width).enumerate() {
+            let begin = y_start + t * band;
+            let n = chunk.len() / width;
+            s.spawn(move || {
+                let part = mandelbrot_rows(width, height, begin, n, iters);
+                chunk.copy_from_slice(&part);
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_bounded() {
+        let img = mandelbrot_rows(32, 32, 0, 32, 20);
+        assert_eq!(img.len(), 32 * 32);
+        assert!(img.iter().all(|&c| c <= 20));
+        // the cut contains both interior and escaping points
+        assert!(img.iter().any(|&c| c == 20));
+        assert!(img.iter().any(|&c| c < 20));
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let a = mandelbrot_rows(64, 64, 8, 40, 30);
+        let b = mandelbrot_rows_parallel(64, 64, 8, 40, 30, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn chunks_tile_image() {
+        let whole = mandelbrot_rows(16, 32, 0, 32, 15);
+        let mut tiled = Vec::new();
+        for y in (0..32).step_by(8) {
+            tiled.extend(mandelbrot_rows(16, 32, y, 8, 15));
+        }
+        assert_eq!(whole, tiled);
+    }
+}

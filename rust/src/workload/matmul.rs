@@ -1,0 +1,50 @@
+//! Native CPU square matmul — the host-side comparator for the overhead
+//! benches (the paper's kernels compute in f32; so do we).
+
+/// `a @ b` for row-major `n x n` f32 matrices (ikj loop order for cache
+/// friendliness; good enough as a baseline, not a BLAS).
+pub fn matmul_naive(a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut out = vec![0f32; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity() {
+        let n = 16;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut r = Rng::new(5);
+        let a = r.fill_f32(n * n);
+        assert_eq!(matmul_naive(&a, &eye, n), a);
+        assert_eq!(matmul_naive(&eye, &a, n), a);
+    }
+
+    #[test]
+    fn small_known_product() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let got = matmul_naive(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2);
+        assert_eq!(got, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Benchmark workloads: native CPU implementations (the "CPU side" of the
+//! heterogeneous benchmarks and the baselines of Figs 3/7/8) plus synthetic
+//! data generators.
+
+pub mod gen;
+pub mod mandelbrot;
+pub mod matmul;
+
+pub use gen::ValueStream;
+pub use mandelbrot::{mandelbrot_rows, mandelbrot_rows_parallel, MANDEL_REGION};
+pub use matmul::matmul_naive;

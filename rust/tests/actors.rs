@@ -1,0 +1,363 @@
+//! Integration tests for the CAF-like actor substrate: spawning, messaging,
+//! request/response, behavior changes, monitors/links, composition,
+//! panic isolation, timeouts.
+
+use caf_ocl::actor::*;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(5);
+
+fn sys() -> ActorSystem {
+    ActorSystem::new(SystemConfig::default().with_threads(4))
+}
+
+#[test]
+fn ping_pong_request_response() {
+    let sys = sys();
+    let adder = sys.spawn(|_| {
+        Behavior::new().on(|_ctx, &(a, b): &(i32, i32)| reply(a + b))
+    });
+    let me = sys.scoped();
+    let r: i32 = me.request(&adder, (20, 22)).receive(T).unwrap();
+    assert_eq!(r, 42);
+    sys.shutdown();
+}
+
+#[test]
+fn typed_dispatch_picks_matching_handler() {
+    let sys = sys();
+    let poly = sys.spawn(|_| {
+        Behavior::new()
+            .on(|_ctx, &x: &i32| reply(x * 2))
+            .on(|_ctx, s: &String| reply(format!("<{s}>")))
+    });
+    let me = sys.scoped();
+    assert_eq!(me.request(&poly, 21i32).receive::<i32>(T).unwrap(), 42);
+    assert_eq!(
+        me.request(&poly, "hi".to_string())
+            .receive::<String>(T)
+            .unwrap(),
+        "<hi>"
+    );
+    sys.shutdown();
+}
+
+#[test]
+fn void_handler_sends_unit_reply() {
+    let sys = sys();
+    let hits = Arc::new(AtomicUsize::new(0));
+    let h = hits.clone();
+    let sink = sys.spawn(move |_| {
+        Behavior::new().on(move |_ctx, _: &u32| {
+            h.fetch_add(1, Ordering::SeqCst);
+            no_reply()
+        })
+    });
+    let me = sys.scoped();
+    let r = me.request(&sink, 7u32).receive_msg(T).unwrap();
+    assert!(r.is::<caf_ocl::actor::message::UnitReply>());
+    assert_eq!(hits.load(Ordering::SeqCst), 1);
+    sys.shutdown();
+}
+
+#[test]
+fn request_to_dead_actor_errors() {
+    let sys = sys();
+    let quitter = sys.spawn(|_| {
+        Behavior::new().on(|ctx, _: &u32| {
+            ctx.quit(ExitReason::Normal);
+            no_reply()
+        })
+    });
+    let me = sys.scoped();
+    let _ = me.request(&quitter, 1u32).receive_msg(T).unwrap();
+    // actor is now dead; the next request must produce an error
+    std::thread::sleep(Duration::from_millis(50));
+    let err = me.request(&quitter, 2u32).receive_msg(T);
+    assert!(err.is_err(), "expected error, got {err:?}");
+    sys.shutdown();
+}
+
+#[test]
+fn behavior_change_unstashes() {
+    let sys = sys();
+    // starts only understanding `Go`, stashes u32s, then switches
+    #[derive(Clone, Copy)]
+    struct Go;
+    let actor = sys.spawn(|_| {
+        Behavior::new().on(move |ctx, _: &Go| {
+            ctx.become_(Behavior::new().on(|_ctx, &x: &u32| reply(x + 1)));
+            no_reply()
+        })
+    });
+    let me = sys.scoped();
+    let pending = me.request(&actor, 10u32); // stashed: no handler yet
+    std::thread::sleep(Duration::from_millis(50));
+    me.send(&actor, Go);
+    // after the behavior change the stashed request is replayed
+    assert_eq!(pending.receive::<u32>(T).unwrap(), 11);
+    sys.shutdown();
+}
+
+#[test]
+fn monitor_receives_down() {
+    let sys = sys();
+    let victim = sys.spawn(|_| {
+        Behavior::new().on(|ctx, _: &u32| {
+            ctx.quit(ExitReason::Error("boom".into()));
+            no_reply()
+        })
+    });
+    let (tx, rx) = std::sync::mpsc::channel::<Down>();
+    let v2 = victim.clone();
+    let _watcher = sys.spawn(move |ctx| {
+        ctx.monitor(&v2);
+        Behavior::new().on(move |_ctx, d: &Down| {
+            tx.send(d.clone()).unwrap();
+            no_reply()
+        })
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    let me = sys.scoped();
+    me.send(&victim, 1u32);
+    let down = rx.recv_timeout(T).unwrap();
+    assert_eq!(down.source, victim.id());
+    assert_eq!(down.reason, ExitReason::Error("boom".into()));
+    sys.shutdown();
+}
+
+#[test]
+fn link_propagates_abnormal_exit() {
+    let sys = sys();
+    let a = sys.spawn(|_| {
+        Behavior::new().on(|ctx, _: &u32| {
+            ctx.quit(ExitReason::Error("die".into()));
+            no_reply()
+        })
+    });
+    let a2 = a.clone();
+    let b = sys.spawn(move |ctx| {
+        ctx.link_to(&a2);
+        Behavior::new().on(|_ctx, &x: &i64| reply(x))
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    let me = sys.scoped();
+    me.send(&a, 1u32);
+    std::thread::sleep(Duration::from_millis(100));
+    // b should have died with its link partner
+    let err = me.request(&b, 5i64).receive_msg(T);
+    assert!(err.is_err(), "linked actor should be dead, got {err:?}");
+    sys.shutdown();
+}
+
+#[test]
+fn trapped_exit_is_delivered_as_message() {
+    let sys = sys();
+    let a = sys.spawn(|_| {
+        Behavior::new().on(|ctx, _: &u32| {
+            ctx.quit(ExitReason::Error("die".into()));
+            no_reply()
+        })
+    });
+    let (tx, rx) = std::sync::mpsc::channel::<Exit>();
+    let a2 = a.clone();
+    let _b = sys.spawn(move |ctx| {
+        ctx.trap_exit(true);
+        ctx.link_to(&a2);
+        Behavior::new().on(move |_ctx, e: &Exit| {
+            tx.send(e.clone()).unwrap();
+            no_reply()
+        })
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    sys.scoped().send(&a, 1u32);
+    let exit = rx.recv_timeout(T).unwrap();
+    assert_eq!(exit.reason, ExitReason::Error("die".into()));
+    sys.shutdown();
+}
+
+#[test]
+fn panicking_handler_terminates_actor_not_system() {
+    let sys = sys();
+    let bomb = sys.spawn(|_| {
+        Behavior::new().on(|_ctx, _: &u32| -> Reply { panic!("kaboom") })
+    });
+    let me = sys.scoped();
+    let r = me.request(&bomb, 1u32).receive_msg(T);
+    // either the drained-request error or a broken-promise style error
+    assert!(r.is_err());
+    // the system still works
+    let ok = sys.spawn(|_| Behavior::new().on(|_ctx, &x: &u32| reply(x)));
+    assert_eq!(me.request(&ok, 9u32).receive::<u32>(T).unwrap(), 9);
+    sys.shutdown();
+}
+
+#[test]
+fn request_timeout_fires() {
+    let sys = sys();
+    let black_hole = sys.spawn(|_| {
+        Behavior::new().on(|ctx, _: &u32| {
+            let _silent = ctx.make_promise();
+            // deliberately leak the request by delivering nothing and
+            // keeping the promise alive forever
+            std::mem::forget(_silent);
+            Reply::Promised
+        })
+    });
+    let (tx, rx) = std::sync::mpsc::channel::<bool>();
+    let bh = black_hole.clone();
+    let _asker = sys.spawn(move |ctx| {
+        let tx = tx.clone();
+        ctx.request(&bh, 1u32)
+            .with_timeout(Duration::from_millis(50))
+            .then(move |_ctx, res| {
+                tx.send(res.is_err()).unwrap();
+            });
+        Behavior::new()
+    });
+    assert!(rx.recv_timeout(T).unwrap(), "timeout must surface as error");
+    sys.shutdown();
+}
+
+#[test]
+fn composition_chains_two_actors() {
+    let sys = sys();
+    let add_one = sys.spawn(|_| Behavior::new().on(|_c, &x: &i32| reply(x + 1)));
+    let double = sys.spawn(|_| Behavior::new().on(|_c, &x: &i32| reply(x * 2)));
+    // double ∘ add_one : x -> (x+1)*2
+    let composed = compose(&sys, double, add_one);
+    let me = sys.scoped();
+    assert_eq!(me.request(&composed, 20i32).receive::<i32>(T).unwrap(), 42);
+    sys.shutdown();
+}
+
+#[test]
+fn pipeline_chains_many() {
+    let sys = sys();
+    let stages: Vec<ActorRef> = (1..=4)
+        .map(|k| {
+            sys.spawn(move |_| Behavior::new().on(move |_c, &x: &i64| reply(x + k)))
+        })
+        .collect();
+    let p = pipeline(&sys, &stages);
+    let me = sys.scoped();
+    // 0 + 1 + 2 + 3 + 4
+    assert_eq!(me.request(&p, 0i64).receive::<i64>(T).unwrap(), 10);
+    sys.shutdown();
+}
+
+#[test]
+fn composition_propagates_errors() {
+    let sys = sys();
+    let fine = sys.spawn(|_| Behavior::new().on(|_c, &x: &i32| reply(x)));
+    let broken = sys.spawn(|_| {
+        Behavior::new().on(|_c, _: &i32| reply_msg(Message::new(ErrorMsg::new("stage failed"))))
+    });
+    let composed = compose(&sys, fine, broken);
+    let me = sys.scoped();
+    let r = me.request(&composed, 1i32).receive_msg(T);
+    assert!(r.is_err());
+    assert!(r.unwrap_err().reason.contains("stage failed"));
+    sys.shutdown();
+}
+
+#[test]
+fn delegation_forwards_original_requester() {
+    let sys = sys();
+    let worker = sys.spawn(|_| Behavior::new().on(|_c, &x: &u32| reply(x * 10)));
+    let w2 = worker.clone();
+    let front = sys.spawn(move |_| {
+        let w = w2.clone();
+        Behavior::new().on(move |ctx, &x: &u32| {
+            ctx.delegate(&w, Message::new(x + 1));
+            Reply::Promised
+        })
+    });
+    let me = sys.scoped();
+    // front delegates to worker: (4+1)*10
+    assert_eq!(me.request(&front, 4u32).receive::<u32>(T).unwrap(), 50);
+    sys.shutdown();
+}
+
+#[test]
+fn spawn_storm_and_fanin() {
+    let sys = sys();
+    let n = 500usize;
+    let counter = Arc::new(AtomicUsize::new(0));
+    let me = sys.scoped();
+    let mut workers = Vec::new();
+    for i in 0..n {
+        let c = counter.clone();
+        workers.push(sys.spawn(move |_| {
+            let c = c.clone();
+            Behavior::new().on(move |_ctx, &x: &usize| {
+                c.fetch_add(1, Ordering::SeqCst);
+                reply(x + i)
+            })
+        }));
+    }
+    let pending: Vec<_> = workers
+        .iter()
+        .map(|w| me.request(w, 1000usize))
+        .collect();
+    let mut sum = 0usize;
+    for p in pending {
+        sum += p.receive::<usize>(T).unwrap();
+    }
+    assert_eq!(counter.load(Ordering::SeqCst), n);
+    assert_eq!(sum, n * 1000 + n * (n - 1) / 2);
+    sys.shutdown();
+}
+
+#[test]
+fn registry_roundtrip() {
+    let sys = sys();
+    let a = sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u8| reply(x)),
+        SpawnOptions::named("echo"),
+    );
+    let found = sys.registry().get("echo").unwrap();
+    assert_eq!(found.id(), a.id());
+    assert!(sys.registry().get("nope").is_none());
+    sys.shutdown();
+}
+
+#[test]
+fn lazy_actors_initialize_on_first_message() {
+    let sys = sys();
+    let initialized = Arc::new(AtomicUsize::new(0));
+    let i2 = initialized.clone();
+    let lazy = sys.spawn_opts(
+        move |_ctx| {
+            i2.fetch_add(1, Ordering::SeqCst);
+            Behavior::new().on(|_c, &x: &u32| reply(x))
+        },
+        SpawnOptions::lazy(),
+    );
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(initialized.load(Ordering::SeqCst), 0, "must not init eagerly");
+    let me = sys.scoped();
+    assert_eq!(me.request(&lazy, 5u32).receive::<u32>(T).unwrap(), 5);
+    assert_eq!(initialized.load(Ordering::SeqCst), 1);
+    sys.shutdown();
+}
+
+#[test]
+fn sequential_state_via_move_closure() {
+    let sys = sys();
+    // actors can hold state in their handler closures
+    let counter_actor = sys.spawn(|_| {
+        let mut count = 0u64;
+        Behavior::new().on(move |_c, _: &()| {
+            count += 1;
+            reply(count)
+        })
+    });
+    let me = sys.scoped();
+    for expect in 1..=10u64 {
+        assert_eq!(me.request(&counter_actor, ()).receive::<u64>(T).unwrap(), expect);
+    }
+    sys.shutdown();
+}

@@ -1,0 +1,219 @@
+//! Integration tests: OpenCL actors end-to-end through the actor system —
+//! value round-trips, mem_ref pipelines, composition, error paths.
+//! Requires artifacts (`make artifacts`); tests no-op gracefully otherwise.
+
+use caf_ocl::actor::*;
+use caf_ocl::opencl::*;
+use std::sync::Arc;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(60);
+
+fn system_with_opencl() -> Option<(ActorSystem, Arc<Manager>)> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return None;
+    }
+    let sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+    let mgr = Manager::load(&sys);
+    Some((sys, mgr))
+}
+
+fn teardown(sys: ActorSystem, mgr: Arc<Manager>) {
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn matmul_value_roundtrip() {
+    // paper Listing 2: spawn, request two matrices, receive the product
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let n = 64usize;
+    let worker = mgr.spawn_simple("matmul_64", Mode::Val, Mode::Val).unwrap();
+    let mut eye = vec![0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 31) as f32).collect();
+    let me = sys.scoped();
+    let out: Vec<f32> = me.request(&worker, (a.clone(), eye)).receive(T).unwrap();
+    assert_eq!(out, a);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn empty_kernel_roundtrip_and_stats() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let stats = Arc::new(FacadeStats::default());
+    let program = mgr.create_kernel_program("empty_1024").unwrap();
+    let worker = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "empty_1024")
+                .range(NdRange::d1(1024))
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .with_stats(stats.clone()),
+        )
+        .unwrap();
+    let me = sys.scoped();
+    let data: Vec<u32> = (0..1024).collect();
+    let out: Vec<u32> = me.request(&worker, data.clone()).receive(T).unwrap();
+    assert_eq!(out, data);
+    assert_eq!(
+        stats.launched.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    assert!(stats.device_ns.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn ref_output_returns_memref_before_read() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let worker = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Ref).unwrap();
+    let me = sys.scoped();
+    let data: Vec<u32> = (0..1024).rev().collect();
+    let r: MemRef = me.request(&worker, data.clone()).receive(T).unwrap();
+    assert_eq!(r.len(), 1024);
+    assert_eq!(r.read_u32(T).unwrap(), data);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn memref_feeds_next_stage() {
+    // two chained empty kernels: Val -> Ref -> Val
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let s1 = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Ref).unwrap();
+    let s2 = mgr.spawn_simple("empty_1024", Mode::Ref, Mode::Val).unwrap();
+    let me = sys.scoped();
+    let data: Vec<u32> = (0..1024).map(|i| i * 3).collect();
+    let r: MemRef = me.request(&s1, data.clone()).receive(T).unwrap();
+    let out: Vec<u32> = me.request(&s2, r).receive(T).unwrap();
+    assert_eq!(out, data);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn composed_pipeline_stays_on_device() {
+    // sort -> chunklit as a composed actor; only MemRefs travel inside
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let dev = mgr.default_device();
+    let program = mgr
+        .create_program(&dev, &["wah_sort_4096", "wah_chunklit_4096"])
+        .unwrap();
+    let (pipe, stages) = caf_ocl::opencl::stage::PipelineBuilder::new(&mgr, program)
+        .stage("wah_sort_4096")
+        .stage("wah_chunklit_4096")
+        .collect()
+        .build()
+        .unwrap();
+    assert_eq!(stages.len(), 2);
+    let mut vals = vec![0u32; 4096];
+    for (i, v) in vals.iter_mut().enumerate() {
+        *v = (i as u32).wrapping_mul(2654435761) % 1023;
+    }
+    let me = sys.scoped();
+    let out: Vec<u32> = me.request(&pipe, vals).receive(T).unwrap();
+    assert_eq!(out.len(), 8192);
+    let cids = &out[..4096];
+    assert!(cids.windows(2).all(|w| w[0] <= w[1]));
+    teardown(sys, mgr);
+}
+
+#[test]
+fn wrong_arity_is_an_error() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let worker = mgr.spawn_simple("matmul_64", Mode::Val, Mode::Val).unwrap();
+    let me = sys.scoped();
+    // one matrix instead of two
+    let r = me
+        .request(&worker, vec![0f32; 64 * 64])
+        .receive_msg(T);
+    assert!(r.is_err());
+    assert!(r.unwrap_err().reason.contains("expects 2 arguments"));
+    teardown(sys, mgr);
+}
+
+#[test]
+fn wrong_shape_is_an_error() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let worker = mgr.spawn_simple("matmul_64", Mode::Val, Mode::Val).unwrap();
+    let me = sys.scoped();
+    let r = me
+        .request(&worker, (vec![0f32; 10], vec![0f32; 10]))
+        .receive_msg(T);
+    assert!(r.is_err());
+    assert!(r.unwrap_err().reason.contains("elements"));
+    teardown(sys, mgr);
+}
+
+#[test]
+fn wrong_dtype_is_an_error() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let worker = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Val).unwrap();
+    let me = sys.scoped();
+    let r = me.request(&worker, vec![0f32; 1024]).receive_msg(T);
+    assert!(r.is_err());
+    teardown(sys, mgr);
+}
+
+#[test]
+fn unmatchable_message_is_an_error() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let worker = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Val).unwrap();
+    let me = sys.scoped();
+    let r = me.request(&worker, "hello".to_string()).receive_msg(T);
+    assert!(r.is_err());
+    teardown(sys, mgr);
+}
+
+#[test]
+fn pre_and_postprocess_functions() {
+    // paper Listing 3: custom conversion around the kernel
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    #[derive(Clone)]
+    struct Wrapped(Vec<u32>);
+    let program = mgr.create_kernel_program("empty_1024").unwrap();
+    let worker = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "empty_1024")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .preprocess(|msg| {
+                    msg.downcast_ref::<Wrapped>()
+                        .map(|w| vec![ArgValue::from(w.0.clone())])
+                })
+                .postprocess(|out, _inc| match out {
+                    ArgValue::U32(v) => Message::new(Wrapped((*v).clone())),
+                    other => Message::new(other),
+                }),
+        )
+        .unwrap();
+    let me = sys.scoped();
+    let data: Vec<u32> = (100..1124).collect();
+    let out: Wrapped = me.request(&worker, Wrapped(data.clone())).receive(T).unwrap();
+    assert_eq!(out.0, data);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn facade_is_monitorable_like_any_actor() {
+    // "an OpenCL actor is not distinguishable from any other actor"
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let worker = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Val).unwrap();
+    // monitoring a live facade works through the same interface
+    let probe = sys.scoped();
+    worker.monitor_with(probe.me());
+    // handle equality semantics hold
+    assert_eq!(worker.clone(), worker);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn default_device_selection_and_kinds() {
+    let Some((sys, mgr)) = system_with_opencl() else { return };
+    let dev = mgr.default_device();
+    assert_eq!(dev.id, 0);
+    assert_eq!(dev.kind, DeviceKind::Cpu);
+    assert!(mgr.platform().device_of_kind(DeviceKind::Gpu).is_none());
+    teardown(sys, mgr);
+}

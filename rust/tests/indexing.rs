@@ -1,0 +1,174 @@
+//! End-to-end indexing tests: the 8-stage device pipeline and the fused
+//! variant must produce word-identical indexes to the CPU oracle, and the
+//! decoded index must recover every value's positions exactly.
+
+use caf_ocl::actor::*;
+use caf_ocl::indexing::gpu_pipeline::{FusedIndexer, GpuIndexer, CARDINALITY, PAD_VALUE};
+use caf_ocl::indexing::{CpuIndexer, WahIndex};
+use caf_ocl::opencl::Manager;
+use caf_ocl::util::Rng;
+use caf_ocl::workload::ValueStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(120);
+
+fn setup() -> Option<(ActorSystem, Arc<Manager>)> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return None;
+    }
+    let sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+    let mgr = Manager::load(&sys);
+    Some((sys, mgr))
+}
+
+fn cpu_index_padded(values: &[u32], capacity: usize) -> WahIndex {
+    // the CPU oracle over the same padded stream the GPU pipeline sees,
+    // with the pad value's bitmap removed (reserved)
+    let mut padded = values.to_vec();
+    padded.resize(capacity, PAD_VALUE);
+    let mut idx = CpuIndexer::new(CARDINALITY).index(&padded);
+    // drop the pad bitmap: it is always last in the layout
+    if idx.lut[PAD_VALUE as usize] != caf_ocl::indexing::INVALID {
+        idx.words.truncate(idx.lut[PAD_VALUE as usize] as usize);
+        idx.lut[PAD_VALUE as usize] = caf_ocl::indexing::INVALID;
+        idx.n_distinct -= 1;
+    }
+    idx
+}
+
+#[test]
+fn gpu_pipeline_matches_cpu_oracle_word_for_word() {
+    let Some((sys, mgr)) = setup() else { return };
+    let gpu = GpuIndexer::build(&mgr, 0, 4096).unwrap();
+    let me = sys.scoped();
+    for seed in [1u64, 2, 3] {
+        let values = ValueStream::Uniform { cardinality: 256 }.generate(4096, seed);
+        let got = gpu.index(&me, &values, T).unwrap();
+        let want = cpu_index_padded(&values, 4096);
+        assert_eq!(got.words, want.words, "seed {seed}: words differ");
+        assert_eq!(got.lut, want.lut, "seed {seed}: lut differs");
+        assert_eq!(got.n_distinct, want.n_distinct);
+    }
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn gpu_pipeline_verifies_against_raw_values() {
+    let Some((sys, mgr)) = setup() else { return };
+    let gpu = GpuIndexer::build(&mgr, 0, 4096).unwrap();
+    let me = sys.scoped();
+    // partial fill: 3000 of 4096 slots, Zipf-skewed
+    let values = ValueStream::Zipf { cardinality: 512, s: 1.2 }.generate(3000, 9);
+    let idx = gpu.index(&me, &values, T).unwrap();
+    idx.verify(&values).unwrap();
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn fused_indexer_matches_staged_pipeline() {
+    let Some((sys, mgr)) = setup() else { return };
+    let staged = GpuIndexer::build(&mgr, 0, 4096).unwrap();
+    let fused = FusedIndexer::build(&mgr, 0, 4096).unwrap();
+    let me = sys.scoped();
+    let values = ValueStream::Runs { cardinality: 64, max_run: 40 }.generate(4096, 4);
+    let a = staged.index(&me, &values, T).unwrap();
+    let b = fused.index(&me, &values, T).unwrap();
+    assert_eq!(a.words, b.words);
+    assert_eq!(a.lut, b.lut);
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn pipeline_rejects_out_of_range_values() {
+    let Some((sys, mgr)) = setup() else { return };
+    let gpu = GpuIndexer::build(&mgr, 0, 4096).unwrap();
+    let me = sys.scoped();
+    assert!(gpu.index(&me, &[PAD_VALUE], T).is_err());
+    assert!(gpu
+        .index(&me, &vec![0u32; 5000], T)
+        .is_err(), "over capacity must fail");
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn pipeline_handles_degenerate_streams() {
+    let Some((sys, mgr)) = setup() else { return };
+    let gpu = GpuIndexer::build(&mgr, 0, 4096).unwrap();
+    let me = sys.scoped();
+    // all-same value
+    let same = vec![7u32; 4096];
+    let idx = gpu.index(&me, &same, T).unwrap();
+    idx.verify(&same).unwrap();
+    assert_eq!(idx.n_distinct, 1);
+    // single value in slot 0
+    let single = vec![3u32];
+    let idx = gpu.index(&me, &single, T).unwrap();
+    idx.verify(&single).unwrap();
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn pipeline_is_reusable_across_requests() {
+    let Some((sys, mgr)) = setup() else { return };
+    let gpu = GpuIndexer::build(&mgr, 0, 4096).unwrap();
+    let me = sys.scoped();
+    let mut rng = Rng::new(12);
+    for _ in 0..5 {
+        let n = rng.range(1, 4096) as usize;
+        let values: Vec<u32> = (0..n).map(|_| rng.below(1000) as u32).collect();
+        let idx = gpu.index(&me, &values, T).unwrap();
+        let want = cpu_index_padded(&values, 4096);
+        assert_eq!(idx.words, want.words);
+    }
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn larger_capacity_pipeline() {
+    let Some((sys, mgr)) = setup() else { return };
+    let gpu = GpuIndexer::build(&mgr, 0, 16384).unwrap();
+    let me = sys.scoped();
+    let values = ValueStream::Uniform { cardinality: 1000 }.generate(16384, 21);
+    let got = gpu.index(&me, &values, T).unwrap();
+    let want = cpu_index_padded(&values, 16384);
+    assert_eq!(got.words, want.words);
+    assert_eq!(got.lut, want.lut);
+    mgr.stop_devices();
+    sys.shutdown();
+}
+
+#[test]
+fn bitonic_sort_artifact_matches_sort_stage() {
+    // sort-stage ablation: the Pallas bitonic network must be a drop-in
+    // replacement for the lax.sort artifact (stability included)
+    use caf_ocl::runtime::*;
+    let Some((sys, mgr)) = setup() else { return };
+    let m = &mgr.platform().manifest;
+    if !m.contains("wah_bitonic_4096") {
+        sys.shutdown();
+        return;
+    }
+    let q = DeviceQueue::start("bitonic-test", None).unwrap();
+    for k in ["wah_sort_4096", "wah_bitonic_4096"] {
+        q.compile(k, m.hlo_path(m.get(k).unwrap())).wait(T).unwrap();
+    }
+    let values = ValueStream::Zipf { cardinality: 700, s: 1.3 }.generate(4096, 5);
+    let (b, e) = q.upload(HostData::U32(values));
+    let (s1, e1) = q.execute("wah_sort_4096", vec![b], Dtype::U32, vec![e.clone()]);
+    let (s2, e2) = q.execute("wah_bitonic_4096", vec![b], Dtype::U32, vec![e]);
+    e1.wait(T).unwrap();
+    e2.wait(T).unwrap();
+    let a = q.download(s1, T).unwrap().into_u32().unwrap();
+    let c = q.download(s2, T).unwrap().into_u32().unwrap();
+    assert_eq!(a, c, "bitonic and lax.sort artifacts must agree");
+    q.stop();
+    mgr.stop_devices();
+    sys.shutdown();
+}

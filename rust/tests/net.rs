@@ -1,0 +1,125 @@
+//! Network transparency tests: remote requests through proxies, the
+//! mem_ref serialization error (design option (a)), disconnect handling.
+
+use caf_ocl::actor::*;
+use caf_ocl::net::Node;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(10);
+
+#[test]
+fn remote_request_roundtrip() {
+    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let _adder = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, (a, b): &(Vec<u32>, Vec<u32>)| {
+            let sum: Vec<u32> = a.iter().zip(b).map(|(x, y)| x + y).collect();
+            reply(sum)
+        }),
+        SpawnOptions::named("adder"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "adder").unwrap();
+    assert_eq!(remote.kind(), "remote");
+
+    let me = client_sys.scoped();
+    let out: Vec<u32> = me
+        .request(&remote, (vec![1u32, 2], vec![10u32, 20]))
+        .receive(T)
+        .unwrap();
+    assert_eq!(out, vec![11, 22]);
+
+    server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn unknown_published_name_errors() {
+    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "ghost").unwrap();
+    let me = client_sys.scoped();
+    let r = me.request(&remote, 1u32).receive_msg(T);
+    assert!(r.is_err());
+    assert!(r.unwrap_err().reason.contains("ghost"));
+
+    server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn memref_cannot_cross_the_wire() {
+    // design option (a): sending a mem_ref to a remote actor raises an
+    // error at the sender instead of shipping dangling device state
+    use caf_ocl::opencl::{Manager, Mode};
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        return;
+    }
+    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let _sink = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, _: &u32| no_reply()),
+        SpawnOptions::named("sink"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let mgr = Manager::load(&client_sys);
+    let facade = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Ref).unwrap();
+    let me = client_sys.scoped();
+    let r: caf_ocl::opencl::MemRef = me
+        .request(&facade, (0..1024u32).collect::<Vec<u32>>())
+        .receive(T)
+        .unwrap();
+
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "sink").unwrap();
+    let err = me.request(&remote, r).receive_msg(T);
+    assert!(err.is_err());
+    assert!(
+        err.unwrap_err().reason.contains("cannot be serialized"),
+        "error must name the serialization restriction"
+    );
+
+    server.stop();
+    mgr.stop_devices();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn fire_and_forget_send() {
+    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let (tx, rx) = std::sync::mpsc::channel::<u32>();
+    let _probe = server_sys.spawn_opts(
+        move |_| {
+            let tx = tx.clone();
+            Behavior::new().on(move |_c, &x: &u32| {
+                tx.send(x).unwrap();
+                no_reply()
+            })
+        },
+        SpawnOptions::named("probe"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "probe").unwrap();
+    remote.send_from(None, Message::new(77u32));
+    assert_eq!(rx.recv_timeout(T).unwrap(), 77);
+
+    server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}

@@ -1,0 +1,150 @@
+//! Integration tests for the PJRT runtime substrate against real artifacts.
+//! Requires `make artifacts` to have run (skipped gracefully otherwise).
+
+use caf_ocl::runtime::*;
+use std::time::Duration;
+
+const T: Duration = Duration::from_secs(60);
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts").ok()
+}
+
+#[test]
+fn manifest_loads_and_is_complete() {
+    let Some(m) = manifest() else { return };
+    assert!(m.len() >= 50, "expected >=50 artifacts, got {}", m.len());
+    for name in ["matmul_256", "empty_1024", "wah_sort_4096", "wah_fused_4096"] {
+        assert!(m.contains(name), "missing {name}");
+    }
+    let mm = m.get("matmul_256").unwrap();
+    assert_eq!(mm.inputs.len(), 2);
+    assert_eq!(mm.output.elems(), 256 * 256);
+    assert_eq!(mm.output.dtype, Dtype::F32);
+}
+
+#[test]
+fn compile_upload_execute_download_roundtrip() {
+    let Some(m) = manifest() else { return };
+    let q = DeviceQueue::start("test", None).unwrap();
+    let meta = m.get("empty_1024").unwrap();
+    q.compile(&meta.name, m.hlo_path(meta)).wait(T).unwrap();
+    let data: Vec<u32> = (0..1024).collect();
+    let (bid, up) = q.upload(HostData::U32(data.clone()));
+    let (out, done) = q.execute(&meta.name, vec![bid], Dtype::U32, vec![up]);
+    done.wait(T).unwrap();
+    let back = q.download(out, T).unwrap().into_u32().unwrap();
+    assert_eq!(back, data);
+    q.stop();
+}
+
+#[test]
+fn buffers_chain_across_executables_on_device() {
+    // wah_sort -> wah_chunklit with the intermediate resident on device
+    let Some(m) = manifest() else { return };
+    let q = DeviceQueue::start("test2", None).unwrap();
+    for k in ["wah_sort_4096", "wah_chunklit_4096"] {
+        let meta = m.get(k).unwrap();
+        q.compile(k, m.hlo_path(meta)).wait(T).unwrap();
+    }
+    let mut vals = vec![0u32; 4096];
+    for (i, v) in vals.iter_mut().enumerate() {
+        *v = (i as u32).wrapping_mul(2654435761) % 1023;
+    }
+    let (bid, up) = q.upload(HostData::U32(vals.clone()));
+    let (sorted, e1) = q.execute("wah_sort_4096", vec![bid], Dtype::U32, vec![up]);
+    let (cl, e2) = q.execute("wah_chunklit_4096", vec![sorted], Dtype::U32, vec![e1]);
+    e2.wait(T).unwrap();
+    let out = q.download(cl, T).unwrap().into_u32().unwrap();
+    assert_eq!(out.len(), 2 * 4096);
+    // spot-check: cids must be non-decreasing (values sorted, chunks sorted)
+    let cids = &out[..4096];
+    assert!(cids.windows(2).all(|w| w[0] <= w[1]), "cids not sorted");
+    q.stop();
+}
+
+#[test]
+fn matmul_artifact_computes_identity_product() {
+    let Some(m) = manifest() else { return };
+    let q = DeviceQueue::start("test3", None).unwrap();
+    let meta = m.get("matmul_64").unwrap();
+    q.compile(&meta.name, m.hlo_path(meta)).wait(T).unwrap();
+    let n = 64usize;
+    let mut eye = vec![0f32; n * n];
+    for i in 0..n {
+        eye[i * n + i] = 1.0;
+    }
+    let a: Vec<f32> = (0..n * n).map(|i| (i % 97) as f32 * 0.25).collect();
+    let (ba, e1) = q.upload(HostData::F32(a.clone()));
+    let (be, e2) = q.upload(HostData::F32(eye));
+    let (out, done) = q.execute(&meta.name, vec![ba, be], Dtype::F32, vec![e1, e2]);
+    done.wait(T).unwrap();
+    let got = q.download(out, T).unwrap().into_f32().unwrap();
+    assert_eq!(got, a);
+    q.stop();
+}
+
+#[test]
+fn execute_unknown_kernel_fails_event() {
+    let q = DeviceQueue::start("test4", None).unwrap();
+    let (_, done) = q.execute("nope", vec![], Dtype::U32, vec![]);
+    assert!(done.wait(T).is_err());
+    q.stop();
+}
+
+#[test]
+fn freed_buffer_is_gone() {
+    let Some(m) = manifest() else { return };
+    let q = DeviceQueue::start("test5", None).unwrap();
+    let meta = m.get("empty_1024").unwrap();
+    q.compile(&meta.name, m.hlo_path(meta)).wait(T).unwrap();
+    let (bid, up) = q.upload(HostData::U32(vec![7; 1024]));
+    up.wait(T).unwrap();
+    q.free(bid);
+    let (_, done) = q.execute(&meta.name, vec![bid], Dtype::U32, vec![]);
+    assert!(done.wait(T).is_err(), "executing on freed buffer must fail");
+    q.stop();
+}
+
+#[test]
+fn pad_model_slows_down_device() {
+    use caf_ocl::runtime::client::PadModel;
+    let Some(m) = manifest() else { return };
+    let meta = m.get("empty_1024").unwrap();
+    // a "slow" simulated device: 1 MB/s transfers
+    let slow = DeviceQueue::start(
+        "slow",
+        Some(PadModel {
+            launch: Duration::from_millis(1),
+            bytes_per_sec: 1e6,
+            compute_scale: 1.0,
+            busy_wait: false,
+        }),
+    )
+    .unwrap();
+    slow.compile(&meta.name, m.hlo_path(meta)).wait(T).unwrap();
+    let t0 = std::time::Instant::now();
+    let (bid, up) = slow.upload(HostData::U32(vec![1; 1024]));
+    up.wait(T).unwrap();
+    let elapsed = t0.elapsed();
+    // 4096 bytes at 1 MB/s ≈ 4 ms + 1 ms launch
+    assert!(elapsed >= Duration::from_millis(4), "pad not applied: {elapsed:?}");
+    let _ = bid;
+    slow.stop();
+}
+
+#[test]
+fn stats_accumulate() {
+    let Some(m) = manifest() else { return };
+    let q = DeviceQueue::start("test6", None).unwrap();
+    let meta = m.get("empty_1024").unwrap();
+    q.compile(&meta.name, m.hlo_path(meta)).wait(T).unwrap();
+    let (bid, up) = q.upload(HostData::U32(vec![1; 1024]));
+    let (out, done) = q.execute(&meta.name, vec![bid], Dtype::U32, vec![up]);
+    done.wait(T).unwrap();
+    let _ = q.download(out, T).unwrap();
+    let (execs, t) = q.stats().snapshot();
+    assert_eq!(execs, 1);
+    assert!(t > Duration::ZERO);
+    q.stop();
+}
