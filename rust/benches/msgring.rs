@@ -1,0 +1,56 @@
+//! Message-ring throughput: the before/after probe for the lock-free
+//! mailbox + sharded work-stealing scheduler (PERF.md).
+//!
+//! Runs the same token ring twice — once on a faithful miniature of the
+//! seed's locked runtime (Mutex<VecDeque> mailboxes, locked injector,
+//! 10 ms condvar poll), once on the real lock-free actor system — and
+//! writes the machine-readable comparison to `BENCH_msgring.json` at the
+//! repository root.
+
+use caf_ocl::bench::{
+    full_mode, msgring_lockfree, msgring_seed_style, write_msgring_json, RingConfig,
+};
+
+fn main() {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    let cfg = if full_mode() {
+        RingConfig {
+            workers,
+            actors: 256,
+            tokens: workers * 4,
+            hops_per_token: 200_000,
+        }
+    } else {
+        RingConfig {
+            workers,
+            actors: 64,
+            tokens: workers * 2,
+            hops_per_token: 20_000,
+        }
+    };
+
+    println!("msgring: {cfg:?} ({} messages per run)", cfg.messages());
+
+    // warmup + 3 samples each, keep the best (throughput benches are
+    // noise-floor bound, max is the honest summary)
+    let mut seed = 0f64;
+    let mut lockfree = 0f64;
+    let _ = msgring_seed_style(cfg);
+    let _ = msgring_lockfree(cfg);
+    for _ in 0..3 {
+        seed = seed.max(msgring_seed_style(cfg));
+        lockfree = lockfree.max(msgring_lockfree(cfg));
+    }
+
+    println!("seed-style locked runtime : {seed:>12.0} msgs/s");
+    println!("lock-free runtime         : {lockfree:>12.0} msgs/s");
+    println!("speedup                   : {:>12.2}x", lockfree / seed.max(1e-9));
+
+    match write_msgring_json(cfg, seed, lockfree, "cargo bench --bench msgring") {
+        Ok(p) => println!("-> {}", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
+}

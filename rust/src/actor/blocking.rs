@@ -1,27 +1,54 @@
 //! Blocking (scoped) actors: thread-bound mailboxes for interacting with
 //! the actor system from ordinary threads (CAF's `scoped_actor`), used by
 //! examples, tests, and benches (`request(...).receive(...)`).
+//!
+//! Delivery into a scoped actor is lock-free (Vyukov MPSC push; the
+//! sender only touches a mutex when the receiver is actually asleep, in
+//! which case a wake syscall is unavoidable anyway). The receiving side
+//! serializes scans with a consumer mutex that is **released while
+//! waiting** (`Condvar::wait_timeout` + `notify_all`), so several threads
+//! sharing one scoped actor can each make progress; out-of-order traffic
+//! is buffered and replayed in arrival order.
 
 use super::envelope::{ActorId, Envelope, MessageId};
 use super::message::Message;
 use super::monitor::ErrorMsg;
 use super::system::ActorSystem;
 use super::{AbstractActor, ActorRef};
+use crate::concurrent::CountedQueue;
 use std::any::Any;
 use std::collections::VecDeque;
+use std::sync::atomic::{fence, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 struct SharedBox {
     id: ActorId,
-    queue: Mutex<VecDeque<Envelope>>,
-    cv: Condvar,
+    /// Producer side: lock-free MPSC delivery.
+    inbox: CountedQueue<Envelope>,
+    /// Number of receivers committed to waiting (Dekker flag: senders
+    /// only take `buffered` + notify when this is non-zero).
+    waiting: AtomicUsize,
+    /// Consumer side: serializes receivers; holds envelopes popped while
+    /// scanning for a specific response. Released during waits.
+    buffered: Mutex<VecDeque<Envelope>>,
+    wakeup: Condvar,
 }
 
 impl AbstractActor for SharedBox {
     fn enqueue(&self, env: Envelope) {
-        self.queue.lock().unwrap().push_back(env);
-        self.cv.notify_all();
+        // scoped inboxes are never closed while reachable
+        let _ = self.inbox.push(env);
+        // Dekker handshake with the receiver's announce-then-recheck: if
+        // the receiver missed this envelope, it has already bumped
+        // `waiting`, so we see it here and deliver the wakeup.
+        fence(Ordering::SeqCst);
+        if self.waiting.load(Ordering::SeqCst) > 0 {
+            // taking the consumer mutex orders this notify after the
+            // receiver's wait registration — no lost wakeup
+            let _g = self.buffered.lock().unwrap();
+            self.wakeup.notify_all();
+        }
     }
 
     fn id(&self) -> ActorId {
@@ -55,8 +82,10 @@ impl ScopedActor {
             system,
             inbox: Arc::new(SharedBox {
                 id,
-                queue: Mutex::new(VecDeque::new()),
-                cv: Condvar::new(),
+                inbox: CountedQueue::new(),
+                waiting: AtomicUsize::new(0),
+                buffered: Mutex::new(VecDeque::new()),
+                wakeup: Condvar::new(),
             }),
         }
     }
@@ -91,49 +120,64 @@ impl ScopedActor {
 
     /// Pop the next envelope, blocking up to `timeout`.
     pub fn receive_any(&self, timeout: Duration) -> Option<Envelope> {
-        let deadline = Instant::now() + timeout;
-        let mut q = self.inbox.queue.lock().unwrap();
-        loop {
-            if let Some(e) = q.pop_front() {
-                return Some(e);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (q2, _) = self
-                .inbox
-                .cv
-                .wait_timeout(q, deadline - now)
-                .unwrap();
-            q = q2;
-        }
+        self.receive_where(timeout, |_| true)
     }
 
     /// Wait for the response correlated to `mid`, buffering (and keeping)
     /// any unrelated traffic that arrives meanwhile.
     fn await_response(&self, mid: MessageId, timeout: Duration) -> Result<Message, ErrorMsg> {
         let want = mid.response_for();
+        match self.receive_where(timeout, |e| e.mid == want) {
+            Some(env) => match env.msg.downcast_ref::<ErrorMsg>() {
+                Some(e) => Err(e.clone()),
+                None => Ok(env.msg),
+            },
+            None => Err(ErrorMsg::new("request timed out")),
+        }
+    }
+
+    /// Core receive loop: return the first envelope matching `pred`
+    /// (buffered traffic first, in arrival order), waiting up to
+    /// `timeout`. Non-matching envelopes stay buffered.
+    fn receive_where<F>(&self, timeout: Duration, pred: F) -> Option<Envelope>
+    where
+        F: Fn(&Envelope) -> bool,
+    {
+        let sb = &*self.inbox;
         let deadline = Instant::now() + timeout;
-        let mut q = self.inbox.queue.lock().unwrap();
+        let mut buf = sb.buffered.lock().unwrap();
         loop {
-            if let Some(pos) = q.iter().position(|e| e.mid == want) {
-                let env = q.remove(pos).unwrap();
-                return match env.msg.downcast_ref::<ErrorMsg>() {
-                    Some(e) => Err(e.clone()),
-                    None => Ok(env.msg),
-                };
+            if let Some(pos) = buf.iter().position(|e| pred(e)) {
+                return buf.remove(pos);
+            }
+            // drain fresh arrivals; inbox pops are MPSC-single-consumer,
+            // which holding `buffered` guarantees
+            let mut matched = None;
+            while let Some(e) = sb.inbox.pop() {
+                if matched.is_none() && pred(&e) {
+                    matched = Some(e);
+                } else {
+                    buf.push_back(e);
+                }
+            }
+            if matched.is_some() {
+                // other waiters may now match something we just buffered
+                sb.wakeup.notify_all();
+                return matched;
             }
             let now = Instant::now();
             if now >= deadline {
-                return Err(ErrorMsg::new("request timed out"));
+                return None;
             }
-            let (q2, _) = self
-                .inbox
-                .cv
-                .wait_timeout(q, deadline - now)
-                .unwrap();
-            q = q2;
+            // announce, then re-check the inbox before sleeping (the
+            // producer pushes, fences, then reads `waiting`)
+            sb.waiting.fetch_add(1, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            if sb.inbox.is_empty() {
+                let (g, _) = sb.wakeup.wait_timeout(buf, deadline - now).unwrap();
+                buf = g;
+            }
+            sb.waiting.fetch_sub(1, Ordering::SeqCst);
         }
     }
 }

@@ -105,7 +105,19 @@ impl ActorCell {
     }
 
     /// Run up to `throughput` messages; called by a scheduler worker.
-    pub(crate) fn resume(self: &Arc<Self>, throughput: usize) -> ResumeResult {
+    ///
+    /// Messages are drained from the mailbox in one batch (a single state
+    /// transition on the lock-free mailbox) into `batch`, a worker-owned
+    /// reusable buffer — no per-slice allocation. System messages arriving
+    /// mid-batch still overtake the rest of the snapshot (one cheap
+    /// `try_dequeue_system` probe per processed message), and if the actor
+    /// terminates mid-batch the not-yet-processed remainder is bounced
+    /// exactly like `Mailbox::close` bounces queued requests.
+    pub(crate) fn resume(
+        self: &Arc<Self>,
+        throughput: usize,
+        batch: &mut Vec<Envelope>,
+    ) -> ResumeResult {
         if self
             .state
             .compare_exchange(SCHEDULED, RUNNING, Ordering::AcqRel, Ordering::Acquire)
@@ -113,23 +125,23 @@ impl ActorCell {
         {
             return ResumeResult::Done; // already closed
         }
-        for _ in 0..throughput {
-            let Some(env) = self.mailbox.dequeue() else { break };
-            let me = self.clone();
-            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                me.process(env);
-            }));
-            if let Err(p) = res {
-                let what = panic_to_string(&p);
-                self.terminate(ExitReason::Panic(what));
+        batch.clear();
+        self.mailbox.dequeue_batch(throughput, batch);
+        let mut it = batch.drain(..);
+        while let Some(env) = it.next() {
+            // system-priority overtake across the batch snapshot
+            while let Some(sys) = self.mailbox.try_dequeue_system() {
+                self.process_guarded(sys);
+                if self.state.load(Ordering::Acquire) == CLOSED {
+                    return self.bounce_remainder(it);
+                }
             }
+            self.process_guarded(env);
             if self.state.load(Ordering::Acquire) == CLOSED {
-                return ResumeResult::Done;
+                return self.bounce_remainder(it);
             }
         }
-        if self.state.load(Ordering::Acquire) == CLOSED {
-            return ResumeResult::Done;
-        }
+        drop(it);
         // leave RUNNING: either back to IDLE (and re-check for races with
         // concurrent enqueues) or straight to SCHEDULED when work remains.
         if self.mailbox.is_empty() {
@@ -142,6 +154,37 @@ impl ActorCell {
             self.state.store(SCHEDULED, Ordering::Release);
             ResumeResult::Reschedule
         }
+    }
+
+    /// Process one envelope with panic isolation (a panicking handler
+    /// terminates the actor, not the worker).
+    fn process_guarded(self: &Arc<Self>, env: Envelope) {
+        let me = self.clone();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            me.process(env);
+        }));
+        if let Err(p) = res {
+            let what = panic_to_string(&p);
+            self.terminate(ExitReason::Panic(what));
+        }
+    }
+
+    /// The actor died mid-batch: dead-letter the rest of the drained
+    /// snapshot so requesters get an error instead of silence.
+    fn bounce_remainder(
+        self: &Arc<Self>,
+        it: std::vec::Drain<'_, Envelope>,
+    ) -> ResumeResult {
+        let me_ref = self.self_ref();
+        for rest in it {
+            respond(
+                &rest.sender,
+                rest.mid,
+                me_ref.clone(),
+                Message::new(ErrorMsg::new("actor terminated")),
+            );
+        }
+        ResumeResult::Done
     }
 
     fn process(self: &Arc<Self>, env: Envelope) {
@@ -238,10 +281,24 @@ impl ActorCell {
         if changed {
             let stash = std::mem::take(&mut guard.stash);
             for e in stash.into_iter().rev() {
-                self.mailbox.push_front(e);
+                self.unstash(e);
             }
         }
         self.apply_transitions(guard, None, exit);
+    }
+
+    /// Replay one stashed envelope at the front of the mailbox; if the
+    /// mailbox closed meanwhile, route it to dead-letters like `close()`
+    /// does (the seed silently dropped it).
+    fn unstash(self: &Arc<Self>, env: Envelope) {
+        if let Err(env) = self.mailbox.push_front(env) {
+            respond(
+                &env.sender,
+                env.mid,
+                self.self_ref(),
+                Message::new(ErrorMsg::new("actor terminated")),
+            );
+        }
     }
 
     fn apply_transitions(
@@ -254,7 +311,7 @@ impl ActorCell {
             guard.behavior = Some(b);
             let stash = std::mem::take(&mut guard.stash);
             for e in stash.into_iter().rev() {
-                self.mailbox.push_front(e);
+                self.unstash(e);
             }
         }
         drop(guard);

@@ -1,33 +1,73 @@
-//! Cooperative work-stealing scheduler (CAF §2.1: "actors are implemented
-//! as sub-thread entities and run in a cooperative scheduler using
-//! work-stealing").
+//! Sharded cooperative work-stealing scheduler (CAF §2.1: "actors are
+//! implemented as sub-thread entities and run in a cooperative scheduler
+//! using work-stealing") — lock-free on the per-message path.
 //!
-//! N worker threads each own a local deque; spawns/wakeups from worker
-//! threads go to the local deque, external submissions to a shared injector.
-//! Idle workers steal from the injector first, then from victims' deques.
+//! Topology:
+//!
+//! * each worker owns a Chase–Lev deque — local LIFO push/take by the
+//!   owner, lock-free FIFO steal (batched, up to `throughput/2` jobs) by
+//!   idle victims;
+//! * non-worker threads (scoped actors, the timer, device-queue
+//!   callbacks) submit to one shared Vyukov MPSC injector. Its single-
+//!   consumer side is elected by a CAS claim that is only ever held for
+//!   the few instructions of a drain — never across actor code — and the
+//!   drain surfaces jobs into the claimant's deque where they are
+//!   stealable. Any idle worker can claim, so an external job can never
+//!   be pinned behind a busy worker;
+//! * a token [`Parker`] per worker.
+//!
+//! Idle workers park on their token instead of the seed's 10 ms
+//! `wait_timeout` poll. The protocol is the classic two-sided handshake:
+//! a submitter pushes, issues a SeqCst fence, then checks the sleeper
+//! bitmask; a worker sets its sleeper bit, issues a SeqCst fence, re-checks
+//! every queue, and only then parks. Whichever side loses the race sees the
+//! other's write, so a wakeup can never be lost — the seed's
+//! `submit`-reads-`sleepers`-after-push-under-a-different-lock race (and
+//! its 10 ms latency floor in `fig4_spawn`/`fig5_overhead`) is gone.
 
 use super::cell::{ActorCell, ResumeResult};
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use super::envelope::Envelope;
+use crate::concurrent::{CountedQueue, Parker, Steal, WorkDeque};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 type Runnable = Arc<ActorCell>;
 
+/// The sleeper bitmask is one u64 — workers beyond 64 would be
+/// unaddressable, so the worker count is clamped.
+const MAX_WORKERS: usize = 64;
+
+struct Shard {
+    deque: WorkDeque<Runnable>,
+    parker: Parker,
+}
+
 struct Shared {
-    injector: Mutex<VecDeque<Runnable>>,
-    locals: Vec<Mutex<VecDeque<Runnable>>>,
-    sleepers: Mutex<usize>,
-    wakeup: Condvar,
+    /// Distinguishes schedulers so a worker of system A submitting to
+    /// system B cannot mistake B's shard for its own deque.
+    id: u64,
+    shards: Vec<Shard>,
+    /// External submissions; multi-producer lock-free push.
+    injector: CountedQueue<Runnable>,
+    /// Elects the injector's single consumer (MPSC contract). Held only
+    /// inside `find_job` for a bounded drain, never across actor code.
+    injector_claim: AtomicBool,
+    /// Bit k set <=> worker k is parked (or committing to park).
+    sleepers: AtomicU64,
     shutdown: AtomicBool,
     throughput: usize,
-    /// total messages processed (metrics)
+    /// total scheduler slices executed (metrics)
     resumes: AtomicUsize,
 }
 
+static NEXT_SCHEDULER_ID: AtomicU64 = AtomicU64::new(1);
+
 thread_local! {
-    /// Which worker the current thread is (usize::MAX = external thread).
-    static WORKER_INDEX: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    /// (scheduler id, worker index) of the current thread;
+    /// (0, usize::MAX) on non-worker threads.
+    static WORKER: std::cell::Cell<(u64, usize)> =
+        const { std::cell::Cell::new((0, usize::MAX)) };
 }
 
 pub struct Scheduler {
@@ -37,14 +77,20 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(n_workers: usize, throughput: usize) -> Scheduler {
-        let n = n_workers.max(1);
+        let n = n_workers.clamp(1, MAX_WORKERS);
         let shared = Arc::new(Shared {
-            injector: Mutex::new(VecDeque::new()),
-            locals: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
-            sleepers: Mutex::new(0),
-            wakeup: Condvar::new(),
+            id: NEXT_SCHEDULER_ID.fetch_add(1, Ordering::Relaxed),
+            shards: (0..n)
+                .map(|_| Shard {
+                    deque: WorkDeque::new(),
+                    parker: Parker::new(),
+                })
+                .collect(),
+            injector: CountedQueue::new(),
+            injector_claim: AtomicBool::new(false),
+            sleepers: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
-            throughput,
+            throughput: throughput.max(1),
             resumes: AtomicUsize::new(0),
         });
         let workers = (0..n)
@@ -62,22 +108,25 @@ impl Scheduler {
         }
     }
 
-    /// Enqueue an actor for execution.
+    /// Enqueue an actor for execution. Lock-free: worker threads push onto
+    /// their own deque, external threads onto the shared injector.
     pub fn submit(&self, cell: Runnable) {
-        let idx = WORKER_INDEX.with(|w| w.get());
-        if idx < self.shared.locals.len() {
-            self.shared.locals[idx].lock().unwrap().push_back(cell);
+        let sh = &self.shared;
+        let (sid, idx) = WORKER.with(|w| w.get());
+        if sid == sh.id && idx < sh.shards.len() {
+            // SAFETY: this thread is worker `idx` of this scheduler, the
+            // unique owner of that deque.
+            unsafe { sh.shards[idx].deque.push(cell) };
         } else {
-            self.shared.injector.lock().unwrap().push_back(cell);
+            // the injector is never closed, so this cannot fail
+            let _ = sh.injector.push(cell);
         }
-        // wake one sleeper if any
-        if *self.shared.sleepers.lock().unwrap() > 0 {
-            self.shared.wakeup.notify_one();
-        }
+        fence(Ordering::SeqCst);
+        sh.wake_any();
     }
 
     pub fn n_workers(&self) -> usize {
-        self.shared.locals.len()
+        self.shared.shards.len()
     }
 
     /// Total scheduler slices executed so far (metrics).
@@ -87,8 +136,10 @@ impl Scheduler {
 
     /// Stop all workers; queued actors are dropped.
     pub fn shutdown(&self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.wakeup.notify_all();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for s in &self.shared.shards {
+            s.parker.unpark();
+        }
         let mut ws = self.workers.lock().unwrap();
         for w in ws.drain(..) {
             let _ = w.join();
@@ -96,47 +147,145 @@ impl Scheduler {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, index: usize) {
-    WORKER_INDEX.with(|w| w.set(index));
-    let n = shared.locals.len();
-    loop {
-        if shared.shutdown.load(Ordering::Acquire) {
-            return;
-        }
-        let job = pop_job(&shared, index, n);
-        match job {
-            Some(cell) => {
-                shared.resumes.fetch_add(1, Ordering::Relaxed);
-                if let ResumeResult::Reschedule = cell.resume(shared.throughput) {
-                    shared.locals[index].lock().unwrap().push_back(cell);
-                }
+impl Shared {
+    /// Wake one parked worker, if any.
+    fn wake_any(&self) {
+        loop {
+            let mask = self.sleepers.load(Ordering::SeqCst);
+            if mask == 0 {
+                return;
             }
-            None => {
-                // sleep until new work arrives
-                let mut sleepers = shared.sleepers.lock().unwrap();
-                *sleepers += 1;
-                let (mut sleepers2, _timeout) = shared
-                    .wakeup
-                    .wait_timeout(sleepers, std::time::Duration::from_millis(10))
-                    .unwrap();
-                *sleepers2 -= 1;
+            let k = mask.trailing_zeros() as usize;
+            let bit = 1u64 << k;
+            if self
+                .sleepers
+                .compare_exchange(mask, mask & !bit, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                // a racing waker may also unpark k; tokens coalesce, so
+                // the worst case is one spurious wake
+                self.shards[k].parker.unpark();
+                return;
             }
         }
     }
 }
 
-fn pop_job(shared: &Shared, index: usize, n: usize) -> Option<Runnable> {
-    if let Some(c) = shared.locals[index].lock().unwrap().pop_front() {
+fn worker_loop(shared: Arc<Shared>, me: usize) {
+    WORKER.with(|w| w.set((shared.id, me)));
+    let bit = 1u64 << me;
+    // reusable per-slice envelope buffer (no per-resume allocation)
+    let mut batch: Vec<Envelope> = Vec::with_capacity(shared.throughput);
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if let Some(cell) = find_job(&shared, me) {
+            shared.resumes.fetch_add(1, Ordering::Relaxed);
+            if let ResumeResult::Reschedule = cell.resume(shared.throughput, &mut batch) {
+                // SAFETY: we are worker `me`, the deque owner.
+                unsafe { shared.shards[me].deque.push(cell) };
+            }
+            continue;
+        }
+        // Park protocol: announce, fence, re-check, then sleep.
+        shared.sleepers.fetch_or(bit, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        if shared.shutdown.load(Ordering::SeqCst) || work_available(&shared) {
+            shared.sleepers.fetch_and(!bit, Ordering::SeqCst);
+            continue;
+        }
+        shared.shards[me].parker.park();
+        // whoever woke us already cleared our sleeper bit
+    }
+}
+
+/// Post-announce re-check: anything any worker could run right now?
+/// (Injector jobs are claimable by everyone, deque jobs stealable.)
+fn work_available(shared: &Shared) -> bool {
+    if !shared.injector.is_empty() {
+        return true;
+    }
+    shared.shards.iter().any(|s| !s.deque.is_empty())
+}
+
+fn find_job(shared: &Shared, me: usize) -> Option<Runnable> {
+    let shard = &shared.shards[me];
+    // SAFETY: worker `me` owns this deque.
+    if let Some(c) = unsafe { shard.deque.take() } {
         return Some(c);
     }
-    if let Some(c) = shared.injector.lock().unwrap().pop_front() {
-        return Some(c);
+    // Claim the injector and surface a batch into our deque, where the
+    // jobs are stealable; the claim is released before running anything.
+    if !shared.injector.is_empty()
+        && shared
+            .injector_claim
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    {
+        let first = shared.injector.pop();
+        let mut moved = 0;
+        if first.is_some() {
+            while moved < shared.throughput {
+                match shared.injector.pop() {
+                    Some(c) => {
+                        // SAFETY: worker `me` owns this deque.
+                        unsafe { shard.deque.push(c) };
+                        moved += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        shared.injector_claim.store(false, Ordering::Release);
+        if moved > 0 {
+            // several jobs surfaced at once — recruit parked helpers
+            fence(Ordering::SeqCst);
+            shared.wake_any();
+        }
+        if first.is_some() {
+            return first;
+        }
     }
-    // steal: scan victims starting after ourselves
-    for k in 1..n {
-        let v = (index + k) % n;
-        if let Some(c) = shared.locals[v].lock().unwrap().pop_back() {
-            return Some(c);
+    // Steal: scan victims after ourselves; take one job to run and move a
+    // batch of up to throughput/2 - 1 more onto our own deque.
+    let n = shared.shards.len();
+    for off in 1..n {
+        let v = (me + off) % n;
+        let victim = &shared.shards[v].deque;
+        let mut retries = 0;
+        loop {
+            match victim.steal() {
+                Steal::Success(first) => {
+                    let limit = (shared.throughput / 2).saturating_sub(1);
+                    let mut extra = 0;
+                    while extra < limit {
+                        match victim.steal() {
+                            Steal::Success(c) => {
+                                // SAFETY: worker `me` owns its deque.
+                                unsafe { shard.deque.push(c) };
+                                extra += 1;
+                            }
+                            _ => break,
+                        }
+                    }
+                    if extra > 0 {
+                        fence(Ordering::SeqCst);
+                        shared.wake_any();
+                    }
+                    return Some(first);
+                }
+                Steal::Retry => {
+                    retries += 1;
+                    if retries > 8 {
+                        // contended victim — move on; the pre-park re-check
+                        // still sees its deque as non-empty if work remains
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+                Steal::Empty => break,
+            }
         }
     }
     None
@@ -145,6 +294,8 @@ fn pop_job(shared: &Shared, index: usize, n: usize) -> Option<Runnable> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::actor::{no_reply, reply, ActorSystem, Behavior, SystemConfig};
+    use std::time::{Duration, Instant};
 
     #[test]
     fn scheduler_starts_and_stops() {
@@ -158,5 +309,128 @@ mod tests {
         let s = Scheduler::new(0, 25);
         assert_eq!(s.n_workers(), 1);
         s.shutdown();
+    }
+
+    #[test]
+    fn worker_count_clamped_to_bitmask_width() {
+        let s = Scheduler::new(1000, 25);
+        assert_eq!(s.n_workers(), MAX_WORKERS);
+        s.shutdown();
+    }
+
+    /// Regression test for the seed's lost-wakeup race: `submit` read
+    /// `sleepers` under a separate lock after pushing, so a worker deciding
+    /// to sleep between the push and the check missed the notify and only
+    /// a 10 ms poll timeout recovered it. The new protocol has **no** poll
+    /// fallback — if a wakeup is ever lost, the single parked worker never
+    /// resumes and the 5-second receive below times the test out.
+    #[test]
+    fn parked_worker_always_wakes_on_submit() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(1));
+        let echo = sys.spawn(|_| Behavior::new().on(|_c, &x: &u32| reply(x)));
+        let me = sys.scoped();
+        let t0 = Instant::now();
+        for i in 0..300u32 {
+            // vary the idle gap so the submit lands at different points of
+            // the worker's going-to-sleep window
+            std::thread::sleep(Duration::from_millis((i % 3) as u64));
+            let r: u32 = me
+                .request(&echo, i)
+                .receive(Duration::from_secs(5))
+                .expect("lost wakeup: parked worker never resumed");
+            assert_eq!(r, i);
+        }
+        // generous bound; a reintroduced poll-based sleep (300 x 10 ms
+        // floor) would trip it even on a loaded machine
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        sys.shutdown();
+    }
+
+    /// An external job must never be stuck behind one busy worker: with
+    /// worker 0 occupied by a long-running handler, a fresh submission
+    /// must still run promptly on the other worker via the shared
+    /// injector.
+    #[test]
+    fn external_jobs_not_pinned_behind_busy_worker() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let sleeper = sys.spawn(|_| {
+            Behavior::new().on(|_c, &ms: &u64| {
+                std::thread::sleep(Duration::from_millis(ms));
+                no_reply()
+            })
+        });
+        let me = sys.scoped();
+        // occupy one worker for ~1.5 s
+        me.send(&sleeper, 1500u64);
+        std::thread::sleep(Duration::from_millis(50));
+        // every quick job must complete while the sleeper still runs
+        let quick = sys.spawn(|_| Behavior::new().on(|_c, &x: &u32| reply(x * 2)));
+        let t0 = Instant::now();
+        for i in 0..20u32 {
+            let r: u32 = me
+                .request(&quick, i)
+                .receive(Duration::from_secs(5))
+                .expect("job starved behind busy worker");
+            assert_eq!(r, i * 2);
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(1200),
+            "quick jobs waited for the busy worker: {:?}",
+            t0.elapsed()
+        );
+        sys.shutdown();
+    }
+
+    #[test]
+    fn external_submit_storm_all_jobs_run() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+        let actors: Vec<_> = (0..16)
+            .map(|_| sys.spawn(|_| Behavior::new().on(|_c, &x: &u64| reply(x + 1))))
+            .collect();
+        let threads = 8;
+        let per = 250u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let sys = &sys;
+                let actors = &actors;
+                s.spawn(move || {
+                    let me = sys.scoped();
+                    for i in 0..per {
+                        let target = &actors[(t * 31 + i as usize * 7) % actors.len()];
+                        let r: u64 = me
+                            .request(target, i)
+                            .receive(Duration::from_secs(10))
+                            .expect("request lost in storm");
+                        assert_eq!(r, i + 1);
+                    }
+                });
+            }
+        });
+        sys.shutdown();
+    }
+
+    #[test]
+    fn fire_and_forget_counts_via_sink() {
+        use std::sync::atomic::AtomicUsize;
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let sink = sys.spawn(move |_| {
+            let h = h.clone();
+            Behavior::new().on(move |_c, _: &u32| {
+                h.fetch_add(1, Ordering::SeqCst);
+                no_reply()
+            })
+        });
+        let me = sys.scoped();
+        for i in 0..5000u32 {
+            me.send(&sink, i);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while hits.load(Ordering::SeqCst) < 5000 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 5000);
+        sys.shutdown();
     }
 }

@@ -162,6 +162,241 @@ pub fn hetero_step(
     )
 }
 
+// ---------------------------------------------------------------------------
+// Message-ring throughput (PERF.md): the before/after probe for the
+// lock-free mailbox + scheduler work. `msgring_lockfree` drives the real
+// actor system; `msgring_seed_style` drives a faithful miniature of the
+// seed's Mutex<VecDeque> mailboxes + locked injector + 10 ms condvar-poll
+// scheduler, so the comparison isolates exactly the contention that was
+// removed.
+// ---------------------------------------------------------------------------
+
+/// Ring parameters for [`msgring_lockfree`] / [`msgring_seed_style`].
+#[derive(Clone, Copy, Debug)]
+pub struct RingConfig {
+    pub workers: usize,
+    pub actors: usize,
+    pub tokens: usize,
+    pub hops_per_token: u64,
+}
+
+impl RingConfig {
+    pub fn messages(&self) -> u64 {
+        self.tokens as u64 * self.hops_per_token
+    }
+}
+
+/// Run the ring on the real (lock-free) actor system; returns messages/sec.
+pub fn msgring_lockfree(cfg: RingConfig) -> f64 {
+    use crate::actor::{no_reply, ActorRef, ActorSystem, Behavior, SystemConfig};
+    use std::sync::OnceLock;
+
+    let sys = ActorSystem::new(
+        SystemConfig::default().with_threads(cfg.workers),
+    );
+    let n = cfg.actors;
+    let table: std::sync::Arc<Vec<OnceLock<ActorRef>>> =
+        std::sync::Arc::new((0..n).map(|_| OnceLock::new()).collect());
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    for i in 0..n {
+        let peers = table.clone();
+        let tx = done_tx.clone();
+        let r = sys.spawn(move |_| {
+            Behavior::new().on(move |ctx, &hops_left: &u64| {
+                if hops_left == 0 {
+                    tx.send(()).ok();
+                } else {
+                    let next = peers[(i + 1) % n].get().expect("ring wired");
+                    ctx.send(next, hops_left - 1);
+                }
+                no_reply()
+            })
+        });
+        table[i].set(r).ok();
+    }
+    let me = sys.scoped();
+    let t0 = Instant::now();
+    for k in 0..cfg.tokens {
+        let entry = table[(k * n) / cfg.tokens.max(1)].get().unwrap();
+        me.send(entry, cfg.hops_per_token);
+    }
+    for _ in 0..cfg.tokens {
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(600))
+            .expect("ring token lost");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    sys.shutdown();
+    cfg.messages() as f64 / elapsed
+}
+
+/// Run the same ring on a miniature of the *seed* runtime: per-actor
+/// `Mutex<VecDeque>` mailboxes, a single locked ready-queue, and sleepy
+/// workers polling a condvar with the seed's 10 ms timeout (including its
+/// lost-wakeup submit). Returns messages/sec.
+pub fn msgring_seed_style(cfg: RingConfig) -> f64 {
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    struct Node {
+        mailbox: Mutex<VecDeque<u64>>,
+        scheduled: AtomicBool,
+    }
+
+    struct Rt {
+        nodes: Vec<Node>,
+        ready: Mutex<VecDeque<usize>>,
+        sleepers: Mutex<usize>,
+        wakeup: Condvar,
+        shutdown: AtomicBool,
+        done: AtomicU64,
+        done_gate: Mutex<()>,
+        done_cv: Condvar,
+    }
+
+    impl Rt {
+        fn enqueue(&self, i: usize, hops: u64) {
+            self.nodes[i].mailbox.lock().unwrap().push_back(hops);
+            if !self.nodes[i].scheduled.swap(true, Ordering::AcqRel) {
+                self.ready.lock().unwrap().push_back(i);
+                // the seed's racy wake: sleepers read under a separate lock
+                // *after* the push
+                if *self.sleepers.lock().unwrap() > 0 {
+                    self.wakeup.notify_one();
+                }
+            }
+        }
+    }
+
+    let n = cfg.actors;
+    let rt = Arc::new(Rt {
+        nodes: (0..n)
+            .map(|_| Node {
+                mailbox: Mutex::new(VecDeque::new()),
+                scheduled: AtomicBool::new(false),
+            })
+            .collect(),
+        ready: Mutex::new(VecDeque::new()),
+        sleepers: Mutex::new(0),
+        wakeup: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        done: AtomicU64::new(0),
+        done_gate: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    let workers: Vec<_> = (0..cfg.workers.max(1))
+        .map(|_| {
+            let rt = rt.clone();
+            std::thread::spawn(move || loop {
+                if rt.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let job = rt.ready.lock().unwrap().pop_front();
+                match job {
+                    Some(i) => {
+                        // the seed's slice: up to 25 messages, one locked
+                        // dequeue each
+                        for _ in 0..25 {
+                            let Some(h) = rt.nodes[i].mailbox.lock().unwrap().pop_front()
+                            else {
+                                break;
+                            };
+                            if h == 0 {
+                                if rt.done.fetch_add(1, Ordering::AcqRel) + 1
+                                    == cfg.tokens as u64
+                                {
+                                    let _g = rt.done_gate.lock().unwrap();
+                                    rt.done_cv.notify_all();
+                                }
+                            } else {
+                                rt.enqueue((i + 1) % n, h - 1);
+                            }
+                        }
+                        if rt.nodes[i].mailbox.lock().unwrap().is_empty() {
+                            rt.nodes[i].scheduled.store(false, Ordering::Release);
+                            if !rt.nodes[i].mailbox.lock().unwrap().is_empty()
+                                && !rt.nodes[i].scheduled.swap(true, Ordering::AcqRel)
+                            {
+                                rt.ready.lock().unwrap().push_back(i);
+                            }
+                        } else {
+                            rt.ready.lock().unwrap().push_back(i);
+                        }
+                    }
+                    None => {
+                        // the seed's idle path: 10 ms poll
+                        let mut sleepers = rt.sleepers.lock().unwrap();
+                        *sleepers += 1;
+                        let (mut s2, _) = rt
+                            .wakeup
+                            .wait_timeout(sleepers, std::time::Duration::from_millis(10))
+                            .unwrap();
+                        *s2 -= 1;
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    for k in 0..cfg.tokens {
+        rt.enqueue((k * n) / cfg.tokens.max(1), cfg.hops_per_token);
+    }
+    {
+        let mut g = rt.done_gate.lock().unwrap();
+        while rt.done.load(Ordering::Acquire) < cfg.tokens as u64 {
+            let (g2, _) = rt
+                .done_cv
+                .wait_timeout(g, std::time::Duration::from_millis(50))
+                .unwrap();
+            g = g2;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    rt.shutdown.store(true, Ordering::Release);
+    rt.wakeup.notify_all();
+    for w in workers {
+        let _ = w.join();
+    }
+    cfg.messages() as f64 / elapsed
+}
+
+/// Write `BENCH_msgring.json` (repo root when run from `rust/`, else the
+/// working directory) with before/after numbers — the machine-readable
+/// perf trajectory described in PERF.md.
+pub fn write_msgring_json(
+    cfg: RingConfig,
+    seed_msgs_per_sec: f64,
+    lockfree_msgs_per_sec: f64,
+    generated_by: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    let root = std::path::Path::new("../ROADMAP.md");
+    let path = if root.exists() {
+        std::path::PathBuf::from("../BENCH_msgring.json")
+    } else {
+        std::path::PathBuf::from("BENCH_msgring.json")
+    };
+    let speedup = lockfree_msgs_per_sec / seed_msgs_per_sec.max(1e-9);
+    let json = format!(
+        "{{\n  \"bench\": \"msgring\",\n  \"generated_by\": {generated_by:?},\n  \
+         \"config\": {{\"workers\": {}, \"actors\": {}, \"tokens\": {}, \
+         \"hops_per_token\": {}, \"messages\": {}}},\n  \
+         \"seed_locked_msgs_per_sec\": {:.1},\n  \
+         \"lockfree_msgs_per_sec\": {:.1},\n  \"speedup\": {:.3}\n}}\n",
+        cfg.workers,
+        cfg.actors,
+        cfg.tokens,
+        cfg.hops_per_token,
+        cfg.messages(),
+        seed_msgs_per_sec,
+        lockfree_msgs_per_sec,
+        speedup
+    );
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Quick/full switch: benches default to a fast sweep; set
 /// `CAF_OCL_BENCH_FULL=1` for the paper-scale version.
 pub fn full_mode() -> bool {

@@ -1,0 +1,342 @@
+//! Chase–Lev work-stealing deque.
+//!
+//! One owner thread pushes and takes at the bottom (LIFO, cache-warm);
+//! any other thread steals from the top (FIFO), lock-free. Memory
+//! orderings follow Lê, Pop, Cohen & Petri Nardelli, "Correct and
+//! Efficient Work-Stealing for Weak Memory Models" (PPoPP'13), the
+//! canonical C11 formulation of Chase & Lev's deque.
+//!
+//! Buffer growth never frees the old buffer while the deque is alive:
+//! a racing stealer may still hold a pointer into it. Retired buffers are
+//! parked on a side list and released in `Drop`; with doubling growth the
+//! retired memory is strictly smaller than the live buffer, so the
+//! overhead is bounded — the standard trade for not needing epoch-based
+//! reclamation.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
+use std::sync::Mutex;
+
+struct Buffer<T> {
+    mask: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+impl<T> Buffer<T> {
+    fn alloc(cap: usize) -> *mut Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        let slots: Box<[UnsafeCell<MaybeUninit<T>>]> = (0..cap)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect();
+        Box::into_raw(Box::new(Buffer {
+            mask: cap - 1,
+            slots,
+        }))
+    }
+
+    fn cap(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Bit-copy the element at logical index `i` out of the buffer.
+    ///
+    /// SAFETY: caller must guarantee the slot holds an initialized element
+    /// and must resolve ownership (top CAS) before dropping the value.
+    unsafe fn read(&self, i: isize) -> T {
+        (*self.slots[i as usize & self.mask].get()).as_ptr().read()
+    }
+
+    /// SAFETY: caller must be the deque owner and `i` must be outside the
+    /// live range of any concurrent reader.
+    unsafe fn write(&self, i: isize, v: T) {
+        (*self.slots[i as usize & self.mask].get())
+            .as_mut_ptr()
+            .write(v);
+    }
+}
+
+/// Result of a steal attempt.
+pub enum Steal<T> {
+    /// Nothing to steal.
+    Empty,
+    /// Lost a race; the queue may still be non-empty.
+    Retry,
+    /// Got one.
+    Success(T),
+}
+
+/// The work-stealing deque. `push`/`take` are owner-only (see the safety
+/// contracts); `steal` and `is_empty` are safe from any thread.
+pub struct WorkDeque<T> {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: AtomicPtr<Buffer<T>>,
+    /// Old buffers kept alive for racing stealers; only touched on grow
+    /// (rare) and drop.
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+}
+
+// SAFETY: cross-thread element transfer requires T: Send; all shared state
+// is atomics plus buffers whose slot ownership is mediated by top/bottom.
+unsafe impl<T: Send> Send for WorkDeque<T> {}
+unsafe impl<T: Send> Sync for WorkDeque<T> {}
+
+impl<T> Default for WorkDeque<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkDeque<T> {
+    pub fn new() -> WorkDeque<T> {
+        WorkDeque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Buffer::alloc(64)),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Owner-only: push at the bottom.
+    ///
+    /// # Safety
+    ///
+    /// Only the deque's single owner thread may call this (or `take`)
+    /// at any given time; `steal` remains safe from other threads.
+    pub unsafe fn push(&self, value: T) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut a = self.buf.load(Ordering::Relaxed);
+        if b - t >= (*a).cap() as isize {
+            a = self.grow(t, b);
+        }
+        (*a).write(b, value);
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only: pop at the bottom (LIFO).
+    ///
+    /// # Safety
+    ///
+    /// Only the deque's single owner thread may call this (or `push`)
+    /// at any given time; `steal` remains safe from other threads.
+    pub unsafe fn take(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let a = self.buf.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            if t == b {
+                // last element: race the stealers via the top CAS
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                if won {
+                    Some((*a).read(b))
+                } else {
+                    None
+                }
+            } else {
+                Some((*a).read(b))
+            }
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Steal one element from the top (any thread).
+    pub fn steal(&self) -> Steal<T> {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let a = self.buf.load(Ordering::Acquire);
+            // SAFETY: t < b means slot t was initialized; the read is a bit
+            // copy and ownership is decided by the CAS below — on failure
+            // the copy is forgotten, never dropped.
+            let v = unsafe { (*a).read(t) };
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_err()
+            {
+                std::mem::forget(v);
+                return Steal::Retry;
+            }
+            Steal::Success(v)
+        } else {
+            Steal::Empty
+        }
+    }
+
+    /// Approximate emptiness (safe from any thread; used by the scheduler's
+    /// pre-park re-check, which brackets it with SeqCst fences).
+    pub fn is_empty(&self) -> bool {
+        let t = self.top.load(Ordering::Acquire);
+        let b = self.bottom.load(Ordering::Acquire);
+        b <= t
+    }
+
+    /// Approximate length (diagnostics).
+    pub fn len(&self) -> usize {
+        let t = self.top.load(Ordering::Acquire);
+        let b = self.bottom.load(Ordering::Acquire);
+        (b - t).max(0) as usize
+    }
+
+    /// SAFETY: owner-only, called from `push` when full.
+    unsafe fn grow(&self, t: isize, b: isize) -> *mut Buffer<T> {
+        let old = self.buf.load(Ordering::Relaxed);
+        let new = Buffer::alloc((*old).cap() * 2);
+        for i in t..b {
+            (*new).write(i, (*old).read(i));
+        }
+        self.buf.store(new, Ordering::Release);
+        self.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl<T> Drop for WorkDeque<T> {
+    fn drop(&mut self) {
+        unsafe {
+            let t = self.top.load(Ordering::Relaxed);
+            let b = self.bottom.load(Ordering::Relaxed);
+            let a = self.buf.load(Ordering::Relaxed);
+            for i in t..b {
+                drop((*a).read(i));
+            }
+            drop(Box::from_raw(a));
+            // retired buffers hold only stale bit-copies (MaybeUninit slots
+            // never drop contents) — free the allocations only
+            for p in self.retired.lock().unwrap().drain(..) {
+                drop(Box::from_raw(p));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifo_owner_fifo_thief() {
+        let d = WorkDeque::new();
+        unsafe {
+            d.push(1);
+            d.push(2);
+            d.push(3);
+            assert_eq!(d.take(), Some(3)); // owner side is LIFO
+        }
+        match d.steal() {
+            Steal::Success(v) => assert_eq!(v, 1), // thief side is FIFO
+            _ => panic!("steal failed"),
+        }
+        unsafe {
+            assert_eq!(d.take(), Some(2));
+            assert_eq!(d.take(), None);
+        }
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn growth_preserves_elements() {
+        let d = WorkDeque::new();
+        unsafe {
+            for i in 0..1000 {
+                d.push(i); // forces several grows past the initial 64
+            }
+            for i in (0..1000).rev() {
+                assert_eq!(d.take(), Some(i));
+            }
+            assert_eq!(d.take(), None);
+        }
+    }
+
+    #[test]
+    fn drop_releases_remaining_elements() {
+        let live = Arc::new(AtomicUsize::new(0));
+        struct Tracked(Arc<AtomicUsize>);
+        impl Drop for Tracked {
+            fn drop(&mut self) {
+                self.0.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        let d = WorkDeque::new();
+        for _ in 0..300 {
+            live.fetch_add(1, Ordering::SeqCst);
+            unsafe { d.push(Tracked(live.clone())) };
+        }
+        unsafe {
+            drop(d.take());
+        }
+        drop(d);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "elements leaked on drop");
+    }
+
+    #[test]
+    fn concurrent_steal_owner_take_no_loss_no_dup() {
+        // One owner pushes N tagged jobs and takes; 3 thieves steal.
+        // Every job must be seen exactly once.
+        let n = 20_000usize;
+        let d = Arc::new(WorkDeque::new());
+        let seen = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut thieves = Vec::new();
+        for _ in 0..3 {
+            let d = d.clone();
+            let seen = seen.clone();
+            let done = done.clone();
+            thieves.push(std::thread::spawn(move || {
+                while done.load(Ordering::Acquire) == 0 {
+                    match d.steal() {
+                        Steal::Success(i) => {
+                            seen[i].fetch_add(1, Ordering::SeqCst);
+                        }
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => std::thread::yield_now(),
+                    }
+                }
+            }));
+        }
+        // owner: interleave pushes and takes
+        for i in 0..n {
+            unsafe { d.push(i) };
+            if i % 3 == 0 {
+                if let Some(j) = unsafe { d.take() } {
+                    seen[j].fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        loop {
+            match unsafe { d.take() } {
+                Some(j) => {
+                    seen[j].fetch_add(1, Ordering::SeqCst);
+                }
+                None => {
+                    if d.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+        // drain whatever thieves still race on, then stop them
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        done.store(1, Ordering::Release);
+        for t in thieves {
+            t.join().unwrap();
+        }
+        for (i, s) in seen.iter().enumerate() {
+            assert_eq!(s.load(Ordering::SeqCst), 1, "job {i} seen wrong number of times");
+        }
+    }
+}

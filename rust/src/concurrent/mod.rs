@@ -1,0 +1,25 @@
+//! Lock-free building blocks for the messaging hot path.
+//!
+//! The paper's performance claims (negligible overhead over the native
+//! OpenCL API, Fig 5; cheap spawn/dispatch, Fig 4) rest on CAF's lock-free
+//! runtime: a Vyukov-style MPSC mailbox and Chase–Lev work-stealing deques.
+//! This module provides the same primitives for our substrate:
+//!
+//! * [`MpscQueue`] — intrusive multi-producer single-consumer node queue
+//!   (Vyukov); wait-free push, lock-free pop.
+//! * [`CountedQueue`] — an [`MpscQueue`] plus one atomic state word carrying
+//!   an element count and a closed bit, so "enqueue and learn whether the
+//!   queue was empty" is a single atomic RMW.
+//! * [`WorkDeque`] — Chase–Lev work-stealing deque (owner LIFO push/take,
+//!   lock-free FIFO steal) following the C11 orderings of Lê et al.,
+//!   "Correct and Efficient Work-Stealing for Weak Memory Models" (PPoPP'13).
+//! * [`Parker`] — token-based thread parking; an unpark that races ahead of
+//!   the park is never lost.
+
+pub mod deque;
+pub mod mpsc;
+pub mod parker;
+
+pub use deque::{Steal, WorkDeque};
+pub use mpsc::{spin_backoff, CountedQueue, MpscQueue, PushResult};
+pub use parker::Parker;

@@ -1,0 +1,93 @@
+//! Token-based thread parking.
+//!
+//! The token makes the unpark/park race benign: `unpark` deposits a token,
+//! and `park` returns immediately if one is present — so a wakeup that
+//! arrives between "decided to sleep" and "actually slept" is never lost.
+//! This is the property the seed scheduler's bare `Condvar` + counter
+//! lacked (its `notify_one` could fire before the sleeper reached
+//! `wait`, and only a 10 ms poll timeout papered over the lost wakeup).
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+pub struct Parker {
+    token: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Parker {
+    pub fn new() -> Parker {
+        Parker::default()
+    }
+
+    /// Block until a token is available, then consume it.
+    pub fn park(&self) {
+        let mut t = self.token.lock().unwrap();
+        while !*t {
+            t = self.cv.wait(t).unwrap();
+        }
+        *t = false;
+    }
+
+    /// Block until a token arrives or `timeout` elapses; consumes the token
+    /// if one is present. Returns true if a token was consumed.
+    pub fn park_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut t = self.token.lock().unwrap();
+        while !*t {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self.cv.wait_timeout(t, deadline - now).unwrap();
+            t = g;
+        }
+        *t = false;
+        true
+    }
+
+    /// Deposit a token and wake the parked thread, if any. Multiple
+    /// unparks coalesce into one token.
+    pub fn unpark(&self) {
+        let mut t = self.token.lock().unwrap();
+        *t = true;
+        self.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn unpark_before_park_is_not_lost() {
+        let p = Parker::new();
+        p.unpark();
+        p.park(); // returns immediately — the token was banked
+    }
+
+    #[test]
+    fn park_blocks_until_unpark() {
+        let p = Arc::new(Parker::new());
+        let p2 = p.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            p2.park();
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        p.unpark();
+        let waited = h.join().unwrap();
+        assert!(waited >= Duration::from_millis(25), "woke too early: {waited:?}");
+    }
+
+    #[test]
+    fn park_timeout_expires_without_token() {
+        let p = Parker::new();
+        assert!(!p.park_timeout(Duration::from_millis(10)));
+        p.unpark();
+        assert!(p.park_timeout(Duration::from_millis(10)));
+    }
+}

@@ -4,6 +4,8 @@
 //! Layer map:
 //! * [`actor`]    — the CAF-like substrate (scheduler, mailboxes, messaging,
 //!   monitors, composition).
+//! * [`concurrent`] — lock-free primitives under the hot path (Vyukov MPSC
+//!   queues, Chase–Lev work-stealing deques, token parkers).
 //! * [`opencl`]   — the paper's contribution: OpenCL actors on top of the
 //!   PJRT runtime (manager/platform/device/program/mem_ref/actor_facade).
 //! * [`runtime`]  — PJRT command-queue threads executing AOT HLO artifacts.
@@ -15,6 +17,7 @@
 //! * [`util`]     — PRNG, property testing, stats, CLI.
 pub mod actor;
 pub mod bench;
+pub mod concurrent;
 pub mod indexing;
 pub mod net;
 pub mod opencl;

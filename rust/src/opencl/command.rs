@@ -106,7 +106,14 @@ impl Command {
             match a {
                 ArgValue::Ref(r) => {
                     ids.push(r.buffer_id());
-                    deps.push(r.ready_event().clone());
+                    // lock-free fast path: a dependency that already
+                    // retired successfully need not block the queue again;
+                    // pending or failed events stay on the list so the
+                    // queue thread waits or propagates the error
+                    match r.ready_event().poll() {
+                        Some(Ok(())) => {}
+                        _ => deps.push(r.ready_event().clone()),
+                    }
                 }
                 ArgValue::U32(v) => {
                     // zero host-side copy: the queue thread reads straight

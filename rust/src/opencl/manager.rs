@@ -119,6 +119,37 @@ impl Manager {
             p.stop();
         }
     }
+
+    /// One line per device: executions, uploads, and buffer-pool
+    /// efficiency (hits/misses/returned/evicted). The measurement
+    /// methodology is documented in PERF.md.
+    pub fn perf_report(&self) -> String {
+        let Some(p) = self.platform.get() else {
+            return "no devices discovered yet".to_string();
+        };
+        let mut out = String::new();
+        for d in &p.devices {
+            let stats = d.queue.stats();
+            let (execs, exec_t) = stats.snapshot();
+            let (hits, misses, returned, evicted) = stats.pool_snapshot();
+            out.push_str(&format!(
+                "device {} ({}): execs={} exec_time={:.3}s uploads={} \
+                 pool[hits={} misses={} returned={} evicted={}]\n",
+                d.id,
+                d.name,
+                execs,
+                exec_t.as_secs_f64(),
+                stats
+                    .uploads
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                hits,
+                misses,
+                returned,
+                evicted
+            ));
+        }
+        out
+    }
 }
 
 /// `system.opencl_manager()` (paper Listing 2 line 5).

@@ -143,3 +143,72 @@ impl std::fmt::Debug for MemRef {
         )
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opencl::device::{Device, DeviceInfo, DeviceKind};
+    use crate::runtime::HostData;
+    use std::time::Duration;
+
+    const T: Duration = Duration::from_secs(30);
+
+    fn test_device(id: usize) -> Arc<Device> {
+        Device::start(
+            id,
+            "memref-test",
+            DeviceKind::Cpu,
+            DeviceInfo {
+                compute_units: 1,
+                max_work_items_per_cu: 1,
+            },
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dropping_last_clone_frees_into_pool() {
+        let dev = test_device(7);
+        let (id, ev) = dev.queue.upload(HostData::U32(vec![5u32; 1024]));
+        let r = MemRef::new(dev.clone(), id, Dtype::U32, 1024, Access::ReadWrite, ev);
+        let r2 = r.clone();
+        assert_eq!(r2.read_u32(T).unwrap(), vec![5u32; 1024]);
+
+        drop(r);
+        dev.queue.barrier(T).unwrap();
+        let (_, _, returned, _) = dev.queue.stats().pool_snapshot();
+        assert_eq!(returned, 0, "a live clone must keep the buffer resident");
+
+        drop(r2);
+        dev.queue.barrier(T).unwrap();
+        let (hits_before, _, returned, _) = dev.queue.stats().pool_snapshot();
+        assert_eq!(returned, 1, "last drop must return the buffer to the pool");
+
+        // a fresh same-size-class upload recycles the freed buffer
+        let (id2, ev2) = dev.queue.upload(HostData::U32(vec![9u32; 1000]));
+        ev2.wait(T).unwrap();
+        let (hits_after, _, _, _) = dev.queue.stats().pool_snapshot();
+        assert_eq!(hits_after, hits_before + 1, "upload must recycle the pooled buffer");
+        let back = dev.queue.download(id2, T).unwrap().into_u32().unwrap();
+        assert_eq!(back, vec![9u32; 1000]);
+        dev.queue.stop();
+    }
+
+    #[test]
+    fn buffer_stays_resident_while_any_clone_lives() {
+        let dev = test_device(8);
+        let (id, ev) = dev.queue.upload(HostData::U32((0..256u32).collect()));
+        let r = MemRef::new(dev.clone(), id, Dtype::U32, 256, Access::ReadWrite, ev);
+        let clones: Vec<MemRef> = (0..5).map(|_| r.clone()).collect();
+        drop(r);
+        for c in clones {
+            // every clone can still read; the free only happens at the end
+            assert_eq!(c.read(T).unwrap().len(), 256);
+        }
+        dev.queue.barrier(T).unwrap();
+        let (_, _, returned, _) = dev.queue.stats().pool_snapshot();
+        assert_eq!(returned, 1);
+        dev.queue.stop();
+    }
+}

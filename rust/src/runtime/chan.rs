@@ -1,16 +1,30 @@
-//! A small MPMC channel (std's `mpsc::Sender` is `!Sync`, which would
-//! poison every structure embedding it; this one is `Send + Sync + Clone`).
+//! The device command channel: lock-free producers, one parked consumer.
+//!
+//! Actors enqueue device commands on every upload/execute/download — this
+//! is squarely on the Fig 5 hot path — so `push` is a wait-free Vyukov
+//! MPSC push plus one atomic RMW; no mutex is ever taken by producers.
+//! The consumer side (the device queue thread) parks on a token instead of
+//! polling. A small consumer-side mutex *only* serializes concurrent
+//! poppers to uphold the MPSC single-consumer contract; with the one
+//! dedicated queue thread per device it is never contended.
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use crate::concurrent::{CountedQueue, Parker};
+use std::sync::atomic::{fence, AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 struct Inner<T> {
-    queue: Mutex<(VecDeque<T>, bool)>, // (items, closed)
-    cv: Condvar,
+    queue: CountedQueue<T>,
+    /// Serializes poppers (correctness belt for the single-consumer
+    /// contract; uncontended in the one-queue-thread-per-device design).
+    consumer: Mutex<()>,
+    /// True while the consumer is committing to park (Dekker flag).
+    waiting: AtomicBool,
+    parker: Parker,
 }
 
-/// Unbounded MPMC channel handle.
+/// Unbounded channel handle: any number of lock-free producers, one
+/// (serialized) consumer.
 pub struct Chan<T> {
     inner: Arc<Inner<T>>,
 }
@@ -33,66 +47,81 @@ impl<T> Chan<T> {
     pub fn new() -> Chan<T> {
         Chan {
             inner: Arc::new(Inner {
-                queue: Mutex::new((VecDeque::new(), false)),
-                cv: Condvar::new(),
+                queue: CountedQueue::new(),
+                consumer: Mutex::new(()),
+                waiting: AtomicBool::new(false),
+                parker: Parker::new(),
             }),
         }
     }
 
-    /// Push an item; returns false if the channel is closed.
+    /// Push an item; returns false if the channel is closed. Lock-free.
     pub fn push(&self, item: T) -> bool {
-        let mut q = self.inner.queue.lock().unwrap();
-        if q.1 {
+        if self.inner.queue.push(item).is_err() {
             return false;
         }
-        q.0.push_back(item);
-        self.inner.cv.notify_one();
+        // Dekker handshake with the consumer's announce-then-recheck: if
+        // the consumer missed this element, it must see `waiting` → we see
+        // it here and hand over a token.
+        fence(Ordering::SeqCst);
+        if self.inner.waiting.load(Ordering::SeqCst) {
+            self.inner.parker.unpark();
+        }
         true
     }
 
     /// Pop, blocking until an item arrives or the channel closes empty.
     pub fn pop(&self) -> Option<T> {
-        let mut q = self.inner.queue.lock().unwrap();
+        let _guard = self.inner.consumer.lock().unwrap();
         loop {
-            if let Some(x) = q.0.pop_front() {
-                return Some(x);
+            if let Some(v) = self.inner.queue.pop() {
+                return Some(v);
             }
-            if q.1 {
+            if self.inner.queue.is_closed() {
                 return None;
             }
-            q = self.inner.cv.wait(q).unwrap();
+            self.inner.waiting.store(true, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            if self.inner.queue.is_empty() && !self.inner.queue.is_closed() {
+                self.inner.parker.park();
+            }
+            self.inner.waiting.store(false, Ordering::SeqCst);
         }
     }
 
     /// Pop with timeout.
     pub fn pop_timeout(&self, d: Duration) -> Option<T> {
-        let deadline = std::time::Instant::now() + d;
-        let mut q = self.inner.queue.lock().unwrap();
+        let deadline = Instant::now() + d;
+        let _guard = self.inner.consumer.lock().unwrap();
         loop {
-            if let Some(x) = q.0.pop_front() {
-                return Some(x);
+            if let Some(v) = self.inner.queue.pop() {
+                return Some(v);
             }
-            if q.1 {
+            if self.inner.queue.is_closed() {
                 return None;
             }
-            let now = std::time::Instant::now();
+            let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            let (g, _) = self.inner.cv.wait_timeout(q, deadline - now).unwrap();
-            q = g;
+            self.inner.waiting.store(true, Ordering::SeqCst);
+            fence(Ordering::SeqCst);
+            if self.inner.queue.is_empty() && !self.inner.queue.is_closed() {
+                self.inner.parker.park_timeout(deadline - now);
+            }
+            self.inner.waiting.store(false, Ordering::SeqCst);
         }
     }
 
     /// Close: pending items still drain, new pushes fail.
     pub fn close(&self) {
-        let mut q = self.inner.queue.lock().unwrap();
-        q.1 = true;
-        self.inner.cv.notify_all();
+        self.inner.queue.close();
+        // wake a parked consumer so it observes the close
+        self.inner.parker.unpark();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.queue.lock().unwrap().0.len()
+        self.inner.queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -138,5 +167,39 @@ mod tests {
     fn pop_timeout_expires() {
         let c: Chan<u32> = Chan::new();
         assert_eq!(c.pop_timeout(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn parked_consumer_wakes_on_push() {
+        let c: Chan<u32> = Chan::new();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || c2.pop());
+        std::thread::sleep(Duration::from_millis(30)); // let it park
+        assert!(c.push(42));
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn many_producers_one_consumer() {
+        let c: Chan<u64> = Chan::new();
+        let producers = 6;
+        let per = 2000u64;
+        let mut handles = Vec::new();
+        for _ in 0..producers {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    assert!(c.push(i));
+                }
+            }));
+        }
+        let mut sum = 0u64;
+        for _ in 0..(producers as u64 * per) {
+            sum += c.pop().unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sum, producers as u64 * (per * (per - 1) / 2));
     }
 }

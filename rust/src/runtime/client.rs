@@ -2,6 +2,10 @@
 //! executables, and device-resident buffers; processes commands in order
 //! (OpenCL's default in-order command queue).
 //!
+//! Freed upload buffers are recycled through a per-device [`BufferPool`]
+//! keyed by `(dtype, size class)` — see [`PoolConfig`] — so steady-state
+//! pipelines stop allocating device memory per stage.
+//!
 //! Simulated device profiles (Tesla/Phi, DESIGN.md §2) inject their transfer
 //! and compute cost model here as sleep padding, so end-to-end measurements
 //! through the actor system reproduce the paper's heterogeneous-offload
@@ -189,6 +193,14 @@ pub struct ExecStats {
     pub downloads: AtomicU64,
     pub download_bytes: AtomicU64,
     pub compiles: AtomicU64,
+    /// Uploads served by recycling a pooled buffer's storage.
+    pub pool_hits: AtomicU64,
+    /// Uploads that had to allocate fresh storage.
+    pub pool_misses: AtomicU64,
+    /// Freed buffers returned to the pool.
+    pub pool_returned: AtomicU64,
+    /// Freed buffers dropped because the pool was full/disabled.
+    pub pool_evicted: AtomicU64,
 }
 
 impl ExecStats {
@@ -197,6 +209,99 @@ impl ExecStats {
             self.execs.load(Ordering::Relaxed),
             Duration::from_nanos(self.exec_ns.load(Ordering::Relaxed)),
         )
+    }
+
+    /// (hits, misses, returned, evicted) of the device buffer pool.
+    pub fn pool_snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.pool_hits.load(Ordering::Relaxed),
+            self.pool_misses.load(Ordering::Relaxed),
+            self.pool_returned.load(Ordering::Relaxed),
+            self.pool_evicted.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Configuration of the device-side buffer pool.
+///
+/// Freed upload buffers are recycled by `(dtype, size class)` — size class
+/// is the next power of two of the byte length — instead of allocating
+/// fresh device memory on every `upload`, so multi-stage pipelines
+/// (`gpu_pipeline`, `fig3_wah_index`) stop paying an allocation per stage.
+///
+/// Pool entries are inserted when the `Free` command *retires* on the
+/// in-order queue thread, which is what guarantees a recycled buffer is
+/// never handed out while a prior command's ready-event is still pending:
+/// every command that references the buffer was enqueued before the `Free`
+/// and has therefore already completed.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub enabled: bool,
+    /// Max buffers kept per (dtype, size-class) bucket.
+    pub max_per_class: usize,
+    /// Cap on total pooled bytes (size-class upper bounds).
+    pub max_bytes: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            enabled: true,
+            max_per_class: 8,
+            max_bytes: 256 << 20,
+        }
+    }
+}
+
+/// log2 size class covering `bytes`.
+fn size_class(bytes: usize) -> u32 {
+    bytes.max(1).next_power_of_two().trailing_zeros()
+}
+
+/// Freed-buffer pool living on the queue thread (single-threaded — the
+/// in-order queue is the synchronization).
+struct BufferPool {
+    cfg: PoolConfig,
+    classes: HashMap<(Dtype, u32), Vec<xla::PjRtBuffer>>,
+    bytes: usize,
+}
+
+impl BufferPool {
+    fn new(cfg: PoolConfig) -> BufferPool {
+        BufferPool {
+            cfg,
+            classes: HashMap::new(),
+            bytes: 0,
+        }
+    }
+
+    /// Take a recyclable buffer for an upload of `bytes` bytes of `dtype`.
+    fn take(&mut self, dtype: Dtype, bytes: usize) -> Option<xla::PjRtBuffer> {
+        let class = size_class(bytes);
+        let bucket = self.classes.get_mut(&(dtype, class))?;
+        let buf = bucket.pop()?;
+        self.bytes = self.bytes.saturating_sub(1usize << class);
+        Some(buf)
+    }
+
+    /// Return a freed buffer of `len` elements; returns false when the
+    /// buffer was evicted instead (pool full or disabled).
+    fn put(&mut self, dtype: Dtype, len: usize, buf: xla::PjRtBuffer) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let class = size_class(len * 4);
+        let class_bytes = 1usize << class;
+        if self.bytes + class_bytes > self.cfg.max_bytes {
+            return false;
+        }
+        let bucket = self.classes.entry((dtype, class)).or_default();
+        if bucket.len() >= self.cfg.max_per_class {
+            return false;
+        }
+        bucket.push(buf);
+        self.bytes += class_bytes;
+        true
     }
 }
 
@@ -210,8 +315,18 @@ pub struct DeviceQueue {
 }
 
 impl DeviceQueue {
-    /// Start the queue thread; fails if the PJRT client cannot be created.
+    /// Start the queue thread with the default buffer pool; fails if the
+    /// PJRT client cannot be created.
     pub fn start(name: impl Into<String>, pad: Option<PadModel>) -> Result<Arc<DeviceQueue>> {
+        Self::start_with(name, pad, PoolConfig::default())
+    }
+
+    /// Start with an explicit buffer-pool configuration.
+    pub fn start_with(
+        name: impl Into<String>,
+        pad: Option<PadModel>,
+        pool: PoolConfig,
+    ) -> Result<Arc<DeviceQueue>> {
         let name = name.into();
         let cmds: Chan<QueueCmd> = Chan::new();
         let stats = Arc::new(ExecStats::default());
@@ -221,7 +336,7 @@ impl DeviceQueue {
         let tname = format!("device-{name}");
         let worker = std::thread::Builder::new()
             .name(tname)
-            .spawn(move || queue_loop(thread_cmds, thread_stats, pad, init_tx))?;
+            .spawn(move || queue_loop(thread_cmds, thread_stats, pad, pool, init_tx))?;
         init_rx
             .recv()
             .map_err(|_| anyhow!("device thread died during init"))?
@@ -366,12 +481,18 @@ impl Drop for DeviceQueue {
 struct Buffer {
     buf: xla::PjRtBuffer,
     dtype: Dtype,
+    /// Element count (size-class key on free).
+    len: usize,
+    /// Upload-originated buffers can be recycled; executable outputs come
+    /// from the backend and cannot back a future upload.
+    poolable: bool,
 }
 
 fn queue_loop(
     cmds: Chan<QueueCmd>,
     stats: Arc<ExecStats>,
     pad: Option<PadModel>,
+    pool_cfg: PoolConfig,
     init_tx: std::sync::mpsc::Sender<Result<(), String>>,
 ) {
     // silence TfrtCpuClient created/destroyed info spam
@@ -390,6 +511,7 @@ fn queue_loop(
     };
     let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
     let mut buffers: HashMap<u64, Buffer> = HashMap::new();
+    let mut pool = BufferPool::new(pool_cfg);
 
     while let Some(cmd) = cmds.pop() {
         match cmd {
@@ -416,23 +538,41 @@ fn queue_loop(
                     p.pad_for(p.transfer_pad(data.bytes()));
                 }
                 let dtype = data.dtype();
+                let len = data.bytes() / 4;
+                // recycle a freed same-class buffer instead of allocating;
+                // pool entries were inserted when their Free retired, so
+                // every prior command touching them has completed
+                let recycled = pool.take(dtype, data.bytes());
+                if recycled.is_some() {
+                    stats.pool_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.pool_misses.fetch_add(1, Ordering::Relaxed);
+                }
                 let res = match &data {
                     UploadSrc::Owned(HostData::U32(v)) => {
-                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
                     }
                     UploadSrc::SharedU32(v) => {
-                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
                     }
                     UploadSrc::Owned(HostData::F32(v)) => {
-                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
                     }
                     UploadSrc::SharedF32(v) => {
-                        client.buffer_from_host_buffer(v, &[v.len()], None)
+                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
                     }
                 };
                 match res {
                     Ok(buf) => {
-                        buffers.insert(id, Buffer { buf, dtype });
+                        buffers.insert(
+                            id,
+                            Buffer {
+                                buf,
+                                dtype,
+                                len,
+                                poolable: true,
+                            },
+                        );
                         done.complete();
                     }
                     Err(e) => done.fail(format!("upload: {e}")),
@@ -494,6 +634,8 @@ fn queue_loop(
                             Buffer {
                                 buf,
                                 dtype: out_dtype,
+                                len: 0,
+                                poolable: false, // backend-owned output
                             },
                         );
                         done.complete();
@@ -518,7 +660,15 @@ fn queue_loop(
                 and_then(res);
             }
             QueueCmd::Free { id } => {
-                buffers.remove(&id);
+                if let Some(b) = buffers.remove(&id) {
+                    if b.poolable {
+                        if pool.put(b.dtype, b.len, b.buf) {
+                            stats.pool_returned.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            stats.pool_evicted.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
             }
             QueueCmd::Barrier { done } => done.complete(),
             QueueCmd::Stop => break,

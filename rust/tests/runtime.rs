@@ -133,6 +133,133 @@ fn pad_model_slows_down_device() {
     slow.stop();
 }
 
+// --- buffer pool (no artifacts needed: upload/free/download run on the
+// --- host-memory backend) ---------------------------------------------
+
+#[test]
+fn buffer_pool_recycles_by_dtype_and_size_class() {
+    let q = DeviceQueue::start("pool1", None).unwrap();
+    let (a, ea) = q.upload(HostData::U32(vec![1; 1024]));
+    ea.wait(T).unwrap();
+    q.free(a);
+    q.barrier(T).unwrap();
+    let (hits, misses, returned, _) = q.stats().pool_snapshot();
+    assert_eq!((hits, misses, returned), (0, 1, 1), "free must feed the pool");
+
+    // same dtype + size class → recycled, and the data is the new upload's
+    let (b, eb) = q.upload(HostData::U32(vec![2; 1000]));
+    eb.wait(T).unwrap();
+    let (hits, _, _, _) = q.stats().pool_snapshot();
+    assert_eq!(hits, 1, "same-class upload must recycle");
+    assert_eq!(q.download(b, T).unwrap().into_u32().unwrap(), vec![2; 1000]);
+
+    // same byte class but different dtype → must not recycle
+    q.free(b);
+    q.barrier(T).unwrap();
+    let (_, misses_before, _, _) = q.stats().pool_snapshot();
+    let (c, ec) = q.upload(HostData::F32(vec![1.0; 1024]));
+    ec.wait(T).unwrap();
+    let (hits, misses_after, _, _) = q.stats().pool_snapshot();
+    assert_eq!(hits, 1, "f32 upload must not recycle a u32 buffer");
+    assert_eq!(misses_after, misses_before + 1);
+
+    // different size class → miss as well
+    let (d, ed) = q.upload(HostData::U32(vec![3; 4096]));
+    ed.wait(T).unwrap();
+    let (hits, _, _, _) = q.stats().pool_snapshot();
+    assert_eq!(hits, 1);
+    q.free(c);
+    q.free(d);
+    q.stop();
+}
+
+#[test]
+fn pooled_buffer_not_reused_before_prior_commands_retire() {
+    use caf_ocl::runtime::client::PadModel;
+    // Slow device: free(A) and upload(B) are enqueued while A's upload
+    // event is still pending. The in-order queue must retire
+    // upload(A) -> free(A) -> upload(B), so the recycled storage can never
+    // be handed out while a prior ready-event is pending.
+    let slow = DeviceQueue::start(
+        "pool-slow",
+        Some(PadModel {
+            launch: Duration::from_millis(2),
+            bytes_per_sec: 1e6,
+            compute_scale: 1.0,
+            busy_wait: false,
+        }),
+    )
+    .unwrap();
+    let (a, ea) = slow.upload(HostData::U32(vec![7; 4096]));
+    slow.free(a);
+    let (b, eb) = slow.upload(HostData::U32(vec![8; 4096]));
+    eb.wait(T).unwrap();
+    assert!(
+        ea.is_complete(),
+        "B retired before A — in-order guarantee broken"
+    );
+    let (hits, _, returned, _) = slow.stats().pool_snapshot();
+    assert_eq!(returned, 1);
+    assert_eq!(hits, 1, "B must still recycle A's storage");
+    assert_eq!(
+        slow.download(b, T).unwrap().into_u32().unwrap(),
+        vec![8; 4096]
+    );
+    slow.stop();
+}
+
+#[test]
+fn pool_eviction_respects_caps() {
+    let q = DeviceQueue::start_with(
+        "pool-cap",
+        None,
+        PoolConfig {
+            enabled: true,
+            max_per_class: 1,
+            max_bytes: 1 << 20,
+        },
+    )
+    .unwrap();
+    let (a, ea) = q.upload(HostData::U32(vec![1; 256]));
+    let (b, eb) = q.upload(HostData::U32(vec![2; 256]));
+    ea.wait(T).unwrap();
+    eb.wait(T).unwrap();
+    q.free(a);
+    q.free(b);
+    q.barrier(T).unwrap();
+    let (_, _, returned, evicted) = q.stats().pool_snapshot();
+    assert_eq!(returned, 1, "first free fits the per-class cap");
+    assert_eq!(evicted, 1, "second free exceeds it and is dropped");
+    q.stop();
+}
+
+#[test]
+fn disabled_pool_never_recycles() {
+    let q = DeviceQueue::start_with(
+        "pool-off",
+        None,
+        PoolConfig {
+            enabled: false,
+            max_per_class: 8,
+            max_bytes: 1 << 20,
+        },
+    )
+    .unwrap();
+    let (a, ea) = q.upload(HostData::U32(vec![1; 512]));
+    ea.wait(T).unwrap();
+    q.free(a);
+    q.barrier(T).unwrap();
+    let (b, eb) = q.upload(HostData::U32(vec![2; 512]));
+    eb.wait(T).unwrap();
+    let (hits, misses, returned, evicted) = q.stats().pool_snapshot();
+    assert_eq!(hits, 0);
+    assert_eq!(misses, 2);
+    assert_eq!(returned, 0);
+    assert_eq!(evicted, 1);
+    let _ = b;
+    q.stop();
+}
+
 #[test]
 fn stats_accumulate() {
     let Some(m) = manifest() else { return };

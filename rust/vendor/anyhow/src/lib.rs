@@ -1,0 +1,175 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so this vendored crate
+//! implements exactly the surface the repository uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, and the [`Context`]
+//! extension trait. Error values carry a message plus an optional context
+//! chain; `?` works on any `std::error::Error` source because `Error`
+//! itself deliberately does *not* implement `std::error::Error` (the same
+//! trick the real crate uses to keep the blanket `From` impl coherent).
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context frames.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            context: Vec::new(),
+        }
+    }
+
+    /// Attach a context frame (outermost first when displayed).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+
+    /// The root message, without context frames.
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(c) => write!(f, "{c}: {}", self.msg),
+            None => write!(f, "{}", self.msg),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for c in &self.context {
+            write!(f, "\n  context: {c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert!(e.to_string().contains("bad value 3"));
+        let e2: Result<()> = Err(anyhow!("inner")).context("outer");
+        let msg = format!("{}", e2.unwrap_err());
+        assert!(msg.contains("outer") && msg.contains("inner"), "{msg}");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+    }
+
+    fn bails(flag: bool) -> Result<u32> {
+        if flag {
+            bail!("flagged {}", 7);
+        }
+        Ok(1)
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        assert!(bails(true).is_err());
+        assert_eq!(bails(false).unwrap(), 1);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+        assert_eq!(Some(5u32).context("missing").unwrap(), 5);
+    }
+}

@@ -1,0 +1,39 @@
+//! Minimal offline stand-in for the `log` facade.
+//!
+//! `warn!`/`error!` write to stderr; `info!`/`debug!`/`trace!` are
+//! compiled but silent unless `CAF_OCL_LOG=1` is set. No global logger
+//! registration — this is deliberately tiny.
+
+use std::fmt;
+
+#[doc(hidden)]
+pub fn __emit(level: &str, always: bool, args: fmt::Arguments<'_>) {
+    if always || std::env::var_os("CAF_OCL_LOG").is_some() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("ERROR", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("WARN", true, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("INFO", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit("DEBUG", false, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit("TRACE", false, format_args!($($arg)*)) };
+}

@@ -1,0 +1,44 @@
+//! Minimal offline stand-in for `once_cell`, backed by `std::sync::OnceLock`.
+
+pub mod sync {
+    /// Drop-in subset of `once_cell::sync::OnceCell`.
+    #[derive(Debug, Default)]
+    pub struct OnceCell<T> {
+        inner: std::sync::OnceLock<T>,
+    }
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> OnceCell<T> {
+            OnceCell {
+                inner: std::sync::OnceLock::new(),
+            }
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            self.inner.get()
+        }
+
+        pub fn set(&self, value: T) -> Result<(), T> {
+            self.inner.set(value)
+        }
+
+        pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+            self.inner.get_or_init(f)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::OnceCell;
+
+    #[test]
+    fn init_once() {
+        let c: OnceCell<u32> = OnceCell::new();
+        assert!(c.get().is_none());
+        assert_eq!(*c.get_or_init(|| 7), 7);
+        assert_eq!(*c.get_or_init(|| 8), 7);
+        assert_eq!(c.get(), Some(&7));
+        assert!(c.set(9).is_err());
+    }
+}

@@ -1,0 +1,292 @@
+//! Host-memory stub of the PJRT/XLA bindings.
+//!
+//! The build environment has neither network access nor the XLA C++
+//! toolchain, so this vendored crate mirrors the small API surface
+//! `caf_ocl::runtime::client` uses and keeps device buffers in host
+//! memory:
+//!
+//! * client creation, upload, download, free, and buffer recycling work
+//!   fully — which is what the actor substrate, the device command queues,
+//!   and the buffer-pool tests exercise;
+//! * `compile` records the artifact, but `execute_b` returns an error,
+//!   because interpreting HLO is out of scope for a stub. Machines with
+//!   the real XLA stack can point the `xla` dependency in
+//!   `rust/Cargo.toml` at the real bindings; the caller code is unchanged
+//!   apart from `buffer_from_host_buffer_reusing`, which degrades to a
+//!   plain allocation there.
+
+use std::fmt;
+
+/// Error type matching the real crate's shape (Display + std::error::Error).
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla::Error({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA primitive element types (subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    U32,
+    F32,
+}
+
+/// Element types storable in device buffers.
+pub trait ArrayElement: Copy {
+    const PRIMITIVE: PrimitiveType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl ArrayElement for u32 {
+    const PRIMITIVE: PrimitiveType = PrimitiveType::U32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl ArrayElement for f32 {
+    const PRIMITIVE: PrimitiveType = PrimitiveType::F32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Placeholder for the real crate's device handle.
+pub struct PjRtDevice;
+
+/// A "device" buffer (host memory in the stub).
+pub struct PjRtBuffer {
+    bytes: Vec<u8>,
+    dims: Vec<usize>,
+    prim: PrimitiveType,
+}
+
+impl PjRtBuffer {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.prim
+    }
+
+    /// Bytes of backing storage currently reserved (pool diagnostics).
+    pub fn byte_capacity(&self) -> usize {
+        self.bytes.capacity()
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal {
+            bytes: self.bytes.clone(),
+            prim: self.prim,
+        })
+    }
+}
+
+/// Host copy of a buffer.
+pub struct Literal {
+    bytes: Vec<u8>,
+    prim: PrimitiveType,
+}
+
+impl Literal {
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        if self.prim != T::PRIMITIVE {
+            return Err(Error::new(format!(
+                "literal holds {:?}, requested a different element type",
+                self.prim
+            )));
+        }
+        Ok(self.bytes.chunks_exact(4).map(T::read_le).collect())
+    }
+}
+
+/// Parsed HLO module (the stub only retains the source text).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation {
+    _text_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _text_len: proto.text.len(),
+        }
+    }
+}
+
+/// A "compiled" executable. The stub cannot interpret HLO, so execution
+/// reports an error; everything up to that point behaves like the real
+/// bindings.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(
+            "xla stub: kernel execution needs the real XLA backend \
+             (point rust/Cargo.toml's `xla` dependency at the real bindings)",
+        ))
+    }
+}
+
+/// A PJRT client; the stub's "device memory" is host memory.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        self.buffer_from_host_buffer_reusing(data, dims, None)
+    }
+
+    /// Upload that recycles a freed buffer's backing storage when one is
+    /// supplied (the device-side buffer pool's allocation-avoidance hook;
+    /// real-XLA builds ignore `recycled` and allocate fresh).
+    pub fn buffer_from_host_buffer_reusing<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        recycled: Option<PjRtBuffer>,
+    ) -> Result<PjRtBuffer> {
+        let expected: usize = dims.iter().product();
+        if expected != data.len() {
+            return Err(Error::new(format!(
+                "dims {:?} describe {expected} elements but data has {}",
+                dims,
+                data.len()
+            )));
+        }
+        let mut bytes = match recycled {
+            Some(b) => {
+                let mut v = b.bytes;
+                v.clear();
+                v
+            }
+            None => Vec::new(),
+        };
+        bytes.reserve(data.len() * 4);
+        for &x in data {
+            x.write_le(&mut bytes);
+        }
+        Ok(PjRtBuffer {
+            bytes,
+            dims: dims.to_vec(),
+            prim: T::PRIMITIVE,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let c = PjRtClient::cpu().unwrap();
+        let data: Vec<u32> = (0..128).collect();
+        let b = c.buffer_from_host_buffer(&data, &[128], None).unwrap();
+        assert_eq!(b.element_count(), 128);
+        let back: Vec<u32> = b.to_literal_sync().unwrap().to_vec().unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn recycling_reuses_allocation() {
+        let c = PjRtClient::cpu().unwrap();
+        let first = vec![1.5f32; 1024];
+        let b = c.buffer_from_host_buffer(&first, &[1024], None).unwrap();
+        let ptr_before = b.bytes.as_ptr();
+        let cap_before = b.bytes.capacity();
+        let second = vec![2.5f32; 1000];
+        let b2 = c
+            .buffer_from_host_buffer_reusing(&second, &[1000], Some(b))
+            .unwrap();
+        assert_eq!(b2.bytes.as_ptr(), ptr_before, "storage must be reused");
+        assert_eq!(b2.bytes.capacity(), cap_before);
+        let back: Vec<f32> = b2.to_literal_sync().unwrap().to_vec().unwrap();
+        assert_eq!(back.len(), 1000);
+        assert!(back.iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let c = PjRtClient::cpu().unwrap();
+        let data = vec![1u32; 4];
+        let b = c.buffer_from_host_buffer(&data, &[4], None).unwrap();
+        assert!(b.to_literal_sync().unwrap().to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn execution_reports_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        let exe = c
+            .compile(&XlaComputation::from_proto(&HloModuleProto {
+                text: String::new(),
+            }))
+            .unwrap();
+        let r = exe.execute_b::<&PjRtBuffer>(&[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let c = PjRtClient::cpu().unwrap();
+        let data = vec![1u32; 4];
+        assert!(c.buffer_from_host_buffer(&data, &[5], None).is_err());
+    }
+}
