@@ -11,7 +11,7 @@ use super::system::ActorSystem;
 use super::{AbstractActor, ActorRef};
 use std::any::Any;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{fence, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::time::Duration;
 
@@ -95,9 +95,16 @@ impl ActorCell {
     }
 
     fn schedule(self: &Arc<Self>) {
+        // SeqCst pairs with resume's IDLE-store → fence → recheck exit: the
+        // caller's mailbox count fetch_add (SeqCst) and this CAS are both in
+        // the single total order, so either this CAS observes IDLE or the
+        // consumer's post-fence recheck observes the new count — the
+        // "neither side schedules" lost-wakeup interleaving cannot occur.
+        // With the previous AcqRel CAS, StoreLoad reordering on the consumer
+        // could stall the actor permanently with queued messages.
         if self
             .state
-            .compare_exchange(IDLE, SCHEDULED, Ordering::AcqRel, Ordering::Acquire)
+            .compare_exchange(IDLE, SCHEDULED, Ordering::SeqCst, Ordering::SeqCst)
             .is_ok()
         {
             self.system.scheduler().submit(self.clone());
@@ -109,10 +116,15 @@ impl ActorCell {
     /// Messages are drained from the mailbox in one batch (a single state
     /// transition on the lock-free mailbox) into `batch`, a worker-owned
     /// reusable buffer — no per-slice allocation. System messages arriving
-    /// mid-batch still overtake the rest of the snapshot (one cheap
-    /// `try_dequeue_system` probe per processed message), and if the actor
-    /// terminates mid-batch the not-yet-processed remainder is bounced
-    /// exactly like `Mailbox::close` bounces queued requests.
+    /// mid-batch still overtake the snapshot's ordinary messages (one cheap
+    /// `try_dequeue_system` probe per processed ordinary message — never
+    /// over the snapshot's own system messages, which are older), and if
+    /// the actor terminates mid-batch the not-yet-processed remainder is
+    /// bounced
+    /// exactly like `Mailbox::close` bounces queued requests. A behavior
+    /// change that replays stashed envelopes ends the slice early: the rest
+    /// of the batch is spliced back behind the replayed envelopes so
+    /// stash-replay ordering matches the seed's per-message dequeue.
     pub(crate) fn resume(
         self: &Arc<Self>,
         throughput: usize,
@@ -127,18 +139,63 @@ impl ActorCell {
         }
         batch.clear();
         self.mailbox.dequeue_batch(throughput, batch);
+        // Replay envelopes left over from before this slice (rare: only
+        // when the replay deque outgrew `throughput`). Any growth past this
+        // base during the slice is a fresh unstash from a behavior change;
+        // those replayed envelopes must run before the rest of this drained
+        // batch (the seed's per-message dequeue gave stash replay that
+        // ordering for free), so the first *ordinary* remainder envelope
+        // triggers a splice-back and ends the slice. System envelopes keep
+        // processing first — system priority also beats replayed traffic —
+        // which preserves system-lane FIFO instead of demoting snapshot
+        // system messages into the replay deque.
+        let replay_base = self.mailbox.replay_len();
         let mut it = batch.drain(..);
         while let Some(env) = it.next() {
-            // system-priority overtake across the batch snapshot
-            while let Some(sys) = self.mailbox.try_dequeue_system() {
-                self.process_guarded(sys);
-                if self.state.load(Ordering::Acquire) == CLOSED {
-                    return self.bounce_remainder(it);
+            let ordinary = !is_system_payload(&env.msg);
+            if ordinary {
+                let at = self.fresh_unstash(replay_base);
+                if at > 0 {
+                    // a system message earlier in this batch unstashed
+                    // envelopes (deferred splice, see below); `env` and the
+                    // rest of the batch run after them
+                    return self.requeue_and_reschedule(at, std::iter::once(env).chain(it));
+                }
+                // System-priority overtake across the batch snapshot.
+                // Skipped while `env` itself is a system message: the
+                // snapshot's system envelopes are older than anything still
+                // in the lane — probing there would process younger system
+                // messages first and break the system lane's FIFO order.
+                while let Some(sys) = self.mailbox.try_dequeue_system() {
+                    self.process_guarded(sys);
+                    if self.state.load(Ordering::Acquire) == CLOSED {
+                        // `env` was drained but not processed: it is part
+                        // of the remainder and must be bounced too
+                        return self.bounce_remainder(std::iter::once(env).chain(it));
+                    }
+                    let at = self.fresh_unstash(replay_base);
+                    if at > 0 {
+                        return self.requeue_and_reschedule(at, std::iter::once(env).chain(it));
+                    }
                 }
             }
             self.process_guarded(env);
             if self.state.load(Ordering::Acquire) == CLOSED {
                 return self.bounce_remainder(it);
+            }
+            let at = self.fresh_unstash(replay_base);
+            if at > 0 && ordinary {
+                // A behavior change just replayed stashed envelopes, which
+                // must run before anything that arrived after them —
+                // including the rest of this drained batch (the seed's
+                // per-message dequeue got that ordering for free). `env`
+                // was ordinary, so the remainder is all ordinary: splice it
+                // behind the replayed envelopes and end the slice. When a
+                // *system* message unstashes instead, the splice is
+                // deferred: the snapshot's remaining system envelopes
+                // outrank replayed traffic and keep processing; the first
+                // ordinary envelope splices at the top of the loop.
+                return self.requeue_and_reschedule(at, it);
             }
         }
         drop(it);
@@ -146,6 +203,14 @@ impl ActorCell {
         // concurrent enqueues) or straight to SCHEDULED when work remains.
         if self.mailbox.is_empty() {
             self.state.store(IDLE, Ordering::Release);
+            // Dekker handshake with concurrent enqueuers, mirroring
+            // worker_loop's announce → fence → re-check park protocol:
+            // without this fence the IDLE store can sit in the store buffer
+            // while the recheck below reads a stale count of 0, while a
+            // sender's CAS in schedule() still reads RUNNING — neither side
+            // schedules, and every later enqueue sees a nonzero count
+            // (Stored) and never schedules either.
+            fence(Ordering::SeqCst);
             if !self.mailbox.is_empty() {
                 self.schedule();
             }
@@ -169,11 +234,29 @@ impl ActorCell {
         }
     }
 
+    /// Envelopes unstashed since the slice began (`base` = the replay-deque
+    /// length sampled right after the batch drain).
+    fn fresh_unstash(&self, base: usize) -> usize {
+        self.mailbox.replay_len().saturating_sub(base)
+    }
+
+    /// Splice the unprocessed batch remainder behind the `at` freshly
+    /// replayed envelopes and hand the slice back to the scheduler.
+    fn requeue_and_reschedule(
+        self: &Arc<Self>,
+        at: usize,
+        rest: impl Iterator<Item = Envelope>,
+    ) -> ResumeResult {
+        self.mailbox.requeue_remainder(at, rest);
+        self.state.store(SCHEDULED, Ordering::Release);
+        ResumeResult::Reschedule
+    }
+
     /// The actor died mid-batch: dead-letter the rest of the drained
     /// snapshot so requesters get an error instead of silence.
     fn bounce_remainder(
         self: &Arc<Self>,
-        it: std::vec::Drain<'_, Envelope>,
+        it: impl Iterator<Item = Envelope>,
     ) -> ResumeResult {
         let me_ref = self.self_ref();
         for rest in it {

@@ -45,8 +45,9 @@ const COUNT_MASK: u64 = CLOSED_BIT - 1;
 /// Two-priority lock-free mailbox.
 ///
 /// Producers (`enqueue`) may be any threads. The consumer-side operations —
-/// `dequeue`, `dequeue_batch`, `push_front`, `close` — must only be invoked
-/// by the single thread currently executing the owning actor (the scheduler
+/// `dequeue`, `dequeue_batch`, `try_dequeue_system`, `push_front`,
+/// `replay_len`, `requeue_remainder`, `close` — must only be invoked by the
+/// single thread currently executing the owning actor (the scheduler
 /// guarantees this via the IDLE/SCHEDULED/RUNNING state machine).
 pub struct Mailbox {
     /// `count | closed-bit`, counting both lanes plus the replay deque.
@@ -139,21 +140,60 @@ impl Mailbox {
     /// Drain up to `max` envelopes into `out` under a single state
     /// transition (one `fetch_sub` for the whole batch) instead of one
     /// decrement per message. Consumer-side. Returns the number drained.
+    ///
+    /// The batch always has the shape `[system..., ordinary...]`: the
+    /// system lane is drained *before* the replay deque and the normal
+    /// lane, and never re-probed mid-drain, so a system message linked
+    /// while the ordinary lanes drain stays in the lane (it is younger
+    /// than everything in the batch; `resume`'s overtake probe picks it
+    /// up). Both `resume`'s probe-skip rule and its stash-replay splice
+    /// rely on that prefix shape.
     pub fn dequeue_batch(&self, max: usize, out: &mut Vec<Envelope>) -> usize {
         let mut got = 0usize;
         let mut spins = 0u32;
+        // phase 1: the system lane
+        while got < max {
+            let s = self.state.load(Ordering::Acquire);
+            if ((s & COUNT_MASK) as usize) <= got {
+                break;
+            }
+            match self.system.pop() {
+                Some(e) => {
+                    out.push(e);
+                    got += 1;
+                }
+                // the lane looks empty — the remaining count is ordinary
+                // traffic (or a mid-push system producer, which then just
+                // stays for the overtake probe)
+                None => break,
+            }
+        }
+        // phase 2: replay deque, then the normal lane
         while got < max {
             let s = self.state.load(Ordering::Acquire);
             if ((s & COUNT_MASK) as usize) <= got {
                 break; // nothing queued beyond what we already took
             }
-            match self.pop_any() {
-                Some(e) => {
-                    out.push(e);
-                    got += 1;
-                }
-                None => spin_backoff(&mut spins),
+            // SAFETY: consumer-side contract — exclusive access to `replay`.
+            if let Some(e) = unsafe { (*self.replay.get()).pop_front() } {
+                out.push(e);
+                got += 1;
+                continue;
             }
+            if let Some(e) = self.normal.pop() {
+                out.push(e);
+                got += 1;
+                continue;
+            }
+            // count > got but nothing visible here: either an ordinary
+            // producer is mid-push (resolves in a few cycles) or the count
+            // belongs to a system message that arrived after phase 1. Spin
+            // briefly for the former, then hand back what we have — the
+            // caller sees the nonzero count and reschedules.
+            if spins >= 128 {
+                break;
+            }
+            spin_backoff(&mut spins);
         }
         if got > 0 {
             self.state.fetch_sub(got as u64, Ordering::AcqRel);
@@ -169,6 +209,41 @@ impl Mailbox {
         let e = self.system.pop()?;
         self.state.fetch_sub(1, Ordering::AcqRel);
         Some(e)
+    }
+
+    /// Consumer-side: number of envelopes waiting in the replay deque.
+    /// `resume` samples this around each dispatch to detect that the
+    /// message it just processed unstashed envelopes via a behavior change.
+    pub(crate) fn replay_len(&self) -> usize {
+        // SAFETY: consumer-side contract — exclusive access to `replay`.
+        unsafe { (*self.replay.get()).len() }
+    }
+
+    /// Consumer-side: splice the unprocessed remainder of a drained batch
+    /// back into the replay deque at position `at` — after the `at`
+    /// envelopes a behavior change just unstashed (the stash contract says
+    /// those run first), but ahead of everything older still queued (any
+    /// replay leftover beyond the batch size, then the normal lane) — and
+    /// re-count the envelopes in the state word.
+    pub(crate) fn requeue_remainder(
+        &self,
+        at: usize,
+        rest: impl Iterator<Item = Envelope>,
+    ) {
+        // SAFETY: consumer-side contract — exclusive access to `replay`.
+        let replay = unsafe { &mut *self.replay.get() };
+        // split/extend/append keeps the splice O(at + remainder) instead of
+        // the O(at * remainder) of repeated VecDeque::insert
+        let mut tail = replay.split_off(at);
+        let mut n = 0u64;
+        for e in rest {
+            replay.push_back(e);
+            n += 1;
+        }
+        replay.append(&mut tail);
+        if n > 0 {
+            self.state.fetch_add(n, Ordering::SeqCst);
+        }
     }
 
     /// Consumer-side raw pop in priority order, without touching the count.
@@ -202,11 +277,28 @@ impl Mailbox {
         let n = (prev & COUNT_MASK) as usize;
         let mut out = Vec::with_capacity(n);
         let mut spins = 0u32;
+        // An announced producer (count incremented, node not yet linked)
+        // holds us in this loop for a two-instruction window — unless its
+        // thread was preempted or killed mid-enqueue, in which case the spin
+        // is unbounded. Producers never block inside the window, so in
+        // practice it resolves in a few cycles; surface the pathological
+        // case instead of wedging silently (close() runs on a scheduler
+        // worker during terminate).
+        const STUCK_PRODUCER_SPINS: u32 = 1 << 20;
         while out.len() < n {
             match self.pop_any() {
                 Some(e) => out.push(e),
                 // an announced producer is mid-push; wait it out
-                None => spin_backoff(&mut spins),
+                None => {
+                    if spins == STUCK_PRODUCER_SPINS {
+                        log::warn!(
+                            "mailbox close: {spins} spins waiting for an announced \
+                             producer to finish linking its envelope — its thread \
+                             was likely preempted for a long time or died mid-push"
+                        );
+                    }
+                    spin_backoff(&mut spins);
+                }
             }
         }
         self.state.fetch_sub(n as u64, Ordering::AcqRel);
@@ -278,6 +370,21 @@ mod tests {
         let rejected = mb.push_front(env(7)).unwrap_err();
         assert_eq!(tag(&rejected), 7);
         assert_eq!(mb.len(), 0);
+    }
+
+    #[test]
+    fn requeue_remainder_orders_and_counts() {
+        let mb = Mailbox::new();
+        mb.enqueue(env(10), false); // normal lane
+        mb.push_front(env(2)).unwrap(); // pre-existing replay leftover
+        mb.push_front(env(1)).unwrap(); // fresh unstash, lands in front
+        // splice a batch remainder behind the 1 freshly unstashed envelope
+        // but ahead of the older leftover and the normal lane
+        mb.requeue_remainder(1, vec![env(5), env(6)].into_iter());
+        assert_eq!(mb.len(), 5);
+        let order: Vec<u32> =
+            std::iter::from_fn(|| mb.dequeue()).map(|e| tag(&e)).collect();
+        assert_eq!(order, vec![1, 5, 6, 2, 10]);
     }
 
     #[test]

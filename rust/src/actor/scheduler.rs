@@ -27,7 +27,7 @@
 
 use super::cell::{ActorCell, ResumeResult};
 use super::envelope::Envelope;
-use crate::concurrent::{CountedQueue, Parker, Steal, WorkDeque};
+use crate::concurrent::{spin_backoff, CountedQueue, Parker, Steal, WorkDeque};
 use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -176,11 +176,13 @@ fn worker_loop(shared: Arc<Shared>, me: usize) {
     let bit = 1u64 << me;
     // reusable per-slice envelope buffer (no per-resume allocation)
     let mut batch: Vec<Envelope> = Vec::with_capacity(shared.throughput);
+    let mut idle_spins = 0u32;
     loop {
         if shared.shutdown.load(Ordering::Acquire) {
             return;
         }
         if let Some(cell) = find_job(&shared, me) {
+            idle_spins = 0;
             shared.resumes.fetch_add(1, Ordering::Relaxed);
             if let ResumeResult::Reschedule = cell.resume(shared.throughput, &mut batch) {
                 // SAFETY: we are worker `me`, the deque owner.
@@ -193,10 +195,21 @@ fn worker_loop(shared: Arc<Shared>, me: usize) {
         fence(Ordering::SeqCst);
         if shared.shutdown.load(Ordering::SeqCst) || work_available(&shared) {
             shared.sleepers.fetch_and(!bit, Ordering::SeqCst);
+            // Work is visible but find_job couldn't claim it: a producer
+            // mid-push, the injector claim held elsewhere, or contended
+            // steals. Back off (yields every 64 spins) instead of looping
+            // at full speed — on an oversubscribed host a hot loop here
+            // starves the very producer it is waiting for.
+            spin_backoff(&mut idle_spins);
             continue;
         }
         shared.shards[me].parker.park();
-        // whoever woke us already cleared our sleeper bit
+        // A wake_any-delivered wake cleared our bit before unparking, but
+        // park() can also return on a stale banked token (an unpark that
+        // raced an earlier round's re-check window). Clear unconditionally:
+        // a set bit on a running worker would soak up wake_any's single
+        // wake, leaving a genuinely parked worker asleep behind a busy one.
+        shared.sleepers.fetch_and(!bit, Ordering::SeqCst);
     }
 }
 
@@ -343,6 +356,38 @@ mod tests {
         // generous bound; a reintroduced poll-based sleep (300 x 10 ms
         // floor) would trip it even on a loaded machine
         assert!(t0.elapsed() < Duration::from_secs(30));
+        sys.shutdown();
+    }
+
+    /// Regression stress for the *other* lost-wakeup window, the
+    /// RUNNING→IDLE exit in `ActorCell::resume`: the IDLE store plus the
+    /// mailbox recheck form a Dekker handshake with a sender's `schedule()`
+    /// CAS. Without the SeqCst fence between store and recheck (and SeqCst
+    /// on the CAS), a message can land with neither side scheduling the
+    /// actor, which then stalls forever. Request/response round-trips put
+    /// every follow-up enqueue right at that exit window; a lost wakeup
+    /// surfaces as a receive timeout.
+    #[test]
+    fn idle_transition_never_loses_enqueue() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let echo = sys.spawn(|_| Behavior::new().on(|_c, &x: &u32| reply(x)));
+        std::thread::scope(|s| {
+            for t in 0..2u32 {
+                let sys = &sys;
+                let echo = echo.clone();
+                s.spawn(move || {
+                    let me = sys.scoped();
+                    for i in 0..10_000u32 {
+                        let v = (t << 16) | i;
+                        let r: u32 = me
+                            .request(&echo, v)
+                            .receive(Duration::from_secs(5))
+                            .expect("lost wakeup: actor stalled with a queued message");
+                        assert_eq!(r, v);
+                    }
+                });
+            }
+        });
         sys.shutdown();
     }
 

@@ -12,6 +12,16 @@
 //! retired memory is strictly smaller than the live buffer, so the
 //! overhead is bounded — the standard trade for not needing epoch-based
 //! reclamation.
+//!
+//! Known caveat (shared with crossbeam-deque): `steal` bit-copies a slot
+//! before the top CAS validates ownership, and the owner's `push` can
+//! concurrently overwrite that physical slot after other stealers advance
+//! `top` far enough to wrap around. That racing read is formally a data
+//! race — UB under the abstract memory model; Miri/TSan would flag it —
+//! tolerated in practice on mainstream targets because the torn copy is
+//! only kept when the CAS proves no overwrite happened and is `forget`ten
+//! otherwise. The defined-behavior alternative (copying slots as atomic
+//! words) pessimizes the hot path; see the comment in [`WorkDeque::steal`].
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
@@ -160,6 +170,14 @@ impl<T> WorkDeque<T> {
             // SAFETY: t < b means slot t was initialized; the read is a bit
             // copy and ownership is decided by the CAS below — on failure
             // the copy is forgotten, never dropped.
+            //
+            // ACCEPTED UB: if other stealers advance `top` past us and the
+            // owner pushes enough to wrap around onto this physical slot,
+            // this non-atomic read races with that write (the classic
+            // Chase–Lev / crossbeam-deque caveat). The torn value never
+            // escapes: the CAS below then necessarily fails (top moved) and
+            // the copy is forgotten. Making the race defined would require
+            // per-word atomic slot copies on every steal.
             let v = unsafe { (*a).read(t) };
             if self
                 .top

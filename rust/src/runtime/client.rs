@@ -239,7 +239,8 @@ pub struct PoolConfig {
     pub enabled: bool,
     /// Max buffers kept per (dtype, size-class) bucket.
     pub max_per_class: usize,
-    /// Cap on total pooled bytes (size-class upper bounds).
+    /// Cap on total pooled bytes (counted as each entry's size-class lower
+    /// bound, `1 << class_filled(bytes)`).
     pub max_bytes: usize,
 }
 
@@ -253,9 +254,20 @@ impl Default for PoolConfig {
     }
 }
 
-/// log2 size class covering `bytes`.
-fn size_class(bytes: usize) -> u32 {
+/// log2 size class *covering* `bytes` (round up) — the lookup key for an
+/// upload of that many bytes.
+fn class_covering(bytes: usize) -> u32 {
     bytes.max(1).next_power_of_two().trailing_zeros()
+}
+
+/// log2 size class a buffer of `bytes` bytes *fills* (round down) — the
+/// filing key for a freed buffer. Rounding the two keys in opposite
+/// directions guarantees every hit's storage is at least as large as the
+/// request, so a recycled buffer never has to reallocate (a same-class-by-
+/// round-up match could otherwise be smaller than the request and count a
+/// pool hit that still pays the allocation).
+fn class_filled(bytes: usize) -> u32 {
+    usize::BITS - 1 - bytes.max(1).leading_zeros()
 }
 
 /// Freed-buffer pool living on the queue thread (single-threaded — the
@@ -277,20 +289,20 @@ impl BufferPool {
 
     /// Take a recyclable buffer for an upload of `bytes` bytes of `dtype`.
     fn take(&mut self, dtype: Dtype, bytes: usize) -> Option<xla::PjRtBuffer> {
-        let class = size_class(bytes);
+        let class = class_covering(bytes);
         let bucket = self.classes.get_mut(&(dtype, class))?;
         let buf = bucket.pop()?;
         self.bytes = self.bytes.saturating_sub(1usize << class);
         Some(buf)
     }
 
-    /// Return a freed buffer of `len` elements; returns false when the
+    /// Return a freed buffer of `bytes` bytes; returns false when the
     /// buffer was evicted instead (pool full or disabled).
-    fn put(&mut self, dtype: Dtype, len: usize, buf: xla::PjRtBuffer) -> bool {
+    fn put(&mut self, dtype: Dtype, bytes: usize, buf: xla::PjRtBuffer) -> bool {
         if !self.cfg.enabled {
             return false;
         }
-        let class = size_class(len * 4);
+        let class = class_filled(bytes);
         let class_bytes = 1usize << class;
         if self.bytes + class_bytes > self.cfg.max_bytes {
             return false;
@@ -481,11 +493,39 @@ impl Drop for DeviceQueue {
 struct Buffer {
     buf: xla::PjRtBuffer,
     dtype: Dtype,
-    /// Element count (size-class key on free).
-    len: usize,
+    /// Byte size (size-class key on free); keying on bytes rather than an
+    /// element count keeps the pool correct for any future element width.
+    bytes: usize,
     /// Upload-originated buffers can be recycled; executable outputs come
     /// from the backend and cannot back a future upload.
     poolable: bool,
+}
+
+/// Upload adapter over the two `xla` backends. The vendored host-memory
+/// stub exposes `buffer_from_host_buffer_reusing` (the buffer pool's
+/// allocation-avoidance hook); the real PJRT bindings do not. The
+/// `xla-stub` feature (on by default) selects the recycling call; builds
+/// that point `xla` at the real bindings (`--no-default-features`) drop the
+/// recycled buffer and allocate fresh, so the crate compiles against both.
+#[cfg(feature = "xla-stub")]
+fn upload_host_buffer<T: xla::ArrayElement>(
+    client: &xla::PjRtClient,
+    data: &[T],
+    dims: &[usize],
+    recycled: Option<xla::PjRtBuffer>,
+) -> xla::Result<xla::PjRtBuffer> {
+    client.buffer_from_host_buffer_reusing(data, dims, recycled)
+}
+
+#[cfg(not(feature = "xla-stub"))]
+fn upload_host_buffer<T: xla::ArrayElement>(
+    client: &xla::PjRtClient,
+    data: &[T],
+    dims: &[usize],
+    recycled: Option<xla::PjRtBuffer>,
+) -> xla::Result<xla::PjRtBuffer> {
+    drop(recycled); // no recycling hook in the real bindings
+    client.buffer_from_host_buffer(data, dims, None)
 }
 
 fn queue_loop(
@@ -511,6 +551,14 @@ fn queue_loop(
     };
     let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
     let mut buffers: HashMap<u64, Buffer> = HashMap::new();
+    // Without the stub's recycling hook the pool could never hand a buffer
+    // back to an upload — retaining freed buffers would pin device memory
+    // (up to max_bytes) and report pool hits that save nothing.
+    #[cfg(not(feature = "xla-stub"))]
+    let pool_cfg = PoolConfig {
+        enabled: false,
+        ..pool_cfg
+    };
     let mut pool = BufferPool::new(pool_cfg);
 
     while let Some(cmd) = cmds.pop() {
@@ -538,11 +586,11 @@ fn queue_loop(
                     p.pad_for(p.transfer_pad(data.bytes()));
                 }
                 let dtype = data.dtype();
-                let len = data.bytes() / 4;
+                let byte_len = data.bytes();
                 // recycle a freed same-class buffer instead of allocating;
                 // pool entries were inserted when their Free retired, so
                 // every prior command touching them has completed
-                let recycled = pool.take(dtype, data.bytes());
+                let recycled = pool.take(dtype, byte_len);
                 if recycled.is_some() {
                     stats.pool_hits.fetch_add(1, Ordering::Relaxed);
                 } else {
@@ -550,16 +598,16 @@ fn queue_loop(
                 }
                 let res = match &data {
                     UploadSrc::Owned(HostData::U32(v)) => {
-                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
+                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
                     }
                     UploadSrc::SharedU32(v) => {
-                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
+                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
                     }
                     UploadSrc::Owned(HostData::F32(v)) => {
-                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
+                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
                     }
                     UploadSrc::SharedF32(v) => {
-                        client.buffer_from_host_buffer_reusing(&v[..], &[v.len()], recycled)
+                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
                     }
                 };
                 match res {
@@ -569,7 +617,7 @@ fn queue_loop(
                             Buffer {
                                 buf,
                                 dtype,
-                                len,
+                                bytes: byte_len,
                                 poolable: true,
                             },
                         );
@@ -634,7 +682,7 @@ fn queue_loop(
                             Buffer {
                                 buf,
                                 dtype: out_dtype,
-                                len: 0,
+                                bytes: 0,
                                 poolable: false, // backend-owned output
                             },
                         );
@@ -662,7 +710,7 @@ fn queue_loop(
             QueueCmd::Free { id } => {
                 if let Some(b) = buffers.remove(&id) {
                     if b.poolable {
-                        if pool.put(b.dtype, b.len, b.buf) {
+                        if pool.put(b.dtype, b.bytes, b.buf) {
                             stats.pool_returned.fetch_add(1, Ordering::Relaxed);
                         } else {
                             stats.pool_evicted.fetch_add(1, Ordering::Relaxed);

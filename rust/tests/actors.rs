@@ -101,6 +101,59 @@ fn behavior_change_unstashes() {
     sys.shutdown();
 }
 
+/// Regression test for batched `resume` vs the stash contract: a behavior
+/// change that replays stashed envelopes must run them before younger
+/// messages that were already drained into the same batch snapshot. The
+/// single worker is held busy so `1`, `Go`, `2` all land in one batch;
+/// processing `Go` unstashes `1`, and the fix splices the remainder (`2`)
+/// back behind it — without it, `2` runs before the replayed `1`.
+#[test]
+fn stash_replay_precedes_batch_remainder() {
+    use std::sync::Mutex;
+    use std::time::Instant;
+    let sys = ActorSystem::new(SystemConfig::default().with_threads(1));
+    #[derive(Clone, Copy)]
+    struct Go;
+    let seen = Arc::new(Mutex::new(Vec::<u32>::new()));
+    let s = seen.clone();
+    let actor = sys.spawn(move |_| {
+        let s = s.clone();
+        Behavior::new().on(move |ctx, _: &Go| {
+            let s = s.clone();
+            ctx.become_(Behavior::new().on(move |_ctx, &x: &u32| {
+                s.lock().unwrap().push(x);
+                no_reply()
+            }));
+            no_reply()
+        })
+    });
+    let gate = sys.spawn(|_| {
+        Behavior::new().on(|_ctx, &ms: &u64| {
+            std::thread::sleep(Duration::from_millis(ms));
+            no_reply()
+        })
+    });
+    let me = sys.scoped();
+    // occupy the lone worker so the three sends below queue up into a
+    // single batch for the actor's next slice
+    me.send(&gate, 200u64);
+    std::thread::sleep(Duration::from_millis(50));
+    me.send(&actor, 1u32); // no handler yet: stashed
+    me.send(&actor, Go); // unstashes 1 mid-batch
+    me.send(&actor, 2u32); // batch remainder — must run after the replay
+    let deadline = Instant::now() + T;
+    loop {
+        let v = seen.lock().unwrap().clone();
+        if v.len() == 2 {
+            assert_eq!(v, vec![1, 2], "stash replay overtaken by younger batch message");
+            break;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for both messages; saw {v:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    sys.shutdown();
+}
+
 #[test]
 fn monitor_receives_down() {
     let sys = sys();

@@ -135,7 +135,12 @@ fn pad_model_slows_down_device() {
 
 // --- buffer pool (no artifacts needed: upload/free/download run on the
 // --- host-memory backend) ---------------------------------------------
+//
+// Tests asserting actual recycling are gated on `xla-stub`: without the
+// stub's `buffer_from_host_buffer_reusing` hook the pool is force-disabled
+// in queue_loop, so hits/returns are structurally zero there.
 
+#[cfg(feature = "xla-stub")]
 #[test]
 fn buffer_pool_recycles_by_dtype_and_size_class() {
     let q = DeviceQueue::start("pool1", None).unwrap();
@@ -173,6 +178,7 @@ fn buffer_pool_recycles_by_dtype_and_size_class() {
     q.stop();
 }
 
+#[cfg(feature = "xla-stub")]
 #[test]
 fn pooled_buffer_not_reused_before_prior_commands_retire() {
     use caf_ocl::runtime::client::PadModel;
@@ -208,6 +214,7 @@ fn pooled_buffer_not_reused_before_prior_commands_retire() {
     slow.stop();
 }
 
+#[cfg(feature = "xla-stub")]
 #[test]
 fn pool_eviction_respects_caps() {
     let q = DeviceQueue::start_with(

@@ -11,9 +11,11 @@
 //! * `compile` records the artifact, but `execute_b` returns an error,
 //!   because interpreting HLO is out of scope for a stub. Machines with
 //!   the real XLA stack can point the `xla` dependency in
-//!   `rust/Cargo.toml` at the real bindings; the caller code is unchanged
-//!   apart from `buffer_from_host_buffer_reusing`, which degrades to a
-//!   plain allocation there.
+//!   `rust/Cargo.toml` at the real bindings and build with
+//!   `--no-default-features`: the one stub-only API,
+//!   `buffer_from_host_buffer_reusing`, is gated behind the `xla-stub`
+//!   feature in `runtime::client` and degrades to a plain allocation when
+//!   the feature is off, so caller code compiles against both backends.
 
 use std::fmt;
 
