@@ -1,30 +1,50 @@
 //! Network transparency (paper §3.1 "location transparency" + §3.5's
-//! mem_ref restriction): two actor systems on one host talk over TCP; the
-//! client drives the server's published OpenCL actor through a proxy handle
-//! that is indistinguishable from a local one — and sending a `mem_ref`
-//! across the wire raises the documented error.
+//! mem_ref restriction): two actor systems on one host talk over TCP.
+//! Node A owns the device and publishes an OpenCL facade; node B has no
+//! device at all and drives the kernel remotely with `Vec<ArgValue>`
+//! requests through a proxy handle that is indistinguishable from a local
+//! one. Sending a `mem_ref` across the wire — bare or inside an argument
+//! list — raises the documented error on the *sender*.
+//!
+//! Runs out of the box on the stub backend (host-emulated kernels, no
+//! `make artifacts` needed):
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example distributed
+//! cargo run --release --example distributed
 //! ```
 
 use caf_ocl::actor::{ActorSystem, SystemConfig};
 use caf_ocl::net::Node;
-use caf_ocl::opencl::{Manager, MemRef, Mode, OpenClSystemExt};
+use caf_ocl::opencl::{ArgValue, Manager, MemRef, Mode, OpenClSystemExt};
 use std::time::Duration;
 
 const T: Duration = Duration::from_secs(60);
 
+/// Write a stub-backend manifest: host-emulated kernels (`emu=` extras,
+/// see `runtime::client::HostOp`) that exercise the full facade pipeline —
+/// upload, execute, download, events — without a real XLA backend.
+fn stub_artifacts() -> anyhow::Result<String> {
+    let dir = std::env::temp_dir().join(format!("caf-ocl-distributed-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "vadd_f32_4096|emu|f32:4096 f32:4096|f32:4096|emu=add n=4096\n\
+         stage_u32_4096|emu|u32:4096|u32:4096|emu=identity n=4096\n",
+    )?;
+    Ok(dir.to_string_lossy().to_string())
+}
+
 fn main() -> anyhow::Result<()> {
     // ---- "server" process: owns the device, publishes the kernel actor ---
-    let server_sys = ActorSystem::new(SystemConfig::default());
+    let server_sys =
+        ActorSystem::new(SystemConfig::default().with_artifacts_dir(stub_artifacts()?));
     Manager::load(&server_sys);
     let server_mngr = server_sys.opencl_manager();
-    let kernel_actor = server_mngr.spawn_simple("empty_1024", Mode::Val, Mode::Val)?;
+    let kernel_actor = server_mngr.spawn_simple("vadd_f32_4096", Mode::Val, Mode::Val)?;
     // facades register under names like any actor
     server_sys.registry().put("device-worker", kernel_actor);
     // a ref-producing facade for the negative test
-    let ref_actor = server_mngr.spawn_simple("empty_1024", Mode::Val, Mode::Ref)?;
+    let ref_actor = server_mngr.spawn_simple("stage_u32_4096", Mode::Val, Mode::Ref)?;
     let server = Node::new(&server_sys);
     let addr = server.listen("127.0.0.1:0")?;
     println!("server published 'device-worker' at {addr}");
@@ -35,29 +55,39 @@ fn main() -> anyhow::Result<()> {
     let remote = client.remote_actor(&addr.to_string(), "device-worker")?;
     println!("client proxy: {remote:?}");
 
+    // the paper's scenario: kernel inputs travel as a typed argument list
+    let a: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..4096).map(|i| (i * 7) as f32).collect();
+    let args = vec![ArgValue::from(a.clone()), ArgValue::from(b.clone())];
     let me = client_sys.scoped();
-    let data: Vec<u32> = (0..1024).map(|i| i * 7).collect();
-    let out: Vec<u32> = me
-        .request(&remote, data.clone())
+    let out: Vec<f32> = me
+        .request(&remote, args)
         .receive(T)
         .map_err(|e| anyhow::anyhow!(e.reason))?;
-    assert_eq!(out, data);
-    println!("remote kernel round-trip OK ({} words)", out.len());
+    let expect: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    assert_eq!(out, expect);
+    println!("remote kernel round-trip OK ({} words summed)", out.len());
 
     // ---- the mem_ref restriction (design option (a)) ----------------------
     let server_me = server_sys.scoped();
     let r: MemRef = server_me
-        .request(&ref_actor, data.clone())
+        .request(&ref_actor, (0..4096u32).collect::<Vec<u32>>())
         .receive(T)
         .map_err(|e| anyhow::anyhow!(e.reason))?;
-    let err = server_me.request(&remote, r).receive_msg(T);
+    let err = server_me
+        .request(&remote, vec![ArgValue::Ref(r)])
+        .receive_msg(T);
     match err {
-        Err(e) => println!("sending a mem_ref over the wire correctly failed:\n  {}", e.reason),
+        Err(e) => println!(
+            "sending a mem_ref over the wire correctly failed:\n  {}",
+            e.reason
+        ),
         Ok(_) => anyhow::bail!("mem_ref crossed the network — restriction broken!"),
     }
 
     println!("distributed OK");
     server.stop();
+    client.stop();
     server_mngr.stop_devices();
     client_sys.shutdown();
     server_sys.shutdown();

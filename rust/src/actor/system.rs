@@ -26,6 +26,13 @@ pub struct SystemConfig {
     pub max_stash: usize,
     /// Directory holding the AOT artifacts + manifest for the OpenCL module.
     pub artifacts_dir: String,
+    /// Deadline for requests issued through a remote proxy (`net::Node`):
+    /// a pending remote request that has not been answered within this
+    /// window fails with an [`ErrorMsg`] instead of leaking in the
+    /// connection's pending map. Also bounds connection establishment.
+    ///
+    /// [`ErrorMsg`]: super::monitor::ErrorMsg
+    pub remote_actor_timeout: Duration,
 }
 
 impl Default for SystemConfig {
@@ -37,6 +44,7 @@ impl Default for SystemConfig {
             throughput: 25,
             max_stash: 1024,
             artifacts_dir: "artifacts".to_string(),
+            remote_actor_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -44,6 +52,11 @@ impl Default for SystemConfig {
 impl SystemConfig {
     pub fn with_threads(mut self, n: usize) -> Self {
         self.scheduler_threads = n;
+        self
+    }
+
+    pub fn with_remote_timeout(mut self, d: Duration) -> Self {
+        self.remote_actor_timeout = d;
         self
     }
 

@@ -2,9 +2,20 @@
 //! unavailable offline; DESIGN.md §3). Tag byte + little-endian payload for
 //! the message types that may legally cross node boundaries.
 //!
+//! `Vec<ArgValue>` — the kernel-invocation payload of the paper's OpenCL
+//! actors — has a self-describing encoding (`TAG_ARGS`): an argument count
+//! followed by one element-tagged vector per argument, so a remote client
+//! can drive a published facade without flattening its inputs into ad-hoc
+//! tuples.
+//!
 //! Device references ([`MemRef`], [`ArgValue`] vectors containing them) are
 //! rejected with [`CodecError::DeviceLocal`] — the paper's design
 //! option (a).
+//!
+//! Decoding is length-validated end to end: every vector preallocation is
+//! clamped to the bytes actually remaining in the buffer, so a crafted
+//! count (`0xFFFF_FFFF` elements in a 20-byte frame) fails with
+//! [`CodecError::Malformed`] instead of reserving gigabytes.
 //!
 //! [`MemRef`]: crate::opencl::MemRef
 //! [`ArgValue`]: crate::opencl::ArgValue
@@ -51,6 +62,12 @@ const TAG_UNIT: u8 = 9;
 const TAG_ERROR: u8 = 10;
 const TAG_PAIR_VEC_U32: u8 = 11;
 const TAG_PAIR_VEC_F32: u8 = 12;
+const TAG_ARGS: u8 = 13;
+
+// Element tags inside a TAG_ARGS payload (one per ArgValue variant with a
+// wire representation; `Ref` deliberately has none — design option (a)).
+const ARG_U32: u8 = 1;
+const ARG_F32: u8 = 2;
 
 fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(&(b.len() as u32).to_le_bytes());
@@ -81,10 +98,7 @@ pub fn encode_message(msg: &Message) -> Result<Vec<u8>, CodecError> {
         return Err(CodecError::DeviceLocal);
     }
     if let Some(args) = msg.downcast_ref::<Vec<ArgValue>>() {
-        if args.iter().any(|a| a.is_ref()) {
-            return Err(CodecError::DeviceLocal);
-        }
-        return Err(CodecError::Unsupported("Vec<ArgValue> (flatten first)"));
+        return encode_args(args);
     }
     let mut out = Vec::new();
     if let Some(&x) = msg.downcast_ref::<u32>() {
@@ -130,6 +144,32 @@ pub fn encode_message(msg: &Message) -> Result<Vec<u8>, CodecError> {
     Ok(out)
 }
 
+/// Serialize a kernel-argument list (`TAG_ARGS`): `count:u32` then one
+/// `elem_tag:u8 len:u32 data` record per argument. A `Ref` anywhere in the
+/// list fails with the actionable device-locality error before any bytes
+/// move.
+fn encode_args(args: &[ArgValue]) -> Result<Vec<u8>, CodecError> {
+    if args.iter().any(|a| a.is_ref()) {
+        return Err(CodecError::DeviceLocal);
+    }
+    let mut out = vec![TAG_ARGS];
+    out.extend_from_slice(&(args.len() as u32).to_le_bytes());
+    for a in args {
+        match a {
+            ArgValue::U32(v) => {
+                out.push(ARG_U32);
+                put_vec_u32(&mut out, v);
+            }
+            ArgValue::F32(v) => {
+                out.push(ARG_F32);
+                put_vec_f32(&mut out, v);
+            }
+            ArgValue::Ref(_) => unreachable!("checked above"),
+        }
+    }
+    Ok(out)
+}
+
 struct Reader<'a> {
     buf: &'a [u8],
     at: usize,
@@ -137,7 +177,7 @@ struct Reader<'a> {
 
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
-        if self.at + n > self.buf.len() {
+        if n > self.buf.len() - self.at {
             return Err(CodecError::Malformed("truncated".into()));
         }
         let s = &self.buf[self.at..self.at + n];
@@ -145,12 +185,36 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    /// Bytes not yet consumed — the upper bound for any sane element count.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
     fn u32(&mut self) -> Result<u32, CodecError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn vec_u32(&mut self) -> Result<Vec<u32>, CodecError> {
+    /// Read an element count and bound it by the bytes that could possibly
+    /// back it (`min_elem_bytes` per element), so a hostile count cannot
+    /// drive `Vec::with_capacity` into a multi-GiB reservation before the
+    /// first `take` fails.
+    fn count(&mut self, min_elem_bytes: usize) -> Result<usize, CodecError> {
         let n = self.u32()? as usize;
+        if n > self.remaining() / min_elem_bytes {
+            return Err(CodecError::Malformed(format!(
+                "count {n} exceeds remaining {} bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>, CodecError> {
+        let n = self.count(4)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
             v.push(self.u32()?);
@@ -159,7 +223,7 @@ impl<'a> Reader<'a> {
     }
 
     fn vec_f32(&mut self) -> Result<Vec<f32>, CodecError> {
-        let n = self.u32()? as usize;
+        let n = self.count(4)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
             v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
@@ -170,6 +234,25 @@ impl<'a> Reader<'a> {
     fn bytes(&mut self) -> Result<Vec<u8>, CodecError> {
         let n = self.u32()? as usize;
         Ok(self.take(n)?.to_vec())
+    }
+
+    /// Decode a `TAG_ARGS` body (the tag byte already consumed).
+    fn args(&mut self) -> Result<Vec<ArgValue>, CodecError> {
+        // each argument is at least elem_tag(1) + len(4)
+        let n = self.count(5)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.u8()? {
+                ARG_U32 => out.push(ArgValue::U32(std::sync::Arc::new(self.vec_u32()?))),
+                ARG_F32 => out.push(ArgValue::F32(std::sync::Arc::new(self.vec_f32()?))),
+                other => {
+                    return Err(CodecError::Malformed(format!(
+                        "unknown ArgValue element tag {other}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -203,6 +286,7 @@ pub fn decode_message(buf: &[u8]) -> Result<Message, CodecError> {
             let b = r.vec_f32()?;
             Message::new((a, b))
         }
+        TAG_ARGS => Message::new(r.args()?),
         other => return Err(CodecError::Malformed(format!("unknown tag {other}"))),
     })
 }
@@ -258,5 +342,65 @@ mod tests {
         assert!(decode_message(&[]).is_err());
         assert!(decode_message(&[200]).is_err());
         assert!(decode_message(&[TAG_VEC_U32, 255, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn arg_list_roundtrip() {
+        let args = vec![
+            ArgValue::from(vec![1u32, 2, 3]),
+            ArgValue::from(vec![1.5f32, -2.5]),
+            ArgValue::from(Vec::<u32>::new()),
+        ];
+        let back = roundtrip(Message::new(args.clone()))
+            .take::<Vec<ArgValue>>()
+            .unwrap();
+        assert_eq!(back, args);
+    }
+
+    #[test]
+    fn empty_arg_list_roundtrips() {
+        let back = roundtrip(Message::new(Vec::<ArgValue>::new()))
+            .take::<Vec<ArgValue>>()
+            .unwrap();
+        assert!(back.is_empty());
+    }
+
+    // NOTE: the Ref-in-arg-list → DeviceLocal path needs a live device to
+    // construct a MemRef; it is covered end-to-end in tests/net.rs.
+
+    #[test]
+    fn hostile_counts_fail_without_reserving() {
+        // TAG_ARGS claiming u32::MAX arguments in a tiny buffer
+        let mut b = vec![TAG_ARGS];
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&[ARG_U32, 1, 0, 0, 0]);
+        let err = decode_message(&b).unwrap_err();
+        assert!(matches!(err, CodecError::Malformed(_)));
+
+        // vector element count far beyond the buffer
+        let mut b = vec![TAG_ARGS];
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(ARG_F32);
+        b.extend_from_slice(&0x4000_0000u32.to_le_bytes());
+        b.extend_from_slice(&[0; 16]);
+        assert!(decode_message(&b).is_err());
+    }
+
+    #[test]
+    fn truncated_and_unknown_arg_elements_rejected() {
+        // count says 2, body holds 1
+        let mut b = vec![TAG_ARGS];
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.push(ARG_U32);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&7u32.to_le_bytes());
+        assert!(decode_message(&b).is_err());
+
+        // unknown element tag
+        let mut b = vec![TAG_ARGS];
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&[99, 0, 0, 0, 0]);
+        let err = decode_message(&b).unwrap_err();
+        assert!(err.to_string().contains("element tag"));
     }
 }

@@ -1,17 +1,27 @@
 //! Network transparency: remote actor messaging over TCP (CAF's BASP
 //! equivalent, minimal). Publishing an actor under a name lets remote nodes
 //! obtain a proxy [`ActorRef`] that behaves like any local handle —
-//! requests round-trip transparently.
+//! requests round-trip transparently, including `Vec<ArgValue>` kernel
+//! invocations against a published OpenCL facade (the paper's §3.5
+//! "transparent message passing in distributed systems" scenario; see
+//! `examples/distributed.rs`).
 //!
 //! `mem_ref` handles are deliberately **not** serializable (paper §3.5,
 //! design option (a)): "prohibit serialization of the reference type to
 //! raise an error when a reference would be sent over the network...
-//! making expensive copy operations explicit."
+//! making expensive copy operations explicit." This applies to bare
+//! [`MemRef`] payloads and to `Ref` entries inside an argument list alike.
+//!
+//! Robustness contract (see [`node`] for details): malformed or hostile
+//! frames close their connection without panicking any thread; a lost
+//! connection fails every pending request with an error within
+//! `remote_actor_timeout`; proxies reconnect on the next send.
 //!
 //! [`ActorRef`]: crate::actor::ActorRef
+//! [`MemRef`]: crate::opencl::MemRef
 
 pub mod codec;
 pub mod node;
 
 pub use codec::{decode_message, encode_message, CodecError};
-pub use node::Node;
+pub use node::{Node, MAX_FRAME};

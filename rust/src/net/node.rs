@@ -3,32 +3,84 @@
 //! Wire protocol (all little-endian, length-prefixed frames):
 //!
 //! ```text
-//! frame   := len:u32 kind:u8 body
+//! frame   := len:u32 kind:u8 body          (1 <= len <= MAX_FRAME)
 //! REQUEST := mid:u64 name_len:u16 name payload     (kind 1)
 //! REPLY   := mid:u64 payload                       (kind 2)
 //! SEND    := name_len:u16 name payload             (kind 3, fire-and-forget)
 //! ```
 //!
+//! `payload` is a tagged message body (see [`super::codec`]); kernel
+//! argument lists travel as the self-describing `TAG_ARGS` encoding, which
+//! is what lets a remote client drive a published OpenCL facade.
+//!
+//! Framing is panic-proof on both sides: zero-length frames and frames
+//! larger than [`MAX_FRAME`] (16 MiB) are protocol errors that close the
+//! connection cleanly, and inbound bodies are parsed through fallible
+//! readers — one short or hostile frame can log-and-close its connection
+//! but never kill a thread by panic or reserve unbounded memory.
+//!
+//! Connection lifecycle:
+//!
+//! * **Client side** — proxies to the same peer address share one
+//!   connection (one socket, one reader thread) through a per-address
+//!   `PeerLink` cache. A dead connection is re-established on the next
+//!   send ("reconnect-on-next-send"; concurrent reconnects collapse into
+//!   one attempt, capped at `CONNECT_CAP`, with a short fail-fast backoff
+//!   while the peer keeps refusing); requests in flight when a connection
+//!   dies all fail with an [`ErrorMsg`]. Every request additionally arms a
+//!   deadline ([`SystemConfig::remote_actor_timeout`]): an unanswered
+//!   request fails with an `ErrorMsg` instead of leaking its pending-map
+//!   entry forever. Monitors attached to a remote proxy
+//!   ([`ActorRef::monitor_with`]) receive a [`Down`] message with
+//!   [`ExitReason::Unreachable`] when the proxy's connection is lost.
+//! * **Server side** — [`Node::listen`] publishes all registry-named
+//!   actors; each accepted connection runs on its own thread, tracked in a
+//!   served-connection registry so [`Node::stop`] can shut the sockets and
+//!   join the threads instead of leaking them. A node can listen on one
+//!   address at a time; a second `listen` call is rejected while the first
+//!   is active.
+//!
 //! A mem_ref in a payload fails at `encode_message` — the error surfaces on
 //! the *sender*, before any bytes move (design option (a), §3.5).
+//!
+//! [`SystemConfig::remote_actor_timeout`]: crate::actor::SystemConfig
+//! [`Down`]: crate::actor::Down
+//! [`ExitReason::Unreachable`]: crate::actor::ExitReason
 
 use super::codec::{decode_message, encode_message};
 use crate::actor::envelope::{ActorId, Envelope, MessageId};
+use crate::actor::monitor::{Down, ExitReason};
 use crate::actor::{AbstractActor, ActorRef, ActorSystem, ErrorMsg, Message};
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
 
 const KIND_REQUEST: u8 = 1;
 const KIND_REPLY: u8 = 2;
 const KIND_SEND: u8 = 3;
 
+/// Hard cap on one frame (`kind` byte + body). A peer announcing a larger
+/// length is a protocol violation — the connection closes before a single
+/// body byte is read, so a hostile `len:u32` cannot drive a 4 GiB
+/// allocation.
+pub const MAX_FRAME: usize = 16 << 20;
+
+fn proto_err(what: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, what)
+}
+
 fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result<()> {
-    let len = (body.len() + 1) as u32;
-    stream.write_all(&len.to_le_bytes())?;
+    let len = body.len() + 1;
+    if len > MAX_FRAME {
+        return Err(proto_err(format!(
+            "outbound frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    stream.write_all(&(len as u32).to_le_bytes())?;
     stream.write_all(&[kind])?;
     stream.write_all(body)?;
     stream.flush()
@@ -38,49 +90,75 @@ fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
     let mut len4 = [0u8; 4];
     stream.read_exact(&mut len4)?;
     let len = u32::from_le_bytes(len4) as usize;
-    let mut body = vec![0u8; len];
+    if len == 0 {
+        return Err(proto_err("zero-length frame".to_string()));
+    }
+    if len > MAX_FRAME {
+        return Err(proto_err(format!(
+            "{len}-byte frame exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    let mut kind = [0u8; 1];
+    stream.read_exact(&mut kind)?;
+    let mut body = vec![0u8; len - 1];
     stream.read_exact(&mut body)?;
-    let kind = body.remove(0);
-    Ok((kind, body))
+    Ok((kind[0], body))
 }
 
 /// A node endpoint: can listen (publish) and connect (proxy).
 pub struct Node {
     system: ActorSystem,
-    listener_stop: Arc<AtomicBool>,
-    listen_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
-    local_addr: Mutex<Option<std::net::SocketAddr>>,
+    listener: Mutex<Option<ListenState>>,
+    served: Arc<ServedConns>,
+    /// Peer-connection cache: proxies to the same address share one
+    /// connection and its reader thread.
+    peers: Mutex<HashMap<String, Arc<PeerLink>>>,
+}
+
+struct ListenState {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+    addr: SocketAddr,
 }
 
 impl Node {
     pub fn new(system: &ActorSystem) -> Arc<Node> {
         Arc::new(Node {
             system: system.clone(),
-            listener_stop: Arc::new(AtomicBool::new(false)),
-            listen_thread: Mutex::new(None),
-            local_addr: Mutex::new(None),
+            listener: Mutex::new(None),
+            served: Arc::new(ServedConns::default()),
+            peers: Mutex::new(HashMap::new()),
         })
     }
 
     /// Publish all registry-named actors at `addr` (CAF's `publish`).
     /// `addr` may use port 0 to pick an ephemeral port; the bound address
-    /// is returned.
-    pub fn listen(self: &Arc<Node>, addr: &str) -> Result<std::net::SocketAddr> {
+    /// is returned. A node listens on at most one address: while a
+    /// listener is active, another `listen` is an error (stop the node
+    /// first) rather than a silent leak of the previous accept loop.
+    pub fn listen(&self, addr: &str) -> Result<SocketAddr> {
+        let mut guard = self.listener.lock().unwrap();
+        if let Some(active) = guard.as_ref() {
+            bail!(
+                "node is already listening at {} — call stop() before re-listening",
+                active.addr
+            );
+        }
         let listener = TcpListener::bind(addr).context("bind")?;
         let bound = listener.local_addr()?;
-        *self.local_addr.lock().unwrap() = Some(bound);
         listener.set_nonblocking(true)?;
-        let stop = self.listener_stop.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
         let sys = self.system.clone();
-        let th = std::thread::Builder::new()
+        let served = self.served.clone();
+        let thread = std::thread::Builder::new()
             .name("caf-node-accept".into())
             .spawn(move || {
-                while !stop.load(Ordering::Acquire) {
+                while !stop2.load(Ordering::Acquire) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             stream.set_nonblocking(false).ok();
-                            let sys = sys.clone();
-                            std::thread::spawn(move || serve_connection(sys, stream));
+                            served.serve(sys.clone(), stream);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -89,26 +167,78 @@ impl Node {
                     }
                 }
             })?;
-        *self.listen_thread.lock().unwrap() = Some(th);
+        *guard = Some(ListenState {
+            stop,
+            thread,
+            addr: bound,
+        });
         Ok(bound)
     }
 
+    /// The address this node is currently listening on, if any.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.listener.lock().unwrap().as_ref().map(|l| l.addr)
+    }
+
     /// Connect to a remote node and build a proxy for its published actor
-    /// `name` (CAF's `remote_actor`).
-    pub fn remote_actor(self: &Arc<Node>, addr: &str, name: &str) -> Result<ActorRef> {
-        let stream = TcpStream::connect(addr).context("connect")?;
-        let conn = Connection::start(self.system.clone(), stream)?;
+    /// `name` (CAF's `remote_actor`). Proxies created for the same `addr`
+    /// share one connection; the connection is established eagerly so an
+    /// unreachable peer surfaces here, and re-established transparently on
+    /// the next send if it later drops.
+    pub fn remote_actor(&self, addr: &str, name: &str) -> Result<ActorRef> {
+        let link = self.peer_link(addr);
+        link.connection()
+            .map_err(|e| anyhow!("remote_actor({addr}, {name:?}): {e:#}"))?;
         Ok(ActorRef::new(Arc::new(RemoteProxy {
             id: next_proxy_id(),
             name: name.to_string(),
-            conn,
+            link,
         })))
     }
 
+    fn peer_link(&self, addr: &str) -> Arc<PeerLink> {
+        self.peers
+            .lock()
+            .unwrap()
+            .entry(addr.to_string())
+            .or_insert_with(|| {
+                Arc::new(PeerLink {
+                    addr: addr.to_string(),
+                    system: self.system.clone(),
+                    timeout: self.system.config().remote_actor_timeout,
+                    conn: Mutex::new(None),
+                    connect_gate: Mutex::new(()),
+                    last_connect_failure: Mutex::new(None),
+                    watchers: Mutex::new(Vec::new()),
+                })
+            })
+            .clone()
+    }
+
+    /// Number of cached peer links (diagnostics; proxies to one address
+    /// share one link).
+    pub fn peer_count(&self) -> usize {
+        self.peers.lock().unwrap().len()
+    }
+
+    /// Number of currently served inbound connections (diagnostics).
+    pub fn served_count(&self) -> usize {
+        self.served.conns.lock().unwrap().len()
+    }
+
+    /// Tear the node down: stop accepting, close and join every served
+    /// connection, and close client-side peer connections (failing their
+    /// pending requests with [`ErrorMsg`]).
     pub fn stop(&self) {
-        self.listener_stop.store(true, Ordering::Release);
-        if let Some(t) = self.listen_thread.lock().unwrap().take() {
-            let _ = t.join();
+        if let Some(ls) = self.listener.lock().unwrap().take() {
+            ls.stop.store(true, Ordering::Release);
+            let _ = ls.thread.join();
+        }
+        self.served.stop();
+        let links: Vec<Arc<PeerLink>> =
+            self.peers.lock().unwrap().drain().map(|(_, l)| l).collect();
+        for l in links {
+            l.close();
         }
     }
 }
@@ -128,6 +258,88 @@ fn next_proxy_id() -> ActorId {
 // ---------------------------------------------------------------------------
 // server side
 // ---------------------------------------------------------------------------
+
+/// Registry of inbound connections being served, so `Node::stop` can close
+/// the sockets (unblocking the reader threads) and join the handlers
+/// instead of leaking one thread per connection ever accepted.
+#[derive(Default)]
+struct ServedConns {
+    next: AtomicU64,
+    conns: Mutex<HashMap<u64, ServedConn>>,
+}
+
+struct ServedConn {
+    /// Clone of the handler's stream, used only for `shutdown`.
+    stream: TcpStream,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServedConns {
+    /// Spawn a handler thread for an accepted connection and track it.
+    fn serve(self: &Arc<Self>, sys: ActorSystem, stream: TcpStream) {
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        let clone = match stream.try_clone() {
+            Ok(c) => c,
+            Err(e) => {
+                // can't register a shutdown handle — still serve the
+                // connection rather than silently dropping it; it ends on
+                // its own EOF instead of via stop()
+                log::warn!("net: cannot clone accepted stream ({e}); serving untracked");
+                let _ = std::thread::Builder::new()
+                    .name(format!("caf-node-serve-{id}"))
+                    .spawn(move || serve_connection(sys, stream));
+                return;
+            }
+        };
+        self.conns.lock().unwrap().insert(
+            id,
+            ServedConn {
+                stream: clone,
+                thread: None,
+            },
+        );
+        let registry = self.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("caf-node-serve-{id}"))
+            .spawn(move || {
+                serve_connection(sys, stream);
+                // self-deregister on natural exit (no-op during stop(),
+                // which takes the whole map first)
+                registry.conns.lock().unwrap().remove(&id);
+            });
+        match spawned {
+            Ok(h) => {
+                let mut conns = self.conns.lock().unwrap();
+                match conns.get_mut(&id) {
+                    Some(c) => c.thread = Some(h),
+                    None => {
+                        // the entry is gone: either the handler exited and
+                        // deregistered itself, or stop() took the map (and
+                        // shut the socket down) before we could file the
+                        // handle — join here so stop()'s "all handlers
+                        // joined" contract holds either way
+                        drop(conns);
+                        let _ = h.join();
+                    }
+                }
+            }
+            Err(_) => {
+                self.conns.lock().unwrap().remove(&id);
+            }
+        }
+    }
+
+    fn stop(&self) {
+        let taken: HashMap<u64, ServedConn> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for (_, c) in taken {
+            let _ = c.stream.shutdown(Shutdown::Both);
+            if let Some(h) = c.thread {
+                let _ = h.join();
+            }
+        }
+    }
+}
 
 /// Responder handle: routes an actor's reply back over the wire.
 struct WireResponder {
@@ -152,7 +364,22 @@ impl AbstractActor for WireResponder {
             }
         };
         if let Ok(mut w) = self.writer.lock() {
-            let _ = write_frame(&mut w, KIND_REPLY, &body);
+            if let Err(e) = write_frame(&mut w, KIND_REPLY, &body) {
+                // a local size violation (reply over MAX_FRAME) leaves the
+                // socket healthy: answer with a small error so the remote
+                // requester learns why instead of timing out. Real I/O
+                // errors mean the connection is gone — the client's reader
+                // fails its pending requests on its own.
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    log::warn!("net: reply for mid {} not sent: {e}", self.mid);
+                    let mut b = self.mid.to_le_bytes().to_vec();
+                    b.append(
+                        &mut encode_message(&Message::new(ErrorMsg::new(e.to_string())))
+                            .expect("ErrorMsg always encodes"),
+                    );
+                    let _ = write_frame(&mut w, KIND_REPLY, &b);
+                }
+            }
         }
     }
 
@@ -168,30 +395,90 @@ impl AbstractActor for WireResponder {
     }
 }
 
+/// Reply to a remote request with an error (used when no actor payload
+/// ever reaches a local actor).
+fn reply_error(writer: &Arc<Mutex<TcpStream>>, mid: u64, reason: String) {
+    let responder = WireResponder {
+        id: 0,
+        mid,
+        writer: writer.clone(),
+    };
+    responder.enqueue(Envelope::asynchronous(
+        None,
+        Message::new(ErrorMsg::new(reason)),
+    ));
+}
+
+/// Fallibly split an inbound REQUEST/SEND body into (mid, target name,
+/// payload bytes). Every index is bounds-checked: a short frame is a
+/// protocol error, not a handler-thread panic.
+fn parse_inbound(kind: u8, body: &[u8]) -> Result<(Option<u64>, String, usize), String> {
+    let mut at = 0usize;
+    let mid = if kind == KIND_REQUEST {
+        if body.len() < 8 {
+            return Err(format!(
+                "REQUEST body of {} bytes is shorter than the 8-byte mid",
+                body.len()
+            ));
+        }
+        at = 8;
+        Some(u64::from_le_bytes(body[0..8].try_into().unwrap()))
+    } else {
+        None
+    };
+    if body.len() < at + 2 {
+        return Err("frame ends before the name length".to_string());
+    }
+    let name_len = u16::from_le_bytes(body[at..at + 2].try_into().unwrap()) as usize;
+    at += 2;
+    if body.len() - at < name_len {
+        return Err(format!(
+            "name of {name_len} bytes extends past the frame ({} bytes left)",
+            body.len() - at
+        ));
+    }
+    let name = std::str::from_utf8(&body[at..at + name_len])
+        .map_err(|_| "actor name is not valid utf-8".to_string())?
+        .to_string();
+    at += name_len;
+    Ok((mid, name, at))
+}
+
 fn serve_connection(sys: ActorSystem, stream: TcpStream) {
-    let writer = Arc::new(Mutex::new(stream.try_clone().expect("clone stream")));
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".to_string());
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            log::warn!("net: cannot clone stream for {peer}: {e}");
+            return;
+        }
+    };
     let mut reader = stream;
     loop {
         let (kind, body) = match read_frame(&mut reader) {
             Ok(f) => f,
-            Err(_) => return, // peer closed
+            Err(e) => {
+                // EOF is the normal end of a connection; anything else —
+                // including our own protocol-violation errors — is logged
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    log::warn!("net: closing connection from {peer}: {e}");
+                }
+                return;
+            }
         };
         match kind {
             KIND_REQUEST | KIND_SEND => {
-                let mut at = 0usize;
-                let mid = if kind == KIND_REQUEST {
-                    let m = u64::from_le_bytes(body[0..8].try_into().unwrap());
-                    at += 8;
-                    Some(m)
-                } else {
-                    None
+                let (mid, name, payload_at) = match parse_inbound(kind, &body) {
+                    Ok(p) => p,
+                    Err(why) => {
+                        log::warn!("net: malformed frame from {peer}: {why}; closing");
+                        return;
+                    }
                 };
-                let name_len =
-                    u16::from_le_bytes(body[at..at + 2].try_into().unwrap()) as usize;
-                at += 2;
-                let name = String::from_utf8_lossy(&body[at..at + name_len]).to_string();
-                at += name_len;
-                let payload = decode_message(&body[at..]);
+                let payload = decode_message(&body[payload_at..]);
                 let target = sys.registry().get(&name);
                 match (target, payload, mid) {
                     (Some(t), Ok(msg), Some(mid)) => {
@@ -210,23 +497,28 @@ fn serve_connection(sys: ActorSystem, stream: TcpStream) {
                         t.enqueue(Envelope::asynchronous(None, msg));
                     }
                     (None, _, Some(mid)) => {
-                        let responder = WireResponder {
-                            id: 0,
+                        reply_error(
+                            &writer,
                             mid,
-                            writer: writer.clone(),
-                        };
-                        responder.enqueue(Envelope::asynchronous(
-                            None,
-                            Message::new(ErrorMsg::new(format!("no actor published as {name:?}"))),
-                        ));
+                            format!("no actor published as {name:?}"),
+                        );
                     }
-                    (_, Err(e), _) => {
-                        log::warn!("dropping malformed remote message: {e}");
+                    (Some(_), Err(e), Some(mid)) => {
+                        // requester is waiting: tell it what was wrong
+                        reply_error(&writer, mid, format!("malformed payload: {e}"));
                     }
-                    _ => {}
+                    (_, Err(e), None) => {
+                        log::warn!("net: dropping malformed SEND for {name:?} from {peer}: {e}");
+                    }
+                    (None, Ok(_), None) => {
+                        log::warn!("net: dropping SEND for unpublished actor {name:?}");
+                    }
                 }
             }
-            _ => return,
+            other => {
+                log::warn!("net: unknown frame kind {other} from {peer}; closing");
+                return;
+            }
         }
     }
 }
@@ -235,56 +527,278 @@ fn serve_connection(sys: ActorSystem, stream: TcpStream) {
 // client side
 // ---------------------------------------------------------------------------
 
+/// Cap on one TCP connect attempt, so a send to an unreachable peer
+/// cannot pin a scheduler worker for the full `remote_actor_timeout`.
+const CONNECT_CAP: Duration = Duration::from_secs(5);
+
+/// After a failed connect, further sends fail fast for this long instead
+/// of each paying a full connect attempt (coalesces the reconnect
+/// stampede when many actors share one dead peer).
+const RECONNECT_BACKOFF: Duration = Duration::from_millis(250);
+
+/// The shared route to one peer address: at most one live [`Connection`]
+/// at a time, plus the monitors to notify when it drops.
+struct PeerLink {
+    addr: String,
+    system: ActorSystem,
+    timeout: Duration,
+    conn: Mutex<Option<Arc<Connection>>>,
+    /// Serializes (re)connect attempts. Separate from `conn` so the slot
+    /// lock is never held across a blocking connect — `is_down`,
+    /// `close`, and the fast path stay wait-free while someone dials.
+    connect_gate: Mutex<()>,
+    /// When the last connect attempt failed (drives the fail-fast window).
+    last_connect_failure: Mutex<Option<std::time::Instant>>,
+    /// Monitors attached to proxies on this link: (proxy id, watcher).
+    /// Drained (one-shot, like local monitors) when the connection drops.
+    watchers: Mutex<Vec<(ActorId, ActorRef)>>,
+}
+
+impl PeerLink {
+    /// The current connection if it is alive.
+    fn live(&self) -> Option<Arc<Connection>> {
+        self.conn
+            .lock()
+            .unwrap()
+            .as_ref()
+            .filter(|c| c.alive.load(Ordering::Acquire))
+            .cloned()
+    }
+
+    /// The live connection, re-established if the previous one died
+    /// (reconnect-on-next-send). Concurrent reconnects collapse into one
+    /// attempt; while a peer keeps refusing, sends fail fast for
+    /// [`RECONNECT_BACKOFF`] instead of dialing again each time.
+    fn connection(self: &Arc<Self>) -> Result<Arc<Connection>> {
+        if let Some(c) = self.live() {
+            return Ok(c);
+        }
+        let _gate = self.connect_gate.lock().unwrap();
+        // someone else may have reconnected while we waited for the gate
+        if let Some(c) = self.live() {
+            return Ok(c);
+        }
+        if let Some(at) = *self.last_connect_failure.lock().unwrap() {
+            if at.elapsed() < RECONNECT_BACKOFF {
+                bail!(
+                    "peer {} unreachable (last connect attempt {:?} ago)",
+                    self.addr,
+                    at.elapsed()
+                );
+            }
+        }
+        match Connection::open(self) {
+            Ok(fresh) => {
+                *self.last_connect_failure.lock().unwrap() = None;
+                *self.conn.lock().unwrap() = Some(fresh.clone());
+                Ok(fresh)
+            }
+            Err(e) => {
+                *self.last_connect_failure.lock().unwrap() =
+                    Some(std::time::Instant::now());
+                Err(e)
+            }
+        }
+    }
+
+    /// True if a connection existed and is now dead (for immediate-`Down`
+    /// monitor semantics). A link that never connected is not "down".
+    fn is_down(&self) -> bool {
+        match self.conn.lock().unwrap().as_ref() {
+            Some(c) => !c.alive.load(Ordering::Acquire),
+            None => false,
+        }
+    }
+
+    /// Deliver `Down { Unreachable }` to every registered watcher.
+    fn notify_unreachable(&self) {
+        let watchers: Vec<(ActorId, ActorRef)> =
+            self.watchers.lock().unwrap().drain(..).collect();
+        for (source, w) in watchers {
+            w.enqueue(Envelope::asynchronous(
+                None,
+                Message::new(Down {
+                    source,
+                    reason: ExitReason::Unreachable,
+                }),
+            ));
+        }
+    }
+
+    fn close(&self) {
+        let c = self.conn.lock().unwrap().take();
+        if let Some(c) = c {
+            c.close();
+        }
+    }
+}
+
 struct Connection {
-    writer: Arc<Mutex<TcpStream>>,
-    pending: Arc<Mutex<HashMap<u64, ActorRef>>>,
+    peer: String,
+    /// Clone used only for `shutdown` (never read/written).
+    sock: TcpStream,
+    writer: Mutex<TcpStream>,
+    alive: AtomicBool,
+    pending: Mutex<HashMap<u64, ActorRef>>,
 }
 
 impl Connection {
-    fn start(_sys: ActorSystem, stream: TcpStream) -> Result<Arc<Connection>> {
-        let writer = Arc::new(Mutex::new(stream.try_clone()?));
-        let pending: Arc<Mutex<HashMap<u64, ActorRef>>> = Arc::new(Mutex::new(HashMap::new()));
-        let p2 = pending.clone();
+    fn open(link: &Arc<PeerLink>) -> Result<Arc<Connection>> {
+        // try every address the name resolves to (std's TcpStream::connect
+        // behavior, e.g. `localhost` → ::1 then 127.0.0.1), but with a
+        // bounded timeout per attempt
+        let addrs: Vec<SocketAddr> = link
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {}", link.addr))?
+            .collect();
+        let mut stream = None;
+        let mut last_err: Option<std::io::Error> = None;
+        for a in &addrs {
+            match TcpStream::connect_timeout(a, link.timeout.min(CONNECT_CAP)) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = stream.ok_or_else(|| match last_err {
+            Some(e) => anyhow!("connect {}: {e}", link.addr),
+            None => anyhow!("{} resolves to no address", link.addr),
+        })?;
+        let conn = Arc::new(Connection {
+            peer: link.addr.clone(),
+            sock: stream.try_clone()?,
+            writer: Mutex::new(stream.try_clone()?),
+            alive: AtomicBool::new(true),
+            pending: Mutex::new(HashMap::new()),
+        });
+        let reader_conn = conn.clone();
+        let weak_link = Arc::downgrade(link);
         let mut reader = stream;
         std::thread::Builder::new()
             .name("caf-node-client".into())
-            .spawn(move || loop {
-                let (kind, body) = match read_frame(&mut reader) {
-                    Ok(f) => f,
-                    Err(_) => {
-                        // connection lost: fail all pending requests
-                        let mut p = p2.lock().unwrap();
-                        for (mid, who) in p.drain() {
-                            who.enqueue(Envelope {
-                                sender: None,
-                                mid: MessageId(mid).response_for(),
-                                msg: Message::new(ErrorMsg::new("remote node disconnected")),
-                            });
-                        }
-                        return;
-                    }
-                };
-                if kind != KIND_REPLY || body.len() < 8 {
-                    continue;
-                }
-                let mid = u64::from_le_bytes(body[0..8].try_into().unwrap());
-                let Some(who) = p2.lock().unwrap().remove(&mid) else {
-                    continue;
-                };
-                match decode_message(&body[8..]) {
-                    Ok(msg) => who.enqueue(Envelope {
-                        sender: None,
-                        mid: MessageId(mid).response_for(),
-                        msg,
-                    }),
-                    Err(e) => who.enqueue(Envelope {
-                        sender: None,
-                        mid: MessageId(mid).response_for(),
-                        msg: Message::new(ErrorMsg::new(e.to_string())),
-                    }),
+            .spawn(move || {
+                reader_loop(&mut reader, &reader_conn);
+                // connection lost: flip the flag before draining so a
+                // racing `enqueue` either finds its entry drained here or
+                // sees `alive == false` and cleans up after itself
+                reader_conn.alive.store(false, Ordering::Release);
+                reader_conn
+                    .fail_pending(&format!("remote node {} disconnected", reader_conn.peer));
+                if let Some(l) = weak_link.upgrade() {
+                    l.notify_unreachable();
                 }
             })?;
-        Ok(Arc::new(Connection { writer, pending }))
+        Ok(conn)
+    }
+
+    /// Mark dead and close the socket (unblocks the reader thread).
+    fn close(&self) {
+        self.alive.store(false, Ordering::Release);
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+
+    /// Fail every pending request with `reason`.
+    fn fail_pending(&self, reason: &str) {
+        let drained: Vec<(u64, ActorRef)> =
+            self.pending.lock().unwrap().drain().collect();
+        for (mid, who) in drained {
+            who.enqueue(Envelope {
+                sender: None,
+                mid: MessageId(mid).response_for(),
+                msg: Message::new(ErrorMsg::new(reason)),
+            });
+        }
+    }
+
+    /// Fail one pending request with `reason`, if it is still pending
+    /// (the reply, the deadline reaper, and the disconnect drain race on
+    /// the same map — whoever removes the entry delivers).
+    fn fail_one(&self, mid: u64, reason: String) {
+        if let Some(who) = self.pending.lock().unwrap().remove(&mid) {
+            who.enqueue(Envelope {
+                sender: None,
+                mid: MessageId(mid).response_for(),
+                msg: Message::new(ErrorMsg::new(reason)),
+            });
+        }
+    }
+}
+
+/// Pump replies off the wire until the connection dies.
+fn reader_loop(reader: &mut TcpStream, conn: &Arc<Connection>) {
+    loop {
+        let (kind, body) = match read_frame(reader) {
+            Ok(f) => f,
+            Err(e) => {
+                if e.kind() == std::io::ErrorKind::InvalidData {
+                    log::warn!("net: closing connection to {}: {e}", conn.peer);
+                }
+                return;
+            }
+        };
+        if kind != KIND_REPLY || body.len() < 8 {
+            log::warn!(
+                "net: unexpected frame (kind {kind}, {} bytes) from {}; ignoring",
+                body.len(),
+                conn.peer
+            );
+            continue;
+        }
+        let mid = u64::from_le_bytes(body[0..8].try_into().unwrap());
+        let Some(who) = conn.pending.lock().unwrap().remove(&mid) else {
+            // already failed by deadline/disconnect, or never ours
+            continue;
+        };
+        match decode_message(&body[8..]) {
+            Ok(msg) => who.enqueue(Envelope {
+                sender: None,
+                mid: MessageId(mid).response_for(),
+                msg,
+            }),
+            Err(e) => who.enqueue(Envelope {
+                sender: None,
+                mid: MessageId(mid).response_for(),
+                msg: Message::new(ErrorMsg::new(e.to_string())),
+            }),
+        }
+    }
+}
+
+/// Fired by the system timer when a remote request's deadline expires:
+/// fails the pending entry (if still pending) so the requester gets an
+/// [`ErrorMsg`] instead of waiting forever on a reply that will never come.
+struct PendingReaper {
+    conn: Weak<Connection>,
+    mid: u64,
+    timeout: Duration,
+}
+
+impl AbstractActor for PendingReaper {
+    fn enqueue(&self, _env: Envelope) {
+        let Some(conn) = self.conn.upgrade() else {
+            return;
+        };
+        conn.fail_one(
+            self.mid,
+            format!(
+                "remote request timed out after {:?} (remote_actor_timeout)",
+                self.timeout
+            ),
+        );
+    }
+
+    fn id(&self) -> ActorId {
+        0
+    }
+
+    fn attach_monitor(&self, _watcher: ActorRef) {}
+    fn attach_link(&self, _peer: ActorRef) {}
+
+    fn kind(&self) -> &'static str {
+        "net-deadline"
     }
 }
 
@@ -292,7 +806,24 @@ impl Connection {
 struct RemoteProxy {
     id: ActorId,
     name: String,
-    conn: Arc<Connection>,
+    link: Arc<PeerLink>,
+}
+
+impl RemoteProxy {
+    /// Route a failure back to the requester (requests) or the log (sends).
+    fn fail(&self, env_sender: &Option<ActorRef>, mid: MessageId, reason: String) {
+        if mid.is_request() {
+            if let Some(s) = env_sender {
+                s.enqueue(Envelope {
+                    sender: None,
+                    mid: mid.response_for(),
+                    msg: Message::new(ErrorMsg::new(reason)),
+                });
+                return;
+            }
+        }
+        log::warn!("net: dropping send to {:?}@{}: {reason}", self.name, self.link.addr);
+    }
 }
 
 impl AbstractActor for RemoteProxy {
@@ -301,24 +832,20 @@ impl AbstractActor for RemoteProxy {
             Ok(p) => p,
             Err(e) => {
                 // serialization failures surface to the requester
-                if env.mid.is_request() {
-                    if let Some(s) = env.sender {
-                        s.enqueue(Envelope {
-                            sender: None,
-                            mid: env.mid.response_for(),
-                            msg: Message::new(ErrorMsg::new(e.to_string())),
-                        });
-                    }
-                }
+                self.fail(&env.sender, env.mid, e.to_string());
+                return;
+            }
+        };
+        let conn = match self.link.connection() {
+            Ok(c) => c,
+            Err(e) => {
+                self.fail(&env.sender, env.mid, format!("cannot reach peer: {e:#}"));
                 return;
             }
         };
         let mut body = Vec::with_capacity(payload.len() + 32);
         let kind = if env.mid.is_request() {
             body.extend_from_slice(&env.mid.0.to_le_bytes());
-            if let Some(s) = env.sender {
-                self.conn.pending.lock().unwrap().insert(env.mid.0, s);
-            }
             KIND_REQUEST
         } else {
             KIND_SEND
@@ -326,8 +853,62 @@ impl AbstractActor for RemoteProxy {
         body.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
         body.extend_from_slice(self.name.as_bytes());
         body.extend_from_slice(&payload);
-        if let Ok(mut w) = self.conn.writer.lock() {
-            let _ = write_frame(&mut w, kind, &body);
+        // oversized payloads are a *local* error: fail this message only,
+        // before touching the shared connection (closing it would tear
+        // down every other proxy's in-flight requests for no reason)
+        if body.len() + 1 > MAX_FRAME {
+            self.fail(
+                &env.sender,
+                env.mid,
+                format!(
+                    "message of {} bytes exceeds the {MAX_FRAME}-byte frame cap",
+                    body.len() + 1
+                ),
+            );
+            return;
+        }
+        // register before writing so a fast reply cannot miss the entry,
+        // and arm the deadline that reaps it if no reply ever arrives
+        let registered = kind == KIND_REQUEST && env.sender.is_some();
+        if registered {
+            let sender = env.sender.clone().expect("checked above");
+            conn.pending.lock().unwrap().insert(env.mid.0, sender);
+            let reaper = ActorRef::new(Arc::new(PendingReaper {
+                conn: Arc::downgrade(&conn),
+                mid: env.mid.0,
+                timeout: self.link.timeout,
+            }));
+            self.link
+                .system
+                .timer()
+                .schedule(self.link.timeout, reaper, Message::new(()));
+        }
+        let write_res = {
+            let mut w = conn.writer.lock().unwrap();
+            write_frame(&mut w, kind, &body)
+        };
+        match write_res {
+            Ok(()) => {
+                // the reader may have drained `pending` (disconnect)
+                // between our insert and the write completing; if the flag
+                // already flipped, make sure our entry does not linger
+                if registered && !conn.alive.load(Ordering::Acquire) {
+                    conn.fail_one(
+                        env.mid.0,
+                        format!("remote node {} disconnected", conn.peer),
+                    );
+                }
+            }
+            Err(e) => {
+                // dead socket: force a reconnect on the next send, and fail
+                // this request now instead of leaking its pending entry
+                conn.close();
+                if registered {
+                    conn.fail_one(env.mid.0, format!("writing to {} failed: {e}", conn.peer));
+                } else {
+                    self.fail(&env.sender, env.mid, format!("writing to {} failed: {e}", conn.peer));
+                }
+            }
         }
     }
 
@@ -335,7 +916,24 @@ impl AbstractActor for RemoteProxy {
         self.id
     }
 
-    fn attach_monitor(&self, _watcher: ActorRef) {}
+    /// Remote monitoring: `watcher` receives [`Down`] with
+    /// [`ExitReason::Unreachable`] when this proxy's connection drops. If
+    /// the connection is already down the message fires immediately,
+    /// mirroring local monitor semantics for dead actors.
+    fn attach_monitor(&self, watcher: ActorRef) {
+        // publish first, then check: if the connection died before the
+        // push, the reader's drain may have missed this watcher, so
+        // deliver now. notify_unreachable drains under the same lock the
+        // push takes, which makes the delivery exactly-once — either the
+        // reader's drain sees the entry, or the push happens after the
+        // drain and the re-check (ordered by the watchers mutex) sees
+        // `alive == false`.
+        self.link.watchers.lock().unwrap().push((self.id, watcher));
+        if self.link.is_down() {
+            self.link.notify_unreachable();
+        }
+    }
+
     fn attach_link(&self, _peer: ActorRef) {}
 
     fn kind(&self) -> &'static str {

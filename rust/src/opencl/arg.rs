@@ -72,6 +72,23 @@ impl ArgValue {
     }
 }
 
+/// Value variants compare by content (what crosses the wire); `Ref`s
+/// compare by identity (device + buffer), since two handles to the same
+/// device allocation are interchangeable but distinct allocations are not
+/// even when their contents happen to match.
+impl PartialEq for ArgValue {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (ArgValue::U32(a), ArgValue::U32(b)) => a == b,
+            (ArgValue::F32(a), ArgValue::F32(b)) => a == b,
+            (ArgValue::Ref(a), ArgValue::Ref(b)) => {
+                a.device_id() == b.device_id() && a.buffer_id() == b.buffer_id()
+            }
+            _ => false,
+        }
+    }
+}
+
 impl From<Vec<u32>> for ArgValue {
     fn from(v: Vec<u32>) -> Self {
         ArgValue::U32(Arc::new(v))

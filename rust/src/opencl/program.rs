@@ -33,7 +33,17 @@ impl Program {
         let mut pending = Vec::new();
         for name in names {
             let meta = manifest.get(name)?;
-            let ev = device.queue.compile(*name, manifest.hlo_path(meta));
+            // `emu=<op>` extras route to host emulation (stub-backend
+            // kernels, runtime::client::HostOp); everything else is a real
+            // HLO artifact
+            let ev = match meta.extras.get("emu") {
+                Some(op) => {
+                    let op = crate::runtime::HostOp::parse(op)
+                        .ok_or_else(|| anyhow!("kernel {name}: unknown emu op {op:?}"))?;
+                    device.queue.compile_emulated(*name, op)
+                }
+                None => device.queue.compile(*name, manifest.hlo_path(meta)),
+            };
             pending.push((name.to_string(), ev));
             kernels.insert(name.to_string(), meta.clone());
         }

@@ -150,12 +150,95 @@ impl From<HostData> for UploadSrc {
     }
 }
 
+/// Host-side emulation of a kernel's semantics, for backends that cannot
+/// execute HLO (the vendored `xla` stub). A manifest entry carrying
+/// `emu=<op>` in its extras field is registered through
+/// [`DeviceQueue::compile_emulated`] instead of the HLO compile path; the
+/// queue thread then computes the output from the (host-memory) input
+/// buffers. This keeps the full facade pipeline — upload, execute,
+/// download, events, buffer pool, sim padding — exercisable in
+/// environments without the real PJRT backend, e.g. the distributed
+/// integration tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostOp {
+    /// Output = first input, verbatim (the paper's `empty_*` kernels).
+    Identity,
+    /// Elementwise sum across all inputs (`u32` wraps).
+    Add,
+}
+
+impl HostOp {
+    /// Parse a manifest `emu=` value.
+    pub fn parse(s: &str) -> Option<HostOp> {
+        match s {
+            "identity" => Some(HostOp::Identity),
+            "add" => Some(HostOp::Add),
+            _ => None,
+        }
+    }
+
+    fn apply(self, inputs: &[HostData], out_dtype: Dtype) -> Result<HostData, String> {
+        let first = inputs
+            .first()
+            .ok_or_else(|| "emulated kernel needs at least one input".to_string())?;
+        for (i, d) in inputs.iter().enumerate() {
+            if d.dtype() != out_dtype {
+                return Err(format!(
+                    "input {i} is {:?}, output wants {:?}",
+                    d.dtype(),
+                    out_dtype
+                ));
+            }
+            if d.len() != first.len() {
+                return Err(format!(
+                    "input {i} has {} elements, input 0 has {}",
+                    d.len(),
+                    first.len()
+                ));
+            }
+        }
+        match self {
+            HostOp::Identity => Ok(first.clone()),
+            HostOp::Add => match first {
+                HostData::U32(_) => {
+                    let mut acc = vec![0u32; first.len()];
+                    for d in inputs {
+                        if let HostData::U32(v) = d {
+                            for (a, x) in acc.iter_mut().zip(v) {
+                                *a = a.wrapping_add(*x);
+                            }
+                        }
+                    }
+                    Ok(HostData::U32(acc))
+                }
+                HostData::F32(_) => {
+                    let mut acc = vec![0f32; first.len()];
+                    for d in inputs {
+                        if let HostData::F32(v) = d {
+                            for (a, x) in acc.iter_mut().zip(v) {
+                                *a += *x;
+                            }
+                        }
+                    }
+                    Ok(HostData::F32(acc))
+                }
+            },
+        }
+    }
+}
+
 /// Commands of the in-order device queue.
 pub enum QueueCmd {
     /// Compile the HLO-text artifact at `path` and cache it under `name`.
     Compile {
         name: String,
         path: PathBuf,
+        done: Event,
+    },
+    /// Register a host-emulated kernel under `name` (no HLO involved).
+    CompileEmu {
+        name: String,
+        op: HostOp,
         done: Event,
     },
     /// Copy host data into a fresh device buffer `id`.
@@ -392,6 +475,19 @@ impl DeviceQueue {
         done
     }
 
+    /// Register a host-emulated kernel (idempotent per name) — the stub
+    /// backend's stand-in for compilation; see [`HostOp`].
+    pub fn compile_emulated(&self, name: impl Into<String>, op: HostOp) -> Event {
+        let done = Event::new();
+        done.mark_enqueued();
+        self.push(QueueCmd::CompileEmu {
+            name: name.into(),
+            op,
+            done: done.clone(),
+        });
+        done
+    }
+
     /// Asynchronously copy host data to the device; returns (buffer id,
     /// completion event).
     pub fn upload(&self, data: impl Into<UploadSrc>) -> (u64, Event) {
@@ -550,6 +646,7 @@ fn queue_loop(
         }
     };
     let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut emus: HashMap<String, HostOp> = HashMap::new();
     let mut buffers: HashMap<u64, Buffer> = HashMap::new();
     // Without the stub's recycling hook the pool could never hand a buffer
     // back to an upload — retaining freed buffers would pin device memory
@@ -576,6 +673,11 @@ fn queue_loop(
                     }
                     Err(e) => done.fail(format!("compile {name}: {e}")),
                 }
+            }
+            QueueCmd::CompileEmu { name, op, done } => {
+                stats.compiles.fetch_add(1, Ordering::Relaxed);
+                emus.insert(name, op);
+                done.complete();
             }
             QueueCmd::Upload { id, data, done } => {
                 stats.uploads.fetch_add(1, Ordering::Relaxed);
@@ -644,6 +746,81 @@ fn queue_loop(
                 }
                 if let Some(e) = dep_err {
                     done.fail(format!("dependency failed: {e}"));
+                    continue;
+                }
+                if let Some(op) = emus.get(&exec) {
+                    let t0 = Instant::now();
+                    let mut inputs = Vec::with_capacity(args.len());
+                    let mut arg_err = None;
+                    for a in &args {
+                        match buffers.get(a) {
+                            Some(b) => match download_buffer(b) {
+                                Ok(d) => inputs.push(d),
+                                Err(e) => {
+                                    arg_err =
+                                        Some(format!("emulated {exec}: reading arg {a}: {e}"));
+                                    break;
+                                }
+                            },
+                            None => {
+                                arg_err = Some(format!("buffer {a} not resident on device"));
+                                break;
+                            }
+                        }
+                    }
+                    if let Some(e) = arg_err {
+                        done.fail(e);
+                        continue;
+                    }
+                    match op.apply(&inputs, out_dtype) {
+                        Ok(host) => {
+                            let real = t0.elapsed();
+                            stats.execs.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .exec_ns
+                                .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
+                            if let Some(p) = &pad {
+                                p.pad_for(p.compute_pad(real));
+                            }
+                            let byte_len = host.bytes();
+                            // stage the output like an upload: recycle a
+                            // freed same-class buffer from the pool
+                            let recycled = pool.take(out_dtype, byte_len);
+                            if recycled.is_some() {
+                                stats.pool_hits.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                stats.pool_misses.fetch_add(1, Ordering::Relaxed);
+                            }
+                            let res = match &host {
+                                HostData::U32(v) => {
+                                    upload_host_buffer(&client, &v[..], &[v.len()], recycled)
+                                }
+                                HostData::F32(v) => {
+                                    upload_host_buffer(&client, &v[..], &[v.len()], recycled)
+                                }
+                            };
+                            match res {
+                                Ok(buf) => {
+                                    buffers.insert(
+                                        out,
+                                        Buffer {
+                                            buf,
+                                            dtype: out_dtype,
+                                            bytes: byte_len,
+                                            // upload-origin storage: safe to
+                                            // recycle, unlike backend outputs
+                                            poolable: true,
+                                        },
+                                    );
+                                    done.complete();
+                                }
+                                Err(e) => {
+                                    done.fail(format!("emulated {exec}: staging output: {e}"))
+                                }
+                            }
+                        }
+                        Err(e) => done.fail(format!("emulated {exec}: {e}")),
+                    }
                     continue;
                 }
                 let Some(exe) = execs.get(&exec) else {

@@ -15,5 +15,5 @@ pub mod event;
 
 pub use artifact::{ArtifactMeta, Dtype, Manifest, TensorSpec};
 pub use chan::Chan;
-pub use client::{DeviceQueue, ExecStats, HostData, PoolConfig, QueueCmd, UploadSrc};
+pub use client::{DeviceQueue, ExecStats, HostData, HostOp, PoolConfig, QueueCmd, UploadSrc};
 pub use event::Event;

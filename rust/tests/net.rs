@@ -1,15 +1,61 @@
 //! Network transparency tests: remote requests through proxies, the
-//! mem_ref serialization error (design option (a)), disconnect handling.
+//! mem_ref serialization error (design option (a)), disconnect handling,
+//! the `Vec<ArgValue>` wire format against a published OpenCL facade
+//! (stub backend), connection lifecycle (sharing, reconnect, deadlines,
+//! monitors), and the malformed-frame robustness matrix.
+//!
+//! `NET_TEST_TIMEOUT_MS` (set by CI) bounds every blocking receive so a
+//! hung-socket regression fails fast instead of stalling the runner.
 
 use caf_ocl::actor::*;
-use caf_ocl::net::Node;
-use std::time::Duration;
+use caf_ocl::net::{Node, MAX_FRAME};
+use caf_ocl::opencl::{ArgValue, Manager, Mode};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 const T: Duration = Duration::from_secs(10);
 
+/// Receive deadline: overridable so CI can fail fast on hangs.
+fn net_t() -> Duration {
+    std::env::var("NET_TEST_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(T)
+}
+
+/// Write a stub-backend artifact manifest (host-emulated kernels, see
+/// `runtime::client::HostOp`) into a per-test temp dir, so the full facade
+/// pipeline runs without `make artifacts` or a real XLA backend.
+fn stub_artifacts(tag: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("caf-ocl-net-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "vadd_f32_1024|emu|f32:1024 f32:1024|f32:1024|emu=add n=1024\n\
+         copy_u32_1024|emu|u32:1024|u32:1024|emu=identity n=1024\n",
+    )
+    .unwrap();
+    dir.to_string_lossy().to_string()
+}
+
+fn config(threads: usize) -> SystemConfig {
+    SystemConfig::default().with_threads(threads)
+}
+
+/// An actor that accepts anything and never responds (for deadline and
+/// disconnect tests): `Reply::Promised` without a promise ever delivering.
+fn spawn_blackhole(sys: &ActorSystem, name: &str) -> ActorRef {
+    sys.spawn_opts(
+        |_| Behavior::new().on_any(|_c, _m| Reply::Promised),
+        SpawnOptions::named(name),
+    )
+}
+
 #[test]
 fn remote_request_roundtrip() {
-    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let server_sys = ActorSystem::new(config(2));
     let _adder = server_sys.spawn_opts(
         |_| Behavior::new().on(|_c, (a, b): &(Vec<u32>, Vec<u32>)| {
             let sum: Vec<u32> = a.iter().zip(b).map(|(x, y)| x + y).collect();
@@ -20,7 +66,7 @@ fn remote_request_roundtrip() {
     let server = Node::new(&server_sys);
     let addr = server.listen("127.0.0.1:0").unwrap();
 
-    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let client_sys = ActorSystem::new(config(2));
     let client = Node::new(&client_sys);
     let remote = client.remote_actor(&addr.to_string(), "adder").unwrap();
     assert_eq!(remote.kind(), "remote");
@@ -28,7 +74,7 @@ fn remote_request_roundtrip() {
     let me = client_sys.scoped();
     let out: Vec<u32> = me
         .request(&remote, (vec![1u32, 2], vec![10u32, 20]))
-        .receive(T)
+        .receive(net_t())
         .unwrap();
     assert_eq!(out, vec![11, 22]);
 
@@ -39,15 +85,15 @@ fn remote_request_roundtrip() {
 
 #[test]
 fn unknown_published_name_errors() {
-    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let server_sys = ActorSystem::new(config(2));
     let server = Node::new(&server_sys);
     let addr = server.listen("127.0.0.1:0").unwrap();
 
-    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let client_sys = ActorSystem::new(config(2));
     let client = Node::new(&client_sys);
     let remote = client.remote_actor(&addr.to_string(), "ghost").unwrap();
     let me = client_sys.scoped();
-    let r = me.request(&remote, 1u32).receive_msg(T);
+    let r = me.request(&remote, 1u32).receive_msg(net_t());
     assert!(r.is_err());
     assert!(r.unwrap_err().reason.contains("ghost"));
 
@@ -57,48 +103,8 @@ fn unknown_published_name_errors() {
 }
 
 #[test]
-fn memref_cannot_cross_the_wire() {
-    // design option (a): sending a mem_ref to a remote actor raises an
-    // error at the sender instead of shipping dangling device state
-    use caf_ocl::opencl::{Manager, Mode};
-    if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        return;
-    }
-    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
-    let _sink = server_sys.spawn_opts(
-        |_| Behavior::new().on(|_c, _: &u32| no_reply()),
-        SpawnOptions::named("sink"),
-    );
-    let server = Node::new(&server_sys);
-    let addr = server.listen("127.0.0.1:0").unwrap();
-
-    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
-    let mgr = Manager::load(&client_sys);
-    let facade = mgr.spawn_simple("empty_1024", Mode::Val, Mode::Ref).unwrap();
-    let me = client_sys.scoped();
-    let r: caf_ocl::opencl::MemRef = me
-        .request(&facade, (0..1024u32).collect::<Vec<u32>>())
-        .receive(T)
-        .unwrap();
-
-    let client = Node::new(&client_sys);
-    let remote = client.remote_actor(&addr.to_string(), "sink").unwrap();
-    let err = me.request(&remote, r).receive_msg(T);
-    assert!(err.is_err());
-    assert!(
-        err.unwrap_err().reason.contains("cannot be serialized"),
-        "error must name the serialization restriction"
-    );
-
-    server.stop();
-    mgr.stop_devices();
-    client_sys.shutdown();
-    server_sys.shutdown();
-}
-
-#[test]
 fn fire_and_forget_send() {
-    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let server_sys = ActorSystem::new(config(2));
     let (tx, rx) = std::sync::mpsc::channel::<u32>();
     let _probe = server_sys.spawn_opts(
         move |_| {
@@ -113,13 +119,438 @@ fn fire_and_forget_send() {
     let server = Node::new(&server_sys);
     let addr = server.listen("127.0.0.1:0").unwrap();
 
-    let client_sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+    let client_sys = ActorSystem::new(config(2));
     let client = Node::new(&client_sys);
     let remote = client.remote_actor(&addr.to_string(), "probe").unwrap();
     remote.send_from(None, Message::new(77u32));
-    assert_eq!(rx.recv_timeout(T).unwrap(), 77);
+    assert_eq!(rx.recv_timeout(net_t()).unwrap(), 77);
 
     server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// the paper's distribution scenario: Vec<ArgValue> against a published
+// OpenCL facade (stub backend)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remote_opencl_facade_computes_vec_argvalue() {
+    // node A: owns the (stub) device, publishes the kernel actor
+    let server_sys =
+        ActorSystem::new(config(2).with_artifacts_dir(stub_artifacts("facade")));
+    let mgr = Manager::load(&server_sys);
+    let facade = mgr
+        .spawn_simple("vadd_f32_1024", Mode::Val, Mode::Val)
+        .unwrap();
+    server_sys.registry().put("device-worker", facade);
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    // node B: no device of its own, drives the facade through a proxy
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client
+        .remote_actor(&addr.to_string(), "device-worker")
+        .unwrap();
+
+    let a: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+    let b: Vec<f32> = (0..1024).map(|i| (i * 2) as f32).collect();
+    let args = vec![ArgValue::from(a.clone()), ArgValue::from(b.clone())];
+    let me = client_sys.scoped();
+    let out: Vec<f32> = me.request(&remote, args).receive(net_t()).unwrap();
+    let expect: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    assert_eq!(out, expect);
+
+    // a wrong-arity argument list fails in the facade and the error makes
+    // it back over the wire
+    let short = vec![ArgValue::from(a.clone())];
+    let err = me.request(&remote, short).receive_msg(net_t());
+    assert!(err.is_err());
+    assert!(err.unwrap_err().reason.contains("2 arguments"));
+
+    server.stop();
+    client.stop();
+    mgr.stop_devices();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn ref_payload_fails_on_sender_with_device_local() {
+    // design option (a): device references never cross the wire — neither
+    // as a bare MemRef nor inside a Vec<ArgValue>
+    let server_sys =
+        ActorSystem::new(config(2).with_artifacts_dir(stub_artifacts("memref")));
+    let mgr = Manager::load(&server_sys);
+    let ref_facade = mgr
+        .spawn_simple("copy_u32_1024", Mode::Val, Mode::Ref)
+        .unwrap();
+    spawn_blackhole(&server_sys, "sink");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "sink").unwrap();
+
+    // produce a device-resident reference locally on the server system
+    let server_me = server_sys.scoped();
+    let r: caf_ocl::opencl::MemRef = server_me
+        .request(&ref_facade, (0..1024u32).collect::<Vec<u32>>())
+        .receive(net_t())
+        .unwrap();
+
+    // bare MemRef
+    let err = server_me.request(&remote, r.clone()).receive_msg(net_t());
+    assert!(err.is_err());
+    assert!(
+        err.unwrap_err().reason.contains("cannot be serialized"),
+        "error must name the serialization restriction"
+    );
+
+    // Ref inside an argument list
+    let args = vec![ArgValue::from(vec![1u32; 4]), ArgValue::Ref(r)];
+    let err = server_me.request(&remote, args).receive_msg(net_t());
+    assert!(err.is_err());
+    assert!(err.unwrap_err().reason.contains("cannot be serialized"));
+
+    server.stop();
+    client.stop();
+    mgr.stop_devices();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// framing robustness
+// ---------------------------------------------------------------------------
+
+/// Open a raw socket, fire `bytes`, and assert the server closes the
+/// connection (EOF or reset) without answering.
+fn assert_closed_without_reply(addr: &SocketAddr, bytes: &[u8]) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(bytes).unwrap();
+    s.flush().unwrap();
+    s.set_read_timeout(Some(net_t())).unwrap();
+    let mut buf = [0u8; 64];
+    match s.read(&mut buf) {
+        Ok(0) => {}     // clean close
+        Err(_) => {}    // reset — also a close, also fine
+        Ok(n) => panic!("server replied {n} bytes to a malformed frame"),
+    }
+}
+
+#[test]
+fn malformed_frames_keep_node_serviceable() {
+    let server_sys = ActorSystem::new(config(2));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u32| reply(x + 1)),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    // zero-length frame
+    assert_closed_without_reply(&addr, &0u32.to_le_bytes());
+    // oversized frame announcement (would be a 4 GiB allocation unchecked)
+    assert_closed_without_reply(&addr, &u32::MAX.to_le_bytes());
+    // just past the cap
+    assert_closed_without_reply(&addr, &((MAX_FRAME as u32) + 1).to_le_bytes());
+    // unknown frame kind
+    assert_closed_without_reply(&addr, &[1, 0, 0, 0, 200]);
+    // REQUEST shorter than its mid
+    assert_closed_without_reply(&addr, &[4, 0, 0, 0, 1, 9, 9, 9]);
+    // REQUEST whose name_len points past the frame
+    let mut f = vec![12u8, 0, 0, 0, 1];
+    f.extend_from_slice(&7u64.to_le_bytes());
+    f.extend_from_slice(&500u16.to_le_bytes());
+    f.push(b'x');
+    assert_closed_without_reply(&addr, &f);
+    // truncated body: announce 100 bytes, send 3, hang up
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&100u32.to_le_bytes()).unwrap();
+        s.write_all(&[1, 2, 3]).unwrap();
+        drop(s);
+    }
+
+    // after all of that, the node still serves well-formed traffic: no
+    // handler thread panicked, the accept loop is alive
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "echo").unwrap();
+    let me = client_sys.scoped();
+    let out: u32 = me.request(&remote, 41u32).receive(net_t()).unwrap();
+    assert_eq!(out, 42);
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn malformed_request_payload_reports_to_requester() {
+    // a parseable frame whose *payload* is garbage should answer the
+    // waiting mid with an error instead of silently dropping it
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "w");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let mut body = 9u64.to_le_bytes().to_vec(); // mid
+    body.extend_from_slice(&1u16.to_le_bytes()); // name_len
+    body.push(b'w');
+    body.push(250); // unknown payload tag
+    let mut frame = ((body.len() + 1) as u32).to_le_bytes().to_vec();
+    frame.push(1); // KIND_REQUEST
+    frame.extend_from_slice(&body);
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&frame).unwrap();
+    s.set_read_timeout(Some(net_t())).unwrap();
+    let mut hdr = [0u8; 13]; // len + kind + mid of the REPLY
+    s.read_exact(&mut hdr).unwrap();
+    assert_eq!(hdr[4], 2, "frame kind must be REPLY");
+    let mid = u64::from_le_bytes(hdr[5..13].try_into().unwrap());
+    assert_eq!(mid, 9);
+
+    server.stop();
+    server_sys.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// connection lifecycle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn proxies_to_same_peer_share_one_connection() {
+    let server_sys = ActorSystem::new(config(2));
+    let _a = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u32| reply(x * 2)),
+        SpawnOptions::named("double"),
+    );
+    let _b = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u32| reply(x * 3)),
+        SpawnOptions::named("triple"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let double = client.remote_actor(&addr.to_string(), "double").unwrap();
+    let triple = client.remote_actor(&addr.to_string(), "triple").unwrap();
+    assert_eq!(client.peer_count(), 1, "one link per peer address");
+
+    let me = client_sys.scoped();
+    let d: u32 = me.request(&double, 10u32).receive(net_t()).unwrap();
+    let t: u32 = me.request(&triple, 10u32).receive(net_t()).unwrap();
+    assert_eq!((d, t), (20, 30));
+
+    // the server accepted exactly one connection for both proxies
+    let deadline = Instant::now() + net_t();
+    while server.served_count() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.served_count(), 1);
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn disconnect_fails_pending_requests_and_notifies_monitors() {
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "blackhole");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "blackhole").unwrap();
+
+    let me = client_sys.scoped();
+    remote.monitor_with(me.me());
+    let pending = me.request(&remote, 5u32);
+
+    // killing the server tears down the served connection; the client
+    // reader observes EOF, fails every pending request, and fires monitors
+    server.stop();
+    let t0 = Instant::now();
+    let err = pending.receive_msg(net_t()).unwrap_err();
+    assert!(
+        err.reason.contains("disconnected") || err.reason.contains("timed out"),
+        "unexpected reason: {}",
+        err.reason
+    );
+    assert!(t0.elapsed() < net_t(), "must fail before the receive deadline");
+
+    // the monitor sees Down { Unreachable } with the proxy's id
+    let deadline = Instant::now() + net_t();
+    let mut down: Option<Down> = None;
+    while down.is_none() && Instant::now() < deadline {
+        if let Some(env) = me.receive_any(Duration::from_millis(100)) {
+            down = env.msg.downcast_ref::<Down>().cloned();
+        }
+    }
+    let d = down.expect("monitor never received Down");
+    assert_eq!(d.reason, ExitReason::Unreachable);
+    assert_eq!(d.source, remote.id());
+
+    // attaching to an already-dead proxy fires immediately
+    remote.monitor_with(me.me());
+    let env = me
+        .receive_any(net_t())
+        .expect("late monitor attach must fire immediately");
+    assert!(env.msg.is::<Down>());
+
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn unreachable_peer_fails_new_requests_instead_of_hanging() {
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "gone");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "gone").unwrap();
+
+    // peer disappears entirely (listener closed, connection torn down)
+    server.stop();
+    server_sys.shutdown();
+
+    // reconnect-on-next-send finds nobody there: the request errors
+    // instead of leaking a pending entry
+    let me = client_sys.scoped();
+    let err = me.request(&remote, 1u32).receive_msg(net_t()).unwrap_err();
+    assert!(
+        err.reason.contains("cannot reach")
+            || err.reason.contains("disconnected")
+            || err.reason.contains("failed"),
+        "unexpected reason: {}",
+        err.reason
+    );
+
+    client.stop();
+    client_sys.shutdown();
+}
+
+#[test]
+fn request_deadline_reaps_pending_entries() {
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "slow");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    // client with a short remote_actor_timeout: an unanswered request must
+    // come back as an error in ~the deadline, not hang until the receive
+    // timeout (and the pending entry must not leak forever)
+    let client_sys = ActorSystem::new(
+        config(2).with_remote_timeout(Duration::from_millis(300)),
+    );
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "slow").unwrap();
+    let me = client_sys.scoped();
+    let t0 = Instant::now();
+    let err = me.request(&remote, 1u32).receive_msg(net_t()).unwrap_err();
+    assert!(
+        err.reason.contains("timed out"),
+        "unexpected reason: {}",
+        err.reason
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline took {:?}",
+        t0.elapsed()
+    );
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn reconnects_on_next_send_after_connection_loss() {
+    let server_sys = ActorSystem::new(config(2));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u32| reply(x + 100)),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "echo").unwrap();
+    let me = client_sys.scoped();
+    let a: u32 = me.request(&remote, 1u32).receive(net_t()).unwrap();
+    assert_eq!(a, 101);
+
+    // drop the client's side of the connection; the server keeps listening
+    client.stop();
+
+    // the proxy's link survives and re-establishes on the next request
+    let b: u32 = me.request(&remote, 2u32).receive(net_t()).unwrap();
+    assert_eq!(b, 102);
+
+    server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn second_listen_rejected_until_stopped() {
+    let sys = ActorSystem::new(config(2));
+    let node = Node::new(&sys);
+    let addr = node.listen("127.0.0.1:0").unwrap();
+    assert_eq!(node.local_addr(), Some(addr));
+
+    let err = node.listen("127.0.0.1:0").unwrap_err();
+    assert!(err.to_string().contains("already listening"));
+
+    node.stop();
+    assert_eq!(node.local_addr(), None);
+    // after a stop, listening again is fine
+    node.listen("127.0.0.1:0").unwrap();
+    node.stop();
+    sys.shutdown();
+}
+
+#[test]
+fn stop_tears_down_served_connections() {
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "sink");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let _p = client.remote_actor(&addr.to_string(), "sink").unwrap();
+    let deadline = Instant::now() + net_t();
+    while server.served_count() == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(server.served_count(), 1);
+
+    server.stop();
+    assert_eq!(
+        server.served_count(),
+        0,
+        "stop() must close and join every served connection"
+    );
+
+    client.stop();
     client_sys.shutdown();
     server_sys.shutdown();
 }

@@ -24,6 +24,37 @@ fn manifest_loads_and_is_complete() {
 }
 
 #[test]
+fn emulated_kernel_executes_without_artifacts() {
+    // the stub-backend path: no HLO on disk, kernels registered as HostOps
+    let q = DeviceQueue::start("emu-test", None).unwrap();
+    q.compile_emulated("copy", HostOp::Identity).wait(T).unwrap();
+    q.compile_emulated("vadd", HostOp::Add).wait(T).unwrap();
+
+    let a: Vec<u32> = (0..256).collect();
+    let b: Vec<u32> = (0..256).map(|i| i * 10).collect();
+    let (ba, ea) = q.upload(HostData::U32(a.clone()));
+    let (bb, eb) = q.upload(HostData::U32(b.clone()));
+
+    let (copy_out, copy_done) = q.execute("copy", vec![ba], Dtype::U32, vec![ea.clone()]);
+    copy_done.wait(T).unwrap();
+    assert_eq!(q.download(copy_out, T).unwrap().into_u32().unwrap(), a);
+
+    let (add_out, add_done) = q.execute("vadd", vec![ba, bb], Dtype::U32, vec![ea, eb]);
+    add_done.wait(T).unwrap();
+    let sum: Vec<u32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    assert_eq!(q.download(add_out, T).unwrap().into_u32().unwrap(), sum);
+
+    // shape/type mismatches surface as execution failures, not panics
+    let (short, es) = q.upload(HostData::U32(vec![1, 2, 3]));
+    let (_, bad) = q.execute("vadd", vec![ba, short], Dtype::U32, vec![es]);
+    assert!(bad.wait(T).is_err());
+    // dtype mismatch against the declared output
+    let (_, bad2) = q.execute("copy", vec![ba], Dtype::F32, vec![]);
+    assert!(bad2.wait(T).is_err());
+    q.stop();
+}
+
+#[test]
 fn compile_upload_execute_download_roundtrip() {
     let Some(m) = manifest() else { return };
     let q = DeviceQueue::start("test", None).unwrap();
