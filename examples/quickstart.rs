@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         .zip(&want)
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
-    println!("matmul {mx_dim}x{mx_dim} on device \"{}\"", mngr.default_device().name);
+    println!("matmul {mx_dim}x{mx_dim} on device \"{}\"", mngr.default_device()?.name);
     println!("top-left 4x4 of the product:");
     for r in 0..4 {
         let row: Vec<String> = (0..4)

@@ -1,0 +1,77 @@
+//! Dispatch & batching: the placement-tier probe (PERF.md).
+//!
+//! Two comparisons over host-emulated kernels on simulated sub-second
+//! devices (per-command launch padding, no artifacts or XLA backend
+//! needed, so this runs everywhere — including the `--no-default-features`
+//! CI config):
+//!
+//! 1. **Placement** — a burst of full-capacity requests against one pinned
+//!    facade vs the same burst against `Placement::Replicated` +
+//!    least-inflight over N devices.
+//! 2. **Batching** — sub-capacity requests launched one-per-message
+//!    (caller pads to capacity, the status quo) vs the adaptive batcher
+//!    coalescing them into padded fused launches.
+//!
+//! Writes `BENCH_dispatch.json` at the repository root. Smoke mode for CI:
+//! `DISPATCH_BENCH_SMOKE=1` runs one tiny iteration of each scenario so
+//! the harness cannot bit-rot without burning runner minutes. The reduced
+//! tier-1 twin is `cargo test --test perf_dispatch`.
+
+use caf_ocl::bench::{
+    dispatch_batching_probe, dispatch_placement_probe, write_dispatch_json,
+    write_dispatch_manifest, DispatchProbeConfig, DispatchResults,
+};
+use std::time::Duration;
+
+fn main() {
+    let smoke = std::env::var("DISPATCH_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let cfg = DispatchProbeConfig {
+        devices: 3,
+        launch: Duration::from_millis(if smoke { 1 } else { 3 }),
+        requests: if smoke { 4 } else { 96 },
+        batch_requests: if smoke { 8 } else { 256 },
+        request_elems: 64,
+        capacity: 1024,
+        artifacts_dir: write_dispatch_manifest("bench", 1024),
+    };
+    println!(
+        "dispatch: {} simulated devices, {:?} launch pad, {} placement requests, \
+         {} batching requests{}",
+        cfg.devices,
+        cfg.launch,
+        cfg.requests,
+        cfg.batch_requests,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let (one_device, n_device) = dispatch_placement_probe(&cfg);
+    println!(
+        "placement: 1 device {one_device:>9.1} req/s  |  {} devices {n_device:>9.1} req/s  ({:.2}x)",
+        cfg.devices,
+        n_device / one_device.max(1e-9)
+    );
+
+    let (unbatched, batched) = dispatch_batching_probe(&cfg);
+    println!(
+        "batching : unbatched {unbatched:>9.1} req/s  |  batched {batched:>9.1} req/s  ({:.2}x)",
+        batched / unbatched.max(1e-9)
+    );
+
+    let results = DispatchResults {
+        devices: cfg.devices,
+        requests: cfg.requests,
+        one_device_reqs_per_sec: one_device,
+        n_device_reqs_per_sec: n_device,
+        batch_requests: cfg.batch_requests,
+        request_elems: cfg.request_elems,
+        capacity: cfg.capacity,
+        unbatched_reqs_per_sec: unbatched,
+        batched_reqs_per_sec: batched,
+    };
+    match write_dispatch_json(&results, "cargo bench --bench dispatch") {
+        Ok(p) => println!("-> {}", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
+}

@@ -66,7 +66,7 @@ fn main() {
 
         let gpu = GpuIndexer::build(&mngr, 0, n).expect("pipeline");
         let _ = gpu.index(&me, &values, T).unwrap(); // warm
-        let device = mngr.default_device();
+        let device = mngr.default_device().unwrap();
         let stats = device.queue.stats();
         let exec_ns_before = stats.exec_ns.load(Ordering::Relaxed);
         let samples_gpu = sample(0, n_samples, || {

@@ -38,7 +38,7 @@ fn main() {
     let me = sys.scoped();
     let kernel = format!("matmul_{N}");
     let worker = mngr.spawn_simple(&kernel, Mode::Val, Mode::Val).unwrap();
-    let queue = mngr.default_device().queue.clone();
+    let queue = mngr.default_device().unwrap().queue.clone();
 
     let mut rng = Rng::new(6);
     let a = rng.fill_f32(N * N);

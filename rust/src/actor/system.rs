@@ -33,6 +33,10 @@ pub struct SystemConfig {
     ///
     /// [`ErrorMsg`]: super::monitor::ErrorMsg
     pub remote_actor_timeout: Duration,
+    /// Deadline for compiling a kernel program on a device queue
+    /// (`Program::build`, OpenCL's `clBuildProgram`). Was a hard-coded
+    /// 300 s constant in the OpenCL manager.
+    pub build_timeout: Duration,
 }
 
 impl Default for SystemConfig {
@@ -45,6 +49,7 @@ impl Default for SystemConfig {
             max_stash: 1024,
             artifacts_dir: "artifacts".to_string(),
             remote_actor_timeout: Duration::from_secs(30),
+            build_timeout: Duration::from_secs(300),
         }
     }
 }
@@ -57,6 +62,11 @@ impl SystemConfig {
 
     pub fn with_remote_timeout(mut self, d: Duration) -> Self {
         self.remote_actor_timeout = d;
+        self
+    }
+
+    pub fn with_build_timeout(mut self, d: Duration) -> Self {
+        self.build_timeout = d;
         self
     }
 

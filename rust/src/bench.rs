@@ -397,6 +397,244 @@ pub fn write_msgring_json(
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Dispatch & batching (PERF.md): the placement-tier probe. Compares a
+// spawn-frozen single-device facade against `Placement::Replicated` over
+// the simulated inventory, and per-request sub-capacity launches against
+// the adaptive batcher, at the sub-second request sizes where the paper
+// found launch overhead dominating (§5).
+// ---------------------------------------------------------------------------
+
+/// Shared config of the dispatch probes (the `dispatch` bench and the
+/// tier-1 `perf_dispatch` test run the same scenarios at different sizes).
+#[derive(Clone, Debug)]
+pub struct DispatchProbeConfig {
+    /// Simulated devices in the inventory.
+    pub devices: usize,
+    /// Fixed per-command launch pad of every simulated device.
+    pub launch: std::time::Duration,
+    /// Full-capacity requests for the placement comparison.
+    pub requests: usize,
+    /// Sub-capacity requests for the batching comparison.
+    pub batch_requests: usize,
+    /// Elements per sub-capacity request.
+    pub request_elems: usize,
+    /// Kernel capacity in elements.
+    pub capacity: usize,
+    /// Artifacts dir holding the probe's stub manifest.
+    pub artifacts_dir: String,
+}
+
+/// Write the probe's stub manifest (host-emulated identity kernel) into a
+/// per-process temp dir; returns the artifacts path.
+pub fn write_dispatch_manifest(tag: &str, capacity: usize) -> String {
+    let dir = std::env::temp_dir().join(format!(
+        "caf-ocl-dispatch-{}-{tag}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("create dispatch artifacts dir");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        format!("copy_u32|emu|u32:{capacity}|u32:{capacity}|emu=identity n={capacity}\n"),
+    )
+    .expect("write dispatch manifest");
+    dir.to_string_lossy().to_string()
+}
+
+fn dispatch_system(
+    cfg: &DispatchProbeConfig,
+    n_devices: usize,
+) -> (crate::actor::ActorSystem, std::sync::Arc<crate::opencl::Manager>) {
+    use crate::opencl::{DeviceInfo, DeviceKind, DeviceSpec, Manager};
+    use crate::runtime::client::PadModel;
+    let sys = crate::actor::ActorSystem::new(
+        crate::actor::SystemConfig::default()
+            .with_threads(4)
+            .with_artifacts_dir(cfg.artifacts_dir.clone()),
+    );
+    let specs = (0..n_devices)
+        .map(|i| DeviceSpec {
+            name: format!("sim-{i}"),
+            kind: DeviceKind::Gpu,
+            info: DeviceInfo {
+                compute_units: 8,
+                max_work_items_per_cu: 1024,
+            },
+            pad: Some(PadModel {
+                launch: cfg.launch,
+                bytes_per_sec: 0.0,
+                compute_scale: 1.0,
+                busy_wait: false,
+            }),
+        })
+        .collect();
+    let mgr = Manager::load_with(&sys, specs);
+    (sys, mgr)
+}
+
+fn dispatch_spawn(
+    mgr: &crate::opencl::Manager,
+    placement: crate::opencl::Placement,
+    batching: Option<crate::opencl::BatchConfig>,
+) -> crate::actor::ActorRef {
+    use crate::opencl::{KernelSpawn, Mode};
+    let program = mgr.create_kernel_program("copy_u32").expect("stub program");
+    let mut cfg = KernelSpawn::new(program, "copy_u32")
+        .inputs(Mode::Val, 1)
+        .output(Mode::Val)
+        .placement(placement);
+    if let Some(b) = batching {
+        cfg = cfg.batched(b);
+    }
+    mgr.spawn_cl(cfg).expect("dispatch probe spawn")
+}
+
+/// Fire every payload as a concurrent request and await all replies;
+/// returns requests/second.
+fn dispatch_drive(
+    sys: &crate::actor::ActorSystem,
+    worker: &crate::actor::ActorRef,
+    payloads: Vec<Vec<u32>>,
+) -> f64 {
+    let me = sys.scoped();
+    let n = payloads.len();
+    let t0 = Instant::now();
+    let pending: Vec<_> = payloads
+        .into_iter()
+        .map(|p| me.request(worker, p))
+        .collect();
+    for p in pending {
+        let _: Vec<u32> = p
+            .receive(std::time::Duration::from_secs(120))
+            .expect("dispatch probe request");
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Placement comparison: (one pinned device, Replicated+least-inflight)
+/// requests/second for a burst of full-capacity requests.
+pub fn dispatch_placement_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
+    use crate::opencl::{Placement, PlacementPolicy};
+    let full: Vec<Vec<u32>> = (0..cfg.requests)
+        .map(|i| vec![i as u32; cfg.capacity])
+        .collect();
+    let (sys, mgr) = dispatch_system(cfg, cfg.devices);
+    let pinned = dispatch_spawn(&mgr, Placement::Pinned, None);
+    let one_device = dispatch_drive(&sys, &pinned, full.clone());
+    mgr.stop_devices();
+    sys.shutdown();
+
+    let (sys, mgr) = dispatch_system(cfg, cfg.devices);
+    let replicated = dispatch_spawn(
+        &mgr,
+        Placement::Replicated(PlacementPolicy::LeastInflight),
+        None,
+    );
+    let n_device = dispatch_drive(&sys, &replicated, full);
+    mgr.stop_devices();
+    sys.shutdown();
+    (one_device, n_device)
+}
+
+/// Batching comparison: (per-request launches with caller-side padding,
+/// adaptive batcher) requests/second for sub-capacity requests.
+pub fn dispatch_batching_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
+    use crate::opencl::{BatchConfig, Placement};
+    let small: Vec<Vec<u32>> = (0..cfg.batch_requests)
+        .map(|i| vec![i as u32; cfg.request_elems])
+        .collect();
+    let (sys, mgr) = dispatch_system(cfg, 1);
+    let plain = dispatch_spawn(&mgr, Placement::Pinned, None);
+    // the status quo for sub-capacity work: every caller pads to capacity
+    let padded: Vec<Vec<u32>> = small
+        .iter()
+        .map(|v| {
+            let mut p = v.clone();
+            p.resize(cfg.capacity, 0);
+            p
+        })
+        .collect();
+    let unbatched = dispatch_drive(&sys, &plain, padded);
+    mgr.stop_devices();
+    sys.shutdown();
+
+    let (sys, mgr) = dispatch_system(cfg, 1);
+    let batcher = dispatch_spawn(
+        &mgr,
+        Placement::Pinned,
+        Some(BatchConfig {
+            max_requests: (cfg.capacity / cfg.request_elems).max(1),
+            max_delay: std::time::Duration::from_millis(2),
+        }),
+    );
+    let batched = dispatch_drive(&sys, &batcher, small);
+    mgr.stop_devices();
+    sys.shutdown();
+    (unbatched, batched)
+}
+
+/// Results of one `cargo bench --bench dispatch` run.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchResults {
+    /// Simulated devices in the inventory.
+    pub devices: usize,
+    /// Requests per placement measurement.
+    pub requests: usize,
+    /// Full-capacity requests against one pinned device.
+    pub one_device_reqs_per_sec: f64,
+    /// The same burst against `Placement::Replicated` + least-inflight.
+    pub n_device_reqs_per_sec: f64,
+    /// Requests per batching measurement.
+    pub batch_requests: usize,
+    /// Elements per sub-capacity request.
+    pub request_elems: usize,
+    /// Kernel capacity in elements.
+    pub capacity: usize,
+    /// Per-request launches (caller pads to capacity).
+    pub unbatched_reqs_per_sec: f64,
+    /// Adaptive batcher coalescing the same requests.
+    pub batched_reqs_per_sec: f64,
+}
+
+/// Write `BENCH_dispatch.json` (repo root when run from `rust/`, else the
+/// working directory) — the machine-readable placement/batching trajectory
+/// described in PERF.md.
+pub fn write_dispatch_json(
+    r: &DispatchResults,
+    generated_by: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    let root = std::path::Path::new("../ROADMAP.md");
+    let path = if root.exists() {
+        std::path::PathBuf::from("../BENCH_dispatch.json")
+    } else {
+        std::path::PathBuf::from("BENCH_dispatch.json")
+    };
+    let placement_speedup = r.n_device_reqs_per_sec / r.one_device_reqs_per_sec.max(1e-9);
+    let batching_speedup = r.batched_reqs_per_sec / r.unbatched_reqs_per_sec.max(1e-9);
+    let json = format!(
+        "{{\n  \"bench\": \"dispatch\",\n  \"generated_by\": {generated_by:?},\n  \
+         \"placement\": {{\"devices\": {}, \"requests\": {}, \
+         \"one_device_reqs_per_sec\": {:.1}, \"n_device_reqs_per_sec\": {:.1}, \
+         \"speedup\": {:.3}}},\n  \
+         \"batching\": {{\"requests\": {}, \"request_elems\": {}, \"capacity\": {}, \
+         \"unbatched_reqs_per_sec\": {:.1}, \"batched_reqs_per_sec\": {:.1}, \
+         \"speedup\": {:.3}}}\n}}\n",
+        r.devices,
+        r.requests,
+        r.one_device_reqs_per_sec,
+        r.n_device_reqs_per_sec,
+        placement_speedup,
+        r.batch_requests,
+        r.request_elems,
+        r.capacity,
+        r.unbatched_reqs_per_sec,
+        r.batched_reqs_per_sec,
+        batching_speedup
+    );
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Quick/full switch: benches default to a fast sweep; set
 /// `CAF_OCL_BENCH_FULL=1` for the paper-scale version.
 pub fn full_mode() -> bool {

@@ -43,6 +43,13 @@
 //! A mem_ref in a payload fails at `encode_message` — the error surfaces on
 //! the *sender*, before any bytes move (design option (a), §3.5).
 //!
+//! Placement transparency: a facade spawned with
+//! [`Placement::Replicated`](crate::opencl::Placement) is published like
+//! any other registry-named actor — the name resolves to the routing
+//! dispatcher, so inbound remote requests fan out across the server's
+//! device inventory (and batched facades coalesce them) without the wire
+//! protocol knowing anything about placement.
+//!
 //! [`SystemConfig::remote_actor_timeout`]: crate::actor::SystemConfig
 //! [`Down`]: crate::actor::Down
 //! [`ExitReason::Unreachable`]: crate::actor::ExitReason

@@ -151,6 +151,52 @@ pub fn extract_args(msg: &Message) -> Option<Vec<ArgValue>> {
     None
 }
 
+/// Cheap affinity scan for the placement dispatcher: the device ids of the
+/// `Ref` arguments [`extract_args`] would produce, WITHOUT cloning any
+/// payload data (`extract_args` deep-copies plain vectors, which would
+/// double the per-message copy cost on the routed hot path just to learn
+/// there are no refs). Must mirror `extract_args`' shape list: the
+/// plain-vector shapes can never carry refs, so a type check alone scans
+/// them to an empty list. Returns `None` for messages that do not extract
+/// at all.
+pub(crate) fn ref_device_scan(msg: &Message) -> Option<Vec<usize>> {
+    fn dedup_push(devs: &mut Vec<usize>, d: usize) {
+        if !devs.contains(&d) {
+            devs.push(d);
+        }
+    }
+    if let Some(v) = msg.downcast_ref::<Vec<ArgValue>>() {
+        let mut devs = Vec::new();
+        for a in v {
+            if let ArgValue::Ref(r) = a {
+                dedup_push(&mut devs, r.device_id());
+            }
+        }
+        return Some(devs);
+    }
+    if let Some(r) = msg.downcast_ref::<MemRef>() {
+        return Some(vec![r.device_id()]);
+    }
+    if let Some((a,)) = msg.downcast_ref::<(MemRef,)>() {
+        return Some(vec![a.device_id()]);
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(MemRef, MemRef)>() {
+        let mut devs = vec![a.device_id()];
+        dedup_push(&mut devs, b.device_id());
+        return Some(devs);
+    }
+    // the remaining extractable shapes are plain host vectors — no refs
+    if msg.is::<Vec<u32>>()
+        || msg.is::<Vec<f32>>()
+        || msg.is::<(Vec<u32>, Vec<u32>)>()
+        || msg.is::<(Vec<f32>, Vec<f32>)>()
+        || msg.is::<(Vec<u32>, Vec<u32>, Vec<u32>)>()
+    {
+        return Some(Vec::new());
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +223,22 @@ mod tests {
         let a: ArgValue = vec![1u32, 2].into();
         assert!(!a.is_ref());
         assert_eq!(a.to_host(), Some(HostData::U32(vec![1, 2])));
+    }
+
+    #[test]
+    fn ref_scan_mirrors_extractable_shapes_without_cloning() {
+        // plain-vector shapes extract but can never carry refs
+        for m in [
+            Message::new(vec![1u32, 2]),
+            Message::new(vec![1f32]),
+            Message::new((vec![1u32], vec![2u32])),
+            Message::new((vec![1f32], vec![2f32])),
+            Message::new((vec![1u32], vec![2u32], vec![3u32])),
+            Message::new(vec![ArgValue::from(vec![1u32])]),
+        ] {
+            assert_eq!(ref_device_scan(&m), Some(Vec::new()), "{}", m.type_name());
+        }
+        // unextractable messages scan to None, like extract_args
+        assert_eq!(ref_device_scan(&Message::new("nope".to_string())), None);
     }
 }

@@ -1,0 +1,399 @@
+//! Adaptive request batching for val-mode OpenCL actors.
+//!
+//! The paper's evaluation found per-request launch overhead dominating
+//! sub-second duties (§5: "for sub-second duties, the efficiency of
+//! offloading was found to largely differ between devices"). A batching
+//! facade amortizes exactly that: requests *smaller than the kernel's
+//! declared capacity* are queued and coalesced — within a count window
+//! ([`BatchConfig::max_requests`]), a time window
+//! ([`BatchConfig::max_delay`]), or until the capacity fills — into one
+//! padded launch, submitted through the fused upload+execute queue command
+//! ([`DeviceQueue::execute_fused`]) so the whole batch traverses the device
+//! command channel once. When the launch completes, each requester receives
+//! exactly its slice of the output through its own [`ResponsePromise`].
+//!
+//! Padding reuses the device cost model's notion of capacity: a batch is
+//! zero-padded up to the kernel's manifest shape, so the simulated
+//! [`PadModel`](crate::runtime::client::PadModel) charges the same
+//! fixed-size transfer the unbatched path pays per request — the win is
+//! paying it once per *window* instead of once per message.
+//!
+//! Batching is restricted to val-mode elementwise kernels (all operands and
+//! the output share one shape); `KernelSpawn::validate_on` enforces this at
+//! spawn time. A terminating facade flushes its pending window from `Drop`,
+//! so shutdown loses no promises: the batch either launches (requesters get
+//! their slices) or, if the device queue is already gone, every promise
+//! falls back to the broken-promise error.
+//!
+//! [`DeviceQueue::execute_fused`]: crate::runtime::DeviceQueue::execute_fused
+//! [`ResponsePromise`]: crate::actor::request::ResponsePromise
+
+use super::arg::{extract_args, ArgValue};
+use super::device::Device;
+use super::facade::{FacadeStats, KernelSpawn, PostFn};
+use crate::actor::cell::lock;
+use crate::actor::request::ResponsePromise;
+use crate::actor::{no_reply, ActorRef, ActorSystem, Behavior, ErrorMsg, Message, Reply};
+use crate::runtime::artifact::{ArtifactMeta, Dtype};
+use crate::runtime::{HostData, UploadSrc};
+use anyhow::Result;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching window configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Flush when this many requests are pending (count trigger).
+    pub max_requests: usize,
+    /// Flush when the oldest pending request has waited this long (time
+    /// trigger; armed when a window opens).
+    pub max_delay: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_requests: 16,
+            max_delay: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Timer payload arming the time trigger; `gen` identifies the window it
+/// was armed for, so a tick that arrives after that window already flushed
+/// is a no-op.
+#[derive(Clone, Copy, Debug)]
+struct FlushTick {
+    gen: u64,
+}
+
+struct PendingReq {
+    promise: ResponsePromise,
+    incoming: Message,
+    args: Vec<ArgValue>,
+    len: usize,
+}
+
+struct BatchState {
+    device: Arc<Device>,
+    meta: ArtifactMeta,
+    post: Option<PostFn>,
+    stats: Option<Arc<FacadeStats>>,
+    cfg: BatchConfig,
+    /// Kernel capacity in elements (the manifest shape all operands share).
+    capacity: usize,
+    pending: Vec<PendingReq>,
+    /// Elements accumulated across `pending` (per input).
+    elems: usize,
+    /// Window generation: bumped on every flush; stale `FlushTick`s
+    /// compare unequal and do nothing.
+    gen: u64,
+}
+
+impl BatchState {
+    /// Admit one validated request. Returns `Some(gen)` when the caller
+    /// must arm the time trigger for the window this request opened.
+    fn admit(
+        &mut self,
+        args: Vec<ArgValue>,
+        promise: ResponsePromise,
+        incoming: Message,
+    ) -> Option<u64> {
+        let k = args[0].len();
+        // a request that no longer fits closes the current window first
+        if !self.pending.is_empty() && self.elems + k > self.capacity {
+            self.flush();
+        }
+        self.pending.push(PendingReq {
+            promise,
+            incoming,
+            args,
+            len: k,
+        });
+        self.elems += k;
+        if self.elems >= self.capacity || self.pending.len() >= self.cfg.max_requests.max(1) {
+            self.flush();
+            None
+        } else if self.pending.len() == 1 {
+            Some(self.gen)
+        } else {
+            None
+        }
+    }
+
+    /// Coalesce the pending window into one padded fused launch and
+    /// scatter the output slices back to the requesters on completion.
+    fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.gen = self.gen.wrapping_add(1);
+        let reqs = std::mem::take(&mut self.pending);
+        self.elems = 0;
+        let mut srcs: Vec<UploadSrc> = Vec::with_capacity(self.meta.inputs.len());
+        for (j, spec) in self.meta.inputs.iter().enumerate() {
+            match spec.dtype {
+                Dtype::U32 => {
+                    let mut v: Vec<u32> = Vec::with_capacity(spec.elems());
+                    for r in &reqs {
+                        if let ArgValue::U32(a) = &r.args[j] {
+                            v.extend_from_slice(a);
+                        }
+                    }
+                    v.resize(spec.elems(), 0);
+                    srcs.push(UploadSrc::Owned(HostData::U32(v)));
+                }
+                Dtype::F32 => {
+                    let mut v: Vec<f32> = Vec::with_capacity(spec.elems());
+                    for r in &reqs {
+                        if let ArgValue::F32(a) = &r.args[j] {
+                            v.extend_from_slice(a);
+                        }
+                    }
+                    v.resize(spec.elems(), 0.0);
+                    srcs.push(UploadSrc::Owned(HostData::F32(v)));
+                }
+            }
+        }
+        // one command for upload+execute, one for the read-back
+        let queue = self.device.queue.clone();
+        let (out_id, _done) = queue.execute_fused(&self.meta.name, srcs, self.meta.output.dtype);
+        let mut slices = Vec::with_capacity(reqs.len());
+        let mut off = 0usize;
+        for r in reqs {
+            slices.push((r.promise, r.incoming, off, r.len));
+            off += r.len;
+        }
+        let post = self.post.clone();
+        let stats = self.stats.clone();
+        let t_enqueue = Instant::now();
+        let q2 = queue.clone();
+        queue.download_with(out_id, move |res| {
+            q2.free(out_id);
+            if let Some(st) = &stats {
+                // one launch per flush: `launched` is the coalescing metric
+                st.launched.fetch_add(1, Ordering::Relaxed);
+                st.device_ns
+                    .fetch_add(t_enqueue.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            match res {
+                Ok(host) => {
+                    for (promise, incoming, off, len) in slices {
+                        if off + len > host.len() {
+                            promise.deliver_err(ErrorMsg::new(format!(
+                                "batched output of {} elements is shorter than slice {}..{}",
+                                host.len(),
+                                off,
+                                off + len
+                            )));
+                            continue;
+                        }
+                        let arg = slice_arg(&host, off, len);
+                        let msg = match &post {
+                            Some(p) => p(arg, &incoming),
+                            None => default_msg(arg),
+                        };
+                        promise.deliver_msg(msg);
+                    }
+                }
+                Err(e) => {
+                    for (promise, _incoming, _off, _len) in slices {
+                        promise.deliver_err(ErrorMsg::new(format!("kernel failed: {e}")));
+                    }
+                }
+            }
+        });
+    }
+}
+
+impl Drop for BatchState {
+    fn drop(&mut self) {
+        // shutdown flush: a terminating facade launches its pending window
+        // instead of losing it (see the module docs)
+        self.flush();
+    }
+}
+
+fn slice_arg(host: &HostData, off: usize, len: usize) -> ArgValue {
+    match host {
+        HostData::U32(v) => ArgValue::U32(Arc::new(v[off..off + len].to_vec())),
+        HostData::F32(v) => ArgValue::F32(Arc::new(v[off..off + len].to_vec())),
+    }
+}
+
+/// Mirror of the unbatched facade's default Val response shape.
+fn default_msg(arg: ArgValue) -> Message {
+    match arg {
+        ArgValue::U32(v) => Message::new(Arc::try_unwrap(v).unwrap_or_default()),
+        ArgValue::F32(v) => Message::new(Arc::try_unwrap(v).unwrap_or_default()),
+        ArgValue::Ref(_) => unreachable!("batcher only produces val outputs"),
+    }
+}
+
+/// Per-request validation against the kernel signature (the batched analog
+/// of `Command::check`): val-only, matching dtypes, one common length per
+/// request, within the kernel capacity.
+fn check_args(meta: &ArtifactMeta, capacity: usize, args: &[ArgValue]) -> Result<usize, String> {
+    if args.len() != meta.inputs.len() {
+        return Err(format!(
+            "kernel {} expects {} arguments, message carries {}",
+            meta.name,
+            meta.inputs.len(),
+            args.len()
+        ));
+    }
+    let k = args[0].len();
+    for (i, (a, spec)) in args.iter().zip(&meta.inputs).enumerate() {
+        if a.is_ref() {
+            return Err(format!(
+                "kernel {}: batching facade takes val arguments, argument {i} is a mem_ref",
+                meta.name
+            ));
+        }
+        if a.dtype() != spec.dtype {
+            return Err(format!(
+                "kernel {} argument {i}: expected {}, got {}",
+                meta.name,
+                spec.dtype.name(),
+                a.dtype().name()
+            ));
+        }
+        if a.len() != k {
+            return Err(format!(
+                "kernel {} argument {i}: batch slice of {} elements, argument 0 has {}",
+                meta.name,
+                a.len(),
+                k
+            ));
+        }
+    }
+    if k == 0 {
+        return Err(format!("kernel {}: empty request", meta.name));
+    }
+    if k > capacity {
+        return Err(format!(
+            "kernel {}: request of {k} elements exceeds kernel capacity {capacity}",
+            meta.name
+        ));
+    }
+    Ok(k)
+}
+
+/// Spawn a batching facade bound to `device` (the replica entry point used
+/// by `spawn_on_device` when `KernelSpawn::batching` is set).
+pub(crate) fn spawn_batching_facade(
+    sys: &ActorSystem,
+    cfg: KernelSpawn,
+    device: Arc<Device>,
+) -> Result<ActorRef> {
+    let meta = cfg.program.kernel(&cfg.kernel)?.clone();
+    let bcfg = cfg.batching.unwrap_or_default();
+    let capacity = meta.inputs[0].elems();
+    let pre = cfg.pre.clone();
+    let post = cfg.post.clone();
+    let stats = cfg.stats.clone();
+    let kernel = cfg.kernel.clone();
+    Ok(sys.spawn(move |_ctx| {
+        let state = Arc::new(Mutex::new(BatchState {
+            device,
+            meta,
+            post,
+            stats,
+            cfg: bcfg,
+            capacity,
+            pending: Vec::new(),
+            elems: 0,
+            gen: 0,
+        }));
+        let tick_state = state.clone();
+        Behavior::new()
+            .on(move |_ctx, tick: &FlushTick| {
+                let mut st = lock(&tick_state);
+                if tick.gen == st.gen {
+                    // the window this tick was armed for is still open
+                    st.flush();
+                }
+                no_reply()
+            })
+            .on_any(move |ctx, msg| {
+                let args = match &pre {
+                    Some(p) => p(msg),
+                    None => extract_args(msg),
+                };
+                let Some(args) = args else {
+                    let promise = ctx.make_promise();
+                    promise.deliver_err(ErrorMsg::new(format!(
+                        "kernel {kernel} cannot extract arguments from {}",
+                        msg.type_name()
+                    )));
+                    return Reply::Promised;
+                };
+                let mut st = lock(&state);
+                match check_args(&st.meta, st.capacity, &args) {
+                    Ok(_k) => {
+                        let promise = ctx.make_promise();
+                        if let Some(gen) = st.admit(args, promise, msg.clone()) {
+                            let delay = st.cfg.max_delay;
+                            drop(st);
+                            ctx.system().timer().schedule(
+                                delay,
+                                ctx.me(),
+                                Message::new(FlushTick { gen }),
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        drop(st);
+                        let promise = ctx.make_promise();
+                        promise.deliver_err(ErrorMsg::new(e));
+                    }
+                }
+                Reply::Promised
+            })
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::TensorSpec;
+    use std::collections::HashMap;
+
+    fn meta_1in(capacity: usize) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "t".to_string(),
+            file: "emu".to_string(),
+            inputs: vec![TensorSpec {
+                dtype: Dtype::U32,
+                dims: vec![capacity],
+            }],
+            output: TensorSpec {
+                dtype: Dtype::U32,
+                dims: vec![capacity],
+            },
+            extras: HashMap::new(),
+        }
+    }
+
+    #[test]
+    fn check_args_validates_shape_and_mode() {
+        let meta = meta_1in(8);
+        let ok: Vec<ArgValue> = vec![vec![1u32, 2, 3].into()];
+        assert_eq!(check_args(&meta, 8, &ok), Ok(3));
+        let too_big: Vec<ArgValue> = vec![vec![0u32; 9].into()];
+        assert!(check_args(&meta, 8, &too_big)
+            .unwrap_err()
+            .contains("exceeds kernel capacity"));
+        let wrong_dtype: Vec<ArgValue> = vec![vec![0f32; 4].into()];
+        assert!(check_args(&meta, 8, &wrong_dtype)
+            .unwrap_err()
+            .contains("expected u32"));
+        let empty: Vec<ArgValue> = vec![Vec::<u32>::new().into()];
+        assert!(check_args(&meta, 8, &empty).unwrap_err().contains("empty"));
+        let arity: Vec<ArgValue> = vec![];
+        assert!(check_args(&meta, 8, &arity)
+            .unwrap_err()
+            .contains("expects 1 arguments"));
+    }
+}

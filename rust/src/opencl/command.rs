@@ -87,11 +87,14 @@ impl Command {
         Ok(())
     }
 
-    /// Enqueue the command (paper Listing 4's `enqueue`): uploads for Val
-    /// inputs, the kernel execution depending on every input event, then
-    /// either an immediate `MemRef` response (Ref output — forwarded before
-    /// completion) or a download whose callback fulfills the promise (Val
-    /// output).
+    /// Enqueue the command (paper Listing 4's `enqueue`): all-`Val`
+    /// argument lists go through the fused upload+execute submission (one
+    /// command-channel traversal for the whole launch); argument lists
+    /// carrying device references take the per-argument path — uploads for
+    /// Val inputs, the kernel execution depending on every input event.
+    /// Either way the response is an immediate `MemRef` (Ref output —
+    /// forwarded before completion) or a download whose callback fulfills
+    /// the promise (Val output).
     pub fn enqueue(self) {
         if let Err(e) = self.check() {
             self.promise
@@ -99,47 +102,65 @@ impl Command {
             return;
         }
         let queue = &self.device.queue;
-        let mut ids = Vec::with_capacity(self.args.len());
-        let mut deps: Vec<Event> = Vec::new();
-        let mut temps: Vec<u64> = Vec::new();
-        for a in &self.args {
-            match a {
-                ArgValue::Ref(r) => {
-                    ids.push(r.buffer_id());
-                    // lock-free fast path: a dependency that already
-                    // retired successfully need not block the queue again;
-                    // pending or failed events stay on the list so the
-                    // queue thread waits or propagates the error
-                    match r.ready_event().poll() {
-                        Some(Ok(())) => {}
-                        _ => deps.push(r.ready_event().clone()),
-                    }
-                }
-                ArgValue::U32(v) => {
+        let out_spec = self.meta.output.clone();
+        let all_val = self.args.iter().all(|a| !a.is_ref());
+        let (out_id, done) = if all_val {
+            // fused fast path: the queue thread stages every input and runs
+            // the kernel off one command, recycling the staged storage when
+            // the launch retires — no Upload/Execute/Free triple
+            let srcs: Vec<crate::runtime::UploadSrc> = self
+                .args
+                .iter()
+                .map(|a| match a {
                     // zero host-side copy: the queue thread reads straight
                     // from the shared payload (clEnqueueWriteBuffer model)
-                    let (id, ev) = queue
-                        .upload(crate::runtime::UploadSrc::SharedU32(v.clone()));
-                    ids.push(id);
-                    deps.push(ev);
-                    temps.push(id);
-                }
-                ArgValue::F32(v) => {
-                    let (id, ev) = queue
-                        .upload(crate::runtime::UploadSrc::SharedF32(v.clone()));
-                    ids.push(id);
-                    deps.push(ev);
-                    temps.push(id);
+                    ArgValue::U32(v) => crate::runtime::UploadSrc::SharedU32(v.clone()),
+                    ArgValue::F32(v) => crate::runtime::UploadSrc::SharedF32(v.clone()),
+                    ArgValue::Ref(_) => unreachable!("all_val checked"),
+                })
+                .collect();
+            queue.execute_fused(&self.meta.name, srcs, out_spec.dtype)
+        } else {
+            let mut ids = Vec::with_capacity(self.args.len());
+            let mut deps: Vec<Event> = Vec::new();
+            let mut temps: Vec<u64> = Vec::new();
+            for a in &self.args {
+                match a {
+                    ArgValue::Ref(r) => {
+                        ids.push(r.buffer_id());
+                        // lock-free fast path: a dependency that already
+                        // retired successfully need not block the queue
+                        // again; pending or failed events stay on the list
+                        // so the queue thread waits or propagates the error
+                        match r.ready_event().poll() {
+                            Some(Ok(())) => {}
+                            _ => deps.push(r.ready_event().clone()),
+                        }
+                    }
+                    ArgValue::U32(v) => {
+                        let (id, ev) = queue
+                            .upload(crate::runtime::UploadSrc::SharedU32(v.clone()));
+                        ids.push(id);
+                        deps.push(ev);
+                        temps.push(id);
+                    }
+                    ArgValue::F32(v) => {
+                        let (id, ev) = queue
+                            .upload(crate::runtime::UploadSrc::SharedF32(v.clone()));
+                        ids.push(id);
+                        deps.push(ev);
+                        temps.push(id);
+                    }
                 }
             }
-        }
-        let out_spec = self.meta.output.clone();
-        let (out_id, done) = queue.execute(&self.meta.name, ids, out_spec.dtype, deps);
-        // inputs uploaded for this invocation die with it (in-order queue:
-        // the Free retires after the Execute)
-        for t in temps {
-            queue.free(t);
-        }
+            let pair = queue.execute(&self.meta.name, ids, out_spec.dtype, deps);
+            // inputs uploaded for this invocation die with it (in-order
+            // queue: the Free retires after the Execute)
+            for t in temps {
+                queue.free(t);
+            }
+            pair
+        };
         // Fig 5's "enqueue -> callback" window: for Ref outputs it ends at
         // kernel completion; for Val outputs it extends to the read-back,
         // matching the paper's "includes data transfer as well as the

@@ -9,21 +9,35 @@
 //! The facade is an ordinary event-based actor — the runtime cannot tell it
 //! apart from CPU actors (same [`ActorRef`] handle, monitorable, linkable,
 //! composable).
+//!
+//! Since the placement tier, a facade is no longer bound to the device its
+//! program was compiled for at spawn time: [`spawn_on_device`] builds each
+//! facade against an explicit device (the replica's), and
+//! [`Placement::Replicated`] spawns one such replica per discovered device
+//! behind a routing dispatcher (see [`super::placement`]). Val-mode
+//! facades can additionally coalesce sub-capacity requests through the
+//! adaptive batcher (see [`super::batch`]).
 
 use super::arg::{extract_args, ArgValue, Mode};
+use super::batch::{spawn_batching_facade, BatchConfig};
 use super::command::{Command, CommandStats};
+use super::device::Device;
 use super::nd_range::NdRange;
+use super::placement::Placement;
 use super::program::Program;
 use crate::actor::{ActorRef, ActorSystem, Behavior, Message, Reply};
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Facade-level metrics: launches + cumulative device (enqueue→complete)
-/// time, the paper's Fig 5 measurement.
+/// time, the paper's Fig 5 measurement. A batched facade counts one launch
+/// per *flush*, so `launched` is the coalescing metric there.
 pub type FacadeStats = CommandStats;
 
-type PreFn = Arc<dyn Fn(&Message) -> Option<Vec<ArgValue>> + Send + Sync>;
-type PostFn = Arc<dyn Fn(ArgValue, &Message) -> Message + Send + Sync>;
+/// Message→argument extraction hook (Listing 3's `preprocess`).
+pub type PreFn = Arc<dyn Fn(&Message) -> Option<Vec<ArgValue>> + Send + Sync>;
+/// Output→message mapping hook (Listing 3's `postprocess`).
+pub type PostFn = Arc<dyn Fn(ArgValue, &Message) -> Message + Send + Sync>;
 
 /// Spawn configuration for an OpenCL actor (the argument list of the
 /// paper's `mngr.spawn(...)`, Listings 2/3/5).
@@ -42,6 +56,13 @@ pub struct KernelSpawn {
     pub post: Option<PostFn>,
     /// Optional metrics sink.
     pub stats: Option<Arc<FacadeStats>>,
+    /// Where the actor runs: pinned to the program's device (default), a
+    /// chosen device, or replicated across the inventory.
+    pub placement: Placement,
+    /// Adaptive request batching for val-mode elementwise kernels: when
+    /// set, sub-capacity requests are coalesced into padded launches (one
+    /// batcher per replica). See [`BatchConfig`].
+    pub batching: Option<BatchConfig>,
 }
 
 impl KernelSpawn {
@@ -55,6 +76,8 @@ impl KernelSpawn {
             pre: None,
             post: None,
             stats: None,
+            placement: Placement::Pinned,
+            batching: None,
         }
     }
 
@@ -76,6 +99,18 @@ impl KernelSpawn {
 
     pub fn output(mut self, mode: Mode) -> Self {
         self.out_mode = mode;
+        self
+    }
+
+    /// Set the placement knob (`Placement::Pinned` is the default).
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    /// Enable adaptive request batching (val-mode elementwise kernels).
+    pub fn batched(mut self, cfg: BatchConfig) -> Self {
+        self.batching = Some(cfg);
         self
     }
 
@@ -101,9 +136,9 @@ impl KernelSpawn {
     }
 
     /// Validate the declaration against the kernel's manifest signature and
-    /// the device limits (the compile-time checks CAF's template machinery
-    /// performs in the paper).
-    pub fn validate(&self) -> Result<()> {
+    /// the limits of the device the facade will actually run on (the
+    /// compile-time checks CAF's template machinery performs in the paper).
+    pub fn validate_on(&self, device: &Arc<Device>) -> Result<()> {
         let meta = self.program.kernel(&self.kernel)?;
         if !self.in_modes.is_empty() && self.in_modes.len() != meta.inputs.len() {
             bail!(
@@ -114,20 +149,64 @@ impl KernelSpawn {
             );
         }
         if !self.range.global.is_empty() {
-            let max_wg = self.program.device().info.max_work_items_per_cu as usize;
+            let max_wg = device.info.max_work_items_per_cu as usize;
             self.range
                 .validate(max_wg.max(1024))
                 .map_err(|e| anyhow::anyhow!("nd_range: {e}"))?;
         }
+        if self.batching.is_some() {
+            // the batcher concatenates requests elementwise and scatters
+            // output slices back, which is only meaningful for val-mode
+            // kernels whose operands all share one shape
+            if self.out_mode != Mode::Val || self.in_modes.iter().any(|m| *m == Mode::Ref) {
+                bail!(
+                    "kernel {}: batching requires val-mode inputs and output",
+                    self.kernel
+                );
+            }
+            let cap = meta.inputs.first().map(|s| s.elems()).unwrap_or(0);
+            if cap == 0 {
+                bail!("kernel {}: batching needs at least one input", self.kernel);
+            }
+            if meta.inputs.iter().any(|s| s.elems() != cap) || meta.output.elems() != cap {
+                bail!(
+                    "kernel {}: batching requires uniform elementwise shapes \
+                     (all inputs and the output must have the same element count)",
+                    self.kernel
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Validate against the program's own device (the pre-placement check;
+    /// kept for callers that never re-place the facade).
+    pub fn validate(&self) -> Result<()> {
+        let device = self.program.device().clone();
+        self.validate_on(&device)
     }
 }
 
-/// Spawn the facade actor (used by `Manager::spawn_cl`).
+/// Spawn the facade actor on the device its program was built for (used by
+/// `Manager::spawn_cl` for `Placement::Pinned`).
 pub(crate) fn spawn_facade(sys: &ActorSystem, cfg: KernelSpawn) -> Result<ActorRef> {
-    cfg.validate()?;
-    let meta = cfg.program.kernel(&cfg.kernel)?.clone();
     let device = cfg.program.device().clone();
+    spawn_on_device(sys, cfg, device)
+}
+
+/// Spawn a facade bound to an explicit device — the replica entry point of
+/// the placement tier. Dispatches to the batching facade when request
+/// coalescing was configured.
+pub(crate) fn spawn_on_device(
+    sys: &ActorSystem,
+    cfg: KernelSpawn,
+    device: Arc<Device>,
+) -> Result<ActorRef> {
+    cfg.validate_on(&device)?;
+    if cfg.batching.is_some() {
+        return spawn_batching_facade(sys, cfg, device);
+    }
+    let meta = cfg.program.kernel(&cfg.kernel)?.clone();
     Ok(sys.spawn(move |_ctx| {
         let cfg = cfg.clone();
         let meta = meta.clone();

@@ -2,9 +2,16 @@
 //! discovery and offering the `spawn` interface for OpenCL actors (paper
 //! Fig 2's `manager`; loaded via `cfg.load<opencl::manager>()` in
 //! Listing 2 — here `Manager::load(&system, specs)`).
+//!
+//! Discovery is fallible end to end: [`Manager::try_platform`] surfaces a
+//! broken artifacts directory or device bring-up failure as an `Err`
+//! through every spawn/device accessor instead of aborting the process,
+//! and an empty device inventory is a clean error from
+//! [`Manager::default_device`] rather than an index panic.
 
 use super::device::Device;
-use super::facade::{spawn_facade, KernelSpawn};
+use super::facade::{spawn_facade, spawn_on_device, KernelSpawn};
+use super::placement::{self, Placement};
 use super::platform::{DeviceSpec, Platform};
 use super::program::Program;
 use crate::actor::{ActorRef, ActorSystem};
@@ -14,7 +21,6 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const MODULE_KEY: &str = "opencl";
-const BUILD_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// The module object stored in the actor system.
 pub struct Manager {
@@ -42,12 +48,23 @@ impl Manager {
     }
 
     /// The platform, discovered lazily on first access (paper: "performs
-    /// platform discovery lazily on first access").
-    pub fn platform(&self) -> &Platform {
-        self.platform.get_or_init(|| {
+    /// platform discovery lazily on first access"). Discovery failure — a
+    /// missing manifest, an unreadable artifacts dir, a device that will
+    /// not start — is an `Err` here and through every caller (`spawn_cl`,
+    /// `device`, `default_device`), not a process abort.
+    pub fn try_platform(&self) -> Result<&Platform> {
+        self.platform.get_or_try_init(|| {
             Platform::discover(&self.system.config().artifacts_dir, &self.specs)
-                .expect("platform discovery failed — run `make artifacts` first")
         })
+    }
+
+    /// Panicking convenience accessor (benches/examples that cannot run
+    /// without a platform anyway); fallible callers use [`try_platform`].
+    ///
+    /// [`try_platform`]: Manager::try_platform
+    pub fn platform(&self) -> &Platform {
+        self.try_platform()
+            .expect("platform discovery failed — run `make artifacts` first")
     }
 
     /// Whether discovery already ran (spawn-cost accounting, Fig 4).
@@ -56,7 +73,7 @@ impl Manager {
     }
 
     pub fn device(&self, id: usize) -> Result<Arc<Device>> {
-        self.platform()
+        self.try_platform()?
             .device(id)
             .cloned()
             .ok_or_else(|| anyhow!("no device {id}"))
@@ -64,9 +81,19 @@ impl Manager {
 
     /// Default device: the first discovered one (paper §3.6: "the OpenCL
     /// device binding for a kernel defaults to the first discovered
-    /// device").
-    pub fn default_device(&self) -> Arc<Device> {
-        self.platform().devices[0].clone()
+    /// device"). An empty inventory is a clean `Err`.
+    pub fn default_device(&self) -> Result<Arc<Device>> {
+        self.try_platform()?
+            .devices
+            .first()
+            .cloned()
+            .ok_or_else(|| anyhow!("device inventory is empty"))
+    }
+
+    /// Program-build deadline (OpenCL's `clBuildProgram` bound), taken from
+    /// [`SystemConfig::build_timeout`](crate::actor::SystemConfig).
+    pub fn build_timeout(&self) -> Duration {
+        self.system.config().build_timeout
     }
 
     /// Build a program explicitly on a chosen device (the manual flow of
@@ -74,22 +101,49 @@ impl Manager {
     pub fn create_program(&self, device: &Arc<Device>, kernels: &[&str]) -> Result<Arc<Program>> {
         Program::build(
             device.clone(),
-            &self.platform().manifest,
+            &self.try_platform()?.manifest,
             kernels,
-            BUILD_TIMEOUT,
+            self.build_timeout(),
         )
     }
 
     /// One-kernel convenience program on the default device (the simple
     /// `mngr.spawn(source, name, ...)` path of Listing 2).
     pub fn create_kernel_program(&self, kernel: &str) -> Result<Arc<Program>> {
-        let dev = self.default_device();
+        let dev = self.default_device()?;
         self.create_program(&dev, &[kernel])
     }
 
-    /// Spawn an OpenCL actor.
+    /// Spawn an OpenCL actor. The spawn's [`Placement`] knob decides where
+    /// it runs: pinned to its program's device (the paper's behavior and
+    /// the default), on an explicitly chosen device, or replicated across
+    /// the whole inventory behind a routing dispatcher
+    /// (`Placement::Replicated` — see [`super::placement`]).
     pub fn spawn_cl(&self, cfg: KernelSpawn) -> Result<ActorRef> {
-        spawn_facade(&self.system, cfg)
+        match cfg.placement {
+            Placement::Pinned => spawn_facade(self.system_ref(), cfg),
+            Placement::Device(id) => {
+                let dev = self.device(id)?;
+                let cfg = self.rebuild_for(cfg, &dev)?;
+                spawn_on_device(self.system_ref(), cfg, dev)
+            }
+            Placement::Replicated(policy) => placement::spawn_replicated(self, cfg, policy),
+        }
+    }
+
+    /// Recompile the spawn's program on `dev` when it was built for a
+    /// different device (a `Command` must be built against the device the
+    /// facade actually runs on).
+    fn rebuild_for(&self, mut cfg: KernelSpawn, dev: &Arc<Device>) -> Result<KernelSpawn> {
+        if cfg.program.device().id != dev.id {
+            cfg.program = Program::build(
+                dev.clone(),
+                &self.try_platform()?.manifest,
+                &[cfg.kernel.as_str()],
+                self.build_timeout(),
+            )?;
+        }
+        Ok(cfg)
     }
 
     /// Spawn an OpenCL actor for a single kernel on the default device with
@@ -120,9 +174,9 @@ impl Manager {
         }
     }
 
-    /// One line per device: executions, uploads, and buffer-pool
-    /// efficiency (hits/misses/returned/evicted). The measurement
-    /// methodology is documented in PERF.md.
+    /// One line per device: executions, queue depth, uploads, and
+    /// buffer-pool efficiency (hits/misses/returned/evicted). The
+    /// measurement methodology is documented in PERF.md.
     pub fn perf_report(&self) -> String {
         let Some(p) = self.platform.get() else {
             return "no devices discovered yet".to_string();
@@ -133,12 +187,14 @@ impl Manager {
             let (execs, exec_t) = stats.snapshot();
             let (hits, misses, returned, evicted) = stats.pool_snapshot();
             out.push_str(&format!(
-                "device {} ({}): execs={} exec_time={:.3}s uploads={} \
-                 pool[hits={} misses={} returned={} evicted={}]\n",
+                "device {} ({}): execs={} exec_time={:.3}s launched={} inflight={} \
+                 uploads={} pool[hits={} misses={} returned={} evicted={}]\n",
                 d.id,
                 d.name,
                 execs,
                 exec_t.as_secs_f64(),
+                stats.launched(),
+                stats.inflight(),
                 stats
                     .uploads
                     .load(std::sync::atomic::Ordering::Relaxed),

@@ -14,23 +14,31 @@
 //! * [`facade`]    — the OpenCL actor itself (`actor_facade`).
 //! * [`command`]   — one in-flight kernel execution (paper Listing 4).
 //! * [`stage`]     — composed kernel pipelines over resident memory (§3.5).
+//! * [`placement`] — multi-device replication: one replica facade per
+//!   device behind a policy-routing dispatcher (`Placement::Replicated`).
+//! * [`batch`]     — adaptive request batching: sub-capacity val-mode
+//!   requests coalesced into padded fused launches.
 
 pub mod arg;
+pub mod batch;
 pub mod command;
 pub mod device;
 pub mod facade;
 pub mod manager;
 pub mod mem_ref;
 pub mod nd_range;
+pub mod placement;
 pub mod platform;
 pub mod program;
 pub mod stage;
 
 pub use arg::{ArgValue, Mode};
+pub use batch::BatchConfig;
 pub use device::{Device, DeviceInfo, DeviceKind};
 pub use facade::{FacadeStats, KernelSpawn};
 pub use manager::{Manager, OpenClSystemExt};
 pub use mem_ref::MemRef;
 pub use nd_range::{DimVec, NdRange};
+pub use placement::{DevicePool, Placement, PlacementPolicy, Replica};
 pub use platform::{DeviceSpec, Platform};
 pub use program::Program;

@@ -1,0 +1,456 @@
+//! Placement-aware multi-device execution: one logical OpenCL actor served
+//! by a replica facade per device, behind a single dispatcher `ActorRef`.
+//!
+//! The paper pins every facade to a single device chosen at spawn time
+//! (§3.6: "the OpenCL device binding for a kernel defaults to the first
+//! discovered device") and observes in §5 that "for sub-second duties, the
+//! efficiency of offloading was found to largely differ between devices".
+//! This module lifts the spawn-frozen binding into a routed decision per
+//! message: [`Manager::spawn_cl`] with [`Placement::Replicated`] spawns one
+//! facade per discovered device (each with the kernel compiled on *its*
+//! device) and returns a dispatcher that fans traffic out by a pluggable
+//! [`PlacementPolicy`], while callers keep the paper's one-actor illusion —
+//! the dispatcher is an ordinary [`ActorRef`], publishable over
+//! [`net::Node`](crate::net::Node) like any other actor, so remote clients
+//! get placement for free.
+//!
+//! Routing invariants:
+//!
+//! * **Affinity** — a message whose [`ArgValue::Ref`]s are resident on
+//!   device D always routes to D's replica. What used to be a per-command
+//!   "mem_ref on device X used on device Y" error (the silent-wrong-device
+//!   hazard of a spawn-frozen binding) becomes a routed guarantee.
+//! * **Least-inflight** — reads the per-device queue-depth gauge
+//!   ([`ExecStats::inflight`](crate::runtime::ExecStats::inflight)) and
+//!   picks the shallowest queue, which is what spreads a burst of
+//!   sub-second requests across the whole inventory.
+//! * **Round-robin** — stateless rotation for uniform devices.
+//!
+//! [`Manager::spawn_cl`]: super::manager::Manager::spawn_cl
+
+use super::arg::ArgValue;
+use super::device::Device;
+use super::facade::{spawn_on_device, KernelSpawn};
+use super::manager::Manager;
+use super::program::Program;
+use crate::actor::{ActorRef, Behavior, ErrorMsg, Reply};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Where a spawned OpenCL actor runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// One facade on the device the spawn's program was built for — the
+    /// paper's behavior, and the default.
+    #[default]
+    Pinned,
+    /// One facade on the given device id (the program is rebuilt there if
+    /// it was compiled for another device).
+    Device(usize),
+    /// One replica facade per discovered device behind a dispatcher that
+    /// routes each message by `PlacementPolicy` (Ref-carrying messages
+    /// always follow their data — see the module docs).
+    Replicated(PlacementPolicy),
+}
+
+/// How the dispatcher picks a replica for messages that carry no
+/// device-resident arguments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Rotate through the replicas.
+    RoundRobin,
+    /// Pick the device with the shallowest submit-but-not-retired queue
+    /// (the `ExecStats::inflight` gauge).
+    LeastInflight,
+}
+
+/// One replica of a replicated OpenCL actor: the device it is bound to and
+/// the facade serving it.
+pub struct Replica {
+    pub device: Arc<Device>,
+    pub facade: ActorRef,
+    /// Messages the dispatcher has routed here (feeds the queue-depth
+    /// estimate; see [`DevicePool::depth`]).
+    routed: AtomicU64,
+}
+
+impl Replica {
+    pub fn new(device: Arc<Device>, facade: ActorRef) -> Replica {
+        Replica {
+            device,
+            facade,
+            routed: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The replica set + policy a dispatcher routes over.
+pub struct DevicePool {
+    replicas: Vec<Replica>,
+    policy: PlacementPolicy,
+    next_rr: AtomicUsize,
+    /// Whether [`depth`](DevicePool::depth) may use the routed-minus-
+    /// retired estimate. Off for batched replicas: the dispatcher counts
+    /// `routed` once per *request* but a batcher launches once per
+    /// *flush*, so the two totals never reconcile and the residue would
+    /// permanently skew least-inflight routing.
+    routed_estimate: bool,
+}
+
+impl DevicePool {
+    /// Build a pool; panics on an empty replica set (spawn paths guard
+    /// against an empty inventory before constructing one).
+    pub fn new(replicas: Vec<Replica>, policy: PlacementPolicy) -> DevicePool {
+        assert!(!replicas.is_empty(), "DevicePool needs at least one replica");
+        DevicePool {
+            replicas,
+            policy,
+            next_rr: AtomicUsize::new(0),
+            routed_estimate: true,
+        }
+    }
+
+    /// Toggle the routed-depth estimate (see the field docs; the spawn
+    /// path turns it off for batched replicas).
+    pub fn set_routed_estimate(&mut self, on: bool) {
+        self.routed_estimate = on;
+    }
+
+    pub fn replicas(&self) -> &[Replica] {
+        &self.replicas
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Route one message: `ref_devices` are the (deduplicated) device ids
+    /// of its `ArgValue::Ref` arguments. Returns the replica index.
+    pub fn route(&self, ref_devices: &[usize]) -> Result<usize, String> {
+        match ref_devices {
+            [] => Ok(self.select()),
+            [d] => self
+                .replicas
+                .iter()
+                .position(|r| r.device.id == *d)
+                .ok_or_else(|| {
+                    format!(
+                        "mem_ref resident on device {d}, which has no replica \
+                         (references cannot cross devices)"
+                    )
+                }),
+            many => Err(format!(
+                "arguments are resident on multiple devices {many:?}; \
+                 split the request or copy through a Val-mode hop"
+            )),
+        }
+    }
+
+    /// Record that a message was routed to replica `i` (called by the
+    /// dispatcher for messages whose arguments extracted successfully —
+    /// those are the ones that will reach the device).
+    pub fn note_routed(&self, i: usize) {
+        self.replicas[i].routed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queue-depth estimate of replica `i`: the larger of the device's own
+    /// submitted-but-not-retired gauge and this dispatcher's
+    /// routed-but-not-retired count. The latter is what makes a burst
+    /// spread *at routing time* — the device gauge only rises once the
+    /// replica facade has processed the message and submitted the launch,
+    /// which an actor-mailbox hop later than the routing decision. A
+    /// request that fails replica-side validation after extraction never
+    /// launches and leaves the routed count slightly inflated; the
+    /// estimate is a placement heuristic, so that skew only biases policy
+    /// choice, never correctness.
+    pub fn depth(&self, i: usize) -> u64 {
+        let r = &self.replicas[i];
+        let stats = r.device.queue.stats();
+        if !self.routed_estimate {
+            // batched replicas: one flush serves many routed requests, so
+            // only the device's own gauge is meaningful
+            return stats.inflight();
+        }
+        let retired = stats.launched().saturating_sub(stats.inflight());
+        stats
+            .inflight()
+            .max(r.routed.load(Ordering::Relaxed).saturating_sub(retired))
+    }
+
+    /// Policy pick for affinity-free traffic.
+    fn select(&self) -> usize {
+        match self.policy {
+            PlacementPolicy::RoundRobin => {
+                self.next_rr.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
+            }
+            PlacementPolicy::LeastInflight => {
+                let mut best = 0usize;
+                let mut best_depth = u64::MAX;
+                for i in 0..self.replicas.len() {
+                    let depth = self.depth(i);
+                    if depth < best_depth {
+                        best = i;
+                        best_depth = depth;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Device ids (deduplicated, in first-seen order) of the `Ref` arguments a
+/// message carries. The default extraction goes through the clone-free
+/// [`ref_device_scan`](super::arg) — the dispatcher must not deep-copy
+/// every payload just to learn there are no refs. Custom `preprocess`
+/// functions are called (their extraction defines affinity), which means
+/// a `pre` with side effects runs once here and once in the replica; the
+/// hook is documented as a pure conversion (Listing 3). `None` when the
+/// message does not extract at all (it is still delegated — the replica
+/// produces the proper error — but not counted as routed work).
+fn ref_devices(
+    cfg_pre: &Option<super::facade::PreFn>,
+    msg: &crate::actor::Message,
+) -> Option<Vec<usize>> {
+    let Some(pre) = cfg_pre else {
+        return super::arg::ref_device_scan(msg);
+    };
+    let args = pre(msg)?;
+    let mut devs = Vec::new();
+    for a in &args {
+        if let ArgValue::Ref(r) = a {
+            let d = r.device_id();
+            if !devs.contains(&d) {
+                devs.push(d);
+            }
+        }
+    }
+    Some(devs)
+}
+
+/// Spawn one replica facade per discovered device plus the dispatcher that
+/// routes between them (used by `Manager::spawn_cl` for
+/// [`Placement::Replicated`]).
+pub(crate) fn spawn_replicated(
+    mgr: &Manager,
+    cfg: KernelSpawn,
+    policy: PlacementPolicy,
+) -> Result<ActorRef> {
+    let platform = mgr.try_platform()?;
+    if platform.devices.is_empty() {
+        bail!(
+            "cannot replicate kernel {:?}: device inventory is empty",
+            cfg.kernel
+        );
+    }
+    let sys = mgr.system_handle();
+    let timeout = mgr.build_timeout();
+    let mut replicas = Vec::with_capacity(platform.devices.len());
+    for dev in &platform.devices {
+        // reuse the caller's program on its own device; compile the kernel
+        // for every other device (the manual multi-device flow of §3.2,
+        // automated)
+        let mut rcfg = cfg.clone();
+        if rcfg.program.device().id != dev.id {
+            rcfg.program = Program::build(
+                dev.clone(),
+                &platform.manifest,
+                &[cfg.kernel.as_str()],
+                timeout,
+            )?;
+        }
+        let facade = spawn_on_device(&sys, rcfg, dev.clone())?;
+        replicas.push(Replica::new(dev.clone(), facade));
+    }
+    let mut pool = DevicePool::new(replicas, policy);
+    if cfg.batching.is_some() {
+        pool.set_routed_estimate(false);
+    }
+    let pool = Arc::new(pool);
+    Ok(spawn_dispatcher(&sys, pool, cfg.pre.clone(), cfg.kernel))
+}
+
+/// The dispatcher: an ordinary event-based actor that routes each message
+/// to a replica via [`DevicePool::route`] and delegates it, so the replica
+/// answers the original requester directly (no extra hop on the reply
+/// path).
+fn spawn_dispatcher(
+    sys: &crate::actor::ActorSystem,
+    pool: Arc<DevicePool>,
+    pre: Option<super::facade::PreFn>,
+    kernel: String,
+) -> ActorRef {
+    sys.spawn(move |_ctx| {
+        let pool = pool.clone();
+        let pre = pre.clone();
+        let kernel = kernel.clone();
+        Behavior::new().on_any(move |ctx, msg| {
+            let devs = ref_devices(&pre, msg);
+            let extracted = devs.is_some();
+            match pool.route(devs.as_deref().unwrap_or(&[])) {
+                Ok(i) => {
+                    if extracted {
+                        // count real work toward the routed-depth estimate
+                        pool.note_routed(i);
+                    }
+                    ctx.delegate(&pool.replicas()[i].facade, msg.clone());
+                }
+                Err(e) => {
+                    let promise = ctx.make_promise();
+                    promise.deliver_err(ErrorMsg::new(format!("kernel {kernel}: {e}")));
+                }
+            }
+            Reply::Promised
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorSystem, SystemConfig};
+    use crate::opencl::device::{DeviceInfo, DeviceKind};
+    use crate::runtime::client::PadModel;
+    use std::time::Duration;
+
+    fn test_device(id: usize, pad: Option<PadModel>) -> Arc<Device> {
+        Device::start(
+            id,
+            &format!("pool-test-{id}"),
+            DeviceKind::Cpu,
+            DeviceInfo {
+                compute_units: 1,
+                max_work_items_per_cu: 1,
+            },
+            pad,
+        )
+        .unwrap()
+    }
+
+    fn dummy_ref(sys: &ActorSystem) -> ActorRef {
+        sys.spawn(|_| Behavior::new().on_any(|_c, _m| Reply::Promised))
+    }
+
+    #[test]
+    fn round_robin_rotates_and_affinity_overrides() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let pool = DevicePool::new(
+            vec![
+                Replica::new(d0.clone(), dummy_ref(&sys)),
+                Replica::new(d1.clone(), dummy_ref(&sys)),
+            ],
+            PlacementPolicy::RoundRobin,
+        );
+        assert_eq!(pool.route(&[]).unwrap(), 0);
+        assert_eq!(pool.route(&[]).unwrap(), 1);
+        assert_eq!(pool.route(&[]).unwrap(), 0);
+        // affinity beats rotation
+        assert_eq!(pool.route(&[1]).unwrap(), 1);
+        assert_eq!(pool.route(&[0]).unwrap(), 0);
+        // unknown device and cross-device refs are routed errors
+        assert!(pool.route(&[7]).unwrap_err().contains("device 7"));
+        assert!(pool.route(&[0, 1]).unwrap_err().contains("multiple devices"));
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn least_inflight_picks_the_idle_device() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        // device 0 is slow so a submitted launch stays in flight
+        let slow = PadModel {
+            launch: Duration::from_millis(80),
+            bytes_per_sec: 0.0,
+            compute_scale: 1.0,
+            busy_wait: false,
+        };
+        let d0 = test_device(0, Some(slow));
+        let d1 = test_device(1, None);
+        let pool = DevicePool::new(
+            vec![
+                Replica::new(d0.clone(), dummy_ref(&sys)),
+                Replica::new(d1.clone(), dummy_ref(&sys)),
+            ],
+            PlacementPolicy::LeastInflight,
+        );
+        // both idle: ties resolve to the first replica
+        assert_eq!(pool.route(&[]).unwrap(), 0);
+        // occupy device 0 (the gauge rises at submission time)
+        d0.queue
+            .compile_emulated("busy", crate::runtime::HostOp::Identity);
+        let (bid, _ev) = d0.queue.upload(crate::runtime::HostData::U32(vec![1; 8]));
+        let (_out, done) = d0
+            .queue
+            .execute("busy", vec![bid], crate::runtime::Dtype::U32, vec![]);
+        assert!(d0.queue.stats().inflight() >= 1);
+        assert_eq!(pool.route(&[]).unwrap(), 1, "idle device must win");
+        done.wait(Duration::from_secs(30)).unwrap();
+        d0.queue.barrier(Duration::from_secs(30)).unwrap();
+        // drained: the gauge falls back to zero and ties go first again
+        assert_eq!(d0.queue.stats().inflight(), 0);
+        assert_eq!(pool.route(&[]).unwrap(), 0);
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn routed_depth_spreads_bursts_before_any_launch() {
+        // the dispatcher-side estimate: routed-but-not-yet-launched work
+        // biases routing away, so a burst spreads at routing time — the
+        // device gauge alone would rise only after each replica facade had
+        // processed its message
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let pool = DevicePool::new(
+            vec![
+                Replica::new(d0.clone(), dummy_ref(&sys)),
+                Replica::new(d1.clone(), dummy_ref(&sys)),
+            ],
+            PlacementPolicy::LeastInflight,
+        );
+        let mut picks = Vec::new();
+        for _ in 0..6 {
+            let i = pool.route(&[]).unwrap();
+            pool.note_routed(i);
+            picks.push(i);
+        }
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1], "burst must alternate");
+        assert_eq!(pool.depth(0), 3);
+        assert_eq!(pool.depth(1), 3);
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn batched_pools_ignore_the_routed_estimate() {
+        // a batcher launches once per flush, so per-request routed counts
+        // can never reconcile against `launched`; with the estimate off,
+        // depth falls back to the raw device gauge
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let mut pool = DevicePool::new(
+            vec![
+                Replica::new(d0.clone(), dummy_ref(&sys)),
+                Replica::new(d1.clone(), dummy_ref(&sys)),
+            ],
+            PlacementPolicy::LeastInflight,
+        );
+        pool.set_routed_estimate(false);
+        for _ in 0..5 {
+            pool.note_routed(0);
+        }
+        assert_eq!(pool.depth(0), 0, "routed residue must not count");
+        assert_eq!(pool.route(&[]).unwrap(), 0, "idle devices tie to first");
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+}

@@ -257,6 +257,19 @@ pub enum QueueCmd {
         deps: Vec<Event>,
         done: Event,
     },
+    /// Fused upload+execute: stage every input from host data and run
+    /// `exec` over the staged buffers in ONE queue command. Batched and
+    /// all-`Val` launches use this so a request traverses the command
+    /// channel once instead of once per argument plus once for the kernel;
+    /// the staged inputs die with the invocation (their storage returns to
+    /// the buffer pool on the queue thread).
+    FusedExec {
+        exec: String,
+        inputs: Vec<UploadSrc>,
+        out: u64,
+        out_dtype: Dtype,
+        done: Event,
+    },
     /// Read a buffer back; `and_then` runs on the queue thread.
     Download { id: u64, and_then: DownloadCb },
     /// Release a device buffer.
@@ -266,9 +279,17 @@ pub enum QueueCmd {
     Stop,
 }
 
-/// Execution statistics of one device queue (metrics for Figs 5/6).
+/// Execution statistics of one device queue (metrics for Figs 5/6 and the
+/// placement tier's queue-depth gauge).
 #[derive(Default)]
 pub struct ExecStats {
+    /// Kernel launches *submitted* to this queue (`Execute` + `FusedExec`),
+    /// counted at enqueue time — the per-device distribution metric the
+    /// placement tests assert on.
+    pub launched: AtomicU64,
+    /// Launches submitted but not yet retired: the queue-depth gauge that
+    /// feeds [`least-inflight placement`](crate::opencl::PlacementPolicy).
+    pub inflight: AtomicU64,
     pub execs: AtomicU64,
     pub exec_ns: AtomicU64,
     pub uploads: AtomicU64,
@@ -287,6 +308,16 @@ pub struct ExecStats {
 }
 
 impl ExecStats {
+    /// Current queue depth: launches submitted but not yet retired.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Total launches submitted to this queue.
+    pub fn launched(&self) -> u64 {
+        self.launched.load(Ordering::Relaxed)
+    }
+
     pub fn snapshot(&self) -> (u64, Duration) {
         (
             self.execs.load(Ordering::Relaxed),
@@ -457,10 +488,29 @@ impl DeviceQueue {
         self.next_buf.fetch_add(1, Ordering::Relaxed)
     }
 
-    fn push(&self, cmd: QueueCmd) {
-        if !self.cmds.push(cmd) {
+    fn push(&self, cmd: QueueCmd) -> bool {
+        let ok = self.cmds.push(cmd);
+        if !ok {
             log::warn!("device queue {} is closed; command dropped", self.name);
         }
+        ok
+    }
+
+    /// Account a kernel submission on the launch counter and queue-depth
+    /// gauge. Must run *before* the push: the queue thread decrements
+    /// `inflight` when the launch retires, so incrementing after the push
+    /// could race a fast retirement into an underflow.
+    fn pre_launch(&self) {
+        self.stats.launched.fetch_add(1, Ordering::Relaxed);
+        self.stats.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Undo the accounting for a submission the closed queue refused: the
+    /// command will never execute, so it must count neither as a launch
+    /// (placement's distribution metric) nor as queue depth.
+    fn launch_refused(&self) {
+        self.stats.launched.fetch_sub(1, Ordering::Relaxed);
+        self.stats.inflight.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Compile an artifact (idempotent per name).
@@ -517,14 +567,44 @@ impl DeviceQueue {
         let out = self.fresh_buffer_id();
         let done = Event::new();
         done.mark_enqueued();
-        self.push(QueueCmd::Execute {
+        self.pre_launch();
+        if !self.push(QueueCmd::Execute {
             exec: exec.into(),
             args,
             out,
             out_dtype,
             deps,
             done: done.clone(),
-        });
+        }) {
+            self.launch_refused();
+        }
+        (out, done)
+    }
+
+    /// Fused upload+execute: stage `inputs` and run the kernel over them in
+    /// a single queue command (one channel traversal for the whole launch —
+    /// the submission path of batched and all-`Val` requests). Returns
+    /// (output buffer id, completion event); the staged inputs are internal
+    /// to the invocation and recycled on the queue thread.
+    pub fn execute_fused(
+        &self,
+        exec: impl Into<String>,
+        inputs: Vec<UploadSrc>,
+        out_dtype: Dtype,
+    ) -> (u64, Event) {
+        let out = self.fresh_buffer_id();
+        let done = Event::new();
+        done.mark_enqueued();
+        self.pre_launch();
+        if !self.push(QueueCmd::FusedExec {
+            exec: exec.into(),
+            inputs,
+            out,
+            out_dtype,
+            done: done.clone(),
+        }) {
+            self.launch_refused();
+        }
         (out, done)
     }
 
@@ -624,6 +704,292 @@ fn upload_host_buffer<T: xla::ArrayElement>(
     client.buffer_from_host_buffer(data, dims, None)
 }
 
+/// How long the in-order queue blocks on one cross-queue dependency.
+const DEP_WAIT: Duration = Duration::from_secs(300);
+
+/// Take host data out of an upload source (unwraps shared `Arc`s when this
+/// is the last owner, clones otherwise).
+fn src_to_host(data: UploadSrc) -> HostData {
+    match data {
+        UploadSrc::Owned(d) => d,
+        UploadSrc::SharedU32(v) => {
+            HostData::U32(Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone()))
+        }
+        UploadSrc::SharedF32(v) => {
+            HostData::F32(Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone()))
+        }
+    }
+}
+
+/// Block the in-order queue on cross-queue dependencies.
+fn wait_deps(deps: &[Event]) -> Result<(), String> {
+    for d in deps {
+        d.wait(DEP_WAIT)
+            .map_err(|e| format!("dependency failed: {e}"))?;
+    }
+    Ok(())
+}
+
+/// The queue thread's owned state: PJRT client, compiled executables,
+/// resident buffers, and the buffer pool. Extracted from the former
+/// monolithic `queue_loop` match so the per-command operations (upload,
+/// execute, download, free) compose — `FusedExec` reuses them to run a
+/// whole launch off one command-channel traversal.
+struct QueueState {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    emus: HashMap<String, HostOp>,
+    buffers: HashMap<u64, Buffer>,
+    pool: BufferPool,
+    pad: Option<PadModel>,
+    stats: Arc<ExecStats>,
+}
+
+impl QueueState {
+    /// Stage a host slice into a device buffer, recycling pooled storage
+    /// when a same-class buffer is available (hit/miss accounted).
+    fn stage_slice<T: xla::ArrayElement>(
+        &mut self,
+        data: &[T],
+        dtype: Dtype,
+    ) -> Result<Buffer, String> {
+        let byte_len = data.len() * 4;
+        let recycled = self.pool.take(dtype, byte_len);
+        if recycled.is_some() {
+            self.stats.pool_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.pool_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        upload_host_buffer(&self.client, data, &[data.len()], recycled)
+            .map(|buf| Buffer {
+                buf,
+                dtype,
+                bytes: byte_len,
+                poolable: true,
+            })
+            .map_err(|e| e.to_string())
+    }
+
+    /// Stage owned host data (the emulated-execution output path: pool
+    /// recycling, but no transfer accounting — the data never crossed the
+    /// host boundary).
+    fn stage_host(&mut self, data: &HostData) -> Result<Buffer, String> {
+        match data {
+            HostData::U32(v) => self.stage_slice(&v[..], Dtype::U32),
+            HostData::F32(v) => self.stage_slice(&v[..], Dtype::F32),
+        }
+    }
+
+    fn stage_src(&mut self, data: &UploadSrc) -> Result<Buffer, String> {
+        match data {
+            UploadSrc::Owned(HostData::U32(v)) => self.stage_slice(&v[..], Dtype::U32),
+            UploadSrc::SharedU32(v) => self.stage_slice(&v[..], Dtype::U32),
+            UploadSrc::Owned(HostData::F32(v)) => self.stage_slice(&v[..], Dtype::F32),
+            UploadSrc::SharedF32(v) => self.stage_slice(&v[..], Dtype::F32),
+        }
+    }
+
+    /// Account + pad one host→device transfer. Every input of a fused
+    /// launch goes through here exactly like a standalone `Upload`, so the
+    /// simulated devices charge the same PCIe cost on both paths.
+    fn account_transfer(&self, bytes: usize) {
+        self.stats.uploads.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .upload_bytes
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        if let Some(p) = &self.pad {
+            p.pad_for(p.transfer_pad(bytes));
+        }
+    }
+
+    /// `Upload`: stage into the resident-buffer map under `id`.
+    fn upload(&mut self, id: u64, data: &UploadSrc) -> Result<(), String> {
+        self.account_transfer(data.bytes());
+        let buf = self.stage_src(data).map_err(|e| format!("upload: {e}"))?;
+        self.buffers.insert(id, buf);
+        Ok(())
+    }
+
+    /// Account a finished kernel run: exec counters + simulated compute pad.
+    fn account_exec(&self, real: Duration) {
+        self.stats.execs.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .exec_ns
+            .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
+        if let Some(p) = &self.pad {
+            p.pad_for(p.compute_pad(real));
+        }
+    }
+
+    /// Run a host-emulated kernel over host inputs; the output is staged
+    /// like an upload (pool-recycled) under `out`.
+    fn run_emulated(
+        &mut self,
+        op: HostOp,
+        exec: &str,
+        inputs: &[HostData],
+        out: u64,
+        out_dtype: Dtype,
+    ) -> Result<(), String> {
+        let t0 = Instant::now();
+        let host = op
+            .apply(inputs, out_dtype)
+            .map_err(|e| format!("emulated {exec}: {e}"))?;
+        self.account_exec(t0.elapsed());
+        let buf = self
+            .stage_host(&host)
+            .map_err(|e| format!("emulated {exec}: staging output: {e}"))?;
+        self.buffers.insert(out, buf);
+        Ok(())
+    }
+
+    /// File a real-backend execution result as the (non-poolable) output.
+    fn finish_hlo(
+        &mut self,
+        buf: xla::PjRtBuffer,
+        real: Duration,
+        out: u64,
+        out_dtype: Dtype,
+    ) -> Result<(), String> {
+        self.account_exec(real);
+        self.buffers.insert(
+            out,
+            Buffer {
+                buf,
+                dtype: out_dtype,
+                bytes: 0,
+                poolable: false, // backend-owned output
+            },
+        );
+        Ok(())
+    }
+
+    /// `Execute`: run a kernel over buffers already resident on the device.
+    fn execute_resident(
+        &mut self,
+        exec: &str,
+        args: &[u64],
+        out: u64,
+        out_dtype: Dtype,
+    ) -> Result<(), String> {
+        if let Some(op) = self.emus.get(exec).copied() {
+            let mut inputs = Vec::with_capacity(args.len());
+            for a in args {
+                let b = self
+                    .buffers
+                    .get(a)
+                    .ok_or_else(|| format!("buffer {a} not resident on device"))?;
+                inputs.push(
+                    download_buffer(b)
+                        .map_err(|e| format!("emulated {exec}: reading arg {a}: {e}"))?,
+                );
+            }
+            return self.run_emulated(op, exec, &inputs, out, out_dtype);
+        }
+        let t0 = Instant::now();
+        let mut res = {
+            let exe = self
+                .execs
+                .get(exec)
+                .ok_or_else(|| format!("executable {exec:?} not compiled on this device"))?;
+            let mut arg_bufs = Vec::with_capacity(args.len());
+            for a in args {
+                arg_bufs.push(
+                    &self
+                        .buffers
+                        .get(a)
+                        .ok_or_else(|| format!("buffer {a} not resident on device"))?
+                        .buf,
+                );
+            }
+            exe.execute_b::<&xla::PjRtBuffer>(&arg_bufs)
+                .map_err(|e| format!("execute {exec}: {e}"))?
+        };
+        self.finish_hlo(res.remove(0).remove(0), t0.elapsed(), out, out_dtype)
+    }
+
+    /// `FusedExec`: stage every input and run the kernel, all in one
+    /// command. Emulated kernels skip device staging entirely (the inputs
+    /// are already host data — only the simulated transfer cost is
+    /// charged); real executables stage through the pool and return the
+    /// staged storage to it when the launch retires, the same lifecycle as
+    /// the unfused `Upload`/`Execute`/`Free` triple.
+    fn execute_fused(
+        &mut self,
+        exec: &str,
+        inputs: Vec<UploadSrc>,
+        out: u64,
+        out_dtype: Dtype,
+    ) -> Result<(), String> {
+        if let Some(op) = self.emus.get(exec).copied() {
+            let mut host = Vec::with_capacity(inputs.len());
+            for d in inputs {
+                self.account_transfer(d.bytes());
+                host.push(src_to_host(d));
+            }
+            return self.run_emulated(op, exec, &host, out, out_dtype);
+        }
+        let mut staged = Vec::with_capacity(inputs.len());
+        for d in &inputs {
+            self.account_transfer(d.bytes());
+            let buf = self
+                .stage_src(d)
+                .map_err(|e| format!("fused {exec}: staging input: {e}"))?;
+            staged.push(buf);
+        }
+        let t0 = Instant::now();
+        let run = {
+            let exe = self
+                .execs
+                .get(exec)
+                .ok_or_else(|| format!("executable {exec:?} not compiled on this device"))?;
+            let arg_bufs: Vec<&xla::PjRtBuffer> = staged.iter().map(|b| &b.buf).collect();
+            exe.execute_b::<&xla::PjRtBuffer>(&arg_bufs)
+                .map_err(|e| format!("execute {exec}: {e}"))
+        };
+        let real = t0.elapsed();
+        // the invocation's staged inputs die here whether it succeeded or not
+        for b in staged {
+            self.recycle(b);
+        }
+        let mut res = run?;
+        self.finish_hlo(res.remove(0).remove(0), real, out, out_dtype)
+    }
+
+    /// Return a dead buffer's storage to the pool (`Free` semantics).
+    fn recycle(&mut self, b: Buffer) {
+        if b.poolable {
+            if self.pool.put(b.dtype, b.bytes, b.buf) {
+                self.stats.pool_returned.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.stats.pool_evicted.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn free(&mut self, id: u64) {
+        if let Some(b) = self.buffers.remove(&id) {
+            self.recycle(b);
+        }
+    }
+
+    fn download(&mut self, id: u64) -> Result<HostData, String> {
+        let b = self
+            .buffers
+            .get(&id)
+            .ok_or_else(|| format!("buffer {id} not resident on device"))?;
+        let d = download_buffer(b).map_err(|e| e.to_string())?;
+        self.stats.downloads.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .download_bytes
+            .fetch_add(d.bytes() as u64, Ordering::Relaxed);
+        if let Some(p) = &self.pad {
+            p.pad_for(p.transfer_pad(d.bytes()));
+        }
+        Ok(d)
+    }
+}
+
 fn queue_loop(
     cmds: Chan<QueueCmd>,
     stats: Arc<ExecStats>,
@@ -645,9 +1011,6 @@ fn queue_loop(
             return;
         }
     };
-    let mut execs: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
-    let mut emus: HashMap<String, HostOp> = HashMap::new();
-    let mut buffers: HashMap<u64, Buffer> = HashMap::new();
     // Without the stub's recycling hook the pool could never hand a buffer
     // back to an upload — retaining freed buffers would pin device memory
     // (up to max_bytes) and report pool hits that save nothing.
@@ -656,78 +1019,41 @@ fn queue_loop(
         enabled: false,
         ..pool_cfg
     };
-    let mut pool = BufferPool::new(pool_cfg);
+    let mut st = QueueState {
+        client,
+        execs: HashMap::new(),
+        emus: HashMap::new(),
+        buffers: HashMap::new(),
+        pool: BufferPool::new(pool_cfg),
+        pad,
+        stats,
+    };
 
     while let Some(cmd) = cmds.pop() {
         match cmd {
             QueueCmd::Compile { name, path, done } => {
-                if execs.contains_key(&name) {
+                if st.execs.contains_key(&name) {
                     done.complete();
                     continue;
                 }
-                stats.compiles.fetch_add(1, Ordering::Relaxed);
-                match compile_artifact(&client, &path) {
+                st.stats.compiles.fetch_add(1, Ordering::Relaxed);
+                match compile_artifact(&st.client, &path) {
                     Ok(exe) => {
-                        execs.insert(name, exe);
+                        st.execs.insert(name, exe);
                         done.complete();
                     }
                     Err(e) => done.fail(format!("compile {name}: {e}")),
                 }
             }
             QueueCmd::CompileEmu { name, op, done } => {
-                stats.compiles.fetch_add(1, Ordering::Relaxed);
-                emus.insert(name, op);
+                st.stats.compiles.fetch_add(1, Ordering::Relaxed);
+                st.emus.insert(name, op);
                 done.complete();
             }
-            QueueCmd::Upload { id, data, done } => {
-                stats.uploads.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .upload_bytes
-                    .fetch_add(data.bytes() as u64, Ordering::Relaxed);
-                if let Some(p) = &pad {
-                    p.pad_for(p.transfer_pad(data.bytes()));
-                }
-                let dtype = data.dtype();
-                let byte_len = data.bytes();
-                // recycle a freed same-class buffer instead of allocating;
-                // pool entries were inserted when their Free retired, so
-                // every prior command touching them has completed
-                let recycled = pool.take(dtype, byte_len);
-                if recycled.is_some() {
-                    stats.pool_hits.fetch_add(1, Ordering::Relaxed);
-                } else {
-                    stats.pool_misses.fetch_add(1, Ordering::Relaxed);
-                }
-                let res = match &data {
-                    UploadSrc::Owned(HostData::U32(v)) => {
-                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
-                    }
-                    UploadSrc::SharedU32(v) => {
-                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
-                    }
-                    UploadSrc::Owned(HostData::F32(v)) => {
-                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
-                    }
-                    UploadSrc::SharedF32(v) => {
-                        upload_host_buffer(&client, &v[..], &[v.len()], recycled)
-                    }
-                };
-                match res {
-                    Ok(buf) => {
-                        buffers.insert(
-                            id,
-                            Buffer {
-                                buf,
-                                dtype,
-                                bytes: byte_len,
-                                poolable: true,
-                            },
-                        );
-                        done.complete();
-                    }
-                    Err(e) => done.fail(format!("upload: {e}")),
-                }
-            }
+            QueueCmd::Upload { id, data, done } => match st.upload(id, &data) {
+                Ok(()) => done.complete(),
+                Err(e) => done.fail(e),
+            },
             QueueCmd::Execute {
                 exec,
                 args,
@@ -736,165 +1062,31 @@ fn queue_loop(
                 deps,
                 done,
             } => {
-                // cross-queue dependencies: block this in-order queue
-                let mut dep_err = None;
-                for d in &deps {
-                    if let Err(e) = d.wait(Duration::from_secs(300)) {
-                        dep_err = Some(e);
-                        break;
-                    }
-                }
-                if let Some(e) = dep_err {
-                    done.fail(format!("dependency failed: {e}"));
-                    continue;
-                }
-                if let Some(op) = emus.get(&exec) {
-                    let t0 = Instant::now();
-                    let mut inputs = Vec::with_capacity(args.len());
-                    let mut arg_err = None;
-                    for a in &args {
-                        match buffers.get(a) {
-                            Some(b) => match download_buffer(b) {
-                                Ok(d) => inputs.push(d),
-                                Err(e) => {
-                                    arg_err =
-                                        Some(format!("emulated {exec}: reading arg {a}: {e}"));
-                                    break;
-                                }
-                            },
-                            None => {
-                                arg_err = Some(format!("buffer {a} not resident on device"));
-                                break;
-                            }
-                        }
-                    }
-                    if let Some(e) = arg_err {
-                        done.fail(e);
-                        continue;
-                    }
-                    match op.apply(&inputs, out_dtype) {
-                        Ok(host) => {
-                            let real = t0.elapsed();
-                            stats.execs.fetch_add(1, Ordering::Relaxed);
-                            stats
-                                .exec_ns
-                                .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
-                            if let Some(p) = &pad {
-                                p.pad_for(p.compute_pad(real));
-                            }
-                            let byte_len = host.bytes();
-                            // stage the output like an upload: recycle a
-                            // freed same-class buffer from the pool
-                            let recycled = pool.take(out_dtype, byte_len);
-                            if recycled.is_some() {
-                                stats.pool_hits.fetch_add(1, Ordering::Relaxed);
-                            } else {
-                                stats.pool_misses.fetch_add(1, Ordering::Relaxed);
-                            }
-                            let res = match &host {
-                                HostData::U32(v) => {
-                                    upload_host_buffer(&client, &v[..], &[v.len()], recycled)
-                                }
-                                HostData::F32(v) => {
-                                    upload_host_buffer(&client, &v[..], &[v.len()], recycled)
-                                }
-                            };
-                            match res {
-                                Ok(buf) => {
-                                    buffers.insert(
-                                        out,
-                                        Buffer {
-                                            buf,
-                                            dtype: out_dtype,
-                                            bytes: byte_len,
-                                            // upload-origin storage: safe to
-                                            // recycle, unlike backend outputs
-                                            poolable: true,
-                                        },
-                                    );
-                                    done.complete();
-                                }
-                                Err(e) => {
-                                    done.fail(format!("emulated {exec}: staging output: {e}"))
-                                }
-                            }
-                        }
-                        Err(e) => done.fail(format!("emulated {exec}: {e}")),
-                    }
-                    continue;
-                }
-                let Some(exe) = execs.get(&exec) else {
-                    done.fail(format!("executable {exec:?} not compiled on this device"));
-                    continue;
-                };
-                let mut arg_bufs = Vec::with_capacity(args.len());
-                let mut missing = None;
-                for a in &args {
-                    match buffers.get(a) {
-                        Some(b) => arg_bufs.push(&b.buf),
-                        None => {
-                            missing = Some(*a);
-                            break;
-                        }
-                    }
-                }
-                if let Some(a) = missing {
-                    done.fail(format!("buffer {a} not resident on device"));
-                    continue;
-                }
-                let t0 = Instant::now();
-                match exe.execute_b::<&xla::PjRtBuffer>(&arg_bufs) {
-                    Ok(mut res) => {
-                        let real = t0.elapsed();
-                        stats.execs.fetch_add(1, Ordering::Relaxed);
-                        stats
-                            .exec_ns
-                            .fetch_add(real.as_nanos() as u64, Ordering::Relaxed);
-                        if let Some(p) = &pad {
-                            p.pad_for(p.compute_pad(real));
-                        }
-                        let buf = res.remove(0).remove(0);
-                        buffers.insert(
-                            out,
-                            Buffer {
-                                buf,
-                                dtype: out_dtype,
-                                bytes: 0,
-                                poolable: false, // backend-owned output
-                            },
-                        );
-                        done.complete();
-                    }
-                    Err(e) => done.fail(format!("execute {exec}: {e}")),
+                // cross-queue dependencies block this in-order queue first
+                let res = wait_deps(&deps)
+                    .and_then(|()| st.execute_resident(&exec, &args, out, out_dtype));
+                st.stats.inflight.fetch_sub(1, Ordering::Relaxed);
+                match res {
+                    Ok(()) => done.complete(),
+                    Err(e) => done.fail(e),
                 }
             }
-            QueueCmd::Download { id, and_then } => {
-                let res = match buffers.get(&id) {
-                    Some(b) => download_buffer(b).map_err(|e| e.to_string()),
-                    None => Err(format!("buffer {id} not resident on device")),
-                };
-                if let Ok(d) = &res {
-                    stats.downloads.fetch_add(1, Ordering::Relaxed);
-                    stats
-                        .download_bytes
-                        .fetch_add(d.bytes() as u64, Ordering::Relaxed);
-                    if let Some(p) = &pad {
-                        p.pad_for(p.transfer_pad(d.bytes()));
-                    }
-                }
-                and_then(res);
-            }
-            QueueCmd::Free { id } => {
-                if let Some(b) = buffers.remove(&id) {
-                    if b.poolable {
-                        if pool.put(b.dtype, b.bytes, b.buf) {
-                            stats.pool_returned.fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            stats.pool_evicted.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
+            QueueCmd::FusedExec {
+                exec,
+                inputs,
+                out,
+                out_dtype,
+                done,
+            } => {
+                let res = st.execute_fused(&exec, inputs, out, out_dtype);
+                st.stats.inflight.fetch_sub(1, Ordering::Relaxed);
+                match res {
+                    Ok(()) => done.complete(),
+                    Err(e) => done.fail(e),
                 }
             }
+            QueueCmd::Download { id, and_then } => and_then(st.download(id)),
+            QueueCmd::Free { id } => st.free(id),
             QueueCmd::Barrier { done } => done.complete(),
             QueueCmd::Stop => break,
         }

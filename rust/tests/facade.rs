@@ -96,7 +96,7 @@ fn memref_feeds_next_stage() {
 fn composed_pipeline_stays_on_device() {
     // sort -> chunklit as a composed actor; only MemRefs travel inside
     let Some((sys, mgr)) = system_with_opencl() else { return };
-    let dev = mgr.default_device();
+    let dev = mgr.default_device().unwrap();
     let program = mgr
         .create_program(&dev, &["wah_sort_4096", "wah_chunklit_4096"])
         .unwrap();
@@ -211,7 +211,7 @@ fn facade_is_monitorable_like_any_actor() {
 #[test]
 fn default_device_selection_and_kinds() {
     let Some((sys, mgr)) = system_with_opencl() else { return };
-    let dev = mgr.default_device();
+    let dev = mgr.default_device().unwrap();
     assert_eq!(dev.id, 0);
     assert_eq!(dev.kind, DeviceKind::Cpu);
     assert!(mgr.platform().device_of_kind(DeviceKind::Gpu).is_none());

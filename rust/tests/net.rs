@@ -178,6 +178,57 @@ fn remote_opencl_facade_computes_vec_argvalue() {
 }
 
 #[test]
+fn replicated_facade_serves_remote_clients_with_placement() {
+    // the dispatcher of a Placement::Replicated spawn is an ordinary
+    // ActorRef: publish it by name and remote clients get multi-device
+    // placement for free — requests from the wire spread across devices
+    use caf_ocl::opencl::{DeviceSpec, KernelSpawn, Placement, PlacementPolicy};
+
+    let server_sys =
+        ActorSystem::new(config(4).with_artifacts_dir(stub_artifacts("replicated")));
+    let mgr = Manager::load_with(
+        &server_sys,
+        vec![DeviceSpec::host(), DeviceSpec::host()],
+    );
+    let program = mgr.create_kernel_program("copy_u32_1024").unwrap();
+    let dispatcher = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "copy_u32_1024")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(PlacementPolicy::RoundRobin)),
+        )
+        .unwrap();
+    server_sys.registry().put("replicated-worker", dispatcher);
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client
+        .remote_actor(&addr.to_string(), "replicated-worker")
+        .unwrap();
+
+    let me = client_sys.scoped();
+    for i in 0..4u32 {
+        let data: Vec<u32> = (0..1024).map(|x| x + i).collect();
+        let args = vec![ArgValue::from(data.clone())];
+        let out: Vec<u32> = me.request(&remote, args).receive(net_t()).unwrap();
+        assert_eq!(out, data);
+    }
+    // round-robin spread the remote burst across both server devices
+    let l0 = mgr.device(0).unwrap().queue.stats().launched();
+    let l1 = mgr.device(1).unwrap().queue.stats().launched();
+    assert_eq!((l0, l1), (2, 2), "remote requests must be placed across devices");
+
+    server.stop();
+    client.stop();
+    mgr.stop_devices();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
 fn ref_payload_fails_on_sender_with_device_local() {
     // design option (a): device references never cross the wire — neither
     // as a bare MemRef nor inside a Vec<ArgValue>

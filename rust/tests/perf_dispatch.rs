@@ -1,0 +1,70 @@
+//! Tier-1 perf probe: runs reduced versions of the two dispatch scenarios
+//! (1-vs-N-device placement, batched vs unbatched sub-capacity requests)
+//! and records the comparison in `BENCH_dispatch.json` (repo root), so the
+//! file refreshes on every verified build. The full-size measurement is
+//! `cargo bench --bench dispatch`; methodology in PERF.md.
+//!
+//! Like `perf_msgring`, the gate only sanity-checks the numbers: both
+//! scenarios race other test binaries for cores inside a parallel `cargo
+//! test`, so ratio asserts are opt-in (`DISPATCH_ASSERT_SPEEDUP=1` on a
+//! quiet machine).
+
+use caf_ocl::bench::{
+    dispatch_batching_probe, dispatch_placement_probe, write_dispatch_json,
+    write_dispatch_manifest, DispatchProbeConfig, DispatchResults,
+};
+use std::time::Duration;
+
+#[test]
+fn dispatch_records_placement_and_batching_throughput() {
+    let cfg = DispatchProbeConfig {
+        devices: 2,
+        launch: Duration::from_millis(2),
+        requests: 12,
+        batch_requests: 16,
+        request_elems: 128,
+        capacity: 1024,
+        artifacts_dir: write_dispatch_manifest("tier1", 1024),
+    };
+    let (one_device, n_device) = dispatch_placement_probe(&cfg);
+    let (unbatched, batched) = dispatch_batching_probe(&cfg);
+    for v in [one_device, n_device, unbatched, batched] {
+        assert!(v.is_finite() && v > 0.0, "degenerate throughput {v}");
+    }
+    let results = DispatchResults {
+        devices: cfg.devices,
+        requests: cfg.requests,
+        one_device_reqs_per_sec: one_device,
+        n_device_reqs_per_sec: n_device,
+        batch_requests: cfg.batch_requests,
+        request_elems: cfg.request_elems,
+        capacity: cfg.capacity,
+        unbatched_reqs_per_sec: unbatched,
+        batched_reqs_per_sec: batched,
+    };
+    let path = write_dispatch_json(&results, "cargo test --test perf_dispatch")
+        .expect("write BENCH_dispatch.json");
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"placement\""));
+    assert!(written.contains("\"batching\""));
+    println!(
+        "dispatch: placement {one_device:.1} -> {n_device:.1} req/s ({:.2}x), \
+         batching {unbatched:.1} -> {batched:.1} req/s ({:.2}x) -> {}",
+        n_device / one_device.max(1e-9),
+        batched / unbatched.max(1e-9),
+        path.display()
+    );
+    // Opt-in comparison bounds (see perf_msgring for why they are not in
+    // the default gate): with a 2 ms launch pad the padded scenarios are
+    // pad-dominated, so even a noisy machine should clear loose bounds.
+    if std::env::var_os("DISPATCH_ASSERT_SPEEDUP").is_some() {
+        assert!(
+            n_device > one_device,
+            "replication slower than one device: {n_device:.1} vs {one_device:.1} req/s"
+        );
+        assert!(
+            batched > unbatched,
+            "batching slower than per-request launches: {batched:.1} vs {unbatched:.1} req/s"
+        );
+    }
+}

@@ -5,12 +5,18 @@ pub mod sync {
     #[derive(Debug, Default)]
     pub struct OnceCell<T> {
         inner: std::sync::OnceLock<T>,
+        /// Serializes fallible initializers (`get_or_try_init`): `OnceLock`
+        /// has no stable fallible entry point, so without this two racing
+        /// callers could both run the initializer and one side's value
+        /// (with whatever resources it acquired) would be dropped.
+        init_lock: std::sync::Mutex<()>,
     }
 
     impl<T> OnceCell<T> {
         pub const fn new() -> OnceCell<T> {
             OnceCell {
                 inner: std::sync::OnceLock::new(),
+                init_lock: std::sync::Mutex::new(()),
             }
         }
 
@@ -24,6 +30,27 @@ pub mod sync {
 
         pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
             self.inner.get_or_init(f)
+        }
+
+        /// Fallible initialization (real `once_cell` API): the initializer
+        /// runs at most once at a time; a failure leaves the cell empty so
+        /// a later call can retry.
+        pub fn get_or_try_init<F, E>(&self, f: F) -> Result<&T, E>
+        where
+            F: FnOnce() -> Result<T, E>,
+        {
+            if let Some(v) = self.inner.get() {
+                return Ok(v);
+            }
+            let _g = self
+                .init_lock
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            if let Some(v) = self.inner.get() {
+                return Ok(v);
+            }
+            let v = f()?;
+            Ok(self.inner.get_or_init(|| v))
         }
     }
 }
@@ -40,5 +67,15 @@ mod tests {
         assert_eq!(*c.get_or_init(|| 8), 7);
         assert_eq!(c.get(), Some(&7));
         assert!(c.set(9).is_err());
+    }
+
+    #[test]
+    fn try_init_failure_leaves_cell_retryable() {
+        let c: OnceCell<u32> = OnceCell::new();
+        let r: Result<&u32, &'static str> = c.get_or_try_init(|| Err("nope"));
+        assert_eq!(r, Err("nope"));
+        assert!(c.get().is_none(), "failed init must leave the cell empty");
+        assert_eq!(c.get_or_try_init(|| Ok::<u32, &'static str>(3)), Ok(&3));
+        assert_eq!(c.get_or_try_init(|| Err("late")), Ok(&3));
     }
 }
