@@ -1,6 +1,6 @@
 //! Dispatch & batching: the placement-tier probe (PERF.md).
 //!
-//! Two comparisons over host-emulated kernels on simulated sub-second
+//! Three comparisons over host-emulated kernels on simulated sub-second
 //! devices (per-command launch padding, no artifacts or XLA backend
 //! needed, so this runs everywhere — including the `--no-default-features`
 //! CI config):
@@ -11,6 +11,10 @@
 //! 2. **Batching** — sub-capacity requests launched one-per-message
 //!    (caller pads to capacity, the status quo) vs the adaptive batcher
 //!    coalescing them into padded fused launches.
+//! 3. **Cost-aware steering** (Fig 7b) — the same burst under
+//!    `PlacementPolicy::CostAware` vs `RoundRobin` on a fast/Phi-like
+//!    device pair: small requests must route around the 20x dispatch pad,
+//!    large (transfer-dominated) ones may spill onto it.
 //!
 //! Writes `BENCH_dispatch.json` at the repository root. Smoke mode for CI:
 //! `DISPATCH_BENCH_SMOKE=1` runs one tiny iteration of each scenario so
@@ -18,8 +22,9 @@
 //! tier-1 twin is `cargo test --test perf_dispatch`.
 
 use caf_ocl::bench::{
-    dispatch_batching_probe, dispatch_placement_probe, write_dispatch_json,
-    write_dispatch_manifest, DispatchProbeConfig, DispatchResults,
+    dispatch_batching_probe, dispatch_costaware_probe, dispatch_placement_probe,
+    write_costaware_manifest, write_dispatch_json, write_dispatch_manifest,
+    CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
 };
 use std::time::Duration;
 
@@ -59,6 +64,34 @@ fn main() {
         batched / unbatched.max(1e-9)
     );
 
+    // cost-aware steering (Fig 7b): CostAware must keep the small burst
+    // off the Phi-like device entirely, while RoundRobin pays its pad on
+    // every second request; large requests are transfer-dominated, where
+    // spilling onto the slow device beats queueing on the fast one
+    let ca_cfg = CostAwareProbeConfig {
+        // the small burst stays below the ~(slow pad / fast service) depth
+        // where spilling to the slow device becomes genuinely cheaper, so
+        // "CostAware avoids the Phi-like device" is a property, not a race
+        small_elems: 64,
+        large_elems: 1 << 20,
+        small_requests: if smoke { 6 } else { 8 },
+        large_requests: if smoke { 4 } else { 16 },
+        artifacts_dir: write_costaware_manifest("bench", 64, 1 << 20),
+    };
+    let (ca_small, ca_large) = dispatch_costaware_probe(&ca_cfg);
+    for (tag, s) in [("small", &ca_small), ("large", &ca_large)] {
+        println!(
+            "costaware {tag:>5}: CostAware fast/slow {}/{} @ {:>8.1} req/s  |  \
+             RoundRobin fast/slow {}/{} @ {:>8.1} req/s",
+            s.costaware_fast_launches,
+            s.costaware_slow_launches,
+            s.costaware_reqs_per_sec,
+            s.round_robin_fast_launches,
+            s.round_robin_slow_launches,
+            s.round_robin_reqs_per_sec
+        );
+    }
+
     let results = DispatchResults {
         devices: cfg.devices,
         requests: cfg.requests,
@@ -69,6 +102,8 @@ fn main() {
         capacity: cfg.capacity,
         unbatched_reqs_per_sec: unbatched,
         batched_reqs_per_sec: batched,
+        cost_aware_small: ca_small,
+        cost_aware_large: ca_large,
     };
     match write_dispatch_json(&results, "cargo bench --bench dispatch") {
         Ok(p) => println!("-> {}", p.display()),

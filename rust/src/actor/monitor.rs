@@ -26,7 +26,10 @@ impl ExitReason {
 }
 
 /// Delivered to monitors when the watched actor terminates (CAF
-/// `down_msg`). Travels on the system-priority lane.
+/// `down_msg`). Travels on the system-priority lane — which is what lets
+/// a supervisor (e.g. the placement tier's replica dispatcher) observe a
+/// death ahead of the ordinary traffic it would otherwise keep routing at
+/// the corpse.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Down {
     pub source: ActorId,
@@ -39,6 +42,19 @@ pub struct Down {
 pub struct Exit {
     pub source: ActorId,
     pub reason: ExitReason,
+}
+
+impl Exit {
+    /// A synthetic fault (CAF's `send_exit` with an error reason): sent to
+    /// an actor that does not trap exits, it terminates the actor as if it
+    /// had failed, firing `Down` at its monitors. The fault-injection
+    /// tests kill replica facades with this.
+    pub fn fault(reason: impl Into<String>) -> Exit {
+        Exit {
+            source: 0,
+            reason: ExitReason::Error(reason.into()),
+        }
+    }
 }
 
 /// Error response delivered when a request cannot be served: target dead,
@@ -72,5 +88,13 @@ mod tests {
         assert!(ExitReason::Shutdown.is_normal());
         assert!(!ExitReason::Error("x".into()).is_normal());
         assert!(!ExitReason::Panic("x".into()).is_normal());
+    }
+
+    #[test]
+    fn fault_is_a_non_normal_exit() {
+        let x = Exit::fault("boom");
+        assert!(!x.reason.is_normal(), "a fault must propagate/terminate");
+        assert_eq!(x.reason, ExitReason::Error("boom".into()));
+        assert_eq!(x.source, 0);
     }
 }

@@ -425,20 +425,23 @@ pub struct DispatchProbeConfig {
     pub artifacts_dir: String,
 }
 
+/// Write a stub (host-emulated) manifest into a per-process temp dir and
+/// return the artifacts path — shared by every probe that fabricates its
+/// kernels instead of needing `make artifacts`.
+fn write_stub_manifest(dir_tag: &str, manifest: &str) -> String {
+    let dir = std::env::temp_dir().join(format!("caf-ocl-{dir_tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create stub artifacts dir");
+    std::fs::write(dir.join("manifest.txt"), manifest).expect("write stub manifest");
+    dir.to_string_lossy().to_string()
+}
+
 /// Write the probe's stub manifest (host-emulated identity kernel) into a
 /// per-process temp dir; returns the artifacts path.
 pub fn write_dispatch_manifest(tag: &str, capacity: usize) -> String {
-    let dir = std::env::temp_dir().join(format!(
-        "caf-ocl-dispatch-{}-{tag}",
-        std::process::id()
-    ));
-    std::fs::create_dir_all(&dir).expect("create dispatch artifacts dir");
-    std::fs::write(
-        dir.join("manifest.txt"),
-        format!("copy_u32|emu|u32:{capacity}|u32:{capacity}|emu=identity n={capacity}\n"),
+    write_stub_manifest(
+        &format!("dispatch-{tag}"),
+        &format!("copy_u32|emu|u32:{capacity}|u32:{capacity}|emu=identity n={capacity}\n"),
     )
-    .expect("write dispatch manifest");
-    dir.to_string_lossy().to_string()
 }
 
 fn dispatch_system(
@@ -472,14 +475,15 @@ fn dispatch_system(
     (sys, mgr)
 }
 
-fn dispatch_spawn(
+fn dispatch_spawn_kernel(
     mgr: &crate::opencl::Manager,
+    kernel: &str,
     placement: crate::opencl::Placement,
     batching: Option<crate::opencl::BatchConfig>,
 ) -> crate::actor::ActorRef {
     use crate::opencl::{KernelSpawn, Mode};
-    let program = mgr.create_kernel_program("copy_u32").expect("stub program");
-    let mut cfg = KernelSpawn::new(program, "copy_u32")
+    let program = mgr.create_kernel_program(kernel).expect("stub program");
+    let mut cfg = KernelSpawn::new(program, kernel)
         .inputs(Mode::Val, 1)
         .output(Mode::Val)
         .placement(placement);
@@ -487,6 +491,14 @@ fn dispatch_spawn(
         cfg = cfg.batched(b);
     }
     mgr.spawn_cl(cfg).expect("dispatch probe spawn")
+}
+
+fn dispatch_spawn(
+    mgr: &crate::opencl::Manager,
+    placement: crate::opencl::Placement,
+    batching: Option<crate::opencl::BatchConfig>,
+) -> crate::actor::ActorRef {
+    dispatch_spawn_kernel(mgr, "copy_u32", placement, batching)
 }
 
 /// Fire every payload as a concurrent request and await all replies;
@@ -527,7 +539,7 @@ pub fn dispatch_placement_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
     let (sys, mgr) = dispatch_system(cfg, cfg.devices);
     let replicated = dispatch_spawn(
         &mgr,
-        Placement::Replicated(PlacementPolicy::LeastInflight),
+        Placement::replicated(PlacementPolicy::LeastInflight),
         None,
     );
     let n_device = dispatch_drive(&sys, &replicated, full);
@@ -573,6 +585,110 @@ pub fn dispatch_batching_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
     (unbatched, batched)
 }
 
+// ---------------------------------------------------------------------------
+// Cost-aware steering (PERF.md): the Fig 7b probe. Two simulated devices
+// that differ ONLY in per-command dispatch cost (`sim::devices::
+// steering_pair`, a ~20x launch gap at equal bandwidth/compute) serve the
+// same burst under CostAware and RoundRobin. For small requests the paper
+// found offloading to the Phi counterproductive — CostAware must route
+// around it entirely, while RoundRobin pays the pad on every second
+// request. For large requests the transfer term dominates both devices, so
+// queueing everything on the fast device eventually costs more than
+// dispatching to the slow one and CostAware spills over.
+// ---------------------------------------------------------------------------
+
+/// Config of the cost-aware steering probe.
+#[derive(Clone, Debug)]
+pub struct CostAwareProbeConfig {
+    /// Elements per small request (sub-second, dispatch-dominated).
+    pub small_elems: usize,
+    /// Elements per large request (transfer-dominated).
+    pub large_elems: usize,
+    /// Requests in the small burst.
+    pub small_requests: usize,
+    /// Requests in the large burst.
+    pub large_requests: usize,
+    /// Artifacts dir holding the probe's two-kernel stub manifest.
+    pub artifacts_dir: String,
+}
+
+/// One (request size) side of the steering probe: per-device launch
+/// distribution and throughput under each policy.
+#[derive(Clone, Copy, Debug)]
+pub struct CostAwareSide {
+    pub requests: usize,
+    pub request_elems: usize,
+    pub costaware_fast_launches: u64,
+    pub costaware_slow_launches: u64,
+    pub costaware_reqs_per_sec: f64,
+    pub round_robin_fast_launches: u64,
+    pub round_robin_slow_launches: u64,
+    pub round_robin_reqs_per_sec: f64,
+}
+
+/// Write the steering probe's stub manifest (one identity kernel per
+/// request size) into a per-process temp dir; returns the artifacts path.
+pub fn write_costaware_manifest(tag: &str, small_elems: usize, large_elems: usize) -> String {
+    write_stub_manifest(
+        &format!("costaware-{tag}"),
+        &format!(
+            "copy_small_u32|emu|u32:{small_elems}|u32:{small_elems}|emu=identity n={small_elems}\n\
+             copy_large_u32|emu|u32:{large_elems}|u32:{large_elems}|emu=identity n={large_elems}\n"
+        ),
+    )
+}
+
+/// Run one burst of `requests` × `elems`-element requests under `policy`
+/// on the steering pair; returns (fast launches, slow launches, req/s).
+fn costaware_run(
+    artifacts_dir: &str,
+    kernel: &str,
+    elems: usize,
+    requests: usize,
+    policy: crate::opencl::PlacementPolicy,
+) -> (u64, u64, f64) {
+    use crate::opencl::{Manager, Placement};
+    let sys = crate::actor::ActorSystem::new(
+        crate::actor::SystemConfig::default()
+            .with_threads(4)
+            .with_artifacts_dir(artifacts_dir.to_string()),
+    );
+    let (fast, slow) = crate::sim::devices::steering_pair();
+    let mgr = Manager::load_with(&sys, vec![fast, slow]);
+    let worker = dispatch_spawn_kernel(&mgr, kernel, Placement::replicated(policy), None);
+    let payloads: Vec<Vec<u32>> = (0..requests).map(|i| vec![i as u32; elems]).collect();
+    let rps = dispatch_drive(&sys, &worker, payloads);
+    let fast_launches = mgr.device(0).expect("fast device").queue.stats().launched();
+    let slow_launches = mgr.device(1).expect("slow device").queue.stats().launched();
+    mgr.stop_devices();
+    sys.shutdown();
+    (fast_launches, slow_launches, rps)
+}
+
+/// The full steering probe: (small side, large side).
+pub fn dispatch_costaware_probe(cfg: &CostAwareProbeConfig) -> (CostAwareSide, CostAwareSide) {
+    use crate::opencl::PlacementPolicy;
+    let side = |kernel: &str, elems: usize, requests: usize| {
+        let (ca_f, ca_s, ca_r) =
+            costaware_run(&cfg.artifacts_dir, kernel, elems, requests, PlacementPolicy::CostAware);
+        let (rr_f, rr_s, rr_r) =
+            costaware_run(&cfg.artifacts_dir, kernel, elems, requests, PlacementPolicy::RoundRobin);
+        CostAwareSide {
+            requests,
+            request_elems: elems,
+            costaware_fast_launches: ca_f,
+            costaware_slow_launches: ca_s,
+            costaware_reqs_per_sec: ca_r,
+            round_robin_fast_launches: rr_f,
+            round_robin_slow_launches: rr_s,
+            round_robin_reqs_per_sec: rr_r,
+        }
+    };
+    let small = side("copy_small_u32", cfg.small_elems, cfg.small_requests);
+    let large = side("copy_large_u32", cfg.large_elems, cfg.large_requests);
+    (small, large)
+}
+
 /// Results of one `cargo bench --bench dispatch` run.
 #[derive(Clone, Copy, Debug)]
 pub struct DispatchResults {
@@ -594,6 +710,10 @@ pub struct DispatchResults {
     pub unbatched_reqs_per_sec: f64,
     /// Adaptive batcher coalescing the same requests.
     pub batched_reqs_per_sec: f64,
+    /// Cost-aware steering, small (dispatch-dominated) requests.
+    pub cost_aware_small: CostAwareSide,
+    /// Cost-aware steering, large (transfer-dominated) requests.
+    pub cost_aware_large: CostAwareSide,
 }
 
 /// Write `BENCH_dispatch.json` (repo root when run from `rust/`, else the
@@ -611,6 +731,23 @@ pub fn write_dispatch_json(
     };
     let placement_speedup = r.n_device_reqs_per_sec / r.one_device_reqs_per_sec.max(1e-9);
     let batching_speedup = r.batched_reqs_per_sec / r.unbatched_reqs_per_sec.max(1e-9);
+    let side_json = |s: &CostAwareSide| {
+        format!(
+            "{{\"requests\": {}, \"request_elems\": {}, \
+             \"costaware\": {{\"fast_launches\": {}, \"slow_launches\": {}, \
+             \"reqs_per_sec\": {:.1}}}, \
+             \"round_robin\": {{\"fast_launches\": {}, \"slow_launches\": {}, \
+             \"reqs_per_sec\": {:.1}}}}}",
+            s.requests,
+            s.request_elems,
+            s.costaware_fast_launches,
+            s.costaware_slow_launches,
+            s.costaware_reqs_per_sec,
+            s.round_robin_fast_launches,
+            s.round_robin_slow_launches,
+            s.round_robin_reqs_per_sec
+        )
+    };
     let json = format!(
         "{{\n  \"bench\": \"dispatch\",\n  \"generated_by\": {generated_by:?},\n  \
          \"placement\": {{\"devices\": {}, \"requests\": {}, \
@@ -618,7 +755,9 @@ pub fn write_dispatch_json(
          \"speedup\": {:.3}}},\n  \
          \"batching\": {{\"requests\": {}, \"request_elems\": {}, \"capacity\": {}, \
          \"unbatched_reqs_per_sec\": {:.1}, \"batched_reqs_per_sec\": {:.1}, \
-         \"speedup\": {:.3}}}\n}}\n",
+         \"speedup\": {:.3}}},\n  \
+         \"cost_aware\": {{\"devices\": [\"steer-fast\", \"steer-phi\"],\n    \
+         \"small\": {},\n    \"large\": {}}}\n}}\n",
         r.devices,
         r.requests,
         r.one_device_reqs_per_sec,
@@ -629,7 +768,9 @@ pub fn write_dispatch_json(
         r.capacity,
         r.unbatched_reqs_per_sec,
         r.batched_reqs_per_sec,
-        batching_speedup
+        batching_speedup,
+        side_json(&r.cost_aware_small),
+        side_json(&r.cost_aware_large)
     );
     std::fs::write(&path, json)?;
     Ok(path)

@@ -151,48 +151,102 @@ pub fn extract_args(msg: &Message) -> Option<Vec<ArgValue>> {
     None
 }
 
-/// Cheap affinity scan for the placement dispatcher: the device ids of the
-/// `Ref` arguments [`extract_args`] would produce, WITHOUT cloning any
+/// Affinity + cost inputs of one message, computed WITHOUT cloning any
 /// payload data (`extract_args` deep-copies plain vectors, which would
 /// double the per-message copy cost on the routed hot path just to learn
-/// there are no refs). Must mirror `extract_args`' shape list: the
-/// plain-vector shapes can never carry refs, so a type check alone scans
-/// them to an empty list. Returns `None` for messages that do not extract
-/// at all.
-pub(crate) fn ref_device_scan(msg: &Message) -> Option<Vec<usize>> {
-    fn dedup_push(devs: &mut Vec<usize>, d: usize) {
-        if !devs.contains(&d) {
-            devs.push(d);
+/// there are no refs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct RouteScan {
+    /// Device ids (deduplicated, first-seen order) of the `Ref` arguments
+    /// [`extract_args`] would produce.
+    pub devices: Vec<usize>,
+    /// Total byte size of the value arguments — what a launch would have
+    /// to transfer to the device (the cost-aware policy's transfer input).
+    pub val_bytes: usize,
+}
+
+impl RouteScan {
+    /// Dedup-record one `Ref` argument's device — the single home of the
+    /// first-seen-order dedup.
+    pub(crate) fn note_ref(&mut self, d: usize) {
+        if !self.devices.contains(&d) {
+            self.devices.push(d);
         }
     }
-    if let Some(v) = msg.downcast_ref::<Vec<ArgValue>>() {
-        let mut devs = Vec::new();
-        for a in v {
-            if let ArgValue::Ref(r) = a {
-                dedup_push(&mut devs, r.device_id());
-            }
+
+    /// Fold one argument into the scan — the single place the Ref-device
+    /// dedup and the value-byte accounting live, shared by the default
+    /// shape scan below and the custom-`preprocess` path in `placement`
+    /// (the two must stay mirror images or affinity semantics diverge).
+    pub(crate) fn note_arg(&mut self, a: &ArgValue) {
+        match a {
+            ArgValue::Ref(r) => self.note_ref(r.device_id()),
+            val => self.val_bytes += val.len() * 4,
         }
-        return Some(devs);
+    }
+}
+
+/// Cheap routing scan for the placement dispatcher. Must mirror
+/// [`extract_args`]' shape list: the plain-vector shapes can never carry
+/// refs, so a type check plus a length read scans them. Returns `None`
+/// for messages that do not extract at all.
+pub(crate) fn route_scan(msg: &Message) -> Option<RouteScan> {
+    if let Some(v) = msg.downcast_ref::<Vec<ArgValue>>() {
+        let mut scan = RouteScan::default();
+        for a in v {
+            scan.note_arg(a);
+        }
+        return Some(scan);
     }
     if let Some(r) = msg.downcast_ref::<MemRef>() {
-        return Some(vec![r.device_id()]);
+        return Some(RouteScan {
+            devices: vec![r.device_id()],
+            val_bytes: 0,
+        });
     }
     if let Some((a,)) = msg.downcast_ref::<(MemRef,)>() {
-        return Some(vec![a.device_id()]);
+        return Some(RouteScan {
+            devices: vec![a.device_id()],
+            val_bytes: 0,
+        });
     }
     if let Some((a, b)) = msg.downcast_ref::<(MemRef, MemRef)>() {
-        let mut devs = vec![a.device_id()];
-        dedup_push(&mut devs, b.device_id());
-        return Some(devs);
+        let mut scan = RouteScan::default();
+        scan.note_ref(a.device_id());
+        scan.note_ref(b.device_id());
+        return Some(scan);
     }
-    // the remaining extractable shapes are plain host vectors — no refs
-    if msg.is::<Vec<u32>>()
-        || msg.is::<Vec<f32>>()
-        || msg.is::<(Vec<u32>, Vec<u32>)>()
-        || msg.is::<(Vec<f32>, Vec<f32>)>()
-        || msg.is::<(Vec<u32>, Vec<u32>, Vec<u32>)>()
-    {
-        return Some(Vec::new());
+    // the remaining extractable shapes are plain host vectors — no refs,
+    // and the byte size is a length read away
+    if let Some(v) = msg.downcast_ref::<Vec<u32>>() {
+        return Some(RouteScan {
+            devices: Vec::new(),
+            val_bytes: v.len() * 4,
+        });
+    }
+    if let Some(v) = msg.downcast_ref::<Vec<f32>>() {
+        return Some(RouteScan {
+            devices: Vec::new(),
+            val_bytes: v.len() * 4,
+        });
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(Vec<u32>, Vec<u32>)>() {
+        return Some(RouteScan {
+            devices: Vec::new(),
+            val_bytes: (a.len() + b.len()) * 4,
+        });
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(Vec<f32>, Vec<f32>)>() {
+        return Some(RouteScan {
+            devices: Vec::new(),
+            val_bytes: (a.len() + b.len()) * 4,
+        });
+    }
+    if let Some((a, b, c)) = msg.downcast_ref::<(Vec<u32>, Vec<u32>, Vec<u32>)>() {
+        return Some(RouteScan {
+            devices: Vec::new(),
+            val_bytes: (a.len() + b.len() + c.len()) * 4,
+        });
     }
     None
 }
@@ -226,19 +280,22 @@ mod tests {
     }
 
     #[test]
-    fn ref_scan_mirrors_extractable_shapes_without_cloning() {
-        // plain-vector shapes extract but can never carry refs
-        for m in [
-            Message::new(vec![1u32, 2]),
-            Message::new(vec![1f32]),
-            Message::new((vec![1u32], vec![2u32])),
-            Message::new((vec![1f32], vec![2f32])),
-            Message::new((vec![1u32], vec![2u32], vec![3u32])),
-            Message::new(vec![ArgValue::from(vec![1u32])]),
+    fn route_scan_mirrors_extractable_shapes_without_cloning() {
+        // plain-vector shapes extract but can never carry refs; the scan
+        // reports their payload bytes for the cost-aware policy
+        for (m, bytes) in [
+            (Message::new(vec![1u32, 2]), 8),
+            (Message::new(vec![1f32]), 4),
+            (Message::new((vec![1u32], vec![2u32])), 8),
+            (Message::new((vec![1f32], vec![2f32])), 8),
+            (Message::new((vec![1u32], vec![2u32], vec![3u32])), 12),
+            (Message::new(vec![ArgValue::from(vec![1u32])]), 4),
         ] {
-            assert_eq!(ref_device_scan(&m), Some(Vec::new()), "{}", m.type_name());
+            let scan = route_scan(&m).unwrap_or_else(|| panic!("{}", m.type_name()));
+            assert_eq!(scan.devices, Vec::<usize>::new(), "{}", m.type_name());
+            assert_eq!(scan.val_bytes, bytes, "{}", m.type_name());
         }
         // unextractable messages scan to None, like extract_args
-        assert_eq!(ref_device_scan(&Message::new("nope".to_string())), None);
+        assert_eq!(route_scan(&Message::new("nope".to_string())), None);
     }
 }

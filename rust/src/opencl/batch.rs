@@ -222,11 +222,14 @@ fn slice_arg(host: &HostData, off: usize, len: usize) -> ArgValue {
     }
 }
 
-/// Mirror of the unbatched facade's default Val response shape.
+/// Mirror of the unbatched facade's default Val response shape. A shared
+/// `Arc` must fall back to *cloning* the contents — `unwrap_or_default()`
+/// here would silently deliver an empty vector to the requester whenever
+/// another owner still holds the payload.
 fn default_msg(arg: ArgValue) -> Message {
     match arg {
-        ArgValue::U32(v) => Message::new(Arc::try_unwrap(v).unwrap_or_default()),
-        ArgValue::F32(v) => Message::new(Arc::try_unwrap(v).unwrap_or_default()),
+        ArgValue::U32(v) => Message::new(Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())),
+        ArgValue::F32(v) => Message::new(Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())),
         ArgValue::Ref(_) => unreachable!("batcher only produces val outputs"),
     }
 }
@@ -243,7 +246,16 @@ fn check_args(meta: &ArtifactMeta, capacity: usize, args: &[ArgValue]) -> Result
             args.len()
         ));
     }
-    let k = args[0].len();
+    // a zero-input signature passes the arity check with an empty list;
+    // indexing args[0] would panic the facade (spawn also rejects such
+    // manifests, but a direct caller must get a clean Err)
+    let Some(first) = args.first() else {
+        return Err(format!(
+            "kernel {}: batching requires at least one input",
+            meta.name
+        ));
+    };
+    let k = first.len();
     for (i, (a, spec)) in args.iter().zip(&meta.inputs).enumerate() {
         if a.is_ref() {
             return Err(format!(
@@ -395,5 +407,45 @@ mod tests {
         assert!(check_args(&meta, 8, &arity)
             .unwrap_err()
             .contains("expects 1 arguments"));
+    }
+
+    #[test]
+    fn check_args_zero_input_signature_is_a_clean_err_not_a_panic() {
+        // a zero-input manifest entry passes the arity check with an empty
+        // argument list; the old code then indexed args[0] and panicked
+        // the facade
+        let meta = ArtifactMeta {
+            name: "zin".to_string(),
+            file: "emu".to_string(),
+            inputs: vec![],
+            output: TensorSpec {
+                dtype: Dtype::U32,
+                dims: vec![8],
+            },
+            extras: HashMap::new(),
+        };
+        let err = check_args(&meta, 8, &[]).unwrap_err();
+        assert!(err.contains("at least one input"), "got: {err}");
+    }
+
+    #[test]
+    fn default_msg_clones_shared_arcs_instead_of_delivering_empty() {
+        // regression: a second Arc owner held across delivery made
+        // Arc::try_unwrap fail, and unwrap_or_default() then delivered an
+        // EMPTY result vector — silent data loss on the reply path
+        let payload = Arc::new(vec![7u32, 8, 9]);
+        let held = payload.clone(); // second owner across delivery
+        let msg = default_msg(ArgValue::U32(payload));
+        assert_eq!(
+            msg.downcast_ref::<Vec<u32>>(),
+            Some(&vec![7, 8, 9]),
+            "shared Arc must clone, never deliver empty"
+        );
+        assert_eq!(*held, vec![7, 8, 9]);
+
+        let payload = Arc::new(vec![1.5f32]);
+        let _held = payload.clone();
+        let msg = default_msg(ArgValue::F32(payload));
+        assert_eq!(msg.downcast_ref::<Vec<f32>>(), Some(&vec![1.5f32]));
     }
 }

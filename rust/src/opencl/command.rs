@@ -228,13 +228,16 @@ impl Command {
                             };
                             let msg = match &post {
                                 Some(p) => p(arg, &incoming),
+                                // shared Arcs must clone, never deliver the
+                                // Default (empty!) vector — same fix as the
+                                // batcher's default_msg
                                 None => match arg {
-                                    ArgValue::U32(v) => {
-                                        Message::new(Arc::try_unwrap(v).unwrap_or_default())
-                                    }
-                                    ArgValue::F32(v) => {
-                                        Message::new(Arc::try_unwrap(v).unwrap_or_default())
-                                    }
+                                    ArgValue::U32(v) => Message::new(
+                                        Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone()),
+                                    ),
+                                    ArgValue::F32(v) => Message::new(
+                                        Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone()),
+                                    ),
                                     ArgValue::Ref(_) => unreachable!(),
                                 },
                             };

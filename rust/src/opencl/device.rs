@@ -40,6 +40,11 @@ pub struct Device {
     pub kind: DeviceKind,
     pub info: DeviceInfo,
     pub queue: Arc<DeviceQueue>,
+    /// The simulated cost model shaping this device's queue, if any. The
+    /// cost-aware placement policy reads it to estimate dispatch+transfer
+    /// cost *before* routing (`None` = the real PJRT CPU device, which has
+    /// no modeled dispatch pad).
+    pub pad: Option<PadModel>,
 }
 
 impl Device {
@@ -57,6 +62,7 @@ impl Device {
             kind,
             info,
             queue,
+            pad,
         }))
     }
 }

@@ -117,24 +117,50 @@ impl Manager {
     /// Spawn an OpenCL actor. The spawn's [`Placement`] knob decides where
     /// it runs: pinned to its program's device (the paper's behavior and
     /// the default), on an explicitly chosen device, or replicated across
-    /// the whole inventory behind a routing dispatcher
-    /// (`Placement::Replicated` — see [`super::placement`]).
+    /// a [`ReplicaSet`](super::placement::ReplicaSet) behind a routing,
+    /// replica-supervising dispatcher (`Placement::Replicated` — see
+    /// [`super::placement`]).
     pub fn spawn_cl(&self, cfg: KernelSpawn) -> Result<ActorRef> {
-        match cfg.placement {
+        match cfg.placement.clone() {
             Placement::Pinned => spawn_facade(self.system_ref(), cfg),
             Placement::Device(id) => {
                 let dev = self.device(id)?;
                 let cfg = self.rebuild_for(cfg, &dev)?;
                 spawn_on_device(self.system_ref(), cfg, dev)
             }
-            Placement::Replicated(policy) => placement::spawn_replicated(self, cfg, policy),
+            Placement::Replicated(set) => {
+                Ok(placement::spawn_replicated(self, cfg, set)?.actor)
+            }
+        }
+    }
+
+    /// Replicated spawn that also returns the [`DevicePool`] behind the
+    /// dispatcher, for replica introspection — per-replica liveness,
+    /// respawn counts, queue-depth estimates ([`ReplicatedHandle`]). The
+    /// spawn must carry `Placement::Replicated`; [`spawn_cl`] is the same
+    /// spawn with the pool handle discarded.
+    ///
+    /// [`DevicePool`]: super::placement::DevicePool
+    /// [`ReplicatedHandle`]: super::placement::ReplicatedHandle
+    /// [`spawn_cl`]: Manager::spawn_cl
+    pub fn spawn_cl_replicated(
+        &self,
+        cfg: KernelSpawn,
+    ) -> Result<placement::ReplicatedHandle> {
+        match cfg.placement.clone() {
+            Placement::Replicated(set) => placement::spawn_replicated(self, cfg, set),
+            other => Err(anyhow!(
+                "spawn_cl_replicated needs Placement::Replicated, got {other:?}"
+            )),
         }
     }
 
     /// Recompile the spawn's program on `dev` when it was built for a
     /// different device (a `Command` must be built against the device the
-    /// facade actually runs on).
-    fn rebuild_for(&self, mut cfg: KernelSpawn, dev: &Arc<Device>) -> Result<KernelSpawn> {
+    /// facade actually runs on). Shared with the replicated spawn path, so
+    /// `Placement::Device` and `Placement::Replicated` cannot diverge on
+    /// the rebuild rule.
+    pub(crate) fn rebuild_for(&self, mut cfg: KernelSpawn, dev: &Arc<Device>) -> Result<KernelSpawn> {
         if cfg.program.device().id != dev.id {
             cfg.program = Program::build(
                 dev.clone(),

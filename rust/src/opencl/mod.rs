@@ -15,7 +15,9 @@
 //! * [`command`]   — one in-flight kernel execution (paper Listing 4).
 //! * [`stage`]     — composed kernel pipelines over resident memory (§3.5).
 //! * [`placement`] — multi-device replication: one replica facade per
-//!   device behind a policy-routing dispatcher (`Placement::Replicated`).
+//!   device behind a policy-routing, replica-supervising dispatcher
+//!   (`Placement::Replicated`; round-robin / least-inflight / cost-aware
+//!   policies, `Down`-driven failover and respawn, device subsets).
 //! * [`batch`]     — adaptive request batching: sub-capacity val-mode
 //!   requests coalesced into padded fused launches.
 
@@ -39,6 +41,9 @@ pub use facade::{FacadeStats, KernelSpawn};
 pub use manager::{Manager, OpenClSystemExt};
 pub use mem_ref::MemRef;
 pub use nd_range::{DimVec, NdRange};
-pub use placement::{DevicePool, Placement, PlacementPolicy, Replica};
+pub use placement::{
+    DevicePool, Placement, PlacementPolicy, Replica, ReplicaSet, ReplicatedHandle,
+    RespawnPolicy,
+};
 pub use platform::{DeviceSpec, Platform};
 pub use program::Program;

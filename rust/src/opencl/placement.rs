@@ -7,7 +7,7 @@
 //! efficiency of offloading was found to largely differ between devices".
 //! This module lifts the spawn-frozen binding into a routed decision per
 //! message: [`Manager::spawn_cl`] with [`Placement::Replicated`] spawns one
-//! facade per discovered device (each with the kernel compiled on *its*
+//! facade per replica device (each with the kernel compiled on *its*
 //! device) and returns a dispatcher that fans traffic out by a pluggable
 //! [`PlacementPolicy`], while callers keep the paper's one-actor illusion —
 //! the dispatcher is an ordinary [`ActorRef`], publishable over
@@ -16,30 +16,54 @@
 //!
 //! Routing invariants:
 //!
-//! * **Affinity** — a message whose [`ArgValue::Ref`]s are resident on
-//!   device D always routes to D's replica. What used to be a per-command
+//! * **Affinity** — a message whose [`ArgValue::Ref`](super::arg::ArgValue)s
+//!   are resident on device D always routes to D's replica. What used to be a per-command
 //!   "mem_ref on device X used on device Y" error (the silent-wrong-device
 //!   hazard of a spawn-frozen binding) becomes a routed guarantee.
 //! * **Least-inflight** — reads the per-device queue-depth gauge
 //!   ([`ExecStats::inflight`](crate::runtime::ExecStats::inflight)) and
 //!   picks the shallowest queue, which is what spreads a burst of
 //!   sub-second requests across the whole inventory.
+//! * **Cost-aware** — scores each live replica by estimated completion
+//!   time (simulated dispatch latency + transfer time for the message's
+//!   byte size + queue depth × mean service time from the per-device
+//!   [`ExecStats::ewma_service`](crate::runtime::ExecStats::ewma_service)
+//!   gauge) and picks the cheapest. This reproduces the Fig 7b lesson:
+//!   small requests are steered *around* a Phi-like device whose
+//!   per-command dispatch cost dwarfs the work.
 //! * **Round-robin** — stateless rotation for uniform devices.
+//!
+//! Fault tolerance (the actor model's canonical failure signal, §2.1 "if
+//! an actor dies unexpectedly, the runtime system sends a message to each
+//! actor monitoring it"): the dispatcher monitors every replica facade.
+//! On [`Down`] it marks the replica dead, stops selecting it, drains its
+//! routed-depth contribution (a dead replica's routed-but-never-launched
+//! messages must not skew least-inflight forever), answers affinity
+//! traffic whose `Ref`s are stranded on the dead device with a routed
+//! error, and — when the spawn's [`RespawnPolicy`] says so — respawns the
+//! facade by recompiling the program on that device. Requests already
+//! delegated to a dying facade are never lost silently: its closing
+//! mailbox bounces them with an `actor terminated` error, so every routed
+//! request gets a reply or an error, exactly once.
 //!
 //! [`Manager::spawn_cl`]: super::manager::Manager::spawn_cl
 
-use super::arg::ArgValue;
+use super::arg::RouteScan;
 use super::device::Device;
-use super::facade::{spawn_on_device, KernelSpawn};
+use super::facade::{spawn_on_device, KernelSpawn, PreFn};
 use super::manager::Manager;
 use super::program::Program;
-use crate::actor::{ActorRef, Behavior, ErrorMsg, Reply};
-use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use crate::actor::{
+    ActorRef, ActorSystem, Behavior, Down, ErrorMsg, Message, Reply, no_reply,
+};
+use crate::runtime::Manifest;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
 /// Where a spawned OpenCL actor runs.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum Placement {
     /// One facade on the device the spawn's program was built for — the
     /// paper's behavior, and the default.
@@ -48,40 +72,136 @@ pub enum Placement {
     /// One facade on the given device id (the program is rebuilt there if
     /// it was compiled for another device).
     Device(usize),
-    /// One replica facade per discovered device behind a dispatcher that
-    /// routes each message by `PlacementPolicy` (Ref-carrying messages
-    /// always follow their data — see the module docs).
-    Replicated(PlacementPolicy),
+    /// One replica facade per device of the [`ReplicaSet`] behind a
+    /// dispatcher that routes each message by its policy (Ref-carrying
+    /// messages always follow their data — see the module docs).
+    Replicated(ReplicaSet),
+}
+
+impl Placement {
+    /// Replicate across the whole inventory with `policy` and the default
+    /// [`RespawnPolicy`] (the common case).
+    pub fn replicated(policy: PlacementPolicy) -> Placement {
+        Placement::Replicated(ReplicaSet::new(policy))
+    }
+}
+
+/// Configuration of a [`Placement::Replicated`] spawn: routing policy,
+/// what to do when a replica dies, and (optionally) which devices to span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReplicaSet {
+    /// How affinity-free traffic picks a replica.
+    pub policy: PlacementPolicy,
+    /// What the dispatcher does when a replica facade terminates.
+    pub respawn: RespawnPolicy,
+    /// Device ids to replicate on; `None` spans the whole inventory.
+    /// Validated at spawn: every id must exist, no duplicates, non-empty.
+    pub devices: Option<Vec<usize>>,
+}
+
+impl ReplicaSet {
+    pub fn new(policy: PlacementPolicy) -> ReplicaSet {
+        ReplicaSet {
+            policy,
+            respawn: RespawnPolicy::default(),
+            devices: None,
+        }
+    }
+
+    /// Replicate only on the given device ids instead of the whole
+    /// inventory.
+    pub fn on_devices(mut self, ids: impl Into<Vec<usize>>) -> Self {
+        self.devices = Some(ids.into());
+        self
+    }
+
+    /// Set the respawn policy ([`RespawnPolicy::Never`] is the default).
+    pub fn respawn(mut self, r: RespawnPolicy) -> Self {
+        self.respawn = r;
+        self
+    }
+}
+
+impl From<PlacementPolicy> for ReplicaSet {
+    fn from(policy: PlacementPolicy) -> ReplicaSet {
+        ReplicaSet::new(policy)
+    }
 }
 
 /// How the dispatcher picks a replica for messages that carry no
 /// device-resident arguments.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacementPolicy {
-    /// Rotate through the replicas.
+    /// Rotate through the live replicas.
     RoundRobin,
     /// Pick the device with the shallowest submit-but-not-retired queue
     /// (the `ExecStats::inflight` gauge).
     LeastInflight,
+    /// Pick the replica with the lowest estimated completion time:
+    /// simulated dispatch + transfer cost for the message's payload bytes
+    /// ([`PadModel::transfer_time`](crate::runtime::client::PadModel))
+    /// plus queue depth × mean per-launch service time (the
+    /// `ExecStats::ewma_service` gauge). Steers small requests around
+    /// high-dispatch-cost devices — the Fig 7b lesson.
+    CostAware,
+}
+
+/// What the dispatcher does when a replica facade terminates (the actor
+/// `Down` signal).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RespawnPolicy {
+    /// Leave the replica dead; traffic reroutes to the survivors and
+    /// affinity traffic for the dead device gets routed errors.
+    #[default]
+    Never,
+    /// Recompile the program on the replica's device and respawn the
+    /// facade; routing resumes once the new facade is installed.
+    Always,
 }
 
 /// One replica of a replicated OpenCL actor: the device it is bound to and
-/// the facade serving it.
+/// the facade serving it (swapped on respawn), plus the dispatcher-side
+/// liveness and routed-depth bookkeeping.
 pub struct Replica {
     pub device: Arc<Device>,
-    pub facade: ActorRef,
+    /// Current facade incarnation; replaced by [`DevicePool::install`]
+    /// when a dead replica respawns.
+    facade: RwLock<ActorRef>,
     /// Messages the dispatcher has routed here (feeds the queue-depth
-    /// estimate; see [`DevicePool::depth`]).
+    /// estimate; see [`DevicePool::depth`]). Re-synced to the device's
+    /// retired count when the replica dies or respawns, so a dead
+    /// incarnation's never-launched messages cannot skew routing forever.
     routed: AtomicU64,
+    /// False between a `Down` and a successful respawn; dead replicas are
+    /// never selected and affinity traffic for them is a routed error.
+    alive: AtomicBool,
+    /// Successful respawns of this replica (diagnostics/tests).
+    respawns: AtomicU64,
 }
 
 impl Replica {
     pub fn new(device: Arc<Device>, facade: ActorRef) -> Replica {
         Replica {
             device,
-            facade,
+            facade: RwLock::new(facade),
             routed: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+            respawns: AtomicU64::new(0),
         }
+    }
+
+    /// The current facade incarnation.
+    pub fn facade(&self) -> ActorRef {
+        self.facade.read().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Successful respawns so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
     }
 }
 
@@ -99,16 +219,18 @@ pub struct DevicePool {
 }
 
 impl DevicePool {
-    /// Build a pool; panics on an empty replica set (spawn paths guard
-    /// against an empty inventory before constructing one).
-    pub fn new(replicas: Vec<Replica>, policy: PlacementPolicy) -> DevicePool {
-        assert!(!replicas.is_empty(), "DevicePool needs at least one replica");
-        DevicePool {
+    /// Build a pool; an empty replica set is an `Err` (the fallible-spawn
+    /// convention — spawn paths surface it instead of aborting).
+    pub fn new(replicas: Vec<Replica>, policy: PlacementPolicy) -> Result<DevicePool> {
+        if replicas.is_empty() {
+            bail!("DevicePool needs at least one replica");
+        }
+        Ok(DevicePool {
             replicas,
             policy,
             next_rr: AtomicUsize::new(0),
             routed_estimate: true,
-        }
+        })
     }
 
     /// Toggle the routed-depth estimate (see the field docs; the spawn
@@ -125,21 +247,74 @@ impl DevicePool {
         self.policy
     }
 
+    /// Replicas currently alive.
+    pub fn live_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_alive()).count()
+    }
+
+    /// Mark the replica whose *current* facade has `source` as dead and
+    /// drain its routed-depth contribution. Returns the replica index, or
+    /// `None` when no live replica matches (e.g. a stale `Down` for an
+    /// incarnation that was already replaced).
+    pub fn mark_dead(&self, source: crate::actor::ActorId) -> Option<usize> {
+        let i = self
+            .replicas
+            .iter()
+            .position(|r| r.is_alive() && r.facade().id() == source)?;
+        self.replicas[i].alive.store(false, Ordering::Release);
+        self.drain_routed(i);
+        Some(i)
+    }
+
+    /// Install a freshly respawned facade for replica `i` and bring it
+    /// back into rotation with a clean depth estimate. `alive` flips
+    /// before the respawn counter bumps, so an observer gating on
+    /// [`Replica::respawns`] never sees a respawned-but-dead replica.
+    pub fn install(&self, i: usize, facade: ActorRef) {
+        let r = &self.replicas[i];
+        *r.facade.write().unwrap_or_else(|p| p.into_inner()) = facade;
+        self.drain_routed(i);
+        r.alive.store(true, Ordering::Release);
+        r.respawns.fetch_add(1, Ordering::Release);
+    }
+
+    /// Re-sync a replica's routed counter to the device's retired count:
+    /// routed-but-never-launched messages of a dead incarnation bounced
+    /// from its closed mailbox and will never retire, so leaving them in
+    /// the counter would inflate [`depth`](DevicePool::depth) forever (the
+    /// ROADMAP "stale routed estimate" bug).
+    fn drain_routed(&self, i: usize) {
+        let r = &self.replicas[i];
+        let stats = r.device.queue.stats();
+        let retired = stats.launched().saturating_sub(stats.inflight());
+        r.routed.store(retired, Ordering::Relaxed);
+    }
+
     /// Route one message: `ref_devices` are the (deduplicated) device ids
-    /// of its `ArgValue::Ref` arguments. Returns the replica index.
-    pub fn route(&self, ref_devices: &[usize]) -> Result<usize, String> {
+    /// of its `ArgValue::Ref` arguments, `bytes` its value-payload size
+    /// (the cost-aware transfer estimate). Returns the replica index.
+    pub fn route(&self, ref_devices: &[usize], bytes: usize) -> Result<usize, String> {
         match ref_devices {
-            [] => Ok(self.select()),
-            [d] => self
-                .replicas
-                .iter()
-                .position(|r| r.device.id == *d)
-                .ok_or_else(|| {
-                    format!(
-                        "mem_ref resident on device {d}, which has no replica \
-                         (references cannot cross devices)"
-                    )
-                }),
+            [] => self.select(bytes),
+            [d] => {
+                let i = self
+                    .replicas
+                    .iter()
+                    .position(|r| r.device.id == *d)
+                    .ok_or_else(|| {
+                        format!(
+                            "mem_ref resident on device {d}, which has no replica \
+                             (references cannot cross devices)"
+                        )
+                    })?;
+                if !self.replicas[i].is_alive() {
+                    return Err(format!(
+                        "replica on device {d} is down; mem_refs resident there \
+                         cannot be served until it respawns"
+                    ));
+                }
+                Ok(i)
+            }
             many => Err(format!(
                 "arguments are resident on multiple devices {many:?}; \
                  split the request or copy through a Val-mode hop"
@@ -159,11 +334,12 @@ impl DevicePool {
     /// routed-but-not-retired count. The latter is what makes a burst
     /// spread *at routing time* — the device gauge only rises once the
     /// replica facade has processed the message and submitted the launch,
-    /// which an actor-mailbox hop later than the routing decision. A
+    /// which is an actor-mailbox hop later than the routing decision. A
     /// request that fails replica-side validation after extraction never
     /// launches and leaves the routed count slightly inflated; the
     /// estimate is a placement heuristic, so that skew only biases policy
-    /// choice, never correctness.
+    /// choice, never correctness — and a replica *death* drains the
+    /// counter outright (see [`mark_dead`](DevicePool::mark_dead)).
     pub fn depth(&self, i: usize) -> u64 {
         let r = &self.replicas[i];
         let stats = r.device.queue.stats();
@@ -178,67 +354,206 @@ impl DevicePool {
             .max(r.routed.load(Ordering::Relaxed).saturating_sub(retired))
     }
 
-    /// Policy pick for affinity-free traffic.
-    fn select(&self) -> usize {
+    /// Estimated completion time (seconds) of a `bytes`-sized request on
+    /// replica `i`: the device's fixed dispatch + transfer pad for the
+    /// payload, plus queue depth × per-launch service time. The service
+    /// estimate is the device's EWMA gauge, floored at the dispatch cost
+    /// (before the first launch retires the EWMA is zero, and a queued
+    /// launch can never cost less than its dispatch pad) and at a 1 µs
+    /// epsilon — without the epsilon, a pad-less device (`Device::pad ==
+    /// None`, the real-hardware case) with a cold EWMA would score 0 at
+    /// ANY depth, and a whole burst would pile onto one replica while its
+    /// peers idle instead of degrading to least-depth spreading.
+    pub fn cost_estimate(&self, i: usize, bytes: usize) -> f64 {
+        const SERVICE_EPSILON: f64 = 1e-6;
+        let r = &self.replicas[i];
+        let dispatch = r
+            .device
+            .pad
+            .map(|p| p.transfer_time(bytes).as_secs_f64())
+            .unwrap_or(0.0);
+        let service = r
+            .device
+            .queue
+            .stats()
+            .ewma_service()
+            .as_secs_f64()
+            .max(dispatch)
+            .max(SERVICE_EPSILON);
+        dispatch + self.depth(i) as f64 * service
+    }
+
+    /// Policy pick for affinity-free traffic; only live replicas are
+    /// eligible, and no live replica at all is a routed error.
+    fn select(&self, bytes: usize) -> Result<usize, String> {
+        let n = self.replicas.len();
         match self.policy {
             PlacementPolicy::RoundRobin => {
-                self.next_rr.fetch_add(1, Ordering::Relaxed) % self.replicas.len()
+                // rotate over the LIVE subset: skipping dead slots with a
+                // forward probe would hand the successor of every dead
+                // replica a double share (dead slot 1 of 3 would map both
+                // start%3==1 and ==2 onto replica 2)
+                let n_live = self.replicas.iter().filter(|r| r.is_alive()).count();
+                if n_live == 0 {
+                    return Err("all replicas are down".to_string());
+                }
+                let pick = self.next_rr.fetch_add(1, Ordering::Relaxed) % n_live;
+                let mut first_live = None;
+                let mut seen = 0usize;
+                for (i, r) in self.replicas.iter().enumerate() {
+                    if r.is_alive() {
+                        if first_live.is_none() {
+                            first_live = Some(i);
+                        }
+                        if seen == pick {
+                            return Ok(i);
+                        }
+                        seen += 1;
+                    }
+                }
+                // a replica died between the count and the scan; any
+                // survivor beats an error
+                first_live.ok_or_else(|| "all replicas are down".to_string())
             }
             PlacementPolicy::LeastInflight => {
-                let mut best = 0usize;
+                let mut best = None;
                 let mut best_depth = u64::MAX;
-                for i in 0..self.replicas.len() {
+                for i in 0..n {
+                    if !self.replicas[i].is_alive() {
+                        continue;
+                    }
                     let depth = self.depth(i);
                     if depth < best_depth {
-                        best = i;
+                        best = Some(i);
                         best_depth = depth;
                     }
                 }
-                best
+                best.ok_or_else(|| "all replicas are down".to_string())
+            }
+            PlacementPolicy::CostAware => {
+                let mut best = None;
+                let mut best_cost = f64::INFINITY;
+                for i in 0..n {
+                    if !self.replicas[i].is_alive() {
+                        continue;
+                    }
+                    let cost = self.cost_estimate(i, bytes);
+                    if cost < best_cost {
+                        best = Some(i);
+                        best_cost = cost;
+                    }
+                }
+                best.ok_or_else(|| "all replicas are down".to_string())
             }
         }
     }
 }
 
-/// Device ids (deduplicated, in first-seen order) of the `Ref` arguments a
-/// message carries. The default extraction goes through the clone-free
-/// [`ref_device_scan`](super::arg) — the dispatcher must not deep-copy
-/// every payload just to learn there are no refs. Custom `preprocess`
-/// functions are called (their extraction defines affinity), which means
-/// a `pre` with side effects runs once here and once in the replica; the
-/// hook is documented as a pure conversion (Listing 3). `None` when the
-/// message does not extract at all (it is still delegated — the replica
-/// produces the proper error — but not counted as routed work).
-fn ref_devices(
-    cfg_pre: &Option<super::facade::PreFn>,
-    msg: &crate::actor::Message,
-) -> Option<Vec<usize>> {
+/// A replicated spawn's pieces: the dispatcher (what ordinary callers talk
+/// to — `spawn_cl` returns only this) and the [`DevicePool`] behind it, for
+/// introspection: per-replica liveness, respawn counts, queue depths. The
+/// fault-injection tests and ops tooling use the pool to observe and
+/// perturb individual replicas.
+pub struct ReplicatedHandle {
+    pub actor: ActorRef,
+    pub pool: Arc<DevicePool>,
+}
+
+/// What the dispatcher needs to rebuild a dead replica: recompile the
+/// kernel on the replica's device (idempotent on the device queue — an
+/// already-compiled executable is reused) and spawn a fresh facade there.
+struct Respawner {
+    sys: ActorSystem,
+    manifest: Manifest,
+    timeout: Duration,
+    base: KernelSpawn,
+}
+
+impl Respawner {
+    fn respawn(&self, dev: &Arc<Device>) -> Result<ActorRef> {
+        let mut cfg = self.base.clone();
+        cfg.program = Program::build(
+            dev.clone(),
+            &self.manifest,
+            &[cfg.kernel.as_str()],
+            self.timeout,
+        )?;
+        spawn_on_device(&self.sys, cfg, dev.clone())
+    }
+}
+
+/// Sent back to the dispatcher by the respawn helper thread. The rebuild
+/// (`Program::build` blocks until the device queue reports compilation
+/// done — up to `build_timeout`) must NOT run inside the dispatcher's own
+/// `Down` handler: that would stall routing to every *healthy* replica
+/// for the whole compile, turning one replica death into a full outage
+/// instead of N-1 capacity.
+struct Respawned {
+    /// Replica index the rebuild was for.
+    replica: usize,
+    /// The fresh facade, or the error to log (the replica stays down).
+    facade: Result<ActorRef, String>,
+}
+
+/// Affinity + cost inputs of one message: `Ref` device ids and value-
+/// payload bytes. The default extraction goes through the clone-free
+/// [`RouteScan`](super::arg) — the dispatcher must not deep-copy every
+/// payload just to learn there are no refs. Custom `preprocess` functions
+/// are called (their extraction defines affinity), which means a `pre`
+/// with side effects runs once here and once in the replica; the hook is
+/// documented as a pure conversion (Listing 3). `None` when the message
+/// does not extract at all (it is still delegated — the replica produces
+/// the proper error — but not counted as routed work).
+fn route_info(cfg_pre: &Option<PreFn>, msg: &Message) -> Option<RouteScan> {
     let Some(pre) = cfg_pre else {
-        return super::arg::ref_device_scan(msg);
+        return super::arg::route_scan(msg);
     };
     let args = pre(msg)?;
-    let mut devs = Vec::new();
+    let mut scan = RouteScan::default();
     for a in &args {
-        if let ArgValue::Ref(r) = a {
-            let d = r.device_id();
-            if !devs.contains(&d) {
-                devs.push(d);
-            }
-        }
+        scan.note_arg(a);
     }
-    Some(devs)
+    Some(scan)
 }
 
-/// Spawn one replica facade per discovered device plus the dispatcher that
-/// routes between them (used by `Manager::spawn_cl` for
-/// [`Placement::Replicated`]).
+/// Spawn one replica facade per device of the set plus the dispatcher that
+/// routes between them (used by `Manager::spawn_cl` /
+/// `Manager::spawn_cl_replicated` for [`Placement::Replicated`]).
 pub(crate) fn spawn_replicated(
     mgr: &Manager,
     cfg: KernelSpawn,
-    policy: PlacementPolicy,
-) -> Result<ActorRef> {
+    set: ReplicaSet,
+) -> Result<ReplicatedHandle> {
     let platform = mgr.try_platform()?;
-    if platform.devices.is_empty() {
+    let devices: Vec<Arc<Device>> = match &set.devices {
+        None => platform.devices.clone(),
+        Some(ids) => {
+            if ids.is_empty() {
+                bail!(
+                    "kernel {:?}: replica device subset is empty",
+                    cfg.kernel
+                );
+            }
+            let mut picked: Vec<Arc<Device>> = Vec::with_capacity(ids.len());
+            for id in ids {
+                if picked.iter().any(|d| d.id == *id) {
+                    bail!(
+                        "kernel {:?}: device {id} appears twice in the replica subset",
+                        cfg.kernel
+                    );
+                }
+                picked.push(platform.device(*id).cloned().ok_or_else(|| {
+                    anyhow!(
+                        "kernel {:?}: replica subset names device {id}, \
+                         which is not in the inventory",
+                        cfg.kernel
+                    )
+                })?);
+            }
+            picked
+        }
+    };
+    if devices.is_empty() {
         bail!(
             "cannot replicate kernel {:?}: device inventory is empty",
             cfg.kernel
@@ -246,63 +561,139 @@ pub(crate) fn spawn_replicated(
     }
     let sys = mgr.system_handle();
     let timeout = mgr.build_timeout();
-    let mut replicas = Vec::with_capacity(platform.devices.len());
-    for dev in &platform.devices {
+    let mut replicas = Vec::with_capacity(devices.len());
+    for dev in &devices {
         // reuse the caller's program on its own device; compile the kernel
         // for every other device (the manual multi-device flow of §3.2,
-        // automated)
-        let mut rcfg = cfg.clone();
-        if rcfg.program.device().id != dev.id {
-            rcfg.program = Program::build(
-                dev.clone(),
-                &platform.manifest,
-                &[cfg.kernel.as_str()],
-                timeout,
-            )?;
-        }
+        // automated — same rebuild rule as `Placement::Device`)
+        let rcfg = mgr.rebuild_for(cfg.clone(), dev)?;
         let facade = spawn_on_device(&sys, rcfg, dev.clone())?;
         replicas.push(Replica::new(dev.clone(), facade));
     }
-    let mut pool = DevicePool::new(replicas, policy);
+    let mut pool = DevicePool::new(replicas, set.policy)?;
     if cfg.batching.is_some() {
         pool.set_routed_estimate(false);
     }
     let pool = Arc::new(pool);
-    Ok(spawn_dispatcher(&sys, pool, cfg.pre.clone(), cfg.kernel))
+    let respawner = match set.respawn {
+        RespawnPolicy::Never => None,
+        RespawnPolicy::Always => Some(Arc::new(Respawner {
+            sys: sys.clone(),
+            manifest: platform.manifest.clone(),
+            timeout,
+            base: cfg.clone(),
+        })),
+    };
+    let actor = spawn_dispatcher(&sys, pool.clone(), respawner, cfg.pre.clone(), cfg.kernel);
+    Ok(ReplicatedHandle { actor, pool })
 }
 
 /// The dispatcher: an ordinary event-based actor that routes each message
 /// to a replica via [`DevicePool::route`] and delegates it, so the replica
 /// answers the original requester directly (no extra hop on the reply
-/// path).
+/// path). It monitors every replica facade; `Down` handling is described
+/// in the module docs.
 fn spawn_dispatcher(
-    sys: &crate::actor::ActorSystem,
+    sys: &ActorSystem,
     pool: Arc<DevicePool>,
-    pre: Option<super::facade::PreFn>,
+    respawner: Option<Arc<Respawner>>,
+    pre: Option<PreFn>,
     kernel: String,
 ) -> ActorRef {
-    sys.spawn(move |_ctx| {
-        let pool = pool.clone();
-        let pre = pre.clone();
-        let kernel = kernel.clone();
-        Behavior::new().on_any(move |ctx, msg| {
-            let devs = ref_devices(&pre, msg);
-            let extracted = devs.is_some();
-            match pool.route(devs.as_deref().unwrap_or(&[])) {
-                Ok(i) => {
-                    if extracted {
-                        // count real work toward the routed-depth estimate
-                        pool.note_routed(i);
+    sys.spawn(move |ctx| {
+        // supervision: one monitor per replica facade. Down travels on the
+        // system-priority lane, so a death is observed ahead of queued
+        // ordinary traffic.
+        for r in pool.replicas() {
+            ctx.monitor(&r.facade());
+        }
+        let down_pool = pool.clone();
+        let down_kernel = kernel.clone();
+        let inst_pool = pool.clone();
+        let inst_kernel = kernel.clone();
+        Behavior::new()
+            .on(move |ctx, d: &Down| {
+                let Some(i) = down_pool.mark_dead(d.source) else {
+                    // stale Down for an incarnation already replaced
+                    return no_reply();
+                };
+                let dev = down_pool.replicas()[i].device.clone();
+                log::warn!(
+                    "kernel {down_kernel}: replica on device {} ({}) died: {:?}; \
+                     routed depth drained",
+                    dev.id,
+                    dev.name,
+                    d.reason
+                );
+                if let Some(r) = &respawner {
+                    // rebuild off the dispatcher: routing must keep flowing
+                    // to the survivors while the compile runs (it blocks up
+                    // to build_timeout). The helper reports back with a
+                    // `Respawned` message; exactly one rebuild per death —
+                    // mark_dead cannot match this replica again until the
+                    // install flips it back alive.
+                    let r = r.clone();
+                    let me = ctx.me();
+                    let spawned = std::thread::Builder::new()
+                        .name("replica-respawn".into())
+                        .spawn(move || {
+                            let facade = r.respawn(&dev).map_err(|e| e.to_string());
+                            me.send_from(
+                                None,
+                                Message::new(Respawned { replica: i, facade }),
+                            );
+                        });
+                    if let Err(e) = spawned {
+                        log::error!(
+                            "kernel {down_kernel}: could not start respawn thread: {e}; \
+                             replica stays down"
+                        );
                     }
-                    ctx.delegate(&pool.replicas()[i].facade, msg.clone());
                 }
-                Err(e) => {
-                    let promise = ctx.make_promise();
-                    promise.deliver_err(ErrorMsg::new(format!("kernel {kernel}: {e}")));
+                no_reply()
+            })
+            .on(move |ctx, r: &Respawned| {
+                let dev = inst_pool.replicas()[r.replica].device.clone();
+                match &r.facade {
+                    Ok(f) => {
+                        ctx.monitor(f);
+                        inst_pool.install(r.replica, f.clone());
+                        log::info!(
+                            "kernel {inst_kernel}: replica on device {} respawned",
+                            dev.id
+                        );
+                    }
+                    Err(e) => {
+                        log::error!(
+                            "kernel {inst_kernel}: respawn on device {} failed: {e}; \
+                             replica stays down",
+                            dev.id
+                        );
+                    }
                 }
-            }
-            Reply::Promised
-        })
+                no_reply()
+            })
+            .on_any(move |ctx, msg| {
+                let info = route_info(&pre, msg);
+                let (devs, bytes, extracted) = match &info {
+                    Some(s) => (s.devices.as_slice(), s.val_bytes, true),
+                    None => (&[][..], 0, false),
+                };
+                match pool.route(devs, bytes) {
+                    Ok(i) => {
+                        if extracted {
+                            // count real work toward the routed-depth estimate
+                            pool.note_routed(i);
+                        }
+                        ctx.delegate(&pool.replicas()[i].facade(), msg.clone());
+                    }
+                    Err(e) => {
+                        let promise = ctx.make_promise();
+                        promise.deliver_err(ErrorMsg::new(format!("kernel {kernel}: {e}")));
+                    }
+                }
+                Reply::Promised
+            })
     })
 }
 
@@ -332,27 +723,49 @@ mod tests {
         sys.spawn(|_| Behavior::new().on_any(|_c, _m| Reply::Promised))
     }
 
+    fn pool_of(
+        sys: &ActorSystem,
+        devices: &[Arc<Device>],
+        policy: PlacementPolicy,
+    ) -> DevicePool {
+        DevicePool::new(
+            devices
+                .iter()
+                .map(|d| Replica::new(d.clone(), dummy_ref(sys)))
+                .collect(),
+            policy,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_replica_set_is_an_err() {
+        // the fallible-spawn convention: no assert-abort on the spawn path
+        let err = match DevicePool::new(Vec::new(), PlacementPolicy::RoundRobin) {
+            Ok(_) => panic!("empty pool must be an Err"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("at least one replica"));
+    }
+
     #[test]
     fn round_robin_rotates_and_affinity_overrides() {
         let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
         let d0 = test_device(0, None);
         let d1 = test_device(1, None);
-        let pool = DevicePool::new(
-            vec![
-                Replica::new(d0.clone(), dummy_ref(&sys)),
-                Replica::new(d1.clone(), dummy_ref(&sys)),
-            ],
-            PlacementPolicy::RoundRobin,
-        );
-        assert_eq!(pool.route(&[]).unwrap(), 0);
-        assert_eq!(pool.route(&[]).unwrap(), 1);
-        assert_eq!(pool.route(&[]).unwrap(), 0);
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::RoundRobin);
+        assert_eq!(pool.route(&[], 0).unwrap(), 0);
+        assert_eq!(pool.route(&[], 0).unwrap(), 1);
+        assert_eq!(pool.route(&[], 0).unwrap(), 0);
         // affinity beats rotation
-        assert_eq!(pool.route(&[1]).unwrap(), 1);
-        assert_eq!(pool.route(&[0]).unwrap(), 0);
+        assert_eq!(pool.route(&[1], 0).unwrap(), 1);
+        assert_eq!(pool.route(&[0], 0).unwrap(), 0);
         // unknown device and cross-device refs are routed errors
-        assert!(pool.route(&[7]).unwrap_err().contains("device 7"));
-        assert!(pool.route(&[0, 1]).unwrap_err().contains("multiple devices"));
+        assert!(pool.route(&[7], 0).unwrap_err().contains("device 7"));
+        assert!(pool
+            .route(&[0, 1], 0)
+            .unwrap_err()
+            .contains("multiple devices"));
         d0.queue.stop();
         d1.queue.stop();
         sys.shutdown();
@@ -370,15 +783,9 @@ mod tests {
         };
         let d0 = test_device(0, Some(slow));
         let d1 = test_device(1, None);
-        let pool = DevicePool::new(
-            vec![
-                Replica::new(d0.clone(), dummy_ref(&sys)),
-                Replica::new(d1.clone(), dummy_ref(&sys)),
-            ],
-            PlacementPolicy::LeastInflight,
-        );
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::LeastInflight);
         // both idle: ties resolve to the first replica
-        assert_eq!(pool.route(&[]).unwrap(), 0);
+        assert_eq!(pool.route(&[], 0).unwrap(), 0);
         // occupy device 0 (the gauge rises at submission time)
         d0.queue
             .compile_emulated("busy", crate::runtime::HostOp::Identity);
@@ -387,12 +794,12 @@ mod tests {
             .queue
             .execute("busy", vec![bid], crate::runtime::Dtype::U32, vec![]);
         assert!(d0.queue.stats().inflight() >= 1);
-        assert_eq!(pool.route(&[]).unwrap(), 1, "idle device must win");
+        assert_eq!(pool.route(&[], 0).unwrap(), 1, "idle device must win");
         done.wait(Duration::from_secs(30)).unwrap();
         d0.queue.barrier(Duration::from_secs(30)).unwrap();
         // drained: the gauge falls back to zero and ties go first again
         assert_eq!(d0.queue.stats().inflight(), 0);
-        assert_eq!(pool.route(&[]).unwrap(), 0);
+        assert_eq!(pool.route(&[], 0).unwrap(), 0);
         d0.queue.stop();
         d1.queue.stop();
         sys.shutdown();
@@ -407,16 +814,10 @@ mod tests {
         let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
         let d0 = test_device(0, None);
         let d1 = test_device(1, None);
-        let pool = DevicePool::new(
-            vec![
-                Replica::new(d0.clone(), dummy_ref(&sys)),
-                Replica::new(d1.clone(), dummy_ref(&sys)),
-            ],
-            PlacementPolicy::LeastInflight,
-        );
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::LeastInflight);
         let mut picks = Vec::new();
         for _ in 0..6 {
-            let i = pool.route(&[]).unwrap();
+            let i = pool.route(&[], 0).unwrap();
             pool.note_routed(i);
             picks.push(i);
         }
@@ -436,19 +837,137 @@ mod tests {
         let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
         let d0 = test_device(0, None);
         let d1 = test_device(1, None);
-        let mut pool = DevicePool::new(
-            vec![
-                Replica::new(d0.clone(), dummy_ref(&sys)),
-                Replica::new(d1.clone(), dummy_ref(&sys)),
-            ],
-            PlacementPolicy::LeastInflight,
-        );
+        let mut pool =
+            pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::LeastInflight);
         pool.set_routed_estimate(false);
         for _ in 0..5 {
             pool.note_routed(0);
         }
         assert_eq!(pool.depth(0), 0, "routed residue must not count");
-        assert_eq!(pool.route(&[]).unwrap(), 0, "idle devices tie to first");
+        assert_eq!(pool.route(&[], 0).unwrap(), 0, "idle devices tie to first");
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn dead_replicas_are_skipped_and_drained() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::LeastInflight);
+        // pile routed-but-never-launched work onto replica 0, then kill it
+        for _ in 0..5 {
+            pool.note_routed(0);
+        }
+        assert_eq!(pool.depth(0), 5);
+        let id0 = pool.replicas()[0].facade().id();
+        assert_eq!(pool.mark_dead(id0), Some(0));
+        assert!(!pool.replicas()[0].is_alive());
+        assert_eq!(pool.live_count(), 1);
+        // the ROADMAP bug: without the drain these 5 phantom messages
+        // would bias routing forever
+        assert_eq!(pool.depth(0), 0, "death must drain the routed estimate");
+        // selection skips the dead replica (round-robin and depth alike)
+        for _ in 0..4 {
+            assert_eq!(pool.route(&[], 0).unwrap(), 1);
+        }
+        // affinity to the dead device is a routed error, not a dead-letter
+        let err = pool.route(&[0], 0).unwrap_err();
+        assert!(err.contains("down"), "got: {err}");
+        // a stale Down for the dead incarnation is ignored
+        assert_eq!(pool.mark_dead(id0), None);
+        // respawn restores rotation with a clean estimate
+        pool.install(0, dummy_ref(&sys));
+        assert!(pool.replicas()[0].is_alive());
+        assert_eq!(pool.replicas()[0].respawns(), 1);
+        assert_eq!(pool.depth(0), 0);
+        let picks: Vec<usize> = (0..4).map(|_| pool.route(&[], 0).unwrap()).collect();
+        assert!(picks.contains(&0), "respawned replica must serve again");
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn round_robin_splits_evenly_over_survivors() {
+        // a dead middle replica must not hand its successor a double
+        // share: rotation runs over the live subset, not raw slots
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let devs: Vec<_> = (0..3).map(|i| test_device(i, None)).collect();
+        let pool = pool_of(&sys, &devs, PlacementPolicy::RoundRobin);
+        let id1 = pool.replicas()[1].facade().id();
+        pool.mark_dead(id1).unwrap();
+        let mut counts = [0usize; 3];
+        for _ in 0..8 {
+            counts[pool.route(&[], 0).unwrap()] += 1;
+        }
+        assert_eq!(counts[1], 0, "dead replica must not serve");
+        assert_eq!(counts[0], 4, "survivors split the rotation evenly");
+        assert_eq!(counts[2], 4);
+        for d in &devs {
+            d.queue.stop();
+        }
+        sys.shutdown();
+    }
+
+    #[test]
+    fn all_replicas_down_is_a_routed_error() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let pool = pool_of(&sys, &[d0.clone()], PlacementPolicy::RoundRobin);
+        let id = pool.replicas()[0].facade().id();
+        pool.mark_dead(id).unwrap();
+        let err = pool.route(&[], 0).unwrap_err();
+        assert!(err.contains("all replicas"), "got: {err}");
+        d0.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn cost_aware_steers_by_dispatch_cost_and_depth() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        // device 0: no pad (free dispatch); device 1: Phi-like 30 ms pad
+        let phi = PadModel {
+            launch: Duration::from_millis(30),
+            bytes_per_sec: 0.0,
+            compute_scale: 1.0,
+            busy_wait: false,
+        };
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, Some(phi));
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::CostAware);
+        // small requests: the cheap device wins every time, no matter how
+        // the rotation would have gone — the Fig 7b steering
+        for _ in 0..6 {
+            let i = pool.route(&[], 256).unwrap();
+            pool.note_routed(i);
+            assert_eq!(i, 0, "cost-aware must avoid the 30 ms dispatch pad");
+        }
+        assert!(pool.cost_estimate(1, 256) >= Duration::from_millis(30).as_secs_f64());
+        // affinity still overrides cost
+        assert_eq!(pool.route(&[1], 256).unwrap(), 1);
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn cost_aware_spreads_bursts_across_padless_devices() {
+        // two real-hardware-style devices (no pad model, cold EWMA): the
+        // service-epsilon floor keeps the depth term alive, so a burst
+        // degrades to least-depth spreading instead of piling one replica
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::CostAware);
+        let mut picks = Vec::new();
+        for _ in 0..6 {
+            let i = pool.route(&[], 64).unwrap();
+            pool.note_routed(i);
+            picks.push(i);
+        }
+        assert_eq!(picks, vec![0, 1, 0, 1, 0, 1], "burst must alternate");
         d0.queue.stop();
         d1.queue.stop();
         sys.shutdown();

@@ -63,16 +63,20 @@ impl<'m> PipelineBuilder<'m> {
     }
 
     /// Spawn every stage actor and compose them; returns (pipeline,
-    /// stage actors in flow order).
+    /// stage actors in flow order). An empty pipeline is an `Err` (the
+    /// fallible-spawn convention — `try_platform` / `default_device`
+    /// surface errors instead of aborting the process).
     pub fn build(self) -> Result<(ActorRef, Vec<ActorRef>)> {
-        assert!(!self.stages.is_empty(), "pipeline needs at least one stage");
+        if self.stages.is_empty() {
+            anyhow::bail!("pipeline needs at least one stage");
+        }
         let sys = self.manager_system();
         let mut actors = Vec::new();
         for cfg in self.stages {
             actors.push(self.manager.spawn_cl(cfg)?);
         }
         let mut it = actors.iter().cloned();
-        let first = it.next().unwrap();
+        let first = it.next().expect("non-empty checked above");
         let composed = it.fold(first, |acc, next| compose(&sys, next, acc));
         Ok((composed, actors))
     }

@@ -85,7 +85,13 @@ pub struct PadModel {
 }
 
 impl PadModel {
-    fn transfer_pad(&self, bytes: usize) -> Duration {
+    /// Modeled cost of moving `bytes` across the host↔device boundary:
+    /// the fixed dispatch latency plus the bandwidth term. Public because
+    /// the cost-aware placement policy uses it to estimate a request's
+    /// dispatch+transfer cost *before* routing (the Fig 7b steering
+    /// input); the queue thread uses the same number as its sleep pad, so
+    /// the estimate and the simulation cannot drift apart.
+    pub fn transfer_time(&self, bytes: usize) -> Duration {
         let mut d = self.launch;
         if self.bytes_per_sec > 0.0 {
             d += Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
@@ -290,6 +296,13 @@ pub struct ExecStats {
     /// Launches submitted but not yet retired: the queue-depth gauge that
     /// feeds [`least-inflight placement`](crate::opencl::PlacementPolicy).
     pub inflight: AtomicU64,
+    /// Exponentially weighted moving average of per-launch service time in
+    /// nanoseconds (α = 1/8), sampled on the queue thread as each launch
+    /// retires — wall time including the simulated transfer/compute pads.
+    /// Feeds the cost-aware policy's "queue depth × mean service time"
+    /// term. Single-writer (the queue thread); 0 until the first launch
+    /// retires.
+    pub ewma_service_ns: AtomicU64,
     pub execs: AtomicU64,
     pub exec_ns: AtomicU64,
     pub uploads: AtomicU64,
@@ -316,6 +329,26 @@ impl ExecStats {
     /// Total launches submitted to this queue.
     pub fn launched(&self) -> u64 {
         self.launched.load(Ordering::Relaxed)
+    }
+
+    /// EWMA of per-launch service time (zero until a launch retired).
+    pub fn ewma_service(&self) -> Duration {
+        Duration::from_nanos(self.ewma_service_ns.load(Ordering::Relaxed))
+    }
+
+    /// Fold one retired launch's service time into the EWMA (queue-thread
+    /// only — single writer, so plain load/store suffices). The first
+    /// sample seeds the average; later samples blend at α = 1/8. Clamped
+    /// to ≥ 1 ns so a seeded gauge never reads as "no samples yet".
+    pub(crate) fn note_service(&self, d: Duration) {
+        let sample = (d.as_nanos() as u64).max(1);
+        let old = self.ewma_service_ns.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            sample
+        } else {
+            (old.saturating_mul(7).saturating_add(sample) / 8).max(1)
+        };
+        self.ewma_service_ns.store(new, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> (u64, Duration) {
@@ -496,6 +529,19 @@ impl DeviceQueue {
         ok
     }
 
+    /// Fail `done` when the closed queue refused the command that carried
+    /// it: the command will never run, so a waiter must error out now
+    /// instead of sitting in `Event::wait` for its full timeout (e.g. a
+    /// replica respawn racing device shutdown would otherwise block its
+    /// helper thread for the whole `build_timeout`).
+    fn push_or_fail(&self, cmd: QueueCmd, done: &Event) -> bool {
+        let ok = self.push(cmd);
+        if !ok {
+            done.fail(format!("device queue {} is closed", self.name));
+        }
+        ok
+    }
+
     /// Account a kernel submission on the launch counter and queue-depth
     /// gauge. Must run *before* the push: the queue thread decrements
     /// `inflight` when the launch retires, so incrementing after the push
@@ -517,11 +563,14 @@ impl DeviceQueue {
     pub fn compile(&self, name: impl Into<String>, path: PathBuf) -> Event {
         let done = Event::new();
         done.mark_enqueued();
-        self.push(QueueCmd::Compile {
-            name: name.into(),
-            path,
-            done: done.clone(),
-        });
+        self.push_or_fail(
+            QueueCmd::Compile {
+                name: name.into(),
+                path,
+                done: done.clone(),
+            },
+            &done,
+        );
         done
     }
 
@@ -530,11 +579,14 @@ impl DeviceQueue {
     pub fn compile_emulated(&self, name: impl Into<String>, op: HostOp) -> Event {
         let done = Event::new();
         done.mark_enqueued();
-        self.push(QueueCmd::CompileEmu {
-            name: name.into(),
-            op,
-            done: done.clone(),
-        });
+        self.push_or_fail(
+            QueueCmd::CompileEmu {
+                name: name.into(),
+                op,
+                done: done.clone(),
+            },
+            &done,
+        );
         done
     }
 
@@ -548,11 +600,14 @@ impl DeviceQueue {
         let id = self.fresh_buffer_id();
         let done = Event::new();
         done.mark_enqueued();
-        self.push(QueueCmd::Upload {
-            id,
-            data,
-            done: done.clone(),
-        });
+        self.push_or_fail(
+            QueueCmd::Upload {
+                id,
+                data,
+                done: done.clone(),
+            },
+            &done,
+        );
         (id, done)
     }
 
@@ -568,14 +623,17 @@ impl DeviceQueue {
         let done = Event::new();
         done.mark_enqueued();
         self.pre_launch();
-        if !self.push(QueueCmd::Execute {
-            exec: exec.into(),
-            args,
-            out,
-            out_dtype,
-            deps,
-            done: done.clone(),
-        }) {
+        if !self.push_or_fail(
+            QueueCmd::Execute {
+                exec: exec.into(),
+                args,
+                out,
+                out_dtype,
+                deps,
+                done: done.clone(),
+            },
+            &done,
+        ) {
             self.launch_refused();
         }
         (out, done)
@@ -596,13 +654,16 @@ impl DeviceQueue {
         let done = Event::new();
         done.mark_enqueued();
         self.pre_launch();
-        if !self.push(QueueCmd::FusedExec {
-            exec: exec.into(),
-            inputs,
-            out,
-            out_dtype,
-            done: done.clone(),
-        }) {
+        if !self.push_or_fail(
+            QueueCmd::FusedExec {
+                exec: exec.into(),
+                inputs,
+                out,
+                out_dtype,
+                done: done.clone(),
+            },
+            &done,
+        ) {
             self.launch_refused();
         }
         (out, done)
@@ -641,7 +702,7 @@ impl DeviceQueue {
     /// clFinish: block until all previously enqueued commands retired.
     pub fn barrier(&self, timeout: Duration) -> Result<()> {
         let done = Event::new();
-        self.push(QueueCmd::Barrier { done: done.clone() });
+        self.push_or_fail(QueueCmd::Barrier { done: done.clone() }, &done);
         done.wait(timeout).map_err(|e| anyhow!(e))
     }
 
@@ -798,7 +859,7 @@ impl QueueState {
             .upload_bytes
             .fetch_add(bytes as u64, Ordering::Relaxed);
         if let Some(p) = &self.pad {
-            p.pad_for(p.transfer_pad(bytes));
+            p.pad_for(p.transfer_time(bytes));
         }
     }
 
@@ -984,7 +1045,7 @@ impl QueueState {
             .download_bytes
             .fetch_add(d.bytes() as u64, Ordering::Relaxed);
         if let Some(p) = &self.pad {
-            p.pad_for(p.transfer_pad(d.bytes()));
+            p.pad_for(p.transfer_time(d.bytes()));
         }
         Ok(d)
     }
@@ -1062,9 +1123,15 @@ fn queue_loop(
                 deps,
                 done,
             } => {
-                // cross-queue dependencies block this in-order queue first
-                let res = wait_deps(&deps)
-                    .and_then(|()| st.execute_resident(&exec, &args, out, out_dtype));
+                // cross-queue dependencies block this in-order queue first;
+                // the service sample starts after them — waiting on another
+                // queue is not this device's own occupancy
+                let res = wait_deps(&deps).and_then(|()| {
+                    let t0 = Instant::now();
+                    let r = st.execute_resident(&exec, &args, out, out_dtype);
+                    st.stats.note_service(t0.elapsed());
+                    r
+                });
                 st.stats.inflight.fetch_sub(1, Ordering::Relaxed);
                 match res {
                     Ok(()) => done.complete(),
@@ -1078,7 +1145,9 @@ fn queue_loop(
                 out_dtype,
                 done,
             } => {
+                let t0 = Instant::now();
                 let res = st.execute_fused(&exec, inputs, out, out_dtype);
+                st.stats.note_service(t0.elapsed());
                 st.stats.inflight.fetch_sub(1, Ordering::Relaxed);
                 match res {
                     Ok(()) => done.complete(),

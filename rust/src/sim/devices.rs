@@ -79,6 +79,48 @@ pub fn gtx_780m() -> DeviceSpec {
     }
 }
 
+/// The Fig 7b *steering* pair: a cheap-dispatch device and a Phi-like
+/// high-dispatch-cost device that are otherwise identical (same transfer
+/// bandwidth, same compute scale, no busy-wait), so the only dimension the
+/// cost-aware placement policy can separate them on is the per-command
+/// dispatch pad — exactly the effect the paper isolates in Fig 7b, where
+/// offloading *small* duties to the Phi doubles total runtime while the
+/// Tesla still wins. Used by the `dispatch` bench's cost-aware probe and
+/// the placement tests; the 20x launch gap mirrors the calibrated
+/// Tesla-vs-Phi profiles above without the Phi's core-burning busy-wait
+/// (CI runners share cores).
+pub fn steering_pair() -> (DeviceSpec, DeviceSpec) {
+    let fast = DeviceSpec {
+        name: "steer-fast".to_string(),
+        kind: DeviceKind::Gpu,
+        info: DeviceInfo {
+            compute_units: 8,
+            max_work_items_per_cu: 1024,
+        },
+        pad: Some(PadModel {
+            launch: Duration::from_micros(500),
+            bytes_per_sec: 2.0e9,
+            compute_scale: 1.0,
+            busy_wait: false,
+        }),
+    };
+    let phi_like = DeviceSpec {
+        name: "steer-phi".to_string(),
+        kind: DeviceKind::Accelerator,
+        info: DeviceInfo {
+            compute_units: 60,
+            max_work_items_per_cu: 4,
+        },
+        pad: Some(PadModel {
+            launch: Duration::from_millis(10),
+            bytes_per_sec: 2.0e9,
+            compute_scale: 1.0,
+            busy_wait: false,
+        }),
+    };
+    (fast, phi_like)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +136,15 @@ mod tests {
         // the Phi's dispatch cost dominates the Tesla's by design
         assert!(p.pad.unwrap().launch > t.pad.unwrap().launch * 10);
         assert!(p.pad.unwrap().busy_wait && !t.pad.unwrap().busy_wait);
+    }
+
+    #[test]
+    fn steering_pair_differs_only_in_dispatch_cost() {
+        let (fast, slow) = steering_pair();
+        let (f, s) = (fast.pad.unwrap(), slow.pad.unwrap());
+        assert!(s.launch >= f.launch * 20, "the dispatch gap IS the scenario");
+        assert_eq!(s.bytes_per_sec, f.bytes_per_sec);
+        assert_eq!(s.compute_scale, f.compute_scale);
+        assert!(!f.busy_wait && !s.busy_wait);
     }
 }

@@ -12,4 +12,4 @@
 
 pub mod devices;
 
-pub use devices::{gtx_780m, tesla_c2075, xeon_phi_5110p};
+pub use devices::{gtx_780m, steering_pair, tesla_c2075, xeon_phi_5110p};

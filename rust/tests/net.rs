@@ -196,7 +196,7 @@ fn replicated_facade_serves_remote_clients_with_placement() {
             KernelSpawn::new(program, "copy_u32_1024")
                 .inputs(Mode::Val, 1)
                 .output(Mode::Val)
-                .placement(Placement::Replicated(PlacementPolicy::RoundRobin)),
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin)),
         )
         .unwrap();
     server_sys.registry().put("replicated-worker", dispatcher);

@@ -1,7 +1,11 @@
 //! Placement & batching tests: replica fan-out across simulated devices,
-//! affinity routing of device-resident refs, least-inflight selection,
-//! batcher window triggers (count, capacity, timer, shutdown), and the
-//! fallible discovery paths (`try_platform`, empty inventory).
+//! affinity routing of device-resident refs, least-inflight and cost-aware
+//! selection, batcher window triggers (count, capacity, timer, shutdown),
+//! the fallible discovery paths (`try_platform`, empty inventory), and the
+//! fault-injection suite — a replica killed mid-burst must never lose a
+//! request (reply or routed error, exactly once), its stale routed-depth
+//! estimate must drain, and `RespawnPolicy::Always` must restore N-way
+//! distribution.
 //!
 //! Everything runs on host-emulated kernels (`emu=` manifest extras) over
 //! simulated devices, so the suite needs no artifacts and no real XLA
@@ -158,7 +162,7 @@ fn pinned_device_placement_runs_there() {
 #[test]
 fn round_robin_distributes_requests() {
     let (sys, mgr) = system("rr", 2, Duration::ZERO);
-    let worker = spawn_copy(&mgr, Placement::Replicated(PlacementPolicy::RoundRobin));
+    let worker = spawn_copy(&mgr, Placement::replicated(PlacementPolicy::RoundRobin));
     let me = sys.scoped();
     for i in 0..8u32 {
         let data = vec![i; CAP];
@@ -175,7 +179,7 @@ fn least_inflight_spreads_a_burst_across_devices() {
     // acceptance: a burst through Replicated + least-inflight lands on
     // >= 2 simulated devices, asserted via per-device ExecStats.launched
     let (sys, mgr) = system("li", 2, Duration::from_millis(25));
-    let worker = spawn_copy(&mgr, Placement::Replicated(PlacementPolicy::LeastInflight));
+    let worker = spawn_copy(&mgr, Placement::replicated(PlacementPolicy::LeastInflight));
     let me = sys.scoped();
     let pending: Vec<_> = (0..8u32)
         .map(|i| me.request(&worker, vec![i; CAP]))
@@ -213,7 +217,7 @@ fn affinity_routes_ref_args_to_their_device() {
             KernelSpawn::new(consumer_prog, "copy_u32")
                 .inputs(Mode::Ref, 1)
                 .output(Mode::Val)
-                .placement(Placement::Replicated(PlacementPolicy::RoundRobin)),
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin)),
         )
         .unwrap();
     let me = sys.scoped();
@@ -251,7 +255,7 @@ fn refs_on_multiple_devices_are_a_routed_error() {
             KernelSpawn::new(program, "vadd_u32")
                 .inputs(Mode::Ref, 2)
                 .output(Mode::Val)
-                .placement(Placement::Replicated(PlacementPolicy::RoundRobin)),
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin)),
         )
         .unwrap();
     let me = sys.scoped();
@@ -282,7 +286,7 @@ fn replicated_pipeline_e2e_on_emulated_backend() {
             KernelSpawn::new(p1, "copy_u32")
                 .inputs(Mode::Val, 1)
                 .output(Mode::Ref)
-                .placement(Placement::Replicated(PlacementPolicy::RoundRobin)),
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin)),
         )
         .unwrap();
     let p2 = mgr.create_kernel_program("copy_u32").unwrap();
@@ -291,7 +295,7 @@ fn replicated_pipeline_e2e_on_emulated_backend() {
             KernelSpawn::new(p2, "copy_u32")
                 .inputs(Mode::Ref, 1)
                 .output(Mode::Val)
-                .placement(Placement::Replicated(PlacementPolicy::RoundRobin)),
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin)),
         )
         .unwrap();
     let me = sys.scoped();
@@ -304,6 +308,287 @@ fn replicated_pipeline_e2e_on_emulated_backend() {
     let (l0, l1) = (launched_on(&mgr, 0), launched_on(&mgr, 1));
     assert_eq!(l0 + l1, 16);
     assert!(l0 > 0 && l1 > 0, "both devices must serve ({l0}/{l1})");
+    teardown(sys, mgr);
+}
+
+// --- fault tolerance ----------------------------------------------------
+
+/// Inject a fault: a non-normal `Exit` terminates an actor that does not
+/// trap exits, firing `Down` at its monitors — the canonical CAF failure
+/// signal the dispatcher supervises replicas with.
+fn kill(actor: &ActorRef) {
+    actor.send_from(None, Message::new(Exit::fault("injected fault")));
+}
+
+/// Poll `f` until it holds or ~5 s elapse; returns the final verdict.
+fn eventually(mut f: impl FnMut() -> bool) -> bool {
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while std::time::Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    f()
+}
+
+fn spawn_replicated_copy(mgr: &Manager, set: ReplicaSet) -> ReplicatedHandle {
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    mgr.spawn_cl_replicated(
+        KernelSpawn::new(program, "copy_u32")
+            .inputs(Mode::Val, 1)
+            .output(Mode::Val)
+            .placement(Placement::Replicated(set)),
+    )
+    .unwrap()
+}
+
+#[test]
+fn replica_death_mid_burst_never_loses_a_request() {
+    // acceptance: a replica Down never loses a routed request — every
+    // request resolves with a reply or an error, exactly once, and never
+    // by timeout
+    let (sys, mgr) = system("death", 2, Duration::from_millis(10));
+    let handle = spawn_replicated_copy(&mgr, ReplicaSet::new(PlacementPolicy::RoundRobin));
+    let me = sys.scoped();
+    let pending: Vec<_> = (0..16u32)
+        .map(|i| me.request(&handle.actor, vec![i; CAP]))
+        .collect();
+    // kill replica 0 while the burst is in flight
+    kill(&handle.pool.replicas()[0].facade());
+    let (mut ok, mut errs) = (0usize, 0usize);
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.receive_msg(T) {
+            Ok(m) => {
+                assert_eq!(m.downcast_ref::<Vec<u32>>(), Some(&vec![i as u32; CAP]));
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    !e.reason.contains("timed out"),
+                    "request {i} was silently lost: {}",
+                    e.reason
+                );
+                errs += 1;
+            }
+        }
+    }
+    assert_eq!(ok + errs, 16, "every request resolves exactly once");
+    assert!(ok > 0, "the surviving replica must have served");
+    // the dispatcher observes the Down: replica dead, depth drained
+    assert!(
+        eventually(|| !handle.pool.replicas()[0].is_alive()),
+        "dispatcher must observe the Down"
+    );
+    assert_eq!(handle.pool.live_count(), 1);
+    assert!(
+        eventually(|| handle.pool.depth(0) == 0),
+        "dead replica's stale routed count must drain (got {})",
+        handle.pool.depth(0)
+    );
+    // post-mortem traffic routes exclusively to the survivor — no errors
+    let dead_launches = launched_on(&mgr, 0);
+    for i in 0..6u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    assert_eq!(
+        launched_on(&mgr, 0),
+        dead_launches,
+        "a dead replica must stop receiving routed traffic"
+    );
+    teardown(sys, mgr);
+}
+
+#[test]
+fn dead_replica_depth_estimate_drains_for_least_inflight() {
+    // the ROADMAP bug: a dead replica's routed-but-never-launched messages
+    // used to inflate its LeastInflight depth forever
+    let (sys, mgr) = system("drain", 2, Duration::from_millis(5));
+    let handle =
+        spawn_replicated_copy(&mgr, ReplicaSet::new(PlacementPolicy::LeastInflight));
+    let me = sys.scoped();
+    let pending: Vec<_> = (0..8u32)
+        .map(|i| me.request(&handle.actor, vec![i; CAP]))
+        .collect();
+    kill(&handle.pool.replicas()[0].facade());
+    for p in pending {
+        let _ = p.receive_msg(T); // reply or error, both fine here
+    }
+    assert!(eventually(|| !handle.pool.replicas()[0].is_alive()));
+    assert!(
+        eventually(|| handle.pool.depth(0) == 0),
+        "stale routed counts must not survive the replica (got {})",
+        handle.pool.depth(0)
+    );
+    // depth-based selection now sees a clean picture: the survivor serves
+    let out: Vec<u32> = me.request(&handle.actor, vec![9; CAP]).receive(T).unwrap();
+    assert_eq!(out, vec![9; CAP]);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn respawn_restores_n_way_distribution() {
+    let (sys, mgr) = system("respawn", 2, Duration::ZERO);
+    let handle = spawn_replicated_copy(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin).respawn(RespawnPolicy::Always),
+    );
+    let me = sys.scoped();
+    // pre-death sanity round
+    for i in 0..4u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    let old_id = handle.pool.replicas()[0].facade().id();
+    kill(&handle.pool.replicas()[0].facade());
+    assert!(
+        eventually(|| handle.pool.replicas()[0].respawns() >= 1),
+        "RespawnPolicy::Always must rebuild the replica"
+    );
+    assert!(handle.pool.replicas()[0].is_alive());
+    assert_ne!(
+        handle.pool.replicas()[0].facade().id(),
+        old_id,
+        "the respawned facade is a fresh incarnation"
+    );
+    assert_eq!(handle.pool.live_count(), 2);
+    // acceptance: respawn restores the full N-way rotation
+    let (b0, b1) = (launched_on(&mgr, 0), launched_on(&mgr, 1));
+    for i in 0..8u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    let (d0, d1) = (launched_on(&mgr, 0) - b0, launched_on(&mgr, 1) - b1);
+    assert_eq!(d0 + d1, 8, "every request launches exactly once");
+    assert_eq!(d0, 4, "respawned replica serves its full rotation share");
+    assert_eq!(d1, 4);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn stranded_refs_on_a_dead_replica_get_a_routed_error() {
+    let (sys, mgr) = system("strand", 2, Duration::ZERO);
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let producer = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Ref)
+                .placement(Placement::Device(1)),
+        )
+        .unwrap();
+    let handle = {
+        let program = mgr.create_kernel_program("copy_u32").unwrap();
+        mgr.spawn_cl_replicated(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Ref, 1)
+                .output(Mode::Val)
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin)),
+        )
+        .unwrap()
+    };
+    let me = sys.scoped();
+    let data = vec![5u32; CAP];
+    let r: MemRef = me.request(&producer, data.clone()).receive(T).unwrap();
+    assert_eq!(r.device_id(), 1);
+    // affinity serves from device 1 while its replica lives
+    let out: Vec<u32> = me.request(&handle.actor, r.clone()).receive(T).unwrap();
+    assert_eq!(out, data);
+    // kill device 1's replica: the ref is stranded on its device
+    kill(&handle.pool.replicas()[1].facade());
+    assert!(eventually(|| !handle.pool.replicas()[1].is_alive()));
+    let err = me.request(&handle.actor, r).receive_msg(T).unwrap_err();
+    assert!(err.reason.contains("down"), "got: {}", err.reason);
+    // affinity-free traffic still flows via the survivor on device 0
+    let out: Vec<u32> = me.request(&handle.actor, data.clone()).receive(T).unwrap();
+    assert_eq!(out, data);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn replica_subsets_span_only_the_chosen_devices() {
+    let (sys, mgr) = system("subset", 3, Duration::ZERO);
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let handle = mgr
+        .spawn_cl_replicated(
+            KernelSpawn::new(program.clone(), "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(
+                    ReplicaSet::new(PlacementPolicy::RoundRobin).on_devices(vec![0, 2]),
+                )),
+        )
+        .unwrap();
+    assert_eq!(handle.pool.replicas().len(), 2);
+    let me = sys.scoped();
+    for i in 0..8u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    assert_eq!(launched_on(&mgr, 1), 0, "device 1 is outside the subset");
+    assert_eq!(launched_on(&mgr, 0) + launched_on(&mgr, 2), 8);
+    // invalid subsets are clean spawn-time errors
+    let bad = |ids: Vec<usize>| {
+        mgr.spawn_cl(
+            KernelSpawn::new(program.clone(), "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(
+                    ReplicaSet::new(PlacementPolicy::RoundRobin).on_devices(ids),
+                )),
+        )
+        .unwrap_err()
+        .to_string()
+    };
+    assert!(bad(vec![7]).contains("not in the inventory"));
+    assert!(bad(vec![]).contains("empty"));
+    assert!(bad(vec![0, 0]).contains("twice"));
+    teardown(sys, mgr);
+}
+
+#[test]
+fn cost_aware_steers_small_requests_off_the_expensive_device() {
+    // the Fig 7b lesson as a routed decision: device 1 carries a Phi-like
+    // 30 ms dispatch pad, device 0 dispatches for free. RoundRobin pays
+    // the pad on every second request; CostAware never does.
+    let sys = ActorSystem::new(
+        SystemConfig::default()
+            .with_threads(4)
+            .with_artifacts_dir(stub_artifacts("costaware")),
+    );
+    let specs = vec![
+        sim_spec("fast", Duration::ZERO),
+        sim_spec("phi-like", Duration::from_millis(30)),
+    ];
+    let mgr = Manager::load_with(&sys, specs);
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let worker = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::replicated(PlacementPolicy::CostAware)),
+        )
+        .unwrap();
+    let me = sys.scoped();
+    for i in 0..8u32 {
+        let out: Vec<u32> = me.request(&worker, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    assert_eq!(launched_on(&mgr, 0), 8, "all requests go to the cheap device");
+    assert_eq!(launched_on(&mgr, 1), 0, "the Phi-like pad is steered around");
+    teardown(sys, mgr);
+}
+
+#[test]
+fn empty_pipeline_build_is_an_err_not_a_panic() {
+    let (sys, mgr) = system("empty-pipe", 1, Duration::ZERO);
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let err = caf_ocl::opencl::stage::PipelineBuilder::new(&mgr, program)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("at least one stage"), "got: {err}");
     teardown(sys, mgr);
 }
 
@@ -410,13 +695,7 @@ fn batcher_shutdown_flush_loses_no_promises() {
     // let the facade admit both into the open window
     std::thread::sleep(Duration::from_millis(300));
     // terminate the facade: the dropped batcher must flush, not lose them
-    worker.send_from(
-        None,
-        Message::new(Exit {
-            source: 0,
-            reason: ExitReason::Error("shutdown".into()),
-        }),
-    );
+    worker.send_from(None, Message::new(Exit::fault("shutdown")));
     let out_a: Vec<u32> = pa.receive(T).expect("promise must survive shutdown");
     let out_b: Vec<u32> = pb.receive(T).expect("promise must survive shutdown");
     assert_eq!(out_a, a);
@@ -457,7 +736,7 @@ fn batching_composes_with_replication() {
             KernelSpawn::new(program, "copy_u32")
                 .inputs(Mode::Val, 1)
                 .output(Mode::Val)
-                .placement(Placement::Replicated(PlacementPolicy::RoundRobin))
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin))
                 .batched(BatchConfig {
                     max_requests: 2,
                     max_delay: Duration::from_millis(50),
