@@ -22,8 +22,9 @@
 //! tier-1 twin is `cargo test --test perf_dispatch`.
 
 use caf_ocl::bench::{
-    dispatch_batching_probe, dispatch_costaware_probe, dispatch_placement_probe,
-    write_costaware_manifest, write_dispatch_json, write_dispatch_manifest,
+    dispatch_batched_costaware_probe, dispatch_batching_probe, dispatch_costaware_probe,
+    dispatch_placement_probe, write_batched_costaware_manifest, write_costaware_manifest,
+    write_dispatch_json, write_dispatch_manifest, BatchedCostAwareProbeConfig,
     CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
 };
 use std::time::Duration;
@@ -92,6 +93,35 @@ fn main() {
         );
     }
 
+    // batched steering (occupancy-gauge routing) + multi-shape coalescing:
+    // the same Fig 7b pair, but every replica fronts an adaptive batcher —
+    // launch counts are per-flush, and the dispatcher's depth signal is
+    // the occupancy gauge the batchers publish
+    let bc_cfg = BatchedCostAwareProbeConfig {
+        request_elems: 64,
+        requests: if smoke { 6 } else { 8 },
+        batch_max_requests: 2,
+        batch_max_delay: Duration::from_millis(100),
+        alt_elems: 128,
+        per_class: if smoke { 3 } else { 4 },
+        artifacts_dir: write_batched_costaware_manifest("bench", 1024),
+    };
+    let bc = dispatch_batched_costaware_probe(&bc_cfg);
+    println!(
+        "batched costaware: CostAware fast/slow {}/{} @ {:>8.1} req/s  |  \
+         RoundRobin fast/slow {}/{} @ {:>8.1} req/s  |  \
+         multishape {} reqs -> {} fused launches ({:.2} reqs/launch)",
+        bc.costaware_fast_launches,
+        bc.costaware_slow_launches,
+        bc.costaware_reqs_per_sec,
+        bc.round_robin_fast_launches,
+        bc.round_robin_slow_launches,
+        bc.round_robin_reqs_per_sec,
+        bc.multishape_requests,
+        bc.multishape_fused_launches,
+        bc.multishape_coalescing_ratio
+    );
+
     let results = DispatchResults {
         devices: cfg.devices,
         requests: cfg.requests,
@@ -104,6 +134,7 @@ fn main() {
         batched_reqs_per_sec: batched,
         cost_aware_small: ca_small,
         cost_aware_large: ca_large,
+        batched_costaware: bc,
     };
     match write_dispatch_json(&results, "cargo bench --bench dispatch") {
         Ok(p) => println!("-> {}", p.display()),

@@ -640,12 +640,15 @@ pub fn write_costaware_manifest(tag: &str, small_elems: usize, large_elems: usiz
 
 /// Run one burst of `requests` × `elems`-element requests under `policy`
 /// on the steering pair; returns (fast launches, slow launches, req/s).
+/// With `batching` set, every replica fronts an adaptive batcher and the
+/// per-device launch counts are *flush* counts.
 fn costaware_run(
     artifacts_dir: &str,
     kernel: &str,
     elems: usize,
     requests: usize,
     policy: crate::opencl::PlacementPolicy,
+    batching: Option<crate::opencl::BatchConfig>,
 ) -> (u64, u64, f64) {
     use crate::opencl::{Manager, Placement};
     let sys = crate::actor::ActorSystem::new(
@@ -655,7 +658,7 @@ fn costaware_run(
     );
     let (fast, slow) = crate::sim::devices::steering_pair();
     let mgr = Manager::load_with(&sys, vec![fast, slow]);
-    let worker = dispatch_spawn_kernel(&mgr, kernel, Placement::replicated(policy), None);
+    let worker = dispatch_spawn_kernel(&mgr, kernel, Placement::replicated(policy), batching);
     let payloads: Vec<Vec<u32>> = (0..requests).map(|i| vec![i as u32; elems]).collect();
     let rps = dispatch_drive(&sys, &worker, payloads);
     let fast_launches = mgr.device(0).expect("fast device").queue.stats().launched();
@@ -669,10 +672,22 @@ fn costaware_run(
 pub fn dispatch_costaware_probe(cfg: &CostAwareProbeConfig) -> (CostAwareSide, CostAwareSide) {
     use crate::opencl::PlacementPolicy;
     let side = |kernel: &str, elems: usize, requests: usize| {
-        let (ca_f, ca_s, ca_r) =
-            costaware_run(&cfg.artifacts_dir, kernel, elems, requests, PlacementPolicy::CostAware);
-        let (rr_f, rr_s, rr_r) =
-            costaware_run(&cfg.artifacts_dir, kernel, elems, requests, PlacementPolicy::RoundRobin);
+        let (ca_f, ca_s, ca_r) = costaware_run(
+            &cfg.artifacts_dir,
+            kernel,
+            elems,
+            requests,
+            PlacementPolicy::CostAware,
+            None,
+        );
+        let (rr_f, rr_s, rr_r) = costaware_run(
+            &cfg.artifacts_dir,
+            kernel,
+            elems,
+            requests,
+            PlacementPolicy::RoundRobin,
+            None,
+        );
         CostAwareSide {
             requests,
             request_elems: elems,
@@ -687,6 +702,185 @@ pub fn dispatch_costaware_probe(cfg: &CostAwareProbeConfig) -> (CostAwareSide, C
     let small = side("copy_small_u32", cfg.small_elems, cfg.small_requests);
     let large = side("copy_large_u32", cfg.large_elems, cfg.large_requests);
     (small, large)
+}
+
+// ---------------------------------------------------------------------------
+// Batched cost-aware steering (PERF.md): the Fig 7b probe with batching
+// replicas. Routing a batched pool cannot use the dispatcher's routed
+// estimate (one flush serves many requests), so CostAware/LeastInflight
+// read the occupancy gauge the batcher publishes into the device
+// ExecStats. The probe shows the steering survives batching: small
+// requests still avoid the Phi-like device under CostAware while
+// RoundRobin pays its pad per window. A second measurement drives one
+// batched facade with two interleaved request shapes and records the
+// multi-shape coalescing ratio (requests per fused launch) — per-class
+// sub-batches fuse each shape with its peers instead of force-flushing
+// the other shape's window.
+// ---------------------------------------------------------------------------
+
+/// Config of the batched steering + multi-shape coalescing probe.
+#[derive(Clone, Debug)]
+pub struct BatchedCostAwareProbeConfig {
+    /// Elements per small request (dispatch-dominated).
+    pub request_elems: usize,
+    /// Requests in the steering burst.
+    pub requests: usize,
+    /// Per-class count trigger of every replica's batcher.
+    pub batch_max_requests: usize,
+    /// Per-class time trigger (safety valve for uneven routing).
+    pub batch_max_delay: std::time::Duration,
+    /// Second request shape for the multi-shape measurement.
+    pub alt_elems: usize,
+    /// Requests per shape class in the multi-shape measurement.
+    pub per_class: usize,
+    /// Artifacts dir holding the probe's stub manifest.
+    pub artifacts_dir: String,
+}
+
+/// Results of the batched steering + multi-shape coalescing probe.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchedCostAwareResult {
+    pub requests: usize,
+    pub request_elems: usize,
+    /// Per-device FLUSH counts under each policy (a batched launch covers
+    /// a whole window, so these are coalesced-launch distributions).
+    pub costaware_fast_launches: u64,
+    pub costaware_slow_launches: u64,
+    pub costaware_reqs_per_sec: f64,
+    pub round_robin_fast_launches: u64,
+    pub round_robin_slow_launches: u64,
+    pub round_robin_reqs_per_sec: f64,
+    /// Multi-shape coalescing: interleaved requests of two shapes.
+    pub multishape_requests: usize,
+    pub multishape_classes: usize,
+    pub multishape_fused_launches: u64,
+    /// Requests per fused launch (== per_class when both windows fuse).
+    pub multishape_coalescing_ratio: f64,
+}
+
+/// Write the batched steering probe's stub manifest; returns the path.
+pub fn write_batched_costaware_manifest(tag: &str, capacity: usize) -> String {
+    write_stub_manifest(
+        &format!("batched-costaware-{tag}"),
+        &format!("copy_b_u32|emu|u32:{capacity}|u32:{capacity}|emu=identity n={capacity}\n"),
+    )
+}
+
+/// Interleave two request shapes through ONE batched facade on one
+/// simulated device; returns (requests, fused launches) — the multi-shape
+/// coalescing measurement. With per-class windows the interleaved burst
+/// fuses into exactly one launch per shape class.
+fn multishape_coalescing_run(
+    artifacts_dir: &str,
+    kernel: &str,
+    elems_a: usize,
+    elems_b: usize,
+    per_class: usize,
+    max_delay: std::time::Duration,
+) -> (usize, u64) {
+    use crate::opencl::{
+        BatchConfig, DeviceInfo, DeviceKind, DeviceSpec, FacadeStats, KernelSpawn, Manager,
+        Mode,
+    };
+    use crate::runtime::client::PadModel;
+    let sys = crate::actor::ActorSystem::new(
+        crate::actor::SystemConfig::default()
+            .with_threads(4)
+            .with_artifacts_dir(artifacts_dir.to_string()),
+    );
+    let spec = DeviceSpec {
+        name: "multishape-sim".to_string(),
+        kind: DeviceKind::Gpu,
+        info: DeviceInfo {
+            compute_units: 8,
+            max_work_items_per_cu: 1024,
+        },
+        pad: Some(PadModel {
+            launch: std::time::Duration::from_millis(1),
+            bytes_per_sec: 0.0,
+            compute_scale: 1.0,
+            busy_wait: false,
+        }),
+    };
+    let mgr = Manager::load_with(&sys, vec![spec]);
+    let program = mgr.create_kernel_program(kernel).expect("stub program");
+    let stats = std::sync::Arc::new(FacadeStats::default());
+    let worker = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, kernel)
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .with_stats(stats.clone())
+                .batched(BatchConfig {
+                    max_requests: per_class,
+                    max_delay,
+                }),
+        )
+        .expect("multishape batched spawn");
+    let payloads: Vec<Vec<u32>> = (0..per_class * 2)
+        .map(|i| {
+            let elems = if i % 2 == 0 { elems_a } else { elems_b };
+            vec![i as u32; elems]
+        })
+        .collect();
+    let n = payloads.len();
+    let _ = dispatch_drive(&sys, &worker, payloads);
+    let launches = stats.launched.load(std::sync::atomic::Ordering::Relaxed);
+    mgr.stop_devices();
+    sys.shutdown();
+    (n, launches)
+}
+
+/// The batched steering + multi-shape coalescing probe.
+pub fn dispatch_batched_costaware_probe(
+    cfg: &BatchedCostAwareProbeConfig,
+) -> BatchedCostAwareResult {
+    use crate::opencl::{BatchConfig, PlacementPolicy};
+    let batch = BatchConfig {
+        max_requests: cfg.batch_max_requests,
+        max_delay: cfg.batch_max_delay,
+    };
+    let (ca_f, ca_s, ca_r) = costaware_run(
+        &cfg.artifacts_dir,
+        "copy_b_u32",
+        cfg.request_elems,
+        cfg.requests,
+        PlacementPolicy::CostAware,
+        Some(batch),
+    );
+    let (rr_f, rr_s, rr_r) = costaware_run(
+        &cfg.artifacts_dir,
+        "copy_b_u32",
+        cfg.request_elems,
+        cfg.requests,
+        PlacementPolicy::RoundRobin,
+        Some(batch),
+    );
+    // a long time valve keeps the measurement deterministic: every class
+    // fills its count window (all requests are in flight), so the timer
+    // must never split a window on a descheduled CI runner
+    let (ms_requests, ms_launches) = multishape_coalescing_run(
+        &cfg.artifacts_dir,
+        "copy_b_u32",
+        cfg.request_elems,
+        cfg.alt_elems,
+        cfg.per_class,
+        std::time::Duration::from_secs(30),
+    );
+    BatchedCostAwareResult {
+        requests: cfg.requests,
+        request_elems: cfg.request_elems,
+        costaware_fast_launches: ca_f,
+        costaware_slow_launches: ca_s,
+        costaware_reqs_per_sec: ca_r,
+        round_robin_fast_launches: rr_f,
+        round_robin_slow_launches: rr_s,
+        round_robin_reqs_per_sec: rr_r,
+        multishape_requests: ms_requests,
+        multishape_classes: 2,
+        multishape_fused_launches: ms_launches,
+        multishape_coalescing_ratio: ms_requests as f64 / (ms_launches as f64).max(1.0),
+    }
 }
 
 /// Results of one `cargo bench --bench dispatch` run.
@@ -714,6 +908,9 @@ pub struct DispatchResults {
     pub cost_aware_small: CostAwareSide,
     /// Cost-aware steering, large (transfer-dominated) requests.
     pub cost_aware_large: CostAwareSide,
+    /// Cost-aware steering over BATCHED replicas (occupancy-gauge routing)
+    /// plus the multi-shape coalescing measurement.
+    pub batched_costaware: BatchedCostAwareResult,
 }
 
 /// Write `BENCH_dispatch.json` (repo root when run from `rust/`, else the
@@ -748,6 +945,29 @@ pub fn write_dispatch_json(
             s.round_robin_reqs_per_sec
         )
     };
+    let bc = &r.batched_costaware;
+    let batched_costaware_json = format!(
+        "{{\"devices\": [\"steer-fast\", \"steer-phi\"],\n    \
+         \"requests\": {}, \"request_elems\": {},\n    \
+         \"costaware\": {{\"fast_launches\": {}, \"slow_launches\": {}, \
+         \"reqs_per_sec\": {:.1}}},\n    \
+         \"round_robin\": {{\"fast_launches\": {}, \"slow_launches\": {}, \
+         \"reqs_per_sec\": {:.1}}},\n    \
+         \"multishape\": {{\"requests\": {}, \"classes\": {}, \
+         \"fused_launches\": {}, \"coalescing_ratio\": {:.3}}}}}",
+        bc.requests,
+        bc.request_elems,
+        bc.costaware_fast_launches,
+        bc.costaware_slow_launches,
+        bc.costaware_reqs_per_sec,
+        bc.round_robin_fast_launches,
+        bc.round_robin_slow_launches,
+        bc.round_robin_reqs_per_sec,
+        bc.multishape_requests,
+        bc.multishape_classes,
+        bc.multishape_fused_launches,
+        bc.multishape_coalescing_ratio
+    );
     let json = format!(
         "{{\n  \"bench\": \"dispatch\",\n  \"generated_by\": {generated_by:?},\n  \
          \"placement\": {{\"devices\": {}, \"requests\": {}, \
@@ -757,7 +977,8 @@ pub fn write_dispatch_json(
          \"unbatched_reqs_per_sec\": {:.1}, \"batched_reqs_per_sec\": {:.1}, \
          \"speedup\": {:.3}}},\n  \
          \"cost_aware\": {{\"devices\": [\"steer-fast\", \"steer-phi\"],\n    \
-         \"small\": {},\n    \"large\": {}}}\n}}\n",
+         \"small\": {},\n    \"large\": {}}},\n  \
+         \"batched_costaware\": {}\n}}\n",
         r.devices,
         r.requests,
         r.one_device_reqs_per_sec,
@@ -770,7 +991,8 @@ pub fn write_dispatch_json(
         r.batched_reqs_per_sec,
         batching_speedup,
         side_json(&r.cost_aware_small),
-        side_json(&r.cost_aware_large)
+        side_json(&r.cost_aware_large),
+        batched_costaware_json
     );
     std::fs::write(&path, json)?;
     Ok(path)

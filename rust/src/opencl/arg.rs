@@ -151,6 +151,19 @@ pub fn extract_args(msg: &Message) -> Option<Vec<ArgValue>> {
     None
 }
 
+/// Shape signature of an argument list: per-argument element counts plus
+/// the dtype per argument — the identity of a batching *shape class* (two
+/// requests coalesce into one fused launch iff their signatures match).
+/// The dtype half is pinned to the manifest by per-request validation, so
+/// for one kernel it is constant; keying on it anyway keeps class identity
+/// self-contained rather than implicit in the kernel.
+pub(crate) fn shape_sig(args: &[ArgValue]) -> (Vec<usize>, Vec<Dtype>) {
+    (
+        args.iter().map(|a| a.len()).collect(),
+        args.iter().map(|a| a.dtype()).collect(),
+    )
+}
+
 /// Affinity + cost inputs of one message, computed WITHOUT cloning any
 /// payload data (`extract_args` deep-copies plain vectors, which would
 /// double the per-message copy cost on the routed hot path just to learn
@@ -277,6 +290,15 @@ mod tests {
         let a: ArgValue = vec![1u32, 2].into();
         assert!(!a.is_ref());
         assert_eq!(a.to_host(), Some(HostData::U32(vec![1, 2])));
+    }
+
+    #[test]
+    fn shape_sig_reports_lengths_and_dtypes_per_argument() {
+        let args: Vec<ArgValue> = vec![vec![1u32, 2, 3].into(), vec![1.5f32].into()];
+        let (lens, dtypes) = shape_sig(&args);
+        assert_eq!(lens, vec![3, 1]);
+        assert_eq!(dtypes, vec![Dtype::U32, Dtype::F32]);
+        assert_eq!(shape_sig(&[]), (Vec::new(), Vec::new()));
     }
 
     #[test]

@@ -12,23 +12,44 @@
 //! command channel once. When the launch completes, each requester receives
 //! exactly its slice of the output through its own [`ResponsePromise`].
 //!
-//! Padding reuses the device cost model's notion of capacity: a batch is
-//! zero-padded up to the kernel's manifest shape, so the simulated
-//! [`PadModel`](crate::runtime::client::PadModel) charges the same
-//! fixed-size transfer the unbatched path pays per request — the win is
-//! paying it once per *window* instead of once per message.
+//! **Shape classes.** Requests are coalesced per *shape class*: the
+//! per-argument element counts plus the dtype signature
+//! ([`ClassKey`]). Each class owns its own window with independent
+//! count/time/capacity triggers and its own generation counter, so a
+//! kernel serving several request shapes — including *multi-shape* kernels
+//! whose manifest inputs and output have different element counts —
+//! coalesces each shape with its same-shaped peers instead of rejecting
+//! them or letting one shape force-flush another's half-filled window.
+//! Within a request, every argument must be the same *fraction* of its
+//! manifest capacity (a uniform scale-down of the kernel shape); for the
+//! common all-same-capacity kernel this degenerates to the old "one common
+//! length per request" rule.
 //!
-//! Batching is restricted to val-mode elementwise kernels (all operands and
-//! the output share one shape); `KernelSpawn::validate_on` enforces this at
-//! spawn time. A terminating facade flushes its pending window from `Drop`,
-//! so shutdown loses no promises: the batch either launches (requesters get
-//! their slices) or, if the device queue is already gone, every promise
-//! falls back to the broken-promise error.
+//! Padding reuses the device cost model's notion of capacity: a batch is
+//! zero-padded up to the kernel's manifest shape (per input), so the
+//! simulated [`PadModel`](crate::runtime::client::PadModel) charges the
+//! same fixed-size transfer the unbatched path pays per request — the win
+//! is paying it once per *window* instead of once per message.
+//!
+//! **Occupancy gauge.** The batcher publishes its load into the device's
+//! [`ExecStats::batch_pending`](crate::runtime::ExecStats) gauge: requests
+//! admitted but not yet flushed, plus flushed-but-unretired launches
+//! scaled by their request count. The placement tier reads it as the
+//! queue-depth signal for batched replicas (`DevicePool::depth`), where
+//! the dispatcher's own routed-minus-retired estimate can never reconcile
+//! per-request routing against per-flush launches.
+//!
+//! Batching is restricted to val-mode kernels; `KernelSpawn::validate_on`
+//! enforces this at spawn time. A terminating facade flushes every pending
+//! window from `Drop`, so shutdown loses no promises: each batch either
+//! launches (requesters get their slices) or, if the device queue is
+//! already gone, every admitted promise is failed with a routed error —
+//! never a silent timeout.
 //!
 //! [`DeviceQueue::execute_fused`]: crate::runtime::DeviceQueue::execute_fused
 //! [`ResponsePromise`]: crate::actor::request::ResponsePromise
 
-use super::arg::{extract_args, ArgValue};
+use super::arg::{extract_args, shape_sig, ArgValue};
 use super::device::Device;
 use super::facade::{FacadeStats, KernelSpawn, PostFn};
 use crate::actor::cell::lock;
@@ -36,18 +57,22 @@ use crate::actor::request::ResponsePromise;
 use crate::actor::{no_reply, ActorRef, ActorSystem, Behavior, ErrorMsg, Message, Reply};
 use crate::runtime::artifact::{ArtifactMeta, Dtype};
 use crate::runtime::{HostData, UploadSrc};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Batching window configuration.
+/// Batching window configuration (per shape class).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchConfig {
-    /// Flush when this many requests are pending (count trigger).
+    /// Flush a class when this many of its requests are pending (count
+    /// trigger).
     pub max_requests: usize,
-    /// Flush when the oldest pending request has waited this long (time
-    /// trigger; armed when a window opens).
+    /// Flush a class when its oldest pending request has waited this long
+    /// (time trigger; armed when the class's window opens). A zero delay
+    /// flushes synchronously inside `admit` — a lone request never pays a
+    /// timer hop.
     pub max_delay: Duration,
 }
 
@@ -60,11 +85,29 @@ impl Default for BatchConfig {
     }
 }
 
-/// Timer payload arming the time trigger; `gen` identifies the window it
-/// was armed for, so a tick that arrives after that window already flushed
-/// is a no-op.
-#[derive(Clone, Copy, Debug)]
+/// Identity of a sub-batch shape class: the per-argument element counts of
+/// one request plus its dtype signature. Requests coalesce iff their keys
+/// match — equal keys concatenate per argument position without any
+/// cross-request alignment hazard.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct ClassKey {
+    /// Element count per argument (manifest input order).
+    lens: Vec<usize>,
+    /// Dtype per argument. Per-request validation pins these to the
+    /// manifest, so all admitted requests of one kernel share them —
+    /// carried anyway so class identity is self-contained.
+    dtypes: Vec<Dtype>,
+}
+
+/// Timer payload arming a class's time trigger; `gen` identifies the
+/// window incarnation it was armed for, so a tick that arrives after that
+/// window already flushed (count/capacity trigger won the race) is a pure
+/// generation compare and a no-op — even when a NEW window of the same
+/// class has opened in the meantime, because generations persist per class
+/// instead of restarting at zero.
+#[derive(Clone, Debug)]
 struct FlushTick {
+    class: ClassKey,
     gen: u64,
 }
 
@@ -72,7 +115,31 @@ struct PendingReq {
     promise: ResponsePromise,
     incoming: Message,
     args: Vec<ArgValue>,
-    len: usize,
+}
+
+/// One shape class's open window. Entries persist across flushes (pending
+/// cleared, generation bumped) so stale timer ticks can never alias a
+/// successor window; the map grows with the number of *distinct shapes
+/// seen*, a handful of small vectors per class.
+struct Window {
+    pending: Vec<PendingReq>,
+    /// Elements of argument 0 accumulated across `pending`.
+    elems: usize,
+    /// Output slice length every request of this class receives.
+    out_len: usize,
+    /// Window generation: bumped on every flush of THIS class.
+    gen: u64,
+}
+
+impl Window {
+    fn new(out_len: usize) -> Window {
+        Window {
+            pending: Vec::new(),
+            elems: 0,
+            out_len,
+            gen: 0,
+        }
+    }
 }
 
 struct BatchState {
@@ -81,56 +148,123 @@ struct BatchState {
     post: Option<PostFn>,
     stats: Option<Arc<FacadeStats>>,
     cfg: BatchConfig,
-    /// Kernel capacity in elements (the manifest shape all operands share).
-    capacity: usize,
-    pending: Vec<PendingReq>,
-    /// Elements accumulated across `pending` (per input).
-    elems: usize,
-    /// Window generation: bumped on every flush; stale `FlushTick`s
-    /// compare unequal and do nothing.
-    gen: u64,
+    /// Kernel capacity in elements, per input (the manifest shapes).
+    caps: Vec<usize>,
+    /// Output capacity in elements.
+    out_cap: usize,
+    /// Per-class sub-batches.
+    classes: HashMap<ClassKey, Window>,
 }
 
 impl BatchState {
-    /// Admit one validated request. Returns `Some(gen)` when the caller
-    /// must arm the time trigger for the window this request opened.
+    /// Admit one validated request into its class's window. Returns
+    /// `Some((class, gen))` when the caller must arm the time trigger for
+    /// the window this request opened.
     fn admit(
         &mut self,
+        key: ClassKey,
+        out_len: usize,
         args: Vec<ArgValue>,
         promise: ResponsePromise,
         incoming: Message,
-    ) -> Option<u64> {
-        let k = args[0].len();
-        // a request that no longer fits closes the current window first
-        if !self.pending.is_empty() && self.elems + k > self.capacity {
-            self.flush();
+    ) -> Option<(ClassKey, u64)> {
+        let k0 = key.lens[0];
+        let cap0 = self.caps[0];
+        // a same-class request that no longer fits closes that class's
+        // window first (other classes' windows are untouched — no
+        // cross-shape force-flush)
+        let needs_preflush = self
+            .classes
+            .get(&key)
+            .map(|w| !w.pending.is_empty() && w.elems + k0 > cap0)
+            .unwrap_or(false);
+        if needs_preflush {
+            self.flush_class(&key);
         }
-        self.pending.push(PendingReq {
-            promise,
-            incoming,
-            args,
-            len: k,
-        });
-        self.elems += k;
-        if self.elems >= self.capacity || self.pending.len() >= self.cfg.max_requests.max(1) {
-            self.flush();
-            None
-        } else if self.pending.len() == 1 {
-            Some(self.gen)
-        } else {
-            None
+        // publish occupancy the moment the request is owned by a window;
+        // the flush completion (or refusal) retires it
+        self.device.queue.stats().note_batch_admitted(1);
+        let max_requests = self.cfg.max_requests.max(1);
+        let (full, arm) = {
+            let w = self
+                .classes
+                .entry(key.clone())
+                .or_insert_with(|| Window::new(out_len));
+            w.pending.push(PendingReq {
+                promise,
+                incoming,
+                args,
+            });
+            w.elems += k0;
+            let full = w.elems >= cap0 || w.pending.len() >= max_requests;
+            let arm = if !full && w.pending.len() == 1 {
+                Some(w.gen)
+            } else {
+                None
+            };
+            (full, arm)
+        };
+        if full || self.cfg.max_delay.is_zero() {
+            // zero max_delay flushes synchronously: the old code still
+            // scheduled a FlushTick, so a lone request paid a full timer
+            // hop before launching
+            self.flush_class(&key);
+            return None;
+        }
+        arm.map(|gen| (key, gen))
+    }
+
+    /// Time trigger for one class. Returns whether it flushed; a stale
+    /// generation (or an already-empty window) is a pure compare and does
+    /// nothing.
+    fn on_tick(&mut self, class: &ClassKey, gen: u64) -> bool {
+        let live = self
+            .classes
+            .get(class)
+            .map(|w| w.gen == gen && !w.pending.is_empty())
+            .unwrap_or(false);
+        if live {
+            self.flush_class(class);
+        }
+        live
+    }
+
+    /// Coalesce one class's pending window into a padded fused launch and
+    /// scatter the output slices back to the requesters on completion.
+    fn flush_class(&mut self, key: &ClassKey) {
+        let Some(w) = self.classes.get_mut(key) else {
+            return;
+        };
+        if w.pending.is_empty() {
+            return;
+        }
+        w.gen = w.gen.wrapping_add(1);
+        let reqs = std::mem::take(&mut w.pending);
+        w.elems = 0;
+        let out_len = w.out_len;
+        self.launch(reqs, out_len);
+    }
+
+    /// Flush every class with pending requests (the `Drop` path).
+    fn flush_all(&mut self) {
+        let keys: Vec<ClassKey> = self
+            .classes
+            .iter()
+            .filter(|(_, w)| !w.pending.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in keys {
+            self.flush_class(&k);
         }
     }
 
-    /// Coalesce the pending window into one padded fused launch and
-    /// scatter the output slices back to the requesters on completion.
-    fn flush(&mut self) {
-        if self.pending.is_empty() {
-            return;
-        }
-        self.gen = self.gen.wrapping_add(1);
-        let reqs = std::mem::take(&mut self.pending);
-        self.elems = 0;
+    /// Submit one gathered window: concatenate per argument position, pad
+    /// each position to ITS manifest capacity, launch fused, scatter
+    /// `out_len`-sized output slices. Every admitted promise resolves
+    /// exactly once on every path — completion, kernel failure, or a
+    /// closed device queue refusing the submission.
+    fn launch(&self, reqs: Vec<PendingReq>, out_len: usize) {
+        let n = reqs.len() as u64;
         let mut srcs: Vec<UploadSrc> = Vec::with_capacity(self.meta.inputs.len());
         for (j, spec) in self.meta.inputs.iter().enumerate() {
             match spec.dtype {
@@ -158,19 +292,34 @@ impl BatchState {
         }
         // one command for upload+execute, one for the read-back
         let queue = self.device.queue.clone();
-        let (out_id, _done) = queue.execute_fused(&self.meta.name, srcs, self.meta.output.dtype);
+        let (out_id, done) = queue.execute_fused(&self.meta.name, srcs, self.meta.output.dtype);
         let mut slices = Vec::with_capacity(reqs.len());
         let mut off = 0usize;
         for r in reqs {
-            slices.push((r.promise, r.incoming, off, r.len));
-            off += r.len;
+            slices.push((r.promise, r.incoming, off, out_len));
+            off += out_len;
+        }
+        if let Some(Err(e)) = done.poll() {
+            // the submission was refused (closed device queue) or failed
+            // before we got here: the download below would be refused too,
+            // so fail every requester NOW with a real error — the
+            // Drop-flush-against-a-stopped-device path must resolve every
+            // admitted promise, never leave one to time out
+            queue.stats().note_batch_retired(n);
+            for (promise, _incoming, _off, _len) in slices {
+                promise.deliver_err(ErrorMsg::new(format!("batched launch failed: {e}")));
+            }
+            return;
         }
         let post = self.post.clone();
         let stats = self.stats.clone();
         let t_enqueue = Instant::now();
         let q2 = queue.clone();
-        queue.download_with(out_id, move |res| {
+        let enqueued = queue.download_with(out_id, move |res| {
             q2.free(out_id);
+            // the window's requests retire from the occupancy gauge as one
+            // unit, whether the launch succeeded or not
+            q2.stats().note_batch_retired(n);
             if let Some(st) = &stats {
                 // one launch per flush: `launched` is the coalescing metric
                 st.launched.fetch_add(1, Ordering::Relaxed);
@@ -204,14 +353,21 @@ impl BatchState {
                 }
             }
         });
+        if !enqueued {
+            // the queue closed between the (accepted) launch and the
+            // read-back: the dropped callback already broke its captured
+            // promises (each requester got a broken-promise error), so
+            // only the occupancy gauge still needs settling here
+            queue.stats().note_batch_retired(n);
+        }
     }
 }
 
 impl Drop for BatchState {
     fn drop(&mut self) {
-        // shutdown flush: a terminating facade launches its pending window
-        // instead of losing it (see the module docs)
-        self.flush();
+        // shutdown flush: a terminating facade launches its pending
+        // windows instead of losing them (see the module docs)
+        self.flush_all();
     }
 }
 
@@ -234,10 +390,49 @@ fn default_msg(arg: ArgValue) -> Message {
     }
 }
 
+/// Per-input and output capacities of a batching kernel's manifest shape.
+/// A zero-input or zero-element manifest is a clean `Err` — the spawn path
+/// must never index `meta.inputs[0]` unguarded (the same convention as the
+/// `check_args` zero-input fix and the `.first().map(..).unwrap_or(0)`
+/// guard in `KernelSpawn::validate_on`).
+fn batch_capacities(meta: &ArtifactMeta) -> Result<(Vec<usize>, usize), String> {
+    let caps: Vec<usize> = meta.inputs.iter().map(|s| s.elems()).collect();
+    if caps.is_empty() {
+        return Err(format!(
+            "kernel {}: batching requires at least one input",
+            meta.name
+        ));
+    }
+    if caps.iter().any(|&c| c == 0) {
+        return Err(format!(
+            "kernel {}: batching requires non-empty input shapes",
+            meta.name
+        ));
+    }
+    let out_cap = meta.output.elems();
+    if out_cap == 0 {
+        return Err(format!(
+            "kernel {}: batching requires a non-empty output shape",
+            meta.name
+        ));
+    }
+    Ok((caps, out_cap))
+}
+
 /// Per-request validation against the kernel signature (the batched analog
-/// of `Command::check`): val-only, matching dtypes, one common length per
-/// request, within the kernel capacity.
-fn check_args(meta: &ArtifactMeta, capacity: usize, args: &[ArgValue]) -> Result<usize, String> {
+/// of `Command::check`): val-only, matching dtypes, and per-class shape
+/// validation — every argument must be the same fraction of its manifest
+/// capacity (the request is a uniform scale-down of the kernel shape, so
+/// same-class requests concatenate per position and the output slices out
+/// evenly). For all-same-capacity kernels this reduces to the old "one
+/// common length = capacity shape" rule. Returns the request's
+/// [`ClassKey`] and its output slice length.
+fn check_args(
+    meta: &ArtifactMeta,
+    caps: &[usize],
+    out_cap: usize,
+    args: &[ArgValue],
+) -> Result<(ClassKey, usize), String> {
     if args.len() != meta.inputs.len() {
         return Err(format!(
             "kernel {} expects {} arguments, message carries {}",
@@ -271,25 +466,37 @@ fn check_args(meta: &ArtifactMeta, capacity: usize, args: &[ArgValue]) -> Result
                 a.dtype().name()
             ));
         }
-        if a.len() != k {
+        // uniform scale-down: len_i / caps[i] == k / caps[0], exactly
+        if a.len() * caps[0] != k * caps[i] {
             return Err(format!(
-                "kernel {} argument {i}: batch slice of {} elements, argument 0 has {}",
+                "kernel {} argument {i}: batch slice of {} elements does not match \
+                 argument 0's scale ({k} of capacity {}; argument {i} capacity {})",
                 meta.name,
                 a.len(),
-                k
+                caps[0],
+                caps[i]
             ));
         }
     }
     if k == 0 {
         return Err(format!("kernel {}: empty request", meta.name));
     }
-    if k > capacity {
+    if k > caps[0] {
         return Err(format!(
-            "kernel {}: request of {k} elements exceeds kernel capacity {capacity}",
-            meta.name
+            "kernel {}: request of {k} elements exceeds kernel capacity {}",
+            meta.name, caps[0]
         ));
     }
-    Ok(k)
+    if (k * out_cap) % caps[0] != 0 || (k * out_cap) / caps[0] == 0 {
+        return Err(format!(
+            "kernel {}: request of {k} elements does not scale the output shape \
+             ({out_cap} elements per {} of input) to a whole slice",
+            meta.name, caps[0]
+        ));
+    }
+    let out_len = (k * out_cap) / caps[0];
+    let (lens, dtypes) = shape_sig(args);
+    Ok((ClassKey { lens, dtypes }, out_len))
 }
 
 /// Spawn a batching facade bound to `device` (the replica entry point used
@@ -301,7 +508,9 @@ pub(crate) fn spawn_batching_facade(
 ) -> Result<ActorRef> {
     let meta = cfg.program.kernel(&cfg.kernel)?.clone();
     let bcfg = cfg.batching.unwrap_or_default();
-    let capacity = meta.inputs[0].elems();
+    // guard the capacity derivation: a zero-input manifest used to panic
+    // here on `meta.inputs[0]` before any validation could reject it
+    let (caps, out_cap) = batch_capacities(&meta).map_err(|e| anyhow!(e))?;
     let pre = cfg.pre.clone();
     let post = cfg.post.clone();
     let stats = cfg.stats.clone();
@@ -313,19 +522,15 @@ pub(crate) fn spawn_batching_facade(
             post,
             stats,
             cfg: bcfg,
-            capacity,
-            pending: Vec::new(),
-            elems: 0,
-            gen: 0,
+            caps,
+            out_cap,
+            classes: HashMap::new(),
         }));
         let tick_state = state.clone();
         Behavior::new()
             .on(move |_ctx, tick: &FlushTick| {
-                let mut st = lock(&tick_state);
-                if tick.gen == st.gen {
-                    // the window this tick was armed for is still open
-                    st.flush();
-                }
+                // stale ticks are a pure per-class generation compare
+                lock(&tick_state).on_tick(&tick.class, tick.gen);
                 no_reply()
             })
             .on_any(move |ctx, msg| {
@@ -342,16 +547,18 @@ pub(crate) fn spawn_batching_facade(
                     return Reply::Promised;
                 };
                 let mut st = lock(&state);
-                match check_args(&st.meta, st.capacity, &args) {
-                    Ok(_k) => {
+                match check_args(&st.meta, &st.caps, st.out_cap, &args) {
+                    Ok((key, out_len)) => {
                         let promise = ctx.make_promise();
-                        if let Some(gen) = st.admit(args, promise, msg.clone()) {
+                        if let Some((class, gen)) =
+                            st.admit(key, out_len, args, promise, msg.clone())
+                        {
                             let delay = st.cfg.max_delay;
                             drop(st);
                             ctx.system().timer().schedule(
                                 delay,
                                 ctx.me(),
-                                Message::new(FlushTick { gen }),
+                                Message::new(FlushTick { class, gen }),
                             );
                         }
                     }
@@ -369,7 +576,9 @@ pub(crate) fn spawn_batching_facade(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::opencl::device::{DeviceInfo, DeviceKind};
     use crate::runtime::artifact::TensorSpec;
+    use crate::runtime::HostOp;
     use std::collections::HashMap;
 
     fn meta_1in(capacity: usize) -> ArtifactMeta {
@@ -388,23 +597,57 @@ mod tests {
         }
     }
 
+    /// Kernel with non-uniform shapes: inputs 8 and 4 elements, output 8.
+    fn meta_multishape() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "ms".to_string(),
+            file: "emu".to_string(),
+            inputs: vec![
+                TensorSpec {
+                    dtype: Dtype::U32,
+                    dims: vec![8],
+                },
+                TensorSpec {
+                    dtype: Dtype::U32,
+                    dims: vec![4],
+                },
+            ],
+            output: TensorSpec {
+                dtype: Dtype::U32,
+                dims: vec![8],
+            },
+            extras: HashMap::new(),
+        }
+    }
+
+    fn checked(
+        meta: &ArtifactMeta,
+        args: &[ArgValue],
+    ) -> Result<(ClassKey, usize), String> {
+        let (caps, out_cap) = batch_capacities(meta).unwrap();
+        check_args(meta, &caps, out_cap, args)
+    }
+
     #[test]
     fn check_args_validates_shape_and_mode() {
         let meta = meta_1in(8);
         let ok: Vec<ArgValue> = vec![vec![1u32, 2, 3].into()];
-        assert_eq!(check_args(&meta, 8, &ok), Ok(3));
+        let (key, out_len) = checked(&meta, &ok).unwrap();
+        assert_eq!(key.lens, vec![3]);
+        assert_eq!(key.dtypes, vec![Dtype::U32]);
+        assert_eq!(out_len, 3);
         let too_big: Vec<ArgValue> = vec![vec![0u32; 9].into()];
-        assert!(check_args(&meta, 8, &too_big)
+        assert!(checked(&meta, &too_big)
             .unwrap_err()
             .contains("exceeds kernel capacity"));
         let wrong_dtype: Vec<ArgValue> = vec![vec![0f32; 4].into()];
-        assert!(check_args(&meta, 8, &wrong_dtype)
+        assert!(checked(&meta, &wrong_dtype)
             .unwrap_err()
             .contains("expected u32"));
         let empty: Vec<ArgValue> = vec![Vec::<u32>::new().into()];
-        assert!(check_args(&meta, 8, &empty).unwrap_err().contains("empty"));
+        assert!(checked(&meta, &empty).unwrap_err().contains("empty"));
         let arity: Vec<ArgValue> = vec![];
-        assert!(check_args(&meta, 8, &arity)
+        assert!(checked(&meta, &arity)
             .unwrap_err()
             .contains("expects 1 arguments"));
     }
@@ -424,8 +667,66 @@ mod tests {
             },
             extras: HashMap::new(),
         };
-        let err = check_args(&meta, 8, &[]).unwrap_err();
+        let err = check_args(&meta, &[], 8, &[]).unwrap_err();
         assert!(err.contains("at least one input"), "got: {err}");
+    }
+
+    #[test]
+    fn batch_capacities_guard_zero_input_manifests() {
+        // the spawn-path twin of the check above: capacity derivation used
+        // to read meta.inputs[0] and panic before validation could reject
+        // the manifest
+        let mut meta = meta_1in(8);
+        meta.inputs.clear();
+        let err = batch_capacities(&meta).unwrap_err();
+        assert!(err.contains("at least one input"), "got: {err}");
+        let mut meta = meta_1in(8);
+        meta.inputs[0].dims = vec![0];
+        assert!(batch_capacities(&meta)
+            .unwrap_err()
+            .contains("non-empty input"));
+        let mut meta = meta_1in(8);
+        meta.output.dims = vec![0];
+        assert!(batch_capacities(&meta)
+            .unwrap_err()
+            .contains("non-empty output"));
+        assert_eq!(batch_capacities(&meta_multishape()).unwrap(), (vec![8, 4], 8));
+    }
+
+    #[test]
+    fn check_args_classes_multi_shape_requests_by_scale() {
+        // inputs 8/4, output 8: a half-scale request is (4, 2) -> out 4
+        let meta = meta_multishape();
+        let half: Vec<ArgValue> = vec![vec![1u32; 4].into(), vec![2u32; 2].into()];
+        let (key, out_len) = checked(&meta, &half).unwrap();
+        assert_eq!(key.lens, vec![4, 2]);
+        assert_eq!(out_len, 4);
+        // quarter scale is a DIFFERENT class
+        let quarter: Vec<ArgValue> = vec![vec![1u32; 2].into(), vec![2u32; 1].into()];
+        let (qkey, qout) = checked(&meta, &quarter).unwrap();
+        assert_ne!(qkey, key);
+        assert_eq!(qout, 2);
+        // disproportionate arguments are a clean per-request error
+        let skewed: Vec<ArgValue> = vec![vec![1u32; 4].into(), vec![2u32; 3].into()];
+        assert!(checked(&meta, &skewed).unwrap_err().contains("scale"));
+        // a request whose output slice would not divide evenly is rejected
+        let meta_odd = ArtifactMeta {
+            name: "odd".to_string(),
+            file: "emu".to_string(),
+            inputs: vec![TensorSpec {
+                dtype: Dtype::U32,
+                dims: vec![3],
+            }],
+            output: TensorSpec {
+                dtype: Dtype::U32,
+                dims: vec![2],
+            },
+            extras: HashMap::new(),
+        };
+        let one: Vec<ArgValue> = vec![vec![7u32].into()];
+        assert!(checked(&meta_odd, &one)
+            .unwrap_err()
+            .contains("output shape"));
     }
 
     #[test]
@@ -447,5 +748,164 @@ mod tests {
         let _held = payload.clone();
         let msg = default_msg(ArgValue::F32(payload));
         assert_eq!(msg.downcast_ref::<Vec<f32>>(), Some(&vec![1.5f32]));
+    }
+
+    // --- window mechanics against a real device queue -------------------
+
+    fn test_device(meta: &ArtifactMeta) -> Arc<Device> {
+        let dev = Device::start(
+            0,
+            "batch-unit",
+            DeviceKind::Cpu,
+            DeviceInfo {
+                compute_units: 1,
+                max_work_items_per_cu: 1,
+            },
+            None,
+        )
+        .unwrap();
+        dev.queue.compile_emulated(&meta.name, HostOp::Identity);
+        dev
+    }
+
+    fn state_of(dev: &Arc<Device>, meta: ArtifactMeta, cfg: BatchConfig) -> BatchState {
+        let (caps, out_cap) = batch_capacities(&meta).unwrap();
+        BatchState {
+            device: dev.clone(),
+            meta,
+            post: None,
+            stats: None,
+            cfg,
+            caps,
+            out_cap,
+            classes: HashMap::new(),
+        }
+    }
+
+    fn req(len: usize) -> Vec<ArgValue> {
+        vec![vec![1u32; len].into()]
+    }
+
+    fn admit(st: &mut BatchState, len: usize) -> Option<(ClassKey, u64)> {
+        let (key, out_len) = check_args(&st.meta, &st.caps, st.out_cap, &req(len)).unwrap();
+        st.admit(
+            key,
+            out_len,
+            req(len),
+            ResponsePromise::sink(),
+            Message::new(()),
+        )
+    }
+
+    #[test]
+    fn stale_tick_for_a_count_flushed_window_is_a_gen_compare_noop() {
+        let meta = meta_1in(64);
+        let dev = test_device(&meta);
+        let mut st = state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 2,
+                max_delay: Duration::from_secs(600),
+            },
+        );
+        // first request opens the window and asks for a timer at gen 0
+        let (key, gen) = admit(&mut st, 3).expect("first request arms the trigger");
+        assert_eq!(gen, 0);
+        // second request count-flushes the window before the tick fires
+        assert!(admit(&mut st, 3).is_none());
+        // the stale tick is a pure generation compare: no flush, no panic
+        assert!(!st.on_tick(&key, 0), "stale tick must be a no-op");
+        // a NEW window of the same class persists the class generation, so
+        // the old tick cannot alias it either
+        let (key2, gen2) = admit(&mut st, 3).expect("fresh window arms again");
+        assert_eq!(key2, key);
+        assert_eq!(gen2, 1, "class generations persist across windows");
+        assert!(!st.on_tick(&key, 0), "older-generation tick still a no-op");
+        assert!(st.on_tick(&key, 1), "the live generation's tick flushes");
+        dev.queue.barrier(Duration::from_secs(30)).unwrap();
+        assert_eq!(dev.queue.stats().launched(), 2);
+        assert_eq!(
+            dev.queue.stats().batch_occupancy(),
+            0,
+            "retired windows drain the occupancy gauge"
+        );
+        dev.queue.stop();
+    }
+
+    #[test]
+    fn zero_max_delay_flushes_synchronously_in_admit() {
+        let meta = meta_1in(64);
+        let dev = test_device(&meta);
+        let mut st = state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 1000,
+                max_delay: Duration::ZERO,
+            },
+        );
+        // no timer to arm, no pending residue: each admit launches
+        assert!(admit(&mut st, 5).is_none(), "zero delay must not arm a timer");
+        assert!(admit(&mut st, 5).is_none());
+        assert!(st.classes.values().all(|w| w.pending.is_empty()));
+        dev.queue.barrier(Duration::from_secs(30)).unwrap();
+        assert_eq!(dev.queue.stats().launched(), 2);
+        assert_eq!(dev.queue.stats().batch_occupancy(), 0);
+        dev.queue.stop();
+    }
+
+    #[test]
+    fn interleaved_classes_keep_separate_windows() {
+        let meta = meta_1in(64);
+        let dev = test_device(&meta);
+        let mut st = state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 2,
+                max_delay: Duration::from_secs(600),
+            },
+        );
+        // two classes interleave; neither force-flushes the other
+        assert!(admit(&mut st, 3).is_some(), "class A window opens");
+        assert!(admit(&mut st, 7).is_some(), "class B window opens");
+        assert_eq!(dev.queue.stats().batch_occupancy(), 2);
+        assert!(admit(&mut st, 3).is_none(), "class A count-flushes");
+        assert!(admit(&mut st, 7).is_none(), "class B count-flushes");
+        dev.queue.barrier(Duration::from_secs(30)).unwrap();
+        assert_eq!(
+            dev.queue.stats().launched(),
+            2,
+            "two classes -> two fused launches"
+        );
+        assert_eq!(dev.queue.stats().batch_occupancy(), 0);
+        dev.queue.stop();
+    }
+
+    #[test]
+    fn flush_against_a_closed_queue_drains_occupancy_and_promises() {
+        let meta = meta_1in(64);
+        let dev = test_device(&meta);
+        let mut st = state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 1000,
+                max_delay: Duration::from_secs(600),
+            },
+        );
+        let (key, _) = admit(&mut st, 4).unwrap();
+        let _ = admit(&mut st, 4);
+        assert_eq!(dev.queue.stats().batch_occupancy(), 2);
+        // the device dies before the window flushes
+        dev.queue.stop();
+        st.flush_class(&key);
+        assert_eq!(
+            dev.queue.stats().batch_occupancy(),
+            0,
+            "a refused flush must retire its requests from the gauge"
+        );
+        assert!(st.classes.values().all(|w| w.pending.is_empty()));
     }
 }

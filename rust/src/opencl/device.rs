@@ -48,6 +48,16 @@ pub struct Device {
 }
 
 impl Device {
+    /// Occupancy published by batching facades bound to this device, in
+    /// requests admitted but not yet retired
+    /// ([`ExecStats::batch_pending`](crate::runtime::ExecStats)) — the
+    /// placement tier's queue-depth signal for batched replicas, whose
+    /// per-flush launches make the dispatcher's per-request routed
+    /// estimate meaningless.
+    pub fn batch_occupancy(&self) -> u64 {
+        self.queue.stats().batch_occupancy()
+    }
+
     pub(crate) fn start(
         id: usize,
         name: &str,

@@ -155,9 +155,12 @@ impl KernelSpawn {
                 .map_err(|e| anyhow::anyhow!("nd_range: {e}"))?;
         }
         if self.batching.is_some() {
-            // the batcher concatenates requests elementwise and scatters
-            // output slices back, which is only meaningful for val-mode
-            // kernels whose operands all share one shape
+            // the batcher concatenates requests per argument position and
+            // scatters output slices back, which is only meaningful for
+            // val-mode kernels. Shapes need NOT be uniform: multi-shape
+            // kernels batch per shape class, with each request validated
+            // as a uniform scale-down of the manifest shape (see
+            // `super::batch`) — only empty shapes are unbatchable.
             if self.out_mode != Mode::Val || self.in_modes.iter().any(|m| *m == Mode::Ref) {
                 bail!(
                     "kernel {}: batching requires val-mode inputs and output",
@@ -168,10 +171,9 @@ impl KernelSpawn {
             if cap == 0 {
                 bail!("kernel {}: batching needs at least one input", self.kernel);
             }
-            if meta.inputs.iter().any(|s| s.elems() != cap) || meta.output.elems() != cap {
+            if meta.inputs.iter().any(|s| s.elems() == 0) || meta.output.elems() == 0 {
                 bail!(
-                    "kernel {}: batching requires uniform elementwise shapes \
-                     (all inputs and the output must have the same element count)",
+                    "kernel {}: batching requires non-empty input and output shapes",
                     self.kernel
                 );
             }

@@ -23,7 +23,11 @@
 //! * **Least-inflight** — reads the per-device queue-depth gauge
 //!   ([`ExecStats::inflight`](crate::runtime::ExecStats::inflight)) and
 //!   picks the shallowest queue, which is what spreads a burst of
-//!   sub-second requests across the whole inventory.
+//!   sub-second requests across the whole inventory. For *batched*
+//!   replicas the depth source is the occupancy gauge the batcher itself
+//!   publishes ([`ExecStats::batch_pending`](crate::runtime::ExecStats)) —
+//!   admitted-but-unretired requests — because per-request routed counts
+//!   can never reconcile against per-flush launches.
 //! * **Cost-aware** — scores each live replica by estimated completion
 //!   time (simulated dispatch latency + transfer time for the message's
 //!   byte size + queue depth × mean service time from the per-device
@@ -41,10 +45,14 @@
 //! messages must not skew least-inflight forever), answers affinity
 //! traffic whose `Ref`s are stranded on the dead device with a routed
 //! error, and — when the spawn's [`RespawnPolicy`] says so — respawns the
-//! facade by recompiling the program on that device. Requests already
-//! delegated to a dying facade are never lost silently: its closing
-//! mailbox bounces them with an `actor terminated` error, so every routed
-//! request gets a reply or an error, exactly once.
+//! facade by recompiling the program on that device.
+//! [`RespawnPolicy::Limited`] bounds that: each rebuild waits an
+//! exponentially growing backoff, and once the per-replica budget is
+//! spent the replica is retired permanently instead of crash-looping
+//! compiles on the helper thread forever. Requests already delegated to a
+//! dying facade are never lost silently: its closing mailbox bounces them
+//! with an `actor terminated` error, so every routed request gets a reply
+//! or an error, exactly once.
 //!
 //! [`Manager::spawn_cl`]: super::manager::Manager::spawn_cl
 
@@ -155,8 +163,39 @@ pub enum RespawnPolicy {
     #[default]
     Never,
     /// Recompile the program on the replica's device and respawn the
-    /// facade; routing resumes once the new facade is installed.
+    /// facade on EVERY death, immediately and forever — the unbounded
+    /// alias of [`Limited`](RespawnPolicy::Limited). A replica whose
+    /// program deterministically fails will recompile on the helper
+    /// thread on every death; prefer `Limited` when that is a concern.
     Always,
+    /// Respawn at most `max` times per replica, sleeping an exponentially
+    /// growing backoff before each rebuild (`backoff`, `2*backoff`,
+    /// `4*backoff`, ...). A death after the budget is spent marks the
+    /// replica *permanently dead* ([`Replica::is_retired`]): it is never
+    /// rebuilt again, its traffic reroutes to the survivors, and the
+    /// crash-loop stops burning the helper thread on doomed compiles.
+    Limited { max: u32, backoff: Duration },
+}
+
+impl RespawnPolicy {
+    /// Backoff to sleep before rebuild attempt `n` (1-based), or `None`
+    /// when the policy does not allow another attempt.
+    fn delay_for(self, n: u64) -> Option<Duration> {
+        match self {
+            RespawnPolicy::Never => None,
+            RespawnPolicy::Always => Some(Duration::ZERO),
+            RespawnPolicy::Limited { max, backoff } => {
+                if n > max as u64 {
+                    return None;
+                }
+                // exponential: backoff * 2^(n-1), saturating (the shift is
+                // clamped so a huge attempt count cannot overflow the
+                // multiplier before saturating_mul can clamp the product)
+                let shift = (n - 1).min(31) as u32;
+                Some(backoff.saturating_mul(1u32 << shift))
+            }
+        }
+    }
 }
 
 /// One replica of a replicated OpenCL actor: the device it is bound to and
@@ -177,6 +216,12 @@ pub struct Replica {
     alive: AtomicBool,
     /// Successful respawns of this replica (diagnostics/tests).
     respawns: AtomicU64,
+    /// Rebuild attempts started (deaths that triggered a respawn) — what
+    /// [`RespawnPolicy::Limited`] budgets against.
+    attempts: AtomicU64,
+    /// Permanently dead: the limited respawn budget is exhausted. Never
+    /// rebuilt again (`alive` stays false for routing).
+    retired: AtomicBool,
 }
 
 impl Replica {
@@ -187,6 +232,8 @@ impl Replica {
             routed: AtomicU64::new(0),
             alive: AtomicBool::new(true),
             respawns: AtomicU64::new(0),
+            attempts: AtomicU64::new(0),
+            retired: AtomicBool::new(false),
         }
     }
 
@@ -203,6 +250,26 @@ impl Replica {
     pub fn respawns(&self) -> u64 {
         self.respawns.load(Ordering::Relaxed)
     }
+
+    /// Rebuild attempts started so far (cumulative across the replica's
+    /// lifetime — [`RespawnPolicy::Limited`] budgets deaths, not
+    /// consecutive failures, so a replica that keeps crashing converges on
+    /// retirement instead of oscillating forever).
+    pub fn respawn_attempts(&self) -> u64 {
+        self.attempts.load(Ordering::Relaxed)
+    }
+
+    /// Permanently dead: the limited respawn budget is exhausted and this
+    /// replica will never be rebuilt.
+    pub fn is_retired(&self) -> bool {
+        self.retired.load(Ordering::Acquire)
+    }
+
+    /// Count one rebuild-or-retire decision; returns the 1-based attempt
+    /// number.
+    fn note_attempt(&self) -> u64 {
+        self.attempts.fetch_add(1, Ordering::Relaxed) + 1
+    }
 }
 
 /// The replica set + policy a dispatcher routes over.
@@ -210,12 +277,14 @@ pub struct DevicePool {
     replicas: Vec<Replica>,
     policy: PlacementPolicy,
     next_rr: AtomicUsize,
-    /// Whether [`depth`](DevicePool::depth) may use the routed-minus-
-    /// retired estimate. Off for batched replicas: the dispatcher counts
+    /// Whether the replicas are batching facades. The dispatcher counts
     /// `routed` once per *request* but a batcher launches once per
-    /// *flush*, so the two totals never reconcile and the residue would
-    /// permanently skew least-inflight routing.
-    routed_estimate: bool,
+    /// *flush*, so the routed-minus-retired estimate can never reconcile
+    /// there and its residue would permanently skew least-inflight
+    /// routing; instead, [`depth`](DevicePool::depth) reads the occupancy
+    /// gauge the batcher itself publishes
+    /// ([`ExecStats::batch_pending`](crate::runtime::ExecStats)).
+    batched: bool,
 }
 
 impl DevicePool {
@@ -229,14 +298,16 @@ impl DevicePool {
             replicas,
             policy,
             next_rr: AtomicUsize::new(0),
-            routed_estimate: true,
+            batched: false,
         })
     }
 
-    /// Toggle the routed-depth estimate (see the field docs; the spawn
-    /// path turns it off for batched replicas).
-    pub fn set_routed_estimate(&mut self, on: bool) {
-        self.routed_estimate = on;
+    /// Mark the pool as fronting batching facades: the depth signal
+    /// switches from the dispatcher's routed estimate to the batchers'
+    /// published occupancy gauge (see the field docs; the spawn path sets
+    /// this for `KernelSpawn::batched` replicas).
+    pub fn set_batched(&mut self, on: bool) {
+        self.batched = on;
     }
 
     pub fn replicas(&self) -> &[Replica] {
@@ -276,6 +347,13 @@ impl DevicePool {
         self.drain_routed(i);
         r.alive.store(true, Ordering::Release);
         r.respawns.fetch_add(1, Ordering::Release);
+    }
+
+    /// Permanently retire replica `i`: its [`RespawnPolicy::Limited`]
+    /// budget is exhausted, so it is never rebuilt and never selected
+    /// again (`mark_dead` already took it out of rotation).
+    pub fn retire(&self, i: usize) {
+        self.replicas[i].retired.store(true, Ordering::Release);
     }
 
     /// Re-sync a replica's routed counter to the device's retired count:
@@ -343,10 +421,15 @@ impl DevicePool {
     pub fn depth(&self, i: usize) -> u64 {
         let r = &self.replicas[i];
         let stats = r.device.queue.stats();
-        if !self.routed_estimate {
+        if self.batched {
             // batched replicas: one flush serves many routed requests, so
-            // only the device's own gauge is meaningful
-            return stats.inflight();
+            // the dispatcher's routed counter cannot reconcile. The real
+            // signal is the occupancy gauge the batcher publishes —
+            // admitted-but-unflushed requests plus flushed-but-unretired
+            // launches scaled by their request count — blended (max) with
+            // the device's own launch gauge, which still covers unbatched
+            // co-tenants sharing the device queue.
+            return r.device.batch_occupancy().max(stats.inflight());
         }
         let retired = stats.launched().saturating_sub(stats.inflight());
         stats
@@ -364,6 +447,12 @@ impl DevicePool {
     /// None`, the real-hardware case) with a cold EWMA would score 0 at
     /// ANY depth, and a whole burst would pile onto one replica while its
     /// peers idle instead of degrading to least-depth spreading.
+    ///
+    /// For **batched** pools, `depth` counts *requests* (the occupancy
+    /// gauge) while the EWMA measures per-*flush* service, so the product
+    /// overestimates drain time by roughly the coalescing factor. The bias
+    /// is monotone in load, which is all a ranking policy needs — and it
+    /// errs toward spreading, never toward piling onto a busy batcher.
     pub fn cost_estimate(&self, i: usize, bytes: usize) -> f64 {
         const SERVICE_EPSILON: f64 = 1e-6;
         let r = &self.replicas[i];
@@ -467,6 +556,8 @@ struct Respawner {
     manifest: Manifest,
     timeout: Duration,
     base: KernelSpawn,
+    /// Budget + backoff schedule ([`RespawnPolicy::delay_for`]).
+    policy: RespawnPolicy,
 }
 
 impl Respawner {
@@ -572,20 +663,69 @@ pub(crate) fn spawn_replicated(
     }
     let mut pool = DevicePool::new(replicas, set.policy)?;
     if cfg.batching.is_some() {
-        pool.set_routed_estimate(false);
+        pool.set_batched(true);
     }
     let pool = Arc::new(pool);
     let respawner = match set.respawn {
         RespawnPolicy::Never => None,
-        RespawnPolicy::Always => Some(Arc::new(Respawner {
+        policy => Some(Arc::new(Respawner {
             sys: sys.clone(),
             manifest: platform.manifest.clone(),
             timeout,
             base: cfg.clone(),
+            policy,
         })),
     };
     let actor = spawn_dispatcher(&sys, pool.clone(), respawner, cfg.pre.clone(), cfg.kernel);
     Ok(ReplicatedHandle { actor, pool })
+}
+
+/// Consume one unit of replica `i`'s respawn budget and either start a
+/// rebuild or retire the replica permanently. The rebuild runs on a helper
+/// thread — it sleeps the policy's exponential backoff, recompiles the
+/// program on the replica's device (blocking up to `build_timeout`), and
+/// reports back to the dispatcher as a [`Respawned`] message — so routing
+/// to the healthy replicas never stalls behind a backoff or a compile (a
+/// crash-looping replica must not turn one death into a full outage, and
+/// must stop burning compiles once `Limited` says so: the ROADMAP
+/// crash-loop item).
+fn start_rebuild(
+    pool: &Arc<DevicePool>,
+    respawner: &Arc<Respawner>,
+    kernel: &str,
+    i: usize,
+    me: ActorRef,
+) {
+    let dev = pool.replicas()[i].device.clone();
+    let attempt = pool.replicas()[i].note_attempt();
+    let Some(backoff) = respawner.policy.delay_for(attempt) else {
+        pool.retire(i);
+        log::error!(
+            "kernel {kernel}: replica on device {} exhausted its respawn budget \
+             after {} attempts; permanently dead",
+            dev.id,
+            attempt.saturating_sub(1)
+        );
+        return;
+    };
+    // exactly one rebuild in flight per death: mark_dead cannot match this
+    // replica again until install flips it back alive, and a failed
+    // rebuild re-enters through the dispatcher's Respawned handler
+    let r = respawner.clone();
+    let spawned = std::thread::Builder::new()
+        .name("replica-respawn".into())
+        .spawn(move || {
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            let facade = r.respawn(&dev).map_err(|e| e.to_string());
+            me.send_from(None, Message::new(Respawned { replica: i, facade }));
+        });
+    if let Err(e) = spawned {
+        log::error!(
+            "kernel {kernel}: could not start respawn thread: {e}; replica stays down"
+        );
+    }
 }
 
 /// The dispatcher: an ordinary event-based actor that routes each message
@@ -611,6 +751,7 @@ fn spawn_dispatcher(
         let down_kernel = kernel.clone();
         let inst_pool = pool.clone();
         let inst_kernel = kernel.clone();
+        let inst_respawner = respawner.clone();
         Behavior::new()
             .on(move |ctx, d: &Down| {
                 let Some(i) = down_pool.mark_dead(d.source) else {
@@ -626,29 +767,7 @@ fn spawn_dispatcher(
                     d.reason
                 );
                 if let Some(r) = &respawner {
-                    // rebuild off the dispatcher: routing must keep flowing
-                    // to the survivors while the compile runs (it blocks up
-                    // to build_timeout). The helper reports back with a
-                    // `Respawned` message; exactly one rebuild per death —
-                    // mark_dead cannot match this replica again until the
-                    // install flips it back alive.
-                    let r = r.clone();
-                    let me = ctx.me();
-                    let spawned = std::thread::Builder::new()
-                        .name("replica-respawn".into())
-                        .spawn(move || {
-                            let facade = r.respawn(&dev).map_err(|e| e.to_string());
-                            me.send_from(
-                                None,
-                                Message::new(Respawned { replica: i, facade }),
-                            );
-                        });
-                    if let Err(e) = spawned {
-                        log::error!(
-                            "kernel {down_kernel}: could not start respawn thread: {e}; \
-                             replica stays down"
-                        );
-                    }
+                    start_rebuild(&down_pool, r, &down_kernel, i, ctx.me());
                 }
                 no_reply()
             })
@@ -663,13 +782,29 @@ fn spawn_dispatcher(
                             dev.id
                         );
                     }
-                    Err(e) => {
-                        log::error!(
-                            "kernel {inst_kernel}: respawn on device {} failed: {e}; \
-                             replica stays down",
-                            dev.id
-                        );
-                    }
+                    Err(e) => match &inst_respawner {
+                        // a failed rebuild consumes budget like a death:
+                        // `Limited` retries with its backoff until the
+                        // budget is spent, then retires the replica.
+                        // `Always` keeps its historical behavior — one
+                        // failed compile leaves the replica down rather
+                        // than looping a deterministic failure forever.
+                        Some(rs) if matches!(rs.policy, RespawnPolicy::Limited { .. }) => {
+                            log::error!(
+                                "kernel {inst_kernel}: respawn on device {} failed: {e}; \
+                                 retrying within the respawn budget",
+                                dev.id
+                            );
+                            start_rebuild(&inst_pool, rs, &inst_kernel, r.replica, ctx.me());
+                        }
+                        _ => {
+                            log::error!(
+                                "kernel {inst_kernel}: respawn on device {} failed: {e}; \
+                                 replica stays down",
+                                dev.id
+                            );
+                        }
+                    },
                 }
                 no_reply()
             })
@@ -830,21 +965,86 @@ mod tests {
     }
 
     #[test]
-    fn batched_pools_ignore_the_routed_estimate() {
+    fn batched_pools_use_the_published_occupancy_gauge() {
         // a batcher launches once per flush, so per-request routed counts
-        // can never reconcile against `launched`; with the estimate off,
-        // depth falls back to the raw device gauge
+        // can never reconcile against `launched`; batched pools ignore the
+        // routed residue and read the occupancy gauge the batcher
+        // publishes into the device's ExecStats instead
         let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
         let d0 = test_device(0, None);
         let d1 = test_device(1, None);
         let mut pool =
             pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::LeastInflight);
-        pool.set_routed_estimate(false);
+        pool.set_batched(true);
         for _ in 0..5 {
             pool.note_routed(0);
         }
         assert_eq!(pool.depth(0), 0, "routed residue must not count");
         assert_eq!(pool.route(&[], 0).unwrap(), 0, "idle devices tie to first");
+        // a batcher on device 0 publishes three admitted-but-unflushed
+        // requests: depth follows the gauge, and selection routes around
+        d0.queue.stats().note_batch_admitted(3);
+        assert_eq!(pool.depth(0), 3, "occupancy gauge is the depth signal");
+        assert_eq!(pool.route(&[], 0).unwrap(), 1, "occupied batcher is avoided");
+        // CostAware ranks by the same depth signal
+        let mut cost_pool =
+            pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::CostAware);
+        cost_pool.set_batched(true);
+        assert_eq!(cost_pool.route(&[], 64).unwrap(), 1, "cost ranks occupancy");
+        d0.queue.stats().note_batch_retired(3);
+        assert_eq!(pool.depth(0), 0, "retired requests drain the gauge");
+        // saturating drain: an over-release cannot wrap the gauge
+        d0.queue.stats().note_batch_retired(100);
+        assert_eq!(pool.depth(0), 0);
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn limited_respawn_schedule_backs_off_exponentially_then_gives_up() {
+        let p = RespawnPolicy::Limited {
+            max: 3,
+            backoff: Duration::from_millis(10),
+        };
+        assert_eq!(p.delay_for(1), Some(Duration::from_millis(10)));
+        assert_eq!(p.delay_for(2), Some(Duration::from_millis(20)));
+        assert_eq!(p.delay_for(3), Some(Duration::from_millis(40)));
+        assert_eq!(p.delay_for(4), None, "budget spent");
+        assert_eq!(p.delay_for(u64::MAX), None);
+        // Always is the unbounded alias: immediate, forever
+        assert_eq!(RespawnPolicy::Always.delay_for(1), Some(Duration::ZERO));
+        assert_eq!(
+            RespawnPolicy::Always.delay_for(1_000_000),
+            Some(Duration::ZERO)
+        );
+        assert_eq!(RespawnPolicy::Never.delay_for(1), None);
+        // a huge attempt count saturates instead of overflowing
+        let p = RespawnPolicy::Limited {
+            max: u32::MAX,
+            backoff: Duration::from_secs(3600),
+        };
+        assert!(p.delay_for(63).is_some());
+    }
+
+    #[test]
+    fn retired_replicas_stay_out_of_rotation() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::RoundRobin);
+        let id0 = pool.replicas()[0].facade().id();
+        pool.mark_dead(id0).unwrap();
+        pool.retire(0);
+        assert!(pool.replicas()[0].is_retired());
+        assert!(!pool.replicas()[0].is_alive());
+        for _ in 0..4 {
+            assert_eq!(pool.route(&[], 0).unwrap(), 1);
+        }
+        // attempt accounting is cumulative and observable
+        assert_eq!(pool.replicas()[0].respawn_attempts(), 0);
+        assert_eq!(pool.replicas()[0].note_attempt(), 1);
+        assert_eq!(pool.replicas()[0].respawn_attempts(), 1);
         d0.queue.stop();
         d1.queue.stop();
         sys.shutdown();

@@ -14,7 +14,7 @@
 use super::artifact::Dtype;
 use super::chan::Chan;
 use super::event::Event;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -183,6 +183,20 @@ impl HostOp {
         }
     }
 
+    /// Whether every input must share one element count. Exhaustive on
+    /// purpose: a new op must decide explicitly instead of inheriting a
+    /// fail-open default.
+    fn requires_uniform_shapes(self) -> bool {
+        match self {
+            // passes input 0 through verbatim; trailing inputs may be
+            // differently shaped (multi-shape kernels batch per class and
+            // land here with proportional, not equal, lengths)
+            HostOp::Identity => false,
+            // elementwise fold across all inputs
+            HostOp::Add => true,
+        }
+    }
+
     fn apply(self, inputs: &[HostData], out_dtype: Dtype) -> Result<HostData, String> {
         let first = inputs
             .first()
@@ -195,7 +209,7 @@ impl HostOp {
                     out_dtype
                 ));
             }
-            if d.len() != first.len() {
+            if self.requires_uniform_shapes() && d.len() != first.len() {
                 return Err(format!(
                     "input {i} has {} elements, input 0 has {}",
                     d.len(),
@@ -303,6 +317,15 @@ pub struct ExecStats {
     /// term. Single-writer (the queue thread); 0 until the first launch
     /// retires.
     pub ewma_service_ns: AtomicU64,
+    /// Occupancy published by val-mode batchers bound to this device, in
+    /// REQUESTS: window entries admitted but not yet flushed, plus
+    /// flushed-but-unretired launches scaled by their request count. This
+    /// is the placement tier's queue-depth signal for *batched* replicas —
+    /// the dispatcher counts routed messages per request but a batcher
+    /// launches once per flush, so its routed-minus-retired estimate can
+    /// never reconcile there, and `launched`/`inflight` alone undercount a
+    /// window that has not flushed yet.
+    pub batch_pending: AtomicU64,
     pub execs: AtomicU64,
     pub exec_ns: AtomicU64,
     pub uploads: AtomicU64,
@@ -334,6 +357,28 @@ impl ExecStats {
     /// EWMA of per-launch service time (zero until a launch retired).
     pub fn ewma_service(&self) -> Duration {
         Duration::from_nanos(self.ewma_service_ns.load(Ordering::Relaxed))
+    }
+
+    /// Batcher-published occupancy in requests (see [`ExecStats::batch_pending`]).
+    pub fn batch_occupancy(&self) -> u64 {
+        self.batch_pending.load(Ordering::Relaxed)
+    }
+
+    /// Record `n` requests admitted into a batching window on this device.
+    pub(crate) fn note_batch_admitted(&self, n: u64) {
+        self.batch_pending.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` batched requests retired (their flush completed, failed,
+    /// or was refused by a closed queue). Saturating: the gauge is a
+    /// routing heuristic, and wrapping it to u64::MAX on an accounting bug
+    /// would freeze a replica out of rotation forever.
+    pub(crate) fn note_batch_retired(&self, n: u64) {
+        let _ = self
+            .batch_pending
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
     }
 
     /// Fold one retired launch's service time into the EWMA (queue-thread
@@ -671,24 +716,32 @@ impl DeviceQueue {
 
     /// Asynchronous download; the callback runs on the queue thread (the
     /// OpenCL completion-callback pattern — never call blocking queue ops
-    /// from inside it).
-    pub fn download_with<F>(&self, id: u64, f: F)
+    /// from inside it). Returns whether the command was accepted: a closed
+    /// queue refuses it and DROPS the callback un-run (any promises it
+    /// captured resolve through their own drop path), so callers that keep
+    /// side accounting — e.g. the batcher's occupancy gauge — must settle
+    /// it when this returns `false`.
+    pub fn download_with<F>(&self, id: u64, f: F) -> bool
     where
         F: FnOnce(Result<HostData, String>) + Send + 'static,
     {
         self.push(QueueCmd::Download {
             id,
             and_then: Box::new(f),
-        });
+        })
     }
 
     /// Blocking download (must not be called from the queue thread itself).
     pub fn download(&self, id: u64, timeout: Duration) -> Result<HostData> {
         let reply: Chan<Result<HostData, String>> = Chan::new();
         let r2 = reply.clone();
-        self.download_with(id, move |res| {
+        if !self.download_with(id, move |res| {
             r2.push(res);
-        });
+        }) {
+            // refused by the closed queue: the callback will never run, so
+            // fail now instead of sitting out the whole timeout
+            bail!("device queue {} is closed", self.name);
+        }
         reply
             .pop_timeout(timeout)
             .ok_or_else(|| anyhow!("download timed out"))?

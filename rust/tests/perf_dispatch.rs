@@ -14,8 +14,9 @@
 //! gauge is wall-clock and sleep pads overshoot under load.
 
 use caf_ocl::bench::{
-    dispatch_batching_probe, dispatch_costaware_probe, dispatch_placement_probe,
-    write_costaware_manifest, write_dispatch_json, write_dispatch_manifest,
+    dispatch_batched_costaware_probe, dispatch_batching_probe, dispatch_costaware_probe,
+    dispatch_placement_probe, write_batched_costaware_manifest, write_costaware_manifest,
+    write_dispatch_json, write_dispatch_manifest, BatchedCostAwareProbeConfig,
     CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
 };
 use std::time::Duration;
@@ -44,6 +45,23 @@ fn dispatch_records_placement_and_batching_throughput() {
         artifacts_dir: write_costaware_manifest("tier1", 64, 1 << 16),
     };
     let (ca_small, ca_large) = dispatch_costaware_probe(&ca_cfg);
+    // batched steering pair: every replica fronts an adaptive batcher, so
+    // routing must read the occupancy gauge (the routed estimate cannot
+    // reconcile per-request routing against per-flush launches) — the
+    // burst stays far below the depth where spilling to the slow device
+    // becomes cheaper, so the comparative assert below is deterministic
+    // (RoundRobin lands 6 requests = 3 windows on the slow device, so a
+    // single noise-induced CostAware diversion cannot flip the comparison)
+    let bc_cfg = BatchedCostAwareProbeConfig {
+        request_elems: 64,
+        requests: 12,
+        batch_max_requests: 2,
+        batch_max_delay: Duration::from_millis(100),
+        alt_elems: 128,
+        per_class: 3,
+        artifacts_dir: write_batched_costaware_manifest("tier1", 1024),
+    };
+    let bc = dispatch_batched_costaware_probe(&bc_cfg);
     for v in [
         one_device,
         n_device,
@@ -53,6 +71,8 @@ fn dispatch_records_placement_and_batching_throughput() {
         ca_small.round_robin_reqs_per_sec,
         ca_large.costaware_reqs_per_sec,
         ca_large.round_robin_reqs_per_sec,
+        bc.costaware_reqs_per_sec,
+        bc.round_robin_reqs_per_sec,
     ] {
         assert!(v.is_finite() && v > 0.0, "degenerate throughput {v}");
     }
@@ -77,6 +97,33 @@ fn dispatch_records_placement_and_batching_throughput() {
         ca_small.round_robin_slow_launches > 0,
         "RoundRobin must (by construction) pay the Phi-like pad"
     );
+    // acceptance: the steering survives batching. On a BATCHED replicated
+    // pool, CostAware must land strictly fewer small-request launches on
+    // the slow device than RoundRobin (comparative form, like the
+    // unbatched gate above — launch counts here are per-flush).
+    assert!(
+        bc.costaware_slow_launches < bc.round_robin_slow_launches,
+        "batched CostAware must steer the small burst away from the Phi-like \
+         device (CostAware slow={}, RoundRobin slow={})",
+        bc.costaware_slow_launches,
+        bc.round_robin_slow_launches
+    );
+    assert!(
+        bc.round_robin_slow_launches > 0,
+        "batched RoundRobin must (by construction) flush windows on the slow device"
+    );
+    // acceptance: a multi-shape interleaved burst coalesces per class —
+    // exactly one fused launch per shape class (count triggers fill both
+    // windows deterministically), never one launch per request
+    assert_eq!(
+        bc.multishape_fused_launches, bc.multishape_classes as u64,
+        "interleaved shape classes must fuse into one launch per class"
+    );
+    assert!(
+        bc.multishape_coalescing_ratio > 1.0,
+        "coalescing ratio must beat one request per launch (got {:.2})",
+        bc.multishape_coalescing_ratio
+    );
     let results = DispatchResults {
         devices: cfg.devices,
         requests: cfg.requests,
@@ -89,6 +136,7 @@ fn dispatch_records_placement_and_batching_throughput() {
         batched_reqs_per_sec: batched,
         cost_aware_small: ca_small,
         cost_aware_large: ca_large,
+        batched_costaware: bc,
     };
     let path = write_dispatch_json(&results, "cargo test --test perf_dispatch")
         .expect("write BENCH_dispatch.json");
@@ -96,16 +144,26 @@ fn dispatch_records_placement_and_batching_throughput() {
     assert!(written.contains("\"placement\""));
     assert!(written.contains("\"batching\""));
     assert!(written.contains("\"cost_aware\""));
+    assert!(written.contains("\"batched_costaware\""));
+    assert!(written.contains("\"multishape\""));
     println!(
         "dispatch: placement {one_device:.1} -> {n_device:.1} req/s ({:.2}x), \
          batching {unbatched:.1} -> {batched:.1} req/s ({:.2}x), \
-         costaware small fast/slow {}/{} vs RR {}/{} -> {}",
+         costaware small fast/slow {}/{} vs RR {}/{}, \
+         batched costaware fast/slow {}/{} vs RR {}/{}, \
+         multishape {} reqs -> {} launches -> {}",
         n_device / one_device.max(1e-9),
         batched / unbatched.max(1e-9),
         ca_small.costaware_fast_launches,
         ca_small.costaware_slow_launches,
         ca_small.round_robin_fast_launches,
         ca_small.round_robin_slow_launches,
+        bc.costaware_fast_launches,
+        bc.costaware_slow_launches,
+        bc.round_robin_fast_launches,
+        bc.round_robin_slow_launches,
+        bc.multishape_requests,
+        bc.multishape_fused_launches,
         path.display()
     );
     // Opt-in comparison bounds (see perf_msgring for why they are not in
@@ -127,6 +185,14 @@ fn dispatch_records_placement_and_batching_throughput() {
         assert_eq!(
             ca_small.costaware_slow_launches, 0,
             "on a quiet machine the small burst avoids the slow device entirely"
+        );
+        assert!(
+            bc.costaware_reqs_per_sec > bc.round_robin_reqs_per_sec,
+            "batched steering around the Phi-like pad must beat rotating into it"
+        );
+        assert_eq!(
+            bc.costaware_slow_launches, 0,
+            "on a quiet machine the batched burst avoids the slow device entirely"
         );
     }
 }

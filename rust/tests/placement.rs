@@ -1,11 +1,16 @@
 //! Placement & batching tests: replica fan-out across simulated devices,
 //! affinity routing of device-resident refs, least-inflight and cost-aware
-//! selection, batcher window triggers (count, capacity, timer, shutdown),
-//! the fallible discovery paths (`try_platform`, empty inventory), and the
-//! fault-injection suite — a replica killed mid-burst must never lose a
-//! request (reply or routed error, exactly once), its stale routed-depth
-//! estimate must drain, and `RespawnPolicy::Always` must restore N-way
-//! distribution.
+//! selection, batcher window triggers (count, capacity, timer, shutdown,
+//! zero-delay synchronous flush), shape-classed sub-batching (interleaved
+//! request shapes and genuinely multi-shape kernels coalesce per class
+//! with exact slices), the batcher's occupancy gauge, the fallible
+//! discovery paths (`try_platform`, empty inventory), and the
+//! fault-injection suite — a replica killed mid-burst (batched or not)
+//! must never lose a request (reply or routed error, exactly once), its
+//! stale routed-depth estimate and occupancy must drain,
+//! `RespawnPolicy::Always` must restore N-way distribution, and
+//! `RespawnPolicy::Limited` must retire a crash-looping replica after its
+//! budget.
 //!
 //! Everything runs on host-emulated kernels (`emu=` manifest extras) over
 //! simulated devices, so the suite needs no artifacts and no real XLA
@@ -19,6 +24,8 @@ use std::time::Duration;
 
 const T: Duration = Duration::from_secs(30);
 const CAP: usize = 1024;
+/// Second-input capacity of the multi-shape `scale_copy_u32` kernel.
+const HALF: usize = CAP / 2;
 
 /// Write a stub-backend manifest (host-emulated kernels) into a per-test
 /// temp dir.
@@ -32,7 +39,8 @@ fn stub_artifacts(tag: &str) -> String {
         dir.join("manifest.txt"),
         format!(
             "copy_u32|emu|u32:{CAP}|u32:{CAP}|emu=identity n={CAP}\n\
-             vadd_u32|emu|u32:{CAP} u32:{CAP}|u32:{CAP}|emu=add n={CAP}\n"
+             vadd_u32|emu|u32:{CAP} u32:{CAP}|u32:{CAP}|emu=add n={CAP}\n\
+             scale_copy_u32|emu|u32:{CAP} u32:{HALF}|u32:{CAP}|emu=identity n={CAP}\n"
         ),
     )
     .unwrap();
@@ -771,5 +779,303 @@ fn batching_spawn_rejects_ref_modes() {
     );
     assert!(r.is_err());
     assert!(r.unwrap_err().to_string().contains("val-mode"));
+    teardown(sys, mgr);
+}
+
+// --- shape-classed sub-batching ----------------------------------------
+
+#[test]
+fn multishape_interleaved_requests_coalesce_per_class_with_exact_slices() {
+    // two request shapes interleave through ONE batched facade: each shape
+    // class owns its own window, so the burst fuses into exactly one
+    // launch per class — the old single-window batcher would have let one
+    // shape's arrivals force-flush the other's half-filled window
+    let (sys, mgr) = system("batch-multiclass", 1, Duration::ZERO);
+    let stats = Arc::new(FacadeStats::default());
+    let worker = spawn_batched(&mgr, stats.clone(), 3, Duration::from_secs(30));
+    let me = sys.scoped();
+    let payloads: Vec<Vec<u32>> = (0..6u32)
+        .map(|i| {
+            let len = if i % 2 == 0 { 64 } else { 128 };
+            (0..len as u32).map(|x| x + i * 10_000).collect()
+        })
+        .collect();
+    let pending: Vec<_> = payloads
+        .iter()
+        .map(|p| me.request(&worker, p.clone()))
+        .collect();
+    for (p, want) in pending.into_iter().zip(&payloads) {
+        let out: Vec<u32> = p.receive(T).unwrap();
+        assert_eq!(&out, want, "each requester gets its exact slice");
+    }
+    assert_eq!(
+        stat_launches(&stats),
+        2,
+        "two interleaved classes -> exactly two fused launches"
+    );
+    assert_eq!(launched_on(&mgr, 0), 2);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn multi_shape_kernel_batches_per_class_with_exact_slices() {
+    // a kernel whose manifest inputs have DIFFERENT element counts
+    // (1024 + 512, output 1024) could not batch at all before the
+    // shape-class rewrite; each request must be a uniform scale-down of
+    // the manifest shape, and same-scale requests coalesce per class
+    let (sys, mgr) = system("batch-multishape", 1, Duration::ZERO);
+    let stats = Arc::new(FacadeStats::default());
+    let program = mgr.create_kernel_program("scale_copy_u32").unwrap();
+    let worker = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "scale_copy_u32")
+                .inputs(Mode::Val, 2)
+                .output(Mode::Val)
+                .with_stats(stats.clone())
+                .batched(BatchConfig {
+                    max_requests: 2,
+                    max_delay: Duration::from_secs(30),
+                }),
+        )
+        .unwrap();
+    let me = sys.scoped();
+    // two eighth-scale requests (128 + 64) and two quarter-scale requests
+    // (256 + 128), interleaved — two classes, one fused launch each
+    let mk = |scale_len: usize, seed: u32| -> (Vec<u32>, Vec<u32>) {
+        (
+            (0..scale_len as u32).map(|x| x + seed).collect(),
+            vec![seed; scale_len / 2],
+        )
+    };
+    let reqs = [mk(128, 1_000), mk(256, 2_000), mk(128, 3_000), mk(256, 4_000)];
+    let pending: Vec<_> = reqs.iter().map(|r| me.request(&worker, r.clone())).collect();
+    for (p, (a, _b)) in pending.into_iter().zip(&reqs) {
+        // emu=identity: the output is input 0, so each requester's slice
+        // must echo its first argument exactly
+        let out: Vec<u32> = p.receive(T).unwrap();
+        assert_eq!(&out, a, "exact output slice per requester");
+    }
+    assert_eq!(
+        stat_launches(&stats),
+        2,
+        "two scale classes -> exactly two fused launches"
+    );
+    // a request whose arguments are NOT a uniform scale-down is a clean
+    // per-request error, not a wrong launch
+    let skewed: (Vec<u32>, Vec<u32>) = ((0..128).collect(), vec![7u32; 100]);
+    let err = me.request(&worker, skewed).receive_msg(T).unwrap_err();
+    assert!(err.reason.contains("scale"), "got: {}", err.reason);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn zero_delay_batching_flushes_each_request_synchronously() {
+    // BatchConfig { max_delay: 0 } used to schedule a FlushTick anyway, so
+    // a lone request paid a full timer hop before launching; a zero delay
+    // must flush inside admit
+    let (sys, mgr) = system("batch-zerodelay", 1, Duration::ZERO);
+    let stats = Arc::new(FacadeStats::default());
+    let worker = spawn_batched(&mgr, stats.clone(), 1000, Duration::ZERO);
+    let me = sys.scoped();
+    for i in 0..3u32 {
+        let data = vec![i; 64];
+        let out: Vec<u32> = me.request(&worker, data.clone()).receive(T).unwrap();
+        assert_eq!(out, data);
+    }
+    assert_eq!(
+        stat_launches(&stats),
+        3,
+        "every admit must flush synchronously under a zero delay"
+    );
+    teardown(sys, mgr);
+}
+
+#[test]
+fn batched_occupancy_gauge_rises_and_drains() {
+    // the batcher publishes admitted-but-unretired requests into the
+    // device's ExecStats — the depth signal batched placement reads
+    let (sys, mgr) = system("batch-occupancy", 1, Duration::ZERO);
+    let stats = Arc::new(FacadeStats::default());
+    let worker = spawn_batched(&mgr, stats.clone(), 4, Duration::from_secs(30));
+    let me = sys.scoped();
+    let pending: Vec<_> = (0..3u32)
+        .map(|i| me.request(&worker, vec![i; 64]))
+        .collect();
+    let dev = mgr.device(0).unwrap();
+    assert!(
+        eventually(|| dev.batch_occupancy() == 3),
+        "open window must publish its occupancy (got {})",
+        dev.batch_occupancy()
+    );
+    // the 4th request hits the count trigger and flushes the window
+    let p4 = me.request(&worker, vec![9u32; 64]);
+    for p in pending {
+        let _: Vec<u32> = p.receive(T).unwrap();
+    }
+    let _: Vec<u32> = p4.receive(T).unwrap();
+    assert!(
+        eventually(|| dev.batch_occupancy() == 0),
+        "retired launches must drain the gauge (got {})",
+        dev.batch_occupancy()
+    );
+    assert_eq!(stat_launches(&stats), 1);
+    teardown(sys, mgr);
+}
+
+// --- batching × replication fault injection ----------------------------
+
+#[test]
+fn batched_replica_death_mid_window_resolves_every_promise() {
+    // kill a batched replica while windows are open: every admitted
+    // promise resolves — a slice (the Drop-flush launched the window) or
+    // an error (bounced from the closing mailbox) — exactly once, never a
+    // timeout
+    let (sys, mgr) = system("batch-death", 2, Duration::from_millis(5));
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let handle = mgr
+        .spawn_cl_replicated(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::replicated(PlacementPolicy::RoundRobin))
+                .batched(BatchConfig {
+                    max_requests: 1000,
+                    max_delay: Duration::from_millis(200),
+                }),
+        )
+        .unwrap();
+    let me = sys.scoped();
+    let pending: Vec<_> = (0..12u32)
+        .map(|i| me.request(&handle.actor, vec![i; 64]))
+        .collect();
+    // kill replica 0's facade while the burst is mid-admission: its open
+    // windows Drop-flush, its undelivered messages bounce
+    kill(&handle.pool.replicas()[0].facade());
+    let (mut ok, mut errs) = (0usize, 0usize);
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.receive_msg(T) {
+            Ok(m) => {
+                assert_eq!(m.downcast_ref::<Vec<u32>>(), Some(&vec![i as u32; 64]));
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    !e.reason.contains("timed out"),
+                    "request {i} was silently lost: {}",
+                    e.reason
+                );
+                errs += 1;
+            }
+        }
+    }
+    assert_eq!(ok + errs, 12, "every request resolves exactly once");
+    assert!(ok > 0, "the surviving replica's windows must flush");
+    assert!(
+        eventually(|| !handle.pool.replicas()[0].is_alive()),
+        "dispatcher must observe the Down"
+    );
+    // the dead batcher's occupancy drained (Drop-flush retired it), so
+    // depth-based routing sees a clean picture post-mortem
+    let d0 = mgr.device(0).unwrap();
+    assert!(
+        eventually(|| d0.batch_occupancy() == 0),
+        "a dead batcher must not leak occupancy (got {})",
+        d0.batch_occupancy()
+    );
+    // post-mortem traffic flows via the survivor
+    for i in 0..4u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; 64]).receive(T).unwrap();
+        assert_eq!(out, vec![i; 64]);
+    }
+    teardown(sys, mgr);
+}
+
+#[test]
+fn batched_drop_flush_on_a_closed_queue_fails_promises_cleanly() {
+    // the hardest shutdown path: the device queue is ALREADY gone when the
+    // dying batcher Drop-flushes. The refused launch must fail every
+    // admitted promise with a real error — never a hang, never a leaked
+    // occupancy count
+    let (sys, mgr) = system("batch-closedq", 1, Duration::ZERO);
+    let stats = Arc::new(FacadeStats::default());
+    let worker = spawn_batched(&mgr, stats.clone(), 1000, Duration::from_secs(600));
+    let me = sys.scoped();
+    let pa = me.request(&worker, vec![1u32; 64]);
+    let pb = me.request(&worker, vec![2u32; 64]);
+    // let the facade admit both into the open window
+    let dev = mgr.device(0).unwrap();
+    assert!(eventually(|| dev.batch_occupancy() == 2));
+    // stop the device, THEN terminate the facade: Drop-flush hits a closed
+    // queue
+    dev.queue.stop();
+    worker.send_from(None, Message::new(Exit::fault("shutdown")));
+    for p in [pa, pb] {
+        let err = p.receive_msg(T).expect_err("closed queue cannot produce slices");
+        assert!(
+            !err.reason.contains("timed out"),
+            "promise must fail fast, not time out: {}",
+            err.reason
+        );
+        assert!(
+            err.reason.contains("closed") || err.reason.contains("broken promise"),
+            "got: {}",
+            err.reason
+        );
+    }
+    assert!(
+        eventually(|| dev.batch_occupancy() == 0),
+        "a refused flush must drain the occupancy gauge (got {})",
+        dev.batch_occupancy()
+    );
+    teardown(sys, mgr);
+}
+
+// --- limited respawn ----------------------------------------------------
+
+#[test]
+fn limited_respawn_retires_a_crash_looping_replica() {
+    // RespawnPolicy::Limited: a replica that keeps dying is rebuilt at
+    // most `max` times (with backoff), then marked permanently dead — the
+    // ROADMAP crash-loop item (Always recompiled forever)
+    let (sys, mgr) = system("respawn-limited", 2, Duration::ZERO);
+    let handle = spawn_replicated_copy(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin).respawn(RespawnPolicy::Limited {
+            max: 2,
+            backoff: Duration::from_millis(1),
+        }),
+    );
+    let me = sys.scoped();
+    // two deaths are rebuilt (with exponential backoff between attempts)
+    for expected in 1..=2u64 {
+        kill(&handle.pool.replicas()[0].facade());
+        assert!(
+            eventually(|| handle.pool.replicas()[0].respawns() >= expected),
+            "death {expected} must rebuild (respawns={})",
+            handle.pool.replicas()[0].respawns()
+        );
+        assert!(eventually(|| handle.pool.replicas()[0].is_alive()));
+    }
+    assert_eq!(handle.pool.replicas()[0].respawn_attempts(), 2);
+    // the third death exhausts the budget: permanently dead, never rebuilt
+    kill(&handle.pool.replicas()[0].facade());
+    assert!(
+        eventually(|| handle.pool.replicas()[0].is_retired()),
+        "the third death must retire the replica"
+    );
+    assert!(!handle.pool.replicas()[0].is_alive());
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(
+        handle.pool.replicas()[0].respawns(),
+        2,
+        "a retired replica must never be rebuilt again"
+    );
+    assert_eq!(handle.pool.live_count(), 1);
+    // traffic keeps flowing via the survivor
+    for i in 0..4u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    assert_eq!(launched_on(&mgr, 0), 0, "the retired replica must not serve");
     teardown(sys, mgr);
 }
