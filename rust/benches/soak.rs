@@ -1,0 +1,119 @@
+//! Soak & overload: the robustness probe (PERF.md).
+//!
+//! An open-loop Poisson arrival process offers a mixed workload — batched
+//! small val-mode requests, large transfer-bound requests, and two-stage
+//! pipelines — at roughly 2x the simulated deployment's capacity while a
+//! chaos schedule kills replicas on a timer. The same scenario runs twice:
+//!
+//! - **shed on** — `AdmissionConfig` bounds inflight depth (`DropOldest`
+//!   sheds the stalest queued request past the bound) and every routed
+//!   request carries a queue-wait deadline.
+//! - **shed off** — unbounded admission, the control arm whose queues are
+//!   free to grow.
+//!
+//! The probe's two claims: every request resolves exactly once (reply,
+//! typed rejection, shed, or deadline — never a hang), and shedding keeps
+//! the admitted-request p99 bounded where the unbounded arm's tail grows
+//! with the backlog.
+//!
+//! Writes `BENCH_soak.json` at the repository root. Smoke mode for CI:
+//! `SOAK_BENCH_SMOKE=1` shrinks the soak to ~1s arms so the harness cannot
+//! bit-rot without burning runner minutes. The reduced tier-1 twin is
+//! `cargo test --test perf_soak`.
+
+use caf_ocl::bench::{soak_probe, write_soak_json, write_soak_manifest, SoakConfig, SoakRun};
+use std::time::Duration;
+
+fn print_run(r: &SoakRun) {
+    println!(
+        "  shed {}: issued {} -> completed {} rejected {} shed {} deadline {} \
+         errors {} timeouts {}",
+        if r.shedding { "ON " } else { "OFF" },
+        r.issued,
+        r.completed,
+        r.rejected,
+        r.shed,
+        r.deadline,
+        r.errors,
+        r.timeouts
+    );
+    println!(
+        "           goodput {:.1} req/s  peak depth {}  admitted p99 {:.1} ms  \
+         kills {}  respawns {}",
+        r.goodput_rps, r.peak_depth, r.admitted_p99_ms, r.replica_kills, r.respawns
+    );
+    for c in &r.classes {
+        println!(
+            "           {:>14}: n={:<5} p50 {:.1} ms  p99 {:.1} ms  p999 {:.1} ms",
+            c.class, c.n, c.p50_ms, c.p99_ms, c.p999_ms
+        );
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SOAK_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let small_elems = 64;
+    let batch_max_requests = 8;
+    let large_elems = 1 << 18;
+    let devices = 2;
+    let launch = Duration::from_millis(4);
+    // capacity math (documented so the "2x overload" claim is checkable):
+    // each device serves ~1/launch = 250 launches/s; with two devices and
+    // up-to-8-way batching of the ~70% small class, the deployment absorbs
+    // on the order of 500-1500 req/s — offering ~2000 req/s (smoke: the
+    // same ratio at a shorter duration) is solidly past saturation
+    let cfg = SoakConfig {
+        devices,
+        launch,
+        bytes_per_sec: 4.0e9,
+        duration: Duration::from_millis(if smoke { 1000 } else { 8000 }),
+        offered_rps: 2000.0,
+        drivers: 32,
+        small_elems,
+        large_elems,
+        batch_max_requests,
+        batch_max_delay: Duration::from_millis(4),
+        max_inflight: 16,
+        max_queue_wait: Duration::from_millis(250),
+        chaos_interval: Duration::from_millis(if smoke { 400 } else { 1500 }),
+        chaos_kills: if smoke { 1 } else { 4 },
+        seed: 0x50a4,
+        artifacts_dir: write_soak_manifest(
+            "bench",
+            small_elems * batch_max_requests,
+            large_elems,
+        ),
+    };
+    println!(
+        "soak: {} devices, {:?} launch pad, {:?} soak, {:.0} req/s offered, \
+         {} drivers, chaos every {:?} (budget {}){}",
+        cfg.devices,
+        cfg.launch,
+        cfg.duration,
+        cfg.offered_rps,
+        cfg.drivers,
+        cfg.chaos_interval,
+        cfg.chaos_kills,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let on = soak_probe(&cfg, true);
+    print_run(&on);
+    let off = soak_probe(&cfg, false);
+    print_run(&off);
+
+    let lost = |r: &SoakRun| {
+        r.issued != r.completed + r.rejected + r.shed + r.deadline + r.errors || r.timeouts != 0
+    };
+    if lost(&on) || lost(&off) {
+        eprintln!("!! exactly-once violated: some request neither replied nor failed");
+        std::process::exit(1);
+    }
+
+    match write_soak_json(&on, &off, &cfg, "cargo bench --bench soak") {
+        Ok(p) => println!("-> {}", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
+}

@@ -998,6 +998,479 @@ pub fn write_dispatch_json(
     Ok(path)
 }
 
+// ---------------------------------------------------------------------------
+// Soak & overload (PERF.md): the robustness probe. An open-loop Poisson
+// arrival process offers a mixed workload (batched small val-mode, large
+// transfer-bound, two-stage pipelines) at a configurable multiple of the
+// deployment's capacity while a chaos schedule kills replicas, and the
+// probe runs the same scenario with admission control ON
+// (bounded + DropOldest + deadline) and OFF (unbounded). The report
+// checks two things: every request resolves exactly once (reply, typed
+// rejection, shed, or deadline — never a hang), and shedding keeps the
+// admitted-request tail bounded where the unbounded arm's queues grow
+// without limit.
+// ---------------------------------------------------------------------------
+
+/// Config of the soak probe (the `soak` bench and the tier-1 `perf_soak`
+/// test run the same scenario at different durations/rates).
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Simulated devices in the inventory (one replica each).
+    pub devices: usize,
+    /// Fixed per-command launch pad of every simulated device.
+    pub launch: std::time::Duration,
+    /// Simulated PCIe bandwidth — makes the large class transfer-bound.
+    pub bytes_per_sec: f64,
+    /// Soak duration (the arrival schedule spans exactly this window).
+    pub duration: std::time::Duration,
+    /// Offered (open-loop) arrival rate, requests per second. Overload is
+    /// offered_rps vs. what `devices`/`launch` can serve.
+    pub offered_rps: f64,
+    /// Driver threads sharing the arrival schedule.
+    pub drivers: usize,
+    /// Elements per small (batched) request.
+    pub small_elems: usize,
+    /// Elements per large (transfer-bound) request — also the large
+    /// kernel's manifest capacity.
+    pub large_elems: usize,
+    /// Per-class count trigger of the small kernel's batcher; the small
+    /// kernel's manifest capacity is `small_elems * batch_max_requests`.
+    pub batch_max_requests: usize,
+    /// Per-class time-valve ceiling of the small kernel's batcher.
+    pub batch_max_delay: std::time::Duration,
+    /// Admission bound when shedding is ON.
+    pub max_inflight: u64,
+    /// Queue-wait deadline when shedding is ON.
+    pub max_queue_wait: std::time::Duration,
+    /// Gap between chaos replica kills.
+    pub chaos_interval: std::time::Duration,
+    /// Chaos kill budget (0 = kill for the whole soak).
+    pub chaos_kills: u64,
+    /// Seed for the arrival schedule, class mix, and chaos victims.
+    pub seed: u64,
+    /// Artifacts dir holding the probe's two-kernel stub manifest.
+    pub artifacts_dir: String,
+}
+
+/// Per-class latency digest of one soak arm.
+#[derive(Clone, Debug)]
+pub struct SoakClassStats {
+    pub class: &'static str,
+    /// Completed (replied) requests of this class.
+    pub n: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+}
+
+/// One soak arm (shedding on or off). `issued` always equals
+/// `completed + rejected + shed + deadline + errors + timeouts` — the
+/// exactly-once ledger the tier-1 gate asserts on (with `timeouts == 0`:
+/// a timeout means some request neither replied nor failed).
+#[derive(Clone, Debug)]
+pub struct SoakRun {
+    pub shedding: bool,
+    pub issued: usize,
+    /// Requests that got a reply.
+    pub completed: usize,
+    /// Typed `Overloaded` rejections at admission.
+    pub rejected: usize,
+    /// Requests shed from a window by `DropOldest`.
+    pub shed: usize,
+    /// Requests failed fast after exceeding `max_queue_wait`.
+    pub deadline: usize,
+    /// Other errors (e.g. routed errors while every replica is down).
+    pub errors: usize,
+    /// Requests that never resolved within the driver's generous receive
+    /// timeout — must be zero; anything else is a lost promise.
+    pub timeouts: usize,
+    /// Completed requests per second of soak wall-clock.
+    pub goodput_rps: f64,
+    /// Peak of the pools' admitted-but-unretired depth gauge.
+    pub peak_depth: u64,
+    /// p99 latency over ALL completed (admitted) requests, ms. The
+    /// bounded-tail headline: shedding trades rejections for keeping
+    /// this finite under overload.
+    pub admitted_p99_ms: f64,
+    pub classes: Vec<SoakClassStats>,
+    /// Replicas the chaos schedule killed during the soak.
+    pub replica_kills: u64,
+    /// Successful respawns observed across the pools.
+    pub respawns: u64,
+}
+
+/// Write the soak probe's stub manifest (small batched kernel + large
+/// transfer kernel) into a per-process temp dir; returns the path.
+pub fn write_soak_manifest(tag: &str, small_capacity: usize, large_elems: usize) -> String {
+    write_stub_manifest(
+        &format!("soak-{tag}"),
+        &format!(
+            "soak_small_u32|emu|u32:{small_capacity}|u32:{small_capacity}|emu=identity n={small_capacity}\n\
+             soak_large_u32|emu|u32:{large_elems}|u32:{large_elems}|emu=identity n={large_elems}\n"
+        ),
+    )
+}
+
+/// How one soak request ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SoakOutcome {
+    Ok,
+    Rejected,
+    Shed,
+    Deadline,
+    Timeout,
+    Error,
+}
+
+fn soak_classify(e: &crate::actor::ErrorMsg) -> SoakOutcome {
+    use crate::opencl::Rejection;
+    match Rejection::of(e) {
+        Some(Rejection::Overloaded) => SoakOutcome::Rejected,
+        Some(Rejection::Shed) => SoakOutcome::Shed,
+        Some(Rejection::Deadline) => SoakOutcome::Deadline,
+        None if e.reason.contains("timed out") => SoakOutcome::Timeout,
+        None => SoakOutcome::Error,
+    }
+}
+
+/// Issue one request and block for its resolution. The 30s ceiling is a
+/// hang detector, not a latency bound — the exactly-once invariant says
+/// it never fires.
+fn soak_one_shot(
+    me: &crate::actor::ScopedActor,
+    target: &crate::actor::ActorRef,
+    elems: usize,
+    tag: u32,
+) -> SoakOutcome {
+    match me
+        .request(target, vec![tag; elems])
+        .receive_msg(std::time::Duration::from_secs(30))
+    {
+        Ok(_) => SoakOutcome::Ok,
+        Err(e) => soak_classify(&e),
+    }
+}
+
+/// Run one soak arm. With `shedding` the replicated spawns carry the
+/// config's admission bounds (`max_inflight` + `DropOldest` +
+/// `max_queue_wait`); without it they run unbounded — the control arm
+/// whose queues are free to grow.
+pub fn soak_probe(cfg: &SoakConfig, shedding: bool) -> SoakRun {
+    use crate::actor::{ActorSystem, SystemConfig};
+    use crate::opencl::{
+        AdmissionConfig, BatchConfig, DeviceInfo, DeviceKind, DeviceSpec, KernelSpawn, Manager,
+        Mode, Placement, PlacementPolicy, ReplicaSet, RespawnPolicy, ShedPolicy,
+    };
+    use crate::runtime::client::PadModel;
+    use crate::sim::{ChaosConfig, ChaosSchedule};
+    use crate::workload::{ClassMix, OpenLoop, RequestClass};
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    let sys = ActorSystem::new(
+        SystemConfig::default()
+            .with_threads(4)
+            .with_artifacts_dir(cfg.artifacts_dir.clone()),
+    );
+    let specs = (0..cfg.devices)
+        .map(|i| DeviceSpec {
+            name: format!("soak-sim-{i}"),
+            kind: DeviceKind::Gpu,
+            info: DeviceInfo {
+                compute_units: 8,
+                max_work_items_per_cu: 1024,
+            },
+            pad: Some(PadModel {
+                launch: cfg.launch,
+                bytes_per_sec: cfg.bytes_per_sec,
+                compute_scale: 1.0,
+                busy_wait: false,
+            }),
+        })
+        .collect();
+    let mgr = Manager::load_with(&sys, specs);
+
+    let admission = if shedding {
+        AdmissionConfig {
+            max_inflight: Some(cfg.max_inflight),
+            max_queue_wait: Some(cfg.max_queue_wait),
+            shed_policy: ShedPolicy::DropOldest,
+        }
+    } else {
+        AdmissionConfig::default()
+    };
+    let replica_set = || {
+        ReplicaSet::new(PlacementPolicy::LeastInflight)
+            .respawn(RespawnPolicy::Always)
+            .admission(admission)
+    };
+    let small_prog = mgr
+        .create_kernel_program("soak_small_u32")
+        .expect("soak small program");
+    let small = mgr
+        .spawn_cl_replicated(
+            KernelSpawn::new(small_prog, "soak_small_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(replica_set()))
+                .batched(BatchConfig {
+                    max_requests: cfg.batch_max_requests,
+                    max_delay: cfg.batch_max_delay,
+                }),
+        )
+        .expect("soak small spawn");
+    let large_prog = mgr
+        .create_kernel_program("soak_large_u32")
+        .expect("soak large program");
+    let large = mgr
+        .spawn_cl_replicated(
+            KernelSpawn::new(large_prog, "soak_large_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(replica_set())),
+        )
+        .expect("soak large spawn");
+
+    // chaos targets the batched small pool — the harder recovery path
+    // (respawned replicas must rejoin the admission domain and republish
+    // their occupancy gauge)
+    let chaos = ChaosSchedule::start(
+        small.pool.clone(),
+        ChaosConfig {
+            interval: cfg.chaos_interval,
+            max_kills: cfg.chaos_kills,
+            seed: cfg.seed ^ 0x5eed,
+        },
+    );
+
+    let schedule = OpenLoop {
+        rps: cfg.offered_rps,
+    }
+    .schedule(cfg.duration, cfg.seed);
+    let mix = ClassMix::soak_default();
+    let classes: Vec<RequestClass> = {
+        let mut rng = crate::util::Rng::new(cfg.seed.wrapping_add(1));
+        (0..schedule.len()).map(|_| mix.pick(&mut rng)).collect()
+    };
+
+    let cursor = AtomicUsize::new(0);
+    let stop_monitor = AtomicBool::new(false);
+    let peak_depth = AtomicU64::new(0);
+    let t0 = Instant::now();
+    // (class, outcome, ms since the request's *scheduled* arrival — the
+    // open-loop convention that charges queueing delay to the system
+    // instead of hiding it behind a slow driver)
+    let mut records: Vec<(RequestClass, SoakOutcome, f64)> =
+        Vec::with_capacity(schedule.len());
+    std::thread::scope(|s| {
+        let monitor = s.spawn(|| {
+            while !stop_monitor.load(Ordering::Acquire) {
+                let d = small.pool.total_depth() + large.pool.total_depth();
+                peak_depth.fetch_max(d, Ordering::AcqRel);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+        let drivers: Vec<_> = (0..cfg.drivers.max(1))
+            .map(|_| {
+                s.spawn(|| {
+                    let me = sys.scoped();
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= schedule.len() {
+                            break;
+                        }
+                        let due = t0 + schedule[i];
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let class = classes[i];
+                        let outcome = match class {
+                            RequestClass::SmallVal => {
+                                soak_one_shot(&me, &small.actor, cfg.small_elems, i as u32)
+                            }
+                            RequestClass::LargeTransfer => {
+                                soak_one_shot(&me, &large.actor, cfg.large_elems, i as u32)
+                            }
+                            RequestClass::Pipeline => {
+                                // two chained stages: the pipeline resolves
+                                // with its first failure, or Ok after both
+                                match soak_one_shot(&me, &large.actor, cfg.large_elems, i as u32)
+                                {
+                                    SoakOutcome::Ok => soak_one_shot(
+                                        &me,
+                                        &small.actor,
+                                        cfg.small_elems,
+                                        i as u32,
+                                    ),
+                                    other => other,
+                                }
+                            }
+                        };
+                        let latency_ms = due.elapsed().as_secs_f64() * 1e3;
+                        out.push((class, outcome, latency_ms));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for d in drivers {
+            records.extend(d.join().expect("soak driver panicked"));
+        }
+        stop_monitor.store(true, Ordering::Release);
+        let _ = monitor.join();
+    });
+    let elapsed = t0.elapsed();
+
+    let replica_kills = chaos.stop();
+    // give in-flight respawns a moment to land before reading the counts
+    let respawn_wait = Instant::now();
+    let count_respawns = || -> u64 {
+        small
+            .pool
+            .replicas()
+            .iter()
+            .chain(large.pool.replicas().iter())
+            .map(|r| r.respawns())
+            .sum()
+    };
+    while count_respawns() < replica_kills
+        && respawn_wait.elapsed() < std::time::Duration::from_secs(5)
+    {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let respawns = count_respawns();
+    mgr.stop_devices();
+    sys.shutdown();
+
+    let mut issued = 0;
+    let mut counts = [0usize; 6];
+    let mut admitted_ms: Vec<f64> = Vec::new();
+    for (_, outcome, ms) in &records {
+        issued += 1;
+        counts[*outcome as usize] += 1;
+        if *outcome == SoakOutcome::Ok {
+            admitted_ms.push(*ms);
+        }
+    }
+    let class_stats = |class: crate::workload::RequestClass| {
+        let ms: Vec<f64> = records
+            .iter()
+            .filter(|(c, o, _)| *c == class && *o == SoakOutcome::Ok)
+            .map(|(_, _, ms)| *ms)
+            .collect();
+        SoakClassStats {
+            class: class.name(),
+            n: ms.len(),
+            p50_ms: crate::util::stats::percentile(&ms, 0.50),
+            p99_ms: crate::util::stats::percentile(&ms, 0.99),
+            p999_ms: crate::util::stats::percentile(&ms, 0.999),
+        }
+    };
+    SoakRun {
+        shedding,
+        issued,
+        completed: counts[SoakOutcome::Ok as usize],
+        rejected: counts[SoakOutcome::Rejected as usize],
+        shed: counts[SoakOutcome::Shed as usize],
+        deadline: counts[SoakOutcome::Deadline as usize],
+        errors: counts[SoakOutcome::Error as usize],
+        timeouts: counts[SoakOutcome::Timeout as usize],
+        goodput_rps: counts[SoakOutcome::Ok as usize] as f64
+            / elapsed.as_secs_f64().max(1e-9),
+        peak_depth: peak_depth.load(std::sync::atomic::Ordering::Acquire),
+        admitted_p99_ms: crate::util::stats::percentile(&admitted_ms, 0.99),
+        classes: crate::workload::RequestClass::ALL
+            .iter()
+            .map(|c| class_stats(*c))
+            .collect(),
+        replica_kills,
+        respawns,
+    }
+}
+
+/// Write `BENCH_soak.json` (repo root when run from `rust/`, else the
+/// working directory): the shed-on/shed-off soak comparison PERF.md
+/// describes.
+pub fn write_soak_json(
+    on: &SoakRun,
+    off: &SoakRun,
+    cfg: &SoakConfig,
+    generated_by: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    let root = std::path::Path::new("../ROADMAP.md");
+    let path = if root.exists() {
+        std::path::PathBuf::from("../BENCH_soak.json")
+    } else {
+        std::path::PathBuf::from("BENCH_soak.json")
+    };
+    let fmt_ms = |x: f64| {
+        if x.is_nan() {
+            "null".to_string()
+        } else {
+            format!("{x:.2}")
+        }
+    };
+    let run_json = |r: &SoakRun| {
+        let classes = r
+            .classes
+            .iter()
+            .map(|c| {
+                format!(
+                    "\"{}\": {{\"n\": {}, \"p50_ms\": {}, \"p99_ms\": {}, \"p999_ms\": {}}}",
+                    c.class,
+                    c.n,
+                    fmt_ms(c.p50_ms),
+                    fmt_ms(c.p99_ms),
+                    fmt_ms(c.p999_ms)
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        format!(
+            "{{\"shedding\": {}, \"issued\": {}, \"completed\": {}, \
+             \"rejected\": {}, \"shed\": {}, \"deadline\": {}, \"errors\": {}, \
+             \"timeouts\": {}, \"goodput_rps\": {:.1}, \"peak_depth\": {}, \
+             \"admitted_p99_ms\": {},\n    \"classes\": {{{}}},\n    \
+             \"replica_kills\": {}, \"respawns\": {}}}",
+            r.shedding,
+            r.issued,
+            r.completed,
+            r.rejected,
+            r.shed,
+            r.deadline,
+            r.errors,
+            r.timeouts,
+            r.goodput_rps,
+            r.peak_depth,
+            fmt_ms(r.admitted_p99_ms),
+            classes,
+            r.replica_kills,
+            r.respawns
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"soak\",\n  \"generated_by\": {generated_by:?},\n  \
+         \"config\": {{\"devices\": {}, \"launch_ms\": {:.3}, \
+         \"duration_ms\": {}, \"offered_rps\": {:.1}, \"drivers\": {}, \
+         \"max_inflight\": {}, \"max_queue_wait_ms\": {}, \
+         \"chaos_interval_ms\": {}}},\n  \
+         \"shed_on\": {},\n  \"shed_off\": {}\n}}\n",
+        cfg.devices,
+        cfg.launch.as_secs_f64() * 1e3,
+        cfg.duration.as_millis(),
+        cfg.offered_rps,
+        cfg.drivers,
+        cfg.max_inflight,
+        cfg.max_queue_wait.as_millis(),
+        cfg.chaos_interval.as_millis(),
+        run_json(on),
+        run_json(off)
+    );
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Quick/full switch: benches default to a fast sweep; set
 /// `CAF_OCL_BENCH_FULL=1` for the paper-scale version.
 pub fn full_mode() -> bool {

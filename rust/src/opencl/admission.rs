@@ -1,0 +1,434 @@
+//! Bounded admission control and deadline-aware dispatch for the
+//! placement tier.
+//!
+//! Every earlier bench is a finite burst: nothing in the dispatch path
+//! backpressures a flooding client, so a sustained overload grows batch
+//! windows and device queues without bound while every requester waits
+//! forever. This module adds the production mechanism — graceful
+//! degradation instead of unbounded queue growth:
+//!
+//! * [`AdmissionConfig`] on [`ReplicaSet`](super::placement::ReplicaSet)
+//!   bounds the total admitted-but-unretired work behind a dispatcher
+//!   (measured by the same `DevicePool::depth` / `batch_pending` gauges
+//!   routing already reads). Past the bound, new requests are rejected
+//!   immediately with a typed [`Rejection::Overloaded`] error — an
+//!   instant error reply beats an unbounded mailbox — or, under
+//!   [`ShedPolicy::DropOldest`], the *stalest* queued request is failed
+//!   to admit the new one (fresh work is the work whose deadline is
+//!   furthest away).
+//! * [`AdmissionConfig::max_queue_wait`] gives every routed request a
+//!   local deadline: the dispatcher wraps the message in a [`Stamped`]
+//!   envelope carrying its admission instant, and any stage that still
+//!   holds the request past the budget — a batch window, the facade's
+//!   mailbox — fails it fast with a deadline error instead of occupying
+//!   a launch slot for a reply nobody is waiting for. Until now only
+//!   `net` enforced a timeout (`remote_actor_timeout`); local dispatch
+//!   could stall forever.
+//!
+//! Error taxonomy: the actor runtime's only error payload is
+//! [`ErrorMsg`] (a reason string), so the typed surface is a stable
+//! marker token per class plus [`Rejection::of`] to classify a reply.
+//! The soak harness and the shedding test matrix both count outcomes
+//! through it.
+
+use crate::actor::{ErrorMsg, Message};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+/// What to do with a new request once admitted work sits at the bound.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Reject the incoming request with an `Overloaded` error (default):
+    /// newest work is the cheapest to refuse because nothing has been
+    /// invested in it yet.
+    #[default]
+    RejectNew,
+    /// Fail the stalest queued-but-unlaunched request with a shed error
+    /// and admit the new one: under a deadline-bound workload the oldest
+    /// request is the one most likely to be useless by the time it
+    /// launches.
+    DropOldest,
+}
+
+/// Admission bounds for a replicated spawn
+/// ([`ReplicaSet::admission`](super::placement::ReplicaSet::admission)).
+/// The default is fully unbounded — exactly the pre-admission behavior.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Bound on total admitted-but-unretired requests across the pool
+    /// (`None` = unbounded). Compared against the sum of the per-replica
+    /// depth gauges (`DevicePool::total_depth`).
+    pub max_inflight: Option<u64>,
+    /// Per-request queue-wait budget (`None` = no deadline): a request
+    /// that has not launched within this long of being routed is failed
+    /// fast with a deadline error, including from inside a batch window.
+    pub max_queue_wait: Option<Duration>,
+    /// Behavior at the `max_inflight` bound.
+    pub shed_policy: ShedPolicy,
+}
+
+impl AdmissionConfig {
+    /// Bound admitted work at `max_inflight`, no deadline, `RejectNew`.
+    pub fn bounded(max_inflight: u64) -> AdmissionConfig {
+        AdmissionConfig {
+            max_inflight: Some(max_inflight),
+            ..AdmissionConfig::default()
+        }
+    }
+
+    /// Set the per-request queue-wait deadline.
+    pub fn deadline(mut self, max_queue_wait: Duration) -> AdmissionConfig {
+        self.max_queue_wait = Some(max_queue_wait);
+        self
+    }
+
+    /// Set the at-the-bound policy.
+    pub fn shed(mut self, policy: ShedPolicy) -> AdmissionConfig {
+        self.shed_policy = policy;
+        self
+    }
+
+    /// True when this config never rejects, sheds, or expires anything.
+    pub fn is_unbounded(&self) -> bool {
+        self.max_inflight.is_none() && self.max_queue_wait.is_none()
+    }
+}
+
+/// Monotonic outcome counters for one admission domain (one replicated
+/// spawn). Exposed on
+/// [`ReplicatedHandle::admission`](super::placement::ReplicatedHandle)
+/// so benches and tests can read shed/deadline counts without parsing
+/// error strings.
+#[derive(Debug, Default)]
+pub struct AdmissionStats {
+    /// Requests rejected at the bound under [`ShedPolicy::RejectNew`]
+    /// (or under `DropOldest` when no queued victim existed).
+    pub overloaded: AtomicU64,
+    /// Queued requests failed by [`ShedPolicy::DropOldest`] to admit
+    /// newer work.
+    pub shed: AtomicU64,
+    /// Requests failed fast because their queue wait exceeded
+    /// [`AdmissionConfig::max_queue_wait`].
+    pub deadline: AtomicU64,
+}
+
+impl AdmissionStats {
+    pub fn overloaded_count(&self) -> u64 {
+        self.overloaded.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_count(&self) -> u64 {
+        self.deadline.load(Ordering::Relaxed)
+    }
+}
+
+/// A queue the admission layer can shed from: any stage holding
+/// admitted-but-unlaunched requests (today: the per-device batch windows
+/// of `batch.rs`). Registered weakly so a dying facade unregisters
+/// itself by dropping its state.
+pub(crate) trait ShedQueue: Send + Sync {
+    /// Admission instant of this queue's stalest queued request, if any.
+    fn oldest(&self) -> Option<Instant>;
+    /// Fail this queue's stalest queued request with a shed error;
+    /// returns true iff a victim was shed.
+    fn shed_oldest(&self) -> bool;
+}
+
+/// Shared admission state of one replicated spawn: the config, the
+/// outcome counters, and the registry of sheddable queues. One instance
+/// is created per [`spawn_cl_replicated`] call and shared by the
+/// dispatcher, every replica facade (including respawned ones), and the
+/// caller via `ReplicatedHandle`.
+///
+/// [`spawn_cl_replicated`]: super::manager::Manager::spawn_cl_replicated
+#[derive(Default)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    /// Outcome counters (public: the soak harness reads them directly).
+    pub stats: AdmissionStats,
+    queues: Mutex<Vec<Weak<dyn ShedQueue>>>,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission {
+            cfg,
+            ..Admission::default()
+        }
+    }
+
+    pub fn cfg(&self) -> AdmissionConfig {
+        self.cfg
+    }
+
+    /// Register a sheddable queue (called by each batching facade at
+    /// spawn; respawned replicas re-register because the respawn base
+    /// spawn config carries this `Admission`). Dead entries are pruned
+    /// lazily on the next shed attempt.
+    pub(crate) fn register(&self, q: Weak<dyn ShedQueue>) {
+        let mut qs = self.queues.lock().unwrap_or_else(|p| p.into_inner());
+        qs.retain(|w| w.strong_count() > 0);
+        qs.push(q);
+    }
+
+    /// Admission decision for one extracted request, given the pool's
+    /// current admitted-but-unretired depth. `Ok(())` admits; `Err`
+    /// carries the typed `Overloaded` reply for the requester.
+    ///
+    /// Under [`ShedPolicy::DropOldest`] the bound is enforced by failing
+    /// the globally stalest queued request across all registered queues;
+    /// only when no queued victim exists (all admitted work is already
+    /// launched and cannot be recalled) does the new request bounce.
+    pub fn try_admit(&self, depth: u64, kernel: &str) -> Result<(), ErrorMsg> {
+        let Some(max) = self.cfg.max_inflight else {
+            return Ok(());
+        };
+        if depth < max {
+            return Ok(());
+        }
+        if self.cfg.shed_policy == ShedPolicy::DropOldest && self.shed_stalest() {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        self.stats.overloaded.fetch_add(1, Ordering::Relaxed);
+        Err(overloaded_error(kernel, depth, max))
+    }
+
+    /// Shed the globally stalest queued request across every live
+    /// registered queue. Returns true iff a victim was shed.
+    fn shed_stalest(&self) -> bool {
+        let candidates: Vec<Arc<dyn ShedQueue>> = {
+            let mut qs = self.queues.lock().unwrap_or_else(|p| p.into_inner());
+            qs.retain(|w| w.strong_count() > 0);
+            qs.iter().filter_map(|w| w.upgrade()).collect()
+        };
+        let mut best: Option<(&Arc<dyn ShedQueue>, Instant)> = None;
+        for q in &candidates {
+            if let Some(t) = q.oldest() {
+                if best.map(|(_, b)| t < b).unwrap_or(true) {
+                    best = Some((q, t));
+                }
+            }
+        }
+        best.map(|(q, _)| q.shed_oldest()).unwrap_or(false)
+    }
+}
+
+/// Dispatcher-to-replica envelope carrying the admission instant of a
+/// routed request. Only wrapped when the spawn has a `max_queue_wait`
+/// (the deadline-free path pays nothing); replica facades unwrap with
+/// [`unstamp`] before extraction, so preprocess hooks and `extract_args`
+/// always see the original message.
+pub struct Stamped {
+    /// When the dispatcher admitted the request.
+    pub at: Instant,
+    /// The original request message.
+    pub inner: Message,
+}
+
+/// Split a possibly-[`Stamped`] message into its admission instant and
+/// the payload message every downstream stage should interpret.
+pub(crate) fn unstamp(msg: &Message) -> (Option<Instant>, &Message) {
+    match msg.downcast_ref::<Stamped>() {
+        Some(s) => (Some(s.at), &s.inner),
+        None => (None, msg),
+    }
+}
+
+// Stable marker tokens: `ErrorMsg` is a bare reason string, so these are
+// the typed error surface. `Rejection::of` is the only parser.
+const OVERLOADED_TOKEN: &str = "overloaded:";
+const SHED_TOKEN: &str = "shed by DropOldest:";
+const DEADLINE_TOKEN: &str = "deadline exceeded:";
+
+pub(crate) fn overloaded_error(kernel: &str, depth: u64, max: u64) -> ErrorMsg {
+    ErrorMsg::new(format!(
+        "kernel {kernel}: {OVERLOADED_TOKEN} {depth} admitted requests at \
+         max_inflight {max}; rejecting new work"
+    ))
+}
+
+pub(crate) fn shed_error(kernel: &str, waited: Duration) -> ErrorMsg {
+    ErrorMsg::new(format!(
+        "kernel {kernel}: {SHED_TOKEN} queued {waited:?} and dropped to \
+         admit newer work at the admission bound"
+    ))
+}
+
+pub(crate) fn deadline_error(kernel: &str, waited: Duration, budget: Duration) -> ErrorMsg {
+    ErrorMsg::new(format!(
+        "kernel {kernel}: {DEADLINE_TOKEN} queued {waited:?} with \
+         max_queue_wait {budget:?}; failed fast before launch"
+    ))
+}
+
+/// Typed classification of an admission-layer error reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejection {
+    /// Rejected at the admission bound ([`ShedPolicy::RejectNew`]).
+    Overloaded,
+    /// Shed from a queue by [`ShedPolicy::DropOldest`].
+    Shed,
+    /// Failed fast after exceeding [`AdmissionConfig::max_queue_wait`].
+    Deadline,
+}
+
+impl Rejection {
+    /// Classify an [`ErrorMsg`]; `None` for errors the admission layer
+    /// did not produce (routing errors, broken promises, timeouts, ...).
+    pub fn of(e: &ErrorMsg) -> Option<Rejection> {
+        if e.reason.contains(OVERLOADED_TOKEN) {
+            Some(Rejection::Overloaded)
+        } else if e.reason.contains(SHED_TOKEN) {
+            Some(Rejection::Shed)
+        } else if e.reason.contains(DEADLINE_TOKEN) {
+            Some(Rejection::Deadline)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_unbounded_and_admits_everything() {
+        let cfg = AdmissionConfig::default();
+        assert!(cfg.is_unbounded());
+        let adm = Admission::new(cfg);
+        assert!(adm.try_admit(u64::MAX, "k").is_ok());
+        assert_eq!(adm.stats.overloaded_count(), 0);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let cfg = AdmissionConfig::bounded(8)
+            .deadline(Duration::from_millis(50))
+            .shed(ShedPolicy::DropOldest);
+        assert_eq!(cfg.max_inflight, Some(8));
+        assert_eq!(cfg.max_queue_wait, Some(Duration::from_millis(50)));
+        assert_eq!(cfg.shed_policy, ShedPolicy::DropOldest);
+        assert!(!cfg.is_unbounded());
+    }
+
+    #[test]
+    fn reject_new_bounces_at_the_bound() {
+        let adm = Admission::new(AdmissionConfig::bounded(4));
+        assert!(adm.try_admit(3, "k").is_ok());
+        let err = adm.try_admit(4, "k").unwrap_err();
+        assert_eq!(Rejection::of(&err), Some(Rejection::Overloaded));
+        assert!(err.reason.contains("kernel k"));
+        assert_eq!(adm.stats.overloaded_count(), 1);
+        assert_eq!(adm.stats.shed_count(), 0);
+    }
+
+    /// Fake sheddable queue: a FIFO of admission instants.
+    struct FakeQueue {
+        pending: Mutex<Vec<Instant>>,
+        shed_calls: AtomicU64,
+    }
+
+    impl FakeQueue {
+        fn with(pending: Vec<Instant>) -> Arc<FakeQueue> {
+            Arc::new(FakeQueue {
+                pending: Mutex::new(pending),
+                shed_calls: AtomicU64::new(0),
+            })
+        }
+    }
+
+    impl ShedQueue for FakeQueue {
+        fn oldest(&self) -> Option<Instant> {
+            self.pending.lock().unwrap().first().copied()
+        }
+
+        fn shed_oldest(&self) -> bool {
+            let mut p = self.pending.lock().unwrap();
+            if p.is_empty() {
+                return false;
+            }
+            p.remove(0);
+            self.shed_calls.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+    }
+
+    #[test]
+    fn drop_oldest_sheds_from_the_queue_with_the_stalest_request() {
+        let adm = Admission::new(AdmissionConfig::bounded(2).shed(ShedPolicy::DropOldest));
+        let t0 = Instant::now();
+        let older = FakeQueue::with(vec![t0, t0 + Duration::from_millis(5)]);
+        let newer = FakeQueue::with(vec![t0 + Duration::from_millis(1)]);
+        adm.register(Arc::downgrade(&(older.clone() as Arc<dyn ShedQueue>)));
+        adm.register(Arc::downgrade(&(newer.clone() as Arc<dyn ShedQueue>)));
+        assert!(adm.try_admit(2, "k").is_ok());
+        assert_eq!(older.shed_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(newer.shed_calls.load(Ordering::Relaxed), 0);
+        assert_eq!(adm.stats.shed_count(), 1);
+        // next stalest is `newer`'s t0+1ms entry
+        assert!(adm.try_admit(2, "k").is_ok());
+        assert_eq!(newer.shed_calls.load(Ordering::Relaxed), 1);
+        assert_eq!(adm.stats.shed_count(), 2);
+    }
+
+    #[test]
+    fn drop_oldest_without_a_victim_falls_back_to_rejection() {
+        let adm = Admission::new(AdmissionConfig::bounded(1).shed(ShedPolicy::DropOldest));
+        let empty = FakeQueue::with(vec![]);
+        adm.register(Arc::downgrade(&(empty.clone() as Arc<dyn ShedQueue>)));
+        let err = adm.try_admit(1, "k").unwrap_err();
+        assert_eq!(Rejection::of(&err), Some(Rejection::Overloaded));
+        assert_eq!(adm.stats.overloaded_count(), 1);
+        assert_eq!(adm.stats.shed_count(), 0);
+    }
+
+    #[test]
+    fn dead_queues_are_pruned_from_the_registry() {
+        let adm = Admission::new(AdmissionConfig::bounded(1).shed(ShedPolicy::DropOldest));
+        let q = FakeQueue::with(vec![Instant::now()]);
+        adm.register(Arc::downgrade(&(q.clone() as Arc<dyn ShedQueue>)));
+        drop(q); // facade died: the weak reference now dangles
+        let err = adm.try_admit(1, "k").unwrap_err();
+        assert_eq!(Rejection::of(&err), Some(Rejection::Overloaded));
+        assert!(adm
+            .queues
+            .lock()
+            .unwrap()
+            .is_empty(), "dangling registration must be pruned");
+    }
+
+    #[test]
+    fn rejection_classifies_every_marker_and_nothing_else() {
+        let o = overloaded_error("k", 9, 8);
+        let s = shed_error("k", Duration::from_millis(3));
+        let d = deadline_error("k", Duration::from_millis(7), Duration::from_millis(5));
+        assert_eq!(Rejection::of(&o), Some(Rejection::Overloaded));
+        assert_eq!(Rejection::of(&s), Some(Rejection::Shed));
+        assert_eq!(Rejection::of(&d), Some(Rejection::Deadline));
+        let other = ErrorMsg::new("request timed out".into());
+        assert_eq!(Rejection::of(&other), None);
+    }
+
+    #[test]
+    fn unstamp_round_trips_and_passes_plain_messages_through() {
+        let at = Instant::now();
+        let plain = Message::new(vec![1u32, 2, 3]);
+        let (none, inner) = unstamp(&plain);
+        assert!(none.is_none());
+        assert!(inner.downcast_ref::<Vec<u32>>().is_some());
+        let stamped = Message::new(Stamped {
+            at,
+            inner: Message::new(vec![4u32]),
+        });
+        let (some, inner) = unstamp(&stamped);
+        assert_eq!(some, Some(at));
+        assert_eq!(inner.downcast_ref::<Vec<u32>>().unwrap(), &vec![4u32]);
+    }
+}

@@ -49,6 +49,7 @@
 //! [`DeviceQueue::execute_fused`]: crate::runtime::DeviceQueue::execute_fused
 //! [`ResponsePromise`]: crate::actor::request::ResponsePromise
 
+use super::admission::{deadline_error, shed_error, unstamp, Admission, ShedQueue};
 use super::arg::{extract_args, shape_sig, ArgValue};
 use super::device::Device;
 use super::facade::{FacadeStats, KernelSpawn, PostFn};
@@ -73,6 +74,16 @@ pub struct BatchConfig {
     /// (time trigger; armed when the class's window opens). A zero delay
     /// flushes synchronously inside `admit` — a lone request never pays a
     /// timer hop.
+    ///
+    /// This is a *ceiling*, not the armed value: the batcher adapts the
+    /// actual hold time to each class's measured arrival rate (an EWMA of
+    /// its inter-arrival gap). An idle class — next same-class arrival not
+    /// expected within the window — flushes synchronously instead of
+    /// parking a lone request for the full delay; a hot class holds just
+    /// long enough for the count trigger to fill the window, capped here.
+    /// When the spawn has an admission deadline, the hold time is further
+    /// clamped to 3/4 of `max_queue_wait` so a window always flushes
+    /// before its requests start expiring.
     pub max_delay: Duration,
 }
 
@@ -115,6 +126,10 @@ struct PendingReq {
     promise: ResponsePromise,
     incoming: Message,
     args: Vec<ArgValue>,
+    /// When the dispatcher (or, unrouted, this facade) admitted the
+    /// request — the reference point for `max_queue_wait` deadlines and
+    /// the DropOldest staleness order.
+    admitted: Instant,
 }
 
 /// One shape class's open window. Entries persist across flushes (pending
@@ -129,6 +144,13 @@ struct Window {
     out_len: usize,
     /// Window generation: bumped on every flush of THIS class.
     gen: u64,
+    /// EWMA of this class's inter-arrival gap in nanoseconds (α = 1/8;
+    /// 0 = no gap measured yet). Persists across flushes like `gen`, so
+    /// a hot class keeps its rate estimate between windows — this is the
+    /// signal the adaptive time trigger holds or releases windows by.
+    ewma_gap_ns: u64,
+    /// Arrival instant of the class's most recent admit (feeds the EWMA).
+    last_admit: Option<Instant>,
 }
 
 impl Window {
@@ -138,7 +160,29 @@ impl Window {
             elems: 0,
             out_len,
             gen: 0,
+            ewma_gap_ns: 0,
+            last_admit: None,
         }
+    }
+
+    /// Fold one arrival into the class's inter-arrival EWMA. A fast
+    /// arrival right after an idle spell *resets* the average to the new
+    /// gap instead of blending (fast attack): a burst hitting an
+    /// idle-marked class must re-open its window on the second request,
+    /// not after the 1/8-blend catches up eight launches later.
+    fn note_arrival(&mut self, at: Instant, window: Duration) {
+        if let Some(prev) = self.last_admit {
+            let gap = (at.saturating_duration_since(prev).as_nanos() as u64).max(1);
+            let win = window.as_nanos() as u64;
+            self.ewma_gap_ns = if self.ewma_gap_ns == 0 {
+                gap
+            } else if gap <= win && self.ewma_gap_ns > win {
+                gap
+            } else {
+                (self.ewma_gap_ns.saturating_mul(7).saturating_add(gap) / 8).max(1)
+            };
+        }
+        self.last_admit = Some(at);
     }
 }
 
@@ -152,14 +196,59 @@ struct BatchState {
     caps: Vec<usize>,
     /// Output capacity in elements.
     out_cap: usize,
+    /// Admission control shared with the dispatcher (deadline budget,
+    /// shed/deadline counters); `None` for unreplicated or unbounded
+    /// spawns.
+    admission: Option<Arc<Admission>>,
     /// Per-class sub-batches.
     classes: HashMap<ClassKey, Window>,
 }
 
 impl BatchState {
+    /// The spawn's per-request queue-wait budget, if any.
+    fn queue_wait(&self) -> Option<Duration> {
+        self.admission.as_ref().and_then(|a| a.cfg().max_queue_wait)
+    }
+
+    /// Adaptive time trigger for one class: the delay to arm for a window
+    /// that just opened, derived from the class's measured arrival rate
+    /// (see [`BatchConfig::max_delay`]). Zero means "flush synchronously".
+    fn effective_delay(&self, key: &ClassKey) -> Duration {
+        let base = self.cfg.max_delay;
+        let w = match self.classes.get(key) {
+            Some(w) => w,
+            None => return base,
+        };
+        let mut delay = if w.ewma_gap_ns == 0 {
+            // cold class: no rate estimate yet, hold the configured window
+            base
+        } else {
+            let gap = Duration::from_nanos(w.ewma_gap_ns);
+            if gap > base {
+                // idle class: the next same-class arrival is not expected
+                // within the window — holding buys no coalescing, only
+                // latency for the request already here
+                Duration::ZERO
+            } else {
+                // hot class: hold just long enough for the count trigger
+                // to fill the window, capped at the configured ceiling
+                let remaining =
+                    (self.cfg.max_requests.saturating_sub(w.pending.len())).max(1) as u32;
+                gap.saturating_mul(remaining).min(base)
+            }
+        };
+        if let Some(budget) = self.queue_wait() {
+            // deadline-aware clamp: flush at 3/4 of the queue-wait budget
+            // so the window launches before its requests start expiring
+            delay = delay.min(budget - budget / 4);
+        }
+        delay
+    }
+
     /// Admit one validated request into its class's window. Returns
-    /// `Some((class, gen))` when the caller must arm the time trigger for
-    /// the window this request opened.
+    /// `Some((class, gen, delay))` when the caller must arm the time
+    /// trigger for the window this request opened, with the adaptive
+    /// delay to arm it at.
     fn admit(
         &mut self,
         key: ClassKey,
@@ -167,7 +256,8 @@ impl BatchState {
         args: Vec<ArgValue>,
         promise: ResponsePromise,
         incoming: Message,
-    ) -> Option<(ClassKey, u64)> {
+        admitted: Instant,
+    ) -> Option<(ClassKey, u64, Duration)> {
         let k0 = key.lens[0];
         let cap0 = self.caps[0];
         // a same-class request that no longer fits closes that class's
@@ -190,10 +280,12 @@ impl BatchState {
                 .classes
                 .entry(key.clone())
                 .or_insert_with(|| Window::new(out_len));
+            w.note_arrival(admitted, self.cfg.max_delay);
             w.pending.push(PendingReq {
                 promise,
                 incoming,
                 args,
+                admitted,
             });
             w.elems += k0;
             let full = w.elems >= cap0 || w.pending.len() >= max_requests;
@@ -211,7 +303,18 @@ impl BatchState {
             self.flush_class(&key);
             return None;
         }
-        arm.map(|gen| (key, gen))
+        if let Some(gen) = arm {
+            let delay = self.effective_delay(&key);
+            if delay.is_zero() {
+                // the adaptive trigger sized this class's hold time to
+                // nothing (idle class, or a sub-1ns deadline clamp):
+                // flush synchronously like an explicit zero max_delay
+                self.flush_class(&key);
+                return None;
+            }
+            return Some((key, gen, delay));
+        }
+        None
     }
 
     /// Time trigger for one class. Returns whether it flushed; a stale
@@ -264,6 +367,33 @@ impl BatchState {
     /// exactly once on every path — completion, kernel failure, or a
     /// closed device queue refusing the submission.
     fn launch(&self, reqs: Vec<PendingReq>, out_len: usize) {
+        // deadline fail-fast: a request whose queue wait already exceeded
+        // the admission budget gets a deadline error here instead of
+        // occupying launch capacity for a reply nobody is waiting for
+        let reqs = match self.queue_wait() {
+            None => reqs,
+            Some(budget) => {
+                let mut live = Vec::with_capacity(reqs.len());
+                for r in reqs {
+                    let waited = r.admitted.elapsed();
+                    if waited > budget {
+                        self.device.queue.stats().note_batch_retired(1);
+                        self.device.queue.stats().note_deadline_failed(1);
+                        if let Some(a) = &self.admission {
+                            a.stats.deadline.fetch_add(1, Ordering::Relaxed);
+                        }
+                        r.promise
+                            .deliver_err(deadline_error(&self.meta.name, waited, budget));
+                    } else {
+                        live.push(r);
+                    }
+                }
+                live
+            }
+        };
+        if reqs.is_empty() {
+            return;
+        }
         let n = reqs.len() as u64;
         let mut srcs: Vec<UploadSrc> = Vec::with_capacity(self.meta.inputs.len());
         for (j, spec) in self.meta.inputs.iter().enumerate() {
@@ -368,6 +498,55 @@ impl Drop for BatchState {
         // shutdown flush: a terminating facade launches its pending
         // windows instead of losing them (see the module docs)
         self.flush_all();
+    }
+}
+
+/// The batcher's windows are the admission layer's sheddable queue: under
+/// `DropOldest`, the dispatcher asks each registered facade for its
+/// stalest queued request and fails the global victim. Implemented on the
+/// `Mutex` wrapper so the facade's `Arc<Mutex<BatchState>>` coerces
+/// straight into the registry's `Weak<dyn ShedQueue>`.
+impl ShedQueue for Mutex<BatchState> {
+    fn oldest(&self) -> Option<Instant> {
+        let st = lock(self);
+        st.classes
+            .values()
+            .filter_map(|w| w.pending.first().map(|p| p.admitted))
+            .min()
+    }
+
+    fn shed_oldest(&self) -> bool {
+        let mut st = lock(self);
+        // windows are FIFO, so each class's stalest entry is pending[0]
+        let key = st
+            .classes
+            .iter()
+            .filter(|(_, w)| !w.pending.is_empty())
+            .min_by_key(|(_, w)| w.pending[0].admitted)
+            .map(|(k, _)| k.clone());
+        let Some(key) = key else {
+            return false;
+        };
+        let name = st.meta.name.clone();
+        let k0 = key.lens[0];
+        let victim = {
+            let w = st.classes.get_mut(&key).expect("victim window exists");
+            let victim = w.pending.remove(0);
+            w.elems = w.elems.saturating_sub(k0);
+            if w.pending.is_empty() {
+                // close the emptied window: an armed tick for this
+                // generation must not flush a successor request early
+                w.gen = w.gen.wrapping_add(1);
+                w.elems = 0;
+            }
+            victim
+        };
+        st.device.queue.stats().note_batch_retired(1);
+        st.device.queue.stats().note_shed(1);
+        drop(st);
+        let waited = victim.admitted.elapsed();
+        victim.promise.deliver_err(shed_error(&name, waited));
+        true
     }
 }
 
@@ -515,6 +694,7 @@ pub(crate) fn spawn_batching_facade(
     let post = cfg.post.clone();
     let stats = cfg.stats.clone();
     let kernel = cfg.kernel.clone();
+    let admission = cfg.admission.clone();
     Ok(sys.spawn(move |_ctx| {
         let state = Arc::new(Mutex::new(BatchState {
             device,
@@ -524,8 +704,17 @@ pub(crate) fn spawn_batching_facade(
             cfg: bcfg,
             caps,
             out_cap,
+            admission: admission.clone(),
             classes: HashMap::new(),
         }));
+        if let Some(adm) = &admission {
+            // register this facade's windows as a sheddable queue; weakly,
+            // so a dying facade unregisters by dropping its state (the
+            // respawn base carries the same Admission, so a respawned
+            // replica re-registers here too)
+            let q: Arc<dyn ShedQueue> = state.clone();
+            adm.register(Arc::downgrade(&q));
+        }
         let tick_state = state.clone();
         Behavior::new()
             .on(move |_ctx, tick: &FlushTick| {
@@ -533,7 +722,12 @@ pub(crate) fn spawn_batching_facade(
                 lock(&tick_state).on_tick(&tick.class, tick.gen);
                 no_reply()
             })
-            .on_any(move |ctx, msg| {
+            .on_any(move |ctx, raw| {
+                // routed requests may arrive stamped with their admission
+                // instant; every downstream stage interprets the inner
+                // message (an unrouted request is admitted here and now)
+                let (stamp, msg) = unstamp(raw);
+                let admitted = stamp.unwrap_or_else(Instant::now);
                 let args = match &pre {
                     Some(p) => p(msg),
                     None => extract_args(msg),
@@ -550,10 +744,25 @@ pub(crate) fn spawn_batching_facade(
                 match check_args(&st.meta, &st.caps, st.out_cap, &args) {
                     Ok((key, out_len)) => {
                         let promise = ctx.make_promise();
-                        if let Some((class, gen)) =
-                            st.admit(key, out_len, args, promise, msg.clone())
+                        if let Some(budget) = st.queue_wait() {
+                            let waited = admitted.elapsed();
+                            if waited > budget {
+                                // expired before even reaching a window:
+                                // fail fast, and early-flush the class —
+                                // anything queued there is older still
+                                st.device.queue.stats().note_deadline_failed(1);
+                                if let Some(a) = &st.admission {
+                                    a.stats.deadline.fetch_add(1, Ordering::Relaxed);
+                                }
+                                st.flush_class(&key);
+                                drop(st);
+                                promise.deliver_err(deadline_error(&kernel, waited, budget));
+                                return Reply::Promised;
+                            }
+                        }
+                        if let Some((class, gen, delay)) =
+                            st.admit(key, out_len, args, promise, msg.clone(), admitted)
                         {
-                            let delay = st.cfg.max_delay;
                             drop(st);
                             ctx.system().timer().schedule(
                                 delay,
@@ -778,6 +987,7 @@ mod tests {
             cfg,
             caps,
             out_cap,
+            admission: None,
             classes: HashMap::new(),
         }
     }
@@ -786,7 +996,15 @@ mod tests {
         vec![vec![1u32; len].into()]
     }
 
-    fn admit(st: &mut BatchState, len: usize) -> Option<(ClassKey, u64)> {
+    fn admit(st: &mut BatchState, len: usize) -> Option<(ClassKey, u64, Duration)> {
+        admit_at(st, len, Instant::now())
+    }
+
+    fn admit_at(
+        st: &mut BatchState,
+        len: usize,
+        admitted: Instant,
+    ) -> Option<(ClassKey, u64, Duration)> {
         let (key, out_len) = check_args(&st.meta, &st.caps, st.out_cap, &req(len)).unwrap();
         st.admit(
             key,
@@ -794,6 +1012,7 @@ mod tests {
             req(len),
             ResponsePromise::sink(),
             Message::new(()),
+            admitted,
         )
     }
 
@@ -810,7 +1029,7 @@ mod tests {
             },
         );
         // first request opens the window and asks for a timer at gen 0
-        let (key, gen) = admit(&mut st, 3).expect("first request arms the trigger");
+        let (key, gen, _) = admit(&mut st, 3).expect("first request arms the trigger");
         assert_eq!(gen, 0);
         // second request count-flushes the window before the tick fires
         assert!(admit(&mut st, 3).is_none());
@@ -818,7 +1037,7 @@ mod tests {
         assert!(!st.on_tick(&key, 0), "stale tick must be a no-op");
         // a NEW window of the same class persists the class generation, so
         // the old tick cannot alias it either
-        let (key2, gen2) = admit(&mut st, 3).expect("fresh window arms again");
+        let (key2, gen2, _) = admit(&mut st, 3).expect("fresh window arms again");
         assert_eq!(key2, key);
         assert_eq!(gen2, 1, "class generations persist across windows");
         assert!(!st.on_tick(&key, 0), "older-generation tick still a no-op");
@@ -895,7 +1114,7 @@ mod tests {
                 max_delay: Duration::from_secs(600),
             },
         );
-        let (key, _) = admit(&mut st, 4).unwrap();
+        let (key, _, _) = admit(&mut st, 4).unwrap();
         let _ = admit(&mut st, 4);
         assert_eq!(dev.queue.stats().batch_occupancy(), 2);
         // the device dies before the window flushes
@@ -907,5 +1126,145 @@ mod tests {
             "a refused flush must retire its requests from the gauge"
         );
         assert!(st.classes.values().all(|w| w.pending.is_empty()));
+    }
+
+    // --- adaptive delay, deadlines, shedding ----------------------------
+
+    #[test]
+    fn note_arrival_tracks_rate_with_fast_attack() {
+        let mut w = Window::new(4);
+        let win = Duration::from_millis(1);
+        let t0 = Instant::now();
+        w.note_arrival(t0, win);
+        assert_eq!(w.ewma_gap_ns, 0, "first arrival has no gap yet");
+        // a 10s gap marks the class idle
+        w.note_arrival(t0 + Duration::from_secs(10), win);
+        assert_eq!(w.ewma_gap_ns, Duration::from_secs(10).as_nanos() as u64);
+        // the first fast arrival after the idle spell RESETS the average
+        // (fast attack), instead of blending 7/8 of the 10s in
+        w.note_arrival(
+            t0 + Duration::from_secs(10) + Duration::from_micros(100),
+            win,
+        );
+        assert_eq!(w.ewma_gap_ns, Duration::from_micros(100).as_nanos() as u64);
+        // steady-state arrivals blend at α = 1/8
+        w.note_arrival(
+            t0 + Duration::from_secs(10) + Duration::from_micros(300),
+            win,
+        );
+        let expected = (100_000u64 * 7 + 200_000) / 8;
+        assert_eq!(w.ewma_gap_ns, expected);
+    }
+
+    #[test]
+    fn effective_delay_adapts_to_class_rate() {
+        let meta = meta_1in(1024);
+        let dev = test_device(&meta);
+        let base = Duration::from_millis(10);
+        let mut st = state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 8,
+                max_delay: base,
+            },
+        );
+        let (key, _, delay) = admit(&mut st, 3).expect("window opens");
+        // cold class: no rate estimate, hold the configured ceiling
+        assert_eq!(delay, base);
+        // idle class (EWMA gap beyond the window): flush synchronously
+        st.classes.get_mut(&key).unwrap().ewma_gap_ns =
+            Duration::from_millis(50).as_nanos() as u64;
+        assert_eq!(st.effective_delay(&key), Duration::ZERO);
+        // hot class: hold gap x (max_requests - pending), capped at base
+        st.classes.get_mut(&key).unwrap().ewma_gap_ns =
+            Duration::from_millis(1).as_nanos() as u64;
+        assert_eq!(st.effective_delay(&key), Duration::from_millis(7));
+        st.classes.get_mut(&key).unwrap().ewma_gap_ns =
+            Duration::from_millis(5).as_nanos() as u64;
+        assert_eq!(st.effective_delay(&key), base, "capped at max_delay");
+        // deadline clamp: never hold past 3/4 of the queue-wait budget
+        st.admission = Some(Arc::new(Admission::new(
+            crate::opencl::AdmissionConfig::default().deadline(Duration::from_millis(8)),
+        )));
+        assert_eq!(st.effective_delay(&key), Duration::from_millis(6));
+        dev.queue.stop();
+    }
+
+    #[test]
+    fn launch_fails_expired_requests_fast_instead_of_launching_them() {
+        let meta = meta_1in(64);
+        let dev = test_device(&meta);
+        let adm = Arc::new(Admission::new(
+            crate::opencl::AdmissionConfig::default().deadline(Duration::from_millis(5)),
+        ));
+        let mut st = state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 1000,
+                max_delay: Duration::from_secs(600),
+            },
+        );
+        st.admission = Some(adm.clone());
+        // one request admitted 10s ago (expired), one fresh
+        let stale = Instant::now() - Duration::from_secs(10);
+        let (key, _, _) = admit_at(&mut st, 4, stale).expect("window opens");
+        let _ = admit(&mut st, 4);
+        assert_eq!(dev.queue.stats().batch_occupancy(), 2);
+        st.flush_class(&key);
+        dev.queue.barrier(Duration::from_secs(30)).unwrap();
+        assert_eq!(
+            dev.queue.stats().launched(),
+            1,
+            "the fresh request still launches"
+        );
+        assert_eq!(dev.queue.stats().deadline_failed(), 1);
+        assert_eq!(adm.stats.deadline_count(), 1);
+        assert_eq!(dev.queue.stats().batch_occupancy(), 0);
+        dev.queue.stop();
+    }
+
+    #[test]
+    fn shed_oldest_drops_exactly_the_stalest_pending_request() {
+        let meta = meta_1in(64);
+        let dev = test_device(&meta);
+        let st = Arc::new(Mutex::new(state_of(
+            &dev,
+            meta,
+            BatchConfig {
+                max_requests: 1000,
+                max_delay: Duration::from_secs(600),
+            },
+        )));
+        let t0 = Instant::now() - Duration::from_secs(1);
+        {
+            let mut s = lock(&st);
+            // two classes; the stalest entry sits in the len-7 class
+            let _ = admit_at(&mut s, 7, t0);
+            let _ = admit_at(&mut s, 3, t0 + Duration::from_millis(10));
+            let _ = admit_at(&mut s, 7, t0 + Duration::from_millis(20));
+        }
+        assert_eq!(dev.queue.stats().batch_occupancy(), 3);
+        let q: &Mutex<BatchState> = &st;
+        assert_eq!(q.oldest(), Some(t0));
+        assert!(q.shed_oldest());
+        assert_eq!(dev.queue.stats().batch_occupancy(), 2);
+        assert_eq!(dev.queue.stats().shed_count(), 1);
+        // the len-7 window lost its head; the next stalest is the len-3
+        // entry at t0+10ms
+        assert_eq!(q.oldest(), Some(t0 + Duration::from_millis(10)));
+        {
+            let s = lock(&st);
+            let w7 = s.classes.iter().find(|(k, _)| k.lens == vec![7]).unwrap().1;
+            assert_eq!(w7.pending.len(), 1);
+            assert_eq!(w7.elems, 7, "shed victim's elements leave the window");
+        }
+        // shedding everything leaves nothing to shed
+        assert!(q.shed_oldest());
+        assert!(q.shed_oldest());
+        assert!(!q.shed_oldest(), "empty windows have no victim");
+        assert_eq!(dev.queue.stats().batch_occupancy(), 0);
+        dev.queue.stop();
     }
 }

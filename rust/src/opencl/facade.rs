@@ -18,6 +18,7 @@
 //! facades can additionally coalesce sub-capacity requests through the
 //! adaptive batcher (see [`super::batch`]).
 
+use super::admission::{deadline_error, unstamp, Admission};
 use super::arg::{extract_args, ArgValue, Mode};
 use super::batch::{spawn_batching_facade, BatchConfig};
 use super::command::{Command, CommandStats};
@@ -63,6 +64,12 @@ pub struct KernelSpawn {
     /// set, sub-capacity requests are coalesced into padded launches (one
     /// batcher per replica). See [`BatchConfig`].
     pub batching: Option<BatchConfig>,
+    /// Shared admission state (deadline budget, shed registry, outcome
+    /// counters). Set by the replicated spawn path from
+    /// [`ReplicaSet::admission`](super::placement::ReplicaSet); carried in
+    /// the respawn base config so respawned replicas rejoin the same
+    /// admission domain.
+    pub admission: Option<Arc<Admission>>,
 }
 
 impl KernelSpawn {
@@ -78,6 +85,7 @@ impl KernelSpawn {
             stats: None,
             placement: Placement::Pinned,
             batching: None,
+            admission: None,
         }
     }
 
@@ -111,6 +119,14 @@ impl KernelSpawn {
     /// Enable adaptive request batching (val-mode elementwise kernels).
     pub fn batched(mut self, cfg: BatchConfig) -> Self {
         self.batching = Some(cfg);
+        self
+    }
+
+    /// Install shared admission state (normally done by the replicated
+    /// spawn path; direct pinned spawns may set it for facade-side
+    /// deadline enforcement).
+    pub fn admission(mut self, a: Arc<Admission>) -> Self {
+        self.admission = Some(a);
         self
     }
 
@@ -213,7 +229,29 @@ pub(crate) fn spawn_on_device(
         let cfg = cfg.clone();
         let meta = meta.clone();
         let device = device.clone();
-        Behavior::new().on_any(move |ctx, msg| {
+        Behavior::new().on_any(move |ctx, raw| {
+            // routed requests may carry their admission instant; every
+            // stage below interprets the inner message
+            let (stamp, msg) = unstamp(raw);
+            if let (Some(at), Some(budget)) = (
+                stamp,
+                cfg.admission.as_ref().and_then(|a| a.cfg().max_queue_wait),
+            ) {
+                let waited = at.elapsed();
+                if waited > budget {
+                    // expired in the mailbox: fail fast instead of
+                    // enqueueing a launch nobody is waiting for
+                    device.queue.stats().note_deadline_failed(1);
+                    if let Some(a) = &cfg.admission {
+                        a.stats
+                            .deadline
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    let promise = ctx.make_promise();
+                    promise.deliver_err(deadline_error(&cfg.kernel, waited, budget));
+                    return Reply::Promised;
+                }
+            }
             let args = match &cfg.pre {
                 Some(pre) => pre(msg),
                 None => extract_args(msg),

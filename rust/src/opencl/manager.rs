@@ -136,12 +136,16 @@ impl Manager {
 
     /// Replicated spawn that also returns the [`DevicePool`] behind the
     /// dispatcher, for replica introspection — per-replica liveness,
-    /// respawn counts, queue-depth estimates ([`ReplicatedHandle`]). The
+    /// respawn counts, queue-depth estimates ([`ReplicatedHandle`]) —
+    /// plus the spawn's [`Admission`] domain (overload/shed/deadline
+    /// counters; bounds configured via
+    /// [`ReplicaSet::admission`](super::placement::ReplicaSet)). The
     /// spawn must carry `Placement::Replicated`; [`spawn_cl`] is the same
     /// spawn with the pool handle discarded.
     ///
     /// [`DevicePool`]: super::placement::DevicePool
     /// [`ReplicatedHandle`]: super::placement::ReplicatedHandle
+    /// [`Admission`]: super::admission::Admission
     /// [`spawn_cl`]: Manager::spawn_cl
     pub fn spawn_cl_replicated(
         &self,

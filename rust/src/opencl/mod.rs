@@ -20,7 +20,11 @@
 //!   policies, `Down`-driven failover and respawn, device subsets).
 //! * [`batch`]     — adaptive request batching: sub-capacity val-mode
 //!   requests coalesced into padded fused launches.
+//! * [`admission`] — bounded admission control for replicated spawns:
+//!   load shedding at an inflight bound plus per-request queue-wait
+//!   deadlines on local dispatch.
 
+pub mod admission;
 pub mod arg;
 pub mod batch;
 pub mod command;
@@ -34,6 +38,7 @@ pub mod platform;
 pub mod program;
 pub mod stage;
 
+pub use admission::{Admission, AdmissionConfig, AdmissionStats, Rejection, ShedPolicy, Stamped};
 pub use arg::{ArgValue, Mode};
 pub use batch::BatchConfig;
 pub use device::{Device, DeviceInfo, DeviceKind};

@@ -37,6 +37,14 @@
 //!   per-command dispatch cost dwarfs the work.
 //! * **Round-robin** — stateless rotation for uniform devices.
 //!
+//! Overload (see [`super::admission`]): when the spawn's
+//! [`ReplicaSet::admission`] bounds admitted work, the dispatcher checks
+//! [`DevicePool::total_depth`] before routing — past the bound it rejects
+//! with a typed `Overloaded` error or sheds the stalest queued request
+//! (`DropOldest`), and under a `max_queue_wait` deadline every routed
+//! message is stamped with its admission instant so later stages can fail
+//! it fast instead of serving a reply nobody is waiting for.
+//!
 //! Fault tolerance (the actor model's canonical failure signal, §2.1 "if
 //! an actor dies unexpectedly, the runtime system sends a message to each
 //! actor monitoring it"): the dispatcher monitors every replica facade.
@@ -56,6 +64,7 @@
 //!
 //! [`Manager::spawn_cl`]: super::manager::Manager::spawn_cl
 
+use super::admission::{Admission, AdmissionConfig, Stamped};
 use super::arg::RouteScan;
 use super::device::Device;
 use super::facade::{spawn_on_device, KernelSpawn, PreFn};
@@ -67,8 +76,8 @@ use crate::actor::{
 use crate::runtime::Manifest;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
-use std::time::Duration;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Where a spawned OpenCL actor runs.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -105,6 +114,11 @@ pub struct ReplicaSet {
     /// Device ids to replicate on; `None` spans the whole inventory.
     /// Validated at spawn: every id must exist, no duplicates, non-empty.
     pub devices: Option<Vec<usize>>,
+    /// Bounded admission: cap on admitted-but-unretired work, per-request
+    /// queue-wait deadline, and the shed policy at the bound. The default
+    /// admits everything (the pre-admission behavior). See
+    /// [`AdmissionConfig`].
+    pub admission: AdmissionConfig,
 }
 
 impl ReplicaSet {
@@ -113,6 +127,7 @@ impl ReplicaSet {
             policy,
             respawn: RespawnPolicy::default(),
             devices: None,
+            admission: AdmissionConfig::default(),
         }
     }
 
@@ -126,6 +141,12 @@ impl ReplicaSet {
     /// Set the respawn policy ([`RespawnPolicy::Never`] is the default).
     pub fn respawn(mut self, r: RespawnPolicy) -> Self {
         self.respawn = r;
+        self
+    }
+
+    /// Set the admission bounds (unbounded is the default).
+    pub fn admission(mut self, a: AdmissionConfig) -> Self {
+        self.admission = a;
         self
     }
 }
@@ -196,6 +217,25 @@ impl RespawnPolicy {
             }
         }
     }
+
+    /// Sustained-healthy period after which a replica's cumulative
+    /// [`Limited`](RespawnPolicy::Limited) respawn budget resets, or
+    /// `None` when the policy has no budget to reset. The horizon is the
+    /// policy's full backoff ladder (`backoff * 2^max` — the longest wait
+    /// a crash-looper would reach) floored at 30 s: a replica that
+    /// outlived the whole ladder plus a healthy margin is evidently not
+    /// in the same crash loop, so its next death is fresh evidence — a
+    /// replica that crashes once a week must not creep toward permanent
+    /// retirement on a lifetime attempt counter.
+    fn healthy_reset_after(self) -> Option<Duration> {
+        const FLOOR: Duration = Duration::from_secs(30);
+        match self {
+            RespawnPolicy::Limited { max, backoff } => {
+                Some(backoff.saturating_mul(1u32 << max.min(31)).max(FLOOR))
+            }
+            _ => None,
+        }
+    }
 }
 
 /// One replica of a replicated OpenCL actor: the device it is bound to and
@@ -222,6 +262,16 @@ pub struct Replica {
     /// Permanently dead: the limited respawn budget is exhausted. Never
     /// rebuilt again (`alive` stays false for routing).
     retired: AtomicBool,
+    /// When this incarnation (re)entered service — spawn or the last
+    /// [`DevicePool::install`]. The healthy-period clock the respawn
+    /// budget reset measures against.
+    healthy_since: Mutex<Instant>,
+    /// Length of the just-ended healthy period, frozen at death
+    /// (nanoseconds; 0 = no completed period yet). Frozen rather than
+    /// measured at decision time so a slow failed-rebuild loop — minutes
+    /// of compile timeouts while the replica is actually *dead* — can
+    /// never masquerade as a sustained healthy period.
+    last_healthy_ns: AtomicU64,
 }
 
 impl Replica {
@@ -234,6 +284,8 @@ impl Replica {
             respawns: AtomicU64::new(0),
             attempts: AtomicU64::new(0),
             retired: AtomicBool::new(false),
+            healthy_since: Mutex::new(Instant::now()),
+            last_healthy_ns: AtomicU64::new(0),
         }
     }
 
@@ -269,6 +321,49 @@ impl Replica {
     /// number.
     fn note_attempt(&self) -> u64 {
         self.attempts.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Time since this incarnation (re)entered service.
+    pub fn healthy_duration(&self) -> Duration {
+        self.healthy_since
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .elapsed()
+    }
+
+    /// Restart the healthy-period clock (spawn / respawn install).
+    fn mark_healthy(&self) {
+        *self
+            .healthy_since
+            .lock()
+            .unwrap_or_else(|p| p.into_inner()) = Instant::now();
+    }
+
+    /// Freeze the just-ended healthy period (called by `mark_dead`).
+    fn note_death(&self) {
+        let healthy = self.healthy_duration().as_nanos() as u64;
+        self.last_healthy_ns.store(healthy, Ordering::Relaxed);
+    }
+
+    /// The respawn-budget reset rule: if the healthy period that just
+    /// ended outlasted the policy's
+    /// [`healthy_reset_after`](RespawnPolicy) horizon, the cumulative
+    /// attempt count restarts at zero — this death is fresh evidence, not
+    /// a continuation of an old crash loop. Called at the top of every
+    /// rebuild decision; returns whether a non-zero budget was reset.
+    fn maybe_reset_budget(&self, policy: RespawnPolicy) -> bool {
+        let Some(horizon) = policy.healthy_reset_after() else {
+            return false;
+        };
+        if self.attempts.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        let healthy = Duration::from_nanos(self.last_healthy_ns.load(Ordering::Relaxed));
+        if healthy >= horizon {
+            self.attempts.store(0, Ordering::Relaxed);
+            return true;
+        }
+        false
     }
 }
 
@@ -332,6 +427,7 @@ impl DevicePool {
             .replicas
             .iter()
             .position(|r| r.is_alive() && r.facade().id() == source)?;
+        self.replicas[i].note_death();
         self.replicas[i].alive.store(false, Ordering::Release);
         self.drain_routed(i);
         Some(i)
@@ -345,6 +441,7 @@ impl DevicePool {
         let r = &self.replicas[i];
         *r.facade.write().unwrap_or_else(|p| p.into_inner()) = facade;
         self.drain_routed(i);
+        r.mark_healthy();
         r.alive.store(true, Ordering::Release);
         r.respawns.fetch_add(1, Ordering::Release);
     }
@@ -435,6 +532,19 @@ impl DevicePool {
         stats
             .inflight()
             .max(r.routed.load(Ordering::Relaxed).saturating_sub(retired))
+    }
+
+    /// Total admitted-but-unretired work across the pool: the sum of the
+    /// per-replica [`depth`](DevicePool::depth) estimates, which is the
+    /// gauge the admission bound
+    /// ([`AdmissionConfig::max_inflight`](super::AdmissionConfig)) is
+    /// enforced against. For batched pools the summand is the batchers'
+    /// occupancy gauge, which rises one actor-mailbox hop after routing —
+    /// so a storm can briefly over-admit by the messages in flight
+    /// between dispatcher and batcher; the bound is a backpressure
+    /// mechanism, not an exact semaphore.
+    pub fn total_depth(&self) -> u64 {
+        (0..self.replicas.len()).map(|i| self.depth(i)).sum()
     }
 
     /// Estimated completion time (seconds) of a `bytes`-sized request on
@@ -546,6 +656,11 @@ impl DevicePool {
 pub struct ReplicatedHandle {
     pub actor: ActorRef,
     pub pool: Arc<DevicePool>,
+    /// The spawn's admission domain: config, overload/shed/deadline
+    /// counters, and the shed registry. Present even for unbounded
+    /// spawns (with an all-`None` config) so observability code never
+    /// branches.
+    pub admission: Arc<Admission>,
 }
 
 /// What the dispatcher needs to rebuild a dead replica: recompile the
@@ -652,6 +767,15 @@ pub(crate) fn spawn_replicated(
     }
     let sys = mgr.system_handle();
     let timeout = mgr.build_timeout();
+    // one admission domain per replicated spawn, shared by the dispatcher
+    // (bound + stamping), every replica facade (deadlines, shed registry)
+    // and the caller (counters). Installed into the spawn config BEFORE
+    // the per-device spawns so batching facades register their windows —
+    // and because the respawner's base config is cloned from `cfg`,
+    // respawned replicas rejoin the same domain automatically.
+    let admission = Arc::new(Admission::new(set.admission));
+    let mut cfg = cfg;
+    cfg.admission = Some(admission.clone());
     let mut replicas = Vec::with_capacity(devices.len());
     for dev in &devices {
         // reuse the caller's program on its own device; compile the kernel
@@ -676,8 +800,19 @@ pub(crate) fn spawn_replicated(
             policy,
         })),
     };
-    let actor = spawn_dispatcher(&sys, pool.clone(), respawner, cfg.pre.clone(), cfg.kernel);
-    Ok(ReplicatedHandle { actor, pool })
+    let actor = spawn_dispatcher(
+        &sys,
+        pool.clone(),
+        respawner,
+        cfg.pre.clone(),
+        admission.clone(),
+        cfg.kernel,
+    );
+    Ok(ReplicatedHandle {
+        actor,
+        pool,
+        admission,
+    })
 }
 
 /// Consume one unit of replica `i`'s respawn budget and either start a
@@ -697,6 +832,13 @@ fn start_rebuild(
     me: ActorRef,
 ) {
     let dev = pool.replicas()[i].device.clone();
+    if pool.replicas()[i].maybe_reset_budget(respawner.policy) {
+        log::info!(
+            "kernel {kernel}: replica on device {} stayed healthy past the \
+             backoff horizon; respawn budget reset",
+            dev.id
+        );
+    }
     let attempt = pool.replicas()[i].note_attempt();
     let Some(backoff) = respawner.policy.delay_for(attempt) else {
         pool.retire(i);
@@ -738,6 +880,7 @@ fn spawn_dispatcher(
     pool: Arc<DevicePool>,
     respawner: Option<Arc<Respawner>>,
     pre: Option<PreFn>,
+    admission: Arc<Admission>,
     kernel: String,
 ) -> ActorRef {
     sys.spawn(move |ctx| {
@@ -814,13 +957,36 @@ fn spawn_dispatcher(
                     Some(s) => (s.devices.as_slice(), s.val_bytes, true),
                     None => (&[][..], 0, false),
                 };
+                // bounded admission: extracted messages are the ones that
+                // become admitted work, so they are the ones the bound
+                // gates. Past it, reject with a typed Overloaded error (or
+                // shed the stalest queued request under DropOldest) BEFORE
+                // routing — an instant error beats unbounded queue growth.
+                if extracted {
+                    if let Err(e) = admission.try_admit(pool.total_depth(), &kernel) {
+                        let promise = ctx.make_promise();
+                        promise.deliver_err(e);
+                        return Reply::Promised;
+                    }
+                }
                 match pool.route(devs, bytes) {
                     Ok(i) => {
                         if extracted {
                             // count real work toward the routed-depth estimate
                             pool.note_routed(i);
                         }
-                        ctx.delegate(&pool.replicas()[i].facade(), msg.clone());
+                        // under a queue-wait deadline, stamp the request
+                        // with its admission instant so every later stage
+                        // (batch window, facade mailbox) can expire it
+                        let outgoing = if admission.cfg().max_queue_wait.is_some() {
+                            Message::new(Stamped {
+                                at: Instant::now(),
+                                inner: msg.clone(),
+                            })
+                        } else {
+                            msg.clone()
+                        };
+                        ctx.delegate(&pool.replicas()[i].facade(), outgoing);
                     }
                     Err(e) => {
                         let promise = ctx.make_promise();
@@ -1170,6 +1336,74 @@ mod tests {
         assert_eq!(picks, vec![0, 1, 0, 1, 0, 1], "burst must alternate");
         d0.queue.stop();
         d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn total_depth_sums_the_per_replica_estimates() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let d1 = test_device(1, None);
+        let pool = pool_of(&sys, &[d0.clone(), d1.clone()], PlacementPolicy::LeastInflight);
+        assert_eq!(pool.total_depth(), 0);
+        pool.note_routed(0);
+        pool.note_routed(0);
+        pool.note_routed(1);
+        assert_eq!(pool.total_depth(), 3, "routed-but-unretired work sums");
+        d0.queue.stop();
+        d1.queue.stop();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn healthy_reset_horizon_is_the_backoff_ladder_with_a_floor() {
+        // ms-scale test backoffs floor at 30 s (a test-speed crash loop
+        // must never reset itself); big production ladders use their own
+        let small = RespawnPolicy::Limited {
+            max: 2,
+            backoff: Duration::from_millis(1),
+        };
+        assert_eq!(small.healthy_reset_after(), Some(Duration::from_secs(30)));
+        let big = RespawnPolicy::Limited {
+            max: 6,
+            backoff: Duration::from_secs(1),
+        };
+        assert_eq!(big.healthy_reset_after(), Some(Duration::from_secs(64)));
+        assert_eq!(RespawnPolicy::Never.healthy_reset_after(), None);
+        assert_eq!(RespawnPolicy::Always.healthy_reset_after(), None);
+    }
+
+    #[test]
+    fn respawn_budget_resets_after_a_sustained_healthy_period() {
+        let sys = ActorSystem::new(SystemConfig::default().with_threads(2));
+        let d0 = test_device(0, None);
+        let r = Replica::new(d0.clone(), dummy_ref(&sys));
+        let policy = RespawnPolicy::Limited {
+            max: 2,
+            backoff: Duration::from_millis(1),
+        };
+        // no attempts spent yet: nothing to reset
+        assert!(!r.maybe_reset_budget(policy));
+        r.note_attempt();
+        r.note_attempt();
+        assert_eq!(r.respawn_attempts(), 2);
+        // a short healthy period does not reset the budget
+        r.note_death();
+        assert!(!r.maybe_reset_budget(policy));
+        assert_eq!(r.respawn_attempts(), 2);
+        // rewind the healthy clock past the 30 s floor and die again:
+        // the frozen healthy period now clears the horizon
+        *r.healthy_since.lock().unwrap() = Instant::now() - Duration::from_secs(31);
+        r.note_death();
+        assert!(r.maybe_reset_budget(policy));
+        assert_eq!(r.respawn_attempts(), 0, "budget restarts at zero");
+        // policies without a budget never reset
+        r.note_attempt();
+        *r.healthy_since.lock().unwrap() = Instant::now() - Duration::from_secs(31);
+        r.note_death();
+        assert!(!r.maybe_reset_budget(RespawnPolicy::Always));
+        assert_eq!(r.respawn_attempts(), 1);
+        d0.queue.stop();
         sys.shutdown();
     }
 }

@@ -326,6 +326,14 @@ pub struct ExecStats {
     /// never reconcile there, and `launched`/`inflight` alone undercount a
     /// window that has not flushed yet.
     pub batch_pending: AtomicU64,
+    /// Requests bound to this device that the admission layer failed
+    /// fast for exceeding their `max_queue_wait` deadline (from a batch
+    /// window or a facade mailbox) — per-device counterpart of the
+    /// pool-level [`AdmissionStats`](crate::opencl::AdmissionStats).
+    pub deadline_failed: AtomicU64,
+    /// Requests bound to this device that `ShedPolicy::DropOldest`
+    /// dropped from a batch window to admit newer work.
+    pub shed: AtomicU64,
     pub execs: AtomicU64,
     pub exec_ns: AtomicU64,
     pub uploads: AtomicU64,
@@ -379,6 +387,26 @@ impl ExecStats {
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
                 Some(v.saturating_sub(n))
             });
+    }
+
+    /// Requests failed fast on this device by the deadline check.
+    pub fn deadline_failed(&self) -> u64 {
+        self.deadline_failed.load(Ordering::Relaxed)
+    }
+
+    /// Requests shed from this device's batch windows by `DropOldest`.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Record `n` requests failed fast by the deadline check.
+    pub(crate) fn note_deadline_failed(&self, n: u64) {
+        self.deadline_failed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` requests shed from a batch window.
+    pub(crate) fn note_shed(&self, n: u64) {
+        self.shed.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Fold one retired launch's service time into the EWMA (queue-thread

@@ -1,0 +1,228 @@
+//! Chaos schedule: timed replica kills against a replicated deployment.
+//!
+//! The soak harness (ISSUE: "a chaos schedule kills/respawns replicas on a
+//! timer") needs fault injection that runs *concurrently* with an offered
+//! load, not the synchronous kill-then-assert style of the placement
+//! tests. [`ChaosSchedule::start`] spawns a background thread that, every
+//! `interval`, picks a live replica from a [`DevicePool`] uniformly at
+//! random and sends its facade the same `Exit::fault` the fault-injection
+//! tests use. The dispatcher's monitor/respawn machinery does the rest —
+//! chaos only *creates* faults, it never touches pool bookkeeping, so the
+//! kill path through `Down` → `mark_dead` → respawn is exactly the
+//! production one.
+//!
+//! Determinism: victim choice uses the seeded [`Rng`], so a given
+//! `(pool size, seed, liveness history)` picks the same victims. Timing is
+//! wall-clock and therefore not deterministic — the schedule is a soak
+//! tool, not a replay log.
+
+use crate::actor::{Exit, Message};
+use crate::opencl::placement::DevicePool;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Knobs for a chaos run.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Gap between kill attempts. The first kill fires one `interval`
+    /// after [`ChaosSchedule::start`], not immediately — the soak gets a
+    /// healthy warm-up window.
+    pub interval: Duration,
+    /// Stop after this many kills; `0` means unlimited (run until
+    /// [`ChaosSchedule::stop`]).
+    pub max_kills: u64,
+    /// Seed for victim selection.
+    pub seed: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            interval: Duration::from_millis(500),
+            max_kills: 0,
+            seed: 0x9e3779b97f4a7c15,
+        }
+    }
+}
+
+/// A running chaos schedule. Dropping it (or calling [`stop`]) halts the
+/// kill thread; kills already sent stay sent.
+///
+/// [`stop`]: ChaosSchedule::stop
+pub struct ChaosSchedule {
+    stop: Arc<AtomicBool>,
+    kills: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ChaosSchedule {
+    /// Start killing replicas of `pool` on a timer.
+    pub fn start(pool: Arc<DevicePool>, cfg: ChaosConfig) -> ChaosSchedule {
+        let stop = Arc::new(AtomicBool::new(false));
+        let kills = Arc::new(AtomicU64::new(0));
+        let thread_stop = stop.clone();
+        let thread_kills = kills.clone();
+        let handle = std::thread::Builder::new()
+            .name("chaos-schedule".into())
+            .spawn(move || {
+                let mut rng = Rng::new(cfg.seed);
+                loop {
+                    // sleep in short slices so stop() returns promptly even
+                    // with a long interval
+                    let mut slept = Duration::ZERO;
+                    while slept < cfg.interval {
+                        if thread_stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let slice = (cfg.interval - slept).min(Duration::from_millis(5));
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                    if thread_stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    let replicas = pool.replicas();
+                    let live: Vec<usize> = (0..replicas.len())
+                        .filter(|&i| replicas[i].is_alive())
+                        .collect();
+                    if live.is_empty() {
+                        // everything is down (or respawning); try again next
+                        // interval rather than burning a kill on nothing
+                        continue;
+                    }
+                    let victim = live[rng.below(live.len() as u64) as usize];
+                    replicas[victim]
+                        .facade()
+                        .send_from(None, Message::new(Exit::fault("chaos kill")));
+                    let n = thread_kills.fetch_add(1, Ordering::AcqRel) + 1;
+                    log::info!(
+                        "chaos: killed replica {victim} (kill #{n} of {})",
+                        if cfg.max_kills == 0 {
+                            "unlimited".to_string()
+                        } else {
+                            cfg.max_kills.to_string()
+                        }
+                    );
+                    if cfg.max_kills != 0 && n >= cfg.max_kills {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn chaos-schedule thread");
+        ChaosSchedule {
+            stop,
+            kills,
+            handle: Some(handle),
+        }
+    }
+
+    /// Kills sent so far.
+    pub fn kill_count(&self) -> u64 {
+        self.kills.load(Ordering::Acquire)
+    }
+
+    /// Halt the schedule and return the total kill count.
+    pub fn stop(mut self) -> u64 {
+        self.halt();
+        self.kill_count()
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosSchedule {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorSystem, Behavior, Reply, SystemConfig};
+    use crate::opencl::device::{Device, DeviceInfo, DeviceKind};
+    use crate::opencl::placement::{PlacementPolicy, Replica};
+
+    fn test_pool(sys: &ActorSystem, n: usize) -> Arc<DevicePool> {
+        let replicas = (0..n)
+            .map(|id| {
+                let dev = Device::start(
+                    id,
+                    &format!("chaos-test-{id}"),
+                    DeviceKind::Cpu,
+                    DeviceInfo {
+                        compute_units: 1,
+                        max_work_items_per_cu: 1,
+                    },
+                    None,
+                )
+                .unwrap();
+                let facade = sys.spawn(|_| Behavior::new().on_any(|_c, _m| Reply::Promised));
+                Replica::new(dev, facade)
+            })
+            .collect();
+        Arc::new(DevicePool::new(replicas, PlacementPolicy::RoundRobin).unwrap())
+    }
+
+    fn eventually(mut cond: impl FnMut() -> bool, budget: Duration) -> bool {
+        let start = std::time::Instant::now();
+        while start.elapsed() < budget {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        cond()
+    }
+
+    #[test]
+    fn max_kills_bounds_the_schedule_and_stop_reports_the_count() {
+        let sys = ActorSystem::new(SystemConfig::default());
+        let pool = test_pool(&sys, 2);
+        let chaos = ChaosSchedule::start(
+            pool,
+            ChaosConfig {
+                interval: Duration::from_millis(5),
+                max_kills: 2,
+                seed: 7,
+            },
+        );
+        assert!(
+            eventually(|| chaos.kill_count() >= 2, Duration::from_secs(5)),
+            "chaos schedule never reached its kill budget"
+        );
+        let total = chaos.stop();
+        assert_eq!(total, 2, "max_kills must cap the schedule exactly");
+        sys.shutdown();
+    }
+
+    #[test]
+    fn stop_halts_an_unlimited_schedule_promptly() {
+        let sys = ActorSystem::new(SystemConfig::default());
+        let pool = test_pool(&sys, 1);
+        let chaos = ChaosSchedule::start(
+            pool,
+            ChaosConfig {
+                interval: Duration::from_secs(3600),
+                max_kills: 0,
+                seed: 1,
+            },
+        );
+        let start = std::time::Instant::now();
+        let kills = chaos.stop();
+        assert!(
+            start.elapsed() < Duration::from_secs(2),
+            "stop() must not wait out the full interval"
+        );
+        assert_eq!(kills, 0);
+        sys.shutdown();
+    }
+}

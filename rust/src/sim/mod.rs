@@ -7,9 +7,16 @@
 //! benchmarks (Figs 7/8) reproduce the paper's qualitative behavior:
 //! crossover points, transfer-bound regimes, and scaling shapes.
 //!
+//! The [`chaos`] submodule adds timed fault injection for the soak
+//! harness: a [`ChaosSchedule`] kills random live replicas of a
+//! replicated deployment on an interval, exercising the
+//! monitor/respawn path under live load.
+//!
 //! [`DeviceSpec`]: crate::opencl::DeviceSpec
 //! [`PadModel`]: crate::runtime::client::PadModel
 
+pub mod chaos;
 pub mod devices;
 
+pub use chaos::{ChaosConfig, ChaosSchedule};
 pub use devices::{gtx_780m, steering_pair, tesla_c2075, xeon_phi_5110p};

@@ -80,6 +80,22 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
+/// Percentile of a sample by the nearest-rank method (`p` in `[0, 1]`,
+/// e.g. 0.5 / 0.99 / 0.999). NaN on an empty sample. Used by the soak
+/// harness for the per-request-class p50/p99/p999 latency report — tail
+/// percentiles, not means, are what overload behavior is judged by.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let p = p.clamp(0.0, 1.0);
+    // nearest rank: ceil(p * n), 1-based; p = 0 maps to the minimum
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
 /// Ordinary least squares fit `y = a + b x`; returns `(a, b)`. Used to
 /// report slopes ("the GPU exhibits linear scaling with about half the
 /// slope", Fig 3).

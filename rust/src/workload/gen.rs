@@ -1,9 +1,141 @@
-//! Synthetic value streams for the indexing benchmarks (Fig 3). The paper's
-//! domain is network forensics (VAST): indexed fields like ports and
-//! address bytes have skewed frequency distributions, so the generator
-//! offers uniform and Zipf-like modes.
+//! Synthetic workload generators.
+//!
+//! Two layers: *what* the requests carry — [`ValueStream`] value
+//! distributions for the indexing benchmarks (Fig 3; the paper's VAST
+//! domain has skewed port/address-byte frequencies, so uniform and
+//! Zipf-like modes) — and *when/which* requests arrive, for the soak
+//! harness:
+//!
+//! - [`RequestClass`] names the three soak request shapes (batched small
+//!   val-mode, large transfer-bound, multi-stage pipeline) and
+//!   [`ClassMix`] draws among them by weight.
+//! - [`OpenLoop`] precomputes a Poisson arrival schedule at a target
+//!   offered rate — arrivals do **not** slow down when the system backs
+//!   up, which is exactly what makes overload reachable.
+//! - [`ClosedLoop`] describes the classic N-outstanding-requests driver
+//!   whose offered rate self-throttles to system speed (the control
+//!   arm: a closed loop can saturate but never truly overload).
 
 use crate::util::Rng;
+use std::time::Duration;
+
+/// A soak request class: which kernel shape a generated request exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    /// Sub-capacity val-mode request against the batched small kernel —
+    /// exercises window coalescing, adaptive delay, and shed-from-window.
+    SmallVal,
+    /// Full-size request against the transfer-bound large kernel —
+    /// exercises per-request dispatch, routing, and deadline-in-mailbox.
+    LargeTransfer,
+    /// Two chained requests (large stage feeding a small stage) —
+    /// exercises cross-class latency coupling under overload.
+    Pipeline,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 3] = [
+        RequestClass::SmallVal,
+        RequestClass::LargeTransfer,
+        RequestClass::Pipeline,
+    ];
+
+    /// Stable name used in reports (`BENCH_soak.json` class keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestClass::SmallVal => "small_val",
+            RequestClass::LargeTransfer => "large_transfer",
+            RequestClass::Pipeline => "pipeline",
+        }
+    }
+}
+
+/// Weighted mix over request classes.
+#[derive(Clone, Debug)]
+pub struct ClassMix {
+    /// `(class, weight)`; weights need not sum to 1 — draws normalize.
+    pub weights: Vec<(RequestClass, f64)>,
+}
+
+impl ClassMix {
+    /// The soak default: mostly small batched requests, a transfer-bound
+    /// minority, and a trickle of pipelines.
+    pub fn soak_default() -> ClassMix {
+        ClassMix {
+            weights: vec![
+                (RequestClass::SmallVal, 0.7),
+                (RequestClass::LargeTransfer, 0.2),
+                (RequestClass::Pipeline, 0.1),
+            ],
+        }
+    }
+
+    /// Draw one class. Zero/negative weights are never picked; an empty
+    /// or all-zero mix falls back to `SmallVal`.
+    pub fn pick(&self, rng: &mut Rng) -> RequestClass {
+        let total: f64 = self.weights.iter().map(|(_, w)| w.max(0.0)).sum();
+        if total <= 0.0 {
+            return RequestClass::SmallVal;
+        }
+        let mut x = rng.f64() * total;
+        for (class, w) in &self.weights {
+            let w = w.max(0.0);
+            if x < w {
+                return *class;
+            }
+            x -= w;
+        }
+        self.weights.last().map(|(c, _)| *c).unwrap_or(RequestClass::SmallVal)
+    }
+}
+
+/// Open-loop (Poisson) arrival process at a fixed offered rate.
+///
+/// The schedule is materialized up front as offsets from the run start, so
+/// driver threads can share one schedule through an atomic cursor and the
+/// offered load stays independent of how slowly requests complete.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoop {
+    /// Offered arrival rate, requests per second.
+    pub rps: f64,
+}
+
+impl OpenLoop {
+    /// Poisson arrival offsets within `[0, duration)`, sorted ascending.
+    /// Deterministic per seed; empty when `rps <= 0` or the duration is
+    /// zero.
+    pub fn schedule(&self, duration: Duration, seed: u64) -> Vec<Duration> {
+        if self.rps <= 0.0 || duration.is_zero() {
+            return Vec::new();
+        }
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity((self.rps * duration.as_secs_f64()) as usize + 1);
+        let mut t = 0.0f64;
+        let end = duration.as_secs_f64();
+        loop {
+            // exponential inter-arrival gap with mean 1/rps
+            let u = rng.f64();
+            t += -((1.0 - u).max(1e-12)).ln() / self.rps;
+            if t >= end {
+                break;
+            }
+            out.push(Duration::from_secs_f64(t));
+        }
+        out
+    }
+}
+
+/// Closed-loop driver shape: `concurrency` workers, each issuing its next
+/// request `think` after the previous reply. Offered rate self-throttles
+/// to completion rate, so this arm saturates without overloading —
+/// the soak uses it as the bounded-pressure control.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedLoop {
+    /// Outstanding requests held open at all times.
+    pub concurrency: usize,
+    /// Pause between a reply and the worker's next request.
+    pub think: Duration,
+}
 
 /// Distribution of a generated value stream.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -90,5 +222,78 @@ mod tests {
             }
         }
         assert!(best >= 10, "expected long runs, best={best}");
+    }
+
+    #[test]
+    fn open_loop_hits_the_offered_rate_and_is_deterministic() {
+        let gen = OpenLoop { rps: 500.0 };
+        let a = gen.schedule(Duration::from_secs(2), 11);
+        let b = gen.schedule(Duration::from_secs(2), 11);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        // Poisson count over 2s at 500 rps: mean 1000, sd ~32 — a ±20%
+        // band is ~6 sigma
+        assert!(
+            (800..=1200).contains(&a.len()),
+            "expected ~1000 arrivals, got {}",
+            a.len()
+        );
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets must be sorted");
+        assert!(a.iter().all(|t| *t < Duration::from_secs(2)));
+        let c = gen.schedule(Duration::from_secs(2), 12);
+        assert_ne!(a, c, "different seeds must give different schedules");
+    }
+
+    #[test]
+    fn open_loop_degenerate_inputs_give_empty_schedules() {
+        assert!(OpenLoop { rps: 0.0 }
+            .schedule(Duration::from_secs(1), 1)
+            .is_empty());
+        assert!(OpenLoop { rps: -5.0 }
+            .schedule(Duration::from_secs(1), 1)
+            .is_empty());
+        assert!(OpenLoop { rps: 100.0 }.schedule(Duration::ZERO, 1).is_empty());
+    }
+
+    #[test]
+    fn class_mix_respects_weights_and_skips_zero_weight_classes() {
+        let mix = ClassMix {
+            weights: vec![
+                (RequestClass::SmallVal, 0.75),
+                (RequestClass::LargeTransfer, 0.25),
+                (RequestClass::Pipeline, 0.0),
+            ],
+        };
+        let mut rng = Rng::new(42);
+        let mut counts = [0usize; 3];
+        for _ in 0..4000 {
+            match mix.pick(&mut rng) {
+                RequestClass::SmallVal => counts[0] += 1,
+                RequestClass::LargeTransfer => counts[1] += 1,
+                RequestClass::Pipeline => counts[2] += 1,
+            }
+        }
+        assert_eq!(counts[2], 0, "zero-weight class must never be drawn");
+        assert!(
+            counts[0] > 2 * counts[1],
+            "0.75/0.25 split should skew ~3:1, got {counts:?}"
+        );
+        assert!(counts[1] > 500, "minority class must still appear: {counts:?}");
+    }
+
+    #[test]
+    fn class_mix_empty_or_all_zero_falls_back_to_small_val() {
+        let mut rng = Rng::new(1);
+        let empty = ClassMix { weights: Vec::new() };
+        assert_eq!(empty.pick(&mut rng), RequestClass::SmallVal);
+        let zeros = ClassMix {
+            weights: vec![(RequestClass::Pipeline, 0.0)],
+        };
+        assert_eq!(zeros.pick(&mut rng), RequestClass::SmallVal);
+    }
+
+    #[test]
+    fn request_class_names_are_stable_report_keys() {
+        let names: Vec<&str> = RequestClass::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names, vec!["small_val", "large_transfer", "pipeline"]);
     }
 }

@@ -1,11 +1,12 @@
 //! Benchmark workloads: native CPU implementations (the "CPU side" of the
-//! heterogeneous benchmarks and the baselines of Figs 3/7/8) plus synthetic
-//! data generators.
+//! heterogeneous benchmarks and the baselines of Figs 3/7/8), synthetic
+//! data generators, and the arrival/mix generators that drive the soak
+//! harness (see [`gen`]).
 
 pub mod gen;
 pub mod mandelbrot;
 pub mod matmul;
 
-pub use gen::ValueStream;
+pub use gen::{ClassMix, ClosedLoop, OpenLoop, RequestClass, ValueStream};
 pub use mandelbrot::{mandelbrot_rows, mandelbrot_rows_parallel, MANDEL_REGION};
 pub use matmul::matmul_naive;

@@ -1079,3 +1079,252 @@ fn limited_respawn_retires_a_crash_looping_replica() {
     assert_eq!(launched_on(&mgr, 0), 0, "the retired replica must not serve");
     teardown(sys, mgr);
 }
+
+// --- admission control: overload, shedding, deadlines (tentpole) -------
+
+fn spawn_replicated_batched_copy(
+    mgr: &Manager,
+    set: ReplicaSet,
+    max_requests: usize,
+    max_delay: Duration,
+) -> ReplicatedHandle {
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    mgr.spawn_cl_replicated(
+        KernelSpawn::new(program, "copy_u32")
+            .inputs(Mode::Val, 1)
+            .output(Mode::Val)
+            .placement(Placement::Replicated(set))
+            .batched(BatchConfig {
+                max_requests,
+                max_delay,
+            }),
+    )
+    .unwrap()
+}
+
+#[test]
+fn overload_past_max_inflight_is_a_typed_overloaded_rejection() {
+    // an UNBATCHED pool makes the bound deterministic: the dispatcher's
+    // routed-minus-retired depth updates synchronously at routing time,
+    // so the third request observes exactly the two admitted ones
+    let (sys, mgr) = system("overload", 1, Duration::from_millis(300));
+    let handle = spawn_replicated_copy(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin).admission(AdmissionConfig::bounded(2)),
+    );
+    let me = sys.scoped();
+    let r1 = me.request(&handle.actor, vec![1u32; CAP]);
+    let r2 = me.request(&handle.actor, vec![2u32; CAP]);
+    assert!(
+        eventually(|| handle.pool.total_depth() == 2),
+        "both requests must be admitted (depth={})",
+        handle.pool.total_depth()
+    );
+    let err = me
+        .request(&handle.actor, vec![3u32; CAP])
+        .receive::<Vec<u32>>(T)
+        .unwrap_err();
+    assert_eq!(
+        Rejection::of(&err),
+        Some(Rejection::Overloaded),
+        "past the bound the rejection must be typed: {}",
+        err.reason
+    );
+    assert!(err.reason.contains("overloaded"), "{}", err.reason);
+    assert_eq!(handle.admission.stats.overloaded_count(), 1);
+    // the admitted requests are unaffected by the rejection
+    assert_eq!(r1.receive::<Vec<u32>>(T).unwrap(), vec![1; CAP]);
+    assert_eq!(r2.receive::<Vec<u32>>(T).unwrap(), vec![2; CAP]);
+    // and once the backlog retires, admission reopens
+    assert!(eventually(|| handle.pool.total_depth() == 0));
+    let out: Vec<u32> = me
+        .request(&handle.actor, vec![4u32; CAP])
+        .receive(T)
+        .unwrap();
+    assert_eq!(out, vec![4; CAP]);
+    assert_eq!(handle.admission.stats.overloaded_count(), 1);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn drop_oldest_sheds_exactly_the_stalest_queued_request() {
+    // A and B park in a batch window (count trigger 4, timer 1s); C
+    // arrives past the bound of 2 — DropOldest must fail exactly A (the
+    // stalest), admit C, and the eventual flush serves B and C intact
+    let (sys, mgr) = system("dropoldest", 1, Duration::ZERO);
+    let handle = spawn_replicated_batched_copy(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin)
+            .admission(AdmissionConfig::bounded(2).shed(ShedPolicy::DropOldest)),
+        4,
+        Duration::from_secs(1),
+    );
+    let me = sys.scoped();
+    let ra = me.request(&handle.actor, vec![1u32; 64]);
+    let rb = me.request(&handle.actor, vec![2u32; 64]);
+    assert!(
+        eventually(|| handle.pool.total_depth() == 2),
+        "A and B must occupy the window (depth={})",
+        handle.pool.total_depth()
+    );
+    let rc = me.request(&handle.actor, vec![3u32; 64]);
+    let err = ra.receive::<Vec<u32>>(T).unwrap_err();
+    assert_eq!(
+        Rejection::of(&err),
+        Some(Rejection::Shed),
+        "the stalest promise must fail with the typed shed error: {}",
+        err.reason
+    );
+    assert!(err.reason.contains("shed"), "{}", err.reason);
+    // B and C survive with their own slices — shedding A must not
+    // disturb its window peers
+    assert_eq!(rb.receive::<Vec<u32>>(T).unwrap(), vec![2; 64]);
+    assert_eq!(rc.receive::<Vec<u32>>(T).unwrap(), vec![3; 64]);
+    assert_eq!(handle.admission.stats.shed_count(), 1);
+    assert_eq!(handle.admission.stats.overloaded_count(), 0);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn expired_arrival_fails_fast_and_flushes_its_shape_class_early() {
+    // a request that exceeded max_queue_wait before reaching the batcher
+    // must fail with the typed deadline error AND early-flush its shape
+    // class: its window peers have been waiting too, so holding them for
+    // the timer only risks expiring them as well. The window's own timer
+    // here is the 45s deadline clamp (0.75 x 60s budget, under a 600s
+    // max_delay) — the fresh peer's reply arriving in seconds proves the
+    // flush came from the expired arrival, not any timer.
+    let (sys, mgr) = system("deadlineflush", 1, Duration::ZERO);
+    let adm = Arc::new(Admission::new(
+        AdmissionConfig::default().deadline(Duration::from_secs(60)),
+    ));
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let facade = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Val)
+                .batched(BatchConfig {
+                    max_requests: 4,
+                    max_delay: Duration::from_secs(600),
+                })
+                .admission(adm.clone()),
+        )
+        .unwrap();
+    // a monotonic clock younger than the backdate would make the stamp
+    // unrepresentable — vanishingly rare outside a just-booted VM
+    let Some(stale) = std::time::Instant::now().checked_sub(Duration::from_secs(120)) else {
+        return;
+    };
+    let me = sys.scoped();
+    let t0 = std::time::Instant::now();
+    let ra = me.request(&facade, vec![7u32; 64]);
+    let rx = me.request_msg(
+        &facade,
+        Message::new(Stamped {
+            at: stale,
+            inner: Message::new(vec![9u32; 64]),
+        }),
+    );
+    let err = rx.receive::<Vec<u32>>(T).unwrap_err();
+    assert_eq!(
+        Rejection::of(&err),
+        Some(Rejection::Deadline),
+        "an expired request must fail with the typed deadline error: {}",
+        err.reason
+    );
+    assert!(err.reason.contains("deadline"), "{}", err.reason);
+    // the half-filled window flushed early: the fresh peer replies in
+    // seconds instead of waiting out the 45s clamp
+    assert_eq!(ra.receive::<Vec<u32>>(T).unwrap(), vec![7; 64]);
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "peer reply took {:?} — the class was not early-flushed",
+        t0.elapsed()
+    );
+    assert_eq!(adm.stats.deadline_count(), 1);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn idle_class_flushes_near_synchronously_hot_class_holds_the_window() {
+    // the adaptive time valve: a cold class pays the configured
+    // max_delay once, but after a quiet period the class's EWMA arrival
+    // gap exceeds the window and the next lone request flushes
+    // synchronously instead of idling out the full timer again
+    let (sys, mgr) = system("adaptdelay", 1, Duration::ZERO);
+    let stats = Arc::new(FacadeStats::default());
+    let facade = spawn_batched(&mgr, stats.clone(), 8, Duration::from_secs(1));
+    let me = sys.scoped();
+    let t0 = std::time::Instant::now();
+    let out: Vec<u32> = me.request(&facade, vec![1u32; 64]).receive(T).unwrap();
+    assert_eq!(out, vec![1; 64]);
+    let cold = t0.elapsed();
+    assert!(
+        cold >= Duration::from_millis(600),
+        "a cold class must pay the window timer, took {cold:?}"
+    );
+    // quiet period: the measured arrival gap now exceeds max_delay
+    std::thread::sleep(Duration::from_millis(1200));
+    let t1 = std::time::Instant::now();
+    let out: Vec<u32> = me.request(&facade, vec![2u32; 64]).receive(T).unwrap();
+    assert_eq!(out, vec![2; 64]);
+    let idle = t1.elapsed();
+    assert!(
+        idle < Duration::from_millis(500),
+        "an idle class must flush near-synchronously, took {idle:?}"
+    );
+    assert_eq!(stats.launched.load(std::sync::atomic::Ordering::Relaxed), 2);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn chaos_kill_during_overload_never_loses_or_double_resolves() {
+    // the soak invariant at test scale: a replica killed in the middle of
+    // an over-admitted burst must not lose a single promise — every
+    // request resolves exactly once as a reply, a typed rejection/shed/
+    // deadline, or a routed error, and never by timeout
+    let (sys, mgr) = system("chaosburst", 2, Duration::from_millis(10));
+    let handle = spawn_replicated_batched_copy(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::LeastInflight)
+            .respawn(RespawnPolicy::Always)
+            .admission(
+                AdmissionConfig::bounded(4)
+                    .shed(ShedPolicy::DropOldest)
+                    .deadline(Duration::from_millis(100)),
+            ),
+        4,
+        Duration::from_millis(5),
+    );
+    let me = sys.scoped();
+    const N: usize = 40;
+    let pending: Vec<_> = (0..N)
+        .map(|i| me.request(&handle.actor, vec![i as u32; 64]))
+        .collect();
+    // kill a replica while the burst is in flight
+    kill(&handle.pool.replicas()[0].facade());
+    let mut ok = 0;
+    let mut failed = 0;
+    for p in pending {
+        match p.receive_msg(T) {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                assert!(
+                    !e.reason.contains("timed out"),
+                    "a request hung instead of resolving: {}",
+                    e.reason
+                );
+                failed += 1;
+            }
+        }
+    }
+    assert_eq!(ok + failed, N, "every request resolves exactly once");
+    assert!(ok > 0, "the surviving replica must keep serving");
+    // Always-respawn brings the killed replica back
+    assert!(
+        eventually(|| handle.pool.replicas()[0].respawns() >= 1),
+        "the killed replica must respawn"
+    );
+    teardown(sys, mgr);
+}
