@@ -42,11 +42,12 @@ impl AbstractActor for SharedBox {
         // Dekker handshake with the receiver's announce-then-recheck: if
         // the receiver missed this envelope, it has already bumped
         // `waiting`, so we see it here and deliver the wakeup.
+        // pairs with: blocking.rs::receive_any (waiting-bump → fence → recheck)
         fence(Ordering::SeqCst);
         if self.waiting.load(Ordering::SeqCst) > 0 {
             // taking the consumer mutex orders this notify after the
             // receiver's wait registration — no lost wakeup
-            let _g = self.buffered.lock().unwrap();
+            let _g = self.buffered.lock().unwrap_or_else(|p| p.into_inner());
             self.wakeup.notify_all();
         }
     }
@@ -145,7 +146,7 @@ impl ScopedActor {
     {
         let sb = &*self.inbox;
         let deadline = Instant::now() + timeout;
-        let mut buf = sb.buffered.lock().unwrap();
+        let mut buf = sb.buffered.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(pos) = buf.iter().position(|e| pred(e)) {
                 return buf.remove(pos);
@@ -172,9 +173,10 @@ impl ScopedActor {
             // announce, then re-check the inbox before sleeping (the
             // producer pushes, fences, then reads `waiting`)
             sb.waiting.fetch_add(1, Ordering::SeqCst);
+            // pairs with: blocking.rs::enqueue (push → fence → waiting load)
             fence(Ordering::SeqCst);
             if sb.inbox.is_empty() {
-                let (g, _) = sb.wakeup.wait_timeout(buf, deadline - now).unwrap();
+                let (g, _) = sb.wakeup.wait_timeout(buf, deadline - now).unwrap_or_else(|p| p.into_inner());
                 buf = g;
             }
             sb.waiting.fetch_sub(1, Ordering::SeqCst);

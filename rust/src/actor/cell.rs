@@ -11,7 +11,7 @@ use super::system::ActorSystem;
 use super::{AbstractActor, ActorRef};
 use std::any::Any;
 use std::collections::HashMap;
-use std::sync::atomic::{fence, AtomicU8, Ordering};
+use crate::loom_types::{fence, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::time::Duration;
 
@@ -210,6 +210,7 @@ impl ActorCell {
             // sender's CAS in schedule() still reads RUNNING — neither side
             // schedules, and every later enqueue sees a nonzero count
             // (Stored) and never schedules either.
+            // pairs with: cell.rs::schedule (the sender's SeqCst CAS)
             fence(Ordering::SeqCst);
             if !self.mailbox.is_empty() {
                 self.schedule();

@@ -42,6 +42,6 @@ pub fn compose(sys: &ActorSystem, outer: ActorRef, inner: ActorRef) -> ActorRef 
 pub fn pipeline(sys: &ActorSystem, stages: &[ActorRef]) -> ActorRef {
     assert!(!stages.is_empty(), "pipeline needs at least one stage");
     let mut it = stages.iter().cloned();
-    let first = it.next().unwrap();
+    let first = it.next().unwrap(); // lint-ok: asserted non-empty above
     it.fold(first, |acc, next| compose(sys, next, acc))
 }

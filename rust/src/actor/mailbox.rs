@@ -23,9 +23,8 @@
 
 use super::envelope::Envelope;
 use crate::concurrent::{spin_backoff, MpscQueue};
-use std::cell::UnsafeCell;
+use crate::loom_types::{AtomicU64, Ordering, UnsafeCell};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Result of an enqueue, telling the caller whether it must schedule the
 /// owning actor.
@@ -112,7 +111,7 @@ impl Mailbox {
             return Err(env);
         }
         // SAFETY: consumer-side contract — exclusive access to `replay`.
-        unsafe { (*self.replay.get()).push_front(env) };
+        self.replay.with_mut(|r| unsafe { (*r).push_front(env) });
         self.state.fetch_add(1, Ordering::SeqCst);
         Ok(())
     }
@@ -175,7 +174,7 @@ impl Mailbox {
                 break; // nothing queued beyond what we already took
             }
             // SAFETY: consumer-side contract — exclusive access to `replay`.
-            if let Some(e) = unsafe { (*self.replay.get()).pop_front() } {
+            if let Some(e) = self.replay.with_mut(|r| unsafe { (*r).pop_front() }) {
                 out.push(e);
                 got += 1;
                 continue;
@@ -216,7 +215,7 @@ impl Mailbox {
     /// message it just processed unstashed envelopes via a behavior change.
     pub(crate) fn replay_len(&self) -> usize {
         // SAFETY: consumer-side contract — exclusive access to `replay`.
-        unsafe { (*self.replay.get()).len() }
+        self.replay.with(|r| unsafe { (*r).len() })
     }
 
     /// Consumer-side: splice the unprocessed remainder of a drained batch
@@ -231,16 +230,19 @@ impl Mailbox {
         rest: impl Iterator<Item = Envelope>,
     ) {
         // SAFETY: consumer-side contract — exclusive access to `replay`.
-        let replay = unsafe { &mut *self.replay.get() };
-        // split/extend/append keeps the splice O(at + remainder) instead of
-        // the O(at * remainder) of repeated VecDeque::insert
-        let mut tail = replay.split_off(at);
-        let mut n = 0u64;
-        for e in rest {
-            replay.push_back(e);
-            n += 1;
-        }
-        replay.append(&mut tail);
+        let n = self.replay.with_mut(|r| {
+            let replay = unsafe { &mut *r };
+            // split/extend/append keeps the splice O(at + remainder) instead
+            // of the O(at * remainder) of repeated VecDeque::insert
+            let mut tail = replay.split_off(at);
+            let mut n = 0u64;
+            for e in rest {
+                replay.push_back(e);
+                n += 1;
+            }
+            replay.append(&mut tail);
+            n
+        });
         if n > 0 {
             self.state.fetch_add(n, Ordering::SeqCst);
         }
@@ -252,7 +254,7 @@ impl Mailbox {
             return Some(e);
         }
         // SAFETY: consumer-side contract — exclusive access to `replay`.
-        if let Some(e) = unsafe { (*self.replay.get()).pop_front() } {
+        if let Some(e) = self.replay.with_mut(|r| unsafe { (*r).pop_front() }) {
             return Some(e);
         }
         self.normal.pop()

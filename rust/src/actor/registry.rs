@@ -17,27 +17,27 @@ impl Registry {
 
     /// Register `who` under `name`, replacing any previous entry.
     pub fn put(&self, name: impl Into<String>, who: ActorRef) {
-        self.names.lock().unwrap().insert(name.into(), who);
+        self.names.lock().unwrap_or_else(|p| p.into_inner()).insert(name.into(), who);
     }
 
     pub fn get(&self, name: &str) -> Option<ActorRef> {
-        self.names.lock().unwrap().get(name).cloned()
+        self.names.lock().unwrap_or_else(|p| p.into_inner()).get(name).cloned()
     }
 
     pub fn remove(&self, name: &str) -> Option<ActorRef> {
-        self.names.lock().unwrap().remove(name)
+        self.names.lock().unwrap_or_else(|p| p.into_inner()).remove(name)
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.names.lock().unwrap().keys().cloned().collect()
+        self.names.lock().unwrap_or_else(|p| p.into_inner()).keys().cloned().collect()
     }
 
     pub fn clear(&self) {
-        self.names.lock().unwrap().clear();
+        self.names.lock().unwrap_or_else(|p| p.into_inner()).clear();
     }
 
     pub fn len(&self) -> usize {
-        self.names.lock().unwrap().len()
+        self.names.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 
     pub fn is_empty(&self) -> bool {

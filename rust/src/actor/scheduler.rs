@@ -28,7 +28,7 @@
 use super::cell::{ActorCell, ResumeResult};
 use super::envelope::Envelope;
 use crate::concurrent::{spin_backoff, CountedQueue, Parker, Steal, WorkDeque};
-use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::loom_types::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -99,7 +99,7 @@ impl Scheduler {
                 std::thread::Builder::new()
                     .name(format!("caf-worker-{i}"))
                     .spawn(move || worker_loop(sh, i))
-                    .expect("spawn scheduler worker")
+                    .expect("spawn scheduler worker") // lint-ok: fail-fast at system startup
             })
             .collect();
         Scheduler {
@@ -121,6 +121,8 @@ impl Scheduler {
             // the injector is never closed, so this cannot fail
             let _ = sh.injector.push(cell);
         }
+        // pairs with: scheduler.rs::worker_loop (sleepers-announce → fence
+        // → work_available recheck park protocol)
         fence(Ordering::SeqCst);
         sh.wake_any();
     }
@@ -140,7 +142,7 @@ impl Scheduler {
         for s in &self.shared.shards {
             s.parker.unpark();
         }
-        let mut ws = self.workers.lock().unwrap();
+        let mut ws = self.workers.lock().unwrap_or_else(|p| p.into_inner());
         for w in ws.drain(..) {
             let _ = w.join();
         }
@@ -192,6 +194,7 @@ fn worker_loop(shared: Arc<Shared>, me: usize) {
         }
         // Park protocol: announce, fence, re-check, then sleep.
         shared.sleepers.fetch_or(bit, Ordering::SeqCst);
+        // pairs with: scheduler.rs::submit (push → fence → wake_any)
         fence(Ordering::SeqCst);
         if shared.shutdown.load(Ordering::SeqCst) || work_available(&shared) {
             shared.sleepers.fetch_and(!bit, Ordering::SeqCst);
@@ -253,6 +256,7 @@ fn find_job(shared: &Shared, me: usize) -> Option<Runnable> {
         shared.injector_claim.store(false, Ordering::Release);
         if moved > 0 {
             // several jobs surfaced at once — recruit parked helpers
+            // pairs with: scheduler.rs::worker_loop (pre-park recheck)
             fence(Ordering::SeqCst);
             shared.wake_any();
         }
@@ -283,6 +287,7 @@ fn find_job(shared: &Shared, me: usize) -> Option<Runnable> {
                         }
                     }
                     if extra > 0 {
+                        // pairs with: scheduler.rs::worker_loop (pre-park recheck)
                         fence(Ordering::SeqCst);
                         shared.wake_any();
                     }
@@ -295,7 +300,7 @@ fn find_job(shared: &Shared, me: usize) -> Option<Runnable> {
                         // still sees its deque as non-empty if work remains
                         break;
                     }
-                    std::hint::spin_loop();
+                    crate::loom_types::cpu_relax();
                 }
                 Steal::Empty => break,
             }

@@ -199,7 +199,7 @@ impl ActorSystem {
     pub(crate) fn actor_terminated(&self, _id: ActorId) {
         let prev = self.core.alive.fetch_sub(1, Ordering::AcqRel);
         if prev == 1 {
-            let _g = self.core.idle_gate.lock().unwrap();
+            let _g = self.core.idle_gate.lock().unwrap_or_else(|p| p.into_inner());
             self.core.idle_cv.notify_all();
         }
     }
@@ -217,7 +217,7 @@ impl ActorSystem {
     /// Block until every actor terminated (CAF `await_all_actors_done`).
     pub fn await_all_actors_done(&self, timeout: Duration) -> bool {
         let deadline = std::time::Instant::now() + timeout;
-        let mut g = self.core.idle_gate.lock().unwrap();
+        let mut g = self.core.idle_gate.lock().unwrap_or_else(|p| p.into_inner());
         while self.core.alive.load(Ordering::Acquire) > 0 {
             let now = std::time::Instant::now();
             if now >= deadline {
@@ -227,7 +227,7 @@ impl ActorSystem {
                 .core
                 .idle_cv
                 .wait_timeout(g, deadline - now)
-                .unwrap();
+                .unwrap_or_else(|p| p.into_inner());
             g = g2;
         }
         true
@@ -235,14 +235,14 @@ impl ActorSystem {
 
     /// Register a named module (e.g. the OpenCL manager).
     pub fn put_module(&self, name: &'static str, module: Arc<dyn Any + Send + Sync>) {
-        self.core.modules.lock().unwrap().insert(name, module);
+        self.core.modules.lock().unwrap_or_else(|p| p.into_inner()).insert(name, module);
     }
 
     pub fn get_module<T: Any + Send + Sync>(&self, name: &'static str) -> Option<Arc<T>> {
         self.core
             .modules
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .get(name)
             .cloned()
             .and_then(|m| m.downcast::<T>().ok())
@@ -252,7 +252,7 @@ impl ActorSystem {
     /// scheduler. Actors still queued are dropped.
     pub fn shutdown(&self) {
         self.core.registry.clear();
-        self.core.modules.lock().unwrap().clear();
+        self.core.modules.lock().unwrap_or_else(|p| p.into_inner()).clear();
         self.core.timer.shutdown();
         self.core.scheduler.shutdown();
     }

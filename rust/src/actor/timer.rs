@@ -60,7 +60,7 @@ impl Timer {
         let worker = std::thread::Builder::new()
             .name("caf-timer".into())
             .spawn(move || timer_loop(st))
-            .expect("spawn timer thread");
+            .expect("spawn timer thread"); // lint-ok: fail-fast at system startup
         Timer {
             state,
             worker: Mutex::new(Some(worker)),
@@ -70,7 +70,7 @@ impl Timer {
     /// Deliver `msg` to `target` after `delay`.
     pub fn schedule(&self, delay: Duration, target: ActorRef, msg: Message) {
         let (m, cv) = &*self.state;
-        let mut st = m.lock().unwrap();
+        let mut st = m.lock().unwrap_or_else(|p| p.into_inner());
         st.seq += 1;
         let seq = st.seq;
         st.heap.push(Reverse(Entry {
@@ -84,18 +84,18 @@ impl Timer {
 
     /// Number of pending timers (diagnostics).
     pub fn pending(&self) -> usize {
-        self.state.0.lock().unwrap().heap.len()
+        self.state.0.lock().unwrap_or_else(|p| p.into_inner()).heap.len()
     }
 
     pub fn shutdown(&self) {
         {
             let (m, cv) = &*self.state;
-            let mut st = m.lock().unwrap();
+            let mut st = m.lock().unwrap_or_else(|p| p.into_inner());
             st.shutdown = true;
             st.heap.clear();
             cv.notify_all();
         }
-        if let Some(w) = self.worker.lock().unwrap().take() {
+        if let Some(w) = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = w.join();
         }
     }
@@ -103,7 +103,7 @@ impl Timer {
 
 fn timer_loop(state: Arc<(Mutex<State>, Condvar)>) {
     let (m, cv) = &*state;
-    let mut st = m.lock().unwrap();
+    let mut st = m.lock().unwrap_or_else(|p| p.into_inner());
     loop {
         if st.shutdown {
             return;
@@ -114,12 +114,12 @@ fn timer_loop(state: Arc<(Mutex<State>, Condvar)>) {
             if top.at > now {
                 break;
             }
-            let Reverse(e) = st.heap.pop().unwrap();
+            let Reverse(e) = st.heap.pop().unwrap(); // lint-ok: loop guard checked heap non-empty
             // deliver outside the lock to avoid holding it across enqueue
             drop(st);
             e.target
                 .enqueue(Envelope::asynchronous(None, e.msg));
-            st = m.lock().unwrap();
+            st = m.lock().unwrap_or_else(|p| p.into_inner());
             if st.shutdown {
                 return;
             }
@@ -129,7 +129,7 @@ fn timer_loop(state: Arc<(Mutex<State>, Condvar)>) {
             .peek()
             .map(|Reverse(e)| e.at.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
-        let (g, _) = cv.wait_timeout(st, wait).unwrap();
+        let (g, _) = cv.wait_timeout(st, wait).unwrap_or_else(|p| p.into_inner());
         st = g;
     }
 }

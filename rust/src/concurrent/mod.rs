@@ -17,6 +17,8 @@
 //!   the park is never lost.
 
 pub mod deque;
+#[cfg(feature = "model")]
+pub mod model;
 pub mod mpsc;
 pub mod parker;
 

@@ -1,0 +1,118 @@
+//! A vendored loom-style deterministic model checker for the unsafe
+//! messaging core (`concurrent::{mpsc, deque, parker}`, `actor::mailbox`,
+//! and the `ActorCell::resume` IDLE/RUNNING state machine).
+//!
+//! # How it works
+//!
+//! [`check`] runs a closure repeatedly, once per distinguishable thread
+//! interleaving. Interposed primitives ([`sync`]) turn every atomic
+//! load/store/RMW/fence, cell access, and mutex/condvar operation into a
+//! scheduling decision point; the explorer walks the decision tree
+//! depth-first, replaying a recorded prefix and branching at the deepest
+//! unexplored sibling. Plain (non-SeqCst) atomic loads additionally branch
+//! over every store they may legitimately observe under the modeled weak
+//! memory order, so stale-read bugs are found even though execution is
+//! serialized. A vector-clock happens-before vault flags data races on
+//! [`sync::UnsafeCell`] accesses, and a deadlock detector turns "every
+//! unfinished thread is blocked" into a counterexample — which is exactly
+//! the shape of a lost-wakeup bug.
+//!
+//! A counterexample panics with the failing schedule's operation trace.
+//! Exhaustive completion returns a [`Report`] with the explored /
+//! sleep-set-pruned execution counts.
+//!
+//! # Scope and bounds
+//!
+//! Exploration is bounded (operation budget per execution, optional
+//! preemption bound, execution-count ceiling); sleep sets prune
+//! schedule-equivalent interleavings. See `STATIC_ANALYSIS.md` at the repo
+//! root for the modeled memory-order semantics and the documented
+//! approximations.
+//!
+//! # Example
+//!
+//! ```
+//! use caf_ocl::concurrent::model::{self, sync::AtomicU64, sync::Ordering};
+//! use std::sync::Arc;
+//!
+//! let report = model::check(|| {
+//!     let a = Arc::new(AtomicU64::new(0));
+//!     let a2 = a.clone();
+//!     let t = model::thread::spawn(move || {
+//!         a2.store(1, Ordering::Release);
+//!     });
+//!     let _seen = a.load(Ordering::Acquire);
+//!     t.join().unwrap();
+//! });
+//! assert!(report.completed >= 1);
+//! ```
+
+mod rt;
+pub mod sync;
+
+pub use rt::Report;
+
+/// Model threads: `spawn`/`JoinHandle` with the same shape as
+/// `std::thread`, but scheduled by the explorer.
+pub mod thread {
+    pub use super::rt::{spawn, JoinHandle};
+}
+
+/// Configures one exploration. Defaults: 5 000 ops per execution, no
+/// preemption bound, sleep sets on, 1 000 000 executions.
+#[derive(Clone)]
+pub struct Builder {
+    /// Per-execution operation budget; exceeding it is reported as a
+    /// livelock counterexample (an unbounded spin).
+    pub max_ops: usize,
+    /// When set, schedules with more than this many preemptions collapse
+    /// onto the running thread — a cheap way to keep big models tractable
+    /// (most real bugs need very few preemptions).
+    pub preemption_bound: Option<usize>,
+    /// Sleep-set pruning of schedule-equivalent interleavings. Sound to
+    /// disable; only exploration time changes.
+    pub sleep_sets: bool,
+    /// Hard ceiling on explored + pruned executions; exceeding it panics
+    /// rather than silently truncating coverage.
+    pub max_executions: usize,
+}
+
+impl Default for Builder {
+    fn default() -> Builder {
+        Builder {
+            max_ops: 5_000,
+            preemption_bound: None,
+            sleep_sets: true,
+            max_executions: 1_000_000,
+        }
+    }
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder::default()
+    }
+
+    /// Exhaustively explore `f`. Panics with a counterexample trace on the
+    /// first failing schedule; otherwise returns the exploration [`Report`].
+    pub fn check<F>(&self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let cfg = rt::Config {
+            max_ops: self.max_ops,
+            preemption_bound: self.preemption_bound,
+            sleep_sets: self.sleep_sets,
+            max_executions: self.max_executions,
+        };
+        rt::explore(&cfg, std::sync::Arc::new(f))
+    }
+}
+
+/// [`Builder::check`] with the default bounds.
+pub fn check<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Builder::default().check(f)
+}

@@ -1,0 +1,1169 @@
+//! The model-checking runtime: serialized execution, DFS exploration,
+//! vector-clock happens-before tracking, and counterexample reporting.
+//!
+//! One real OS thread exists per model thread, but a baton protocol keeps
+//! exactly one runnable at a time: a thread runs user code until it reaches
+//! an interposition point ([`with_op`]), publishes the operation it wants
+//! to perform, and hands the baton to the controller. The controller (the
+//! thread that called [`crate::concurrent::model::check`]) picks which
+//! pending operation executes next — every such pick is a decision point in
+//! the depth-first search over schedules. Atomic loads add a second kind of
+//! decision point: under the modeled memory order a load may legitimately
+//! observe any store not yet ruled out by coherence or happens-before, so
+//! the explorer branches over the readable store set too.
+//!
+//! See STATIC_ANALYSIS.md for the modeled semantics and its documented
+//! approximations (CAS reads the latest store, `wait_timeout` never times
+//! out, no load buffering).
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering as ROrd};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Sentinel "thread id" meaning the controller holds the baton.
+const CONTROLLER: usize = usize::MAX;
+/// Panic payload used to unwind parked threads when an execution aborts.
+const DRAIN: &str = "__model_drain__";
+
+/// Global execution epoch. Statics interposed with model atomics register
+/// lazily against the *current* execution; a stale epoch tag means the
+/// cached location id belongs to a previous execution and must be re-made.
+static EPOCH: AtomicU64 = AtomicU64::new(1);
+
+pub(crate) fn current_epoch() -> u64 {
+    EPOCH.load(ROrd::Relaxed)
+}
+
+thread_local! {
+    static TL: RefCell<Option<(Arc<Rt>, usize)>> = const { RefCell::new(None) };
+}
+
+/// True when the calling thread is a model thread inside an active
+/// execution. Interposed primitives fall back to the real std behavior
+/// when false, so `--features model` builds still run ordinary tests.
+pub fn in_model() -> bool {
+    TL.with(|t| t.borrow().is_some())
+}
+
+fn current() -> (Arc<Rt>, usize) {
+    TL.with(|t| t.borrow().clone().expect("not on a model thread")) // lint-ok: checker-internal invariant; callers are gated by in_model()
+}
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct VClock(Vec<u32>);
+
+impl VClock {
+    pub(crate) fn get(&self, i: usize) -> u32 {
+        self.0.get(i).copied().unwrap_or(0)
+    }
+    pub(crate) fn set(&mut self, i: usize, v: u32) {
+        if self.0.len() <= i {
+            self.0.resize(i + 1, 0);
+        }
+        self.0[i] = v;
+    }
+    pub(crate) fn join(&mut self, o: &VClock) {
+        for (i, &v) in o.0.iter().enumerate() {
+            if v > self.get(i) {
+                self.set(i, v);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operations & independence
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum Op {
+    Load(usize, bool),  // (location, is_seq_cst)
+    Store(usize, bool),
+    Rmw(usize, bool),
+    Fence,
+    CellRead(usize),
+    CellWrite(usize),
+    MutexLock(usize),
+    MutexUnlock(usize),
+    CondWait(usize),
+    CondNotify(usize),
+    Join(usize),
+    Yield,
+}
+
+impl Op {
+    fn atomic_loc(&self) -> Option<usize> {
+        match *self {
+            Op::Load(l, _) | Op::Store(l, _) | Op::Rmw(l, _) => Some(l),
+            _ => None,
+        }
+    }
+    fn is_sc(&self) -> bool {
+        matches!(*self, Op::Load(_, true) | Op::Store(_, true) | Op::Rmw(_, true))
+    }
+}
+
+/// Conservative dependence relation for sleep-set pruning: two operations
+/// are treated as dependent unless they provably commute. Over-reporting
+/// dependence only costs exploration time, never soundness.
+fn dependent(a: &Op, b: &Op) -> bool {
+    use Op::*;
+    match (a, b) {
+        (Fence, _) | (_, Fence) => true,
+        (Join(_), _) | (_, Join(_)) => true,
+        (Yield, _) | (_, Yield) => false,
+        (CellRead(x), CellRead(y)) => x == y,
+        (CellRead(x), CellWrite(y)) | (CellWrite(x), CellRead(y)) | (CellWrite(x), CellWrite(y)) => {
+            x == y
+        }
+        // mutex / condvar traffic interacts through ownership and waiter
+        // queues — keep the whole category mutually dependent
+        (
+            MutexLock(_) | MutexUnlock(_) | CondWait(_) | CondNotify(_),
+            MutexLock(_) | MutexUnlock(_) | CondWait(_) | CondNotify(_),
+        ) => true,
+        (MutexLock(_) | MutexUnlock(_) | CondWait(_) | CondNotify(_), _)
+        | (_, MutexLock(_) | MutexUnlock(_) | CondWait(_) | CondNotify(_)) => false,
+        _ => {
+            // atomic ops: dependent when touching the same location, or
+            // when both are SeqCst (they interact through the SC order)
+            if a.is_sc() && b.is_sc() {
+                return true;
+            }
+            match (a.atomic_loc(), b.atomic_loc()) {
+                (Some(x), Some(y)) => x == y,
+                _ => true, // unknown combination: stay conservative
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared execution state
+
+pub(crate) struct StoreEvent {
+    pub(crate) val: u64,
+    writer: usize,
+    writer_time: u32,
+    /// Release clock propagated to acquiring readers (synchronizes-with).
+    sync: VClock,
+    sc: bool,
+}
+
+pub(crate) struct AtomicLoc {
+    history: Vec<StoreEvent>,
+    /// Per-thread coherence floor: index of the newest store each thread
+    /// has already observed. A later load may not travel back before it.
+    last_read: Vec<usize>,
+    /// Per-thread (store index, consecutive observations) of the last load
+    /// — backs the finite-visibility bound (see [`MAX_STALE_REPEATS`]).
+    repeats: Vec<(usize, u32)>,
+    last_sc_store: Option<usize>,
+}
+
+/// How many times in a row one thread may observe the same *non-latest*
+/// store of a location. C++ [intro.progress] guarantees a store becomes
+/// visible to all threads in finite time, so unbounded re-reading of a
+/// stale value models no real execution — and without this bound every
+/// spin-until-visible loop would regress the DFS forever (each backtrack
+/// adding one more stale iteration). Three consecutive stale observations
+/// is enough for every protocol bug we model (the weakened-Dekker
+/// counterexample needs two).
+const MAX_STALE_REPEATS: u32 = 3;
+
+pub(crate) struct CellLoc {
+    write: (usize, u32), // (tid, time) stamp of the last write access
+    reads: VClock,       // read stamps since the last write
+}
+
+pub(crate) struct MutexLoc {
+    owner: Option<usize>,
+    release: VClock,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum TState {
+    Active,
+    CondBlocked { cond: usize, mutex: usize },
+    MutexBlocked { mutex: usize },
+    JoinBlocked { target: usize },
+    Finished,
+}
+
+struct MThread {
+    state: TState,
+    clock: VClock,
+    /// Sync clocks picked up by relaxed loads, released by `fence(Acquire)`.
+    pending_acq: VClock,
+    /// Snapshot taken by `fence(Release)`, published by later relaxed stores.
+    rel_fence: Option<VClock>,
+    yielded: bool,
+    pending: Option<Op>,
+    /// On a freshly spawned thread: who lent it the baton to run to its
+    /// first interposition point (its parent, mid-`spawn`).
+    handoff: Option<usize>,
+    final_clock: Option<VClock>,
+}
+
+impl MThread {
+    fn new(clock: VClock) -> MThread {
+        MThread {
+            state: TState::Active,
+            clock,
+            pending_acq: VClock::default(),
+            rel_fence: None,
+            yielded: false,
+            pending: None,
+            handoff: None,
+            final_clock: None,
+        }
+    }
+    fn finished(&self) -> bool {
+        self.state == TState::Finished
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Branch {
+    Schedule {
+        candidates: Vec<usize>,
+        idx: usize,
+        /// Candidates fully explored at this node in earlier iterations —
+        /// they enter the sleep set of every later sibling subtree.
+        explored: Vec<usize>,
+    },
+    Read {
+        total: usize,
+        idx: usize,
+    },
+}
+
+#[derive(Default)]
+pub(crate) struct Path {
+    branches: Vec<Branch>,
+    pos: usize,
+}
+
+impl Path {
+    /// Advance to the next unexplored sibling of the deepest branch that
+    /// still has one. Returns false when the whole tree is exhausted.
+    fn backtrack(&mut self) -> bool {
+        while let Some(last) = self.branches.last_mut() {
+            match last {
+                Branch::Read { total, idx } if *idx + 1 < *total => {
+                    *idx += 1;
+                    return true;
+                }
+                Branch::Schedule {
+                    candidates,
+                    idx,
+                    explored,
+                } if *idx + 1 < candidates.len() => {
+                    explored.push(candidates[*idx]);
+                    *idx += 1;
+                    return true;
+                }
+                _ => {
+                    self.branches.pop();
+                }
+            }
+        }
+        false
+    }
+}
+
+#[derive(Clone)]
+pub(crate) struct Config {
+    pub(crate) max_ops: usize,
+    pub(crate) preemption_bound: Option<usize>,
+    pub(crate) sleep_sets: bool,
+    pub(crate) max_executions: usize,
+}
+
+pub(crate) struct Exec {
+    threads: Vec<MThread>,
+    pub(crate) atomics: Vec<AtomicLoc>,
+    pub(crate) cells: Vec<CellLoc>,
+    pub(crate) mutexes: Vec<MutexLoc>,
+    pub(crate) n_conds: usize,
+    sc_clock: VClock,
+    active: usize,
+    path: Path,
+    sleep: Vec<usize>,
+    trace: Vec<(usize, String)>,
+    ops_executed: usize,
+    last_running: usize,
+    preemptions: usize,
+    /// First failure (assertion, race, deadlock, livelock) in this run.
+    abort: Option<String>,
+    /// Set when the controller is tearing the execution down: parked
+    /// threads unwind with the DRAIN payload instead of continuing.
+    drain: bool,
+    cfg: Config,
+    pub(crate) epoch: u64,
+}
+
+pub(crate) struct Rt {
+    pub(crate) mx: Mutex<Exec>,
+    pub(crate) cv: Condvar,
+}
+
+fn lock(rt: &Rt) -> MutexGuard<'_, Exec> {
+    rt.mx.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Rt {
+    /// Block until the baton names `me`; panics with DRAIN on teardown.
+    fn wait_for_baton<'a>(&'a self, me: usize, mut g: MutexGuard<'a, Exec>) -> MutexGuard<'a, Exec> {
+        loop {
+            if g.drain {
+                drop(g);
+                std::panic::panic_any(DRAIN);
+            }
+            if g.active == me {
+                return g;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-side entry points (called from model::sync and model::thread)
+
+/// Publish `op`, wait for the controller's grant, then run `f` against the
+/// shared state (the op's semantics). The calling thread keeps the baton
+/// afterwards and continues user code until its next interposition point.
+pub(crate) fn with_op<R>(op: Op, f: impl FnOnce(&mut Exec, usize) -> R) -> R {
+    let (rt, me) = current();
+    let mut g = lock(&rt);
+    g.threads[me].pending = Some(op.clone());
+    release_baton(&rt, me, &mut g);
+    g = rt.wait_for_baton(me, g);
+    g.threads[me].pending = None;
+    g.ops_executed += 1;
+    if g.ops_executed > g.cfg.max_ops {
+        abort_from_thread(
+            &rt,
+            g,
+            "operation budget exceeded — unbounded spin or livelock".to_string(),
+        );
+    }
+    g.trace.push((me, format!("{op:?}")));
+    let t = g.threads[me].clock.get(me) + 1;
+    g.threads[me].clock.set(me, t);
+    f(&mut g, me)
+}
+
+/// Hand the baton away (to a pending spawn-handoff recipient if one is
+/// set, otherwise to the controller) and wake whoever is next.
+fn release_baton(rt: &Rt, me: usize, g: &mut MutexGuard<'_, Exec>) {
+    g.active = match g.threads[me].handoff.take() {
+        Some(parent) => parent,
+        None => CONTROLLER,
+    };
+    rt.cv.notify_all();
+}
+
+/// Record the first failure and unwind; the controller turns it into the
+/// counterexample panic on the caller's thread.
+pub(crate) fn abort_from_thread(rt: &Rt, mut g: MutexGuard<'_, Exec>, msg: String) -> ! {
+    if g.abort.is_none() {
+        g.abort = Some(msg);
+    }
+    g.drain = true;
+    g.active = CONTROLLER;
+    rt.cv.notify_all();
+    drop(g);
+    std::panic::panic_any(DRAIN)
+}
+
+/// A failed in-model invariant (e.g. a data race). Public to model::sync.
+pub(crate) fn fail(msg: String) -> ! {
+    let (rt, _me) = current();
+    let g = lock(&rt);
+    abort_from_thread(&rt, g, msg)
+}
+
+// -- memory-model op semantics ----------------------------------------------
+
+pub(crate) use std::sync::atomic::Ordering as MemOrd;
+
+fn is_acquire(o: MemOrd) -> bool {
+    matches!(o, MemOrd::Acquire | MemOrd::AcqRel | MemOrd::SeqCst)
+}
+fn is_release(o: MemOrd) -> bool {
+    matches!(o, MemOrd::Release | MemOrd::AcqRel | MemOrd::SeqCst)
+}
+
+fn sc_acquire(g: &mut Exec, me: usize) {
+    let sc = g.sc_clock.clone();
+    g.threads[me].clock.join(&sc);
+}
+fn sc_release(g: &mut Exec, me: usize) {
+    let c = g.threads[me].clock.clone();
+    g.sc_clock.join(&c);
+}
+
+/// Pick which store a load observes: branch over every store not excluded
+/// by per-thread coherence or happens-before.
+fn choose_read(g: &mut Exec, total: usize) -> usize {
+    if total <= 1 {
+        return 0;
+    }
+    if g.path.pos < g.path.branches.len() {
+        let b = g.path.branches[g.path.pos].clone();
+        g.path.pos += 1;
+        match b {
+            Branch::Read { total: t, idx } => {
+                assert_eq!(t, total, "model replay diverged (read branch)");
+                idx
+            }
+            other => panic!("model replay diverged: expected Read, found {other:?}"),
+        }
+    } else {
+        g.path.branches.push(Branch::Read { total, idx: 0 });
+        g.path.pos += 1;
+        0
+    }
+}
+
+pub(crate) fn model_load(g: &mut Exec, me: usize, loc: usize, ord: MemOrd) -> u64 {
+    if ord == MemOrd::SeqCst {
+        sc_acquire(g, me);
+    }
+    let clock = g.threads[me].clock.clone();
+    let al = &mut g.atomics[loc];
+    if al.last_read.len() <= me {
+        al.last_read.resize(me + 1, 0);
+    }
+    if al.repeats.len() <= me {
+        al.repeats.resize(me + 1, (usize::MAX, 0));
+    }
+    let mut floor = al.last_read[me];
+    for (i, s) in al.history.iter().enumerate().skip(floor) {
+        if s.writer_time <= clock.get(s.writer) {
+            floor = i;
+        }
+    }
+    if ord == MemOrd::SeqCst {
+        if let Some(j) = al.last_sc_store {
+            floor = floor.max(j);
+        }
+    }
+    // finite-visibility bound: after MAX_STALE_REPEATS consecutive reads of
+    // the same stale store, it drops out of the readable set
+    let n = al.history.len();
+    let (ri, rc) = al.repeats[me];
+    if rc >= MAX_STALE_REPEATS && ri >= floor && ri + 1 < n {
+        floor = ri + 1;
+    }
+    let idx = floor + choose_read(g, n - floor);
+    let al = &mut g.atomics[loc];
+    al.repeats[me] = if al.repeats[me].0 == idx {
+        (idx, al.repeats[me].1 + 1)
+    } else {
+        (idx, 1)
+    };
+    al.last_read[me] = idx;
+    let sync = al.history[idx].sync.clone();
+    let val = al.history[idx].val;
+    if is_acquire(ord) {
+        g.threads[me].clock.join(&sync);
+    } else {
+        g.threads[me].pending_acq.join(&sync);
+    }
+    if ord == MemOrd::SeqCst {
+        sc_release(g, me);
+    }
+    val
+}
+
+fn store_sync_clock(g: &Exec, me: usize, ord: MemOrd) -> VClock {
+    if is_release(ord) {
+        g.threads[me].clock.clone()
+    } else if let Some(rf) = &g.threads[me].rel_fence {
+        rf.clone()
+    } else {
+        VClock::default()
+    }
+}
+
+pub(crate) fn model_store(g: &mut Exec, me: usize, loc: usize, val: u64, ord: MemOrd) {
+    if ord == MemOrd::SeqCst {
+        sc_acquire(g, me);
+    }
+    let sync = store_sync_clock(g, me, ord);
+    let writer_time = g.threads[me].clock.get(me);
+    let sc = ord == MemOrd::SeqCst;
+    let al = &mut g.atomics[loc];
+    al.history.push(StoreEvent {
+        val,
+        writer: me,
+        writer_time,
+        sync,
+        sc,
+    });
+    let idx = al.history.len() - 1;
+    if al.last_read.len() <= me {
+        al.last_read.resize(me + 1, 0);
+    }
+    al.last_read[me] = idx; // a thread always observes its own store
+    if sc {
+        al.last_sc_store = Some(idx);
+        sc_release(g, me);
+    }
+}
+
+/// RMWs always read the latest store in modification order (atomicity) and
+/// continue its release sequence.
+pub(crate) fn model_rmw(
+    g: &mut Exec,
+    me: usize,
+    loc: usize,
+    ord: MemOrd,
+    f: impl FnOnce(u64) -> u64,
+) -> u64 {
+    if ord == MemOrd::SeqCst {
+        sc_acquire(g, me);
+    }
+    let al = &g.atomics[loc];
+    let last = al.history.len() - 1;
+    let prev = al.history[last].val;
+    let prev_sync = al.history[last].sync.clone();
+    if is_acquire(ord) {
+        g.threads[me].clock.join(&prev_sync);
+    } else {
+        g.threads[me].pending_acq.join(&prev_sync);
+    }
+    let mut sync = prev_sync; // release-sequence continuation
+    sync.join(&store_sync_clock(g, me, ord));
+    let writer_time = g.threads[me].clock.get(me);
+    let sc = ord == MemOrd::SeqCst;
+    let newv = f(prev);
+    let al = &mut g.atomics[loc];
+    al.history.push(StoreEvent {
+        val: newv,
+        writer: me,
+        writer_time,
+        sync,
+        sc,
+    });
+    let idx = al.history.len() - 1;
+    if al.last_read.len() <= me {
+        al.last_read.resize(me + 1, 0);
+    }
+    al.last_read[me] = idx;
+    if sc {
+        al.last_sc_store = Some(idx);
+        sc_release(g, me);
+    }
+    prev
+}
+
+/// Modeled CAS: reads the latest store (see STATIC_ANALYSIS.md — failure
+/// does not branch over stale values, a documented approximation).
+pub(crate) fn model_cas(
+    g: &mut Exec,
+    me: usize,
+    loc: usize,
+    expect: u64,
+    new: u64,
+    succ: MemOrd,
+    fail_ord: MemOrd,
+) -> Result<u64, u64> {
+    let last = g.atomics[loc].history.len() - 1;
+    let prev = g.atomics[loc].history[last].val;
+    if prev == expect {
+        model_rmw(g, me, loc, succ, |_| new);
+        Ok(prev)
+    } else {
+        if fail_ord == MemOrd::SeqCst {
+            sc_acquire(g, me);
+        }
+        let sync = g.atomics[loc].history[last].sync.clone();
+        if is_acquire(fail_ord) {
+            g.threads[me].clock.join(&sync);
+        } else {
+            g.threads[me].pending_acq.join(&sync);
+        }
+        let al = &mut g.atomics[loc];
+        if al.last_read.len() <= me {
+            al.last_read.resize(me + 1, 0);
+        }
+        al.last_read[me] = last;
+        if fail_ord == MemOrd::SeqCst {
+            sc_release(g, me);
+        }
+        Err(prev)
+    }
+}
+
+pub(crate) fn model_fence(g: &mut Exec, me: usize, ord: MemOrd) {
+    if is_acquire(ord) {
+        let pa = std::mem::take(&mut g.threads[me].pending_acq);
+        g.threads[me].clock.join(&pa);
+    }
+    if ord == MemOrd::SeqCst {
+        sc_acquire(g, me);
+        sc_release(g, me);
+    }
+    if is_release(ord) {
+        g.threads[me].rel_fence = Some(g.threads[me].clock.clone());
+    }
+}
+
+// -- non-atomic cell accesses (race detection) ------------------------------
+
+/// Race checks return `Err` instead of panicking: they run inside the op
+/// closure with the execution lock held, and the caller (model::sync)
+/// reports the failure via [`fail`] only after the lock is released.
+pub(crate) fn cell_read(g: &mut Exec, me: usize, loc: usize, check: bool) -> Result<(), String> {
+    // `check == false` is a with_racy access: it neither tests for a race
+    // nor leaves a read stamp — a later conflicting write must not be
+    // flagged against a read that was explicitly declared racy.
+    if !check {
+        return Ok(());
+    }
+    let clock = g.threads[me].clock.clone();
+    let (wt, wtime) = g.cells[loc].write;
+    if wtime > clock.get(wt) {
+        return Err(format!(
+            "data race: thread {me} reads a non-atomic cell while thread {wt}'s \
+             write does not happen-before it"
+        ));
+    }
+    let t = clock.get(me);
+    g.cells[loc].reads.set(me, t);
+    Ok(())
+}
+
+pub(crate) fn cell_write(g: &mut Exec, me: usize, loc: usize) -> Result<(), String> {
+    let clock = g.threads[me].clock.clone();
+    let c = &g.cells[loc];
+    let (wt, wtime) = c.write;
+    let mut racy = wtime > clock.get(wt);
+    if !racy {
+        for (i, &r) in c.reads.0.iter().enumerate() {
+            if r > clock.get(i) {
+                racy = true;
+                break;
+            }
+        }
+    }
+    if racy {
+        return Err(format!(
+            "data race: thread {me} writes a non-atomic cell concurrently with an \
+             unordered access"
+        ));
+    }
+    let t = clock.get(me);
+    g.cells[loc].write = (me, t);
+    g.cells[loc].reads = VClock::default();
+    Ok(())
+}
+
+// -- mutex / condvar --------------------------------------------------------
+
+pub(crate) fn mutex_lock(loc: usize) {
+    with_op(Op::MutexLock(loc), |g, me| {
+        debug_assert!(g.mutexes[loc].owner.is_none(), "granted a held mutex");
+        g.mutexes[loc].owner = Some(me);
+        let rel = g.mutexes[loc].release.clone();
+        g.threads[me].clock.join(&rel);
+    });
+}
+
+pub(crate) fn mutex_unlock(loc: usize) {
+    with_op(Op::MutexUnlock(loc), |g, me| {
+        debug_assert_eq!(g.mutexes[loc].owner, Some(me), "unlock by non-owner");
+        g.mutexes[loc].owner = None;
+        g.mutexes[loc].release = g.threads[me].clock.clone();
+    });
+}
+
+/// Atomically release the mutex and sleep until notified, then re-acquire.
+/// Modeled without timeouts: a `wait_timeout` that would need the timeout
+/// to make progress shows up as a deadlock counterexample instead.
+pub(crate) fn cond_wait(cond: usize, mutex: usize) {
+    with_op(Op::CondWait(cond), |g, me| {
+        debug_assert_eq!(g.mutexes[mutex].owner, Some(me), "wait without the lock");
+        g.mutexes[mutex].owner = None;
+        g.mutexes[mutex].release = g.threads[me].clock.clone();
+        g.threads[me].state = TState::CondBlocked { cond, mutex };
+    });
+    // block until a notify moves us to MutexBlocked and the controller
+    // grants the re-acquire
+    let (rt, me) = current();
+    let mut g = lock(&rt);
+    release_baton(&rt, me, &mut g);
+    g = rt.wait_for_baton(me, g);
+    debug_assert!(g.mutexes[mutex].owner.is_none());
+    g.mutexes[mutex].owner = Some(me);
+    let rel = g.mutexes[mutex].release.clone();
+    g.threads[me].clock.join(&rel);
+    g.threads[me].state = TState::Active;
+}
+
+pub(crate) fn cond_notify(cond: usize, all: bool) {
+    with_op(Op::CondNotify(cond), |g, me| {
+        let _ = me;
+        let mut woken = 0;
+        for t in g.threads.iter_mut() {
+            if let TState::CondBlocked { cond: c, mutex } = t.state {
+                if c == cond && (all || woken == 0) {
+                    t.state = TState::MutexBlocked { mutex };
+                    woken += 1;
+                }
+            }
+        }
+    });
+}
+
+pub(crate) fn model_yield() {
+    with_op(Op::Yield, |g, me| {
+        g.threads[me].yielded = true;
+    });
+}
+
+// -- registration (lazy, epoch-tagged, so `const fn new` works) -------------
+
+pub(crate) fn register_atomic(g: &mut Exec, init: u64) -> usize {
+    g.atomics.push(AtomicLoc {
+        history: vec![StoreEvent {
+            val: init,
+            writer: 0,
+            writer_time: 0, // the initial value happens-before everything
+            sync: VClock::default(),
+            sc: false,
+        }],
+        last_read: Vec::new(),
+        repeats: Vec::new(),
+        last_sc_store: None,
+    });
+    g.atomics.len() - 1
+}
+
+pub(crate) fn register_cell(g: &mut Exec) -> usize {
+    g.cells.push(CellLoc {
+        write: (0, 0),
+        reads: VClock::default(),
+    });
+    g.cells.len() - 1
+}
+
+pub(crate) fn register_mutex(g: &mut Exec) -> usize {
+    g.mutexes.push(MutexLoc {
+        owner: None,
+        release: VClock::default(),
+    });
+    g.mutexes.len() - 1
+}
+
+pub(crate) fn register_cond(g: &mut Exec) -> usize {
+    g.n_conds += 1;
+    g.n_conds - 1
+}
+
+/// Run `f` under the execution lock (for lazy registration from sync.rs).
+pub(crate) fn with_exec<R>(f: impl FnOnce(&mut Exec) -> R) -> R {
+    let (rt, _me) = current();
+    let mut g = lock(&rt);
+    f(&mut g)
+}
+
+// -- model threads ----------------------------------------------------------
+
+pub struct JoinHandle {
+    tid: usize,
+    real: Option<std::thread::JoinHandle<()>>,
+}
+
+impl JoinHandle {
+    /// Join the model thread. Always `Ok`: a panic inside a model thread
+    /// aborts the whole execution as a counterexample instead.
+    pub fn join(mut self) -> Result<(), String> {
+        let (rt, me) = current();
+        let mut g = lock(&rt);
+        if !g.threads[self.tid].finished() {
+            g.threads[me].state = TState::JoinBlocked { target: self.tid };
+            g.threads[me].pending = Some(Op::Join(self.tid));
+            release_baton(&rt, me, &mut g);
+            g = rt.wait_for_baton(me, g);
+            g.threads[me].pending = None;
+            g.threads[me].state = TState::Active;
+        }
+        let fc = g.threads[self.tid]
+            .final_clock
+            .clone()
+            .expect("joined thread has no final clock"); // lint-ok: set unconditionally when a model thread finishes
+        g.threads[me].clock.join(&fc);
+        drop(g);
+        if let Some(h) = self.real.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for JoinHandle {
+    fn drop(&mut self) {
+        // a leaked handle must not leave a real thread attached beyond the
+        // execution; the controller joins stragglers during teardown
+        let _ = self.real.take();
+    }
+}
+
+/// Spawn a model thread. The child immediately runs (on the parent's
+/// baton) up to its first interposition point, so the scheduler always
+/// sees a concrete pending operation — spawning itself is not a decision
+/// point and does not multiply the exploration tree.
+pub fn spawn<F: FnOnce() + Send + 'static>(f: F) -> JoinHandle {
+    let (rt, me) = current();
+    let mut g = lock(&rt);
+    let tid = g.threads.len();
+    let mut clock = g.threads[me].clock.clone();
+    clock.set(tid, 1);
+    let mut th = MThread::new(clock);
+    th.handoff = Some(me); // first yield returns the baton to the parent
+    g.threads.push(th);
+    g.active = tid;
+    rt.cv.notify_all();
+    drop(g);
+    let rt2 = rt.clone();
+    let real = std::thread::Builder::new()
+        .name(format!("model-{tid}"))
+        .spawn(move || run_model_thread(rt2, tid, f))
+        .expect("spawn model thread"); // lint-ok: OS thread spawn failure is unrecoverable in a test harness
+    // wait for the child to reach its first interposition point (or finish)
+    let g = lock(&rt);
+    let _g = rt.wait_for_baton(me, g);
+    JoinHandle {
+        tid,
+        real: Some(real),
+    }
+}
+
+fn run_model_thread<F: FnOnce()>(rt: Arc<Rt>, tid: usize, f: F) {
+    TL.with(|t| *t.borrow_mut() = Some((rt.clone(), tid)));
+    let g = lock(&rt);
+    let _g = rt.wait_for_baton(tid, g);
+    drop(_g);
+    let r = catch_unwind(AssertUnwindSafe(f));
+    TL.with(|t| *t.borrow_mut() = None);
+    let mut g = lock(&rt);
+    if let Err(p) = r {
+        if !is_drain_payload(&p) && g.abort.is_none() {
+            g.abort = Some(payload_str(p));
+            g.drain = true;
+        }
+    }
+    g.threads[tid].state = TState::Finished;
+    let fc = g.threads[tid].clock.clone();
+    g.threads[tid].final_clock = Some(fc);
+    let me = tid;
+    g.active = match g.threads[me].handoff.take() {
+        Some(parent) => parent,
+        None => CONTROLLER,
+    };
+    rt.cv.notify_all();
+}
+
+fn is_drain_payload(p: &Box<dyn std::any::Any + Send>) -> bool {
+    p.downcast_ref::<&str>().is_some_and(|s| *s == DRAIN)
+}
+
+fn payload_str(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controller: one execution
+
+enum Outcome {
+    Complete,
+    Pruned,
+    Abort(String, String), // message, rendered trace
+}
+
+fn intent(t: &MThread) -> Option<Op> {
+    if let Some(op) = &t.pending {
+        return Some(op.clone());
+    }
+    match t.state {
+        TState::MutexBlocked { mutex } => Some(Op::MutexLock(mutex)),
+        TState::JoinBlocked { target } => Some(Op::Join(target)),
+        _ => None,
+    }
+}
+
+fn enabled(g: &Exec, tid: usize) -> bool {
+    let t = &g.threads[tid];
+    match &t.state {
+        TState::Finished | TState::CondBlocked { .. } => false,
+        TState::MutexBlocked { mutex } => g.mutexes[*mutex].owner.is_none(),
+        TState::JoinBlocked { target } => g.threads[*target].finished(),
+        TState::Active => match &t.pending {
+            Some(Op::MutexLock(m)) => g.mutexes[*m].owner.is_none(),
+            Some(_) => true,
+            None => false, // running user code (holds the baton) or not started
+        },
+    }
+}
+
+fn run_once(cfg: &Config, path: Path, f: Arc<dyn Fn() + Send + Sync>) -> (Outcome, Path) {
+    EPOCH.fetch_add(1, ROrd::Relaxed);
+    let epoch = EPOCH.load(ROrd::Relaxed);
+    let rt = Arc::new(Rt {
+        mx: Mutex::new(Exec {
+            threads: vec![MThread::new({
+                let mut c = VClock::default();
+                c.set(0, 1);
+                c
+            })],
+            atomics: Vec::new(),
+            cells: Vec::new(),
+            mutexes: Vec::new(),
+            n_conds: 0,
+            sc_clock: VClock::default(),
+            active: 0, // main model thread starts with the baton
+            path,
+            sleep: Vec::new(),
+            trace: Vec::new(),
+            ops_executed: 0,
+            last_running: 0,
+            preemptions: 0,
+            abort: None,
+            drain: false,
+            cfg: cfg.clone(),
+            epoch,
+        }),
+        cv: Condvar::new(),
+    });
+    let rt2 = rt.clone();
+    let main = std::thread::Builder::new()
+        .name("model-0".into())
+        .spawn(move || run_model_thread(rt2, 0, move || f()))
+        .expect("spawn model main thread"); // lint-ok: OS thread spawn failure is unrecoverable in a test harness
+
+    let outcome = controller_loop(&rt);
+    // teardown: unwind every thread still parked at an interposition point
+    drain_execution(&rt);
+    let _ = main.join();
+    let mut g = lock(&rt);
+    let path = std::mem::take(&mut g.path);
+    drop(g);
+    (outcome, path)
+}
+
+fn controller_loop(rt: &Arc<Rt>) -> Outcome {
+    loop {
+        let mut g = lock(rt);
+        while g.active != CONTROLLER {
+            g = rt.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+        if let Some(msg) = g.abort.clone() {
+            let trace = render_trace(&g);
+            return Outcome::Abort(msg, trace);
+        }
+        if g.threads.iter().all(|t| t.finished()) {
+            return Outcome::Complete;
+        }
+        let enabled_tids: Vec<usize> =
+            (0..g.threads.len()).filter(|&t| enabled(&g, t)).collect();
+        if enabled_tids.is_empty() {
+            let blocked: Vec<usize> = (0..g.threads.len())
+                .filter(|&t| !g.threads[t].finished())
+                .collect();
+            let trace = render_trace(&g);
+            return Outcome::Abort(
+                format!(
+                    "deadlock: threads {blocked:?} are all blocked — lost wakeup, \
+                     lost message, or missing notify"
+                ),
+                trace,
+            );
+        }
+        // yield demotion: a spinning thread (one that executed a model
+        // yield) is not scheduled while non-yielded work exists, so spin
+        // loops cannot starve the store they are waiting for
+        let non_yielded: Vec<usize> = enabled_tids
+            .iter()
+            .copied()
+            .filter(|&t| !g.threads[t].yielded)
+            .collect();
+        let mut base = if non_yielded.is_empty() {
+            for t in g.threads.iter_mut() {
+                t.yielded = false;
+            }
+            enabled_tids.clone()
+        } else {
+            non_yielded
+        };
+        // preemption bounding: once the budget is spent, keep running the
+        // current thread while it stays enabled
+        if let Some(bound) = g.cfg.preemption_bound {
+            if g.preemptions >= bound && base.contains(&g.last_running) {
+                base = vec![g.last_running];
+            }
+        }
+        // sleep-set pruning: skip threads whose next op was already fully
+        // explored at an ancestor and has not been woken by a dependent op
+        let candidates: Vec<usize> = if g.cfg.sleep_sets {
+            let sleeping = g.sleep.clone();
+            let filtered: Vec<usize> = base
+                .iter()
+                .copied()
+                .filter(|t| !sleeping.contains(t))
+                .collect();
+            if filtered.is_empty() {
+                // everything enabled is asleep: this schedule is equivalent
+                // to one already explored
+                return Outcome::Pruned;
+            }
+            filtered
+        } else {
+            base
+        };
+        let chosen = schedule_branch(&mut g, candidates);
+        if chosen != g.last_running
+            && enabled(&g, g.last_running)
+            && !g.threads[g.last_running].finished()
+        {
+            g.preemptions += 1;
+        }
+        // wake sleepers whose op is dependent with what is about to run
+        if let Some(op) = intent(&g.threads[chosen]) {
+            let threads_ops: Vec<(usize, Option<Op>)> = g
+                .sleep
+                .iter()
+                .map(|&s| (s, intent(&g.threads[s])))
+                .collect();
+            g.sleep = threads_ops
+                .into_iter()
+                .filter(|(_, sop)| match sop {
+                    Some(sop) => !dependent(sop, &op),
+                    None => false,
+                })
+                .map(|(s, _)| s)
+                .collect();
+        }
+        g.last_running = chosen;
+        g.threads[chosen].yielded = false;
+        g.active = chosen;
+        rt.cv.notify_all();
+    }
+}
+
+/// Replay or extend the schedule decision at the current path position.
+fn schedule_branch(g: &mut Exec, candidates: Vec<usize>) -> usize {
+    if g.path.pos < g.path.branches.len() {
+        let b = g.path.branches[g.path.pos].clone();
+        g.path.pos += 1;
+        match b {
+            Branch::Schedule {
+                candidates: c,
+                idx,
+                explored,
+            } => {
+                assert_eq!(
+                    c, candidates,
+                    "model replay diverged (schedule candidates changed)"
+                );
+                // siblings fully explored at this node sleep in this subtree
+                for e in &explored {
+                    if !g.sleep.contains(e) {
+                        g.sleep.push(*e);
+                    }
+                }
+                c[idx]
+            }
+            other => panic!("model replay diverged: expected Schedule, found {other:?}"),
+        }
+    } else {
+        let chosen = candidates[0];
+        g.path.branches.push(Branch::Schedule {
+            candidates,
+            idx: 0,
+            explored: Vec::new(),
+        });
+        g.path.pos += 1;
+        chosen
+    }
+}
+
+fn drain_execution(rt: &Arc<Rt>) {
+    loop {
+        let mut g = lock(rt);
+        g.drain = true;
+        let next = (0..g.threads.len()).find(|&t| !g.threads[t].finished());
+        let Some(tid) = next else { return };
+        g.active = tid;
+        rt.cv.notify_all();
+        while !(g.active == CONTROLLER || g.threads[tid].finished()) {
+            g = rt.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+fn render_trace(g: &Exec) -> String {
+    let mut s = String::new();
+    for (tid, op) in &g.trace {
+        s.push_str(&format!("    t{tid}: {op}\n"));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Exploration driver
+
+/// Summary of one exhaustive exploration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Report {
+    /// Executions that ran to completion with every invariant holding.
+    pub completed: usize,
+    /// Schedules abandoned by sleep-set pruning as equivalent to an
+    /// already-explored execution.
+    pub pruned: usize,
+}
+
+pub(crate) fn explore(cfg: &Config, f: Arc<dyn Fn() + Send + Sync>) -> Report {
+    let mut path = Path::default();
+    let mut completed = 0usize;
+    let mut pruned = 0usize;
+    loop {
+        path.pos = 0;
+        let (outcome, p) = run_once(cfg, path, f.clone());
+        path = p;
+        match outcome {
+            Outcome::Complete => completed += 1,
+            Outcome::Pruned => pruned += 1,
+            Outcome::Abort(msg, trace) => {
+                panic!(
+                    "model counterexample after {} execution(s): {msg}\n  trace (tid: op):\n{trace}",
+                    completed + pruned + 1
+                );
+            }
+        }
+        if completed + pruned >= cfg.max_executions {
+            panic!(
+                "model exploration exceeded the execution bound ({}) — tighten the \
+                 model or raise Builder::max_executions",
+                cfg.max_executions
+            );
+        }
+        if !path.backtrack() {
+            break;
+        }
+    }
+    Report { completed, pruned }
+}

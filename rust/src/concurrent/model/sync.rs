@@ -1,0 +1,704 @@
+//! Model-instrumented drop-in replacements for the std sync primitives
+//! used by the messaging core.
+//!
+//! Inside a [`super::check`] execution, every operation is an
+//! interposition point: it is recorded with its `Ordering`, becomes a
+//! scheduling decision, and feeds the happens-before vault. Outside an
+//! execution (e.g. ordinary unit tests compiled with `--features model`)
+//! every type falls back to the real std primitive, so model builds stay
+//! runnable everywhere — only `check` turns the instrumentation on.
+//!
+//! Location registration is lazy and epoch-tagged: a `const fn new` only
+//! stores the initial value; the first access inside an execution
+//! registers the location against that execution's epoch, which is what
+//! lets interposed `static`s exist (each execution sees a fresh location
+//! holding the initial value).
+
+use super::rt;
+use super::rt::Op;
+use std::sync::atomic::Ordering as ROrd;
+
+pub use std::sync::atomic::Ordering;
+
+pub use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Lazy epoch-tagged registration
+
+/// Packed (epoch << 32) | (location id + 1); 0 = unregistered.
+struct Reg(std::sync::atomic::AtomicU64);
+
+impl Reg {
+    const fn new() -> Reg {
+        Reg(std::sync::atomic::AtomicU64::new(0))
+    }
+
+    fn loc(&self, register: impl FnOnce() -> usize) -> usize {
+        let epoch = rt::current_epoch() & 0xffff_ffff;
+        let packed = self.0.load(ROrd::Relaxed);
+        if packed >> 32 == epoch && packed & 0xffff_ffff != 0 {
+            return (packed & 0xffff_ffff) as usize - 1;
+        }
+        let id = register();
+        self.0
+            .store((epoch << 32) | (id as u64 + 1), ROrd::Relaxed);
+        id
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+
+macro_rules! model_atomic {
+    ($name:ident, $real:ty, $prim:ty) => {
+        pub struct $name {
+            fallback: $real,
+            reg: Reg,
+            init: u64,
+        }
+
+        impl $name {
+            pub const fn new(v: $prim) -> $name {
+                $name {
+                    fallback: <$real>::new(v),
+                    reg: Reg::new(),
+                    init: v as u64,
+                }
+            }
+
+            fn loc(&self) -> usize {
+                let init = self.init;
+                self.reg
+                    .loc(|| rt::with_exec(|g| rt::register_atomic(g, init)))
+            }
+
+            pub fn load(&self, ord: Ordering) -> $prim {
+                if !rt::in_model() {
+                    return self.fallback.load(ord);
+                }
+                let loc = self.loc();
+                rt::with_op(Op::Load(loc, ord == Ordering::SeqCst), |g, me| {
+                    rt::model_load(g, me, loc, ord) as $prim
+                })
+            }
+
+            pub fn store(&self, v: $prim, ord: Ordering) {
+                if !rt::in_model() {
+                    return self.fallback.store(v, ord);
+                }
+                let loc = self.loc();
+                rt::with_op(Op::Store(loc, ord == Ordering::SeqCst), |g, me| {
+                    rt::model_store(g, me, loc, v as u64, ord)
+                })
+            }
+
+            pub fn swap(&self, v: $prim, ord: Ordering) -> $prim {
+                if !rt::in_model() {
+                    return self.fallback.swap(v, ord);
+                }
+                let loc = self.loc();
+                rt::with_op(Op::Rmw(loc, ord == Ordering::SeqCst), |g, me| {
+                    rt::model_rmw(g, me, loc, ord, |_| v as u64) as $prim
+                })
+            }
+
+            pub fn compare_exchange(
+                &self,
+                cur: $prim,
+                new: $prim,
+                succ: Ordering,
+                fail: Ordering,
+            ) -> Result<$prim, $prim> {
+                if !rt::in_model() {
+                    return self.fallback.compare_exchange(cur, new, succ, fail);
+                }
+                let loc = self.loc();
+                rt::with_op(Op::Rmw(loc, succ == Ordering::SeqCst), |g, me| {
+                    rt::model_cas(g, me, loc, cur as u64, new as u64, succ, fail)
+                        .map(|v| v as $prim)
+                        .map_err(|v| v as $prim)
+                })
+            }
+
+            pub fn compare_exchange_weak(
+                &self,
+                cur: $prim,
+                new: $prim,
+                succ: Ordering,
+                fail: Ordering,
+            ) -> Result<$prim, $prim> {
+                // no spurious failures in the model: a weak CAS explores a
+                // subset of the strong CAS's behaviors plus retry loops the
+                // schedules already cover
+                self.compare_exchange(cur, new, succ, fail)
+            }
+        }
+
+        impl $name {
+            fn rmw_with(&self, ord: Ordering, f: impl FnOnce($prim) -> $prim) -> $prim {
+                let loc = self.loc();
+                rt::with_op(Op::Rmw(loc, ord == Ordering::SeqCst), |g, me| {
+                    rt::model_rmw(g, me, loc, ord, |old| f(old as $prim) as u64) as $prim
+                })
+            }
+
+            pub fn fetch_add(&self, v: $prim, ord: Ordering) -> $prim {
+                if !rt::in_model() {
+                    return self.fallback.fetch_add(v, ord);
+                }
+                self.rmw_with(ord, |old| old.wrapping_add(v))
+            }
+
+            pub fn fetch_sub(&self, v: $prim, ord: Ordering) -> $prim {
+                if !rt::in_model() {
+                    return self.fallback.fetch_sub(v, ord);
+                }
+                self.rmw_with(ord, |old| old.wrapping_sub(v))
+            }
+
+            pub fn fetch_or(&self, v: $prim, ord: Ordering) -> $prim {
+                if !rt::in_model() {
+                    return self.fallback.fetch_or(v, ord);
+                }
+                self.rmw_with(ord, |old| old | v)
+            }
+
+            pub fn fetch_and(&self, v: $prim, ord: Ordering) -> $prim {
+                if !rt::in_model() {
+                    return self.fallback.fetch_and(v, ord);
+                }
+                self.rmw_with(ord, |old| old & v)
+            }
+        }
+    };
+}
+
+model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+model_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+model_atomic!(AtomicU8, std::sync::atomic::AtomicU8, u8);
+
+/// Signed variant: values round-trip through the u64 store as a bit cast.
+pub struct AtomicIsize {
+    fallback: std::sync::atomic::AtomicIsize,
+    reg: Reg,
+    init: u64,
+}
+
+impl AtomicIsize {
+    pub const fn new(v: isize) -> AtomicIsize {
+        AtomicIsize {
+            fallback: std::sync::atomic::AtomicIsize::new(v),
+            reg: Reg::new(),
+            init: v as u64,
+        }
+    }
+
+    fn loc(&self) -> usize {
+        let init = self.init;
+        self.reg
+            .loc(|| rt::with_exec(|g| rt::register_atomic(g, init)))
+    }
+
+    pub fn load(&self, ord: Ordering) -> isize {
+        if !rt::in_model() {
+            return self.fallback.load(ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Load(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_load(g, me, loc, ord) as isize
+        })
+    }
+
+    pub fn store(&self, v: isize, ord: Ordering) {
+        if !rt::in_model() {
+            return self.fallback.store(v, ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Store(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_store(g, me, loc, v as u64, ord)
+        })
+    }
+
+    pub fn compare_exchange(
+        &self,
+        cur: isize,
+        new: isize,
+        succ: Ordering,
+        fail: Ordering,
+    ) -> Result<isize, isize> {
+        if !rt::in_model() {
+            return self.fallback.compare_exchange(cur, new, succ, fail);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Rmw(loc, succ == Ordering::SeqCst), |g, me| {
+            rt::model_cas(g, me, loc, cur as u64, new as u64, succ, fail)
+                .map(|v| v as isize)
+                .map_err(|v| v as isize)
+        })
+    }
+}
+
+pub struct AtomicBool {
+    fallback: std::sync::atomic::AtomicBool,
+    reg: Reg,
+    init: u64,
+}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> AtomicBool {
+        AtomicBool {
+            fallback: std::sync::atomic::AtomicBool::new(v),
+            reg: Reg::new(),
+            init: v as u64,
+        }
+    }
+
+    fn loc(&self) -> usize {
+        let init = self.init;
+        self.reg
+            .loc(|| rt::with_exec(|g| rt::register_atomic(g, init)))
+    }
+
+    pub fn load(&self, ord: Ordering) -> bool {
+        if !rt::in_model() {
+            return self.fallback.load(ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Load(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_load(g, me, loc, ord) != 0
+        })
+    }
+
+    pub fn store(&self, v: bool, ord: Ordering) {
+        if !rt::in_model() {
+            return self.fallback.store(v, ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Store(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_store(g, me, loc, v as u64, ord)
+        })
+    }
+
+    pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+        if !rt::in_model() {
+            return self.fallback.swap(v, ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Rmw(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_rmw(g, me, loc, ord, |_| v as u64) != 0
+        })
+    }
+
+    pub fn fetch_or(&self, v: bool, ord: Ordering) -> bool {
+        if !rt::in_model() {
+            return self.fallback.fetch_or(v, ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Rmw(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_rmw(g, me, loc, ord, |old| old | v as u64) != 0
+        })
+    }
+
+    pub fn compare_exchange(
+        &self,
+        cur: bool,
+        new: bool,
+        succ: Ordering,
+        fail: Ordering,
+    ) -> Result<bool, bool> {
+        if !rt::in_model() {
+            return self.fallback.compare_exchange(cur, new, succ, fail);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Rmw(loc, succ == Ordering::SeqCst), |g, me| {
+            rt::model_cas(g, me, loc, cur as u64, new as u64, succ, fail)
+                .map(|v| v != 0)
+                .map_err(|v| v != 0)
+        })
+    }
+}
+
+pub struct AtomicPtr<T> {
+    fallback: std::sync::atomic::AtomicPtr<T>,
+    reg: Reg,
+    init: u64,
+}
+
+impl<T> AtomicPtr<T> {
+    pub fn new(p: *mut T) -> AtomicPtr<T> {
+        AtomicPtr {
+            fallback: std::sync::atomic::AtomicPtr::new(p),
+            reg: Reg::new(),
+            init: p as usize as u64,
+        }
+    }
+
+    fn loc(&self) -> usize {
+        let init = self.init;
+        self.reg
+            .loc(|| rt::with_exec(|g| rt::register_atomic(g, init)))
+    }
+
+    pub fn load(&self, ord: Ordering) -> *mut T {
+        if !rt::in_model() {
+            return self.fallback.load(ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Load(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_load(g, me, loc, ord) as usize as *mut T
+        })
+    }
+
+    pub fn store(&self, p: *mut T, ord: Ordering) {
+        if !rt::in_model() {
+            return self.fallback.store(p, ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Store(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_store(g, me, loc, p as usize as u64, ord)
+        })
+    }
+
+    pub fn swap(&self, p: *mut T, ord: Ordering) -> *mut T {
+        if !rt::in_model() {
+            return self.fallback.swap(p, ord);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Rmw(loc, ord == Ordering::SeqCst), |g, me| {
+            rt::model_rmw(g, me, loc, ord, |_| p as usize as u64) as usize as *mut T
+        })
+    }
+
+    pub fn compare_exchange(
+        &self,
+        cur: *mut T,
+        new: *mut T,
+        succ: Ordering,
+        fail: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        if !rt::in_model() {
+            return self.fallback.compare_exchange(cur, new, succ, fail);
+        }
+        let loc = self.loc();
+        rt::with_op(Op::Rmw(loc, succ == Ordering::SeqCst), |g, me| {
+            rt::model_cas(
+                g,
+                me,
+                loc,
+                cur as usize as u64,
+                new as usize as u64,
+                succ,
+                fail,
+            )
+            .map(|v| v as usize as *mut T)
+            .map_err(|v| v as usize as *mut T)
+        })
+    }
+}
+
+pub fn fence(ord: Ordering) {
+    if !rt::in_model() {
+        return std::sync::atomic::fence(ord);
+    }
+    rt::with_op(Op::Fence, |g, me| rt::model_fence(g, me, ord));
+}
+
+/// Spin-backoff hook: under the model a spin/yield becomes a demoting
+/// yield op — the spinner is not rescheduled while other non-yielded
+/// threads can run, which keeps spin loops from exploding the schedule
+/// space or starving the store they wait for.
+pub fn yield_now() {
+    if !rt::in_model() {
+        return std::thread::yield_now();
+    }
+    rt::model_yield();
+}
+
+pub fn spin_loop() {
+    if !rt::in_model() {
+        return std::hint::spin_loop();
+    }
+    rt::model_yield();
+}
+
+// ---------------------------------------------------------------------------
+// UnsafeCell with checked access
+
+/// An `UnsafeCell` whose accesses are race-checked under the model.
+///
+/// `with`/`with_mut` declare a read/write access: the checker verifies the
+/// access is happens-before-ordered against every conflicting access and
+/// panics with a `data race` counterexample otherwise. `with_racy` is the
+/// *checked exemption* used by `deque.rs::steal`'s speculative slot read —
+/// it is still an interposition point (schedules explore it) but skips the
+/// race verdict, which documents exactly which access is intentionally racy.
+pub struct UnsafeCell<T: ?Sized> {
+    reg: Reg,
+    data: std::cell::UnsafeCell<T>,
+}
+
+// mirrors std::cell::UnsafeCell: Send iff T: Send; never Sync — the
+// wrapping type opts in, exactly as with the std cell
+unsafe impl<T: ?Sized + Send> Send for UnsafeCell<T> {}
+
+impl<T> UnsafeCell<T> {
+    pub const fn new(v: T) -> UnsafeCell<T> {
+        UnsafeCell {
+            reg: Reg::new(),
+            data: std::cell::UnsafeCell::new(v),
+        }
+    }
+
+    fn loc(&self) -> usize {
+        self.reg.loc(|| rt::with_exec(rt::register_cell))
+    }
+
+    /// Declare a read access and run `f` on the raw pointer.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as reading through `std::cell::UnsafeCell::get`: the
+    /// caller guarantees no concurrent mutable access outside the model.
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        if rt::in_model() {
+            let loc = self.loc();
+            let verdict =
+                rt::with_op(Op::CellRead(loc), |g, me| rt::cell_read(g, me, loc, true));
+            if let Err(msg) = verdict {
+                rt::fail(msg);
+            }
+        }
+        f(self.data.get())
+    }
+
+    /// Declare a write access and run `f` on the raw pointer.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as writing through `std::cell::UnsafeCell::get`.
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        if rt::in_model() {
+            let loc = self.loc();
+            let verdict = rt::with_op(Op::CellWrite(loc), |g, me| rt::cell_write(g, me, loc));
+            if let Err(msg) = verdict {
+                rt::fail(msg);
+            }
+        }
+        f(self.data.get())
+    }
+
+    /// Declare a deliberately racy read (no race verdict, still an
+    /// interposition point). Use only with an adjacent comment citing the
+    /// reason — the linter's interposition rule plus this name make the
+    /// exemption greppable.
+    pub fn with_racy<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        if rt::in_model() {
+            let loc = self.loc();
+            let _ = rt::with_op(Op::CellRead(loc), |g, me| rt::cell_read(g, me, loc, false));
+        }
+        f(self.data.get())
+    }
+
+    /// Raw pointer without an access declaration — single-threaded setup
+    /// and teardown only (constructors, `Drop`).
+    pub fn get(&self) -> *mut T {
+        self.data.get()
+    }
+
+    pub fn into_inner(self) -> T {
+        self.data.into_inner()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex / Condvar
+
+pub struct Mutex<T: ?Sized> {
+    reg: Reg,
+    /// Fallback raw lock (outside-model use); data lives in the cell so
+    /// the model path can hand out guards without a real lock.
+    raw: std::sync::Mutex<()>,
+    data: std::cell::UnsafeCell<T>,
+}
+
+unsafe impl<T: ?Sized + Send> Send for Mutex<T> {}
+unsafe impl<T: ?Sized + Send> Sync for Mutex<T> {}
+
+pub struct MutexGuard<'a, T: ?Sized> {
+    mx: &'a Mutex<T>,
+    real: Option<std::sync::MutexGuard<'a, ()>>,
+    model_loc: Option<usize>,
+}
+
+pub type LockResult<G> = Result<G, std::sync::PoisonError<G>>;
+
+impl<T> Mutex<T> {
+    pub const fn new(v: T) -> Mutex<T> {
+        Mutex {
+            reg: Reg::new(),
+            raw: std::sync::Mutex::new(()),
+            data: std::cell::UnsafeCell::new(v),
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn loc(&self) -> usize {
+        self.reg.loc(|| rt::with_exec(rt::register_mutex))
+    }
+
+    /// Never poisoned under the model: a panic while holding the lock
+    /// aborts the whole execution as a counterexample instead.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if !rt::in_model() {
+            let real = self.raw.lock().unwrap_or_else(|p| p.into_inner());
+            return Ok(MutexGuard {
+                mx: self,
+                real: Some(real),
+                model_loc: None,
+            });
+        }
+        let loc = self.loc();
+        rt::mutex_lock(loc);
+        Ok(MutexGuard {
+            mx: self,
+            real: None,
+            model_loc: Some(loc),
+        })
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(loc) = self.model_loc {
+            rt::mutex_unlock(loc);
+        }
+        // the real guard (if any) unlocks on its own drop
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: lock discipline — this guard is the unique owner
+        unsafe { &*self.mx.data.get() }
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: lock discipline — this guard is the unique owner
+        unsafe { &mut *self.mx.data.get() }
+    }
+}
+
+/// Mirrors `std::sync::WaitTimeoutResult` (which has no public
+/// constructor). Under the model a wait never times out — a protocol that
+/// *needs* the timeout to make progress surfaces as a deadlock
+/// counterexample, which is the bug the timeout would have been hiding.
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+pub struct Condvar {
+    reg: Reg,
+    raw: std::sync::Condvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Condvar {
+        Condvar {
+            reg: Reg::new(),
+            raw: std::sync::Condvar::new(),
+        }
+    }
+
+    fn loc(&self) -> usize {
+        self.reg.loc(|| rt::with_exec(rt::register_cond))
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if let Some(mloc) = guard.model_loc {
+            let cloc = self.loc();
+            let mx = guard.mx;
+            std::mem::forget(guard); // the model wait releases the lock itself
+            rt::cond_wait(cloc, mloc);
+            return Ok(MutexGuard {
+                mx,
+                real: None,
+                model_loc: Some(mloc),
+            });
+        }
+        let mut guard = guard;
+        let real = guard.real.take().expect("non-model guard holds the raw lock"); // lint-ok: fallback guards always hold the raw lock by construction
+        let mx = guard.mx;
+        std::mem::forget(guard);
+        let real = self.raw.wait(real).unwrap_or_else(|p| p.into_inner());
+        Ok(MutexGuard {
+            mx,
+            real: Some(real),
+            model_loc: None,
+        })
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.model_loc.is_some() {
+            // modeled as an untimed wait; see the WaitTimeoutResult docs
+            let g = self.wait(guard).unwrap_or_else(|p| p.into_inner());
+            return Ok((g, WaitTimeoutResult(false)));
+        }
+        let mut guard = guard;
+        let real = guard.real.take().expect("non-model guard holds the raw lock"); // lint-ok: fallback guards always hold the raw lock by construction
+        let mx = guard.mx;
+        std::mem::forget(guard);
+        let (real, to) = self
+            .raw
+            .wait_timeout(real, dur)
+            .unwrap_or_else(|p| p.into_inner());
+        Ok((
+            MutexGuard {
+                mx,
+                real: Some(real),
+                model_loc: None,
+            },
+            WaitTimeoutResult(to.timed_out()),
+        ))
+    }
+
+    pub fn notify_one(&self) {
+        if !rt::in_model() {
+            return self.raw.notify_one();
+        }
+        let loc = self.loc();
+        rt::cond_notify(loc, false);
+    }
+
+    pub fn notify_all(&self) {
+        if !rt::in_model() {
+            return self.raw.notify_all();
+        }
+        let loc = self.loc();
+        rt::cond_notify(loc, true);
+    }
+}

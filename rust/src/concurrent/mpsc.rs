@@ -8,9 +8,8 @@
 //! [`CountedQueue`] resolves the ambiguity with an element count maintained
 //! in the same atomic word as the closed bit.
 
-use std::cell::UnsafeCell;
+use crate::loom_types::{AtomicPtr, AtomicU64, Ordering, UnsafeCell};
 use std::ptr;
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
 
 struct Node<T> {
     next: AtomicPtr<Node<T>>,
@@ -79,17 +78,15 @@ impl<T> MpscQueue<T> {
     pub fn pop(&self) -> Option<T> {
         // SAFETY: single-consumer contract makes the `tail` cell and the
         // nodes reachable from it exclusively ours.
-        unsafe {
-            let tail = *self.tail.get();
-            let next = (*tail).next.load(Ordering::Acquire);
-            if next.is_null() {
-                return None;
-            }
-            *self.tail.get() = next;
-            let value = (*next).value.take();
-            drop(Box::from_raw(tail));
-            value
+        let tail = self.tail.with(|p| unsafe { *p });
+        let next = unsafe { (*tail).next.load(Ordering::Acquire) };
+        if next.is_null() {
+            return None;
         }
+        self.tail.with_mut(|p| unsafe { *p = next });
+        let value = unsafe { (*next).value.take() };
+        drop(unsafe { Box::from_raw(tail) });
+        value
     }
 }
 
@@ -223,9 +220,9 @@ impl<T> CountedQueue<T> {
 pub fn spin_backoff(spins: &mut u32) {
     *spins += 1;
     if *spins % 64 == 0 {
-        std::thread::yield_now();
+        crate::loom_types::thread_yield();
     } else {
-        std::hint::spin_loop();
+        crate::loom_types::cpu_relax();
     }
 }
 

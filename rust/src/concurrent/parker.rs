@@ -7,7 +7,7 @@
 //! lacked (its `notify_one` could fire before the sleeper reached
 //! `wait`, and only a 10 ms poll timeout papered over the lost wakeup).
 
-use std::sync::{Condvar, Mutex};
+use crate::loom_types::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Default)]
@@ -23,9 +23,9 @@ impl Parker {
 
     /// Block until a token is available, then consume it.
     pub fn park(&self) {
-        let mut t = self.token.lock().unwrap();
+        let mut t = self.token.lock().unwrap_or_else(|p| p.into_inner());
         while !*t {
-            t = self.cv.wait(t).unwrap();
+            t = self.cv.wait(t).unwrap_or_else(|p| p.into_inner());
         }
         *t = false;
     }
@@ -34,13 +34,13 @@ impl Parker {
     /// if one is present. Returns true if a token was consumed.
     pub fn park_timeout(&self, timeout: Duration) -> bool {
         let deadline = Instant::now() + timeout;
-        let mut t = self.token.lock().unwrap();
+        let mut t = self.token.lock().unwrap_or_else(|p| p.into_inner());
         while !*t {
             let now = Instant::now();
             if now >= deadline {
                 return false;
             }
-            let (g, _) = self.cv.wait_timeout(t, deadline - now).unwrap();
+            let (g, _) = self.cv.wait_timeout(t, deadline - now).unwrap_or_else(|p| p.into_inner());
             t = g;
         }
         *t = false;
@@ -50,7 +50,7 @@ impl Parker {
     /// Deposit a token and wake the parked thread, if any. Multiple
     /// unparks coalesce into one token.
     pub fn unpark(&self) {
-        let mut t = self.token.lock().unwrap();
+        let mut t = self.token.lock().unwrap_or_else(|p| p.into_inner());
         *t = true;
         self.cv.notify_one();
     }

@@ -140,7 +140,7 @@ impl GpuIndexer {
             actors.push(manager.spawn_cl(cfg)?);
         }
         let mut it = actors.iter().cloned();
-        let first = it.next().unwrap();
+        let first = it.next().unwrap(); // lint-ok: guarded by emptiness check above
         let pipe = it.fold(first, |acc, next| compose(&sys, next, acc));
         Ok(GpuIndexer {
             capacity,

@@ -19,6 +19,7 @@ pub mod actor;
 pub mod bench;
 pub mod concurrent;
 pub mod indexing;
+pub mod loom_types;
 pub mod net;
 pub mod opencl;
 pub mod runtime;

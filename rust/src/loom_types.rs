@@ -1,0 +1,106 @@
+//! Switchable sync-primitive aliases for the unsafe messaging core.
+//!
+//! Every file the model checker covers (`concurrent::{mpsc, deque,
+//! parker}`, `actor::{mailbox, cell, scheduler}`, `runtime::event`) imports
+//! its atomics, cells, locks, and spin hooks from here instead of
+//! `std::sync`. In a normal build these are plain re-exports plus
+//! `#[repr(transparent)]` `#[inline(always)]` wrappers — codegen is
+//! byte-identical to using std directly. Under `--features model` the same
+//! names resolve to the instrumented types in
+//! [`crate::concurrent::model::sync`], which record every operation and
+//! hand scheduling control to the model explorer.
+//!
+//! The linter (`python/lints/check.py`, rule R6) enforces that the covered
+//! files never import `std::sync::atomic` / `std::cell::UnsafeCell`
+//! directly, so coverage cannot silently rot.
+
+#[cfg(not(feature = "model"))]
+mod imp {
+    pub use std::sync::atomic::{
+        fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU32, AtomicU64, AtomicU8, AtomicUsize,
+        Ordering,
+    };
+    pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+    /// Transparent `UnsafeCell` with access-intent methods. The methods
+    /// exist so model builds can race-check each access; here they compile
+    /// to the raw pointer use with no overhead.
+    #[repr(transparent)]
+    #[derive(Default)]
+    pub struct UnsafeCell<T: ?Sized>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        #[inline(always)]
+        pub const fn new(v: T) -> UnsafeCell<T> {
+            UnsafeCell(std::cell::UnsafeCell::new(v))
+        }
+
+        #[inline(always)]
+        pub fn into_inner(self) -> T {
+            self.0.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> UnsafeCell<T> {
+        /// Declare a read access (race-checked under the model).
+        #[inline(always)]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Declare a write access (race-checked under the model).
+        #[inline(always)]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Declare a deliberately racy read — a checked exemption from the
+        /// model's race detector. Cite the reason in an adjacent comment.
+        #[inline(always)]
+        pub fn with_racy<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Raw pointer without an access declaration — single-threaded
+        /// setup/teardown only (constructors, `Drop`).
+        #[inline(always)]
+        pub fn get(&self) -> *mut T {
+            self.0.get()
+        }
+    }
+
+    /// Spin-backoff hook; a demoting model yield under `--features model`.
+    #[inline(always)]
+    pub fn thread_yield() {
+        std::thread::yield_now();
+    }
+
+    /// CPU-relax hook; a demoting model yield under `--features model`.
+    #[inline(always)]
+    pub fn cpu_relax() {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(feature = "model")]
+mod imp {
+    pub use crate::concurrent::model::sync::{
+        fence, Arc, AtomicBool, AtomicIsize, AtomicPtr, AtomicU32, AtomicU64, AtomicU8,
+        AtomicUsize, Condvar, Mutex, MutexGuard, Ordering, UnsafeCell, WaitTimeoutResult,
+    };
+
+    /// Spin-backoff hook: under the model this demotes the spinner so spin
+    /// loops neither explode the schedule space nor starve their writer.
+    #[inline]
+    pub fn thread_yield() {
+        crate::concurrent::model::sync::yield_now();
+    }
+
+    /// CPU-relax hook; same demotion semantics as [`thread_yield`].
+    #[inline]
+    pub fn cpu_relax() {
+        crate::concurrent::model::sync::spin_loop();
+    }
+}
+
+pub use imp::*;

@@ -60,7 +60,7 @@ fn info(args: &Args) -> anyhow::Result<()> {
     names.sort();
     println!("kernels ({}):", names.len());
     for n in names {
-        let meta = platform.manifest.get(n).unwrap();
+        let meta = platform.manifest.get(n).unwrap(); // lint-ok: n comes from manifest.keys()
         println!(
             "  {:32} in: {:40} out: {}",
             n,

@@ -195,7 +195,7 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, CodecError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap())) // lint-ok: take(4) yields exactly 4 bytes
     }
 
     /// Read an element count and bound it by the bytes that could possibly
@@ -226,7 +226,7 @@ impl<'a> Reader<'a> {
         let n = self.count(4)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
-            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap()));
+            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap())); // lint-ok: take(4) yields exactly 4 bytes
         }
         Ok(v)
     }
@@ -262,9 +262,9 @@ pub fn decode_message(buf: &[u8]) -> Result<Message, CodecError> {
     let tag = *buf.first().ok_or(CodecError::Malformed("empty".into()))?;
     Ok(match tag {
         TAG_U32 => Message::new(r.u32()?),
-        TAG_U64 => Message::new(u64::from_le_bytes(r.take(8)?.try_into().unwrap())),
-        TAG_I64 => Message::new(i64::from_le_bytes(r.take(8)?.try_into().unwrap())),
-        TAG_F64 => Message::new(f64::from_le_bytes(r.take(8)?.try_into().unwrap())),
+        TAG_U64 => Message::new(u64::from_le_bytes(r.take(8)?.try_into().unwrap())), // lint-ok: take(8) yields 8 bytes
+        TAG_I64 => Message::new(i64::from_le_bytes(r.take(8)?.try_into().unwrap())), // lint-ok: take(8) yields 8 bytes
+        TAG_F64 => Message::new(f64::from_le_bytes(r.take(8)?.try_into().unwrap())), // lint-ok: take(8) yields 8 bytes
         TAG_STRING => Message::new(
             String::from_utf8(r.bytes()?)
                 .map_err(|_| CodecError::Malformed("bad utf8".into()))?,

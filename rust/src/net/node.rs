@@ -144,7 +144,7 @@ impl Node {
     /// listener is active, another `listen` is an error (stop the node
     /// first) rather than a silent leak of the previous accept loop.
     pub fn listen(&self, addr: &str) -> Result<SocketAddr> {
-        let mut guard = self.listener.lock().unwrap();
+        let mut guard = self.listener.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(active) = guard.as_ref() {
             bail!(
                 "node is already listening at {} — call stop() before re-listening",
@@ -184,7 +184,7 @@ impl Node {
 
     /// The address this node is currently listening on, if any.
     pub fn local_addr(&self) -> Option<SocketAddr> {
-        self.listener.lock().unwrap().as_ref().map(|l| l.addr)
+        self.listener.lock().unwrap_or_else(|p| p.into_inner()).as_ref().map(|l| l.addr)
     }
 
     /// Connect to a remote node and build a proxy for its published actor
@@ -206,7 +206,7 @@ impl Node {
     fn peer_link(&self, addr: &str) -> Arc<PeerLink> {
         self.peers
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .entry(addr.to_string())
             .or_insert_with(|| {
                 Arc::new(PeerLink {
@@ -225,25 +225,25 @@ impl Node {
     /// Number of cached peer links (diagnostics; proxies to one address
     /// share one link).
     pub fn peer_count(&self) -> usize {
-        self.peers.lock().unwrap().len()
+        self.peers.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 
     /// Number of currently served inbound connections (diagnostics).
     pub fn served_count(&self) -> usize {
-        self.served.conns.lock().unwrap().len()
+        self.served.conns.lock().unwrap_or_else(|p| p.into_inner()).len()
     }
 
     /// Tear the node down: stop accepting, close and join every served
     /// connection, and close client-side peer connections (failing their
     /// pending requests with [`ErrorMsg`]).
     pub fn stop(&self) {
-        if let Some(ls) = self.listener.lock().unwrap().take() {
+        if let Some(ls) = self.listener.lock().unwrap_or_else(|p| p.into_inner()).take() {
             ls.stop.store(true, Ordering::Release);
             let _ = ls.thread.join();
         }
         self.served.stop();
         let links: Vec<Arc<PeerLink>> =
-            self.peers.lock().unwrap().drain().map(|(_, l)| l).collect();
+            self.peers.lock().unwrap_or_else(|p| p.into_inner()).drain().map(|(_, l)| l).collect();
         for l in links {
             l.close();
         }
@@ -298,7 +298,7 @@ impl ServedConns {
                 return;
             }
         };
-        self.conns.lock().unwrap().insert(
+        self.conns.lock().unwrap_or_else(|p| p.into_inner()).insert(
             id,
             ServedConn {
                 stream: clone,
@@ -312,11 +312,11 @@ impl ServedConns {
                 serve_connection(sys, stream);
                 // self-deregister on natural exit (no-op during stop(),
                 // which takes the whole map first)
-                registry.conns.lock().unwrap().remove(&id);
+                registry.conns.lock().unwrap_or_else(|p| p.into_inner()).remove(&id);
             });
         match spawned {
             Ok(h) => {
-                let mut conns = self.conns.lock().unwrap();
+                let mut conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
                 match conns.get_mut(&id) {
                     Some(c) => c.thread = Some(h),
                     None => {
@@ -331,14 +331,14 @@ impl ServedConns {
                 }
             }
             Err(_) => {
-                self.conns.lock().unwrap().remove(&id);
+                self.conns.lock().unwrap_or_else(|p| p.into_inner()).remove(&id);
             }
         }
     }
 
     fn stop(&self) {
         let taken: HashMap<u64, ServedConn> =
-            std::mem::take(&mut *self.conns.lock().unwrap());
+            std::mem::take(&mut *self.conns.lock().unwrap_or_else(|p| p.into_inner()));
         for (_, c) in taken {
             let _ = c.stream.shutdown(Shutdown::Both);
             if let Some(h) = c.thread {
@@ -366,7 +366,7 @@ impl AbstractActor for WireResponder {
             Err(e) => {
                 let mut b = self.mid.to_le_bytes().to_vec();
                 b.append(&mut encode_message(&Message::new(ErrorMsg::new(e.to_string())))
-                    .expect("ErrorMsg always encodes"));
+                    .expect("ErrorMsg always encodes")); // lint-ok: ErrorMsg encodes infallibly
                 b
             }
         };
@@ -382,7 +382,7 @@ impl AbstractActor for WireResponder {
                     let mut b = self.mid.to_le_bytes().to_vec();
                     b.append(
                         &mut encode_message(&Message::new(ErrorMsg::new(e.to_string())))
-                            .expect("ErrorMsg always encodes"),
+                            .expect("ErrorMsg always encodes"), // lint-ok: ErrorMsg encodes infallibly
                     );
                     let _ = write_frame(&mut w, KIND_REPLY, &b);
                 }
@@ -429,14 +429,14 @@ fn parse_inbound(kind: u8, body: &[u8]) -> Result<(Option<u64>, String, usize), 
             ));
         }
         at = 8;
-        Some(u64::from_le_bytes(body[0..8].try_into().unwrap()))
+        Some(u64::from_le_bytes(body[0..8].try_into().unwrap())) // lint-ok: length checked above
     } else {
         None
     };
     if body.len() < at + 2 {
         return Err("frame ends before the name length".to_string());
     }
-    let name_len = u16::from_le_bytes(body[at..at + 2].try_into().unwrap()) as usize;
+    let name_len = u16::from_le_bytes(body[at..at + 2].try_into().unwrap()) as usize; // lint-ok: length checked above
     at += 2;
     if body.len() - at < name_len {
         return Err(format!(
@@ -566,7 +566,7 @@ impl PeerLink {
     fn live(&self) -> Option<Arc<Connection>> {
         self.conn
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .as_ref()
             .filter(|c| c.alive.load(Ordering::Acquire))
             .cloned()
@@ -580,12 +580,12 @@ impl PeerLink {
         if let Some(c) = self.live() {
             return Ok(c);
         }
-        let _gate = self.connect_gate.lock().unwrap();
+        let _gate = self.connect_gate.lock().unwrap_or_else(|p| p.into_inner());
         // someone else may have reconnected while we waited for the gate
         if let Some(c) = self.live() {
             return Ok(c);
         }
-        if let Some(at) = *self.last_connect_failure.lock().unwrap() {
+        if let Some(at) = *self.last_connect_failure.lock().unwrap_or_else(|p| p.into_inner()) {
             if at.elapsed() < RECONNECT_BACKOFF {
                 bail!(
                     "peer {} unreachable (last connect attempt {:?} ago)",
@@ -596,12 +596,12 @@ impl PeerLink {
         }
         match Connection::open(self) {
             Ok(fresh) => {
-                *self.last_connect_failure.lock().unwrap() = None;
-                *self.conn.lock().unwrap() = Some(fresh.clone());
+                *self.last_connect_failure.lock().unwrap_or_else(|p| p.into_inner()) = None;
+                *self.conn.lock().unwrap_or_else(|p| p.into_inner()) = Some(fresh.clone());
                 Ok(fresh)
             }
             Err(e) => {
-                *self.last_connect_failure.lock().unwrap() =
+                *self.last_connect_failure.lock().unwrap_or_else(|p| p.into_inner()) =
                     Some(std::time::Instant::now());
                 Err(e)
             }
@@ -611,7 +611,7 @@ impl PeerLink {
     /// True if a connection existed and is now dead (for immediate-`Down`
     /// monitor semantics). A link that never connected is not "down".
     fn is_down(&self) -> bool {
-        match self.conn.lock().unwrap().as_ref() {
+        match self.conn.lock().unwrap_or_else(|p| p.into_inner()).as_ref() {
             Some(c) => !c.alive.load(Ordering::Acquire),
             None => false,
         }
@@ -620,7 +620,7 @@ impl PeerLink {
     /// Deliver `Down { Unreachable }` to every registered watcher.
     fn notify_unreachable(&self) {
         let watchers: Vec<(ActorId, ActorRef)> =
-            self.watchers.lock().unwrap().drain(..).collect();
+            self.watchers.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
         for (source, w) in watchers {
             w.enqueue(Envelope::asynchronous(
                 None,
@@ -633,7 +633,7 @@ impl PeerLink {
     }
 
     fn close(&self) {
-        let c = self.conn.lock().unwrap().take();
+        let c = self.conn.lock().unwrap_or_else(|p| p.into_inner()).take();
         if let Some(c) = c {
             c.close();
         }
@@ -710,7 +710,7 @@ impl Connection {
     /// Fail every pending request with `reason`.
     fn fail_pending(&self, reason: &str) {
         let drained: Vec<(u64, ActorRef)> =
-            self.pending.lock().unwrap().drain().collect();
+            self.pending.lock().unwrap_or_else(|p| p.into_inner()).drain().collect();
         for (mid, who) in drained {
             who.enqueue(Envelope {
                 sender: None,
@@ -724,7 +724,7 @@ impl Connection {
     /// (the reply, the deadline reaper, and the disconnect drain race on
     /// the same map — whoever removes the entry delivers).
     fn fail_one(&self, mid: u64, reason: String) {
-        if let Some(who) = self.pending.lock().unwrap().remove(&mid) {
+        if let Some(who) = self.pending.lock().unwrap_or_else(|p| p.into_inner()).remove(&mid) {
             who.enqueue(Envelope {
                 sender: None,
                 mid: MessageId(mid).response_for(),
@@ -754,8 +754,8 @@ fn reader_loop(reader: &mut TcpStream, conn: &Arc<Connection>) {
             );
             continue;
         }
-        let mid = u64::from_le_bytes(body[0..8].try_into().unwrap());
-        let Some(who) = conn.pending.lock().unwrap().remove(&mid) else {
+        let mid = u64::from_le_bytes(body[0..8].try_into().unwrap()); // lint-ok: length checked above
+        let Some(who) = conn.pending.lock().unwrap_or_else(|p| p.into_inner()).remove(&mid) else {
             // already failed by deadline/disconnect, or never ours
             continue;
         };
@@ -878,8 +878,8 @@ impl AbstractActor for RemoteProxy {
         // and arm the deadline that reaps it if no reply ever arrives
         let registered = kind == KIND_REQUEST && env.sender.is_some();
         if registered {
-            let sender = env.sender.clone().expect("checked above");
-            conn.pending.lock().unwrap().insert(env.mid.0, sender);
+            let sender = env.sender.clone().expect("checked above"); // lint-ok: guarded by env.sender.is_some()
+            conn.pending.lock().unwrap_or_else(|p| p.into_inner()).insert(env.mid.0, sender);
             let reaper = ActorRef::new(Arc::new(PendingReaper {
                 conn: Arc::downgrade(&conn),
                 mid: env.mid.0,
@@ -891,7 +891,7 @@ impl AbstractActor for RemoteProxy {
                 .schedule(self.link.timeout, reaper, Message::new(()));
         }
         let write_res = {
-            let mut w = conn.writer.lock().unwrap();
+            let mut w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
             write_frame(&mut w, kind, &body)
         };
         match write_res {
@@ -935,7 +935,7 @@ impl AbstractActor for RemoteProxy {
         // reader's drain sees the entry, or the push happens after the
         // drain and the re-check (ordered by the watchers mutex) sees
         // `alive == false`.
-        self.link.watchers.lock().unwrap().push((self.id, watcher));
+        self.link.watchers.lock().unwrap_or_else(|p| p.into_inner()).push((self.id, watcher));
         if self.link.is_down() {
             self.link.notify_unreachable();
         }

@@ -530,7 +530,7 @@ impl ShedQueue for Mutex<BatchState> {
         let name = st.meta.name.clone();
         let k0 = key.lens[0];
         let victim = {
-            let w = st.classes.get_mut(&key).expect("victim window exists");
+            let w = st.classes.get_mut(&key).expect("victim window exists"); // lint-ok: key taken from classes iteration
             let victim = w.pending.remove(0);
             w.elems = w.elems.saturating_sub(k0);
             if w.pending.is_empty() {

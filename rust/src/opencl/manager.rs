@@ -64,7 +64,7 @@ impl Manager {
     /// [`try_platform`]: Manager::try_platform
     pub fn platform(&self) -> &Platform {
         self.try_platform()
-            .expect("platform discovery failed — run `make artifacts` first")
+            .expect("platform discovery failed — run `make artifacts` first") // lint-ok: documented fail-fast API; try_platform() is the fallible twin
     }
 
     /// Whether discovery already ran (spawn-cost accounting, Fig 4).
@@ -246,6 +246,6 @@ pub trait OpenClSystemExt {
 impl OpenClSystemExt for ActorSystem {
     fn opencl_manager(&self) -> Arc<Manager> {
         self.get_module::<Manager>(MODULE_KEY)
-            .expect("opencl module not loaded — call Manager::load(&system) first")
+            .expect("opencl module not loaded — call Manager::load(&system) first") // lint-ok: documented fail-fast accessor
     }
 }

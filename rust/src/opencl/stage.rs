@@ -76,7 +76,7 @@ impl<'m> PipelineBuilder<'m> {
             actors.push(self.manager.spawn_cl(cfg)?);
         }
         let mut it = actors.iter().cloned();
-        let first = it.next().expect("non-empty checked above");
+        let first = it.next().expect("non-empty checked above"); // lint-ok: guarded by emptiness check
         let composed = it.fold(first, |acc, next| compose(&sys, next, acc));
         Ok((composed, actors))
     }
@@ -121,14 +121,14 @@ impl MemRefSlot {
     }
 
     pub fn set(&self, r: super::mem_ref::MemRef) {
-        *self.inner.lock().unwrap() = Some(r);
+        *self.inner.lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
     }
 
     pub fn get(&self) -> Option<super::mem_ref::MemRef> {
-        self.inner.lock().unwrap().clone()
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     pub fn take(&self) -> Option<super::mem_ref::MemRef> {
-        self.inner.lock().unwrap().take()
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).take()
     }
 }

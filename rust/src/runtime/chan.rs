@@ -63,6 +63,7 @@ impl<T> Chan<T> {
         // Dekker handshake with the consumer's announce-then-recheck: if
         // the consumer missed this element, it must see `waiting` → we see
         // it here and hand over a token.
+        // pairs with: chan.rs::pop (waiting-store → fence → is_empty recheck)
         fence(Ordering::SeqCst);
         if self.inner.waiting.load(Ordering::SeqCst) {
             self.inner.parker.unpark();
@@ -72,7 +73,7 @@ impl<T> Chan<T> {
 
     /// Pop, blocking until an item arrives or the channel closes empty.
     pub fn pop(&self) -> Option<T> {
-        let _guard = self.inner.consumer.lock().unwrap();
+        let _guard = self.inner.consumer.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(v) = self.inner.queue.pop() {
                 return Some(v);
@@ -81,6 +82,7 @@ impl<T> Chan<T> {
                 return None;
             }
             self.inner.waiting.store(true, Ordering::SeqCst);
+            // pairs with: chan.rs::push (push → fence → waiting load)
             fence(Ordering::SeqCst);
             if self.inner.queue.is_empty() && !self.inner.queue.is_closed() {
                 self.inner.parker.park();
@@ -92,7 +94,7 @@ impl<T> Chan<T> {
     /// Pop with timeout.
     pub fn pop_timeout(&self, d: Duration) -> Option<T> {
         let deadline = Instant::now() + d;
-        let _guard = self.inner.consumer.lock().unwrap();
+        let _guard = self.inner.consumer.lock().unwrap_or_else(|p| p.into_inner());
         loop {
             if let Some(v) = self.inner.queue.pop() {
                 return Some(v);
@@ -105,6 +107,7 @@ impl<T> Chan<T> {
                 return None;
             }
             self.inner.waiting.store(true, Ordering::SeqCst);
+            // pairs with: chan.rs::push (push → fence → waiting load)
             fence(Ordering::SeqCst);
             if self.inner.queue.is_empty() && !self.inner.queue.is_closed() {
                 self.inner.parker.park_timeout(deadline - now);

@@ -790,7 +790,7 @@ impl DeviceQueue {
     /// Stop the queue thread (drains remaining commands first).
     pub fn stop(&self) {
         self.push(QueueCmd::Stop);
-        if let Some(w) = self.worker.lock().unwrap().take() {
+        if let Some(w) = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = w.join();
         }
         self.cmds.close();
@@ -802,7 +802,7 @@ impl Drop for DeviceQueue {
         // best-effort: release the thread if the owner forgot to stop
         self.cmds.push(QueueCmd::Stop);
         self.cmds.close();
-        if let Some(w) = self.worker.lock().unwrap().take() {
+        if let Some(w) = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take() {
             let _ = w.join();
         }
     }

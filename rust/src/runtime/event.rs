@@ -5,8 +5,8 @@
 //! (`clSetEventCallback`) — which is how the actor facade turns kernel
 //! completion into a response message without blocking any scheduler thread.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use crate::loom_types::{AtomicBool, Condvar, Mutex, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 type Callback = Box<dyn FnOnce(&Result<(), String>) + Send>;
@@ -63,7 +63,7 @@ impl Event {
     }
 
     pub fn mark_enqueued(&self) {
-        self.inner.state.lock().unwrap().enqueued_at = Some(Instant::now());
+        self.inner.state.lock().unwrap_or_else(|p| p.into_inner()).enqueued_at = Some(Instant::now());
     }
 
     /// Signal successful completion; fires callbacks in registration order.
@@ -78,7 +78,7 @@ impl Event {
 
     fn finish(&self, result: Result<(), String>) {
         let callbacks = {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = self.inner.state.lock().unwrap_or_else(|p| p.into_inner());
             if st.done {
                 return;
             }
@@ -101,7 +101,7 @@ impl Event {
     }
 
     fn result_now(&self) -> Result<(), String> {
-        let st = self.inner.state.lock().unwrap();
+        let st = self.inner.state.lock().unwrap_or_else(|p| p.into_inner());
         match &st.error {
             Some(e) => Err(e.clone()),
             None => Ok(()),
@@ -131,7 +131,7 @@ impl Event {
         F: FnOnce(&Result<(), String>) + Send + 'static,
     {
         let run_now = {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = self.inner.state.lock().unwrap_or_else(|p| p.into_inner());
             if st.done {
                 true
             } else {
@@ -151,13 +151,13 @@ impl Event {
             return r;
         }
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.state.lock().unwrap_or_else(|p| p.into_inner());
         while !st.done {
             let now = Instant::now();
             if now >= deadline {
                 return Err("event wait timed out".to_string());
             }
-            let (g, _) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+            let (g, _) = self.inner.cv.wait_timeout(st, deadline - now).unwrap_or_else(|p| p.into_inner());
             st = g;
         }
         match &st.error {
@@ -169,7 +169,7 @@ impl Event {
     /// Enqueue-to-completion duration of the producing command, if both
     /// timestamps were recorded (the Fig 5 "kernel time" measurement).
     pub fn device_duration(&self) -> Option<Duration> {
-        let st = self.inner.state.lock().unwrap();
+        let st = self.inner.state.lock().unwrap_or_else(|p| p.into_inner());
         match (st.enqueued_at, st.completed_at) {
             (Some(a), Some(b)) => Some(b.duration_since(a)),
             _ => None,

@@ -111,7 +111,7 @@ impl ChaosSchedule {
                     }
                 }
             })
-            .expect("spawn chaos-schedule thread");
+            .expect("spawn chaos-schedule thread"); // lint-ok: fail-fast at harness startup
         ChaosSchedule {
             stop,
             kills,

@@ -1,0 +1,415 @@
+//! Deterministic model-checking suite for the unsafe messaging core.
+//!
+//! Every test explores *all* distinguishable interleavings (within the
+//! checker's documented bounds — see STATIC_ANALYSIS.md) of a small model
+//! program built from the production primitives, and asserts an invariant
+//! that must hold on every schedule: no lost message, no lost wakeup, no
+//! double delivery. Two kinds of test prove the checker itself works:
+//! self-tests pinning exact exploration counts, and `#[should_panic]`
+//! models with a deliberately weakened ordering whose counterexample the
+//! checker must find.
+//!
+//! Historical bugs replayed here as checked models:
+//! * the sender-`schedule()` vs `resume` Dekker handshake (the AcqRel CAS
+//!   lost-wakeup fixed in PR 3 — `dekker_without_seqcst_fence_is_caught`
+//!   proves the weakened ordering is caught, and the production ordering
+//!   passes exhaustively);
+//! * `Mailbox::close` vs in-flight `enqueue` (the close-snapshot drain);
+//! * Chase–Lev `steal` vs `take` on a one-element deque and `steal` vs
+//!   buffer growth;
+//! * parker token loss (the seed scheduler's 10 ms-poll papered-over bug);
+//! * `Event::poll`/`wait` lock-free fast path vs `complete`.
+
+#![cfg(feature = "model")]
+// invariants below are written in their natural "never (bad shape)" form
+#![allow(clippy::nonminimal_bool)]
+
+use caf_ocl::actor::envelope::Envelope;
+use caf_ocl::actor::mailbox::{EnqueueResult, Mailbox};
+use caf_ocl::actor::message::Message;
+use caf_ocl::concurrent::model::{self, Builder};
+use caf_ocl::concurrent::{CountedQueue, Steal, WorkDeque};
+use caf_ocl::loom_types::{fence, AtomicBool, AtomicU64, AtomicU8, Ordering};
+use caf_ocl::runtime::event::Event;
+use std::sync::{Arc, Mutex};
+
+fn env(tag: u32) -> Envelope {
+    Envelope::asynchronous(None, Message::new(tag))
+}
+
+fn tag(e: &Envelope) -> u32 {
+    *e.msg.downcast_ref::<u32>().expect("test envelope carries a u32")
+}
+
+// ---------------------------------------------------------------------------
+// Checker self-tests
+
+/// Two threads, two (dependent) ops each: the schedule space is exactly
+/// C(4,2) = 6 interleavings, and the checker must explore each exactly
+/// once — no duplicates, nothing pruned (same-location ops never commute).
+#[test]
+fn self_test_two_threads_two_ops_is_exactly_six_interleavings() {
+    let report = model::check(|| {
+        let a = Arc::new(AtomicU64::new(0));
+        let a2 = a.clone();
+        let t = model::thread::spawn(move || {
+            a2.store(1, Ordering::Relaxed);
+            a2.store(2, Ordering::Relaxed);
+        });
+        a.store(3, Ordering::Relaxed);
+        a.store(4, Ordering::Relaxed);
+        t.join().expect("model thread");
+    });
+    assert_eq!(report.completed, 6, "expected exactly 6 interleavings");
+    assert_eq!(report.pruned, 0, "dependent ops must not be pruned");
+}
+
+/// Stores to *independent* locations commute: of the two schedules, sleep
+/// sets must prune one. With pruning disabled both run.
+#[test]
+fn self_test_sleep_sets_prune_independent_stores() {
+    let run = |sleep_sets: bool| {
+        let mut b = Builder::new();
+        b.sleep_sets = sleep_sets;
+        b.check(|| {
+            let x = Arc::new(AtomicU64::new(0));
+            let y = Arc::new(AtomicU64::new(0));
+            let y2 = y.clone();
+            let t = model::thread::spawn(move || {
+                y2.store(1, Ordering::Relaxed);
+            });
+            x.store(1, Ordering::Relaxed);
+            t.join().expect("model thread");
+        })
+    };
+    let with = run(true);
+    assert_eq!((with.completed, with.pruned), (1, 1));
+    let without = run(false);
+    assert_eq!((without.completed, without.pruned), (2, 0));
+}
+
+/// The happens-before vault must flag the textbook data race: two threads
+/// mutating a plain cell with no synchronization at all.
+#[test]
+#[should_panic(expected = "data race")]
+fn self_test_race_detector_flags_unsynchronized_counter() {
+    use caf_ocl::loom_types::UnsafeCell;
+    model::check(|| {
+        let c = Arc::new(UnsafeCell::new(0u64));
+        let c2 = c.clone();
+        let t = model::thread::spawn(move || {
+            c2.with_mut(|p| unsafe { *p += 1 });
+        });
+        c.with_mut(|p| unsafe { *p += 1 });
+        t.join().expect("model thread");
+    });
+}
+
+/// RMW atomicity: concurrent `fetch_add`s never lose an increment on any
+/// schedule.
+#[test]
+fn rmw_increments_are_never_lost() {
+    model::check(|| {
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = c.clone();
+        let t = model::thread::spawn(move || {
+            c2.fetch_add(1, Ordering::Relaxed);
+            c2.fetch_add(1, Ordering::Relaxed);
+        });
+        c.fetch_add(1, Ordering::Relaxed);
+        c.fetch_add(1, Ordering::Relaxed);
+        t.join().expect("model thread");
+        assert_eq!(c.load(Ordering::Relaxed), 4, "lost increment");
+    });
+}
+
+/// Store-buffering litmus, relaxed: the checker's weak-memory modeling
+/// must reach the (0, 0) outcome that SC interleaving alone cannot.
+#[test]
+fn store_buffering_relaxed_observes_both_zero() {
+    let outcomes = Arc::new(Mutex::new(std::collections::HashSet::new()));
+    let outcomes2 = outcomes.clone();
+    model::check(move || {
+        let x = Arc::new(AtomicU64::new(0));
+        let y = Arc::new(AtomicU64::new(0));
+        let (x2, y2) = (x.clone(), y.clone());
+        let r1 = Arc::new(AtomicU64::new(u64::MAX));
+        let r1w = r1.clone();
+        let t = model::thread::spawn(move || {
+            x2.store(1, Ordering::Relaxed);
+            let v = y2.load(Ordering::Relaxed);
+            r1w.store(v, Ordering::Relaxed);
+        });
+        y.store(1, Ordering::Relaxed);
+        let r2 = x.load(Ordering::Relaxed);
+        t.join().expect("model thread");
+        let r1 = r1.load(Ordering::Relaxed);
+        outcomes2
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert((r1, r2));
+    });
+    let seen = outcomes.lock().unwrap_or_else(|p| p.into_inner());
+    assert!(
+        seen.contains(&(0, 0)),
+        "weak memory must allow the (0,0) store-buffering outcome; saw {seen:?}"
+    );
+}
+
+/// Store-buffering litmus, SeqCst: the single total order forbids (0, 0).
+#[test]
+fn store_buffering_seqcst_forbids_both_zero() {
+    model::check(|| {
+        let x = Arc::new(AtomicU64::new(0));
+        let y = Arc::new(AtomicU64::new(0));
+        let (x2, y2) = (x.clone(), y.clone());
+        let r1 = Arc::new(AtomicU64::new(u64::MAX));
+        let r1w = r1.clone();
+        let t = model::thread::spawn(move || {
+            x2.store(1, Ordering::SeqCst);
+            let v = y2.load(Ordering::SeqCst);
+            r1w.store(v, Ordering::Relaxed);
+        });
+        y.store(1, Ordering::SeqCst);
+        let r2 = x.load(Ordering::SeqCst);
+        t.join().expect("model thread");
+        let r1 = r1.load(Ordering::Relaxed);
+        assert!(
+            !(r1 == 0 && r2 == 0),
+            "SeqCst store-buffering must not observe (0,0)"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// The Dekker handshake: sender `schedule()` vs consumer `resume` exit
+
+const IDLE: u8 = 0;
+const SCHEDULED: u8 = 1;
+const RUNNING: u8 = 2;
+
+/// One slice of the production protocol, inlined against a real [`Mailbox`]:
+/// the consumer holds RUNNING, drains, stores IDLE, and re-checks behind a
+/// SeqCst fence; the sender enqueues and CASes IDLE→SCHEDULED on
+/// `NeedsSchedule`. `with_fence` toggles the production fence so the
+/// weakened variant below can prove the checker finds the lost wakeup.
+fn dekker_slice(with_fence: bool) {
+    let mb = Arc::new(Mailbox::new());
+    let state = Arc::new(AtomicU8::new(RUNNING));
+    let (mb2, st2) = (mb.clone(), state.clone());
+    let sender = model::thread::spawn(move || {
+        if mb2.enqueue(env(7), false) == EnqueueResult::NeedsSchedule {
+            // pairs with: cell.rs::resume (IDLE store → SeqCst fence →
+            // recheck) — mirrored here from cell.rs::schedule
+            let _ = st2.compare_exchange(IDLE, SCHEDULED, Ordering::SeqCst, Ordering::SeqCst);
+        }
+    });
+    // consumer slice: drain, then the resume-exit protocol
+    while mb.dequeue().is_some() {}
+    if mb.is_empty() {
+        state.store(IDLE, Ordering::Release);
+        if with_fence {
+            // pairs with: cell.rs::schedule (the sender's SeqCst CAS)
+            fence(Ordering::SeqCst);
+        }
+        if !mb.is_empty() {
+            let _ = state.compare_exchange(IDLE, SCHEDULED, Ordering::SeqCst, Ordering::SeqCst);
+        }
+    } else {
+        state.store(SCHEDULED, Ordering::Release);
+    }
+    sender.join().expect("model thread");
+    // the lost-wakeup shape: a message sits in the mailbox while the actor
+    // is IDLE and nobody committed to scheduling it
+    let pending = !mb.is_empty();
+    let st = state.load(Ordering::SeqCst);
+    assert!(
+        !(pending && st == IDLE),
+        "lost wakeup: message queued but actor IDLE and unscheduled"
+    );
+}
+
+/// The production ordering (SeqCst CAS + SeqCst fence) survives every
+/// interleaving — the PR 3 lost-wakeup fix, now pinned exhaustively.
+#[test]
+fn dekker_resume_schedule_handshake_never_loses_wakeup() {
+    model::check(|| dekker_slice(true));
+}
+
+/// Dropping the fence re-introduces the bug: the consumer's recheck can
+/// read a stale count of 0 while the sender's CAS reads RUNNING — neither
+/// side schedules. The checker must produce a counterexample, proving the
+/// suite has teeth (and that the SeqCst fence is load-bearing).
+#[test]
+#[should_panic(expected = "counterexample")]
+fn dekker_without_seqcst_fence_is_caught() {
+    model::check(|| dekker_slice(false));
+}
+
+// ---------------------------------------------------------------------------
+// Mailbox close vs in-flight enqueue
+
+/// A producer's accepted envelope is always drained by a racing `close`;
+/// a rejected producer gets the envelope back and `close` drains nothing.
+#[test]
+fn mailbox_close_vs_enqueue_never_drops_accepted() {
+    model::check(|| {
+        let mb = Arc::new(Mailbox::new());
+        let accepted = Arc::new(AtomicBool::new(false));
+        let (mb2, acc2) = (mb.clone(), accepted.clone());
+        let producer = model::thread::spawn(move || {
+            let r = mb2.enqueue(env(7), false);
+            acc2.store(r != EnqueueResult::Closed, Ordering::SeqCst);
+        });
+        let drained = mb.close();
+        producer.join().expect("model thread");
+        if accepted.load(Ordering::SeqCst) {
+            assert_eq!(drained.len(), 1, "accepted envelope lost by close");
+            assert_eq!(tag(&drained[0]), 7);
+        } else {
+            assert!(drained.is_empty(), "rejected envelope appeared in drain");
+        }
+        assert!(mb.is_empty(), "count leaked past close");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// MPSC queue
+
+/// Two producers, one consumer: every accepted value arrives exactly once,
+/// across every interleaving of the two-step (swap, link) Vyukov push.
+#[test]
+fn mpsc_two_producers_deliver_exactly_once() {
+    model::check(|| {
+        let q = Arc::new(CountedQueue::new());
+        let mut handles = Vec::new();
+        for p in 0..2u64 {
+            let q = q.clone();
+            handles.push(model::thread::spawn(move || {
+                q.push(p).expect("queue is not closed");
+            }));
+        }
+        let mut got = [false; 2];
+        let mut n = 0;
+        while n < 2 {
+            match q.pop() {
+                Some(v) => {
+                    assert!(!got[v as usize], "value {v} delivered twice");
+                    got[v as usize] = true;
+                    n += 1;
+                }
+                None => caf_ocl::loom_types::thread_yield(),
+            }
+        }
+        for h in handles {
+            h.join().expect("model thread");
+        }
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Chase–Lev deque
+
+/// The one-element endgame: owner `take` races a thief `steal`; exactly
+/// one of them gets the element on every schedule.
+#[test]
+fn deque_take_vs_steal_one_element_exactly_once() {
+    model::check(|| {
+        let d = Arc::new(WorkDeque::with_capacity(2));
+        // single-threaded setup: owner contract trivially holds
+        unsafe { d.push(7u64) };
+        let d2 = d.clone();
+        let stole = Arc::new(AtomicBool::new(false));
+        let stole2 = stole.clone();
+        let thief = model::thread::spawn(move || {
+            if let Steal::Success(v) = d2.steal() {
+                assert_eq!(v, 7);
+                stole2.store(true, Ordering::SeqCst);
+            }
+        });
+        // main is the owner thread for the whole execution
+        let took = unsafe { d.take() };
+        thief.join().expect("model thread");
+        let wins = took.is_some() as u32 + stole.load(Ordering::SeqCst) as u32;
+        assert_eq!(wins, 1, "the last element must go to exactly one side");
+        assert!(d.is_empty());
+    });
+}
+
+/// `steal` racing the owner's buffer growth: the thief's in-flight pointer
+/// into the old buffer stays valid (retire list) and no element is lost or
+/// duplicated across the copy.
+#[test]
+fn deque_steal_vs_grow_loses_nothing() {
+    model::check(|| {
+        let d = Arc::new(WorkDeque::with_capacity(2));
+        unsafe {
+            d.push(0u64);
+            d.push(1u64);
+        }
+        let d2 = d.clone();
+        let stolen = Arc::new(AtomicU64::new(u64::MAX));
+        let stolen2 = stolen.clone();
+        let thief = model::thread::spawn(move || {
+            if let Steal::Success(v) = d2.steal() {
+                stolen2.store(v, Ordering::SeqCst);
+            }
+        });
+        unsafe { d.push(2u64) }; // capacity 2 is full — this grows
+        thief.join().expect("model thread");
+        let mut seen = [0u32; 3];
+        let s = stolen.load(Ordering::SeqCst);
+        if s != u64::MAX {
+            seen[s as usize] += 1;
+        }
+        while let Some(v) = unsafe { d.take() } {
+            seen[v as usize] += 1;
+        }
+        assert_eq!(seen, [1, 1, 1], "element lost or duplicated across grow");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Parker
+
+/// The token protocol: an unpark racing ahead of (or into) the park is
+/// never lost — `park` always returns. A broken parker shows up as a
+/// deadlock counterexample (main blocked forever after the child exits).
+#[test]
+fn parker_unpark_before_or_during_park_is_never_lost() {
+    use caf_ocl::concurrent::Parker;
+    model::check(|| {
+        let p = Arc::new(Parker::new());
+        let p2 = p.clone();
+        let t = model::thread::spawn(move || {
+            p2.unpark();
+        });
+        p.park(); // must consume the (possibly banked) token on every schedule
+        t.join().expect("model thread");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Event fast path
+
+/// `poll`'s lock-free fast path vs a concurrent `complete`: whenever the
+/// done flag is visible the result must already be consistent, and `wait`
+/// always returns the completion (never times out, never hangs).
+#[test]
+fn event_poll_wait_fast_path_consistent() {
+    model::check(|| {
+        let e = Event::new();
+        let e2 = e.clone();
+        let t = model::thread::spawn(move || {
+            e2.complete();
+        });
+        if let Some(r) = e.poll() {
+            assert_eq!(r, Ok(()), "fast path saw done flag before the result");
+        }
+        let r = e.wait(std::time::Duration::from_secs(3600));
+        assert_eq!(r, Ok(()), "wait missed the completion");
+        t.join().expect("model thread");
+    });
+}
