@@ -31,12 +31,23 @@ Rules (see STATIC_ANALYSIS.md for the rationale and the waiver syntax):
                       contain a `deliver` call path (`deliver`,
                       `deliver_msg`, `deliver_err`, `deliver_result` — the
                       resolve/fail surface of request.rs), so no file mints
-                      promises it structurally cannot fulfill.
+                      promises it structurally cannot fulfill. Extended to
+                      the async completion surface: a file that registers
+                      correlated pending state (inserting into a `pending`
+                      map keyed by mid) must also contain the reply-removal
+                      path (`pending...remove`), a failure path
+                      (`fail_one`/`fail_pending`), and a reaper/timeout
+                      path, so every registered entry structurally reaches
+                      exactly one of reply / error / timeout; and a file
+                      defining a `FutureSlot` must contain its exactly-once
+                      `resolve(` transition.
   R5 codec-clamp    — in rust/src/net/codec.rs every `with_capacity(` in a
                       decode path must sit within a few lines of a
                       `count(...)` clamp (the Reader::count preallocation
                       bound from PR 2), so a hostile element count can never
-                      reserve unbacked gigabytes.
+                      reserve unbacked gigabytes. Constant literal
+                      capacities (encode-side arenas) are exempt — the
+                      hazard is wire-derived counts.
   R6 interposition  — the files interposed by the `model` feature must pull
                       their atomics through `crate::loom_types`, never
                       `std::sync::atomic` directly (outside test regions):
@@ -370,11 +381,57 @@ def check_promise_paths(rel: str, stripped: str, findings: list[Finding]):
     )
 
 
+def check_pending_paths(rel: str, stripped: str, findings: list[Finding]):
+    """R4's async half: registered pending state must be resolvable.
+
+    A pending-map registration (insert keyed by mid) is a pledge that the
+    entry later reaches exactly one of reply / error / timeout. The file
+    making that pledge must therefore contain all three exits: the
+    reply-removal path, a connection-failure path (fail_one/fail_pending),
+    and a reaper/timeout path. Likewise a file defining a FutureSlot (the
+    future's receiving half) must contain its exactly-once `resolve(`
+    transition — a slot with no resolve path can only hang.
+    """
+    if re.search(r"\bpending\b[^\n]{0,120}\.insert\(", stripped):
+        missing = []
+        if not re.search(r"\bpending\b[^\n]{0,120}\.remove\(", stripped):
+            missing.append("reply removal (pending...remove)")
+        if not re.search(r"\bfail_(one|pending)\b", stripped):
+            missing.append("failure path (fail_one/fail_pending)")
+        if "Reaper" not in stripped:
+            missing.append("reaper/timeout path")
+        if missing:
+            findings.append(
+                Finding(
+                    "promise-paths",
+                    rel,
+                    1,
+                    "file registers pending-map entries but lacks: "
+                    + "; ".join(missing)
+                    + " — a registered request could resolve never or twice",
+                )
+            )
+    if "struct FutureSlot" in stripped and not re.search(r"\bresolve\(", stripped):
+        findings.append(
+            Finding(
+                "promise-paths",
+                rel,
+                1,
+                "file defines FutureSlot but no `resolve(` transition — "
+                "futures minted here can only hang",
+            )
+        )
+
+
 def check_codec_clamp(rel: str, stripped_lines: list[str], test_mask: list[bool], findings: list[Finding]):
     if rel != os.path.join("rust", "src", "net", "codec.rs"):
         return
     for idx, sline in enumerate(stripped_lines):
         if test_mask[idx] or "with_capacity(" not in sline:
+            continue
+        # constant capacities (encode-side arenas) are not the hazard: the
+        # rule exists for *wire-derived* counts reserving unbacked memory
+        if re.search(r"with_capacity\(\s*\d+(_usize|usize)?\s*\)", sline):
             continue
         window = stripped_lines[max(0, idx - 4) : idx + 1]
         if any(re.search(r"\bcount\(", w) for w in window):
@@ -428,6 +485,7 @@ def main() -> int:
         check_seqcst_pairing(rel, raw_lines, stripped_lines, mask, findings)
         check_no_unwrap(rel, raw_lines, stripped_lines, mask, findings)
         check_promise_paths(rel, stripped, findings)
+        check_pending_paths(rel, stripped, findings)
         check_codec_clamp(rel, stripped_lines, mask, findings)
         check_interposition(rel, stripped_lines, mask, findings)
     # tests/benches/examples still get the cheap structural check: a brace

@@ -1,0 +1,94 @@
+//! Remote request path: blocking vs async futures over loopback (PERF.md).
+//!
+//! One published echo actor, one proxy connection, a sweep over in-flight
+//! windows (1 / 64 / 4096). At each window the same request budget runs
+//! twice:
+//!
+//! - **blocking** — one OS thread per in-flight slot (small stacks), each
+//!   parked in `ScopedActor::request(..).receive_msg(..)`: the
+//!   pre-futures baseline whose client-side cost is the thread army.
+//! - **async** — a fixed pool of a few client threads drives the whole
+//!   window via `ActorRef::ask` + a bounded `FutureSet`; completion hooks
+//!   record latency on the resolver thread, and nothing parks per
+//!   request.
+//!
+//! Both arms are closed loops at their window size: latencies are
+//! issue→resolve service times and req/s is reported over the whole batch
+//! (see PERF.md on coordinated omission). The bench exits nonzero if the
+//! exactly-once ledger breaks — every issued request must resolve as a
+//! reply or an error, never hang.
+//!
+//! Writes `BENCH_net.json` at the repository root. Smoke mode for CI:
+//! `NET_BENCH_SMOKE=1` shrinks the request budget so the harness cannot
+//! bit-rot without burning runner minutes. The reduced tier-1 twin is
+//! `cargo test --test perf_net`.
+
+use caf_ocl::bench::{full_mode, net_probe, write_net_json, NetArm, NetProbeConfig};
+
+fn print_arm(a: &NetArm) {
+    println!(
+        "  {:>8} @ {:>4} in-flight ({:>4} threads): {:>7} issued  \
+         {:>9.1} req/s  p50 {:>8.3} ms  p99 {:>8.3} ms  errors {}",
+        a.mode, a.inflight, a.threads, a.issued, a.req_per_s, a.p50_ms, a.p99_ms, a.errors
+    );
+}
+
+fn main() {
+    let smoke = std::env::var("NET_BENCH_SMOKE")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let requests = if smoke {
+        4096
+    } else if full_mode() {
+        65536
+    } else {
+        16384
+    };
+    let cfg = NetProbeConfig {
+        levels: vec![1, 64, 4096],
+        requests,
+        elems: if smoke { 64 } else { 256 },
+        client_threads: 4,
+    };
+    println!(
+        "net: levels {:?}, {} requests/arm, {} u32/request, {} async client threads{}",
+        cfg.levels,
+        cfg.requests,
+        cfg.elems,
+        cfg.client_threads,
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let arms = net_probe(&cfg);
+    for a in &arms {
+        print_arm(a);
+    }
+
+    // exactly-once: each arm's ledger must balance, and an async arm must
+    // never have grown a thread per request
+    let mut broken = false;
+    for a in &arms {
+        if a.issued != a.completed + a.errors {
+            eprintln!(
+                "!! exactly-once violated ({} @ {}): issued {} != completed {} + errors {}",
+                a.mode, a.inflight, a.issued, a.completed, a.errors
+            );
+            broken = true;
+        }
+        if a.mode == "async" && a.threads > cfg.client_threads {
+            eprintln!(
+                "!! async arm @ {} grew its pool: {} threads > {}",
+                a.inflight, a.threads, cfg.client_threads
+            );
+            broken = true;
+        }
+    }
+    if broken {
+        std::process::exit(1);
+    }
+
+    match write_net_json(&arms, &cfg, "cargo bench --bench net") {
+        Ok(p) => println!("-> {}", p.display()),
+        Err(e) => eprintln!("(json write failed: {e})"),
+    }
+}

@@ -21,7 +21,10 @@
 //! bit-rot without burning runner minutes. The reduced tier-1 twin is
 //! `cargo test --test perf_soak`.
 
-use caf_ocl::bench::{soak_probe, write_soak_json, write_soak_manifest, SoakConfig, SoakRun};
+use caf_ocl::bench::{
+    soak_closed_probe, soak_probe, write_soak_json, write_soak_manifest, SoakConfig, SoakRun,
+};
+use caf_ocl::workload::ClosedLoop;
 use std::time::Duration;
 
 fn print_run(r: &SoakRun) {
@@ -103,16 +106,32 @@ fn main() {
     print_run(&on);
     let off = soak_probe(&cfg, false);
     print_run(&off);
+    // the closed-loop control arm: bounded pressure from the loop itself
+    // (each worker waits for its reply before issuing the next request)
+    let closed_cfg = ClosedLoop {
+        concurrency: 16,
+        think: Duration::ZERO,
+    };
+    let closed = soak_closed_probe(&cfg, true, closed_cfg);
+    println!("  closed loop ({} workers):", closed_cfg.concurrency);
+    print_run(&closed);
 
     let lost = |r: &SoakRun| {
         r.issued != r.completed + r.rejected + r.shed + r.deadline + r.errors || r.timeouts != 0
     };
-    if lost(&on) || lost(&off) {
+    if lost(&on) || lost(&off) || lost(&closed) {
         eprintln!("!! exactly-once violated: some request neither replied nor failed");
         std::process::exit(1);
     }
 
-    match write_soak_json(&on, &off, &cfg, "cargo bench --bench soak") {
+    match write_soak_json(
+        &on,
+        &off,
+        &closed,
+        &closed_cfg,
+        &cfg,
+        "cargo bench --bench soak",
+    ) {
         Ok(p) => println!("-> {}", p.display()),
         Err(e) => eprintln!("(json write failed: {e})"),
     }

@@ -1,0 +1,427 @@
+//! Non-blocking request futures: `ActorRef::ask(..)` returns a
+//! [`RequestFuture`] that resolves via callback/condvar instead of parking a
+//! thread per request (the actix `Address<A>`/`Request` idiom, adapted to the
+//! dynamically typed substrate).
+//!
+//! The future's receiving half is itself an [`AbstractActor`] (a
+//! [`FutureSlot`]): `ask` mints a fresh request id and passes the slot as the
+//! envelope sender, so every existing reply path — local promises, the remote
+//! proxy's pending map, `PendingReaper` timeouts, disconnect `fail_pending`,
+//! the broken-promise drop guard — delivers into the future without any new
+//! wiring. Resolution is exactly-once by construction: the slot's state
+//! machine transitions `Pending -> Done` a single time and ignores every
+//! later delivery (late timer fires, duplicate errors after a disconnect).
+//!
+//! One client thread can hold thousands of requests in flight; the bounded
+//! [`FutureSet`] collector gives backpressure so an open loop cannot grow the
+//! pending set without limit.
+
+use super::envelope::{ActorId, Envelope, MessageId};
+use super::message::Message;
+use super::monitor::ErrorMsg;
+use super::timer::Timer;
+use super::{AbstractActor, ActorRef};
+use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Future slot ids live far above spawned-actor and remote-proxy ranges so
+/// they never collide with either (proxies start at `1 << 48`).
+static NEXT_SLOT_ID: AtomicU64 = AtomicU64::new(1 << 49);
+
+type Hook = Box<dyn FnOnce(&Result<Message, ErrorMsg>) + Send>;
+
+enum State {
+    /// Reply not yet arrived; hooks run (in registration order) on resolve.
+    Pending { hooks: Vec<Hook> },
+    Done(Result<Message, ErrorMsg>),
+}
+
+/// The receiving half of a [`RequestFuture`]: an addressable one-shot slot
+/// that accepts exactly the correlated response (or an async error such as a
+/// deadline fire) and resolves the future exactly once.
+pub(crate) struct FutureSlot {
+    id: ActorId,
+    mid: MessageId,
+    state: Mutex<State>,
+    resolved_cv: Condvar,
+}
+
+impl FutureSlot {
+    fn new(mid: MessageId) -> Arc<FutureSlot> {
+        Arc::new(FutureSlot {
+            id: NEXT_SLOT_ID.fetch_add(1, Ordering::Relaxed),
+            mid,
+            state: Mutex::new(State::Pending { hooks: Vec::new() }),
+            resolved_cv: Condvar::new(),
+        })
+    }
+
+    /// Exactly-once transition to `Done`. Later calls (late timer fire after
+    /// the real reply, duplicate disconnect errors) are ignored.
+    fn resolve(&self, r: Result<Message, ErrorMsg>) {
+        let hooks = {
+            let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            match &mut *st {
+                State::Done(_) => return,
+                State::Pending { hooks } => {
+                    let hooks = std::mem::take(hooks);
+                    *st = State::Done(r.clone());
+                    hooks
+                }
+            }
+        };
+        self.resolved_cv.notify_all();
+        // run callbacks outside the lock: a hook may wait on another future
+        for h in hooks {
+            h(&r);
+        }
+    }
+
+    fn add_hook(&self, h: Hook) {
+        let run_now = {
+            let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            match &mut *st {
+                State::Pending { hooks } => {
+                    hooks.push(h);
+                    None
+                }
+                // already resolved: carry the hook out and run it inline
+                // (outside the lock) so it never gets lost
+                State::Done(r) => Some((h, r.clone())),
+            }
+        };
+        if let Some((h, r)) = run_now {
+            h(&r);
+        }
+    }
+
+    fn try_result(&self) -> Option<Result<Message, ErrorMsg>> {
+        match &*self.state.lock().unwrap_or_else(|p| p.into_inner()) {
+            State::Done(r) => Some(r.clone()),
+            State::Pending { .. } => None,
+        }
+    }
+
+    fn wait(&self, timeout: Duration) -> Result<Message, ErrorMsg> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let State::Done(r) = &*st {
+                return r.clone();
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(ErrorMsg::new("request timed out (future wait)"));
+            }
+            let (g, _) = self
+                .resolved_cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        }
+    }
+}
+
+impl AbstractActor for FutureSlot {
+    fn enqueue(&self, env: Envelope) {
+        // accept only our correlated response, or an async error (deadline
+        // fire from the timer, system-internal failure notification)
+        let is_reply = env.mid == self.mid.response_for();
+        let is_async_err = env.mid.is_async() && env.msg.is::<ErrorMsg>();
+        if !is_reply && !is_async_err {
+            return;
+        }
+        match env.msg.downcast_ref::<ErrorMsg>() {
+            Some(e) => self.resolve(Err(e.clone())),
+            None => self.resolve(Ok(env.msg)),
+        }
+    }
+
+    fn id(&self) -> ActorId {
+        self.id
+    }
+
+    fn attach_monitor(&self, _watcher: ActorRef) {}
+
+    fn attach_link(&self, _peer: ActorRef) {}
+
+    fn kind(&self) -> &'static str {
+        "future-slot"
+    }
+}
+
+/// A one-shot, composable handle to an in-flight request.
+///
+/// Cloning is cheap (the slot is shared); every clone observes the same
+/// resolution. Dropping all handles before the reply arrives is safe — the
+/// reply (or error) still lands in the slot held alive by the sender chain
+/// (pending map / promise) and is discarded there.
+#[derive(Clone)]
+pub struct RequestFuture {
+    slot: Arc<FutureSlot>,
+}
+
+impl RequestFuture {
+    /// Issue `msg` to `target` as a request and return the future. This is
+    /// the non-blocking sibling of `ScopedActor::request`: registration (the
+    /// slot becoming addressable as the envelope sender) happens before the
+    /// send, so a reply can never race past an unregistered waiter.
+    pub fn send(target: &ActorRef, msg: Message) -> RequestFuture {
+        let mid = MessageId::fresh_request();
+        let slot = FutureSlot::new(mid);
+        let sender = ActorRef::new(slot.clone() as Arc<dyn AbstractActor>);
+        target.enqueue(Envelope {
+            sender: Some(sender),
+            mid,
+            msg,
+        });
+        RequestFuture { slot }
+    }
+
+    /// True once the future holds a result.
+    pub fn is_resolved(&self) -> bool {
+        self.slot.try_result().is_some()
+    }
+
+    /// Non-blocking poll.
+    pub fn try_result(&self) -> Option<Result<Message, ErrorMsg>> {
+        self.slot.try_result()
+    }
+
+    /// Block the calling thread until resolution (condvar park, not a
+    /// spinning poll), up to `timeout`. Composable with `then` hooks — both
+    /// observe the same exactly-once resolution.
+    pub fn wait(&self, timeout: Duration) -> Result<Message, ErrorMsg> {
+        self.slot.wait(timeout)
+    }
+
+    /// Register a completion callback. Runs on the delivering thread when
+    /// the reply/error arrives, or inline if already resolved. Exactly one
+    /// invocation, ever.
+    pub fn then<F>(&self, f: F)
+    where
+        F: FnOnce(&Result<Message, ErrorMsg>) + Send + 'static,
+    {
+        self.slot.add_hook(Box::new(f));
+    }
+
+    /// Typed view of this future: extraction to `R` happens at resolution
+    /// observation, mirroring `PendingResponse::receive`.
+    pub fn map<R: Any + Clone>(&self) -> TypedFuture<R> {
+        TypedFuture {
+            inner: self.clone(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Arm a per-request deadline on `timer`: if the reply has not arrived
+    /// after `d`, the future resolves with a timeout error. A reply that
+    /// arrives later is ignored by the exactly-once guard (and vice versa —
+    /// the timer firing after resolution is a no-op).
+    pub fn deadline(&self, timer: &Timer, d: Duration) -> &Self {
+        let slot_ref = ActorRef::new(self.slot.clone() as Arc<dyn AbstractActor>);
+        timer.schedule(
+            d,
+            slot_ref,
+            Message::new(ErrorMsg::new(format!(
+                "request timed out after {d:?} (ask deadline)"
+            ))),
+        );
+        self
+    }
+}
+
+/// Typed wrapper over [`RequestFuture`]; see [`RequestFuture::map`].
+pub struct TypedFuture<R> {
+    inner: RequestFuture,
+    _marker: std::marker::PhantomData<fn() -> R>,
+}
+
+impl<R: Any + Clone> TypedFuture<R> {
+    pub fn wait(&self, timeout: Duration) -> Result<R, ErrorMsg> {
+        let msg = self.inner.wait(timeout)?;
+        msg.take::<R>().ok_or_else(|| {
+            ErrorMsg::new(format!("response type mismatch: got {}", msg.type_name()))
+        })
+    }
+
+    pub fn is_resolved(&self) -> bool {
+        self.inner.is_resolved()
+    }
+}
+
+struct SetState {
+    outstanding: usize,
+    results: Vec<Result<Message, ErrorMsg>>,
+}
+
+/// Bounded `join_all`-style collector: at most `bound` unresolved futures
+/// are admitted at once (`push` blocks past the bound — backpressure for
+/// open-loop issuers), and `join_all` parks until every admitted future has
+/// resolved. One client thread + one `FutureSet` drives thousands of
+/// requests without a thread per request.
+pub struct FutureSet {
+    bound: usize,
+    state: Arc<(Mutex<SetState>, Condvar)>,
+}
+
+impl FutureSet {
+    /// `bound` == 0 means unbounded.
+    pub fn new(bound: usize) -> FutureSet {
+        FutureSet {
+            bound,
+            state: Arc::new((
+                Mutex::new(SetState {
+                    outstanding: 0,
+                    results: Vec::new(),
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    /// Admit `fut` into the set, blocking while `bound` futures are already
+    /// unresolved. Returns the number currently outstanding (diagnostics).
+    pub fn push(&self, fut: &RequestFuture) -> usize {
+        let (m, cv) = &*self.state;
+        let mut st = m.lock().unwrap_or_else(|p| p.into_inner());
+        while self.bound > 0 && st.outstanding >= self.bound {
+            st = cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        st.outstanding += 1;
+        let now = st.outstanding;
+        drop(st);
+        let shared = self.state.clone();
+        fut.then(move |r| {
+            let (m, cv) = &*shared;
+            let mut st = m.lock().unwrap_or_else(|p| p.into_inner());
+            st.outstanding -= 1;
+            st.results.push(r.clone());
+            cv.notify_all();
+        });
+        now
+    }
+
+    /// Number of admitted-but-unresolved futures.
+    pub fn outstanding(&self) -> usize {
+        self.state.0.lock().unwrap_or_else(|p| p.into_inner()).outstanding
+    }
+
+    /// Wait (up to `timeout`) for every admitted future to resolve, then
+    /// drain and return the collected results (resolution order). On
+    /// timeout, returns whatever resolved so far as `Err` of the whole call
+    /// would lose data — so it returns the partial drain; check
+    /// `outstanding()` afterwards to detect stragglers.
+    pub fn join_all(&self, timeout: Duration) -> Vec<Result<Message, ErrorMsg>> {
+        let deadline = Instant::now() + timeout;
+        let (m, cv) = &*self.state;
+        let mut st = m.lock().unwrap_or_else(|p| p.into_inner());
+        while st.outstanding > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        }
+        std::mem::take(&mut st.results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_msg(v: u32) -> Result<Message, ErrorMsg> {
+        Ok(Message::new(v))
+    }
+
+    #[test]
+    fn resolve_is_exactly_once() {
+        let slot = FutureSlot::new(MessageId::fresh_request());
+        slot.resolve(ok_msg(1));
+        slot.resolve(ok_msg(2));
+        let got = slot.try_result().unwrap().unwrap();
+        assert_eq!(got.take::<u32>(), Some(1));
+    }
+
+    #[test]
+    fn hooks_fire_once_even_when_registered_late() {
+        let slot = FutureSlot::new(MessageId::fresh_request());
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        slot.add_hook(Box::new(move |_| {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        slot.resolve(ok_msg(7));
+        // late registration runs inline
+        let h2 = hits.clone();
+        slot.add_hook(Box::new(move |_| {
+            h2.fetch_add(1, Ordering::SeqCst);
+        }));
+        slot.resolve(Err(ErrorMsg::new("dup"))); // ignored
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn slot_rejects_uncorrelated_mids() {
+        let mid = MessageId::fresh_request();
+        let slot = FutureSlot::new(mid);
+        // a response for some other request must not resolve us
+        let other = MessageId::fresh_request();
+        slot.enqueue(Envelope {
+            sender: None,
+            mid: other.response_for(),
+            msg: Message::new(1u32),
+        });
+        assert!(slot.try_result().is_none());
+        // async non-error chatter is ignored too
+        slot.enqueue(Envelope::asynchronous(None, Message::new(2u32)));
+        assert!(slot.try_result().is_none());
+        // the correlated reply lands
+        slot.enqueue(Envelope {
+            sender: None,
+            mid: mid.response_for(),
+            msg: Message::new(3u32),
+        });
+        assert_eq!(slot.try_result().unwrap().unwrap().take::<u32>(), Some(3));
+    }
+
+    #[test]
+    fn wait_times_out_cleanly() {
+        let slot = FutureSlot::new(MessageId::fresh_request());
+        let err = slot.wait(Duration::from_millis(20)).unwrap_err();
+        assert!(err.reason.contains("timed out"));
+    }
+
+    #[test]
+    fn future_set_bounds_and_joins() {
+        let set = FutureSet::new(2);
+        let s1 = FutureSlot::new(MessageId::fresh_request());
+        let s2 = FutureSlot::new(MessageId::fresh_request());
+        set.push(&RequestFuture { slot: s1.clone() });
+        set.push(&RequestFuture { slot: s2.clone() });
+        assert_eq!(set.outstanding(), 2);
+        // third push must block until one resolves
+        let s3 = FutureSlot::new(MessageId::fresh_request());
+        let set_ref = &set;
+        std::thread::scope(|scope| {
+            let t = scope.spawn(move || {
+                set_ref.push(&RequestFuture { slot: s3 });
+            });
+            std::thread::sleep(Duration::from_millis(30));
+            assert!(!t.is_finished(), "push past the bound must block");
+            s1.resolve(ok_msg(1));
+            t.join().unwrap(); // lint-ok: test thread join
+        });
+        s2.resolve(ok_msg(2));
+        // one future still outstanding — partial drain then full join
+        let partial = set.join_all(Duration::from_millis(20));
+        assert_eq!(partial.len(), 2);
+        assert_eq!(set.outstanding(), 1);
+    }
+}

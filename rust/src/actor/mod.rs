@@ -7,6 +7,7 @@
 //! as every CPU actor, so "from the perspective of the runtime system, an
 //! OpenCL actor is not distinguishable from any other actor" (paper §3.6).
 
+pub mod ask;
 pub mod behavior;
 pub mod blocking;
 pub mod cell;
@@ -21,6 +22,7 @@ pub mod scheduler;
 pub mod system;
 pub mod timer;
 
+pub use ask::{FutureSet, RequestFuture, TypedFuture};
 pub use behavior::{no_reply, reply, reply_msg, Behavior, Reply};
 pub use blocking::ScopedActor;
 pub use cell::{ActorCell, Ctx};
@@ -83,6 +85,21 @@ impl ActorRef {
 
     pub fn enqueue(&self, env: Envelope) {
         self.0.enqueue(env);
+    }
+
+    /// Non-blocking request (CAF `request(...).then(...)`, the actix
+    /// `Address::send` future idiom): issues `v` as a request and returns a
+    /// [`RequestFuture`] that resolves exactly once with the reply, an
+    /// error, or a timeout — without parking the calling thread. Works
+    /// uniformly for local actors and remote proxies (the future slot rides
+    /// as the envelope sender through every existing reply path).
+    pub fn ask<T: std::any::Any + Send + Sync>(&self, v: T) -> RequestFuture {
+        self.ask_msg(Message::new(v))
+    }
+
+    /// Untyped sibling of [`ActorRef::ask`].
+    pub fn ask_msg(&self, msg: Message) -> RequestFuture {
+        RequestFuture::send(self, msg)
     }
 
     pub fn monitor_with(&self, watcher: ActorRef) {

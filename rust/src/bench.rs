@@ -1151,11 +1151,18 @@ fn soak_one_shot(
     }
 }
 
-/// Run one soak arm. With `shedding` the replicated spawns carry the
-/// config's admission bounds (`max_inflight` + `DropOldest` +
-/// `max_queue_wait`); without it they run unbounded — the control arm
-/// whose queues are free to grow.
-pub fn soak_probe(cfg: &SoakConfig, shedding: bool) -> SoakRun {
+/// The deployment shared by the open- and closed-loop soak arms: simulated
+/// device inventory, replicated spawns (batched small + large kernels, one
+/// admission domain each), and the chaos schedule targeting the small pool.
+struct SoakDeployment {
+    sys: crate::actor::ActorSystem,
+    mgr: std::sync::Arc<crate::opencl::Manager>,
+    small: crate::opencl::ReplicatedHandle,
+    large: crate::opencl::ReplicatedHandle,
+    chaos: crate::sim::ChaosSchedule,
+}
+
+fn soak_deploy(cfg: &SoakConfig, shedding: bool) -> SoakDeployment {
     use crate::actor::{ActorSystem, SystemConfig};
     use crate::opencl::{
         AdmissionConfig, BatchConfig, DeviceInfo, DeviceKind, DeviceSpec, KernelSpawn, Manager,
@@ -1163,8 +1170,6 @@ pub fn soak_probe(cfg: &SoakConfig, shedding: bool) -> SoakRun {
     };
     use crate::runtime::client::PadModel;
     use crate::sim::{ChaosConfig, ChaosSchedule};
-    use crate::workload::{ClassMix, OpenLoop, RequestClass};
-    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
     let sys = ActorSystem::new(
         SystemConfig::default()
@@ -1241,6 +1246,112 @@ pub fn soak_probe(cfg: &SoakConfig, shedding: bool) -> SoakRun {
             seed: cfg.seed ^ 0x5eed,
         },
     );
+    SoakDeployment {
+        sys,
+        mgr,
+        small,
+        large,
+        chaos,
+    }
+}
+
+/// Stop chaos, wait for in-flight respawns to land, stop the devices and
+/// the system; returns `(replica_kills, respawns)`.
+fn soak_teardown(d: SoakDeployment) -> (u64, u64) {
+    let SoakDeployment {
+        sys,
+        mgr,
+        small,
+        large,
+        chaos,
+    } = d;
+    let replica_kills = chaos.stop();
+    // give in-flight respawns a moment to land before reading the counts
+    let respawn_wait = Instant::now();
+    let count_respawns = || -> u64 {
+        small
+            .pool
+            .replicas()
+            .iter()
+            .chain(large.pool.replicas().iter())
+            .map(|r| r.respawns())
+            .sum()
+    };
+    while count_respawns() < replica_kills
+        && respawn_wait.elapsed() < std::time::Duration::from_secs(5)
+    {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let respawns = count_respawns();
+    mgr.stop_devices();
+    sys.shutdown();
+    (replica_kills, respawns)
+}
+
+/// Fold one arm's per-request records into its [`SoakRun`].
+fn soak_summarize(
+    shedding: bool,
+    records: &[(crate::workload::RequestClass, SoakOutcome, f64)],
+    elapsed: std::time::Duration,
+    peak_depth: u64,
+    replica_kills: u64,
+    respawns: u64,
+) -> SoakRun {
+    let mut issued = 0;
+    let mut counts = [0usize; 6];
+    let mut admitted_ms: Vec<f64> = Vec::new();
+    for (_, outcome, ms) in records {
+        issued += 1;
+        counts[*outcome as usize] += 1;
+        if *outcome == SoakOutcome::Ok {
+            admitted_ms.push(*ms);
+        }
+    }
+    let class_stats = |class: crate::workload::RequestClass| {
+        let ms: Vec<f64> = records
+            .iter()
+            .filter(|(c, o, _)| *c == class && *o == SoakOutcome::Ok)
+            .map(|(_, _, ms)| *ms)
+            .collect();
+        SoakClassStats {
+            class: class.name(),
+            n: ms.len(),
+            p50_ms: crate::util::stats::percentile(&ms, 0.50),
+            p99_ms: crate::util::stats::percentile(&ms, 0.99),
+            p999_ms: crate::util::stats::percentile(&ms, 0.999),
+        }
+    };
+    SoakRun {
+        shedding,
+        issued,
+        completed: counts[SoakOutcome::Ok as usize],
+        rejected: counts[SoakOutcome::Rejected as usize],
+        shed: counts[SoakOutcome::Shed as usize],
+        deadline: counts[SoakOutcome::Deadline as usize],
+        errors: counts[SoakOutcome::Error as usize],
+        timeouts: counts[SoakOutcome::Timeout as usize],
+        goodput_rps: counts[SoakOutcome::Ok as usize] as f64 / elapsed.as_secs_f64().max(1e-9),
+        peak_depth,
+        admitted_p99_ms: crate::util::stats::percentile(&admitted_ms, 0.99),
+        classes: crate::workload::RequestClass::ALL
+            .iter()
+            .map(|c| class_stats(*c))
+            .collect(),
+        replica_kills,
+        respawns,
+    }
+}
+
+/// Run one open-loop soak arm. With `shedding` the replicated spawns carry
+/// the config's admission bounds (`max_inflight` + `DropOldest` +
+/// `max_queue_wait`); without it they run unbounded — the control arm
+/// whose queues are free to grow.
+pub fn soak_probe(cfg: &SoakConfig, shedding: bool) -> SoakRun {
+    use crate::workload::{ClassMix, OpenLoop, RequestClass};
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    let d = soak_deploy(cfg, shedding);
+    let (sys, small, large) = (&d.sys, &d.small, &d.large);
 
     let schedule = OpenLoop {
         rps: cfg.offered_rps,
@@ -1314,87 +1425,111 @@ pub fn soak_probe(cfg: &SoakConfig, shedding: bool) -> SoakRun {
                 })
             })
             .collect();
-        for d in drivers {
-            records.extend(d.join().expect("soak driver panicked"));
+        for drv in drivers {
+            records.extend(drv.join().expect("soak driver panicked"));
         }
         stop_monitor.store(true, Ordering::Release);
         let _ = monitor.join();
     });
     let elapsed = t0.elapsed();
+    let peak = peak_depth.load(Ordering::Acquire);
+    let (replica_kills, respawns) = soak_teardown(d);
+    soak_summarize(shedding, &records, elapsed, peak, replica_kills, respawns)
+}
 
-    let replica_kills = chaos.stop();
-    // give in-flight respawns a moment to land before reading the counts
-    let respawn_wait = Instant::now();
-    let count_respawns = || -> u64 {
-        small
-            .pool
-            .replicas()
-            .iter()
-            .chain(large.pool.replicas().iter())
-            .map(|r| r.respawns())
-            .sum()
-    };
-    while count_respawns() < replica_kills
-        && respawn_wait.elapsed() < std::time::Duration::from_secs(5)
-    {
-        std::thread::sleep(std::time::Duration::from_millis(10));
-    }
-    let respawns = count_respawns();
-    mgr.stop_devices();
-    sys.shutdown();
+/// Run the closed-loop soak arm: `loop_cfg.concurrency` workers each issue
+/// their next request `loop_cfg.think` after the previous reply resolves
+/// ([`crate::workload::ClosedLoop`]), against the same deployment, class
+/// mix, and chaos schedule as the open-loop arms. A closed loop
+/// self-clocks — offered load tracks service capacity instead of a
+/// schedule — so this is the bounded-pressure control arm: its latencies
+/// are service times measured from each request's issue instant (there is
+/// no scheduled arrival to charge lateness against), and its backlog is
+/// capped by `concurrency` rather than by admission control.
+pub fn soak_closed_probe(
+    cfg: &SoakConfig,
+    shedding: bool,
+    loop_cfg: crate::workload::ClosedLoop,
+) -> SoakRun {
+    use crate::workload::{ClassMix, RequestClass};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-    let mut issued = 0;
-    let mut counts = [0usize; 6];
-    let mut admitted_ms: Vec<f64> = Vec::new();
-    for (_, outcome, ms) in &records {
-        issued += 1;
-        counts[*outcome as usize] += 1;
-        if *outcome == SoakOutcome::Ok {
-            admitted_ms.push(*ms);
-        }
-    }
-    let class_stats = |class: crate::workload::RequestClass| {
-        let ms: Vec<f64> = records
-            .iter()
-            .filter(|(c, o, _)| *c == class && *o == SoakOutcome::Ok)
-            .map(|(_, _, ms)| *ms)
+    let d = soak_deploy(cfg, shedding);
+    let (sys, small, large) = (&d.sys, &d.small, &d.large);
+
+    let mix = ClassMix::soak_default();
+    let stop_monitor = AtomicBool::new(false);
+    let peak_depth = AtomicU64::new(0);
+    let t0 = Instant::now();
+    let deadline = t0 + cfg.duration;
+    let mut records: Vec<(RequestClass, SoakOutcome, f64)> = Vec::new();
+    std::thread::scope(|s| {
+        let monitor = s.spawn(|| {
+            while !stop_monitor.load(Ordering::Acquire) {
+                let depth = small.pool.total_depth() + large.pool.total_depth();
+                peak_depth.fetch_max(depth, Ordering::AcqRel);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+        let mix = &mix;
+        let workers: Vec<_> = (0..loop_cfg.concurrency.max(1))
+            .map(|w| {
+                s.spawn(move || {
+                    let me = sys.scoped();
+                    let mut rng = crate::util::Rng::new(
+                        cfg.seed ^ (w as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                    );
+                    let mut out = Vec::new();
+                    let mut i = w as u32;
+                    while Instant::now() < deadline {
+                        let class = mix.pick(&mut rng);
+                        let issued_at = Instant::now();
+                        let outcome = match class {
+                            RequestClass::SmallVal => {
+                                soak_one_shot(&me, &small.actor, cfg.small_elems, i)
+                            }
+                            RequestClass::LargeTransfer => {
+                                soak_one_shot(&me, &large.actor, cfg.large_elems, i)
+                            }
+                            RequestClass::Pipeline => {
+                                match soak_one_shot(&me, &large.actor, cfg.large_elems, i) {
+                                    SoakOutcome::Ok => {
+                                        soak_one_shot(&me, &small.actor, cfg.small_elems, i)
+                                    }
+                                    other => other,
+                                }
+                            }
+                        };
+                        out.push((class, outcome, issued_at.elapsed().as_secs_f64() * 1e3));
+                        i = i.wrapping_add(loop_cfg.concurrency.max(1) as u32);
+                        if !loop_cfg.think.is_zero() {
+                            std::thread::sleep(loop_cfg.think);
+                        }
+                    }
+                    out
+                })
+            })
             .collect();
-        SoakClassStats {
-            class: class.name(),
-            n: ms.len(),
-            p50_ms: crate::util::stats::percentile(&ms, 0.50),
-            p99_ms: crate::util::stats::percentile(&ms, 0.99),
-            p999_ms: crate::util::stats::percentile(&ms, 0.999),
+        for wkr in workers {
+            records.extend(wkr.join().expect("closed-loop soak worker panicked"));
         }
-    };
-    SoakRun {
-        shedding,
-        issued,
-        completed: counts[SoakOutcome::Ok as usize],
-        rejected: counts[SoakOutcome::Rejected as usize],
-        shed: counts[SoakOutcome::Shed as usize],
-        deadline: counts[SoakOutcome::Deadline as usize],
-        errors: counts[SoakOutcome::Error as usize],
-        timeouts: counts[SoakOutcome::Timeout as usize],
-        goodput_rps: counts[SoakOutcome::Ok as usize] as f64
-            / elapsed.as_secs_f64().max(1e-9),
-        peak_depth: peak_depth.load(std::sync::atomic::Ordering::Acquire),
-        admitted_p99_ms: crate::util::stats::percentile(&admitted_ms, 0.99),
-        classes: crate::workload::RequestClass::ALL
-            .iter()
-            .map(|c| class_stats(*c))
-            .collect(),
-        replica_kills,
-        respawns,
-    }
+        stop_monitor.store(true, Ordering::Release);
+        let _ = monitor.join();
+    });
+    let elapsed = t0.elapsed();
+    let peak = peak_depth.load(Ordering::Acquire);
+    let (replica_kills, respawns) = soak_teardown(d);
+    soak_summarize(shedding, &records, elapsed, peak, replica_kills, respawns)
 }
 
 /// Write `BENCH_soak.json` (repo root when run from `rust/`, else the
-/// working directory): the shed-on/shed-off soak comparison PERF.md
-/// describes.
+/// working directory): the shed-on/shed-off open-loop comparison plus the
+/// closed-loop control arm PERF.md describes.
 pub fn write_soak_json(
     on: &SoakRun,
     off: &SoakRun,
+    closed: &SoakRun,
+    closed_cfg: &crate::workload::ClosedLoop,
     cfg: &SoakConfig,
     generated_by: &str,
 ) -> std::io::Result<std::path::PathBuf> {
@@ -1454,8 +1589,9 @@ pub fn write_soak_json(
          \"config\": {{\"devices\": {}, \"launch_ms\": {:.3}, \
          \"duration_ms\": {}, \"offered_rps\": {:.1}, \"drivers\": {}, \
          \"max_inflight\": {}, \"max_queue_wait_ms\": {}, \
-         \"chaos_interval_ms\": {}}},\n  \
-         \"shed_on\": {},\n  \"shed_off\": {}\n}}\n",
+         \"chaos_interval_ms\": {}, \"closed_concurrency\": {}, \
+         \"closed_think_ms\": {}}},\n  \
+         \"shed_on\": {},\n  \"shed_off\": {},\n  \"closed_loop\": {}\n}}\n",
         cfg.devices,
         cfg.launch.as_secs_f64() * 1e3,
         cfg.duration.as_millis(),
@@ -1464,8 +1600,277 @@ pub fn write_soak_json(
         cfg.max_inflight,
         cfg.max_queue_wait.as_millis(),
         cfg.chaos_interval.as_millis(),
+        closed_cfg.concurrency,
+        closed_cfg.think.as_millis(),
         run_json(on),
-        run_json(off)
+        run_json(off),
+        run_json(closed)
+    );
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
+// ---------------------------------------------------------------------------
+// Remote request path (PERF.md): blocking vs async request futures over
+// loopback. Both arms drive the same published echo actor through one
+// proxy connection; the sweep varies the in-flight window. The blocking
+// arm parks one OS thread per in-flight slot (the pre-futures baseline);
+// the async arm holds the whole window from a small fixed pool of client
+// threads via `ActorRef::ask` + a bounded `FutureSet`. Each arm is a
+// closed loop at its window size: latencies are issue→resolve service
+// times, and req/s over the whole batch is reported alongside so a stall
+// that blocks the window shows up in throughput (see PERF.md on
+// coordinated omission).
+// ---------------------------------------------------------------------------
+
+/// Config of the net probe (the `net` bench and the tier-1 `perf_net` test
+/// run the same sweep at different request counts).
+#[derive(Clone, Debug)]
+pub struct NetProbeConfig {
+    /// In-flight windows to sweep, e.g. `[1, 64, 4096]`.
+    pub levels: Vec<usize>,
+    /// Requests per arm at each level (raised to the level so every slot
+    /// issues at least one).
+    pub requests: usize,
+    /// `u32` elements per request payload (the echoed vector).
+    pub elems: usize,
+    /// Client threads of the async arm — the bounded pool that holds the
+    /// whole window in flight. Never one thread per request.
+    pub client_threads: usize,
+}
+
+/// One (level, mode) measurement of the net probe.
+#[derive(Clone, Debug)]
+pub struct NetArm {
+    pub inflight: usize,
+    /// `"blocking"` (one thread per in-flight slot) or `"async"` (bounded
+    /// pool + futures).
+    pub mode: &'static str,
+    pub issued: usize,
+    /// Requests that resolved with a reply.
+    pub completed: usize,
+    /// Requests that resolved with an error (0 over a healthy loopback).
+    pub errors: usize,
+    /// Client threads the arm actually ran — the acceptance check that the
+    /// async arm never grows a thread per request.
+    pub threads: usize,
+    pub req_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Run the blocking-vs-async sweep over a loopback node pair; returns two
+/// arms per configured level.
+pub fn net_probe(cfg: &NetProbeConfig) -> Vec<NetArm> {
+    use crate::actor::{reply, ActorSystem, Behavior, SpawnOptions, SystemConfig};
+    use crate::net::Node;
+
+    let server_sys = ActorSystem::new(SystemConfig::default().with_threads(4));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, v: &Vec<u32>| reply(v.clone())),
+        SpawnOptions::named("net-echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").expect("listen on loopback");
+
+    // generous remote deadline: the reaper is a hang detector here, not a
+    // latency bound — the exactly-once ledger asserts it never fires
+    let client_sys = ActorSystem::new(
+        SystemConfig::default()
+            .with_threads(4)
+            .with_remote_timeout(std::time::Duration::from_secs(120)),
+    );
+    let client = Node::new(&client_sys);
+    let remote = client
+        .remote_actor(&addr.to_string(), "net-echo")
+        .expect("connect to loopback node");
+
+    let mut arms = Vec::new();
+    for &level in &cfg.levels {
+        arms.push(net_blocking_arm(cfg, &client_sys, &remote, level));
+        arms.push(net_async_arm(cfg, &remote, level));
+    }
+
+    server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+    arms
+}
+
+/// The pre-futures baseline: `level` OS threads (small stacks), each
+/// holding exactly one blocking request at a time.
+fn net_blocking_arm(
+    cfg: &NetProbeConfig,
+    sys: &crate::actor::ActorSystem,
+    remote: &crate::actor::ActorRef,
+    level: usize,
+) -> NetArm {
+    let issued = cfg.requests.max(level);
+    let t0 = Instant::now();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(issued);
+    let mut errors = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..level)
+            .map(|slot| {
+                // distribute the request budget across the slots
+                let n = issued / level + usize::from(slot < issued % level);
+                std::thread::Builder::new()
+                    .name(format!("net-blk-{slot}"))
+                    .stack_size(128 * 1024)
+                    .spawn_scoped(s, move || {
+                        let me = sys.scoped();
+                        let mut out = Vec::with_capacity(n);
+                        for i in 0..n {
+                            let payload = vec![(slot + i) as u32; cfg.elems];
+                            let at = Instant::now();
+                            let r = me
+                                .request(remote, payload)
+                                .receive_msg(std::time::Duration::from_secs(120));
+                            out.push((r.is_ok(), at.elapsed().as_secs_f64() * 1e3));
+                        }
+                        out
+                    })
+                    .expect("spawn blocking-arm thread")
+            })
+            .collect();
+        for h in handles {
+            for (ok, ms) in h.join().expect("blocking-arm thread panicked") {
+                if ok {
+                    lat_ms.push(ms);
+                } else {
+                    errors += 1;
+                }
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    NetArm {
+        inflight: level,
+        mode: "blocking",
+        issued,
+        completed: lat_ms.len(),
+        errors,
+        threads: level,
+        req_per_s: lat_ms.len() as f64 / wall.max(1e-9),
+        p50_ms: crate::util::stats::percentile(&lat_ms, 0.50),
+        p99_ms: crate::util::stats::percentile(&lat_ms, 0.99),
+    }
+}
+
+/// The futures arm: a fixed pool of `cfg.client_threads` threads keeps
+/// `level` requests in flight via `ActorRef::ask` + a bounded
+/// [`FutureSet`](crate::actor::FutureSet). Completion hooks record each
+/// latency on the resolver thread; the issuing pool never parks on an
+/// individual reply.
+fn net_async_arm(cfg: &NetProbeConfig, remote: &crate::actor::ActorRef, level: usize) -> NetArm {
+    use crate::actor::FutureSet;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let issued = cfg.requests.max(level);
+    let threads = cfg.client_threads.max(1).min(level);
+    let set = FutureSet::new(level);
+    let cursor = AtomicUsize::new(0);
+    let done: Arc<Mutex<Vec<(bool, f64)>>> = Arc::new(Mutex::new(Vec::with_capacity(issued)));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= issued {
+                    break;
+                }
+                let at = Instant::now();
+                let fut = remote.ask(vec![i as u32; cfg.elems]);
+                let done = done.clone();
+                fut.then(move |r| {
+                    let ms = at.elapsed().as_secs_f64() * 1e3;
+                    done.lock().unwrap_or_else(|p| p.into_inner()).push((r.is_ok(), ms));
+                });
+                // backpressure: block while the window is full. The request
+                // above is already on the wire when push blocks, so the
+                // in-flight peak is level + threads — the window, not the
+                // thread count, is what bounds the client.
+                set.push(&fut);
+            });
+        }
+    });
+    let resolved = set.join_all(std::time::Duration::from_secs(300));
+    let wall = t0.elapsed().as_secs_f64();
+    let recorded = {
+        let mut g = done.lock().unwrap_or_else(|p| p.into_inner());
+        std::mem::take(&mut *g)
+    };
+    // the ledger the callers assert on: every issued request must have run
+    // its completion hook exactly once (recorded) and drained (resolved)
+    let completed = recorded.iter().filter(|(ok, _)| *ok).count();
+    let errors = recorded.len() - completed;
+    let lat_ms: Vec<f64> = recorded
+        .iter()
+        .filter(|(ok, _)| *ok)
+        .map(|(_, ms)| *ms)
+        .collect();
+    drop(resolved);
+    NetArm {
+        inflight: level,
+        mode: "async",
+        issued,
+        completed,
+        errors,
+        threads,
+        req_per_s: completed as f64 / wall.max(1e-9),
+        p50_ms: crate::util::stats::percentile(&lat_ms, 0.50),
+        p99_ms: crate::util::stats::percentile(&lat_ms, 0.99),
+    }
+}
+
+/// Write `BENCH_net.json` (repo root when run from `rust/`, else the
+/// working directory): the blocking-vs-async remote-request comparison
+/// PERF.md describes.
+pub fn write_net_json(
+    arms: &[NetArm],
+    cfg: &NetProbeConfig,
+    generated_by: &str,
+) -> std::io::Result<std::path::PathBuf> {
+    let root = std::path::Path::new("../ROADMAP.md");
+    let path = if root.exists() {
+        std::path::PathBuf::from("../BENCH_net.json")
+    } else {
+        std::path::PathBuf::from("BENCH_net.json")
+    };
+    let fmt_ms = |x: f64| {
+        if x.is_nan() {
+            "null".to_string()
+        } else {
+            format!("{x:.3}")
+        }
+    };
+    let arm_json = |a: &NetArm| {
+        format!(
+            "{{\"mode\": \"{}\", \"inflight\": {}, \"issued\": {}, \
+             \"completed\": {}, \"errors\": {}, \"threads\": {}, \
+             \"req_per_s\": {:.1}, \"p50_ms\": {}, \"p99_ms\": {}}}",
+            a.mode,
+            a.inflight,
+            a.issued,
+            a.completed,
+            a.errors,
+            a.threads,
+            a.req_per_s,
+            fmt_ms(a.p50_ms),
+            fmt_ms(a.p99_ms)
+        )
+    };
+    let list = arms
+        .iter()
+        .map(arm_json)
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    let json = format!(
+        "{{\n  \"bench\": \"net\",\n  \"generated_by\": {generated_by:?},\n  \
+         \"config\": {{\"levels\": {:?}, \"requests\": {}, \"elems\": {}, \
+         \"client_threads\": {}}},\n  \"arms\": [\n    {}\n  ]\n}}\n",
+        cfg.levels, cfg.requests, cfg.elems, cfg.client_threads, list
     );
     std::fs::write(&path, json)?;
     Ok(path)

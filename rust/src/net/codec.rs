@@ -170,6 +170,209 @@ fn encode_args(args: &[ArgValue]) -> Result<Vec<u8>, CodecError> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// scatter-gather encode
+// ---------------------------------------------------------------------------
+
+/// A zero-copy encoded message: a small owned header arena plus *borrowed*
+/// element-payload slices, written to the socket with vectored I/O
+/// ([`crate::net::node`]). For the hot payloads (`Vec<ArgValue>`,
+/// `Vec<u32>`/`Vec<f32>` and their pairs) the element data never lands in an
+/// intermediate assembly buffer: the wire segments point straight into the
+/// message's own storage. Cold payload types fall back to the owned
+/// [`encode_message`] bytes carried in the arena.
+pub struct ScatterPayload<'a> {
+    /// Owned header bytes (tags, counts, lengths), shared by all Head parts.
+    head: Vec<u8>,
+    parts: Vec<Part<'a>>,
+    total: usize,
+}
+
+enum Part<'a> {
+    /// `head[start..start + len]`.
+    Head { start: usize, len: usize },
+    /// Borrowed element data, already in wire (little-endian) byte order.
+    Data(&'a [u8]),
+}
+
+/// Reinterpret a `u32` slice as its wire bytes (little-endian targets only:
+/// there the in-memory representation *is* the encoding).
+#[cfg(target_endian = "little")]
+fn u32_wire_bytes(v: &[u32]) -> &[u8] {
+    // SAFETY: u32 has no padding, u8 alignment is 1, and the length in
+    // bytes is exactly `4 * v.len()` within one allocation.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) }
+}
+
+#[cfg(target_endian = "little")]
+fn f32_wire_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: as above — f32 is a 4-byte POD with no padding.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4) }
+}
+
+impl<'a> ScatterPayload<'a> {
+    fn new() -> Self {
+        ScatterPayload {
+            head: Vec::with_capacity(64),
+            parts: Vec::with_capacity(8),
+            total: 0,
+        }
+    }
+
+    /// Append owned header bytes; contiguous head writes merge into one part.
+    fn put_head(&mut self, f: impl FnOnce(&mut Vec<u8>)) {
+        let start = self.head.len();
+        f(&mut self.head);
+        let len = self.head.len() - start;
+        self.total += len;
+        if let Some(Part::Head { start: s, len: l }) = self.parts.last_mut() {
+            if *s + *l == start {
+                *l += len;
+                return;
+            }
+        }
+        self.parts.push(Part::Head { start, len });
+    }
+
+    /// Append a borrowed element-data segment (little-endian targets); on
+    /// big-endian targets the elements are byte-swapped into the arena.
+    fn put_u32_elems(&mut self, v: &'a [u32]) {
+        #[cfg(target_endian = "little")]
+        {
+            if !v.is_empty() {
+                let d = u32_wire_bytes(v);
+                self.total += d.len();
+                self.parts.push(Part::Data(d));
+            }
+        }
+        #[cfg(not(target_endian = "little"))]
+        self.put_head(|h| {
+            for x in v {
+                h.extend_from_slice(&x.to_le_bytes());
+            }
+        });
+    }
+
+    fn put_f32_elems(&mut self, v: &'a [f32]) {
+        #[cfg(target_endian = "little")]
+        {
+            if !v.is_empty() {
+                let d = f32_wire_bytes(v);
+                self.total += d.len();
+                self.parts.push(Part::Data(d));
+            }
+        }
+        #[cfg(not(target_endian = "little"))]
+        self.put_head(|h| {
+            for x in v {
+                h.extend_from_slice(&x.to_le_bytes());
+            }
+        });
+    }
+
+    /// Total encoded length in bytes (sum of all segments).
+    pub fn total_len(&self) -> usize {
+        self.total
+    }
+
+    /// The wire segments in order. Concatenated they are byte-identical to
+    /// [`encode_message`]'s output; written with vectored I/O they never
+    /// are concatenated.
+    pub fn segments(&self) -> Vec<&[u8]> {
+        self.parts
+            .iter()
+            .map(|p| match p {
+                Part::Head { start, len } => &self.head[*start..*start + *len],
+                Part::Data(d) => *d,
+            })
+            .collect()
+    }
+
+    /// Number of borrowed (non-arena) segments — diagnostics and tests.
+    pub fn borrowed_segments(&self) -> usize {
+        self.parts
+            .iter()
+            .filter(|p| matches!(p, Part::Data(_)))
+            .count()
+    }
+}
+
+/// Serialize a message as header arena + borrowed payload slices. Same wire
+/// format and same error surface as [`encode_message`]; the difference is
+/// purely where the bytes live until the socket write.
+pub fn encode_scatter(msg: &Message) -> Result<ScatterPayload<'_>, CodecError> {
+    let mut sp = ScatterPayload::new();
+    if let Some(args) = msg.downcast_ref::<Vec<ArgValue>>() {
+        if args.iter().any(|a| a.is_ref()) {
+            return Err(CodecError::DeviceLocal);
+        }
+        sp.put_head(|h| {
+            h.push(TAG_ARGS);
+            h.extend_from_slice(&(args.len() as u32).to_le_bytes());
+        });
+        for a in args {
+            match a {
+                ArgValue::U32(v) => {
+                    sp.put_head(|h| {
+                        h.push(ARG_U32);
+                        h.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                    });
+                    sp.put_u32_elems(v);
+                }
+                ArgValue::F32(v) => {
+                    sp.put_head(|h| {
+                        h.push(ARG_F32);
+                        h.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                    });
+                    sp.put_f32_elems(v);
+                }
+                ArgValue::Ref(_) => unreachable!("checked above"),
+            }
+        }
+        return Ok(sp);
+    }
+    if let Some(v) = msg.downcast_ref::<Vec<u32>>() {
+        sp.put_head(|h| {
+            h.push(TAG_VEC_U32);
+            h.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        });
+        sp.put_u32_elems(v);
+        return Ok(sp);
+    }
+    if let Some(v) = msg.downcast_ref::<Vec<f32>>() {
+        sp.put_head(|h| {
+            h.push(TAG_VEC_F32);
+            h.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        });
+        sp.put_f32_elems(v);
+        return Ok(sp);
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(Vec<u32>, Vec<u32>)>() {
+        sp.put_head(|h| {
+            h.push(TAG_PAIR_VEC_U32);
+            h.extend_from_slice(&(a.len() as u32).to_le_bytes());
+        });
+        sp.put_u32_elems(a);
+        sp.put_head(|h| h.extend_from_slice(&(b.len() as u32).to_le_bytes()));
+        sp.put_u32_elems(b);
+        return Ok(sp);
+    }
+    if let Some((a, b)) = msg.downcast_ref::<(Vec<f32>, Vec<f32>)>() {
+        sp.put_head(|h| {
+            h.push(TAG_PAIR_VEC_F32);
+            h.extend_from_slice(&(a.len() as u32).to_le_bytes());
+        });
+        sp.put_f32_elems(a);
+        sp.put_head(|h| h.extend_from_slice(&(b.len() as u32).to_le_bytes()));
+        sp.put_f32_elems(b);
+        return Ok(sp);
+    }
+    // cold types: owned full encoding carried in the arena
+    let owned = encode_message(msg)?;
+    sp.put_head(|h| h.extend_from_slice(&owned));
+    Ok(sp)
+}
+
 struct Reader<'a> {
     buf: &'a [u8],
     at: usize,
@@ -213,20 +416,42 @@ impl<'a> Reader<'a> {
         Ok(n)
     }
 
+    /// Bulk-decode `n` little-endian u32s: one length-checked `take`, one
+    /// `memcpy` into the element vector (on LE targets), instead of the
+    /// per-element loop this replaced — the decode half of the zero-copy
+    /// wire path (the single host-side copy a remote upload pays).
     fn vec_u32(&mut self) -> Result<Vec<u32>, CodecError> {
         let n = self.count(4)?;
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            v.push(self.u32()?);
+        let bytes = self.take(4 * n)?;
+        let mut v: Vec<u32> = Vec::with_capacity(n);
+        #[cfg(target_endian = "little")]
+        // SAFETY: `bytes` holds exactly `4 * n` bytes, the fresh Vec has
+        // capacity for `n` u32s, and on a little-endian target the wire
+        // bytes are the in-memory representation.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr().cast::<u8>(), 4 * n);
+            v.set_len(n);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for c in bytes.chunks_exact(4) {
+            v.push(u32::from_le_bytes(c.try_into().unwrap())); // lint-ok: chunks_exact(4) yields 4-byte slices
         }
         Ok(v)
     }
 
     fn vec_f32(&mut self) -> Result<Vec<f32>, CodecError> {
         let n = self.count(4)?;
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            v.push(f32::from_le_bytes(self.take(4)?.try_into().unwrap())); // lint-ok: take(4) yields exactly 4 bytes
+        let bytes = self.take(4 * n)?;
+        let mut v: Vec<f32> = Vec::with_capacity(n);
+        #[cfg(target_endian = "little")]
+        // SAFETY: as in `vec_u32` — f32 is a 4-byte POD.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), v.as_mut_ptr().cast::<u8>(), 4 * n);
+            v.set_len(n);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for c in bytes.chunks_exact(4) {
+            v.push(f32::from_le_bytes(c.try_into().unwrap())); // lint-ok: chunks_exact(4) yields 4-byte slices
         }
         Ok(v)
     }
@@ -384,6 +609,65 @@ mod tests {
         b.extend_from_slice(&0x4000_0000u32.to_le_bytes());
         b.extend_from_slice(&[0; 16]);
         assert!(decode_message(&b).is_err());
+    }
+
+    fn gather(sp: &ScatterPayload<'_>) -> Vec<u8> {
+        let mut out = Vec::new();
+        for s in sp.segments() {
+            out.extend_from_slice(s);
+        }
+        out
+    }
+
+    #[test]
+    fn scatter_matches_owned_encoding() {
+        let msgs = vec![
+            Message::new(vec![ArgValue::from(vec![1u32, 2, 3]), ArgValue::from(vec![1.5f32])]),
+            Message::new(vec![9u32, 8, 7]),
+            Message::new(vec![0.5f32; 33]),
+            Message::new((vec![1u32, 2], vec![3u32])),
+            Message::new((vec![1.0f32], vec![2.0f32, 3.0])),
+            Message::new(Vec::<ArgValue>::new()),
+            // cold types take the arena fallback but stay byte-identical
+            Message::new(42u32),
+            Message::new("hello".to_string()),
+            Message::new(ErrorMsg::new("boom")),
+        ];
+        for m in &msgs {
+            let sp = encode_scatter(m).unwrap();
+            let owned = encode_message(m).unwrap();
+            assert_eq!(gather(&sp), owned, "scatter bytes differ for {}", m.type_name());
+            assert_eq!(sp.total_len(), owned.len());
+        }
+    }
+
+    #[cfg(target_endian = "little")]
+    #[test]
+    fn scatter_borrows_element_data_without_copying() {
+        let payload = vec![7u32; 1024];
+        let elem_ptr = payload.as_ptr().cast::<u8>();
+        let args = vec![ArgValue::from(payload)];
+        let m = Message::new(args);
+        let sp = encode_scatter(&m).unwrap();
+        assert_eq!(sp.borrowed_segments(), 1, "element data must be a borrowed segment");
+        let segs = sp.segments();
+        let data_seg = segs.last().unwrap();
+        assert_eq!(data_seg.len(), 1024 * 4);
+        assert_eq!(
+            data_seg.as_ptr(),
+            elem_ptr,
+            "borrowed segment must point into the message's own storage"
+        );
+    }
+
+    #[test]
+    fn scatter_rejects_refs_and_unsupported() {
+        #[derive(Clone)]
+        struct Custom;
+        assert!(matches!(
+            encode_scatter(&Message::new(Custom)).unwrap_err(),
+            CodecError::Unsupported(_)
+        ));
     }
 
     #[test]

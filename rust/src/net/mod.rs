@@ -22,6 +22,8 @@
 
 pub mod codec;
 pub mod node;
+pub mod slab;
 
-pub use codec::{decode_message, encode_message, CodecError};
-pub use node::{Node, MAX_FRAME};
+pub use codec::{decode_message, encode_message, encode_scatter, CodecError, ScatterPayload};
+pub use node::{Node, MAX_CHUNKED, MAX_FRAME};
+pub use slab::FrameSlab;

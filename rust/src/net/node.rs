@@ -3,15 +3,37 @@
 //! Wire protocol (all little-endian, length-prefixed frames):
 //!
 //! ```text
-//! frame   := len:u32 kind:u8 body          (1 <= len <= MAX_FRAME)
-//! REQUEST := mid:u64 name_len:u16 name payload     (kind 1)
-//! REPLY   := mid:u64 payload                       (kind 2)
-//! SEND    := name_len:u16 name payload             (kind 3, fire-and-forget)
+//! frame       := len:u32 kind:u8 body          (1 <= len <= MAX_FRAME)
+//! REQUEST     := mid:u64 name_len:u16 name payload     (kind 1)
+//! REPLY       := mid:u64 payload                       (kind 2)
+//! SEND        := name_len:u16 name payload             (kind 3, fire-and-forget)
+//! CHUNK_START := total:u64 inner_kind:u8 data          (kind 4)
+//! CHUNK_CONT  := data                                  (kind 5)
 //! ```
 //!
 //! `payload` is a tagged message body (see [`super::codec`]); kernel
 //! argument lists travel as the self-describing `TAG_ARGS` encoding, which
 //! is what lets a remote client drive a published OpenCL facade.
+//!
+//! **Zero-copy writes.** Outbound frames are written as scatter-gather
+//! segment lists ([`super::codec::encode_scatter`]) with vectored I/O:
+//! header bytes come from a small arena, element data (`Vec<u32>`/
+//! `Vec<f32>` payloads) is written as borrowed slices straight out of the
+//! message's own storage — there is no intermediate full-frame assembly
+//! buffer on the encode path. On decode, frame bodies land in recycled
+//! [`super::slab::FrameSlab`] pages and element data is bulk-copied once
+//! into its `ArgValue` vectors, which the facade's upload path stages
+//! directly into pool-recycled device buffers (`runtime/client.rs`) — so a
+//! remote upload pays exactly one host-side copy.
+//!
+//! **Chunked continuation frames.** A logical message larger than
+//! [`MAX_FRAME`] shards into a `CHUNK_START` frame (announcing the total
+//! reassembled size and the inner frame kind) followed by `CHUNK_CONT`
+//! frames, reassembled on the receiver under the [`MAX_CHUNKED`] clamp
+//! (256 MiB). A hostile announced total — larger than the clamp, overrun
+//! by the actual data, or starved by an empty continuation — is a protocol
+//! error that closes the connection; reassembly allocates as data arrives,
+//! never from the announced total alone.
 //!
 //! Framing is panic-proof on both sides: zero-length frames and frames
 //! larger than [`MAX_FRAME`] (16 MiB) are protocol errors that close the
@@ -54,13 +76,14 @@
 //! [`Down`]: crate::actor::Down
 //! [`ExitReason::Unreachable`]: crate::actor::ExitReason
 
-use super::codec::{decode_message, encode_message};
+use super::codec::{decode_message, encode_message, encode_scatter};
+use super::slab::FrameSlab;
 use crate::actor::envelope::{ActorId, Envelope, MessageId};
 use crate::actor::monitor::{Down, ExitReason};
 use crate::actor::{AbstractActor, ActorRef, ActorSystem, ErrorMsg, Message};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
@@ -69,6 +92,8 @@ use std::time::Duration;
 const KIND_REQUEST: u8 = 1;
 const KIND_REPLY: u8 = 2;
 const KIND_SEND: u8 = 3;
+const KIND_CHUNK_START: u8 = 4;
+const KIND_CHUNK_CONT: u8 = 5;
 
 /// Hard cap on one frame (`kind` byte + body). A peer announcing a larger
 /// length is a protocol violation — the connection closes before a single
@@ -76,24 +101,117 @@ const KIND_SEND: u8 = 3;
 /// allocation.
 pub const MAX_FRAME: usize = 16 << 20;
 
+/// Hard cap on one *logical* message reassembled from chunked frames
+/// (`CHUNK_START` + `CHUNK_CONT`). An announced total beyond this closes
+/// the connection before any continuation is read.
+pub const MAX_CHUNKED: usize = 256 << 20;
+
+/// `CHUNK_START` body prefix: `total:u64` + `inner_kind:u8`.
+const CHUNK_HDR: usize = 9;
+
 fn proto_err(what: String) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, what)
 }
 
-fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result<()> {
-    let len = body.len() + 1;
-    if len > MAX_FRAME {
+/// Write every byte of `segs` in order via vectored I/O, advancing across
+/// partial writes without copying segments together.
+fn write_segments(stream: &mut TcpStream, segs: &[&[u8]]) -> std::io::Result<()> {
+    let mut rem: Vec<&[u8]> = segs.iter().copied().filter(|s| !s.is_empty()).collect();
+    while !rem.is_empty() {
+        let iov: Vec<IoSlice<'_>> = rem.iter().map(|s| IoSlice::new(s)).collect();
+        let mut n = stream.write_vectored(&iov)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "socket accepted zero bytes",
+            ));
+        }
+        let mut done = 0;
+        while done < rem.len() && n >= rem[done].len() {
+            n -= rem[done].len();
+            done += 1;
+        }
+        rem.drain(..done);
+        if n > 0 {
+            rem[0] = &rem[0][n..];
+        }
+    }
+    Ok(())
+}
+
+/// Write one logical message (`kind` + concatenation of `segs`) without
+/// ever assembling it: small messages go out as a single vectored frame,
+/// larger ones shard into `CHUNK_START`/`CHUNK_CONT` frames cut across the
+/// segment list. The caller must hold the connection's writer lock for the
+/// whole call so chunks of different messages never interleave.
+fn write_logical_frame(stream: &mut TcpStream, kind: u8, segs: &[&[u8]]) -> std::io::Result<()> {
+    let total: usize = segs.iter().map(|s| s.len()).sum();
+    if total + 1 <= MAX_FRAME {
+        let len4 = ((total + 1) as u32).to_le_bytes();
+        let kind1 = [kind];
+        let mut iov: Vec<&[u8]> = Vec::with_capacity(segs.len() + 2);
+        iov.push(&len4);
+        iov.push(&kind1);
+        iov.extend_from_slice(segs);
+        write_segments(stream, &iov)?;
+        return stream.flush();
+    }
+    if total > MAX_CHUNKED {
         return Err(proto_err(format!(
-            "outbound frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})"
+            "outbound message of {total} bytes exceeds MAX_CHUNKED ({MAX_CHUNKED})"
         )));
     }
-    stream.write_all(&(len as u32).to_le_bytes())?;
-    stream.write_all(&[kind])?;
-    stream.write_all(body)?;
+    // shard: a START frame carrying the reassembly header, then CONT frames,
+    // each cut across the segment list at MAX_FRAME boundaries
+    let mut idx = 0usize; // next segment
+    let mut off = 0usize; // offset into segs[idx]
+    let mut first = true;
+    while first || idx < segs.len() {
+        let cap = MAX_FRAME - 1 - if first { CHUNK_HDR } else { 0 };
+        let mut parts: Vec<&[u8]> = Vec::new();
+        let mut n = 0usize;
+        while idx < segs.len() && n < cap {
+            let s = &segs[idx][off..];
+            let take = s.len().min(cap - n);
+            parts.push(&s[..take]);
+            n += take;
+            if take == s.len() {
+                idx += 1;
+                off = 0;
+            } else {
+                off += take;
+            }
+        }
+        let (frame_kind, hdr_extra) = if first {
+            (KIND_CHUNK_START, CHUNK_HDR)
+        } else {
+            (KIND_CHUNK_CONT, 0)
+        };
+        let len4 = ((n + hdr_extra + 1) as u32).to_le_bytes();
+        let kind1 = [frame_kind];
+        let mut start_hdr = [0u8; CHUNK_HDR];
+        let mut iov: Vec<&[u8]> = Vec::with_capacity(parts.len() + 3);
+        iov.push(&len4);
+        iov.push(&kind1);
+        if first {
+            start_hdr[..8].copy_from_slice(&(total as u64).to_le_bytes());
+            start_hdr[8] = kind;
+            iov.push(&start_hdr);
+        }
+        iov.extend_from_slice(&parts);
+        write_segments(stream, &iov)?;
+        first = false;
+    }
     stream.flush()
 }
 
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
+/// Convenience for contiguous bodies (error replies, tests).
+fn write_frame(stream: &mut TcpStream, kind: u8, body: &[u8]) -> std::io::Result<()> {
+    write_logical_frame(stream, kind, &[body])
+}
+
+/// Read one raw frame into a slab-recycled page.
+fn read_frame(stream: &mut TcpStream, slab: &mut FrameSlab) -> std::io::Result<(u8, Vec<u8>)> {
     let mut len4 = [0u8; 4];
     stream.read_exact(&mut len4)?;
     let len = u32::from_le_bytes(len4) as usize;
@@ -107,9 +225,71 @@ fn read_frame(stream: &mut TcpStream) -> std::io::Result<(u8, Vec<u8>)> {
     }
     let mut kind = [0u8; 1];
     stream.read_exact(&mut kind)?;
-    let mut body = vec![0u8; len - 1];
+    let mut body = slab.take(len - 1);
     stream.read_exact(&mut body)?;
     Ok((kind[0], body))
+}
+
+/// Read one logical message: a plain frame passes through; a `CHUNK_START`
+/// frame triggers reassembly of its continuations under the [`MAX_CHUNKED`]
+/// clamp. Reassembly allocates as data arrives — a hostile announced total
+/// fails before reserving anything.
+fn read_logical_frame(
+    stream: &mut TcpStream,
+    slab: &mut FrameSlab,
+) -> std::io::Result<(u8, Vec<u8>)> {
+    let (kind, body) = read_frame(stream, slab)?;
+    if kind == KIND_CHUNK_CONT {
+        return Err(proto_err("CHUNK_CONT without a CHUNK_START".to_string()));
+    }
+    if kind != KIND_CHUNK_START {
+        return Ok((kind, body));
+    }
+    if body.len() < CHUNK_HDR {
+        return Err(proto_err(format!(
+            "CHUNK_START body of {} bytes is shorter than its header",
+            body.len()
+        )));
+    }
+    let total = u64::from_le_bytes(body[0..8].try_into().unwrap()) as usize; // lint-ok: length checked above
+    let inner_kind = body[8];
+    if total > MAX_CHUNKED {
+        return Err(proto_err(format!(
+            "chunked message announcing {total} bytes exceeds MAX_CHUNKED ({MAX_CHUNKED})"
+        )));
+    }
+    if matches!(inner_kind, KIND_CHUNK_START | KIND_CHUNK_CONT) {
+        return Err(proto_err(format!(
+            "chunked message with nested chunk kind {inner_kind}"
+        )));
+    }
+    // grow as data arrives; the initial reservation is bounded by what one
+    // frame can legally carry, not by the (attacker-controlled) total
+    let mut assembled = Vec::with_capacity((body.len() - CHUNK_HDR).min(total));
+    assembled.extend_from_slice(&body[CHUNK_HDR..]);
+    slab.put(body);
+    if assembled.len() > total {
+        return Err(proto_err(format!(
+            "chunk data overruns the announced total of {total} bytes"
+        )));
+    }
+    while assembled.len() < total {
+        let (k, cont) = read_frame(stream, slab)?;
+        if k != KIND_CHUNK_CONT {
+            return Err(proto_err(format!(
+                "frame kind {k} interleaved into a chunked message"
+            )));
+        }
+        if cont.is_empty() || assembled.len() + cont.len() > total {
+            return Err(proto_err(format!(
+                "continuation of {} bytes breaks the announced total of {total}",
+                cont.len()
+            )));
+        }
+        assembled.extend_from_slice(&cont);
+        slab.put(cont);
+    }
+    Ok((inner_kind, assembled))
 }
 
 /// A node endpoint: can listen (publish) and connect (proxy).
@@ -357,22 +537,23 @@ struct WireResponder {
 
 impl AbstractActor for WireResponder {
     fn enqueue(&self, env: Envelope) {
-        let body = match encode_message(&env.msg) {
-            Ok(mut payload) => {
-                let mut b = self.mid.to_le_bytes().to_vec();
-                b.append(&mut payload);
-                b
-            }
+        let mid_bytes = self.mid.to_le_bytes();
+        // encode as header arena + borrowed element slices; a payload with
+        // no wire representation answers the requester with the codec error
+        let err_payload;
+        let sp = match encode_scatter(&env.msg) {
+            Ok(sp) => sp,
             Err(e) => {
-                let mut b = self.mid.to_le_bytes().to_vec();
-                b.append(&mut encode_message(&Message::new(ErrorMsg::new(e.to_string())))
-                    .expect("ErrorMsg always encodes")); // lint-ok: ErrorMsg encodes infallibly
-                b
+                err_payload = Message::new(ErrorMsg::new(e.to_string()));
+                encode_scatter(&err_payload).expect("ErrorMsg always encodes") // lint-ok: ErrorMsg encodes infallibly
             }
         };
+        let mut segs: Vec<&[u8]> = Vec::with_capacity(8);
+        segs.push(&mid_bytes);
+        segs.extend(sp.segments());
         if let Ok(mut w) = self.writer.lock() {
-            if let Err(e) = write_frame(&mut w, KIND_REPLY, &body) {
-                // a local size violation (reply over MAX_FRAME) leaves the
+            if let Err(e) = write_logical_frame(&mut w, KIND_REPLY, &segs) {
+                // a local size violation (reply over MAX_CHUNKED) leaves the
                 // socket healthy: answer with a small error so the remote
                 // requester learns why instead of timing out. Real I/O
                 // errors mean the connection is gone — the client's reader
@@ -464,8 +645,9 @@ fn serve_connection(sys: ActorSystem, stream: TcpStream) {
         }
     };
     let mut reader = stream;
+    let mut slab = FrameSlab::new();
     loop {
-        let (kind, body) = match read_frame(&mut reader) {
+        let (kind, body) = match read_logical_frame(&mut reader, &mut slab) {
             Ok(f) => f,
             Err(e) => {
                 // EOF is the normal end of a connection; anything else —
@@ -527,6 +709,9 @@ fn serve_connection(sys: ActorSystem, stream: TcpStream) {
                 return;
             }
         }
+        // the frame is fully decoded (element data bulk-copied once into
+        // its vectors); recycle the page for the next frame
+        slab.put(body);
     }
 }
 
@@ -736,8 +921,9 @@ impl Connection {
 
 /// Pump replies off the wire until the connection dies.
 fn reader_loop(reader: &mut TcpStream, conn: &Arc<Connection>) {
+    let mut slab = FrameSlab::new();
     loop {
-        let (kind, body) = match read_frame(reader) {
+        let (kind, body) = match read_logical_frame(reader, &mut slab) {
             Ok(f) => f,
             Err(e) => {
                 if e.kind() == std::io::ErrorKind::InvalidData {
@@ -752,11 +938,13 @@ fn reader_loop(reader: &mut TcpStream, conn: &Arc<Connection>) {
                 body.len(),
                 conn.peer
             );
+            slab.put(body);
             continue;
         }
         let mid = u64::from_le_bytes(body[0..8].try_into().unwrap()); // lint-ok: length checked above
         let Some(who) = conn.pending.lock().unwrap_or_else(|p| p.into_inner()).remove(&mid) else {
             // already failed by deadline/disconnect, or never ours
+            slab.put(body);
             continue;
         };
         match decode_message(&body[8..]) {
@@ -771,6 +959,7 @@ fn reader_loop(reader: &mut TcpStream, conn: &Arc<Connection>) {
                 msg: Message::new(ErrorMsg::new(e.to_string())),
             }),
         }
+        slab.put(body);
     }
 }
 
@@ -835,7 +1024,10 @@ impl RemoteProxy {
 
 impl AbstractActor for RemoteProxy {
     fn enqueue(&self, env: Envelope) {
-        let payload = match encode_message(&env.msg) {
+        // scatter encode: header arena + borrowed element slices, no
+        // full-frame assembly buffer (the element data is written to the
+        // socket straight out of the message's own storage)
+        let sp = match encode_scatter(&env.msg) {
             Ok(p) => p,
             Err(e) => {
                 // serialization failures surface to the requester
@@ -850,26 +1042,28 @@ impl AbstractActor for RemoteProxy {
                 return;
             }
         };
-        let mut body = Vec::with_capacity(payload.len() + 32);
+        let mut head = Vec::with_capacity(10 + self.name.len());
         let kind = if env.mid.is_request() {
-            body.extend_from_slice(&env.mid.0.to_le_bytes());
+            head.extend_from_slice(&env.mid.0.to_le_bytes());
             KIND_REQUEST
         } else {
             KIND_SEND
         };
-        body.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
-        body.extend_from_slice(self.name.as_bytes());
-        body.extend_from_slice(&payload);
+        head.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
+        head.extend_from_slice(self.name.as_bytes());
         // oversized payloads are a *local* error: fail this message only,
         // before touching the shared connection (closing it would tear
-        // down every other proxy's in-flight requests for no reason)
-        if body.len() + 1 > MAX_FRAME {
+        // down every other proxy's in-flight requests for no reason).
+        // Messages over MAX_FRAME shard into chunked frames; the cap here
+        // is the reassembly clamp.
+        let total = head.len() + sp.total_len();
+        if total + 1 > MAX_CHUNKED {
             self.fail(
                 &env.sender,
                 env.mid,
                 format!(
-                    "message of {} bytes exceeds the {MAX_FRAME}-byte frame cap",
-                    body.len() + 1
+                    "message of {} bytes exceeds the {MAX_CHUNKED}-byte chunked-message cap",
+                    total + 1
                 ),
             );
             return;
@@ -891,8 +1085,11 @@ impl AbstractActor for RemoteProxy {
                 .schedule(self.link.timeout, reaper, Message::new(()));
         }
         let write_res = {
+            let mut segs: Vec<&[u8]> = Vec::with_capacity(8);
+            segs.push(&head);
+            segs.extend(sp.segments());
             let mut w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
-            write_frame(&mut w, kind, &body)
+            write_logical_frame(&mut w, kind, &segs)
         };
         match write_res {
             Ok(()) => {

@@ -1,0 +1,132 @@
+//! Frame-page recycling for the decode path.
+//!
+//! Each reader thread owns a [`FrameSlab`] and draws its frame-body buffers
+//! from it instead of allocating a fresh `Vec<u8>` per frame. After a frame
+//! is decoded (the element data having been bulk-copied once into its
+//! `ArgValue` vectors — the single host-side copy the wire path pays), the
+//! page goes back to the slab for the next frame. Under a steady request
+//! stream the reader reaches an allocation-free steady state, the same
+//! recycling discipline the device [`BufferPool`] applies on the upload
+//! side (`runtime/client.rs`) — pages here feed vectors that stage straight
+//! into pool-recycled device buffers, so a remote upload never copies twice.
+//!
+//! Single-owner by design (one slab per reader thread): no locking.
+//!
+//! [`BufferPool`]: crate::runtime::client
+
+use super::node::MAX_FRAME;
+
+/// Pages larger than this are dropped instead of retained, so one giant
+/// chunked frame cannot pin its peak footprint forever.
+const MAX_RETAINED: usize = MAX_FRAME;
+
+/// Retained page count; beyond this, returned pages are freed.
+const MAX_PAGES: usize = 4;
+
+/// A tiny freelist of frame-body pages.
+#[derive(Default)]
+pub struct FrameSlab {
+    free: Vec<Vec<u8>>,
+    reused: u64,
+    fresh: u64,
+}
+
+impl FrameSlab {
+    pub fn new() -> FrameSlab {
+        FrameSlab::default()
+    }
+
+    /// A zeroed page of exactly `len` bytes, recycled when possible.
+    pub fn take(&mut self, len: usize) -> Vec<u8> {
+        match self.free.iter().position(|p| p.capacity() >= len) {
+            Some(i) => {
+                let mut p = self.free.swap_remove(i);
+                self.reused += 1;
+                p.clear();
+                p.resize(len, 0);
+                p
+            }
+            None => {
+                self.fresh += 1;
+                vec![0u8; len]
+            }
+        }
+    }
+
+    /// Return a page for reuse.
+    pub fn put(&mut self, page: Vec<u8>) {
+        if page.capacity() == 0 || page.capacity() > MAX_RETAINED {
+            return;
+        }
+        if self.free.len() >= MAX_PAGES {
+            // keep the largest pages: evict the smallest retained one if the
+            // newcomer beats it
+            if let Some((i, _)) = self
+                .free
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.capacity())
+            {
+                if self.free[i].capacity() < page.capacity() {
+                    self.free[i] = page;
+                }
+            }
+            return;
+        }
+        self.free.push(page);
+    }
+
+    /// (reused, fresh) page counts — diagnostics and tests.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.reused, self.fresh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pages_recycle() {
+        let mut s = FrameSlab::new();
+        let p = s.take(1024);
+        assert_eq!(p.len(), 1024);
+        s.put(p);
+        let q = s.take(512);
+        assert_eq!(q.len(), 512);
+        let (reused, fresh) = s.stats();
+        assert_eq!((reused, fresh), (1, 1));
+    }
+
+    #[test]
+    fn reused_pages_are_zeroed_to_len() {
+        let mut s = FrameSlab::new();
+        let mut p = s.take(8);
+        p.copy_from_slice(&[0xAB; 8]);
+        s.put(p);
+        let q = s.take(4);
+        assert_eq!(s.stats().0, 1, "second take must recycle the page");
+        assert!(q.iter().all(|&b| b == 0), "recycled page must be re-zeroed");
+    }
+
+    #[test]
+    fn oversized_and_excess_pages_are_dropped() {
+        let mut s = FrameSlab::new();
+        s.put(Vec::with_capacity(MAX_RETAINED + 1));
+        assert_eq!(s.free.len(), 0);
+        for _ in 0..(MAX_PAGES + 3) {
+            s.put(vec![0u8; 64]);
+        }
+        assert_eq!(s.free.len(), MAX_PAGES);
+    }
+
+    #[test]
+    fn larger_newcomer_evicts_smallest_retained() {
+        let mut s = FrameSlab::new();
+        for _ in 0..MAX_PAGES {
+            s.put(vec![0u8; 64]);
+        }
+        s.put(vec![0u8; 4096]);
+        assert!(s.free.iter().any(|p| p.capacity() >= 4096));
+    }
+}

@@ -252,6 +252,23 @@ pub(crate) fn spawn_on_device(
                     return Reply::Promised;
                 }
             }
+            // admission bound for solitary (non-replicated) facades: the
+            // replicated dispatcher gates at the pool's total depth before
+            // routing, but a pinned/lone facade's mailbox is otherwise
+            // unbounded — honor `max_inflight` here against this device's
+            // queue depth with the same typed Overloaded rejection.
+            // (Replicated replicas skip this: their dispatcher already
+            // admitted the request, and double-gating would reject traffic
+            // the pool-level bound accepted.)
+            if !matches!(cfg.placement, Placement::Replicated(_)) {
+                if let Some(a) = &cfg.admission {
+                    if let Err(e) = a.try_admit(device.queue.stats().inflight(), &cfg.kernel) {
+                        let promise = ctx.make_promise();
+                        promise.deliver_err(e);
+                        return Reply::Promised;
+                    }
+                }
+            }
             let args = match &cfg.pre {
                 Some(pre) => pre(msg),
                 None => extract_args(msg),

@@ -8,7 +8,7 @@
 //! hung-socket regression fails fast instead of stalling the runner.
 
 use caf_ocl::actor::*;
-use caf_ocl::net::{Node, MAX_FRAME};
+use caf_ocl::net::{Node, MAX_CHUNKED, MAX_FRAME};
 use caf_ocl::opencl::{ArgValue, Manager, Mode};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -604,4 +604,459 @@ fn stop_tears_down_served_connections() {
     client.stop();
     client_sys.shutdown();
     server_sys.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// async request futures over the wire: the exactly-once matrix. Every ask
+// must resolve exactly once — as a reply, an error, a reaper timeout, or a
+// disconnect failure — and late deliveries after the resolution must be
+// ignored without panicking or double-firing hooks.
+// ---------------------------------------------------------------------------
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn counting_hook(fut: &RequestFuture) -> Arc<AtomicUsize> {
+    let fires = Arc::new(AtomicUsize::new(0));
+    let f = fires.clone();
+    fut.then(move |_| {
+        f.fetch_add(1, Ordering::Relaxed);
+    });
+    fires
+}
+
+#[test]
+fn ask_reply_resolves_future_exactly_once() {
+    let server_sys = ActorSystem::new(config(2));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, v: &Vec<u32>| reply(v.clone())),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "echo").unwrap();
+
+    let fut = remote.ask(vec![7u32; 16]);
+    let fires = counting_hook(&fut);
+    let typed = fut.map::<Vec<u32>>();
+    assert_eq!(typed.wait(net_t()).unwrap(), vec![7u32; 16]);
+    // waiting again returns the same resolution (idempotent)
+    assert!(fut.wait(net_t()).is_ok());
+    assert!(fut.is_resolved());
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(fires.load(Ordering::Relaxed), 1, "hook must fire exactly once");
+    // a hook registered after resolution runs immediately, exactly once
+    let late = counting_hook(&fut);
+    assert_eq!(late.load(Ordering::Relaxed), 1);
+
+    // a one-thread pipeline: many asks in flight through a bounded set
+    let set = FutureSet::new(32);
+    let futs: Vec<RequestFuture> = (0..256u32)
+        .map(|i| {
+            let f = remote.ask(vec![i; 8]);
+            set.push(&f);
+            f
+        })
+        .collect();
+    let results = set.join_all(net_t());
+    assert_eq!(results.len(), 256);
+    assert!(results.iter().all(|r| r.is_ok()), "every pipelined ask must reply");
+    assert!(futs.iter().all(|f| f.is_resolved()));
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn ask_error_resolves_future_exactly_once() {
+    let server_sys = ActorSystem::new(config(2));
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "ghost").unwrap();
+
+    let fut = remote.ask(1u32);
+    let fires = counting_hook(&fut);
+    let err = fut.wait(net_t()).unwrap_err();
+    assert!(err.reason.contains("ghost"), "unexpected reason: {}", err.reason);
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(fires.load(Ordering::Relaxed), 1);
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn ask_timeout_resolves_future_and_ignores_the_late_reply() {
+    let server_sys = ActorSystem::new(config(2));
+    // replies after 900ms — far past the client's 250ms reaper deadline
+    let _slow = server_sys.spawn_opts(
+        |_| {
+            Behavior::new().on_any(|ctx, m| {
+                let p = ctx.make_promise();
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(900));
+                    p.deliver_msg(m);
+                });
+                Reply::Promised
+            })
+        },
+        SpawnOptions::named("slow"),
+    );
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u32| reply(x + 1)),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys =
+        ActorSystem::new(config(2).with_remote_timeout(Duration::from_millis(250)));
+    let client = Node::new(&client_sys);
+    let slow = client.remote_actor(&addr.to_string(), "slow").unwrap();
+
+    let fut = slow.ask(5u32);
+    let fires = counting_hook(&fut);
+    let t0 = Instant::now();
+    let err = fut.wait(net_t()).unwrap_err();
+    assert!(err.reason.contains("timed out"), "unexpected reason: {}", err.reason);
+    assert!(t0.elapsed() < Duration::from_secs(5));
+
+    // the late REPLY lands after the reaper already failed the mid: it must
+    // be ignored — no double resolution, no panic, connection intact
+    std::thread::sleep(Duration::from_millis(900));
+    assert_eq!(fires.load(Ordering::Relaxed), 1, "late reply must not re-fire");
+    let echo = client.remote_actor(&addr.to_string(), "echo").unwrap();
+    let out: u32 = client_sys.scoped().request(&echo, 41u32).receive(net_t()).unwrap();
+    assert_eq!(out, 42, "connection must stay serviceable after a reaped mid");
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn ask_disconnect_fails_future_exactly_once() {
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "blackhole");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "blackhole").unwrap();
+
+    let fut = remote.ask(5u32);
+    let fires = counting_hook(&fut);
+    // tear the server down: the client reader observes EOF and fails every
+    // pending entry, which resolves the future with an error
+    server.stop();
+    server_sys.shutdown();
+    let err = fut.wait(net_t()).unwrap_err();
+    assert!(
+        err.reason.contains("disconnected") || err.reason.contains("timed out"),
+        "unexpected reason: {}",
+        err.reason
+    );
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(fires.load(Ordering::Relaxed), 1);
+
+    client.stop();
+    client_sys.shutdown();
+}
+
+#[test]
+fn ask_survives_client_node_stop_with_pending_future() {
+    let server_sys = ActorSystem::new(config(2));
+    spawn_blackhole(&server_sys, "blackhole");
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "blackhole").unwrap();
+
+    let fut = remote.ask(5u32);
+    let fires = counting_hook(&fut);
+    // stopping the client node closes its side of the connection: the
+    // pending future must fail instead of hanging forever
+    client.stop();
+    let err = fut.wait(net_t()).unwrap_err();
+    assert!(!err.reason.is_empty());
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(fires.load(Ordering::Relaxed), 1);
+
+    server.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+#[test]
+fn dropping_future_before_reply_is_safe() {
+    let server_sys = ActorSystem::new(config(2));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, v: &Vec<u32>| reply(v.clone())),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "echo").unwrap();
+
+    // the caller drops its handle before the reply arrives; the pending map
+    // still owns the slot, so the reply resolves into it and is discarded —
+    // no panic, no leak, no misdelivery
+    drop(remote.ask(vec![3u32; 64]));
+    for i in 0..20u32 {
+        let out: Vec<u32> = client_sys
+            .scoped()
+            .request(&remote, vec![i; 8])
+            .receive(net_t())
+            .unwrap();
+        assert_eq!(out, vec![i; 8]);
+    }
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// chunked continuation frames: messages past MAX_FRAME shard into
+// CHUNK_START/CHUNK_CONT sequences and reassemble under MAX_CHUNKED;
+// hostile chunk announcements close the connection without replying.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oversized_messages_chunk_into_continuation_frames() {
+    // 4.5M u32 = 18 MiB of element payload: both the request and the echoed
+    // reply exceed MAX_FRAME (16 MiB) and must shard into continuation
+    // frames, reassembling byte-for-byte on each side
+    assert!(MAX_CHUNKED > MAX_FRAME);
+    let elems = 4_500_000usize;
+    assert!(elems * 4 > MAX_FRAME);
+
+    let server_sys = ActorSystem::new(config(2));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, v: &Vec<u32>| reply(v.clone())),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "echo").unwrap();
+
+    let payload: Vec<u32> = (0..elems as u32).collect();
+    let me = client_sys.scoped();
+    let out: Vec<u32> = me.request(&remote, payload.clone()).receive(net_t()).unwrap();
+    assert_eq!(out.len(), payload.len());
+    assert!(out == payload, "chunked roundtrip must be byte-faithful");
+
+    // the async surface takes the same path
+    let fut = remote.ask(payload.clone());
+    let back = fut.map::<Vec<u32>>().wait(net_t()).unwrap();
+    assert!(back == payload);
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+/// `len kind body` framing helper for hand-rolled hostile frames.
+fn raw_frame(kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut f = ((body.len() + 1) as u32).to_le_bytes().to_vec();
+    f.push(kind);
+    f.extend_from_slice(body);
+    f
+}
+
+/// `CHUNK_START` body: announced total, inner kind, carried data.
+fn chunk_start_body(total: u64, inner: u8, data: &[u8]) -> Vec<u8> {
+    let mut b = total.to_le_bytes().to_vec();
+    b.push(inner);
+    b.extend_from_slice(data);
+    b
+}
+
+#[test]
+fn hostile_chunk_frames_close_the_connection() {
+    const KIND_REQUEST: u8 = 1;
+    const KIND_CHUNK_START: u8 = 4;
+    const KIND_CHUNK_CONT: u8 = 5;
+
+    let server_sys = ActorSystem::new(config(2));
+    let _echo = server_sys.spawn_opts(
+        |_| Behavior::new().on(|_c, &x: &u32| reply(x + 1)),
+        SpawnOptions::named("echo"),
+    );
+    let server = Node::new(&server_sys);
+    let addr = server.listen("127.0.0.1:0").unwrap();
+
+    // continuation with no start
+    assert_closed_without_reply(&addr, &raw_frame(KIND_CHUNK_CONT, &[0xAA; 8]));
+    // start announcing more than the reassembly cap (a 256 MiB+ allocation
+    // if the total were trusted)
+    assert_closed_without_reply(
+        &addr,
+        &raw_frame(
+            KIND_CHUNK_START,
+            &chunk_start_body((MAX_CHUNKED as u64) + 1, KIND_REQUEST, &[0u8; 16]),
+        ),
+    );
+    // hostile total at the extreme: u64::MAX must not preallocate
+    assert_closed_without_reply(
+        &addr,
+        &raw_frame(
+            KIND_CHUNK_START,
+            &chunk_start_body(u64::MAX, KIND_REQUEST, &[0u8; 16]),
+        ),
+    );
+    // nested chunk kinds
+    assert_closed_without_reply(
+        &addr,
+        &raw_frame(
+            KIND_CHUNK_START,
+            &chunk_start_body(100, KIND_CHUNK_START, &[0u8; 8]),
+        ),
+    );
+    // start shorter than its own header
+    assert_closed_without_reply(&addr, &raw_frame(KIND_CHUNK_START, &[1, 2, 3, 4]));
+    // start data already past the announced total
+    assert_closed_without_reply(
+        &addr,
+        &raw_frame(
+            KIND_CHUNK_START,
+            &chunk_start_body(4, KIND_REQUEST, &[0u8; 8]),
+        ),
+    );
+    // empty continuation (would loop forever if accepted)
+    {
+        let mut bytes =
+            raw_frame(KIND_CHUNK_START, &chunk_start_body(100, KIND_REQUEST, &[0u8; 4]));
+        bytes.extend_from_slice(&raw_frame(KIND_CHUNK_CONT, &[]));
+        assert_closed_without_reply(&addr, &bytes);
+    }
+    // continuation overrunning the announced total
+    {
+        let mut bytes =
+            raw_frame(KIND_CHUNK_START, &chunk_start_body(10, KIND_REQUEST, &[0u8; 4]));
+        bytes.extend_from_slice(&raw_frame(KIND_CHUNK_CONT, &[0u8; 20]));
+        assert_closed_without_reply(&addr, &bytes);
+    }
+    // non-continuation frame interleaved into a chunked message
+    {
+        let mut bytes =
+            raw_frame(KIND_CHUNK_START, &chunk_start_body(10, KIND_REQUEST, &[0u8; 4]));
+        bytes.extend_from_slice(&raw_frame(KIND_REQUEST, &[0u8; 9]));
+        assert_closed_without_reply(&addr, &bytes);
+    }
+
+    // the node survived the whole barrage and still serves clean traffic
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr.to_string(), "echo").unwrap();
+    let out: u32 = client_sys.scoped().request(&remote, 41u32).receive(net_t()).unwrap();
+    assert_eq!(out, 42);
+
+    server.stop();
+    client.stop();
+    client_sys.shutdown();
+    server_sys.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// two-process smoke: the wire path against a *real* process boundary, not
+// just two systems in one address space. The parent re-execs this test
+// binary with NET_SMOKE_ROLE=server; the child publishes an echo actor and
+// writes its ephemeral address to a file the parent polls.
+// ---------------------------------------------------------------------------
+
+fn run_smoke_server() {
+    let sys = ActorSystem::new(config(2));
+    let _echo = sys.spawn_opts(
+        |_| Behavior::new().on(|_c, v: &Vec<u32>| reply(v.clone())),
+        SpawnOptions::named("smoke-echo"),
+    );
+    let node = Node::new(&sys);
+    let addr = node.listen("127.0.0.1:0").unwrap();
+    let port_file = std::env::var("NET_SMOKE_PORT_FILE").unwrap();
+    // write-then-rename so the parent never reads a half-written address
+    let tmp = format!("{port_file}.tmp");
+    std::fs::write(&tmp, addr.to_string()).unwrap();
+    std::fs::rename(&tmp, &port_file).unwrap();
+    // serve until the parent kills us; the ceiling keeps an orphaned child
+    // from outliving a crashed parent
+    std::thread::sleep(Duration::from_secs(60));
+}
+
+#[test]
+fn two_process_smoke_over_subprocess() {
+    if std::env::var("NET_SMOKE_ROLE").as_deref() == Ok("server") {
+        run_smoke_server();
+        return;
+    }
+    let port_file = std::env::temp_dir().join(format!(
+        "caf-ocl-net-smoke-{}.addr",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&port_file);
+    let exe = std::env::current_exe().unwrap();
+    let mut child = std::process::Command::new(exe)
+        .args(["two_process_smoke_over_subprocess", "--exact", "--nocapture"])
+        .env("NET_SMOKE_ROLE", "server")
+        .env("NET_SMOKE_PORT_FILE", &port_file)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn server child");
+
+    let deadline = Instant::now() + net_t();
+    let addr = loop {
+        if let Ok(s) = std::fs::read_to_string(&port_file) {
+            if !s.trim().is_empty() {
+                break s.trim().to_string();
+            }
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("server child never published its address");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+
+    let client_sys = ActorSystem::new(config(2));
+    let client = Node::new(&client_sys);
+    let remote = client.remote_actor(&addr, "smoke-echo").unwrap();
+    let me = client_sys.scoped();
+    for i in 0..8u32 {
+        let out: Vec<u32> = me.request(&remote, vec![i; 512]).receive(net_t()).unwrap();
+        assert_eq!(out, vec![i; 512]);
+    }
+    // the async surface across the real process boundary
+    let fut = remote.ask(vec![9u32; 512]);
+    assert_eq!(fut.map::<Vec<u32>>().wait(net_t()).unwrap(), vec![9u32; 512]);
+
+    client.stop();
+    client_sys.shutdown();
+    let _ = child.kill();
+    let _ = child.wait();
+    let _ = std::fs::remove_file(&port_file);
 }

@@ -1,0 +1,98 @@
+//! Tier-1 remote-request gate: a reduced version of the blocking-vs-async
+//! net probe (`cargo bench --bench net`; methodology in PERF.md). One
+//! loopback echo actor, the full 1/64/4096 in-flight sweep, both arms at
+//! each level. Records the comparison in `BENCH_net.json` (repo root) so
+//! the file refreshes on every verified build.
+//!
+//! The default-on asserts are the structural invariants, which hold on
+//! any machine however noisy:
+//!
+//! - **exactly once** — every issued request resolves as a reply or an
+//!   error; over a healthy loopback, errors are zero. A hang would show
+//!   as a ledger imbalance (the generous receive deadlines never fire).
+//! - **bounded client pool** — the async arm drives 4096 concurrent
+//!   requests from a fixed handful of threads, never a thread per
+//!   request; the blocking arm's thread count equals its window, which is
+//!   exactly the cost the futures surface removes.
+//!
+//! Relative throughput claims (async ≥ blocking) are left to the bench on
+//! a quiet machine — CI thread scheduling makes them flaky.
+
+use caf_ocl::bench::{net_probe, write_net_json, NetProbeConfig};
+
+#[test]
+fn net_futures_resolve_exactly_once_from_a_bounded_pool() {
+    let cfg = NetProbeConfig {
+        levels: vec![1, 64, 4096],
+        requests: 4096,
+        elems: 64,
+        client_threads: 4,
+    };
+    let arms = net_probe(&cfg);
+    assert_eq!(arms.len(), 2 * cfg.levels.len(), "two arms per level");
+
+    for a in &arms {
+        assert_eq!(
+            a.issued,
+            a.completed + a.errors,
+            "exactly-once ledger broken ({} @ {}): issued {} vs completed {} + errors {}",
+            a.mode,
+            a.inflight,
+            a.issued,
+            a.completed,
+            a.errors
+        );
+        assert_eq!(
+            a.errors, 0,
+            "{} arm @ {} in-flight errored over loopback",
+            a.mode, a.inflight
+        );
+        assert!(
+            a.completed > 0,
+            "{} arm @ {} never completed a request",
+            a.mode,
+            a.inflight
+        );
+        match a.mode {
+            "blocking" => assert_eq!(
+                a.threads, a.inflight,
+                "the blocking arm parks one thread per in-flight slot"
+            ),
+            "async" => assert!(
+                a.threads <= cfg.client_threads,
+                "async arm @ {} grew its pool: {} threads > {}",
+                a.inflight,
+                a.threads,
+                cfg.client_threads
+            ),
+            other => panic!("unknown arm mode {other:?}"),
+        }
+    }
+
+    // the acceptance shape: the async arm holds a 4096-request window from
+    // a pool orders of magnitude smaller
+    let wide = arms
+        .iter()
+        .find(|a| a.mode == "async" && a.inflight == 4096)
+        .expect("async arm at 4096 in-flight");
+    assert!(
+        wide.threads * 100 <= wide.inflight,
+        "async @ 4096 must not approach thread-per-request: {} threads",
+        wide.threads
+    );
+
+    let path =
+        write_net_json(&arms, &cfg, "cargo test --test perf_net").expect("write BENCH_net.json");
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert!(written.contains("\"bench\": \"net\""));
+    assert!(written.contains("\"inflight\": 4096"));
+    assert!(written.contains("\"mode\": \"blocking\""));
+    assert!(written.contains("\"mode\": \"async\""));
+    for a in &arms {
+        println!(
+            "net: {:>8} @ {:>4} in-flight ({:>4} threads) {:>9.1} req/s p50 {:.3} ms p99 {:.3} ms",
+            a.mode, a.inflight, a.threads, a.req_per_s, a.p50_ms, a.p99_ms
+        );
+    }
+    println!("-> {}", path.display());
+}

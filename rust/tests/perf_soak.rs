@@ -24,7 +24,10 @@
 //! `SOAK_ASSERT_BOUNDED=1` on a quiet machine, like
 //! `DISPATCH_ASSERT_SPEEDUP` in perf_dispatch.
 
-use caf_ocl::bench::{soak_probe, write_soak_json, write_soak_manifest, SoakConfig, SoakRun};
+use caf_ocl::bench::{
+    soak_closed_probe, soak_probe, write_soak_json, write_soak_manifest, SoakConfig, SoakRun,
+};
+use caf_ocl::workload::ClosedLoop;
 use std::time::Duration;
 
 fn assert_exactly_once(r: &SoakRun) {
@@ -83,11 +86,24 @@ fn soak_resolves_every_request_and_shedding_bounds_the_tail() {
     };
     let on = soak_probe(&cfg, true);
     let off = soak_probe(&cfg, false);
+    // the closed-loop control arm (workload::ClosedLoop): bounded pressure
+    // from the loop itself — each worker waits for its reply before
+    // issuing the next request, so the backlog is capped by concurrency
+    let closed_cfg = ClosedLoop {
+        concurrency: 16,
+        think: Duration::ZERO,
+    };
+    let closed = soak_closed_probe(&cfg, true, closed_cfg);
 
     // robustness invariant #1: no request is ever lost or double-resolved
-    // — in BOTH arms, under overload, with a replica chaos-killed mid-soak
+    // — in ALL arms, under overload, with a replica chaos-killed mid-soak
     assert_exactly_once(&on);
     assert_exactly_once(&off);
+    assert_exactly_once(&closed);
+    assert!(
+        closed.completed > 0,
+        "the closed-loop arm never completed a request"
+    );
     for r in [&on, &off] {
         assert!(
             r.issued > 100,
@@ -153,11 +169,20 @@ fn soak_resolves_every_request_and_shedding_bounds_the_tail() {
         off.admitted_p99_ms
     );
 
-    let path = write_soak_json(&on, &off, &cfg, "cargo test --test perf_soak")
-        .expect("write BENCH_soak.json");
+    let path = write_soak_json(
+        &on,
+        &off,
+        &closed,
+        &closed_cfg,
+        &cfg,
+        "cargo test --test perf_soak",
+    )
+    .expect("write BENCH_soak.json");
     let written = std::fs::read_to_string(&path).unwrap();
     assert!(written.contains("\"shed_on\""));
     assert!(written.contains("\"shed_off\""));
+    assert!(written.contains("\"closed_loop\""));
+    assert!(written.contains("\"closed_concurrency\""));
     assert!(written.contains("\"classes\""));
     assert!(written.contains("\"admitted_p99_ms\""));
     assert!(written.contains("\"small_val\""));
