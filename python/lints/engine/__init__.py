@@ -1,0 +1,35 @@
+"""Token-level invariant engine for the caf_ocl tree (stdlib-only).
+
+Layering:
+
+* ``lexer``   — Rust token stream (comments preserved as tokens);
+* ``items``   — attributes, ``#[cfg(test)]`` masking, functions, block trees;
+* ``source``  — one lexed file + derived views + the waiver table;
+* ``report``  — findings, waiver application, JSON rendering;
+* ``config``  — the policy tables (scopes, gauges, resolver surfaces);
+* ``passes``  — the rules themselves (R1–R6 re-hosted, P1–P4 new).
+
+Every pass has the same signature, ``run(ctx)``, where ``ctx`` is the
+driver's :class:`Context` below.
+"""
+
+from __future__ import annotations
+
+
+class Context:
+    """Everything a pass needs: the loaded tree and the shared report."""
+
+    __slots__ = ("repo", "sources", "extra", "report")
+
+    def __init__(self, repo: str, sources: dict, extra: dict, report) -> None:
+        self.repo = repo
+        # rel path -> SourceFile for rust/src (full rule surface)
+        self.sources = sources
+        # rel path -> SourceFile for tests/benches/examples (structural only)
+        self.extra = extra
+        self.report = report
+
+    def all_sources(self) -> dict:
+        merged = dict(self.sources)
+        merged.update(self.extra)
+        return merged

@@ -1,0 +1,334 @@
+"""Item extraction over the token stream: attributes, test-region masking,
+function boundaries, and the per-function block tree.
+
+The extractor recovers just enough structure for the passes:
+
+* **attributes** — every ``#[...]`` span, with its token text, so
+  ``#[cfg(test)]`` masking is decided on tokens (``cfg(all(test, ...))`` and
+  ``cfg(any(test, ...))`` mask; ``cfg(not(test))`` does NOT — it is
+  production code), instead of a line regex that only knew the literal
+  spelling ``#[cfg(test)]``;
+* **test mask** — a boolean per code-token index covering every item behind
+  a test cfg (the attribute itself, any stacked attributes, and the item
+  body through its closing brace or terminating semicolon);
+* **functions** — ``fn`` items with their name, signature span, and body
+  token span (trait-method declarations without a body are skipped);
+* **block tree** — each function body parsed into nested blocks tagged with
+  the construct that introduced them (``if`` / ``elseif`` / ``else`` /
+  ``match`` / ``loop`` / ``while`` / ``for`` / ``closure`` / ``unsafe`` /
+  ``plain``), which is what the promise-lifecycle pass walks.
+
+Known approximations (documented in STATIC_ANALYSIS.md, covered by
+fixtures): construct tagging keys on the nearest unconsumed control keyword
+at paren-depth 0, so a bare struct literal in head position would mislabel —
+Rust's own grammar forbids exactly that, which is why the heuristic holds;
+``match`` arm boundaries are not recovered (arms are analyzed as one linear
+region); nested ``fn`` items inside a function body are rare and analyzed as
+plain blocks of the outer function.
+"""
+
+from __future__ import annotations
+
+from .lexer import CHAR, IDENT, LIFETIME, NUM, PUNCT, RAW_STR, STR, Token
+
+CONSTRUCTS = (
+    "if",
+    "elseif",
+    "else",
+    "match",
+    "loop",
+    "while",
+    "for",
+    "closure",
+    "unsafe",
+    "plain",
+)
+
+_CTRL_KEYWORDS = {"if", "match", "loop", "while", "for"}
+
+
+class Attr:
+    """One `#[...]` / `#![...]` attribute: token index span and flat text."""
+
+    __slots__ = ("start", "end", "text", "line", "closed")
+
+    def __init__(self, start: int, end: int, text: str, line: int, closed: bool):
+        self.start = start  # index (into code tokens) of the `#`
+        self.end = end  # index one past the closing `]`
+        self.text = text
+        self.line = line
+        self.closed = closed
+
+
+def find_attributes(code: list[Token]) -> list[Attr]:
+    attrs: list[Attr] = []
+    i, n = 0, len(code)
+    while i < n:
+        t = code[i]
+        if t.kind == PUNCT and t.text == "#":
+            j = i + 1
+            if j < n and code[j].kind == PUNCT and code[j].text == "!":
+                j += 1
+            if j < n and code[j].kind == PUNCT and code[j].text == "[":
+                depth, k = 0, j
+                closed = False
+                while k < n:
+                    tk = code[k]
+                    if tk.kind == PUNCT and tk.text == "[":
+                        depth += 1
+                    elif tk.kind == PUNCT and tk.text == "]":
+                        depth -= 1
+                        if depth == 0:
+                            closed = True
+                            break
+                    k += 1
+                end = k + 1 if closed else n
+                text = " ".join(tok.text for tok in code[i:end])
+                attrs.append(Attr(i, end, text, t.line, closed))
+                i = end
+                continue
+        i += 1
+    return attrs
+
+
+def attr_is_test_cfg(attr: Attr) -> bool:
+    """True when the attribute gates the following item to test builds.
+
+    Walks the attribute's own tokens with a wrapper stack, so `cfg(test)`,
+    `cfg(all(test, feature = "x"))` and `cfg(any(test, doc))` all mask,
+    while `cfg(not(test))` (production-only code) does not.
+    """
+    words = attr.text.split()
+    if "cfg" not in words:
+        return False
+    stack: list[str] = []
+    prev = ""
+    for w in words:
+        if w == "(":
+            stack.append(prev)
+        elif w == ")":
+            if stack:
+                stack.pop()
+        elif w == "test" and "cfg" in stack and "not" not in stack:
+            return True
+        prev = w
+    return False
+
+
+def test_mask(code: list[Token]) -> list[bool]:
+    """Per-code-token mask: True inside an item gated by a test cfg."""
+    mask = [False] * len(code)
+    attrs = find_attributes(code)
+    # group stacked attributes by adjacency: an attr directly following
+    # another attr's end belongs to the same item
+    i = 0
+    while i < len(attrs):
+        group = [attrs[i]]
+        j = i + 1
+        while j < len(attrs) and attrs[j].start == group[-1].end:
+            group.append(attrs[j])
+            j += 1
+        if any(attr_is_test_cfg(a) for a in group):
+            start = group[0].start
+            end = _item_end(code, group[-1].end)
+            for k in range(start, end):
+                mask[k] = True
+        i = j
+    return mask
+
+
+def _item_end(code: list[Token], i: int) -> int:
+    """Index one past the end of the item starting at code[i].
+
+    The item ends at the matching `}` of its first top-level `{`, or at the
+    first top-level `;` (use/const/fn-declaration), whichever comes first.
+    """
+    depth = 0
+    n = len(code)
+    while i < n:
+        t = code[i]
+        if t.kind == PUNCT:
+            if t.text in "([{":
+                depth += 1
+                if t.text == "{" and depth == 1:
+                    # consume through the matching close brace
+                    brace = 1
+                    i += 1
+                    while i < n and brace:
+                        tt = code[i]
+                        if tt.kind == PUNCT and tt.text == "{":
+                            brace += 1
+                        elif tt.kind == PUNCT and tt.text == "}":
+                            brace -= 1
+                        i += 1
+                    return i
+            elif t.text in ")]}":
+                depth -= 1
+            elif t.text == ";" and depth == 0:
+                return i + 1
+        i += 1
+    return n
+
+
+class FnItem:
+    __slots__ = ("name", "line", "sig_start", "body_start", "body_end", "in_test")
+
+    def __init__(self, name: str, line: int, sig_start: int, body_start: int, body_end: int, in_test: bool):
+        self.name = name
+        self.line = line
+        self.sig_start = sig_start  # index of the `fn` token
+        self.body_start = body_start  # index of the opening `{`
+        self.body_end = body_end  # index of the matching `}`
+        self.in_test = in_test
+
+
+def extract_functions(code: list[Token], mask: list[bool]) -> list[FnItem]:
+    fns: list[FnItem] = []
+    i, n = 0, len(code)
+    while i < n:
+        t = code[i]
+        if t.kind == IDENT and t.text == "fn" and i + 1 < n and code[i + 1].kind == IDENT:
+            name = code[i + 1].text
+            # find the body `{` at paren/bracket depth 0, or a `;` (no body)
+            j = i + 2
+            depth = 0
+            body_start = -1
+            while j < n:
+                tj = code[j]
+                if tj.kind == PUNCT:
+                    if tj.text in "([":
+                        depth += 1
+                    elif tj.text in ")]":
+                        depth -= 1
+                    elif tj.text == "{" and depth == 0:
+                        body_start = j
+                        break
+                    elif tj.text == ";" and depth == 0:
+                        break  # trait method declaration
+                j += 1
+            if body_start >= 0:
+                brace, k = 1, body_start + 1
+                while k < n and brace:
+                    tk = code[k]
+                    if tk.kind == PUNCT and tk.text == "{":
+                        brace += 1
+                    elif tk.kind == PUNCT and tk.text == "}":
+                        brace -= 1
+                    k += 1
+                body_end = k - 1
+                fns.append(
+                    FnItem(name, t.line, i, body_start, body_end, bool(mask[i]))
+                )
+                # continue scanning *inside* the body too (nested fns are
+                # extracted as their own items; closures are not fns)
+            i += 2
+            continue
+        i += 1
+    return fns
+
+
+class Block:
+    """A `{}` region of a function body: tokens interleaved with sub-blocks."""
+
+    __slots__ = ("construct", "elements", "line")
+
+    def __init__(self, construct: str, line: int):
+        self.construct = construct
+        self.elements: list[object] = []  # Token | Block
+        self.line = line
+
+
+def build_block_tree(code: list[Token], start: int, end: int) -> Block:
+    """Parse code[start+1:end] (the body between braces) into a Block tree."""
+    root = Block("fn", code[start].line if start < len(code) else 0)
+    _parse_into(root, code, start + 1, end)
+    return root
+
+
+def _parse_into(block: Block, code: list[Token], i: int, end: int) -> int:
+    pending_kw: str | None = None
+    pending_else = False
+    paren_depth = 0
+    recent: list[Token] = []  # tokens since last `;`/`{`/`}` — closure sniff
+    while i < end:
+        t = code[i]
+        if t.kind == PUNCT and t.text in "([":
+            paren_depth += 1
+        elif t.kind == PUNCT and t.text in ")]":
+            paren_depth -= 1
+        elif t.kind == IDENT and paren_depth == 0:
+            if t.text in _CTRL_KEYWORDS:
+                pending_kw = t.text
+            elif t.text == "else":
+                pending_else = True
+                block.elements.append(t)
+                recent.append(t)
+                i += 1
+                continue
+        if t.kind == PUNCT and t.text == "{":
+            construct = "plain"
+            if paren_depth == 0 and pending_kw is not None:
+                construct = "elseif" if (pending_else and pending_kw == "if") else pending_kw
+                pending_kw = None
+                pending_else = False
+            elif paren_depth == 0 and pending_else:
+                construct = "else"
+                pending_else = False
+            elif _looks_like_closure(recent):
+                construct = "closure"
+            elif recent and recent[-1].kind == IDENT and recent[-1].text == "unsafe":
+                construct = "unsafe"
+            sub = Block(construct, t.line)
+            i = _parse_into(sub, code, i + 1, _match_brace(code, i, end))
+            block.elements.append(sub)
+            recent = []
+            continue
+        if t.kind == PUNCT and t.text == "}":
+            return i + 1
+        block.elements.append(t)
+        if t.kind == PUNCT and t.text == ";":
+            pending_kw = None
+            pending_else = False
+            recent = []
+        else:
+            recent.append(t)
+            if len(recent) > 16:
+                recent.pop(0)
+        i += 1
+    return i
+
+
+def _match_brace(code: list[Token], open_i: int, hard_end: int) -> int:
+    depth = 0
+    for j in range(open_i, hard_end + 1):
+        t = code[j]
+        if t.kind == PUNCT and t.text == "{":
+            depth += 1
+        elif t.kind == PUNCT and t.text == "}":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return hard_end
+
+
+def _looks_like_closure(recent: list[Token]) -> bool:
+    """True when the tokens right before a `{` close a closure head `|..|`.
+
+    Walks backwards from the `{`. A match-arm arrow (`=>`, seen reversed as
+    `>` then `=`) means the block is an arm body, never a closure; a `;`
+    bounds the statement. Commas do NOT bound the scan — closure heads like
+    `move |ctx, res| {` contain them.
+    """
+    pipes = 0
+    prev_was_gt = False
+    for t in reversed(recent):
+        if t.kind == PUNCT and t.text == "=" and prev_was_gt:
+            return False  # `=> {`: a match-arm body
+        prev_was_gt = t.kind == PUNCT and t.text == ">"
+        if t.kind == PUNCT and t.text == "|":
+            pipes += 1
+            if pipes == 2:
+                return True
+        elif t.kind == PUNCT and t.text == ";":
+            break
+    return False

@@ -1,0 +1,223 @@
+r"""Token-level Rust lexer for the invariant engine.
+
+The old `check.py` worked on regex-stripped text; every rule inherited the
+stripper's blind spots (mid-identifier raw-string detection, char-vs-lifetime
+ambiguity, attribute text inside strings). This lexer produces a real token
+stream instead, so the passes reason about tokens, not characters:
+
+* nested block comments (``/* /* */ */``) and all three comment flavors
+  (``//``, ``///``, ``//!``) are single tokens with their text preserved —
+  annotation rules (``pairs with:``, ``SAFETY:``, ``lint-ok:``) read them
+  directly instead of re-scanning raw lines;
+* raw strings ``r"..."`` / ``r#"..."#`` (any hash depth) and their byte
+  variants are recognized only in token-start position — an identifier that
+  merely *ends* in ``r`` or ``br`` can never open a phantom raw string the way
+  a character-scanner could;
+* char literals are told apart from lifetimes by the closing quote, with full
+  escape-sequence support (``'\u{1F600}'``, ``'\''``, ``'\\'``); everything
+  that is not a closed char literal lexes as a lifetime token (``'a``,
+  ``'static``, ``'_``, loop labels);
+* numbers absorb type suffixes and float forms without swallowing range
+  operators (``0..n``) or method calls on literals.
+
+Guarantees (what passes may rely on):
+* every brace/paren/bracket in real code appears as a ``punct`` token exactly
+  once, and never from inside a comment, string, or char literal;
+* ``Token.line`` is the 1-based source line of the token's first character;
+* the concatenation order of tokens is source order.
+
+Known approximations (documented, covered by fixtures):
+* shebang/BOM handling is trivial (neither occurs in this tree);
+* exotic numeric forms lex as a single ``num`` token without validation —
+  the engine never interprets numeric values beyond "is a literal".
+"""
+
+from __future__ import annotations
+
+import re
+
+# Token kinds.
+IDENT = "ident"
+LIFETIME = "lifetime"
+CHAR = "char"
+STR = "str"
+RAW_STR = "raw_str"
+NUM = "num"
+PUNCT = "punct"
+LINE_COMMENT = "line_comment"
+BLOCK_COMMENT = "block_comment"
+
+COMMENT_KINDS = (LINE_COMMENT, BLOCK_COMMENT)
+
+_CHAR_RE = re.compile(
+    r"""'(?:
+          \\u\{[0-9a-fA-F_]{1,6}\}   # '\u{7FFF}'
+        | \\x[0-9a-fA-F]{2}          # '\x7f'
+        | \\.                        # '\n' '\'' '\\'
+        | [^\\'\n]                   # 'a' '{' '"'
+        )'""",
+    re.VERBOSE,
+)
+_LIFETIME_RE = re.compile(r"'(?:_|[A-Za-z][A-Za-z0-9_]*)")
+_RAW_OPEN_RE = re.compile(r'(#*)"')
+_IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_IDENT_CONT = _IDENT_START | set("0123456789")
+
+
+class Token:
+    __slots__ = ("kind", "text", "line", "index")
+
+    def __init__(self, kind: str, text: str, line: int, index: int):
+        self.kind = kind
+        self.text = text
+        self.line = line
+        self.index = index
+
+    def __repr__(self) -> str:  # debugging aid
+        return f"Token({self.kind}, {self.text!r}, line={self.line})"
+
+
+def lex(text: str) -> list[Token]:
+    """Lex `text` into a list of Tokens (comments included, whitespace not)."""
+    toks: list[Token] = []
+    i, n, line = 0, len(text), 1
+
+    def emit(kind: str, end: int) -> None:
+        nonlocal i, line
+        toks.append(Token(kind, text[i:end], line, len(toks)))
+        line += text.count("\n", i, end)
+        i = end
+
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r\x0c":
+            i += 1
+            continue
+
+        if c == "/" and nxt == "/":
+            j = text.find("\n", i)
+            emit(LINE_COMMENT, n if j == -1 else j)
+            continue
+
+        if c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            emit(BLOCK_COMMENT, j)
+            continue
+
+        # raw / byte string starts. These fire only in token-start position:
+        # identifiers are lexed atomically below, so `attr"x"` lexes as the
+        # ident `attr` followed by a plain string — never a phantom raw
+        # string opened at its trailing `r` (an old-stripper bug class).
+        if c == "r" or (c == "b" and nxt in ('"', "'", "r")):
+            start = i + (2 if text.startswith("br", i) else 1)
+            if text.startswith("b'", i):
+                m = _CHAR_RE.match(text, i + 1)
+                if m:
+                    emit(CHAR, m.end())
+                    continue
+            elif c == "b" and nxt == '"':
+                j = _scan_plain_string(text, i + 1)
+                emit(STR, j)
+                continue
+            else:
+                m = _RAW_OPEN_RE.match(text, start)
+                if m:
+                    closing = '"' + m.group(1)
+                    j = text.find(closing, m.end())
+                    emit(RAW_STR, n if j == -1 else j + len(closing))
+                    continue
+            # not a literal after all (`r#ident`, bare `b` ident, ...):
+            # fall through to identifier lexing
+
+        if c == '"':
+            emit(STR, _scan_plain_string(text, i))
+            continue
+
+        if c == "'":
+            m = _CHAR_RE.match(text, i)
+            if m:
+                emit(CHAR, m.end())
+                continue
+            m = _LIFETIME_RE.match(text, i)
+            if m:
+                emit(LIFETIME, m.end())
+                continue
+            emit(PUNCT, i + 1)  # stray quote (invalid source)
+            continue
+
+        if c in _IDENT_START:
+            j = i + 1
+            # raw identifier `r#type`
+            if c == "r" and nxt == "#" and i + 2 < n and text[i + 2] in _IDENT_START:
+                j = i + 3
+            while j < n and text[j] in _IDENT_CONT:
+                j += 1
+            emit(IDENT, j)
+            continue
+
+        if c.isdigit():
+            j = i + 1
+            while j < n:
+                ch = text[j]
+                if ch in _IDENT_CONT:
+                    j += 1
+                elif (
+                    ch == "."
+                    and j + 1 < n
+                    and text[j + 1].isdigit()
+                    and not text.startswith("..", j)
+                ):
+                    j += 1
+                elif (
+                    ch in "+-"
+                    and text[j - 1] in "eE"
+                    and j + 1 < n
+                    and text[j + 1].isdigit()
+                ):
+                    j += 1
+                else:
+                    break
+            emit(NUM, j)
+            continue
+
+        emit(PUNCT, i + 1)
+
+    return toks
+
+
+def _scan_plain_string(text: str, start: int) -> int:
+    """Return the end offset of the plain string opening at `start` ('"')."""
+    j, n = start + 1, len(text)
+    while j < n:
+        if text[j] == "\\":
+            j += 2
+        elif text[j] == '"':
+            return j + 1
+        else:
+            j += 1
+    return n  # unterminated (invalid source): consume to EOF
+
+
+def code_tokens(toks: list[Token]) -> list[Token]:
+    """The token stream with comments removed (structure/code passes)."""
+    return [t for t in toks if t.kind not in COMMENT_KINDS]
+
+
+def comment_tokens(toks: list[Token]) -> list[Token]:
+    """Only the comment tokens (annotation/waiver passes)."""
+    return [t for t in toks if t.kind in COMMENT_KINDS]

@@ -1,0 +1,5 @@
+"""The rule passes. Order matters only for report readability."""
+
+from . import gauges, legacy, ordering, promises, structural, unsafe_inventory
+
+ALL = (structural, legacy, promises, gauges, ordering, unsafe_inventory)

@@ -1,0 +1,70 @@
+"""Small token-walk helpers shared by the passes."""
+
+from __future__ import annotations
+
+from ..lexer import IDENT, PUNCT, Token
+
+
+def nontest(src):
+    """Yield (index, token) over code tokens outside test-masked regions."""
+    for i, t in enumerate(src.code):
+        if not src.mask[i]:
+            yield i, t
+
+
+def is_punct(t: Token | None, text: str) -> bool:
+    return t is not None and t.kind == PUNCT and t.text == text
+
+
+def is_ident(t: Token | None, text: str | None = None) -> bool:
+    return t is not None and t.kind == IDENT and (text is None or t.text == text)
+
+
+def at(code: list[Token], i: int) -> Token | None:
+    return code[i] if 0 <= i < len(code) else None
+
+
+def match_path(code: list[Token], i: int, *segments: str) -> bool:
+    """True if code[i:] spells `seg1 :: seg2 :: ...` (idents joined by ::)."""
+    for k, seg in enumerate(segments):
+        if not is_ident(at(code, i), seg):
+            return False
+        if k + 1 < len(segments):
+            if not (is_punct(at(code, i + 1), ":") and is_punct(at(code, i + 2), ":")):
+                return False
+            i += 3
+    return True
+
+
+def close_paren(code: list[Token], open_i: int) -> int:
+    """Index of the `)` matching the `(` at open_i (or len(code))."""
+    depth = 0
+    for j in range(open_i, len(code)):
+        t = code[j]
+        if t.kind == PUNCT:
+            if t.text == "(":
+                depth += 1
+            elif t.text == ")":
+                depth -= 1
+                if depth == 0:
+                    return j
+    return len(code)
+
+
+def call_orderings(code: list[Token], open_i: int) -> list[str]:
+    """The `Ordering::X` names inside the call parens opening at open_i."""
+    end = close_paren(code, open_i)
+    out = []
+    j = open_i
+    while j < end:
+        if (
+            is_ident(at(code, j), "Ordering")
+            and is_punct(at(code, j + 1), ":")
+            and is_punct(at(code, j + 2), ":")
+            and is_ident(at(code, j + 3))
+        ):
+            out.append(code[j + 3].text)
+            j += 4
+            continue
+        j += 1
+    return out

@@ -1,0 +1,227 @@
+"""P2 gauge-balance — every steering-gauge increment must be undoable.
+
+The admission/steering layer (PR 3/6) makes load decisions off a handful of
+atomic gauges. A gauge that can only go up is a slow poison: the scheduler
+sheds load forever after a failure path forgets the decrement. This pass
+keeps a crate-wide ledger per gauge *field name*:
+
+* **balanced gauges** (`inflight`, `routed`, `batch_pending`, `launched`)
+  must have at least one decrement / drain / resync reachable somewhere in
+  the crate for their increments;
+* **monotonic counters** (`shed`, `overloaded`, `deadline*`, `retired`)
+  must never be decremented — a decrement there silently falsifies the
+  stats surface that ops dashboards and the soak harness read;
+* **early-exit check**: inside a single function, an increment followed by
+  a `?` exit with no decrement (direct, or via a call to a function that
+  transitively decrements the gauge — computed as a fixpoint so undo
+  helpers like `launch_refused` count at their call sites) is flagged: that
+  error path leaks the gauge.
+
+Ledger attribution is by field name, so same-named gauges on different
+structs share a ledger. That is a documented approximation: it can only
+*hide* an imbalance (both structs' decrements count for either), never
+invent one — the lenient direction for a gate.
+
+The full ledger is published into the JSON report (`gauge_ledger`).
+"""
+
+from __future__ import annotations
+
+from .. import config
+from ..lexer import IDENT, NUM, PUNCT
+from ..report import Finding
+from .common import at, close_paren, is_ident, is_punct, nontest
+
+_INC_OPS = {"fetch_add"}
+_DEC_OPS = {"fetch_sub"}
+_RESYNC_OPS = {"store"}
+
+_ALL_GAUGES = set(config.BALANCED_GAUGES) | set(config.MONOTONIC_COUNTERS)
+
+
+class _Event:
+    __slots__ = ("gauge", "kind", "rel", "line", "fn", "index")
+
+    def __init__(self, gauge, kind, rel, line, fn, index):
+        self.gauge = gauge
+        self.kind = kind  # "inc" | "dec" | "resync"
+        self.rel = rel
+        self.line = line
+        self.fn = fn  # enclosing function name or None
+        self.index = index  # code-token index
+
+
+def _classify_fetch_update(code, open_i) -> str:
+    """fetch_update bodies: subtraction ⇒ dec, addition ⇒ inc, else resync."""
+    end = close_paren(code, open_i)
+    for j in range(open_i, end):
+        t = code[j]
+        if t.kind == IDENT and t.text in ("saturating_sub", "checked_sub", "wrapping_sub"):
+            return "dec"
+        if t.kind == IDENT and t.text in ("saturating_add", "checked_add", "wrapping_add"):
+            return "inc"
+        if is_punct(t, "-") and at(code, j + 1) is not None and at(code, j + 1).kind in (NUM, IDENT):
+            return "dec"
+        if is_punct(t, "+") and at(code, j + 1) is not None and at(code, j + 1).kind in (NUM, IDENT):
+            return "inc"
+    return "resync"
+
+
+def _enclosing_fn(src, index):
+    for fn in src.functions:
+        if fn.body_start <= index <= fn.body_end:
+            return fn.name
+    return None
+
+
+def collect_events(src) -> list[_Event]:
+    events: list[_Event] = []
+    code = src.code
+    for i, t in nontest(src):
+        if t.kind != IDENT or t.text not in _ALL_GAUGES:
+            continue
+        if not is_punct(at(code, i + 1), "."):
+            continue
+        op = at(code, i + 2)
+        if op is None or op.kind != IDENT or not is_punct(at(code, i + 3), "("):
+            continue
+        if op.text in _INC_OPS:
+            kind = "inc"
+        elif op.text in _DEC_OPS:
+            kind = "dec"
+        elif op.text in _RESYNC_OPS:
+            kind = "resync"
+        elif op.text == "fetch_update":
+            kind = _classify_fetch_update(code, i + 3)
+        else:
+            continue
+        events.append(_Event(t.text, kind, src.rel, t.line, _enclosing_fn(src, i), i))
+    return events
+
+
+def _dec_fn_fixpoint(per_file_events, sources) -> dict[str, set[str]]:
+    """gauge -> names of functions that (transitively) dec/resync it."""
+    decfns: dict[str, set[str]] = {}
+    for events in per_file_events.values():
+        for ev in events:
+            if ev.kind in ("dec", "resync") and ev.fn:
+                decfns.setdefault(ev.gauge, set()).add(ev.fn)
+    changed = True
+    while changed:
+        changed = False
+        for src in sources.values():
+            code = src.code
+            for fn in src.functions:
+                if fn.in_test:
+                    continue
+                for gauge, names in decfns.items():
+                    if fn.name in names:
+                        continue
+                    for i in range(fn.body_start, fn.body_end):
+                        t = code[i]
+                        if (
+                            t.kind == IDENT
+                            and t.text in names
+                            and is_punct(at(code, i + 1), "(")
+                        ):
+                            names.add(fn.name)
+                            changed = True
+                            break
+    return decfns
+
+
+def run(ctx) -> None:
+    per_file: dict[str, list[_Event]] = {}
+    for rel, src in ctx.sources.items():
+        evs = collect_events(src)
+        if evs:
+            per_file[rel] = evs
+
+    ledger: dict[str, dict] = {}
+    for events in per_file.values():
+        for ev in events:
+            g = ledger.setdefault(
+                ev.gauge, {"kind": "", "inc": [], "dec": [], "resync": []}
+            )
+            g[ev.kind].append(f"{ev.rel}:{ev.line}")
+    for gauge, g in ledger.items():
+        g["kind"] = "balanced" if gauge in config.BALANCED_GAUGES else "monotonic"
+    ctx.report.publish("gauge_ledger", {k: ledger[k] for k in sorted(ledger)})
+
+    findings: list[Finding] = []
+
+    # balanced gauges: crate-wide pairing
+    for gauge in config.BALANCED_GAUGES:
+        g = ledger.get(gauge)
+        if not g or not g["inc"]:
+            continue
+        if g["dec"] or g["resync"]:
+            continue
+        for events in per_file.values():
+            for ev in events:
+                if ev.gauge == gauge and ev.kind == "inc":
+                    findings.append(
+                        Finding(
+                            "gauge-balance",
+                            ev.rel,
+                            ev.line,
+                            f"increment of balanced gauge `{gauge}` has no "
+                            "decrement/drain/resync anywhere in the crate — "
+                            "the gauge can only ratchet up",
+                        )
+                    )
+
+    # monotonic counters: decrements are themselves the defect
+    for events in per_file.values():
+        for ev in events:
+            if ev.gauge in config.MONOTONIC_COUNTERS and ev.kind == "dec":
+                findings.append(
+                    Finding(
+                        "gauge-balance",
+                        ev.rel,
+                        ev.line,
+                        f"monotonic counter `{ev.gauge}` is decremented — "
+                        "stats counters only ever accumulate; a decrement "
+                        "falsifies the ops surface",
+                    )
+                )
+
+    # early-exit check: inc ... `?` with no dec/undo-call in between
+    decfns = _dec_fn_fixpoint(per_file, ctx.sources)
+    for rel, events in per_file.items():
+        src = ctx.sources[rel]
+        code = src.code
+        for ev in events:
+            if ev.kind != "inc" or ev.gauge not in config.BALANCED_GAUGES:
+                continue
+            fn = next(
+                (f for f in src.functions if f.body_start <= ev.index <= f.body_end),
+                None,
+            )
+            if fn is None:
+                continue
+            undo_names = decfns.get(ev.gauge, set())
+            guarded = False
+            for i in range(ev.index + 4, fn.body_end):
+                t = code[i]
+                if t.kind == IDENT and (
+                    (t.text == ev.gauge and not guarded)
+                    or (t.text in undo_names and is_punct(at(code, i + 1), "("))
+                ):
+                    # a later touch of the gauge or a call to an undo helper
+                    # guards every `?` after it
+                    guarded = True
+                elif is_punct(t, "?") and not guarded:
+                    findings.append(
+                        Finding(
+                            "gauge-balance",
+                            src.rel,
+                            t.line,
+                            f"`?` exit after increment of `{ev.gauge}` "
+                            f"(line {ev.line}) with no decrement or undo-helper "
+                            "call in between — this error path leaks the gauge",
+                            anchor_lines=(ev.line,),
+                        )
+                    )
+                    break
+    ctx.report.extend(findings)

@@ -1,0 +1,209 @@
+"""R2 seqcst-pairing, R3 no-unwrap, R5 codec-clamp, R6 interposition —
+the PR-8 rules, re-hosted on the token stream.
+
+Semantics are unchanged from the regex linter (STATIC_ANALYSIS.md documents
+each rule's rationale); what changed is the *evidence*: matches come from
+code tokens, so a ``fence(Ordering::SeqCst)`` inside a string or doc
+comment no longer counts, ``.unwrap()`` is the two-token method call rather
+than a substring, and annotations are read from comment tokens instead of
+raw lines. Waivers are applied centrally by the driver, not here.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+from .. import config
+from ..lexer import IDENT, NUM, PUNCT
+from ..report import Finding
+from .common import at, call_orderings, close_paren, is_ident, is_punct, nontest
+
+_PAIRS_RE = re.compile(r"pairs with:\s*(.+)")
+_PAIRS_REF_RE = re.compile(r"([\w/]+\.rs)::(\w+)")
+
+
+# -- R2 seqcst-pairing -------------------------------------------------------
+
+
+def _find_src(ctx, name: str):
+    """Resolve `scheduler.rs` or `actor/scheduler.rs` among rust/src files."""
+    for rel, src in ctx.sources.items():
+        if rel == os.path.join("rust", "src", name.replace("/", os.sep)):
+            return src
+    base = os.path.basename(name)
+    for rel, src in ctx.sources.items():
+        if os.path.basename(rel) == base:
+            return src
+    return None
+
+
+def check_seqcst_pairing(ctx, src) -> list[Finding]:
+    findings: list[Finding] = []
+    code = src.code
+    for i, t in nontest(src):
+        if not (is_ident(t, "fence") and is_punct(at(code, i + 1), "(")):
+            continue
+        if "SeqCst" not in call_orderings(code, i + 1):
+            continue
+        annot = None
+        for m in _PAIRS_RE.finditer(src.comment_text_near(t.line, above=12)):
+            annot = m.group(1)
+        if annot is None:
+            findings.append(
+                Finding(
+                    "seqcst-pairing",
+                    src.rel,
+                    t.line,
+                    "SeqCst fence without a `pairs with: <file.rs>::<token>` "
+                    "annotation naming its Dekker partner",
+                )
+            )
+            continue
+        refs = _PAIRS_REF_RE.findall(annot)
+        if not refs:
+            findings.append(
+                Finding(
+                    "seqcst-pairing",
+                    src.rel,
+                    t.line,
+                    f"`pairs with:` annotation has no `<file.rs>::<token>` reference: {annot!r}",
+                )
+            )
+            continue
+        for fname, token in refs:
+            target = _find_src(ctx, fname)
+            if target is None:
+                findings.append(
+                    Finding(
+                        "seqcst-pairing",
+                        src.rel,
+                        t.line,
+                        f"`pairs with:` references unknown file {fname}",
+                    )
+                )
+            elif not any(tok.kind == IDENT and tok.text == token for tok in target.code):
+                findings.append(
+                    Finding(
+                        "seqcst-pairing",
+                        src.rel,
+                        t.line,
+                        f"`pairs with:` token `{token}` not found in {fname}",
+                    )
+                )
+    return findings
+
+
+# -- R3 no-unwrap ------------------------------------------------------------
+
+
+def check_no_unwrap(src) -> list[Finding]:
+    if src.rel in config.UNWRAP_EXEMPT_FILES:
+        return []
+    if any(src.rel.startswith(p) for p in config.UNWRAP_EXEMPT_PREFIXES):
+        return []
+    findings: list[Finding] = []
+    code = src.code
+    for i, t in nontest(src):
+        if not is_punct(t, "."):
+            continue
+        m = at(code, i + 1)
+        if is_ident(m, "unwrap") and is_punct(at(code, i + 2), "(") and is_punct(at(code, i + 3), ")"):
+            pass
+        elif is_ident(m, "expect") and is_punct(at(code, i + 2), "("):
+            pass
+        else:
+            continue
+        findings.append(
+            Finding(
+                "no-unwrap",
+                src.rel,
+                m.line,
+                "unwrap()/expect() in production code — handle the error, "
+                "use a poison-tolerant lock, or waive with `// lint-ok: <why>`",
+            )
+        )
+    return findings
+
+
+# -- R5 codec-clamp ----------------------------------------------------------
+
+
+def check_codec_clamp(src) -> list[Finding]:
+    if src.rel != config.CODEC_FILE:
+        return []
+    code = src.code
+    clamp_lines = {
+        t.line
+        for i, t in nontest(src)
+        if is_ident(t, "count") and is_punct(at(code, i + 1), "(")
+    }
+    findings: list[Finding] = []
+    for i, t in nontest(src):
+        if not (is_ident(t, "with_capacity") and is_punct(at(code, i + 1), "(")):
+            continue
+        end = close_paren(code, i + 1)
+        args = code[i + 2 : end]
+        # constant capacities (encode-side arenas) are not the hazard: the
+        # rule exists for *wire-derived* counts reserving unbacked memory
+        if len(args) == 1 and args[0].kind == NUM:
+            continue
+        if any(ln in clamp_lines for ln in range(t.line - 4, t.line + 1)):
+            continue
+        findings.append(
+            Finding(
+                "codec-clamp",
+                src.rel,
+                t.line,
+                "decoder preallocation without a Reader::count clamp within "
+                "reach — a hostile count could reserve unbacked memory",
+            )
+        )
+    return findings
+
+
+# -- R6 interposition --------------------------------------------------------
+
+def check_interposition(src) -> list[Finding]:
+    if src.rel not in config.INTERPOSED_FILES:
+        return []
+    findings: list[Finding] = []
+    code = src.code
+    for i, t in nontest(src):
+        if not is_ident(t, "use"):
+            continue
+        # collect every ident of this use declaration up to `;` — grouped
+        # imports (`use std::cell::{Cell, UnsafeCell}`) are included, which
+        # the old line regex missed
+        path: list[str] = []
+        j = i + 1
+        while j < len(code):
+            tj = code[j]
+            if tj.kind == IDENT:
+                path.append(tj.text)
+            elif is_punct(tj, ";"):
+                break
+            j += 1
+        bad = tuple(path[:3]) == ("std", "sync", "atomic") or (
+            tuple(path[:2]) == ("std", "cell") and "UnsafeCell" in path
+        )
+        if bad:
+            findings.append(
+                Finding(
+                    "interposition",
+                    src.rel,
+                    t.line,
+                    "model-interposed file imports std atomics/UnsafeCell "
+                    "directly — route through crate::loom_types or the model "
+                    "checker silently loses this file's coverage",
+                )
+            )
+    return findings
+
+
+def run(ctx) -> None:
+    for src in ctx.sources.values():
+        ctx.report.extend(check_seqcst_pairing(ctx, src))
+        ctx.report.extend(check_no_unwrap(src))
+        ctx.report.extend(check_codec_clamp(src))
+        ctx.report.extend(check_interposition(src))

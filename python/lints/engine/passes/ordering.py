@@ -1,0 +1,250 @@
+"""P3 ordering-graph — acquire/release pairing over the interposition surface.
+
+Builds a table, per atomic variable of the R6-interposed files (the model
+checker's surface), of every load / store / RMW and its Ordering. RMWs
+count on both sides: ``AcqRel`` contributes an Acquire load-side and a
+Release store-side; ``compare_exchange`` contributes its failure ordering
+as an extra load-side. Variables are aggregated by field name across the
+surface — the concurrency core is one protocol, and its methods touch each
+other's fields across files (mailbox state from cell, etc.).
+
+Checks (each suppressible per-variable by fence mitigation — the Chase–Lev
+deque legitimately publishes with Relaxed stores + a standalone fence, so a
+Release-or-SeqCst ``fence`` in a file that touches the variable's weak side
+counts as providing that side):
+
+* **unpaired-release** — a Release-or-stronger store with no
+  Acquire-or-stronger load anywhere on the surface: the release publishes
+  to nobody, so either it is dead weight or its reader is silently Relaxed;
+* **unpaired-acquire** — an Acquire-or-stronger load with no
+  Release-or-stronger store: the acquire synchronizes with nothing;
+* **relaxed-rmw-on-release-var** — a fully Relaxed RMW on a variable that
+  elsewhere uses Release stores: the RMW joins the variable's modification
+  order without joining its happens-before protocol, which is almost
+  always an accident;
+* **seqcst-onesided** — SeqCst on only one side of a variable with no
+  SeqCst fence in reach: SeqCst buys a total order only when both sides
+  pay for it.
+
+The full table is published into the JSON report (`atomics_table`).
+"""
+
+from __future__ import annotations
+
+from .. import config
+from ..lexer import IDENT
+from ..report import Finding
+from .common import at, call_orderings, is_ident, is_punct, nontest
+
+_LOAD_OPS = {"load"}
+_STORE_OPS = {"store"}
+_RMW_OPS = {
+    "swap",
+    "compare_exchange",
+    "compare_exchange_weak",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_nand",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+}
+
+# strength on each side; None = not applicable to that side
+_LOAD_STRENGTH = {"Relaxed": 0, "Acquire": 1, "AcqRel": 1, "SeqCst": 2}
+_STORE_STRENGTH = {"Relaxed": 0, "Release": 1, "AcqRel": 1, "SeqCst": 2}
+
+
+class _Access:
+    __slots__ = ("var", "op", "cls", "load_ord", "store_ord", "rel", "line")
+
+    def __init__(self, var, op, cls, load_ord, store_ord, rel, line):
+        self.var = var
+        self.op = op
+        self.cls = cls  # "load" | "store" | "rmw"
+        self.load_ord = load_ord  # Ordering name or None
+        self.store_ord = store_ord
+        self.rel = rel
+        self.line = line
+
+
+def _rmw_sides(op: str, ords: list[str]) -> tuple[str, str]:
+    """(load_ord, store_ord) for an RMW given its Ordering argument(s)."""
+    if op in ("compare_exchange", "compare_exchange_weak"):
+        success = ords[0] if ords else "Relaxed"
+        return success, success  # failure ordering handled as extra load
+    if op == "fetch_update":
+        set_ord = ords[0] if ords else "Relaxed"
+        fetch_ord = ords[1] if len(ords) > 1 else "Relaxed"
+        return fetch_ord, set_ord
+    o = ords[0] if ords else "Relaxed"
+    if o == "AcqRel":
+        return "Acquire", "Release"
+    if o == "Acquire":
+        return "Acquire", "Relaxed"
+    if o == "Release":
+        return "Relaxed", "Release"
+    return o, o  # Relaxed / SeqCst
+
+
+def collect(src) -> tuple[list[_Access], set[str]]:
+    accesses: list[_Access] = []
+    fences: set[str] = set()
+    code = src.code
+    for i, t in nontest(src):
+        if t.kind != IDENT:
+            continue
+        if t.text == "fence" and is_punct(at(code, i + 1), "("):
+            fences.update(call_orderings(code, i + 1))
+            continue
+        if not (is_punct(at(code, i + 1), ".")):
+            continue
+        op = at(code, i + 2)
+        if op is None or op.kind != IDENT or not is_punct(at(code, i + 3), "("):
+            continue
+        name = op.text
+        if name not in _LOAD_OPS | _STORE_OPS | _RMW_OPS:
+            continue
+        ords = call_orderings(code, i + 3)
+        if not ords:
+            continue  # not an atomic op (e.g. mpsc `load`-alikes without Ordering)
+        var = t.text
+        if name in _LOAD_OPS:
+            accesses.append(_Access(var, name, "load", ords[0], None, src.rel, t.line))
+        elif name in _STORE_OPS:
+            accesses.append(_Access(var, name, "store", None, ords[0], src.rel, t.line))
+        else:
+            lo, so = _rmw_sides(name, ords)
+            accesses.append(_Access(var, name, "rmw", lo, so, src.rel, t.line))
+            if name in ("compare_exchange", "compare_exchange_weak") and len(ords) > 1:
+                accesses.append(
+                    _Access(var, name + "(fail)", "load", ords[1], None, src.rel, t.line)
+                )
+    return accesses, fences
+
+
+def run(ctx) -> None:
+    accesses: list[_Access] = []
+    file_fences: dict[str, set[str]] = {}
+    for rel in sorted(config.INTERPOSED_FILES):
+        src = ctx.sources.get(rel)
+        if src is None:
+            continue
+        acc, fences = collect(src)
+        accesses.extend(acc)
+        file_fences[rel] = fences
+
+    by_var: dict[str, list[_Access]] = {}
+    for a in accesses:
+        by_var.setdefault(a.var, []).append(a)
+
+    # published table: file::var -> op-class x Ordering counts
+    table: dict[str, dict] = {}
+    for a in accesses:
+        key = f"{a.rel}::{a.var}"
+        cell = table.setdefault(key, {})
+        ords = a.load_ord if a.cls == "load" else a.store_ord if a.cls == "store" else f"{a.load_ord}/{a.store_ord}"
+        cell.setdefault(a.cls, {}).setdefault(ords, 0)
+        cell[a.cls][ords] += 1
+    ctx.report.publish("atomics_table", {k: table[k] for k in sorted(table)})
+    ctx.report.publish(
+        "fences", {k: sorted(v) for k, v in sorted(file_fences.items()) if v}
+    )
+
+    findings: list[Finding] = []
+    for var, accs in sorted(by_var.items()):
+        load_max = max(
+            (_LOAD_STRENGTH.get(a.load_ord, 0) for a in accs if a.load_ord), default=-1
+        )
+        store_max = max(
+            (_STORE_STRENGTH.get(a.store_ord, 0) for a in accs if a.store_ord), default=-1
+        )
+        files = {a.rel for a in accs}
+
+        def fence_mitigated(side_strength: int) -> bool:
+            """A fence of the needed strength in any file touching the var."""
+            need = {"Release", "SeqCst", "AcqRel"} if side_strength else {"Acquire", "SeqCst", "AcqRel"}
+            return any(file_fences.get(rel, set()) & need for rel in files)
+
+        has_release_store = store_max >= 1
+        has_acquire_load = load_max >= 1
+        has_load_side = any(a.load_ord for a in accs)
+        has_store_side = any(a.store_ord for a in accs)
+
+        if has_release_store and has_load_side and not has_acquire_load:
+            if not fence_mitigated(0):
+                for a in accs:
+                    if a.store_ord and _STORE_STRENGTH.get(a.store_ord, 0) >= 1:
+                        findings.append(
+                            Finding(
+                                "ordering-graph",
+                                a.rel,
+                                a.line,
+                                f"Release store to `{var}` but every load of "
+                                "it on the interposition surface is Relaxed "
+                                "and no acquire fence is in reach — the "
+                                "release publishes to nobody",
+                            )
+                        )
+                        break
+
+        if has_acquire_load and has_store_side and not has_release_store:
+            if not fence_mitigated(1):
+                for a in accs:
+                    if a.load_ord and _LOAD_STRENGTH.get(a.load_ord, 0) >= 1:
+                        findings.append(
+                            Finding(
+                                "ordering-graph",
+                                a.rel,
+                                a.line,
+                                f"Acquire load of `{var}` but every store to "
+                                "it on the interposition surface is Relaxed "
+                                "and no release fence is in reach — the "
+                                "acquire synchronizes with nothing",
+                            )
+                        )
+                        break
+
+        if has_release_store:
+            for a in accs:
+                if (
+                    a.cls == "rmw"
+                    and a.load_ord == "Relaxed"
+                    and a.store_ord == "Relaxed"
+                    and not (file_fences.get(a.rel, set()) & {"SeqCst", "AcqRel", "Release"})
+                ):
+                    findings.append(
+                        Finding(
+                            "ordering-graph",
+                            a.rel,
+                            a.line,
+                            f"fully Relaxed RMW on `{var}`, which elsewhere "
+                            "uses Release stores — the RMW joins the "
+                            "modification order without joining the "
+                            "happens-before protocol",
+                        )
+                    )
+
+        seq_load = any(a.load_ord == "SeqCst" for a in accs)
+        seq_store = any(a.store_ord == "SeqCst" for a in accs)
+        if seq_load != seq_store and (seq_load or seq_store):
+            if not any(file_fences.get(rel, set()) & {"SeqCst"} for rel in files):
+                side = "load" if seq_load else "store"
+                for a in accs:
+                    hit = a.load_ord == "SeqCst" if seq_load else a.store_ord == "SeqCst"
+                    if hit:
+                        findings.append(
+                            Finding(
+                                "ordering-graph",
+                                a.rel,
+                                a.line,
+                                f"one-sided SeqCst on `{var}` ({side} side only, "
+                                "no SeqCst fence in reach) — SeqCst buys a total "
+                                "order only when both sides pay for it",
+                            )
+                        )
+                        break
+    ctx.report.extend(findings)

@@ -1,0 +1,367 @@
+"""R4 promise-paths (file-level) + P1 promise-lifecycle (intraprocedural).
+
+R4 is the PR-8 rule, re-hosted: a file that mints ResponsePromises must
+contain a deliver path; a file registering correlated pending state must
+contain all three exits (reply removal, failure, reaper); a file defining
+FutureSlot must contain its `resolve(` transition.
+
+P1 is the new per-binding path analysis. For every `let <name> = <mint>;`
+in a non-test function (mints: `make_promise`, `ResponsePromise::new`,
+`FutureSlot::new`), the binding must reach **at least one** of
+resolve / fail / hand-off on every exit path of its enclosing scope.
+"At most once" is already enforced by Rust's move semantics; the analyzer's
+value-add is "at least once" — a path where the binding is silently dropped
+resolves only via Drop's broken-promise fallback, which loses the typed
+error the handler meant to send.
+
+Path model (approximations documented in STATIC_ANALYSIS.md, each covered
+by a fixture):
+
+* consumption = resolver call (`deliver*`/`fail`/`resolve`/`complete`),
+  any non-INSPECT method or field access, a bare use (argument, struct
+  shorthand, return value), a `&`-borrow handed to a helper, or capture by
+  a closure;
+* exits = `?`, `return` (after scanning the returned expression for the
+  binding), and falling off the end of the enclosing block;
+* `panic!`/`unreachable!`/`todo!` and `break`/`continue` diverge without a
+  leak report;
+* `if/else if/else` chains merge branch results exactly (all-consume with
+  an `else` ⇒ consumed); `match` bodies and loops are scanned linearly —
+  consumption anywhere inside counts (a deliberate false-negative
+  direction: the pass only fires when a binding is provably untouched);
+* findings are reported only for *provably* unconsumed paths (state NO),
+  never for the MAYBE lattice point.
+"""
+
+from __future__ import annotations
+
+from .. import config
+from ..items import Block, build_block_tree
+from ..lexer import IDENT, PUNCT
+from ..report import Finding
+from .common import at, is_ident, is_punct, nontest
+
+# -- R4: file-level presence checks ------------------------------------------
+
+
+def _seq(code, i, first, second) -> bool:
+    """code[i:] spells `first :: second`."""
+    return (
+        is_ident(at(code, i), first)
+        and is_punct(at(code, i + 1), ":")
+        and is_punct(at(code, i + 2), ":")
+        and is_ident(at(code, i + 3), second)
+    )
+
+
+def check_file_level(src) -> list[Finding]:
+    findings: list[Finding] = []
+    code = src.code
+    idents = {t.text for t in code if t.kind == IDENT}
+
+    mints = "make_promise" in idents or any(
+        _seq(code, i, "ResponsePromise", "new") for i in range(len(code))
+    )
+    if mints and src.rel not in config.PROMISE_DEF_FILES:
+        if not idents & {"deliver", "deliver_msg", "deliver_err", "deliver_result"}:
+            findings.append(
+                Finding(
+                    "promise-paths",
+                    src.rel,
+                    1,
+                    "file creates ResponsePromises but contains no deliver/deliver_err "
+                    "path — every promise minted here can only resolve via Drop's "
+                    "broken-promise error",
+                )
+            )
+
+    def pending_calls(method: str) -> bool:
+        for i, t in enumerate(code):
+            if not is_ident(t, "pending"):
+                continue
+            for j in range(i + 1, min(i + 14, len(code) - 1)):
+                if is_punct(code[j], ";"):
+                    break
+                if is_punct(code[j], ".") and is_ident(at(code, j + 1), method):
+                    return True
+        return False
+
+    if pending_calls("insert"):
+        missing = []
+        if not pending_calls("remove"):
+            missing.append("reply removal (pending...remove)")
+        if not idents & {"fail_one", "fail_pending"}:
+            missing.append("failure path (fail_one/fail_pending)")
+        if "Reaper" not in idents:
+            missing.append("reaper/timeout path")
+        if missing:
+            findings.append(
+                Finding(
+                    "promise-paths",
+                    src.rel,
+                    1,
+                    "file registers pending-map entries but lacks: "
+                    + "; ".join(missing)
+                    + " — a registered request could resolve never or twice",
+                )
+            )
+
+    defines_slot = any(
+        is_ident(t, "struct") and is_ident(at(code, i + 1), "FutureSlot")
+        for i, t in enumerate(code)
+    )
+    if defines_slot and not any(
+        is_ident(t, "resolve") and is_punct(at(code, i + 1), "(")
+        for i, t in enumerate(code)
+    ):
+        findings.append(
+            Finding(
+                "promise-paths",
+                src.rel,
+                1,
+                "file defines FutureSlot but no `resolve(` transition — "
+                "futures minted here can only hang",
+            )
+        )
+    return findings
+
+
+# -- P1: per-binding lifecycle -----------------------------------------------
+
+NO, MAYBE, YES = 0, 1, 2
+
+_DIVERGE_MACROS = {"panic", "unreachable", "todo", "unimplemented"}
+
+
+def _contains_ident(elems, name: str) -> bool:
+    for e in elems:
+        if isinstance(e, Block):
+            if _contains_ident(e.elements, name):
+                return True
+        elif e.kind == IDENT and e.text == name:
+            return True
+    return False
+
+
+def _is_mint_stmt(tokens) -> str | None:
+    """If this `let` statement mints a promise-like value, the binding name."""
+    # simple pattern only: `let [mut] name ... = ...` — tuple/struct patterns
+    # are not promise mints in this tree
+    k = 1
+    if is_ident(at(tokens, k), "mut"):
+        k += 1
+    nm = at(tokens, k)
+    if nm is None or nm.kind != IDENT or nm.text == "_":
+        return None
+    # the name must be a plain binding: `let name = ...` or `let name: T = ...`
+    # — anything else (`let Some(x) = ...`, tuple patterns, if-let heads) is
+    # a pattern, not a promise mint binding
+    after = at(tokens, k + 1)
+    if not (is_punct(after, "=") or is_punct(after, ":")):
+        return None
+    minted = False
+    for i, t in enumerate(tokens):
+        if is_ident(t, "make_promise"):
+            minted = True
+        elif _seq(tokens, i, "ResponsePromise", "new") or _seq(tokens, i, "FutureSlot", "new"):
+            minted = True
+    return nm.text if minted else None
+
+
+class _Leak:
+    __slots__ = ("line", "what")
+
+    def __init__(self, line: int, what: str):
+        self.line = line
+        self.what = what
+
+
+def _use_effect(elems, i, name: str) -> int | None:
+    """Effect of the `name` token at elems[i]: YES (consumed) or None."""
+    prev = elems[i - 1] if i > 0 and not isinstance(elems[i - 1], Block) else None
+    if is_punct(prev, ".") or is_punct(prev, ":"):
+        return None  # field access on another value / path segment
+    nxt = elems[i + 1] if i + 1 < len(elems) and not isinstance(elems[i + 1], Block) else None
+    if is_punct(nxt, "."):
+        m = elems[i + 2] if i + 2 < len(elems) and not isinstance(elems[i + 2], Block) else None
+        if m is not None and m.kind == IDENT:
+            if m.text in config.PROMISE_RESOLVERS:
+                return YES
+            if m.text in config.PROMISE_INSPECT:
+                return None
+        return YES  # unknown method / field — hand-off (lenient)
+    if is_punct(nxt, ":"):
+        # `name: value` field init — the ident is a field label, not a use
+        # (`name::` paths were already rejected via prev `:` check elsewhere)
+        nxt2 = elems[i + 2] if i + 2 < len(elems) and not isinstance(elems[i + 2], Block) else None
+        if not is_punct(nxt2, ":"):
+            return None
+    if is_punct(nxt, "="):
+        nxt2 = elems[i + 2] if i + 2 < len(elems) and not isinstance(elems[i + 2], Block) else None
+        if not is_punct(nxt2, "="):
+            return None  # reassignment target, not a use
+    return YES  # bare use: argument, struct shorthand, return value, borrow
+
+
+def _scan(elems, start: int, name: str, status: int, leaks: list) -> int:
+    i = start
+    n = len(elems)
+    while i < n:
+        e = elems[i]
+        if isinstance(e, Block):
+            if e.construct in ("if", "elseif"):
+                branch_sts = []
+                has_else = False
+                j = i
+                while j < n:
+                    b = elems[j]
+                    if isinstance(b, Block) and b.construct in ("if", "elseif", "else"):
+                        branch_sts.append(_scan(b.elements, 0, name, status, leaks))
+                        if b.construct == "else":
+                            has_else = True
+                        # chain continues only through an `else` token
+                        k = j + 1
+                        cont = False
+                        while k < n and not isinstance(elems[k], Block):
+                            t = elems[k]
+                            if is_punct(t, ";"):
+                                break
+                            if is_ident(t, "else"):
+                                cont = True
+                            k += 1
+                        if cont and k < n:
+                            j = k
+                            continue
+                    break
+                if status == NO:
+                    if has_else and branch_sts and all(s == YES for s in branch_sts):
+                        status = YES
+                    elif any(s != NO for s in branch_sts):
+                        status = MAYBE
+                i = j + 1
+                continue
+            if e.construct == "closure":
+                if _contains_ident(e.elements, name):
+                    status = YES  # captured: ownership handed to the closure
+                i += 1
+                continue
+            if e.construct in ("loop", "while", "for"):
+                st = _scan(e.elements, 0, name, status, leaks)
+                if status == NO and st != NO:
+                    status = MAYBE
+                i += 1
+                continue
+            # match / plain / unsafe / else (outside a chain): linear merge
+            status = _scan(e.elements, 0, name, status, leaks)
+            i += 1
+            continue
+
+        if e.kind == IDENT and e.text == name:
+            eff = _use_effect(elems, i, name)
+            if eff is not None and status == NO:
+                status = eff
+            elif eff is not None:
+                status = max(status, eff)
+            i += 1
+            continue
+
+        if is_punct(e, "?"):
+            if status == NO:
+                leaks.append(_Leak(e.line, "may exit via `?`"))
+            i += 1
+            continue
+
+        if e.kind == IDENT and e.text == "return":
+            # scan the returned expression for the binding first
+            j = i + 1
+            span = []
+            while j < n:
+                t = elems[j]
+                if not isinstance(t, Block) and is_punct(t, ";"):
+                    break
+                span.append(t)
+                j += 1
+            if _contains_ident(span, name):
+                status = YES
+            elif status == NO:
+                leaks.append(_Leak(e.line, "returns"))
+            # the linear flow of this element list ends here; any leak on
+            # this path is already recorded, so no end-of-scope report
+            return max(status, YES)
+
+        if e.kind == IDENT and e.text in _DIVERGE_MACROS:
+            nxt = elems[i + 1] if i + 1 < n and not isinstance(elems[i + 1], Block) else None
+            if is_punct(nxt, "!"):
+                return max(status, YES)  # diverging path: no leak possible
+
+        if e.kind == IDENT and e.text in ("break", "continue"):
+            return max(status, YES)  # leaves this scope's linear flow
+
+        i += 1
+    return status
+
+
+def _walk_blocks(block: Block, src, fn, findings: list) -> None:
+    elems = block.elements
+    i = 0
+    while i < len(elems):
+        e = elems[i]
+        if isinstance(e, Block):
+            _walk_blocks(e, src, fn, findings)
+            i += 1
+            continue
+        if e.kind == IDENT and e.text == "let":
+            # find the end of this statement, walking nested blocks normally
+            j = i
+            stmt_tokens = []
+            while j < len(elems):
+                t = elems[j]
+                if isinstance(t, Block):
+                    _walk_blocks(t, src, fn, findings)
+                elif is_punct(t, ";"):
+                    break
+                else:
+                    stmt_tokens.append(t)
+                j += 1
+            name = _is_mint_stmt(stmt_tokens)
+            if name is not None:
+                leaks: list[_Leak] = []
+                status = _scan(elems, j + 1, name, NO, leaks)
+                if status == NO:
+                    leaks.append(_Leak(e.line, "falls off the end of its scope"))
+                seen_lines = set()
+                for lk in leaks:
+                    if lk.line in seen_lines:
+                        continue
+                    seen_lines.add(lk.line)
+                    findings.append(
+                        Finding(
+                            "promise-lifecycle",
+                            src.rel,
+                            lk.line,
+                            f"promise binding `{name}` (line {e.line}, fn `{fn.name}`) "
+                            f"{lk.what} without reaching deliver/fail/hand-off — "
+                            "this path resolves only via Drop's broken-promise fallback",
+                            anchor_lines=(e.line,),
+                        )
+                    )
+            i = j + 1
+            continue
+        i += 1
+
+
+def check_lifecycle(src) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in src.functions:
+        if fn.in_test:
+            continue
+        tree = build_block_tree(src.code, fn.body_start, fn.body_end)
+        _walk_blocks(tree, src, fn, findings)
+    return findings
+
+
+def run(ctx) -> None:
+    for src in ctx.sources.values():
+        ctx.report.extend(check_file_level(src))
+        ctx.report.extend(check_lifecycle(src))
+    ctx.report.bump("promise_bindings_files", len(ctx.sources))

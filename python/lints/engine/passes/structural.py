@@ -1,0 +1,46 @@
+"""R1 balance — structural sanity, re-hosted on the token stream.
+
+The lexer already guarantees that braces inside comments, strings, chars
+and raw strings never surface as punct tokens, so the balance check here is
+exact: every ``{``/``(``/``[`` it sees is real code structure. This is the
+fix for the old stripper's false-positive class (braces inside raw strings
+containing ``"#`` sequences, and ``'{'`` char literals next to lifetimes) —
+covered by the regression fixture in ``tests/test_regression.py``.
+
+Also flags any attribute whose ``]`` never arrives (truncated-file guard).
+Runs over rust/src *and* tests/benches/examples: an imbalance there breaks
+the build just as hard.
+"""
+
+from __future__ import annotations
+
+from ..lexer import PUNCT
+from ..report import Finding
+
+_PAIRS = {"}": "{", ")": "(", "]": "["}
+
+
+def check_file(src) -> list[Finding]:
+    findings: list[Finding] = []
+    stack = []
+    for t in src.code:
+        if t.kind != PUNCT:
+            continue
+        if t.text in "{([":
+            stack.append(t)
+        elif t.text in "})]":
+            if not stack or stack[-1].text != _PAIRS[t.text]:
+                findings.append(Finding("balance", src.rel, t.line, f"unbalanced `{t.text}`"))
+                return findings
+            stack.pop()
+    for t in stack:
+        findings.append(Finding("balance", src.rel, t.line, f"unclosed `{t.text}`"))
+    for a in src.attributes:
+        if not a.closed:
+            findings.append(Finding("balance", src.rel, a.line, "unterminated attribute"))
+    return findings
+
+
+def run(ctx) -> None:
+    for src in ctx.all_sources().values():
+        ctx.report.extend(check_file(src))

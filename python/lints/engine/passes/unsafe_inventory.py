@@ -1,0 +1,215 @@
+"""P4 unsafe-inventory — every `unsafe` audited, new unsafe an explicit diff.
+
+Two obligations per production `unsafe` site in rust/src:
+
+* a rationale in the comments on the site's line, within three lines above,
+  or in the contiguous comment block directly above — spelled ``SAFETY:``
+  or as a ``# Safety`` doc section (``unsafe`` without an argument for
+  *why* it is sound is a review debt);
+* membership in the checked-in baseline ``python/lints/unsafe_baseline.json``.
+  The baseline is keyed by (file, enclosing item, kind) with a count —
+  deliberately line-number-free, so moving code never churns it, while
+  *adding* an unsafe block anywhere is a baseline diff that must be
+  committed alongside its justification (run ``--update-baseline``).
+  Stale baseline entries (unsafe that no longer exists) are also findings:
+  the inventory must match reality in both directions.
+
+The current inventory is published into the JSON report (`unsafe_inventory`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .. import config
+from ..report import Finding
+from .common import at, is_ident, is_punct, nontest
+
+_KINDS = {"fn": "fn", "impl": "impl", "trait": "trait"}
+
+
+def _enclosing_item(src, index: int) -> str:
+    for fn in src.functions:
+        if fn.sig_start <= index <= fn.body_end:
+            return f"fn {fn.name}"
+    # module-level unsafe (unsafe impl / static initializer): describe it by
+    # the few tokens that follow, which is stable under reordering
+    tail = []
+    code = src.code
+    j = index
+    while j < len(code) and len(tail) < 6:
+        t = code[j]
+        if is_punct(t, "{") or is_punct(t, ";"):
+            break
+        tail.append(t.text)
+        j += 1
+    return " ".join(tail)
+
+
+def _site_kind(src, index: int) -> str:
+    nxt = at(src.code, index + 1)
+    if nxt is not None and nxt.kind == "ident" and nxt.text in _KINDS:
+        return _KINDS[nxt.text]
+    return "block"
+
+
+def _has_rationale(src, line: int) -> bool:
+    """A SAFETY rationale covering the site.
+
+    Accepted: any comment line on the site's line or within 3 lines above,
+    *expanded to its full contiguous comment block*, containing ``SAFETY:``
+    or a ``# Safety`` doc-section header. The block expansion matters for
+    multi-line rationales whose keyword is on the block's first line.
+    """
+    for ln in range(line, max(0, line - 4), -1):
+        if ln not in src.comments_by_line:
+            continue
+        lo = ln
+        while lo - 1 in src.comments_by_line:
+            lo -= 1
+        hi = ln
+        while hi + 1 in src.comments_by_line and hi + 1 <= line:
+            hi += 1
+        block = []
+        for k in range(lo, hi + 1):
+            block.extend(src.comments_by_line[k])
+        text = "\n".join(block).lower()
+        if "safety:" in text or "# safety" in text:
+            return True
+    return False
+
+
+def collect_sites(src) -> list[dict]:
+    sites = []
+    for i, t in nontest(src):
+        if not is_ident(t, "unsafe"):
+            continue
+        sites.append(
+            {
+                "file": src.rel.replace(os.sep, "/"),
+                "item": _enclosing_item(src, i),
+                "kind": _site_kind(src, i),
+                "line": t.line,  # not part of the baseline key
+            }
+        )
+    return sites
+
+
+def _key(site: dict) -> tuple:
+    return (site["file"], site["item"], site["kind"])
+
+
+def _baseline_path(repo: str) -> str:
+    return os.path.join(repo, config.UNSAFE_BASELINE)
+
+
+def load_baseline(repo: str) -> dict[tuple, int] | None:
+    path = _baseline_path(repo)
+    if not os.path.isfile(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    out: dict[tuple, int] = {}
+    for site in doc.get("sites", ()):
+        out[(site["file"], site["item"], site["kind"])] = site.get("count", 1)
+    return out
+
+
+def write_baseline(ctx) -> str:
+    counts: dict[tuple, int] = {}
+    for src in ctx.sources.values():
+        for site in collect_sites(src):
+            counts[_key(site)] = counts.get(_key(site), 0) + 1
+    doc = {
+        "comment": "unsafe inventory baseline — regenerate with "
+        "`python3 python/lints/check.py --update-baseline` and commit the "
+        "diff together with the new site's SAFETY rationale",
+        "sites": [
+            {"file": f, "item": it, "kind": k, "count": n}
+            for (f, it, k), n in sorted(counts.items())
+        ],
+    }
+    path = _baseline_path(ctx.repo)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
+
+
+def run(ctx) -> None:
+    all_sites: list[dict] = []
+    findings: list[Finding] = []
+    for src in ctx.sources.values():
+        for site in collect_sites(src):
+            all_sites.append(site)
+            if not _has_rationale(src, site["line"]):
+                findings.append(
+                    Finding(
+                        "unsafe-inventory",
+                        src.rel,
+                        site["line"],
+                        f"unsafe {site['kind']} without a `// SAFETY:` comment "
+                        "on the site or the lines directly above — state why "
+                        "this is sound",
+                    )
+                )
+
+    ctx.report.publish(
+        "unsafe_inventory",
+        sorted(all_sites, key=lambda s: (s["file"], s["line"])),
+    )
+    ctx.report.bump("unsafe_sites", len(all_sites))
+
+    baseline = load_baseline(ctx.repo)
+    if baseline is None:
+        findings.append(
+            Finding(
+                "unsafe-inventory",
+                config.UNSAFE_BASELINE,
+                1,
+                "unsafe baseline file missing — generate it with "
+                "`python3 python/lints/check.py --update-baseline` and commit it",
+            )
+        )
+        ctx.report.extend(findings)
+        return
+
+    current: dict[tuple, int] = {}
+    for site in all_sites:
+        current[_key(site)] = current.get(_key(site), 0) + 1
+
+    for key, n in sorted(current.items()):
+        base_n = baseline.get(key, 0)
+        if n > base_n:
+            # report at the actual site line(s) for the new occurrences
+            lines = [
+                s["line"]
+                for s in all_sites
+                if _key(s) == key
+            ][base_n:]
+            rel = key[0].replace("/", os.sep)
+            for line in lines:
+                findings.append(
+                    Finding(
+                        "unsafe-inventory",
+                        rel,
+                        line,
+                        f"unsafe {key[2]} in `{key[1]}` is not in the baseline "
+                        "— audit it, then run `--update-baseline` and commit "
+                        "the diff",
+                    )
+                )
+    for key, base_n in sorted(baseline.items()):
+        if current.get(key, 0) < base_n:
+            findings.append(
+                Finding(
+                    "unsafe-inventory",
+                    config.UNSAFE_BASELINE,
+                    1,
+                    f"baseline lists unsafe {key[2]} in `{key[1]}` ({key[0]}) "
+                    "that no longer exists — refresh with `--update-baseline` "
+                    "so the inventory matches reality",
+                )
+            )
+    ctx.report.extend(findings)

@@ -1,0 +1,155 @@
+"""Findings, waiver application, and the machine-readable report.
+
+A pass emits `Finding`s unconditionally; the driver applies waivers
+(recording which waiver suppressed what), turns unused waivers into
+`waiver-hygiene` findings, and renders two outputs:
+
+* human text — one `path:line: [rule] message` per unwaived finding;
+* a stable JSON report (`--json`) with every finding (waived ones carry
+  their waiver), the per-rule waiver budget, the atomics table (P3), the
+  unsafe inventory (P4), and run metadata — CI uploads this as an artifact
+  so a finding's full context survives the log scroll.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable
+
+
+class Finding:
+    __slots__ = ("rule", "path", "line", "msg", "anchor_lines", "waived_by")
+
+    def __init__(self, rule: str, path: str, line: int, msg: str, anchor_lines: tuple[int, ...] = ()):
+        self.rule = rule
+        self.path = path
+        self.line = line
+        self.msg = msg
+        # lines (besides `line`) where a waiver for this finding may sit,
+        # e.g. the binding line of a promise whose leak is reported at an
+        # exit line
+        self.anchor_lines = anchor_lines
+        self.waived_by = None  # Waiver | None
+
+    def key(self) -> tuple:
+        return (self.path, self.line, self.rule, self.msg)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+    def to_json(self) -> dict:
+        d = {"rule": self.rule, "path": self.path, "line": self.line, "msg": self.msg}
+        if self.waived_by is not None:
+            d["waived"] = {
+                "line": self.waived_by.line,
+                "reason": self.waived_by.reason,
+            }
+        return d
+
+
+class Report:
+    """Accumulates pass output and renders the two report forms."""
+
+    def __init__(self) -> None:
+        self.findings: list[Finding] = []
+        self.tables: dict[str, object] = {}  # pass-published extras (JSON-able)
+        self.stats: dict[str, int] = {}
+
+    def add(self, finding: Finding) -> None:
+        self.findings.append(finding)
+
+    def extend(self, findings: Iterable[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def publish(self, name: str, table: object) -> None:
+        self.tables[name] = table
+
+    def bump(self, stat: str, n: int = 1) -> None:
+        self.stats[stat] = self.stats.get(stat, 0) + n
+
+    # -- waiver application --------------------------------------------------
+
+    def apply_waivers(self, sources: dict[str, object]) -> None:
+        """Suppress findings covered by a waiver; flag unused/empty waivers."""
+        for f in self.findings:
+            src = sources.get(f.path)
+            if src is None:
+                continue
+            lines = (f.line,) + f.anchor_lines
+            w = src.waiver_for(f.rule, lines)
+            if w is not None:
+                f.waived_by = w
+                w.used = True
+        hygiene: list[Finding] = []
+        for src in sources.values():
+            for w in src.waivers:
+                if w.in_test:
+                    continue
+                if not w.reason:
+                    hygiene.append(
+                        Finding(
+                            "waiver-hygiene",
+                            w.path,
+                            w.line,
+                            "waiver without a reason — state why the rule "
+                            "does not apply here",
+                        )
+                    )
+                elif not w.used:
+                    hygiene.append(
+                        Finding(
+                            "waiver-hygiene",
+                            w.path,
+                            w.line,
+                            "unused waiver — nothing on this line trips "
+                            f"{'any rule' if w.rules is None else ', '.join(sorted(w.rules))}; "
+                            "delete it (stale waivers hide future findings)",
+                        )
+                    )
+        self.findings.extend(hygiene)
+
+    # -- outputs -------------------------------------------------------------
+
+    def active(self) -> list[Finding]:
+        return sorted(
+            (f for f in self.findings if f.waived_by is None),
+            key=lambda f: (f.path, f.line, f.rule),
+        )
+
+    def waiver_budget(self, sources: dict[str, object]) -> dict[str, dict[str, int]]:
+        """Per-rule counts of waivers in force (and the unused leftovers)."""
+        budget: dict[str, dict[str, int]] = {}
+        for f in self.findings:
+            if f.waived_by is not None:
+                b = budget.setdefault(f.rule, {"waived_findings": 0, "waiver_sites": 0})
+                b["waived_findings"] += 1
+        sites: dict[str, set] = {}
+        for src in sources.values():
+            for w in src.waivers:
+                if w.in_test or not w.used:
+                    continue
+                for rule in w.rules or ("*",):
+                    sites.setdefault(rule, set()).add((w.path, w.line))
+        for rule, s in sites.items():
+            if rule == "*":
+                # an unscoped waiver counts against every rule it suppressed;
+                # approximate its site count under a catch-all bucket
+                budget.setdefault("unscoped", {"waived_findings": 0, "waiver_sites": 0})[
+                    "waiver_sites"
+                ] += len(s)
+            else:
+                budget.setdefault(rule, {"waived_findings": 0, "waiver_sites": 0})[
+                    "waiver_sites"
+                ] += len(s)
+        return budget
+
+    def to_json(self, sources: dict[str, object]) -> str:
+        doc = {
+            "version": 1,
+            "findings": [f.to_json() for f in sorted(self.findings, key=lambda f: f.key())],
+            "active_findings": len(self.active()),
+            "waiver_budget": self.waiver_budget(sources),
+            "stats": dict(sorted(self.stats.items())),
+        }
+        doc.update(self.tables)
+        return json.dumps(doc, indent=2, sort_keys=False) + "\n"

@@ -1,0 +1,118 @@
+"""SourceFile: one lexed Rust file plus the derived views passes consume.
+
+Everything is computed once per file and shared by all passes: the full
+token stream, the comment-free code stream, the per-code-token test mask,
+extracted functions, per-line comment text, and the waiver table.
+
+Waiver syntax (checked by the waiver-hygiene step in the driver):
+
+    // lint-ok: <reason>              waives any rule on this line
+    // lint-ok(rule[,rule...]): <reason>   waives only the named rules
+
+A waiver must carry a reason; a bare `lint-ok:` with an empty reason is
+itself a finding. Waivers inside test-masked regions are ignored entirely
+(test code is outside every rule's scope, so they can never be "used").
+"""
+
+from __future__ import annotations
+
+import re
+
+from . import items, lexer
+
+
+class Waiver:
+    __slots__ = ("path", "line", "rules", "reason", "used", "in_test")
+
+    def __init__(self, path: str, line: int, rules: frozenset[str] | None, reason: str, in_test: bool):
+        self.path = path
+        self.line = line
+        self.rules = rules  # None = waives any rule
+        self.reason = reason
+        self.used = False
+        self.in_test = in_test
+
+    def covers(self, rule: str) -> bool:
+        return self.rules is None or rule in self.rules
+
+
+_WAIVER_RE = re.compile(r"lint-ok(?:\(([\w,\- ]+)\))?:\s*(.*)")
+
+
+class SourceFile:
+    def __init__(self, path: str, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.tokens = lexer.lex(text)
+        self.code = lexer.code_tokens(self.tokens)
+        self.comments = lexer.comment_tokens(self.tokens)
+        self.mask = items.test_mask(self.code)
+        self.functions = items.extract_functions(self.code, self.mask)
+        self.attributes = items.find_attributes(self.code)
+        # per-line comment text (a line can carry several comments)
+        self.comments_by_line: dict[int, list[str]] = {}
+        for c in self.comments:
+            for off, piece in enumerate(c.text.split("\n")):
+                self.comments_by_line.setdefault(c.line + off, []).append(piece)
+        self._line_in_test = self._compute_line_test_mask()
+        self.waivers = self._collect_waivers()
+
+    # -- test-region helpers ------------------------------------------------
+
+    def _compute_line_test_mask(self) -> set[int]:
+        lines: set[int] = set()
+        run_start = None
+        for i, t in enumerate(self.code):
+            if self.mask[i]:
+                if run_start is None:
+                    run_start = t.line
+                lines.add(t.line)
+            else:
+                run_start = None
+        return lines
+
+    def line_in_test(self, line: int) -> bool:
+        return line in self._line_in_test
+
+    # -- waivers ------------------------------------------------------------
+
+    def _collect_waivers(self) -> list[Waiver]:
+        out: list[Waiver] = []
+        for line, pieces in sorted(self.comments_by_line.items()):
+            for piece in pieces:
+                m = _WAIVER_RE.search(piece)
+                if not m:
+                    continue
+                rules = m.group(1)
+                ruleset = (
+                    frozenset(r.strip() for r in rules.split(",") if r.strip())
+                    if rules
+                    else None
+                )
+                out.append(
+                    Waiver(
+                        self.rel,
+                        line,
+                        ruleset,
+                        m.group(2).strip(),
+                        self.line_in_test(line),
+                    )
+                )
+        return out
+
+    def waiver_for(self, rule: str, lines: tuple[int, ...]) -> Waiver | None:
+        """First waiver covering `rule` on any of `lines` (finding + anchor)."""
+        for w in self.waivers:
+            if w.line in lines and w.covers(rule) and not w.in_test:
+                return w
+        return None
+
+    # -- comment lookups ----------------------------------------------------
+
+    def comment_text_near(self, line: int, above: int) -> str:
+        """Concatenated comment text on `line` and up to `above` lines before."""
+        parts: list[str] = []
+        for ln in range(max(1, line - above), line + 1):
+            parts.extend(self.comments_by_line.get(ln, ()))
+        return "\n".join(parts)

@@ -1,0 +1,99 @@
+"""Shared helpers for the analyzer self-tests.
+
+Not named test_* so unittest discovery doesn't collect it. Bootstraps
+sys.path so `engine` imports resolve when running
+
+    python3 -m unittest discover python/lints/tests
+
+from the repository root.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from engine import Context  # noqa: E402
+from engine.report import Report  # noqa: E402
+from engine.source import SourceFile  # noqa: E402
+
+
+def make_source(text: str, rel: str = "rust/src/fixture.rs") -> SourceFile:
+    return SourceFile(rel, rel, text)
+
+
+def make_ctx(files: dict[str, str], repo: str = "/nonexistent") -> Context:
+    sources = {rel: SourceFile(rel, rel, text) for rel, text in files.items()}
+    return Context(repo, sources, {}, Report())
+
+
+def findings_of(ctx: Context, rule: str | None = None):
+    fs = ctx.report.findings
+    return [f for f in fs if rule is None or f.rule == rule]
+
+
+# The PR-8 regex stripper, verbatim — kept here (and only here) as the
+# regression oracle: tests prove its false-positive classes against the
+# token-level engine that replaced it.
+def old_strip_source(text: str) -> str:
+    out = list(text)
+    i, n = 0, len(text)
+
+    def blank(a: int, b: int) -> None:
+        for k in range(a, min(b, n)):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = text.find("\n", i)
+            j = n if j == -1 else j
+            blank(i, j)
+            i = j
+        elif c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            i = j
+        elif c == "r" and re.match(r'r#*"', text[i:]):
+            m = re.match(r'r(#*)"', text[i:])
+            closing = '"' + m.group(1)
+            j = text.find(closing, i + len(m.group(0)))
+            j = n if j == -1 else j + len(closing)
+            blank(i, j)
+            i = j
+        elif c == '"':
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                elif text[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            blank(i, j)
+            i = j
+        elif c == "'":
+            m = re.match(r"'(\\.[^']*|[^'\\])'", text[i:])
+            if m:
+                blank(i, i + len(m.group(0)))
+                i += len(m.group(0))
+            else:
+                i += 1
+        else:
+            i += 1
+    return "".join(out)

@@ -1,0 +1,188 @@
+import unittest
+
+from lintest import findings_of, make_ctx
+
+from engine.passes import gauges
+
+
+def run_on(files):
+    ctx = make_ctx(files)
+    gauges.run(ctx)
+    return ctx
+
+
+class CrateWideBalanceTest(unittest.TestCase):
+    def test_increment_without_any_drain(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) { self.inflight.fetch_add(1, Ordering::AcqRel); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "gauge-balance")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("inflight", fs[0].msg)
+        self.assertIn("ratchet", fs[0].msg)
+
+    def test_decrement_in_another_file_balances(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) { self.inflight.fetch_add(1, Ordering::AcqRel); }"
+                ),
+                "rust/src/b.rs": (
+                    "fn retire(&self) { self.inflight.fetch_sub(1, Ordering::AcqRel); }"
+                ),
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+    def test_resync_store_balances(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) { self.routed.fetch_add(1, Ordering::Relaxed); }\n"
+                    "fn resync(&self) { self.routed.store(0, Ordering::Relaxed); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+    def test_fetch_update_saturating_sub_is_a_decrement(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) { self.launched.fetch_add(1, Ordering::AcqRel); }\n"
+                    "fn undo(&self) { self.launched.fetch_update(Ordering::AcqRel, "
+                    "Ordering::Acquire, |v| Some(v.saturating_sub(1))); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+        ledger = ctx.report.tables["gauge_ledger"]
+        self.assertEqual(len(ledger["launched"]["dec"]), 1)
+
+    def test_monotonic_counter_decrement_is_the_defect(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn oops(&self) { self.shed.fetch_sub(1, Ordering::Relaxed); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "gauge-balance")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("monotonic counter `shed`", fs[0].msg)
+
+    def test_test_code_is_out_of_scope(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "#[cfg(test)]\nmod t {\n    fn f(g: &G) "
+                    "{ g.inflight.fetch_add(1, Ordering::AcqRel); }\n}\n"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+
+class EarlyExitTest(unittest.TestCase):
+    DEC_ELSEWHERE = "fn retire(&self) { self.inflight.fetch_sub(1, Ordering::AcqRel); }"
+
+    def test_question_mark_after_increment_leaks(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) -> Result<(), E> {\n"
+                    "    self.inflight.fetch_add(1, Ordering::AcqRel);\n"
+                    "    self.sink.push(msg)?;\n"
+                    "    Ok(())\n"
+                    "}\n" + self.DEC_ELSEWHERE
+                )
+            }
+        )
+        fs = findings_of(ctx, "gauge-balance")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("`?` exit after increment of `inflight`", fs[0].msg)
+        self.assertEqual(fs[0].line, 3)
+        self.assertEqual(fs[0].anchor_lines, (2,))
+
+    def test_decrement_before_question_mark_guards(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) -> Result<(), E> {\n"
+                    "    self.inflight.fetch_add(1, Ordering::AcqRel);\n"
+                    "    self.inflight.fetch_sub(1, Ordering::AcqRel);\n"
+                    "    self.sink.push(msg)?;\n"
+                    "    Ok(())\n"
+                    "}\n"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+    def test_undo_helper_call_guards_via_fixpoint(self):
+        # launch_refused decrements; admit calls it before the `?` — the
+        # fixpoint must recognize the call as an undo even across files
+        ctx = run_on(
+            {
+                "rust/src/helpers.rs": (
+                    "fn launch_refused(&self) "
+                    "{ self.launched.fetch_sub(1, Ordering::AcqRel); }"
+                ),
+                "rust/src/a.rs": (
+                    "fn admit(&self) -> Result<(), E> {\n"
+                    "    self.launched.fetch_add(1, Ordering::AcqRel);\n"
+                    "    self.launch_refused();\n"
+                    "    self.sink.push(msg)?;\n"
+                    "    Ok(())\n"
+                    "}\n"
+                ),
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+    def test_transitive_undo_helper(self):
+        # admit -> on_refuse -> launch_refused: two hops through the fixpoint
+        ctx = run_on(
+            {
+                "rust/src/helpers.rs": (
+                    "fn launch_refused(&self) "
+                    "{ self.launched.fetch_sub(1, Ordering::AcqRel); }\n"
+                    "fn on_refuse(&self) { self.launch_refused(); }"
+                ),
+                "rust/src/a.rs": (
+                    "fn admit(&self) -> Result<(), E> {\n"
+                    "    self.launched.fetch_add(1, Ordering::AcqRel);\n"
+                    "    self.on_refuse();\n"
+                    "    self.sink.push(msg)?;\n"
+                    "    Ok(())\n"
+                    "}\n"
+                ),
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+
+class LedgerTest(unittest.TestCase):
+    def test_ledger_published_with_kinds_and_sites(self):
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn f(&self) { self.inflight.fetch_add(1, Ordering::AcqRel); }\n"
+                    "fn g(&self) { self.inflight.fetch_sub(1, Ordering::AcqRel); }\n"
+                    "fn h(&self) { self.shed.fetch_add(1, Ordering::Relaxed); }"
+                )
+            }
+        )
+        ledger = ctx.report.tables["gauge_ledger"]
+        self.assertEqual(ledger["inflight"]["kind"], "balanced")
+        self.assertEqual(ledger["inflight"]["inc"], ["rust/src/a.rs:1"])
+        self.assertEqual(ledger["inflight"]["dec"], ["rust/src/a.rs:2"])
+        self.assertEqual(ledger["shed"]["kind"], "monotonic")
+
+
+if __name__ == "__main__":
+    unittest.main()

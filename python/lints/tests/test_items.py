@@ -1,0 +1,124 @@
+import unittest
+
+from lintest import make_source
+
+from engine import items
+from engine.lexer import IDENT, code_tokens, lex
+
+
+def mask_for(text):
+    code = code_tokens(lex(text))
+    return code, items.test_mask(code)
+
+
+def masked_idents(text):
+    code, mask = mask_for(text)
+    return {t.text for i, t in enumerate(code) if mask[i] and t.kind == IDENT}
+
+
+class TestMaskTest(unittest.TestCase):
+    def test_cfg_test_mod_masked(self):
+        text = """
+fn prod() { body(); }
+#[cfg(test)]
+mod tests {
+    fn helper() { test_body(); }
+}
+fn prod2() { body2(); }
+"""
+        ids = masked_idents(text)
+        self.assertIn("helper", ids)
+        self.assertIn("test_body", ids)
+        self.assertNotIn("prod", ids)
+        self.assertNotIn("body2", ids)
+
+    def test_cfg_all_and_any_mask(self):
+        for head in ('#[cfg(all(test, feature = "x"))]', "#[cfg(any(test, doc))]"):
+            ids = masked_idents(head + "\nfn only_in_tests() { t(); }")
+            self.assertIn("only_in_tests", ids, head)
+
+    def test_cfg_not_test_is_production(self):
+        ids = masked_idents("#[cfg(not(test))]\nfn prod() { body(); }")
+        self.assertEqual(ids, set())
+
+    def test_stacked_attributes(self):
+        text = '#[allow(dead_code)]\n#[cfg(test)]\n#[derive(Debug)]\nstruct T { x: u32 }'
+        ids = masked_idents(text)
+        self.assertIn("T", ids)
+
+    def test_semicolon_item(self):
+        ids = masked_idents("#[cfg(test)]\nuse crate::test_util::probe;\nfn prod() {}")
+        self.assertIn("probe", ids)
+        self.assertNotIn("prod", ids)
+
+    def test_attr_in_string_is_not_an_attribute(self):
+        # the token stream never surfaces #[cfg(test)] spelled inside a string
+        code, mask = mask_for('fn f() { let s = "#[cfg(test)]"; real(); }')
+        self.assertFalse(any(mask))
+
+
+class FunctionExtractTest(unittest.TestCase):
+    def test_boundaries_and_names(self):
+        text = """
+fn alpha(x: u32) -> u32 { x + 1 }
+impl Foo {
+    pub fn beta(&self) { if x { y(); } }
+}
+trait T { fn decl_only(&self); }
+"""
+        code = code_tokens(lex(text))
+        fns = items.extract_functions(code, items.test_mask(code))
+        names = [f.name for f in fns]
+        self.assertEqual(names, ["alpha", "beta"])  # decl_only has no body
+
+    def test_in_test_flag(self):
+        text = "#[cfg(test)]\nmod t { fn inner() { x(); } }\nfn outer() { y(); }"
+        code = code_tokens(lex(text))
+        fns = items.extract_functions(code, items.test_mask(code))
+        flags = {f.name: f.in_test for f in fns}
+        self.assertTrue(flags["inner"])
+        self.assertFalse(flags["outer"])
+
+
+class BlockTreeTest(unittest.TestCase):
+    def _tree(self, body):
+        text = f"fn f() {body}"
+        code = code_tokens(lex(text))
+        fns = items.extract_functions(code, [False] * len(code))
+        return items.build_block_tree(code, fns[0].body_start, fns[0].body_end)
+
+    def _constructs(self, block, out=None):
+        out = [] if out is None else out
+        for e in block.elements:
+            if isinstance(e, items.Block):
+                out.append(e.construct)
+                self._constructs(e, out)
+        return out
+
+    def test_constructs_tagged(self):
+        tree = self._tree(
+            "{ if a { x(); } else if b { y(); } else { z(); } "
+            "match m { _ => {} } loop { break; } while c { w(); } "
+            "for i in 0..2 { v(); } unsafe { u(); } { plain(); } }"
+        )
+        cs = self._constructs(tree)
+        for want in ("if", "elseif", "else", "match", "loop", "while", "for", "unsafe", "plain"):
+            self.assertIn(want, cs)
+
+    def test_closure_detection(self):
+        cs = self._constructs(self._tree("{ run(move |ctx, res| { body(); }); }"))
+        self.assertIn("closure", cs)
+
+    def test_match_arm_not_closure(self):
+        cs = self._constructs(self._tree("{ match x { A | B => { arm(); } } }"))
+        self.assertNotIn("closure", cs)
+
+    def test_brace_in_parens_does_not_steal_keyword(self):
+        # the `{` of a struct literal inside the scrutinee parens must not
+        # consume the pending `match`
+        cs = self._constructs(self._tree("{ match wrap(Pt { x: 1 }) { _ => {} } }"))
+        self.assertIn("match", cs)
+
+
+if __name__ == "__main__":
+    unittest.main()

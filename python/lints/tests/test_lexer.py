@@ -1,0 +1,111 @@
+import unittest
+
+from lintest import make_source  # noqa: F401  (bootstraps sys.path)
+
+from engine import lexer
+
+
+def kinds(text):
+    return [(t.kind, t.text) for t in lexer.lex(text)]
+
+
+def braces(text):
+    return [
+        t.text
+        for t in lexer.lex(text)
+        if t.kind == lexer.PUNCT and t.text in "{}()[]"
+    ]
+
+
+class LexerTest(unittest.TestCase):
+    def test_idents_and_puncts(self):
+        self.assertEqual(
+            kinds("fn f(x: u32) {}"),
+            [
+                ("ident", "fn"),
+                ("ident", "f"),
+                ("punct", "("),
+                ("ident", "x"),
+                ("punct", ":"),
+                ("ident", "u32"),
+                ("punct", ")"),
+                ("punct", "{"),
+                ("punct", "}"),
+            ],
+        )
+
+    def test_raw_string_any_hash_depth(self):
+        for text in ('r"{ }"', 'r#"{ "quoted" }"#', 'r##"{ "#hash" }"##'):
+            toks = lexer.lex(text)
+            self.assertEqual([t.kind for t in toks], [lexer.RAW_STR], text)
+            self.assertEqual(braces(text), [], text)
+
+    def test_raw_string_only_at_token_start(self):
+        # `x2r"\"{"` — an identifier ending in r directly abutting a string:
+        # must lex as IDENT + STR, never a phantom raw string opened at the
+        # identifier's trailing `r` (the old stripper's bug class)
+        toks = lexer.lex('x2r"\\"{"')
+        self.assertEqual([t.kind for t in toks], [lexer.IDENT, lexer.STR])
+        self.assertEqual(toks[0].text, "x2r")
+        self.assertEqual(braces('x2r"\\"{"'), [])
+
+    def test_byte_literals(self):
+        self.assertEqual([t.kind for t in lexer.lex('b"{ }"')], [lexer.STR])
+        self.assertEqual([t.kind for t in lexer.lex("b'{'")], [lexer.CHAR])
+        self.assertEqual([t.kind for t in lexer.lex('br#"{"#')], [lexer.RAW_STR])
+
+    def test_char_vs_lifetime(self):
+        self.assertEqual(kinds("'a'"), [("char", "'a'")])
+        self.assertEqual(kinds("'a")[0][0], lexer.LIFETIME)
+        self.assertEqual(kinds("'static")[0][0], lexer.LIFETIME)
+        self.assertEqual(kinds("'_")[0][0], lexer.LIFETIME)
+        # char escapes
+        for c in ("'\\''", "'\\\\'", "'\\n'", "'\\x7f'", "'\\u{1F600}'"):
+            self.assertEqual([t.kind for t in lexer.lex(c)], [lexer.CHAR], c)
+
+    def test_brace_char_literal_hidden(self):
+        self.assertEqual(braces("let c = '{';"), [])
+        self.assertEqual(braces("match c { '{' => 1, '}' => 2, _ => 0 }"), ["{", "}"])
+
+    def test_nested_block_comment(self):
+        text = "/* outer /* inner { */ still comment } */ fn f() {}"
+        toks = lexer.lex(text)
+        self.assertEqual(toks[0].kind, lexer.BLOCK_COMMENT)
+        self.assertEqual(braces(text), ["(", ")", "{", "}"])
+
+    def test_line_comment_kinds(self):
+        for text in ("// x {", "/// doc {", "//! inner {"):
+            toks = lexer.lex(text)
+            self.assertEqual(toks[0].kind, lexer.LINE_COMMENT, text)
+            self.assertEqual(braces(text), [], text)
+
+    def test_string_escapes(self):
+        self.assertEqual(braces('let s = "{\\"}";'), [])
+        self.assertEqual(braces('let s = "\\\\"; let t = "{";'), [])
+
+    def test_raw_ident(self):
+        toks = lexer.lex("let r#match = 1;")
+        self.assertIn(("ident", "r#match"), [(t.kind, t.text) for t in toks])
+
+    def test_numbers_and_ranges(self):
+        toks = kinds("for i in 0..10 { let x = 1.5e-3f64; let y = 0xff_u32; }")
+        self.assertIn(("num", "0"), toks)
+        self.assertIn(("num", "10"), toks)
+        self.assertIn(("num", "1.5e-3f64"), toks)
+        self.assertIn(("num", "0xff_u32"), toks)
+
+    def test_line_numbers(self):
+        toks = lexer.lex("a\nb\n\nc")
+        self.assertEqual([(t.text, t.line) for t in toks], [("a", 1), ("b", 2), ("c", 4)])
+        # multi-line tokens advance the line counter
+        toks = lexer.lex('r"x\ny" z')
+        self.assertEqual(toks[1].line, 2)
+
+    def test_code_comment_split(self):
+        toks = lexer.lex("a // c\nb")
+        self.assertEqual([t.text for t in lexer.code_tokens(toks)], ["a", "b"])
+        self.assertEqual(len(lexer.comment_tokens(toks)), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,201 @@
+import unittest
+
+from lintest import findings_of, make_ctx
+
+from engine.passes import ordering
+
+# fixtures must live on the interposition surface — the pass only reads
+# the files the model checker interposes
+SURFACE_A = "rust/src/concurrent/mpsc.rs"
+SURFACE_B = "rust/src/actor/mailbox.rs"
+
+
+def run_on(files):
+    ctx = make_ctx(files)
+    ordering.run(ctx)
+    return ctx
+
+
+class PairingTest(unittest.TestCase):
+    def test_unpaired_release_store(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.head.store(p, Ordering::Release); }\n"
+                    "fn sub(&self) { let h = self.head.load(Ordering::Relaxed); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "ordering-graph")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("Release store to `head`", fs[0].msg)
+
+    def test_release_acquire_pair_clean(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.head.store(p, Ordering::Release); }\n"
+                    "fn sub(&self) { let h = self.head.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+    def test_pairing_aggregates_across_surface_files(self):
+        # the store and its acquire live in different interposed files — the
+        # pass must aggregate by variable name across the surface
+        ctx = run_on(
+            {
+                SURFACE_A: "fn pub_(&self) { self.state.store(1, Ordering::Release); }",
+                SURFACE_B: "fn sub(&self) { let s = self.state.load(Ordering::Acquire); }",
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+    def test_unpaired_acquire_load(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.tail.store(p, Ordering::Relaxed); }\n"
+                    "fn sub(&self) { let t = self.tail.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "ordering-graph")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("Acquire load of `tail`", fs[0].msg)
+
+    def test_release_fence_mitigates_relaxed_store(self):
+        # the Chase–Lev idiom: Relaxed store published by a standalone fence
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { fence(Ordering::Release); "
+                    "self.bottom.store(b, Ordering::Relaxed); }\n"
+                    "fn sub(&self) { let b = self.bottom.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+
+class RmwTest(unittest.TestCase):
+    def test_rmw_provides_both_sides(self):
+        # an AcqRel RMW is simultaneously the acquire reader and the release
+        # writer — a lone one plus Relaxed accesses must not trip pairing
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn bump(&self) { self.refs.fetch_add(1, Ordering::AcqRel); }\n"
+                    "fn peek(&self) { let r = self.refs.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+    def test_relaxed_rmw_on_release_var(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.state.store(1, Ordering::Release); }\n"
+                    "fn sub(&self) { let s = self.state.load(Ordering::Acquire); }\n"
+                    "fn bump(&self) { self.state.fetch_add(1, Ordering::Relaxed); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "ordering-graph")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("fully Relaxed RMW on `state`", fs[0].msg)
+        self.assertEqual(fs[0].line, 3)
+
+    def test_compare_exchange_failure_ordering_counts_as_load(self):
+        # the Acquire failure ordering is the variable's only acquire side
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn claim(&self) { self.state.compare_exchange(0, 1, "
+                    "Ordering::Release, Ordering::Acquire); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+        table = ctx.report.tables["atomics_table"]
+        cell = table[f"{SURFACE_A}::state"]
+        self.assertIn("load", cell)  # the (fail) pseudo-access
+        self.assertIn("Acquire", cell["load"])
+
+
+class SeqCstTest(unittest.TestCase):
+    def test_one_sided_seqcst(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.flag.store(true, Ordering::SeqCst); }\n"
+                    "fn sub(&self) { let f = self.flag.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "ordering-graph")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("one-sided SeqCst on `flag`", fs[0].msg)
+
+    def test_both_sided_seqcst_clean(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.flag.store(true, Ordering::SeqCst); }\n"
+                    "fn sub(&self) { let f = self.flag.load(Ordering::SeqCst); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+    def test_seqcst_fence_mitigates(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.flag.store(true, Ordering::SeqCst); }\n"
+                    "fn sub(&self) { fence(Ordering::SeqCst); "
+                    "let f = self.flag.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+
+class ScopeTest(unittest.TestCase):
+    def test_non_surface_files_ignored(self):
+        ctx = run_on(
+            {
+                "rust/src/runtime/facade.rs": (
+                    "fn pub_(&self) { self.head.store(p, Ordering::Release); }\n"
+                    "fn sub(&self) { let h = self.head.load(Ordering::Relaxed); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+
+    def test_non_atomic_calls_without_ordering_ignored(self):
+        # `load`-alikes with no Ordering argument are not atomic ops
+        ctx = run_on(
+            {SURFACE_A: "fn f(&self) { let v = self.cache.load(); }"}
+        )
+        self.assertEqual(findings_of(ctx, "ordering-graph"), [])
+        self.assertEqual(ctx.report.tables["atomics_table"], {})
+
+    def test_table_published(self):
+        ctx = run_on(
+            {
+                SURFACE_A: (
+                    "fn pub_(&self) { self.head.store(p, Ordering::Release); }\n"
+                    "fn sub(&self) { let h = self.head.load(Ordering::Acquire); }"
+                )
+            }
+        )
+        cell = ctx.report.tables["atomics_table"][f"{SURFACE_A}::head"]
+        self.assertEqual(cell["store"], {"Release": 1})
+        self.assertEqual(cell["load"], {"Acquire": 1})
+
+
+if __name__ == "__main__":
+    unittest.main()

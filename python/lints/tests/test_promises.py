@@ -1,0 +1,231 @@
+import unittest
+
+from lintest import make_source
+
+from engine.passes import promises
+
+
+def lifecycle(body: str):
+    src = make_source("fn handler(&mut self) {\n" + body + "\n}\n")
+    return promises.check_lifecycle(src)
+
+
+def file_level(text: str, rel: str = "rust/src/fixture.rs"):
+    return promises.check_file_level(make_source(text, rel))
+
+
+class LifecycleLeakTest(unittest.TestCase):
+    def test_leak_on_early_return(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    if self.closed {
+        return;
+    }
+    promise.deliver(reply);
+"""
+        )
+        self.assertEqual(len(fs), 1)
+        self.assertIn("returns", fs[0].msg)
+        self.assertIn("`promise`", fs[0].msg)
+
+    def test_leak_via_question_mark(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    let frame = self.codec.encode(&msg)?;
+    promise.deliver(frame);
+"""
+        )
+        self.assertEqual(len(fs), 1)
+        self.assertIn("`?`", fs[0].msg)
+
+    def test_leak_falls_off_end(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    self.metrics.observe();
+"""
+        )
+        self.assertEqual(len(fs), 1)
+        self.assertIn("falls off the end", fs[0].msg)
+
+    def test_anchor_is_binding_line(self):
+        fs = lifecycle("\n    let p = self.ctx.make_promise();\n    return;\n")
+        self.assertEqual(len(fs), 1)
+        # waiver may sit on the `let` line, not only the exit line
+        self.assertEqual(fs[0].anchor_lines, (3,))
+
+
+class LifecycleCleanTest(unittest.TestCase):
+    def test_clean_if_else_both_deliver(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    if ok {
+        promise.deliver(reply);
+    } else {
+        promise.fail(err);
+    }
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_if_without_else_is_maybe_not_reported(self):
+        # only *provably* unconsumed paths are findings; an if-without-else
+        # that delivers inside lands on MAYBE and stays quiet
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    if ok {
+        promise.deliver(reply);
+    }
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_clean_closure_capture(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    self.scheduler.spawn(move || {
+        promise.deliver(compute());
+    });
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_clean_struct_shorthand_handoff(self):
+        fs = lifecycle(
+            """
+    let slot = FutureSlot::new();
+    self.pending.push(RequestFuture { slot });
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_clean_returned_binding(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    return promise;
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_clean_bare_argument_handoff(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    self.router.register(id, promise);
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_panic_path_is_not_a_leak(self):
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    if broken {
+        panic!("invariant");
+    }
+    promise.deliver(reply);
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_match_is_scanned_linearly(self):
+        # documented approximation: consumption anywhere inside a match body
+        # counts for the whole match (false-negative direction)
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    match kind {
+        Kind::A => promise.deliver(a),
+        Kind::B => {}
+    }
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_pattern_let_is_not_a_mint_binding(self):
+        # `let Some(x) = ...` must not bind `Some` as a promise
+        fs = lifecycle(
+            """
+    if let Some(err) = self.guard(self.ctx.make_promise()) {
+        log(err);
+    }
+    return;
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_test_functions_are_skipped(self):
+        src = make_source(
+            "#[cfg(test)]\nmod t {\n    fn leaky() {\n"
+            "        let p = ctx.make_promise();\n        return;\n    }\n}\n"
+        )
+        self.assertEqual(promises.check_lifecycle(src), [])
+
+    def test_inspect_guarded_return_is_flagged(self):
+        # documented conservative behavior: INSPECT calls don't consume, so
+        # a return guarded only by is_resolved() still reports — waive at the
+        # binding line if the pattern is intentional
+        fs = lifecycle(
+            """
+    let promise = self.ctx.make_promise();
+    if promise.is_resolved() {
+        return;
+    }
+    promise.deliver(reply);
+"""
+        )
+        self.assertEqual(len(fs), 1)
+        self.assertIn("returns", fs[0].msg)
+
+
+class FileLevelTest(unittest.TestCase):
+    def test_mint_without_deliver(self):
+        fs = file_level("fn f(ctx: &Ctx) { let p = ctx.make_promise(); keep(p); }")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("no deliver", fs[0].msg)
+
+    def test_mint_with_deliver_clean(self):
+        fs = file_level(
+            "fn f(ctx: &Ctx) { let p = ctx.make_promise(); p.deliver_err(e); }"
+        )
+        self.assertEqual(fs, [])
+
+    def test_def_file_exempt(self):
+        fs = file_level(
+            "fn make_promise(&self) -> ResponsePromise { ResponsePromise::new() }",
+            rel="rust/src/actor/request.rs",
+        )
+        self.assertEqual(fs, [])
+
+    def test_pending_map_missing_exits(self):
+        fs = file_level("fn f(&mut self) { self.pending.insert(id, slot); }")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("reply removal", fs[0].msg)
+        self.assertIn("fail_one/fail_pending", fs[0].msg)
+        self.assertIn("reaper", fs[0].msg)
+
+    def test_pending_map_complete_clean(self):
+        fs = file_level(
+            """
+fn f(&mut self) { self.pending.insert(id, slot); }
+fn g(&mut self) { self.pending.remove(&id); }
+fn fail_one(&mut self, id: u64) {}
+struct Reaper;
+"""
+        )
+        self.assertEqual(fs, [])
+
+    def test_future_slot_without_resolve(self):
+        fs = file_level("struct FutureSlot { state: State }")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("resolve", fs[0].msg)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,81 @@
+"""Regression fixture: the PR-8 regex stripper's false-positive class.
+
+The old stripper scanned characters, so a token ending in `r` (an
+identifier like `x2r`, or the lifetime `'r`) directly abutting a string
+literal opened a *phantom raw string* at that trailing `r`. Raw strings
+ignore escapes, so the phantom terminates at the string's first escaped
+quote — leaking the string's remaining content (braces included) into the
+"code" the balance rule counted, and leaving a stray quote that cascades
+into swallowing real code. The token-level lexer lexes identifiers and
+lifetimes atomically and recognizes raw strings only in token-start
+position, so the class is gone by construction.
+
+These tests pin both halves: the old stripper *does* miscount the fixture
+(so the fixture stays honest if someone edits it), and the new engine does
+not.
+"""
+
+import unittest
+
+from lintest import make_source, old_strip_source
+
+from engine import lexer
+from engine.passes import structural
+
+# Valid Rust (macro token trees admit `'r` directly before a string): the
+# old stripper sees `r"\"` as a raw string, terminates it at the escaped
+# quote, and the rest of the line — brace included — leaks into "code".
+LIFETIME_FIXTURE = '''fn demo() {
+    emit!('r"\\"{ not code }");
+    let pat = "}{";
+}
+'''
+
+# Same class via an identifier ending in `r` (valid in edition-2015 macro
+# token trees; the analyzer must stay sound on vendored sources too).
+IDENT_FIXTURE = '''fn demo() {
+    legacy_macro!(x2r"\\"{ not code }");
+}
+'''
+
+
+def old_braces(text):
+    return [c for c in old_strip_source(text) if c in "{}"]
+
+
+def new_braces(text):
+    return [
+        t.text
+        for t in lexer.lex(text)
+        if t.kind == lexer.PUNCT and t.text in "{}"
+    ]
+
+
+class StripperRegressionTest(unittest.TestCase):
+    def test_old_stripper_miscounts_lifetime_fixture(self):
+        seen = old_braces(LIFETIME_FIXTURE)
+        # the phantom raw string leaks string-content braces and unbalances
+        self.assertNotEqual(seen, ["{", "}"])
+        self.assertNotEqual(seen.count("{"), seen.count("}"))
+
+    def test_old_stripper_miscounts_ident_fixture(self):
+        self.assertNotEqual(old_braces(IDENT_FIXTURE), ["{", "}"])
+
+    def test_engine_counts_exactly_the_fn_braces(self):
+        self.assertEqual(new_braces(LIFETIME_FIXTURE), ["{", "}"])
+        self.assertEqual(new_braces(IDENT_FIXTURE), ["{", "}"])
+
+    def test_balance_pass_clean_on_fixtures(self):
+        for text in (LIFETIME_FIXTURE, IDENT_FIXTURE):
+            src = make_source(text)
+            self.assertEqual(structural.check_file(src), [])
+
+    def test_balance_pass_still_catches_real_imbalance(self):
+        src = make_source("fn f() { if x { y(); }\n")
+        findings = structural.check_file(src)
+        self.assertTrue(findings)
+        self.assertEqual(findings[0].rule, "balance")
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,163 @@
+import os
+import tempfile
+import unittest
+
+from lintest import findings_of, make_ctx
+
+from engine.passes import unsafe_inventory
+
+DOCUMENTED = (
+    "fn grab(&self) -> &T {\n"
+    "    // SAFETY: the slot was initialized by push() and no other reader\n"
+    "    // exists while the guard is held.\n"
+    "    unsafe { &*self.ptr }\n"
+    "}\n"
+)
+
+
+class RepoCase(unittest.TestCase):
+    """Base: a temp repo dir so baseline reads/writes stay isolated."""
+
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.repo = self._tmp.name
+        os.makedirs(os.path.join(self.repo, "python", "lints"))
+        self.addCleanup(self._tmp.cleanup)
+
+    def ctx_with_baseline(self, files):
+        """Write a baseline from `files`, then return a fresh ctx over them."""
+        unsafe_inventory.write_baseline(make_ctx(files, self.repo))
+        return make_ctx(files, self.repo)
+
+
+class RationaleTest(RepoCase):
+    def run_rationale(self, text):
+        ctx = self.ctx_with_baseline({"rust/src/a.rs": text})
+        unsafe_inventory.run(ctx)
+        return [
+            f
+            for f in findings_of(ctx, "unsafe-inventory")
+            if "SAFETY" in f.msg
+        ]
+
+    def test_safety_comment_above(self):
+        self.assertEqual(self.run_rationale(DOCUMENTED), [])
+
+    def test_safety_comment_block_first_line(self):
+        # keyword on the *first* line of a tall comment block: the window
+        # only reaches 3 lines up, so block expansion must find it
+        text = (
+            "fn grab(&self) -> &T {\n"
+            "    // SAFETY: a long rationale whose keyword line scrolls\n"
+            "    // out of the 3-line window because the explanation\n"
+            "    // continues for several lines before the site,\n"
+            "    // like this one does.\n"
+            "    unsafe { &*self.ptr }\n"
+            "}\n"
+        )
+        self.assertEqual(self.run_rationale(text), [])
+
+    def test_doc_safety_section(self):
+        text = (
+            "/// Reads the slot.\n"
+            "///\n"
+            "/// # Safety\n"
+            "///\n"
+            "/// Caller must hold the guard.\n"
+            "unsafe fn grab(&self) -> &T { &*self.ptr }\n"
+        )
+        self.assertEqual(self.run_rationale(text), [])
+
+    def test_missing_rationale(self):
+        fs = self.run_rationale("fn grab(&self) -> &T { unsafe { &*self.ptr } }\n")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("without a `// SAFETY:`", fs[0].msg)
+
+    def test_unrelated_comment_is_not_a_rationale(self):
+        fs = self.run_rationale(
+            "fn grab(&self) -> &T {\n"
+            "    // fast path\n"
+            "    unsafe { &*self.ptr }\n"
+            "}\n"
+        )
+        self.assertEqual(len(fs), 1)
+
+
+class BaselineTest(RepoCase):
+    def test_missing_baseline_is_a_finding(self):
+        ctx = make_ctx({"rust/src/a.rs": DOCUMENTED}, self.repo)
+        unsafe_inventory.run(ctx)
+        fs = findings_of(ctx, "unsafe-inventory")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("baseline file missing", fs[0].msg)
+
+    def test_matching_baseline_clean(self):
+        ctx = self.ctx_with_baseline({"rust/src/a.rs": DOCUMENTED})
+        unsafe_inventory.run(ctx)
+        self.assertEqual(findings_of(ctx, "unsafe-inventory"), [])
+        inv = ctx.report.tables["unsafe_inventory"]
+        self.assertEqual(len(inv), 1)
+        self.assertEqual(inv[0]["item"], "fn grab")
+        self.assertEqual(inv[0]["kind"], "block")
+
+    def test_new_unsafe_is_baseline_drift(self):
+        self.ctx_with_baseline({"rust/src/a.rs": DOCUMENTED})
+        grown = DOCUMENTED + (
+            "fn grab2(&self) -> &T {\n"
+            "    // SAFETY: same argument as grab().\n"
+            "    unsafe { &*self.ptr }\n"
+            "}\n"
+        )
+        ctx = make_ctx({"rust/src/a.rs": grown}, self.repo)
+        unsafe_inventory.run(ctx)
+        fs = findings_of(ctx, "unsafe-inventory")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("not in the baseline", fs[0].msg)
+        self.assertIn("grab2", fs[0].msg)
+
+    def test_removed_unsafe_is_stale_baseline(self):
+        self.ctx_with_baseline({"rust/src/a.rs": DOCUMENTED})
+        ctx = make_ctx({"rust/src/a.rs": "fn grab(&self) -> u32 { 0 }\n"}, self.repo)
+        unsafe_inventory.run(ctx)
+        fs = findings_of(ctx, "unsafe-inventory")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("no longer exists", fs[0].msg)
+
+    def test_moved_code_does_not_churn_baseline(self):
+        # the key is (file, item, kind) with a count — reordering items in the
+        # file changes every line number but must not produce drift
+        self.ctx_with_baseline(
+            {"rust/src/a.rs": "fn other() {}\n\n\n" + DOCUMENTED}
+        )
+        ctx = make_ctx({"rust/src/a.rs": DOCUMENTED + "\nfn other() {}\n"}, self.repo)
+        unsafe_inventory.run(ctx)
+        self.assertEqual(findings_of(ctx, "unsafe-inventory"), [])
+
+    def test_unsafe_impl_keyed_by_token_tail(self):
+        text = (
+            "// SAFETY: T: Send suffices — the cell adds no sharing.\n"
+            "unsafe impl<T: Send> Send for Cell<T> {}\n"
+        )
+        ctx = self.ctx_with_baseline({"rust/src/a.rs": text})
+        unsafe_inventory.run(ctx)
+        self.assertEqual(findings_of(ctx, "unsafe-inventory"), [])
+        inv = ctx.report.tables["unsafe_inventory"]
+        self.assertEqual(inv[0]["kind"], "impl")
+
+    def test_test_code_not_inventoried(self):
+        ctx = self.ctx_with_baseline(
+            {
+                "rust/src/a.rs": (
+                    "#[cfg(test)]\nmod t {\n"
+                    "    fn f(p: *const u8) { unsafe { p.read() }; }\n"
+                    "}\n"
+                )
+            }
+        )
+        unsafe_inventory.run(ctx)
+        self.assertEqual(findings_of(ctx, "unsafe-inventory"), [])
+        self.assertEqual(ctx.report.tables["unsafe_inventory"], [])
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,113 @@
+import unittest
+
+from lintest import make_ctx, make_source
+
+from engine.report import Finding
+
+
+def apply(files, findings):
+    ctx = make_ctx(files)
+    ctx.report.extend(findings)
+    ctx.report.apply_waivers(ctx.sources)
+    return ctx
+
+
+class WaiverParseTest(unittest.TestCase):
+    def test_unscoped_and_scoped(self):
+        src = make_source(
+            "fn f() { x(); } // lint-ok: exempt for reasons\n"
+            "fn g() { y(); } // lint-ok(no-unwrap, balance): more reasons\n"
+        )
+        self.assertEqual(len(src.waivers), 2)
+        self.assertIsNone(src.waivers[0].rules)
+        self.assertEqual(src.waivers[1].rules, frozenset({"no-unwrap", "balance"}))
+        self.assertEqual(src.waivers[0].reason, "exempt for reasons")
+
+    def test_waiver_in_string_is_not_a_waiver(self):
+        src = make_source('fn f() { let s = "// lint-ok: nope"; }\n')
+        self.assertEqual(src.waivers, [])
+
+
+class WaiverApplyTest(unittest.TestCase):
+    FILES = {
+        "rust/src/a.rs": (
+            "fn f() { x.unwrap(); } // lint-ok(no-unwrap): init-time, cannot fail\n"
+        )
+    }
+
+    def test_scoped_waiver_suppresses_matching_rule(self):
+        ctx = apply(self.FILES, [Finding("no-unwrap", "rust/src/a.rs", 1, "unwrap")])
+        self.assertEqual(ctx.report.active(), [])
+        self.assertEqual(len(ctx.report.findings), 1)
+        self.assertIsNotNone(ctx.report.findings[0].waived_by)
+
+    def test_scoped_waiver_does_not_cover_other_rules(self):
+        ctx = apply(self.FILES, [Finding("balance", "rust/src/a.rs", 1, "brace")])
+        active = ctx.report.active()
+        # the balance finding survives AND the no-unwrap waiver is now unused
+        rules = sorted(f.rule for f in active)
+        self.assertEqual(rules, ["balance", "waiver-hygiene"])
+
+    def test_anchor_line_waiver(self):
+        # a promise-lifecycle leak reported at the exit line may be waived at
+        # the binding line carried in anchor_lines
+        files = {
+            "rust/src/a.rs": (
+                "fn f() {\n"
+                "    let p = mint(); // lint-ok(promise-lifecycle): guard is exhaustive\n"
+                "    return;\n"
+                "}\n"
+            )
+        }
+        f = Finding("promise-lifecycle", "rust/src/a.rs", 3, "leak", anchor_lines=(2,))
+        ctx = apply(files, [f])
+        self.assertEqual(ctx.report.active(), [])
+
+    def test_unused_waiver_is_a_finding(self):
+        ctx = apply(self.FILES, [])
+        active = ctx.report.active()
+        self.assertEqual(len(active), 1)
+        self.assertEqual(active[0].rule, "waiver-hygiene")
+        self.assertIn("unused waiver", active[0].msg)
+        self.assertIn("no-unwrap", active[0].msg)
+
+    def test_empty_reason_is_a_finding(self):
+        files = {"rust/src/a.rs": "fn f() { x.unwrap(); } // lint-ok(no-unwrap):\n"}
+        ctx = apply(files, [Finding("no-unwrap", "rust/src/a.rs", 1, "unwrap")])
+        active = ctx.report.active()
+        self.assertTrue(any("without a reason" in f.msg for f in active))
+
+    def test_test_region_waivers_exempt(self):
+        # waivers inside #[cfg(test)] can never be used (test code is out of
+        # every rule's scope) — they must not be flagged as unused
+        files = {
+            "rust/src/a.rs": (
+                "#[cfg(test)]\nmod t {\n"
+                "    fn f() { x.unwrap(); } // lint-ok: test scaffolding\n"
+                "}\n"
+            )
+        }
+        ctx = apply(files, [])
+        self.assertEqual(ctx.report.active(), [])
+
+    def test_waiver_budget(self):
+        ctx = apply(self.FILES, [Finding("no-unwrap", "rust/src/a.rs", 1, "unwrap")])
+        budget = ctx.report.waiver_budget(ctx.sources)
+        self.assertEqual(
+            budget["no-unwrap"], {"waived_findings": 1, "waiver_sites": 1}
+        )
+
+    def test_json_report_carries_waiver(self):
+        import json
+
+        ctx = apply(self.FILES, [Finding("no-unwrap", "rust/src/a.rs", 1, "unwrap")])
+        doc = json.loads(ctx.report.to_json(ctx.sources))
+        self.assertEqual(doc["active_findings"], 0)
+        self.assertEqual(len(doc["findings"]), 1)
+        self.assertEqual(
+            doc["findings"][0]["waived"]["reason"], "init-time, cannot fail"
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()

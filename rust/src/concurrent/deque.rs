@@ -250,6 +250,10 @@ impl<T> WorkDeque<T> {
 
 impl<T> Drop for WorkDeque<T> {
     fn drop(&mut self) {
+        // SAFETY: exclusive access (&mut self) — no owner or stealer is
+        // live, so top/bottom are quiescent, slots in t..b are initialized
+        // and uniquely ours to drop, and the current + retired buffer
+        // allocations are uniquely ours to free.
         unsafe {
             let t = self.top.load(Ordering::Relaxed);
             let b = self.bottom.load(Ordering::Relaxed);

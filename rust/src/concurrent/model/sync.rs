@@ -438,8 +438,9 @@ pub struct UnsafeCell<T: ?Sized> {
     data: std::cell::UnsafeCell<T>,
 }
 
-// mirrors std::cell::UnsafeCell: Send iff T: Send; never Sync — the
-// wrapping type opts in, exactly as with the std cell
+// SAFETY: mirrors std::cell::UnsafeCell — Send iff T: Send (the Reg is a
+// plain integer id); never Sync, the wrapping type opts in, exactly as
+// with the std cell.
 unsafe impl<T: ?Sized + Send> Send for UnsafeCell<T> {}
 
 impl<T> UnsafeCell<T> {
@@ -522,6 +523,9 @@ pub struct Mutex<T: ?Sized> {
     data: std::cell::UnsafeCell<T>,
 }
 
+// SAFETY: same bounds as std::sync::Mutex — the raw lock (outside the
+// model) or the checker's lock registry (inside it) serializes every
+// access to `data`, so sharing needs only T: Send.
 unsafe impl<T: ?Sized + Send> Send for Mutex<T> {}
 unsafe impl<T: ?Sized + Send> Sync for Mutex<T> {}
 

@@ -83,6 +83,10 @@ impl<T> MpscQueue<T> {
         if next.is_null() {
             return None;
         }
+        // SAFETY: same exclusivity — `next` was published by the producer's
+        // Release link (Acquire-loaded above) and only this consumer unlinks;
+        // the old `tail` stub is now unreachable, so Box::from_raw is the
+        // unique owner.
         self.tail.with_mut(|p| unsafe { *p = next });
         let value = unsafe { (*next).value.take() };
         drop(unsafe { Box::from_raw(tail) });
@@ -92,8 +96,9 @@ impl<T> MpscQueue<T> {
 
 impl<T> Drop for MpscQueue<T> {
     fn drop(&mut self) {
-        // Exclusive access: all producer pushes happened-before (&mut), so
-        // every link is visible and pop() drains everything.
+        // SAFETY: exclusive access (&mut self) — all producer pushes
+        // happened-before, so every link is visible, pop() drains
+        // everything, and the remaining stub node is uniquely ours to free.
         while self.pop().is_some() {}
         unsafe {
             drop(Box::from_raw(*self.tail.get()));

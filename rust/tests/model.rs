@@ -18,7 +18,9 @@
 //! * Chase–Lev `steal` vs `take` on a one-element deque and `steal` vs
 //!   buffer growth;
 //! * parker token loss (the seed scheduler's 10 ms-poll papered-over bug);
-//! * `Event::poll`/`wait` lock-free fast path vs `complete`.
+//! * `Event::poll`/`wait` lock-free fast path vs `complete`;
+//! * `FutureSlot` reply-`resolve` vs reaper-timeout `resolve` — the
+//!   Pending→Done claim must be atomic for exactly-once delivery.
 
 #![cfg(feature = "model")]
 // invariants below are written in their natural "never (bad shape)" form
@@ -389,6 +391,71 @@ fn parker_unpark_before_or_during_park_is_never_lost() {
         p.park(); // must consume the (possibly banked) token on every schedule
         t.join().expect("model thread");
     });
+}
+
+// ---------------------------------------------------------------------------
+// FutureSlot: reply resolve vs reaper timeout
+
+const PENDING: u8 = 0;
+const DONE: u8 = 1;
+
+/// One side's attempt to resolve the slot. The production shape
+/// (`ask.rs::FutureSlot::resolve` — check-and-transition under one mutex
+/// hold, modeled as a single CAS) claims atomically; the weakened twin
+/// splits it into a check-then-store with a TOCTOU window.
+fn future_slot_claim(atomic_claim: bool, state: &AtomicU8, delivered: &AtomicU64) {
+    let won = if atomic_claim {
+        state
+            .compare_exchange(PENDING, DONE, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    } else if state.load(Ordering::Acquire) == PENDING {
+        state.store(DONE, Ordering::Release);
+        true
+    } else {
+        false
+    };
+    if won {
+        delivered.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// One slice of the `ask` endgame: the reply delivery and the
+/// `PendingReaper`'s timeout failure race to transition the same slot
+/// Pending→Done, and the loser must observe Done and back off — hooks run
+/// once, `wait` wakes once.
+fn future_slot_slice(atomic_claim: bool) {
+    let state = Arc::new(AtomicU8::new(PENDING));
+    let delivered = Arc::new(AtomicU64::new(0));
+    let (st2, dl2) = (state.clone(), delivered.clone());
+    let timeout = model::thread::spawn(move || {
+        future_slot_claim(atomic_claim, &st2, &dl2);
+    });
+    // the reply side, on the main thread
+    future_slot_claim(atomic_claim, &state, &delivered);
+    timeout.join().expect("model thread");
+    assert_eq!(state.load(Ordering::SeqCst), DONE, "slot left Pending");
+    assert_eq!(
+        delivered.load(Ordering::SeqCst),
+        1,
+        "FutureSlot must resolve exactly once: reply or timeout, never both"
+    );
+}
+
+/// The production claim survives every interleaving: exactly one of
+/// reply/timeout delivers, the other sees Done and backs off.
+#[test]
+fn future_slot_resolve_vs_timeout_exactly_once() {
+    model::check(|| future_slot_slice(true));
+}
+
+/// Splitting the claim (dropping the mutex for a naive flag check) opens
+/// the window where both sides observe Pending and both deliver. The
+/// checker must find that double delivery, proving the atomic claim is
+/// load-bearing.
+#[test]
+#[should_panic(expected = "counterexample")]
+fn future_slot_split_claim_double_delivery_is_caught() {
+    model::check(|| future_slot_slice(false));
 }
 
 // ---------------------------------------------------------------------------
