@@ -72,8 +72,13 @@ PROMISE_INSPECT = {
 # never be decremented. Attribution is by *field name* — same-named gauges
 # on different structs share a ledger (documented approximation; it errs
 # toward fewer findings, never more).
-BALANCED_GAUGES = ("inflight", "routed", "batch_pending", "launched")
-MONOTONIC_COUNTERS = ("overloaded", "shed", "deadline", "deadline_failed")
+# `pipe_pending` is the pipeline drivers' occupancy gauge (ISSUE 10): a
+# whole pipeline admission increments it once, retirement decrements via a
+# saturating fetch_update, and the dispatcher steers on it — so a leak
+# would silently starve a replica. `migrations` counts explicit
+# device-to-device transfers and only ever grows.
+BALANCED_GAUGES = ("inflight", "routed", "batch_pending", "launched", "pipe_pending")
+MONOTONIC_COUNTERS = ("overloaded", "shed", "deadline", "deadline_failed", "migrations")
 
 # P4: unsafe inventory baseline (checked in; --update-baseline rewrites).
 UNSAFE_BASELINE = os.path.join("python", "lints", "unsafe_baseline.json")

@@ -75,6 +75,48 @@ class CrateWideBalanceTest(unittest.TestCase):
         self.assertEqual(len(fs), 1)
         self.assertIn("monotonic counter `shed`", fs[0].msg)
 
+    def test_pipeline_occupancy_gauge_is_in_the_ledger(self):
+        # ISSUE 10: the pipeline drivers' occupancy gauge joins the
+        # balanced set — an admit with no retire anywhere is a finding,
+        # and the production shape (fetch_add + saturating fetch_update)
+        # balances
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) "
+                    "{ self.pipe_pending.fetch_add(1, Ordering::Relaxed); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "gauge-balance")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("pipe_pending", fs[0].msg)
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn admit(&self) "
+                    "{ self.pipe_pending.fetch_add(1, Ordering::Relaxed); }\n"
+                    "fn retire(&self) { self.pipe_pending.fetch_update(Ordering::Relaxed, "
+                    "Ordering::Relaxed, |v| Some(v.saturating_sub(1))); }"
+                )
+            }
+        )
+        self.assertEqual(findings_of(ctx, "gauge-balance"), [])
+
+    def test_migration_counter_is_monotonic(self):
+        # ISSUE 10: explicit device-to-device transfers only ever grow
+        ctx = run_on(
+            {
+                "rust/src/a.rs": (
+                    "fn oops(&self) "
+                    "{ self.migrations.fetch_sub(1, Ordering::Relaxed); }"
+                )
+            }
+        )
+        fs = findings_of(ctx, "gauge-balance")
+        self.assertEqual(len(fs), 1)
+        self.assertIn("monotonic counter `migrations`", fs[0].msg)
+
     def test_test_code_is_out_of_scope(self):
         ctx = run_on(
             {

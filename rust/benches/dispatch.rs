@@ -1,6 +1,6 @@
 //! Dispatch & batching: the placement-tier probe (PERF.md).
 //!
-//! Three comparisons over host-emulated kernels on simulated sub-second
+//! Four comparisons over host-emulated kernels on simulated sub-second
 //! devices (per-command launch padding, no artifacts or XLA backend
 //! needed, so this runs everywhere — including the `--no-default-features`
 //! CI config):
@@ -15,6 +15,10 @@
 //!    `PlacementPolicy::CostAware` vs `RoundRobin` on a fast/Phi-like
 //!    device pair: small requests must route around the 20x dispatch pad,
 //!    large (transfer-dominated) ones may spill onto it.
+//! 4. **Placement-tier pipelines** — composed 3-stage pipelines vs one
+//!    monolithic launch (latency), interleaved vs lock-step stage
+//!    scheduling (throughput + in-flight peaks), and stranded-ref
+//!    recovery by device-to-device migration vs host re-upload.
 //!
 //! Writes `BENCH_dispatch.json` at the repository root. Smoke mode for CI:
 //! `DISPATCH_BENCH_SMOKE=1` runs one tiny iteration of each scenario so
@@ -23,9 +27,10 @@
 
 use caf_ocl::bench::{
     dispatch_batched_costaware_probe, dispatch_batching_probe, dispatch_costaware_probe,
-    dispatch_placement_probe, write_batched_costaware_manifest, write_costaware_manifest,
-    write_dispatch_json, write_dispatch_manifest, BatchedCostAwareProbeConfig,
-    CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
+    dispatch_pipeline_probe, dispatch_placement_probe, write_batched_costaware_manifest,
+    write_costaware_manifest, write_dispatch_json, write_dispatch_manifest,
+    BatchedCostAwareProbeConfig, CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
+    PipelineProbeConfig,
 };
 use std::time::Duration;
 
@@ -122,6 +127,31 @@ fn main() {
         bc.multishape_coalescing_ratio
     );
 
+    // placement-tier pipelines: composition overhead, stage scheduling,
+    // and stranded-ref recovery (migration vs host re-upload)
+    let pipe_cfg = PipelineProbeConfig {
+        launch: cfg.launch,
+        requests: if smoke { 4 } else { 24 },
+        capacity: cfg.capacity,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+    };
+    let pipe = dispatch_pipeline_probe(&pipe_cfg);
+    println!(
+        "pipeline : monolithic {:.2} ms/req | composed {:.2} ms/req ({:.2}x)  |  \
+         lockstep {:>8.1} req/s (peak {}) | interleaved {:>8.1} req/s (peak {})  |  \
+         recovery: migrate {:.2} ms vs re-upload {:.2} ms ({} transfers)",
+        pipe.monolithic_ms_per_req,
+        pipe.composed_ms_per_req,
+        pipe.composed_ms_per_req / pipe.monolithic_ms_per_req.max(1e-9),
+        pipe.lockstep_reqs_per_sec,
+        pipe.lockstep_inflight_peak,
+        pipe.interleaved_reqs_per_sec,
+        pipe.interleaved_inflight_peak,
+        pipe.migration_recovery_ms,
+        pipe.reupload_recovery_ms,
+        pipe.migrations
+    );
+
     let results = DispatchResults {
         devices: cfg.devices,
         requests: cfg.requests,
@@ -135,6 +165,7 @@ fn main() {
         cost_aware_small: ca_small,
         cost_aware_large: ca_large,
         batched_costaware: bc,
+        pipeline: pipe,
     };
     match write_dispatch_json(&results, "cargo bench --bench dispatch") {
         Ok(p) => println!("-> {}", p.display()),

@@ -18,8 +18,11 @@
 //!
 //! Writes `BENCH_soak.json` at the repository root. Smoke mode for CI:
 //! `SOAK_BENCH_SMOKE=1` shrinks the soak to ~1s arms so the harness cannot
-//! bit-rot without burning runner minutes. The reduced tier-1 twin is
-//! `cargo test --test perf_soak`.
+//! bit-rot without burning runner minutes; `CAF_OCL_BENCH_FULL=1` is the
+//! other direction — the minutes-long full-mode soak that is the
+//! documented release ritual (PERF.md "Release ritual"; CI runs it as an
+//! advisory artifact-upload job on pushes to main). The reduced tier-1
+//! twin is `cargo test --test perf_soak`.
 
 use caf_ocl::bench::{
     soak_closed_probe, soak_probe, write_soak_json, write_soak_manifest, SoakConfig, SoakRun,
@@ -57,6 +60,13 @@ fn main() {
     let smoke = std::env::var("SOAK_BENCH_SMOKE")
         .map(|v| v == "1")
         .unwrap_or(false);
+    // the release ritual (PERF.md "Release ritual"): a minutes-long soak
+    // with a full chaos budget. Smoke wins when both are set, so CI smoke
+    // jobs stay cheap no matter the environment.
+    let full = !smoke
+        && std::env::var("CAF_OCL_BENCH_FULL")
+            .map(|v| v == "1")
+            .unwrap_or(false);
     let small_elems = 64;
     let batch_max_requests = 8;
     let large_elems = 1 << 18;
@@ -71,7 +81,13 @@ fn main() {
         devices,
         launch,
         bytes_per_sec: 4.0e9,
-        duration: Duration::from_millis(if smoke { 1000 } else { 8000 }),
+        duration: Duration::from_millis(if smoke {
+            1000
+        } else if full {
+            60_000
+        } else {
+            8000
+        }),
         offered_rps: 2000.0,
         drivers: 32,
         small_elems,
@@ -81,7 +97,13 @@ fn main() {
         max_inflight: 16,
         max_queue_wait: Duration::from_millis(250),
         chaos_interval: Duration::from_millis(if smoke { 400 } else { 1500 }),
-        chaos_kills: if smoke { 1 } else { 4 },
+        chaos_kills: if smoke {
+            1
+        } else if full {
+            32
+        } else {
+            4
+        },
         seed: 0x50a4,
         artifacts_dir: write_soak_manifest(
             "bench",
@@ -99,7 +121,13 @@ fn main() {
         cfg.drivers,
         cfg.chaos_interval,
         cfg.chaos_kills,
-        if smoke { " (smoke)" } else { "" }
+        if smoke {
+            " (smoke)"
+        } else if full {
+            " (full-mode release ritual)"
+        } else {
+            ""
+        }
     );
 
     let on = soak_probe(&cfg, true);

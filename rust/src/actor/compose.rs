@@ -5,7 +5,9 @@
 //! function composition, `h(x) = f(g(x))`. Realized with a response promise
 //! for the original requester plus chained request continuations, exactly
 //! like CAF's composed actors. OpenCL kernel pipelines (`opencl::stage`)
-//! build on this operator.
+//! build on this operator; the placement tier's `PipelineSpawn` keeps the
+//! same request-chaining shape but routes whole stage chains as one unit
+//! so every hop stays device-resident.
 
 use super::behavior::{Behavior, Reply};
 use super::system::ActorSystem;

@@ -445,7 +445,8 @@ pub fn write_dispatch_manifest(tag: &str, capacity: usize) -> String {
 }
 
 fn dispatch_system(
-    cfg: &DispatchProbeConfig,
+    artifacts_dir: &str,
+    launch: std::time::Duration,
     n_devices: usize,
 ) -> (crate::actor::ActorSystem, std::sync::Arc<crate::opencl::Manager>) {
     use crate::opencl::{DeviceInfo, DeviceKind, DeviceSpec, Manager};
@@ -453,7 +454,7 @@ fn dispatch_system(
     let sys = crate::actor::ActorSystem::new(
         crate::actor::SystemConfig::default()
             .with_threads(4)
-            .with_artifacts_dir(cfg.artifacts_dir.clone()),
+            .with_artifacts_dir(artifacts_dir.to_string()),
     );
     let specs = (0..n_devices)
         .map(|i| DeviceSpec {
@@ -464,7 +465,7 @@ fn dispatch_system(
                 max_work_items_per_cu: 1024,
             },
             pad: Some(PadModel {
-                launch: cfg.launch,
+                launch,
                 bytes_per_sec: 0.0,
                 compute_scale: 1.0,
                 busy_wait: false,
@@ -530,13 +531,13 @@ pub fn dispatch_placement_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
     let full: Vec<Vec<u32>> = (0..cfg.requests)
         .map(|i| vec![i as u32; cfg.capacity])
         .collect();
-    let (sys, mgr) = dispatch_system(cfg, cfg.devices);
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, cfg.devices);
     let pinned = dispatch_spawn(&mgr, Placement::Pinned, None);
     let one_device = dispatch_drive(&sys, &pinned, full.clone());
     mgr.stop_devices();
     sys.shutdown();
 
-    let (sys, mgr) = dispatch_system(cfg, cfg.devices);
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, cfg.devices);
     let replicated = dispatch_spawn(
         &mgr,
         Placement::replicated(PlacementPolicy::LeastInflight),
@@ -555,7 +556,7 @@ pub fn dispatch_batching_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
     let small: Vec<Vec<u32>> = (0..cfg.batch_requests)
         .map(|i| vec![i as u32; cfg.request_elems])
         .collect();
-    let (sys, mgr) = dispatch_system(cfg, 1);
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, 1);
     let plain = dispatch_spawn(&mgr, Placement::Pinned, None);
     // the status quo for sub-capacity work: every caller pads to capacity
     let padded: Vec<Vec<u32>> = small
@@ -570,7 +571,7 @@ pub fn dispatch_batching_probe(cfg: &DispatchProbeConfig) -> (f64, f64) {
     mgr.stop_devices();
     sys.shutdown();
 
-    let (sys, mgr) = dispatch_system(cfg, 1);
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, 1);
     let batcher = dispatch_spawn(
         &mgr,
         Placement::Pinned,
@@ -883,6 +884,246 @@ pub fn dispatch_batched_costaware_probe(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Placement-tier pipelines (PERF.md): the pipeline probe. Three
+// comparisons over the same stub copy kernel:
+//
+// 1. **Composed vs monolithic** — a request through the 3-stage pipeline
+//    driver (three launches, device-resident hand-off) vs the same data
+//    through one monolithic launch: the per-request latency price of
+//    composition is the extra launch pads, never a host round-trip.
+// 2. **Interleaved vs lock-step** — the same replicated pipeline under
+//    `PipelineMode::Interleaved` and `PipelineMode::LockStep` serving a
+//    concurrent burst: requests/second plus the `ExecStats` in-flight
+//    high-water mark proving stage launches of different requests
+//    actually overlapped (lock-step pins the peak at exactly 1).
+// 3. **Migration vs re-upload** — a ref stranded on a dead replica's
+//    device, once with `ReplicaSet::migrate(true)` (the dispatcher
+//    device-to-device-copies and reschedules) and once without (routed
+//    error; the caller recovers by re-uploading its host copy to a live
+//    device): wall-clock to a correct result either way.
+// ---------------------------------------------------------------------------
+
+/// Config of the placement-tier pipeline probe.
+#[derive(Clone, Debug)]
+pub struct PipelineProbeConfig {
+    /// Fixed per-command launch pad of every simulated device.
+    pub launch: std::time::Duration,
+    /// Requests per latency/throughput measurement.
+    pub requests: usize,
+    /// Elements per request (== the stub kernel's capacity).
+    pub capacity: usize,
+    /// Artifacts dir holding the probe's stub manifest.
+    pub artifacts_dir: String,
+}
+
+/// Results of the placement-tier pipeline probe.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineResults {
+    /// Stages of the probe pipeline (Val -> Ref -> Ref -> Val).
+    pub stages: usize,
+    pub requests: usize,
+    pub capacity: usize,
+    /// Per-request latency of one monolithic launch...
+    pub monolithic_ms_per_req: f64,
+    /// ...vs the same request through the 3-stage pipeline driver.
+    pub composed_ms_per_req: f64,
+    pub interleaved_reqs_per_sec: f64,
+    pub lockstep_reqs_per_sec: f64,
+    /// `ExecStats` in-flight high-water marks of the two modes.
+    pub interleaved_inflight_peak: u64,
+    pub lockstep_inflight_peak: u64,
+    /// Wall-clock ms from stranded-ref request to a correct result with
+    /// migration ON (device-to-device reroute)...
+    pub migration_recovery_ms: f64,
+    /// ...and OFF (routed error + host-copy re-upload to a live device).
+    pub reupload_recovery_ms: f64,
+    /// Explicit transfers the source device counted in the migration arm.
+    pub migrations: u64,
+}
+
+/// The probe's 3-stage copy pipeline (Val -> Ref -> Ref -> Val): the
+/// smallest shape with device-resident hand-off between interior stages.
+fn pipeline_3stage_spawn(
+    mgr: &crate::opencl::Manager,
+    placement: crate::opencl::Placement,
+    mode: crate::opencl::PipelineMode,
+) -> crate::opencl::PipelineSpawn {
+    use crate::opencl::{KernelSpawn, Mode, PipelineSpawn};
+    let program = mgr.create_kernel_program("copy_u32").expect("stub program");
+    let stage = |in_mode: Mode, out: Mode| {
+        KernelSpawn::new(program.clone(), "copy_u32")
+            .inputs(in_mode, 1)
+            .output(out)
+    };
+    PipelineSpawn::new()
+        .stage(stage(Mode::Val, Mode::Ref))
+        .stage(stage(Mode::Ref, Mode::Ref))
+        .stage(stage(Mode::Ref, Mode::Val))
+        .placement(placement)
+        .mode(mode)
+}
+
+/// Composed-vs-monolithic latency: sequential per-request milliseconds of
+/// one monolithic launch vs the 3-stage driver on one pinned device.
+fn pipeline_latency_run(cfg: &PipelineProbeConfig) -> (f64, f64) {
+    use crate::opencl::{Placement, PipelineMode};
+    let run = |driver: &crate::actor::ActorRef, sys: &crate::actor::ActorSystem| -> f64 {
+        let me = sys.scoped();
+        let t0 = Instant::now();
+        for i in 0..cfg.requests {
+            let _: Vec<u32> = me
+                .request(driver, vec![i as u32; cfg.capacity])
+                .receive(std::time::Duration::from_secs(120))
+                .expect("pipeline latency request");
+        }
+        t0.elapsed().as_secs_f64() * 1e3 / cfg.requests.max(1) as f64
+    };
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, 1);
+    let mono = dispatch_spawn(&mgr, Placement::Pinned, None);
+    let monolithic_ms = run(&mono, &sys);
+    mgr.stop_devices();
+    sys.shutdown();
+
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, 1);
+    let driver = mgr
+        .spawn_pipeline(pipeline_3stage_spawn(
+            &mgr,
+            Placement::Device(0),
+            PipelineMode::Interleaved,
+        ))
+        .expect("pipeline latency spawn");
+    let composed_ms = run(&driver, &sys);
+    mgr.stop_devices();
+    sys.shutdown();
+    (monolithic_ms, composed_ms)
+}
+
+/// One stage-scheduling arm: (reqs/sec, in-flight peak) of `mode` on a
+/// single-device replicated pipeline serving a concurrent burst.
+fn pipeline_mode_run(cfg: &PipelineProbeConfig, mode: crate::opencl::PipelineMode) -> (f64, u64) {
+    use crate::opencl::{Placement, PlacementPolicy, ReplicaSet};
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, 1);
+    let handle = mgr
+        .spawn_pipeline_replicated(pipeline_3stage_spawn(
+            &mgr,
+            Placement::Replicated(ReplicaSet::new(PlacementPolicy::RoundRobin)),
+            mode,
+        ))
+        .expect("pipeline mode spawn");
+    let payloads: Vec<Vec<u32>> = (0..cfg.requests)
+        .map(|i| vec![i as u32; cfg.capacity])
+        .collect();
+    let rps = dispatch_drive(&sys, &handle.actor, payloads);
+    let peak = mgr.device(0).expect("probe device").queue.stats().inflight_peak();
+    mgr.stop_devices();
+    sys.shutdown();
+    (rps, peak)
+}
+
+/// One recovery arm: strand a ref on a dead replica's device, then time
+/// the wall-clock to a correct result. With `migrate` the dispatcher
+/// reroutes; without it the caller receives the routed error and
+/// re-uploads its host copy to the surviving device.
+fn pipeline_migration_run(cfg: &PipelineProbeConfig, migrate: bool) -> (f64, u64) {
+    use crate::actor::{Exit, Message};
+    use crate::opencl::{KernelSpawn, MemRef, Mode, Placement, PlacementPolicy, ReplicaSet};
+    let t = std::time::Duration::from_secs(120);
+    let (sys, mgr) = dispatch_system(&cfg.artifacts_dir, cfg.launch, 2);
+    let program = mgr.create_kernel_program("copy_u32").expect("stub program");
+    let produce_on = |dev: usize| {
+        mgr.spawn_cl(
+            KernelSpawn::new(program.clone(), "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Ref)
+                .placement(Placement::Device(dev)),
+        )
+        .expect("producer spawn")
+    };
+    let doomed_producer = produce_on(1);
+    let live_producer = produce_on(0);
+    let consumer = mgr
+        .spawn_cl_replicated(
+            KernelSpawn::new(program.clone(), "copy_u32")
+                .inputs(Mode::Ref, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(
+                    ReplicaSet::new(PlacementPolicy::RoundRobin).migrate(migrate),
+                )),
+        )
+        .expect("consumer spawn");
+    let me = sys.scoped();
+    let data: Vec<u32> = (0..cfg.capacity as u32).collect();
+    let stranded: MemRef = me
+        .request(&doomed_producer, data.clone())
+        .receive(t)
+        .expect("produce stranded ref");
+    consumer.pool.replicas()[1]
+        .facade()
+        .send_from(None, Message::new(Exit::fault("pipeline probe kill")));
+    let killed = Instant::now();
+    while consumer.pool.replicas()[1].is_alive() {
+        assert!(
+            killed.elapsed() < std::time::Duration::from_secs(10),
+            "probe replica never died"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let t0 = Instant::now();
+    let out: Vec<u32> = match me.request(&consumer.actor, stranded).receive(t) {
+        Ok(v) => v,
+        Err(e) => {
+            assert!(
+                !migrate,
+                "migration arm must reroute, not error: {}",
+                e.reason
+            );
+            let re: MemRef = me
+                .request(&live_producer, data.clone())
+                .receive(t)
+                .expect("recovery re-upload");
+            me.request(&consumer.actor, re)
+                .receive(t)
+                .expect("recovery relaunch")
+        }
+    };
+    let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(out, data, "recovery must reproduce the stranded data");
+    let migrations = mgr
+        .device(1)
+        .expect("source device")
+        .queue
+        .stats()
+        .migrations();
+    mgr.stop_devices();
+    sys.shutdown();
+    (recovery_ms, migrations)
+}
+
+/// The full pipeline probe.
+pub fn dispatch_pipeline_probe(cfg: &PipelineProbeConfig) -> PipelineResults {
+    use crate::opencl::PipelineMode;
+    let (monolithic_ms, composed_ms) = pipeline_latency_run(cfg);
+    let (inter_rps, inter_peak) = pipeline_mode_run(cfg, PipelineMode::Interleaved);
+    let (lock_rps, lock_peak) = pipeline_mode_run(cfg, PipelineMode::LockStep);
+    let (migration_ms, migrations) = pipeline_migration_run(cfg, true);
+    let (reupload_ms, _) = pipeline_migration_run(cfg, false);
+    PipelineResults {
+        stages: 3,
+        requests: cfg.requests,
+        capacity: cfg.capacity,
+        monolithic_ms_per_req: monolithic_ms,
+        composed_ms_per_req: composed_ms,
+        interleaved_reqs_per_sec: inter_rps,
+        lockstep_reqs_per_sec: lock_rps,
+        interleaved_inflight_peak: inter_peak,
+        lockstep_inflight_peak: lock_peak,
+        migration_recovery_ms: migration_ms,
+        reupload_recovery_ms: reupload_ms,
+        migrations,
+    }
+}
+
 /// Results of one `cargo bench --bench dispatch` run.
 #[derive(Clone, Copy, Debug)]
 pub struct DispatchResults {
@@ -911,6 +1152,10 @@ pub struct DispatchResults {
     /// Cost-aware steering over BATCHED replicas (occupancy-gauge routing)
     /// plus the multi-shape coalescing measurement.
     pub batched_costaware: BatchedCostAwareResult,
+    /// Placement-tier pipelines: composed-vs-monolithic latency,
+    /// interleaved-vs-lock-step scheduling, migration-vs-re-upload
+    /// recovery.
+    pub pipeline: PipelineResults,
 }
 
 /// Write `BENCH_dispatch.json` (repo root when run from `rust/`, else the
@@ -968,6 +1213,31 @@ pub fn write_dispatch_json(
         bc.multishape_fused_launches,
         bc.multishape_coalescing_ratio
     );
+    let p = &r.pipeline;
+    let pipeline_json = format!(
+        "{{\"stages\": {}, \"requests\": {}, \"capacity\": {},\n    \
+         \"latency\": {{\"monolithic_ms_per_req\": {:.3}, \
+         \"composed_ms_per_req\": {:.3}, \"overhead\": {:.3}}},\n    \
+         \"scheduling\": {{\"interleaved_reqs_per_sec\": {:.1}, \
+         \"lockstep_reqs_per_sec\": {:.1}, \"speedup\": {:.3}, \
+         \"interleaved_inflight_peak\": {}, \"lockstep_inflight_peak\": {}}},\n    \
+         \"recovery\": {{\"migration_ms\": {:.3}, \"reupload_ms\": {:.3}, \
+         \"migrations\": {}}}}}",
+        p.stages,
+        p.requests,
+        p.capacity,
+        p.monolithic_ms_per_req,
+        p.composed_ms_per_req,
+        p.composed_ms_per_req / p.monolithic_ms_per_req.max(1e-9),
+        p.interleaved_reqs_per_sec,
+        p.lockstep_reqs_per_sec,
+        p.interleaved_reqs_per_sec / p.lockstep_reqs_per_sec.max(1e-9),
+        p.interleaved_inflight_peak,
+        p.lockstep_inflight_peak,
+        p.migration_recovery_ms,
+        p.reupload_recovery_ms,
+        p.migrations
+    );
     let json = format!(
         "{{\n  \"bench\": \"dispatch\",\n  \"generated_by\": {generated_by:?},\n  \
          \"placement\": {{\"devices\": {}, \"requests\": {}, \
@@ -978,7 +1248,8 @@ pub fn write_dispatch_json(
          \"speedup\": {:.3}}},\n  \
          \"cost_aware\": {{\"devices\": [\"steer-fast\", \"steer-phi\"],\n    \
          \"small\": {},\n    \"large\": {}}},\n  \
-         \"batched_costaware\": {}\n}}\n",
+         \"batched_costaware\": {},\n  \
+         \"pipeline\": {}\n}}\n",
         r.devices,
         r.requests,
         r.one_device_reqs_per_sec,
@@ -992,7 +1263,8 @@ pub fn write_dispatch_json(
         batching_speedup,
         side_json(&r.cost_aware_small),
         side_json(&r.cost_aware_large),
-        batched_costaware_json
+        batched_costaware_json,
+        pipeline_json
     );
     std::fs::write(&path, json)?;
     Ok(path)
@@ -1169,7 +1441,7 @@ fn soak_deploy(cfg: &SoakConfig, shedding: bool) -> SoakDeployment {
         Mode, Placement, PlacementPolicy, ReplicaSet, RespawnPolicy, ShedPolicy,
     };
     use crate::runtime::client::PadModel;
-    use crate::sim::{ChaosConfig, ChaosSchedule};
+    use crate::sim::{ChaosConfig, ChaosFault, ChaosSchedule};
 
     let sys = ActorSystem::new(
         SystemConfig::default()
@@ -1244,6 +1516,7 @@ fn soak_deploy(cfg: &SoakConfig, shedding: bool) -> SoakDeployment {
             interval: cfg.chaos_interval,
             max_kills: cfg.chaos_kills,
             seed: cfg.seed ^ 0x5eed,
+            fault: ChaosFault::Kill,
         },
     );
     SoakDeployment {

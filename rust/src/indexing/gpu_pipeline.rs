@@ -14,7 +14,7 @@
 use super::cpu_index::WahIndex;
 use super::{CFG, INVALID};
 use crate::actor::{compose, ActorRef, Message, ScopedActor};
-use crate::opencl::{ArgValue, KernelSpawn, Manager, Mode};
+use crate::opencl::{ArgValue, KernelSpawn, Manager, Mode, Placement, PipelineSpawn, Program};
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 use std::time::Duration;
@@ -63,6 +63,85 @@ fn post_ctx(
     }
 }
 
+/// The per-stage spawn configs — kernel names, argument modes, and the
+/// context-threading pre/post mappers — shared by the composed
+/// [`GpuIndexer::build`] baseline and the placement-tier
+/// [`pipeline_spawn`] constructor. One table, two deployment shapes.
+fn stage_specs(program: &Arc<Program>, names: &[String]) -> Vec<KernelSpawn> {
+    let mk = |kernel: &str| KernelSpawn::new(program.clone(), kernel).output(Mode::Ref);
+    // context evolution:            incoming ctx          -> outgoing ctx
+    vec![
+        // 1 sort: Vec<u32> values   []                    -> [sorted]
+        mk(&names[0])
+            .inputs(Mode::Val, 1)
+            .postprocess(post_ctx(&[], false)),
+        // 2 chunklit                [sorted]              -> [cl, sorted]
+        mk(&names[1])
+            .inputs(Mode::Ref, 1)
+            .preprocess(pre_select(&[0]))
+            .postprocess(post_ctx(&[0], false)),
+        // 3 fillslit                [cl, sorted]          -> [fl, sorted]
+        mk(&names[2])
+            .inputs(Mode::Ref, 1)
+            .preprocess(pre_select(&[0]))
+            .postprocess(post_ctx(&[1], false)),
+        // 4 interleave              [fl, sorted]          -> [idx, fl, sorted]
+        mk(&names[3])
+            .inputs(Mode::Ref, 1)
+            .preprocess(pre_select(&[0]))
+            .postprocess(post_ctx(&[0, 1], false)),
+        // 5 count                   [idx, fl, sorted]     -> [counts, idx, fl, sorted]
+        mk(&names[4])
+            .inputs(Mode::Ref, 1)
+            .preprocess(pre_select(&[0]))
+            .postprocess(post_ctx(&[0, 1, 2], false)),
+        // 6 scan                    [counts, idx, fl, sorted] -> [scan, idx, fl, sorted]
+        mk(&names[5])
+            .inputs(Mode::Ref, 1)
+            .preprocess(pre_select(&[0]))
+            .postprocess(post_ctx(&[1, 2, 3], false)),
+        // 7 move(idx, scan)         [scan, idx, fl, sorted] -> [moved, fl, sorted]
+        mk(&names[6])
+            .inputs(Mode::Ref, 2)
+            .preprocess(pre_select(&[1, 0]))
+            .postprocess(post_ctx(&[2, 3], false)),
+        // 8 lut(fl, sorted)         [moved, fl, sorted]   -> [moved, lut]
+        mk(&names[7])
+            .inputs(Mode::Ref, 2)
+            .preprocess(pre_select(&[1, 2]))
+            .postprocess(post_ctx(&[0], true)),
+    ]
+}
+
+/// Package the 8-stage WAH build as a placement-tier [`PipelineSpawn`]:
+/// routed as one unit, replicable per device, stages interleaving across
+/// concurrent index builds, and (with `ReplicaSet::migrate`) movable off a
+/// dead replica mid-build. The program is compiled against `device_id`;
+/// replicated placement recompiles per replica device.
+///
+/// Drive the returned spawn through `Manager::spawn_pipeline` /
+/// `spawn_pipeline_replicated` with `Vec<u32>` values padded to
+/// `capacity` (see [`GpuIndexer::index`] for the padding rules).
+pub fn pipeline_spawn(
+    manager: &Arc<Manager>,
+    device_id: usize,
+    capacity: usize,
+    placement: Placement,
+) -> Result<PipelineSpawn> {
+    if !CAPACITIES.contains(&capacity) {
+        bail!("unsupported capacity {capacity}; artifacts exist for {CAPACITIES:?}");
+    }
+    let device = manager.device(device_id)?;
+    let names = GpuIndexer::kernel_names(capacity);
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let program = manager.create_program(&device, &name_refs)?;
+    let mut spawn = PipelineSpawn::new().placement(placement);
+    for cfg in stage_specs(&program, &names) {
+        spawn = spawn.stage(cfg);
+    }
+    Ok(spawn)
+}
+
 /// The composed 8-stage device pipeline for one capacity.
 pub struct GpuIndexer {
     pub capacity: usize,
@@ -91,52 +170,8 @@ impl GpuIndexer {
         let program = manager.create_program(&device, &name_refs)?;
         let sys = manager.system_handle();
 
-        let mk = |kernel: &str| KernelSpawn::new(program.clone(), kernel).output(Mode::Ref);
-        // context evolution:            incoming ctx          -> outgoing ctx
-        let stages: Vec<KernelSpawn> = vec![
-            // 1 sort: Vec<u32> values   []                    -> [sorted]
-            mk(&names[0])
-                .inputs(Mode::Val, 1)
-                .postprocess(post_ctx(&[], false)),
-            // 2 chunklit                [sorted]              -> [cl, sorted]
-            mk(&names[1])
-                .inputs(Mode::Ref, 1)
-                .preprocess(pre_select(&[0]))
-                .postprocess(post_ctx(&[0], false)),
-            // 3 fillslit                [cl, sorted]          -> [fl, sorted]
-            mk(&names[2])
-                .inputs(Mode::Ref, 1)
-                .preprocess(pre_select(&[0]))
-                .postprocess(post_ctx(&[1], false)),
-            // 4 interleave              [fl, sorted]          -> [idx, fl, sorted]
-            mk(&names[3])
-                .inputs(Mode::Ref, 1)
-                .preprocess(pre_select(&[0]))
-                .postprocess(post_ctx(&[0, 1], false)),
-            // 5 count                   [idx, fl, sorted]     -> [counts, idx, fl, sorted]
-            mk(&names[4])
-                .inputs(Mode::Ref, 1)
-                .preprocess(pre_select(&[0]))
-                .postprocess(post_ctx(&[0, 1, 2], false)),
-            // 6 scan                    [counts, idx, fl, sorted] -> [scan, idx, fl, sorted]
-            mk(&names[5])
-                .inputs(Mode::Ref, 1)
-                .preprocess(pre_select(&[0]))
-                .postprocess(post_ctx(&[1, 2, 3], false)),
-            // 7 move(idx, scan)         [scan, idx, fl, sorted] -> [moved, fl, sorted]
-            mk(&names[6])
-                .inputs(Mode::Ref, 2)
-                .preprocess(pre_select(&[1, 0]))
-                .postprocess(post_ctx(&[2, 3], false)),
-            // 8 lut(fl, sorted)         [moved, fl, sorted]   -> [moved, lut]
-            mk(&names[7])
-                .inputs(Mode::Ref, 2)
-                .preprocess(pre_select(&[1, 2]))
-                .postprocess(post_ctx(&[0], true)),
-        ];
-
         let mut actors = Vec::new();
-        for cfg in stages {
+        for cfg in stage_specs(&program, &names) {
             actors.push(manager.spawn_cl(cfg)?);
         }
         let mut it = actors.iter().cloned();

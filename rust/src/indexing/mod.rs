@@ -9,7 +9,7 @@ pub mod plwah;
 pub mod wah;
 
 pub use cpu_index::{CpuIndexer, WahIndex};
-pub use gpu_pipeline::{FusedIndexer, GpuIndexer};
+pub use gpu_pipeline::{pipeline_spawn, FusedIndexer, GpuIndexer};
 pub use wah::{wah_decode, wah_encode_positions, FILL_FLAG, INVALID};
 
 /// Config-prefix length shared with the Python kernels (DESIGN.md §5).

@@ -30,6 +30,13 @@
 //! marker token per class plus [`Rejection::of`] to classify a reply.
 //! The soak harness and the shedding test matrix both count outcomes
 //! through it.
+//!
+//! Pipeline replicas gauge occupancy per *pipeline*, not per stage: one
+//! admitted request becomes N stage launches, so the pool's depth signal
+//! is the driver-published `pipe_pending` gauge
+//! ([`ExecStats::pipe_occupancy`](crate::runtime::ExecStats)) and the
+//! queue-wait stamp is checked once, at the pipeline driver, before any
+//! stage runs.
 
 use crate::actor::{ErrorMsg, Message};
 use std::sync::atomic::{AtomicU64, Ordering};

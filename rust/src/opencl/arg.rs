@@ -151,6 +151,32 @@ pub fn extract_args(msg: &Message) -> Option<Vec<ArgValue>> {
     None
 }
 
+/// Rewrite a message so every `Ref` argument is resident on `dst`,
+/// migrating stragglers through the explicit device-to-device transfer
+/// path ([`MemRef::migrate_to`]). Value arguments pass through untouched.
+/// Returns `None` for messages the default patterns cannot extract — the
+/// dispatcher falls back to the routed error there (a custom `preprocess`
+/// shape is opaque to migration by design: rewriting it would have to
+/// invert user code).
+///
+/// The rewrite is always to the canonical `Vec<ArgValue>` shape, which
+/// every facade and the default `route_scan` accept; the original tuple
+/// shape is not preserved.
+pub(crate) fn migrate_message(
+    msg: &Message,
+    dst: &Arc<super::device::Device>,
+) -> Option<Message> {
+    let args = extract_args(msg)?;
+    let moved: Vec<ArgValue> = args
+        .into_iter()
+        .map(|a| match a {
+            ArgValue::Ref(r) => ArgValue::Ref(r.migrate_to(dst)),
+            val => val,
+        })
+        .collect();
+    Some(Message::new(moved))
+}
+
 /// Shape signature of an argument list: per-argument element counts plus
 /// the dtype per argument — the identity of a batching *shape class* (two
 /// requests coalesce into one fused launch iff their signatures match).

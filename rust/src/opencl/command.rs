@@ -2,7 +2,9 @@
 //! stage inputs, enqueue the kernel with its event dependencies, register
 //! the completion callback, and *forward arguments before the execution
 //! finished* — the asynchronous chaining that keeps multi-stage pipelines
-//! free of host round-trips.
+//! free of host round-trips. Migrated `Ref`s (the placement tier's
+//! device-to-device transfer path) arrive here like any other: their
+//! staging copy is an event the launch simply depends on.
 
 use super::arg::{ArgValue, Mode};
 use super::device::Device;

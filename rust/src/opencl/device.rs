@@ -58,6 +58,16 @@ impl Device {
         self.queue.stats().batch_occupancy()
     }
 
+    /// Occupancy published by pipeline drivers bound to this device, in
+    /// requests admitted but not yet retired end-to-end
+    /// ([`ExecStats::pipe_occupancy`](crate::runtime::ExecStats)) — the
+    /// placement tier's queue-depth signal for pipeline replicas, whose
+    /// per-stage launches make a per-request routed estimate meaningless
+    /// (one admitted request becomes N stage launches).
+    pub fn pipe_occupancy(&self) -> u64 {
+        self.queue.stats().pipe_occupancy()
+    }
+
     pub(crate) fn start(
         id: usize,
         name: &str,

@@ -14,6 +14,7 @@ use super::facade::{spawn_facade, spawn_on_device, KernelSpawn};
 use super::placement::{self, Placement};
 use super::platform::{DeviceSpec, Platform};
 use super::program::Program;
+use super::stage::{pipeline_label, spawn_pipeline_driver, PipelineSpawn};
 use crate::actor::{ActorRef, ActorSystem};
 use anyhow::{anyhow, Result};
 use once_cell::sync::OnceCell;
@@ -157,6 +158,87 @@ impl Manager {
                 "spawn_cl_replicated needs Placement::Replicated, got {other:?}"
             )),
         }
+    }
+
+    /// Spawn a placement-tier pipeline (paper §3.5 composed kernels as a
+    /// placement unit — see [`PipelineSpawn`]): every stage facade lands
+    /// on ONE device plus a per-replica driver that chains the stages with
+    /// request continuations, so intermediate `Ref`s never leave that
+    /// device. `Placement::Pinned` uses the first stage's program device,
+    /// `Placement::Device` an explicit one, and `Placement::Replicated`
+    /// spawns the whole pipeline per replica device behind a routing,
+    /// whole-pipeline-supervising dispatcher
+    /// ([`spawn_pipeline_replicated`](placement::spawn_pipeline_replicated)).
+    pub fn spawn_pipeline(&self, cfg: PipelineSpawn) -> Result<ActorRef> {
+        match cfg.placement.clone() {
+            Placement::Pinned => {
+                let dev = cfg
+                    .stages
+                    .first()
+                    .ok_or_else(|| anyhow!("pipeline needs at least one stage"))?
+                    .program
+                    .device()
+                    .clone();
+                self.spawn_pipeline_on(cfg, dev)
+            }
+            Placement::Device(id) => {
+                let dev = self.device(id)?;
+                self.spawn_pipeline_on(cfg, dev)
+            }
+            Placement::Replicated(set) => {
+                Ok(placement::spawn_pipeline_replicated(self, cfg, set)?.actor)
+            }
+        }
+    }
+
+    /// Replicated pipeline spawn that also returns the pool handle behind
+    /// the dispatcher (replica liveness, respawn counts, the stage rosters
+    /// via [`Replica::members`](super::placement::Replica::members)) — the
+    /// pipeline sibling of [`spawn_cl_replicated`](Self::spawn_cl_replicated).
+    /// The spawn must carry `Placement::Replicated`.
+    pub fn spawn_pipeline_replicated(
+        &self,
+        cfg: PipelineSpawn,
+    ) -> Result<placement::ReplicatedHandle> {
+        match cfg.placement.clone() {
+            Placement::Replicated(set) => {
+                placement::spawn_pipeline_replicated(self, cfg, set)
+            }
+            other => Err(anyhow!(
+                "spawn_pipeline_replicated needs Placement::Replicated, got {other:?}"
+            )),
+        }
+    }
+
+    /// Single-device pipeline: every stage compiled and spawned on `dev`,
+    /// fronted by one driver (no dispatcher — callers talk to the driver
+    /// directly). Stage admission is stripped for the same reason as the
+    /// replicated path: admission is a pipeline-level concern.
+    fn spawn_pipeline_on(
+        &self,
+        cfg: PipelineSpawn,
+        dev: Arc<Device>,
+    ) -> Result<ActorRef> {
+        if cfg.stages.is_empty() {
+            return Err(anyhow!("pipeline needs at least one stage"));
+        }
+        let label = pipeline_label(&cfg.stages);
+        let mut stage_refs = Vec::with_capacity(cfg.stages.len());
+        for base in &cfg.stages {
+            let mut b = base.clone();
+            b.admission = None;
+            b.placement = Placement::Pinned;
+            let rcfg = self.rebuild_for(b, &dev)?;
+            stage_refs.push(spawn_on_device(self.system_ref(), rcfg, dev.clone())?);
+        }
+        Ok(spawn_pipeline_driver(
+            self.system_ref(),
+            stage_refs,
+            dev,
+            cfg.mode,
+            None,
+            label,
+        ))
     }
 
     /// Recompile the spawn's program on `dev` when it was built for a

@@ -121,6 +121,33 @@ impl MemRef {
         self.inner.device.queue.download(self.inner.id, timeout)
     }
 
+    /// Migrate this buffer to another device: an explicit device-to-device
+    /// transfer ([`DeviceQueue::transfer_to`](crate::runtime::client::DeviceQueue::transfer_to),
+    /// download-from-src + upload-to-dst) that mints a new reference on
+    /// `dst` whose ready-event completes when the copy lands. The hop rides
+    /// the source's in-order queue, so it observes the producing command —
+    /// a failed producer fails the migrated ref's ready-event, and the
+    /// consuming command surfaces that error exactly like any other failed
+    /// dependency. Already-resident refs are returned as cheap clones.
+    ///
+    /// This is what turns a stranded-`Ref` routed error into a reschedule:
+    /// the dispatcher prices the move via `PadModel::transfer_time` (both
+    /// sides pay their pad) and re-delegates to a live replica.
+    pub fn migrate_to(&self, dst: &Arc<Device>) -> MemRef {
+        if self.same_device(dst) {
+            return self.clone();
+        }
+        let (new_id, ready) = self.inner.device.queue.transfer_to(self.inner.id, &dst.queue);
+        MemRef::new(
+            dst.clone(),
+            new_id,
+            self.inner.dtype,
+            self.inner.len,
+            self.inner.access,
+            ready,
+        )
+    }
+
     pub fn read_u32(&self, timeout: Duration) -> Result<Vec<u32>> {
         self.read(timeout)?.into_u32()
     }
@@ -195,6 +222,27 @@ mod tests {
         let back = dev.queue.download(id2, T).unwrap().into_u32().unwrap();
         assert_eq!(back, vec![9u32; 1000]);
         dev.queue.stop();
+    }
+
+    #[test]
+    fn migrate_to_moves_bytes_across_devices() {
+        let src = test_device(10);
+        let dst = test_device(11);
+        let want: Vec<u32> = (0..512u32).collect();
+        let (id, ev) = src.queue.upload(HostData::U32(want.clone()));
+        let r = MemRef::new(src.clone(), id, Dtype::U32, 512, Access::ReadWrite, ev);
+        let moved = r.migrate_to(&dst);
+        assert_eq!(moved.device_id(), 11);
+        assert_eq!(moved.read_u32(T).unwrap(), want);
+        assert_eq!(src.queue.stats().migrations(), 1);
+        // the source copy is untouched and still readable
+        assert_eq!(r.read_u32(T).unwrap(), want);
+        // same-device migration is a clone, not a copy
+        let same = r.migrate_to(&src);
+        assert_eq!(same.device_id(), 10);
+        assert_eq!(src.queue.stats().migrations(), 1);
+        src.queue.stop();
+        dst.queue.stop();
     }
 
     #[test]

@@ -13,11 +13,17 @@
 //! * [`mem_ref`]   — device-resident buffer handles (`mem_ref<T>`).
 //! * [`facade`]    — the OpenCL actor itself (`actor_facade`).
 //! * [`command`]   — one in-flight kernel execution (paper Listing 4).
-//! * [`stage`]     — composed kernel pipelines over resident memory (§3.5).
+//! * [`stage`]     — kernel pipelines over resident memory (§3.5): the
+//!   composed baseline plus `PipelineSpawn`, the placement-tier pipeline
+//!   unit (per-device stage chains behind one driver actor, interleaved
+//!   or lock-step scheduling).
 //! * [`placement`] — multi-device replication: one replica facade per
 //!   device behind a policy-routing, replica-supervising dispatcher
 //!   (`Placement::Replicated`; round-robin / least-inflight / cost-aware
 //!   policies, `Down`-driven failover and respawn, device subsets).
+//!   Entire pipelines replicate as units, and an opt-in migration path
+//!   moves stranded intermediate `Ref`s off dead or overloaded replicas
+//!   instead of answering with a routed error.
 //! * [`batch`]     — adaptive request batching: sub-capacity val-mode
 //!   requests coalesced into padded fused launches.
 //! * [`admission`] — bounded admission control for replicated spawns:
@@ -52,3 +58,4 @@ pub use placement::{
 };
 pub use platform::{DeviceSpec, Platform};
 pub use program::Program;
+pub use stage::{post_pair_from, PipelineBuilder, PipelineMode, PipelineSpawn};

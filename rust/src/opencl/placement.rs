@@ -62,6 +62,27 @@
 //! with an `actor terminated` error, so every routed request gets a reply
 //! or an error, exactly once.
 //!
+//! **Pipelines as placement units** (paper §3.5 composed kernels, lifted):
+//! [`spawn_pipeline_replicated`] compiles and spawns an *entire*
+//! [`PipelineSpawn`] — every stage facade plus a per-replica driver — on
+//! every replica device, behind the same dispatcher `ActorRef`. A request
+//! routes once; every stage's `Ref` stays on the chosen device. The pool
+//! reads the drivers' published occupancy gauge
+//! ([`ExecStats::pipe_occupancy`](crate::runtime::ExecStats)) for depth
+//! and prices cost-aware picks as entry transfer + per-stage launch pads +
+//! depth × the end-to-end pipeline EWMA. Supervision treats the replica
+//! pipeline as a unit: `Down` from ANY stage (or the driver) marks the
+//! whole replica dead, the surviving members are taken down, and a respawn
+//! recompiles ALL stages before reinstalling.
+//!
+//! **Migration** ([`ReplicaSet::migrate`], default off): instead of the
+//! stranded-`Ref` routed error, the dispatcher picks a live replica as if
+//! the request were affinity-free, migrates every `Ref` argument to its
+//! device through the explicit device-to-device transfer path
+//! ([`MemRef::migrate_to`](super::mem_ref::MemRef::migrate_to) — priced by
+//! `PadModel::transfer_time` on both queues), and delegates the rewritten
+//! request — a rescheduling event where there used to be an error.
+//!
 //! [`Manager::spawn_cl`]: super::manager::Manager::spawn_cl
 
 use super::admission::{Admission, AdmissionConfig, Stamped};
@@ -70,8 +91,9 @@ use super::device::Device;
 use super::facade::{spawn_on_device, KernelSpawn, PreFn};
 use super::manager::Manager;
 use super::program::Program;
+use super::stage::{pipeline_label, spawn_pipeline_driver, PipelineMode, PipelineSpawn};
 use crate::actor::{
-    ActorRef, ActorSystem, Behavior, Down, ErrorMsg, Message, Reply, no_reply,
+    ActorRef, ActorSystem, Behavior, Down, ErrorMsg, Exit, Message, Reply, no_reply,
 };
 use crate::runtime::Manifest;
 use anyhow::{anyhow, bail, Result};
@@ -119,6 +141,14 @@ pub struct ReplicaSet {
     /// admits everything (the pre-admission behavior). See
     /// [`AdmissionConfig`].
     pub admission: AdmissionConfig,
+    /// Migrate stranded `Ref` traffic instead of erroring: when affinity
+    /// routing fails (the resident replica is dead, retired, or the refs
+    /// span devices), the dispatcher device-to-device-copies every `Ref`
+    /// argument to a live replica and reroutes there, turning the routed
+    /// error into a rescheduling event. Off by default — migration copies
+    /// device memory through the host on the stub/emu backends, so the
+    /// caller opts into paying that (pad-priced) cost.
+    pub migrate: bool,
 }
 
 impl ReplicaSet {
@@ -128,6 +158,7 @@ impl ReplicaSet {
             respawn: RespawnPolicy::default(),
             devices: None,
             admission: AdmissionConfig::default(),
+            migrate: false,
         }
     }
 
@@ -147,6 +178,12 @@ impl ReplicaSet {
     /// Set the admission bounds (unbounded is the default).
     pub fn admission(mut self, a: AdmissionConfig) -> Self {
         self.admission = a;
+        self
+    }
+
+    /// Enable (or disable) stranded-`Ref` migration — see the field docs.
+    pub fn migrate(mut self, on: bool) -> Self {
+        self.migrate = on;
         self
     }
 }
@@ -272,6 +309,11 @@ pub struct Replica {
     /// of compile timeouts while the replica is actually *dead* — can
     /// never masquerade as a sustained healthy period.
     last_healthy_ns: AtomicU64,
+    /// Stage facades owned by this replica when it fronts a whole pipeline
+    /// (empty for single-kernel replicas; the `facade` is then the
+    /// per-replica driver). `Down` from ANY member marks the replica dead
+    /// as a unit, and a respawn replaces the full roster.
+    members: Mutex<Vec<ActorRef>>,
 }
 
 impl Replica {
@@ -286,12 +328,28 @@ impl Replica {
             retired: AtomicBool::new(false),
             healthy_since: Mutex::new(Instant::now()),
             last_healthy_ns: AtomicU64::new(0),
+            members: Mutex::new(Vec::new()),
         }
     }
 
-    /// The current facade incarnation.
+    /// The current facade incarnation (the per-replica driver when this
+    /// replica fronts a pipeline).
     pub fn facade(&self) -> ActorRef {
         self.facade.read().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// The stage facades of the current incarnation (empty for
+    /// single-kernel replicas) — the fault-injection surface for
+    /// whole-pipeline supervision tests.
+    pub fn members(&self) -> Vec<ActorRef> {
+        self.members
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+    }
+
+    pub(crate) fn set_members(&self, m: Vec<ActorRef>) {
+        *self.members.lock().unwrap_or_else(|p| p.into_inner()) = m;
     }
 
     pub fn is_alive(&self) -> bool {
@@ -380,6 +438,14 @@ pub struct DevicePool {
     /// gauge the batcher itself publishes
     /// ([`ExecStats::batch_pending`](crate::runtime::ExecStats)).
     batched: bool,
+    /// Stage count when the replicas front whole pipelines (0 = plain
+    /// single-kernel pool). A pipeline driver admits once per *request*
+    /// but its device launches once per *stage*, so — like batching — the
+    /// routed estimate cannot reconcile; depth reads the drivers'
+    /// published occupancy gauge
+    /// ([`ExecStats::pipe_occupancy`](crate::runtime::ExecStats)) and the
+    /// cost model prices the full stage chain.
+    pipeline_stages: usize,
 }
 
 impl DevicePool {
@@ -394,6 +460,7 @@ impl DevicePool {
             policy,
             next_rr: AtomicUsize::new(0),
             batched: false,
+            pipeline_stages: 0,
         })
     }
 
@@ -403,6 +470,20 @@ impl DevicePool {
     /// this for `KernelSpawn::batched` replicas).
     pub fn set_batched(&mut self, on: bool) {
         self.batched = on;
+    }
+
+    /// Mark the pool as fronting `n`-stage pipeline drivers: depth reads
+    /// the drivers' occupancy gauge and cost scoring prices entry transfer
+    /// plus `n - 1` inter-stage launch pads against the end-to-end
+    /// pipeline EWMA (see the field docs; set by
+    /// [`spawn_pipeline_replicated`]).
+    pub fn set_pipeline(&mut self, n: usize) {
+        self.pipeline_stages = n;
+    }
+
+    /// Stage count of a pipeline pool (0 for single-kernel pools).
+    pub fn pipeline_stages(&self) -> usize {
+        self.pipeline_stages
     }
 
     pub fn replicas(&self) -> &[Replica] {
@@ -418,15 +499,18 @@ impl DevicePool {
         self.replicas.iter().filter(|r| r.is_alive()).count()
     }
 
-    /// Mark the replica whose *current* facade has `source` as dead and
+    /// Mark the replica whose *current* facade — or, for pipeline
+    /// replicas, any current stage member — has `source` as dead and
     /// drain its routed-depth contribution. Returns the replica index, or
     /// `None` when no live replica matches (e.g. a stale `Down` for an
-    /// incarnation that was already replaced).
+    /// incarnation that was already replaced, or for a peer the dispatcher
+    /// took down after the first member death already killed the replica).
     pub fn mark_dead(&self, source: crate::actor::ActorId) -> Option<usize> {
-        let i = self
-            .replicas
-            .iter()
-            .position(|r| r.is_alive() && r.facade().id() == source)?;
+        let i = self.replicas.iter().position(|r| {
+            r.is_alive()
+                && (r.facade().id() == source
+                    || r.members().iter().any(|m| m.id() == source))
+        })?;
         self.replicas[i].note_death();
         self.replicas[i].alive.store(false, Ordering::Release);
         self.drain_routed(i);
@@ -518,6 +602,16 @@ impl DevicePool {
     pub fn depth(&self, i: usize) -> u64 {
         let r = &self.replicas[i];
         let stats = r.device.queue.stats();
+        if self.pipeline_stages > 0 {
+            // pipeline replicas: the driver admits once per request but
+            // the device launches once per stage, so routed-minus-retired
+            // can never reconcile (the batching problem again). The signal
+            // is the occupancy gauge the driver publishes — admitted but
+            // unretired requests, lock-step waiters included — blended
+            // (max) with the device's own launch gauge for unpipelined
+            // co-tenants sharing the queue.
+            return stats.pipe_occupancy().max(stats.inflight());
+        }
         if self.batched {
             // batched replicas: one flush serves many routed requests, so
             // the dispatcher's routed counter cannot reconcile. The real
@@ -563,22 +657,42 @@ impl DevicePool {
     /// overestimates drain time by roughly the coalescing factor. The bias
     /// is monotone in load, which is all a ranking policy needs — and it
     /// errs toward spreading, never toward piling onto a busy batcher.
+    ///
+    /// For **pipeline** pools the dispatch term is the full stage chain —
+    /// the entry transfer for the payload plus one zero-byte launch pad
+    /// per remaining stage (every stage pays the device's per-command
+    /// dispatch cost; only the first moves host bytes) — and the service
+    /// term is the end-to-end pipeline EWMA the drivers publish, so depth
+    /// × service estimates whole-request drain time, not per-launch time.
     pub fn cost_estimate(&self, i: usize, bytes: usize) -> f64 {
         const SERVICE_EPSILON: f64 = 1e-6;
         let r = &self.replicas[i];
-        let dispatch = r
-            .device
-            .pad
-            .map(|p| p.transfer_time(bytes).as_secs_f64())
-            .unwrap_or(0.0);
-        let service = r
-            .device
-            .queue
-            .stats()
-            .ewma_service()
-            .as_secs_f64()
-            .max(dispatch)
-            .max(SERVICE_EPSILON);
+        let stats = r.device.queue.stats();
+        let (dispatch, raw_service) = if self.pipeline_stages > 0 {
+            let entry = r
+                .device
+                .pad
+                .map(|p| p.transfer_time(bytes).as_secs_f64())
+                .unwrap_or(0.0);
+            let hop = r
+                .device
+                .pad
+                .map(|p| p.transfer_time(0).as_secs_f64())
+                .unwrap_or(0.0);
+            (
+                entry + hop * self.pipeline_stages.saturating_sub(1) as f64,
+                stats.pipe_ewma().as_secs_f64(),
+            )
+        } else {
+            (
+                r.device
+                    .pad
+                    .map(|p| p.transfer_time(bytes).as_secs_f64())
+                    .unwrap_or(0.0),
+                stats.ewma_service().as_secs_f64(),
+            )
+        };
+        let service = raw_service.max(dispatch).max(SERVICE_EPSILON);
         dispatch + self.depth(i) as f64 * service
     }
 
@@ -646,6 +760,15 @@ impl DevicePool {
             }
         }
     }
+
+    /// Policy pick ignoring `Ref` affinity — the migration path's target
+    /// choice: when affinity routing failed (refs stranded on a dead,
+    /// retired, or absent replica) the dispatcher picks a live replica as
+    /// if the request were affinity-free, migrates the refs to its device,
+    /// and delegates there.
+    pub(crate) fn select_live(&self, bytes: usize) -> Result<usize, String> {
+        self.select(bytes)
+    }
 }
 
 /// A replicated spawn's pieces: the dispatcher (what ordinary callers talk
@@ -701,6 +824,60 @@ struct Respawned {
     facade: Result<ActorRef, String>,
 }
 
+/// What the pipeline dispatcher needs to rebuild a dead replica pipeline:
+/// recompile EVERY stage's kernel on the replica's device and spawn fresh
+/// stage facades plus a fresh driver — a pipeline replica respawns as a
+/// unit, never stage-by-stage (a half-new half-old roster would chain
+/// continuations across incarnations).
+struct PipelineRespawner {
+    sys: ActorSystem,
+    manifest: Manifest,
+    timeout: Duration,
+    /// Per-stage base configs (admission stripped, placement pinned) the
+    /// rebuild clones and recompiles.
+    bases: Vec<KernelSpawn>,
+    mode: PipelineMode,
+    /// The spawn's admission domain; respawned drivers rejoin it so
+    /// deadline counters and the pool bound stay coherent across deaths.
+    admission: Arc<Admission>,
+    /// Budget + backoff schedule ([`RespawnPolicy::delay_for`]).
+    policy: RespawnPolicy,
+    label: String,
+}
+
+impl PipelineRespawner {
+    fn respawn(&self, dev: &Arc<Device>) -> Result<(ActorRef, Vec<ActorRef>)> {
+        let mut stage_refs = Vec::with_capacity(self.bases.len());
+        for base in &self.bases {
+            let mut cfg = base.clone();
+            cfg.program = Program::build(
+                dev.clone(),
+                &self.manifest,
+                &[cfg.kernel.as_str()],
+                self.timeout,
+            )?;
+            stage_refs.push(spawn_on_device(&self.sys, cfg, dev.clone())?);
+        }
+        let driver = spawn_pipeline_driver(
+            &self.sys,
+            stage_refs.clone(),
+            dev.clone(),
+            self.mode,
+            Some(self.admission.clone()),
+            self.label.clone(),
+        );
+        Ok((driver, stage_refs))
+    }
+}
+
+/// [`Respawned`]'s pipeline sibling, reported by the `pipeline-respawn`
+/// helper thread: a fresh driver plus its stage facades, or the error to
+/// log (the replica stays down).
+struct PipelineRespawned {
+    replica: usize,
+    result: Result<(ActorRef, Vec<ActorRef>), String>,
+}
+
 /// Affinity + cost inputs of one message: `Ref` device ids and value-
 /// payload bytes. The default extraction goes through the clone-free
 /// [`RouteScan`](super::arg) — the dispatcher must not deep-copy every
@@ -722,6 +899,44 @@ fn route_info(cfg_pre: &Option<PreFn>, msg: &Message) -> Option<RouteScan> {
     Some(scan)
 }
 
+/// Resolve a replica set's device span against the inventory: every id
+/// must exist, no duplicates, non-empty (`what` names the spawn in the
+/// errors, e.g. `kernel "vadd_u32"` or `pipeline[sort>count>move]`).
+/// Shared by the single-kernel and pipeline replicated spawn paths so the
+/// validation rules cannot diverge.
+fn resolve_replica_devices(
+    mgr: &Manager,
+    set: &ReplicaSet,
+    what: &str,
+) -> Result<Vec<Arc<Device>>> {
+    let platform = mgr.try_platform()?;
+    let devices: Vec<Arc<Device>> = match &set.devices {
+        None => platform.devices.clone(),
+        Some(ids) => {
+            if ids.is_empty() {
+                bail!("{what}: replica device subset is empty");
+            }
+            let mut picked: Vec<Arc<Device>> = Vec::with_capacity(ids.len());
+            for id in ids {
+                if picked.iter().any(|d| d.id == *id) {
+                    bail!("{what}: device {id} appears twice in the replica subset");
+                }
+                picked.push(platform.device(*id).cloned().ok_or_else(|| {
+                    anyhow!(
+                        "{what}: replica subset names device {id}, \
+                         which is not in the inventory"
+                    )
+                })?);
+            }
+            picked
+        }
+    };
+    if devices.is_empty() {
+        bail!("cannot replicate {what}: device inventory is empty");
+    }
+    Ok(devices)
+}
+
 /// Spawn one replica facade per device of the set plus the dispatcher that
 /// routes between them (used by `Manager::spawn_cl` /
 /// `Manager::spawn_cl_replicated` for [`Placement::Replicated`]).
@@ -730,41 +945,8 @@ pub(crate) fn spawn_replicated(
     cfg: KernelSpawn,
     set: ReplicaSet,
 ) -> Result<ReplicatedHandle> {
+    let devices = resolve_replica_devices(mgr, &set, &format!("kernel {:?}", cfg.kernel))?;
     let platform = mgr.try_platform()?;
-    let devices: Vec<Arc<Device>> = match &set.devices {
-        None => platform.devices.clone(),
-        Some(ids) => {
-            if ids.is_empty() {
-                bail!(
-                    "kernel {:?}: replica device subset is empty",
-                    cfg.kernel
-                );
-            }
-            let mut picked: Vec<Arc<Device>> = Vec::with_capacity(ids.len());
-            for id in ids {
-                if picked.iter().any(|d| d.id == *id) {
-                    bail!(
-                        "kernel {:?}: device {id} appears twice in the replica subset",
-                        cfg.kernel
-                    );
-                }
-                picked.push(platform.device(*id).cloned().ok_or_else(|| {
-                    anyhow!(
-                        "kernel {:?}: replica subset names device {id}, \
-                         which is not in the inventory",
-                        cfg.kernel
-                    )
-                })?);
-            }
-            picked
-        }
-    };
-    if devices.is_empty() {
-        bail!(
-            "cannot replicate kernel {:?}: device inventory is empty",
-            cfg.kernel
-        );
-    }
     let sys = mgr.system_handle();
     let timeout = mgr.build_timeout();
     // one admission domain per replicated spawn, shared by the dispatcher
@@ -806,7 +988,92 @@ pub(crate) fn spawn_replicated(
         respawner,
         cfg.pre.clone(),
         admission.clone(),
+        set.migrate,
         cfg.kernel,
+    );
+    Ok(ReplicatedHandle {
+        actor,
+        pool,
+        admission,
+    })
+}
+
+/// Spawn an entire pipeline per device of the set — every stage facade
+/// plus a per-replica [driver](spawn_pipeline_driver) — behind a
+/// dispatcher that routes each request to one replica as a unit (used by
+/// `Manager::spawn_pipeline` / `Manager::spawn_pipeline_replicated` for
+/// [`Placement::Replicated`]). Stage-level `placement`, `admission`, and
+/// `batching` knobs are overridden: the unit of placement, admission, and
+/// supervision is the pipeline.
+pub(crate) fn spawn_pipeline_replicated(
+    mgr: &Manager,
+    cfg: PipelineSpawn,
+    set: ReplicaSet,
+) -> Result<ReplicatedHandle> {
+    if cfg.stages.is_empty() {
+        bail!("pipeline needs at least one stage");
+    }
+    let label = pipeline_label(&cfg.stages);
+    let devices = resolve_replica_devices(mgr, &set, &label)?;
+    let platform = mgr.try_platform()?;
+    let sys = mgr.system_handle();
+    let timeout = mgr.build_timeout();
+    // one admission domain per pipeline spawn: the dispatcher gates the
+    // pool-wide bound against aggregate driver occupancy, the drivers
+    // enforce queue-wait deadlines at the replica boundary. Stage facades
+    // never see admission — a stage-level gate would double-charge work
+    // the dispatcher already admitted.
+    let admission = Arc::new(Admission::new(set.admission));
+    let mut bases: Vec<KernelSpawn> = cfg.stages.clone();
+    for b in &mut bases {
+        b.admission = None;
+        b.placement = Placement::Pinned;
+    }
+    let mut replicas = Vec::with_capacity(devices.len());
+    for dev in &devices {
+        let mut stage_refs = Vec::with_capacity(bases.len());
+        for base in &bases {
+            // compile every stage's kernel on THIS replica's device (the
+            // manual multi-device flow of §3.2, automated per stage)
+            let rcfg = mgr.rebuild_for(base.clone(), dev)?;
+            stage_refs.push(spawn_on_device(&sys, rcfg, dev.clone())?);
+        }
+        let driver = spawn_pipeline_driver(
+            &sys,
+            stage_refs.clone(),
+            dev.clone(),
+            cfg.mode,
+            Some(admission.clone()),
+            label.clone(),
+        );
+        let replica = Replica::new(dev.clone(), driver);
+        replica.set_members(stage_refs);
+        replicas.push(replica);
+    }
+    let mut pool = DevicePool::new(replicas, set.policy)?;
+    pool.set_pipeline(bases.len());
+    let pool = Arc::new(pool);
+    let respawner = match set.respawn {
+        RespawnPolicy::Never => None,
+        policy => Some(Arc::new(PipelineRespawner {
+            sys: sys.clone(),
+            manifest: platform.manifest.clone(),
+            timeout,
+            bases: bases.clone(),
+            mode: cfg.mode,
+            admission: admission.clone(),
+            policy,
+            label: label.clone(),
+        })),
+    };
+    let actor = spawn_pipeline_dispatcher(
+        &sys,
+        pool.clone(),
+        respawner,
+        bases[0].pre.clone(),
+        admission.clone(),
+        set.migrate,
+        label,
     );
     Ok(ReplicatedHandle {
         actor,
@@ -870,6 +1137,33 @@ fn start_rebuild(
     }
 }
 
+/// Migration fallback when affinity routing failed
+/// ([`ReplicaSet::migrate`]): pick a live replica as if the request were
+/// affinity-free, device-to-device-copy every `Ref` argument to its device
+/// ([`MemRef::migrate_to`](super::mem_ref::MemRef::migrate_to) — the
+/// explicit transfer path, pad-priced on both queues), and return the
+/// rewritten message plus the target index. `None` when no replica is
+/// live or the message's shape is opaque to migration (custom extraction
+/// the canonical rewrite cannot see into) — the caller then answers with
+/// the original routed error. Each moved buffer bumps the *source*
+/// device's migration counter
+/// ([`ExecStats::migrations`](crate::runtime::ExecStats)).
+fn try_migrate(
+    pool: &DevicePool,
+    stranded: &[usize],
+    bytes: usize,
+    msg: &Message,
+) -> Option<(usize, Message)> {
+    let j = pool.select_live(bytes).ok()?;
+    let dst = &pool.replicas()[j].device;
+    let moved = super::arg::migrate_message(msg, dst)?;
+    log::info!(
+        "migrating refs stranded on devices {stranded:?} to device {} and rerouting",
+        dst.id
+    );
+    Some((j, moved))
+}
+
 /// The dispatcher: an ordinary event-based actor that routes each message
 /// to a replica via [`DevicePool::route`] and delegates it, so the replica
 /// answers the original requester directly (no extra hop on the reply
@@ -881,6 +1175,7 @@ fn spawn_dispatcher(
     respawner: Option<Arc<Respawner>>,
     pre: Option<PreFn>,
     admission: Arc<Admission>,
+    migrate: bool,
     kernel: String,
 ) -> ActorRef {
     sys.spawn(move |ctx| {
@@ -989,8 +1284,245 @@ fn spawn_dispatcher(
                         ctx.delegate(&pool.replicas()[i].facade(), outgoing);
                     }
                     Err(e) => {
+                        // opt-in migration: turn a stranded-Ref routed
+                        // error into a reschedule by moving the refs to a
+                        // live replica's device and delegating there
+                        if migrate && !devs.is_empty() {
+                            if let Some((j, moved)) = try_migrate(&pool, devs, bytes, msg) {
+                                if extracted {
+                                    pool.note_routed(j);
+                                }
+                                let outgoing = if admission.cfg().max_queue_wait.is_some() {
+                                    Message::new(Stamped {
+                                        at: Instant::now(),
+                                        inner: moved,
+                                    })
+                                } else {
+                                    moved
+                                };
+                                ctx.delegate(&pool.replicas()[j].facade(), outgoing);
+                                return Reply::Promised;
+                            }
+                        }
                         let promise = ctx.make_promise();
                         promise.deliver_err(ErrorMsg::new(format!("kernel {kernel}: {e}")));
+                    }
+                }
+                Reply::Promised
+            })
+    })
+}
+
+/// Consume one unit of replica `i`'s respawn budget and either start a
+/// whole-pipeline rebuild or retire the replica — the pipeline sibling of
+/// [`start_rebuild`], with the same budget/backoff/off-thread rules. The
+/// helper thread recompiles EVERY stage and reports a
+/// [`PipelineRespawned`] back to the dispatcher.
+fn start_pipeline_rebuild(
+    pool: &Arc<DevicePool>,
+    respawner: &Arc<PipelineRespawner>,
+    label: &str,
+    i: usize,
+    me: ActorRef,
+) {
+    let dev = pool.replicas()[i].device.clone();
+    if pool.replicas()[i].maybe_reset_budget(respawner.policy) {
+        log::info!(
+            "{label}: replica on device {} stayed healthy past the backoff \
+             horizon; respawn budget reset",
+            dev.id
+        );
+    }
+    let attempt = pool.replicas()[i].note_attempt();
+    let Some(backoff) = respawner.policy.delay_for(attempt) else {
+        pool.retire(i);
+        log::error!(
+            "{label}: replica on device {} exhausted its respawn budget \
+             after {} attempts; permanently dead",
+            dev.id,
+            attempt.saturating_sub(1)
+        );
+        return;
+    };
+    let r = respawner.clone();
+    let spawned = std::thread::Builder::new()
+        .name("pipeline-respawn".into())
+        .spawn(move || {
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            let result = r.respawn(&dev).map_err(|e| e.to_string());
+            me.send_from(None, Message::new(PipelineRespawned { replica: i, result }));
+        });
+    if let Err(e) = spawned {
+        log::error!("{label}: could not start respawn thread: {e}; replica stays down");
+    }
+}
+
+/// The pipeline dispatcher: routes each request to one replica *pipeline*
+/// and delegates it to that replica's driver, so the driver answers the
+/// original requester. Differences from the single-kernel
+/// [`spawn_dispatcher`]: it monitors the driver AND every stage facade of
+/// each replica; `Down` from any of them kills the whole replica pipeline
+/// (surviving members are taken down — no half-pipeline may keep serving
+/// continuations against dead peers) and a respawn recompiles all stages
+/// before reinstalling.
+fn spawn_pipeline_dispatcher(
+    sys: &ActorSystem,
+    pool: Arc<DevicePool>,
+    respawner: Option<Arc<PipelineRespawner>>,
+    pre: Option<PreFn>,
+    admission: Arc<Admission>,
+    migrate: bool,
+    label: String,
+) -> ActorRef {
+    sys.spawn(move |ctx| {
+        // supervision: one monitor per driver and per stage facade. Down
+        // travels on the system-priority lane, ahead of queued traffic.
+        for r in pool.replicas() {
+            ctx.monitor(&r.facade());
+            for s in r.members() {
+                ctx.monitor(&s);
+            }
+        }
+        let down_pool = pool.clone();
+        let down_label = label.clone();
+        let inst_pool = pool.clone();
+        let inst_label = label.clone();
+        let inst_respawner = respawner.clone();
+        Behavior::new()
+            .on(move |ctx, d: &Down| {
+                let Some(i) = down_pool.mark_dead(d.source) else {
+                    // stale Down: an incarnation already replaced, or a
+                    // peer this dispatcher itself took down below
+                    return no_reply();
+                };
+                let dev = down_pool.replicas()[i].device.clone();
+                log::warn!(
+                    "{down_label}: replica on device {} ({}) lost a pipeline \
+                     member ({:?}); whole replica pipeline marked dead",
+                    dev.id,
+                    dev.name,
+                    d.reason
+                );
+                // a pipeline replica dies as a unit: take the surviving
+                // members (and the driver) down too. Their Downs come back
+                // as stale — mark_dead already flipped the replica dead.
+                let peer_exit = |a: &ActorRef| {
+                    if a.id() != d.source {
+                        a.send_from(None, Message::new(Exit::fault("pipeline peer died")));
+                    }
+                };
+                peer_exit(&down_pool.replicas()[i].facade());
+                for s in down_pool.replicas()[i].members() {
+                    peer_exit(&s);
+                }
+                if let Some(rs) = &respawner {
+                    start_pipeline_rebuild(&down_pool, rs, &down_label, i, ctx.me());
+                }
+                no_reply()
+            })
+            .on(move |ctx, r: &PipelineRespawned| {
+                let dev = inst_pool.replicas()[r.replica].device.clone();
+                match &r.result {
+                    Ok((driver, stage_refs)) => {
+                        ctx.monitor(driver);
+                        for s in stage_refs {
+                            ctx.monitor(s);
+                        }
+                        // members swap before install flips `alive`, so a
+                        // Down racing the install always matches either
+                        // the old roster (stale) or the complete new one
+                        inst_pool.replicas()[r.replica].set_members(stage_refs.clone());
+                        inst_pool.install(r.replica, driver.clone());
+                        log::info!(
+                            "{inst_label}: replica on device {} respawned \
+                             ({} stages recompiled)",
+                            dev.id,
+                            stage_refs.len()
+                        );
+                    }
+                    Err(e) => match &inst_respawner {
+                        // same budget semantics as the single-kernel path:
+                        // Limited retries within its budget, Always leaves
+                        // the replica down after one failed compile
+                        Some(rs) if matches!(rs.policy, RespawnPolicy::Limited { .. }) => {
+                            log::error!(
+                                "{inst_label}: respawn on device {} failed: {e}; \
+                                 retrying within the respawn budget",
+                                dev.id
+                            );
+                            start_pipeline_rebuild(
+                                &inst_pool,
+                                rs,
+                                &inst_label,
+                                r.replica,
+                                ctx.me(),
+                            );
+                        }
+                        _ => {
+                            log::error!(
+                                "{inst_label}: respawn on device {} failed: {e}; \
+                                 replica stays down",
+                                dev.id
+                            );
+                        }
+                    },
+                }
+                no_reply()
+            })
+            .on_any(move |ctx, msg| {
+                let info = route_info(&pre, msg);
+                let (devs, bytes, extracted) = match &info {
+                    Some(s) => (s.devices.as_slice(), s.val_bytes, true),
+                    None => (&[][..], 0, false),
+                };
+                // the pool bound gauges aggregate pipeline occupancy: the
+                // sum of the drivers' admitted-but-unretired request
+                // counts, exactly one unit per request regardless of the
+                // stage count
+                if extracted {
+                    if let Err(e) = admission.try_admit(pool.total_depth(), &label) {
+                        let promise = ctx.make_promise();
+                        promise.deliver_err(e);
+                        return Reply::Promised;
+                    }
+                }
+                match pool.route(devs, bytes) {
+                    Ok(i) => {
+                        if extracted {
+                            pool.note_routed(i);
+                        }
+                        let outgoing = if admission.cfg().max_queue_wait.is_some() {
+                            Message::new(Stamped {
+                                at: Instant::now(),
+                                inner: msg.clone(),
+                            })
+                        } else {
+                            msg.clone()
+                        };
+                        ctx.delegate(&pool.replicas()[i].facade(), outgoing);
+                    }
+                    Err(e) => {
+                        if migrate && !devs.is_empty() {
+                            if let Some((j, moved)) = try_migrate(&pool, devs, bytes, msg) {
+                                if extracted {
+                                    pool.note_routed(j);
+                                }
+                                let outgoing = if admission.cfg().max_queue_wait.is_some() {
+                                    Message::new(Stamped {
+                                        at: Instant::now(),
+                                        inner: moved,
+                                    })
+                                } else {
+                                    moved
+                                };
+                                ctx.delegate(&pool.replicas()[j].facade(), outgoing);
+                                return Reply::Promised;
+                            }
+                        }
+                        let promise = ctx.make_promise();
+                        promise.deliver_err(ErrorMsg::new(format!("{label}: {e}")));
                     }
                 }
                 Reply::Promised

@@ -1,15 +1,49 @@
 //! Multi-stage kernel pipelines over device-resident memory (paper §3.5 /
 //! §4.1, Listing 5): each stage is an OpenCL actor with Ref-mode operands;
-//! the stages are glued with the actor composition operator, so only
-//! `MemRef`s travel between them and the data never leaves the device.
+//! only `MemRef`s travel between stages, so the data never leaves the
+//! device.
+//!
+//! Two generations live here:
+//!
+//! * [`PipelineBuilder`] — the paper's original shape: spawn each stage,
+//!   glue them with the actor composition operator
+//!   ([`compose`](crate::actor::compose)). Lock-step by construction (each
+//!   composed hop serves one request at a time) and invisible to the
+//!   placement tier — the composed actor is pinned wherever its stages
+//!   were spawned. Kept as the composed baseline the pipeline benches
+//!   compare against.
+//! * [`PipelineSpawn`] — the placement-tier citizen: a stage list of
+//!   [`KernelSpawn`]s routed *as a unit* by
+//!   [`Manager::spawn_pipeline`](super::manager::Manager::spawn_pipeline).
+//!   Under [`Placement::Replicated`] the whole pipeline is compiled and
+//!   spawned once per replica device behind the ordinary dispatcher
+//!   `ActorRef`, so a request routes once and every stage's `Ref` stays on
+//!   the chosen replica's device. Each replica fronts its stages with a
+//!   *driver* actor ([`spawn_pipeline_driver`]) that chains the stages
+//!   with request continuations instead of composed actors — under the
+//!   default [`PipelineMode::Interleaved`] the driver keeps every accepted
+//!   request in flight at once, so independent stages of *different*
+//!   requests interleave on one device (the dynamic data-rate scheduling
+//!   of Boutellier & Hautala), while [`PipelineMode::LockStep`] reproduces
+//!   the composed one-at-a-time behavior for comparison. The driver
+//!   publishes its occupancy into the device's
+//!   [`ExecStats::pipe_occupancy`](crate::runtime::ExecStats) gauge and
+//!   its end-to-end latency into the pipeline EWMA, which is what the
+//!   cost/depth steering reads for pipeline pools.
 
-use super::arg::{ArgValue, Mode};
+use super::admission::{deadline_error, unstamp, Admission};
+use super::arg::{extract_args, ArgValue, Mode};
+use super::device::Device;
 use super::facade::KernelSpawn;
 use super::manager::Manager;
+use super::placement::Placement;
 use super::program::Program;
-use crate::actor::{compose, ActorRef, Message};
+use crate::actor::request::ResponsePromise;
+use crate::actor::{compose, ActorRef, ActorSystem, Behavior, Ctx, ErrorMsg, Message, Reply};
 use anyhow::Result;
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Builder for a composed kernel pipeline
 /// (`move_elems * count_elems * prepare` in Listing 5 — stages are given in
@@ -95,40 +129,275 @@ impl Manager {
     }
 }
 
-/// Postprocess helper: fan a stage's `MemRef` output into a tuple with a
-/// previously captured reference (stages whose successor needs several
-/// operands, e.g. `lut(fillslit, sorted)` in the WAH pipeline).
-pub fn post_pair_with(extra: MemRefSlot) -> impl Fn(ArgValue, &Message) -> Message + Send + Sync {
-    move |out, _inc| match (&out, extra.get()) {
-        (ArgValue::Ref(r), Some(e)) => Message::new(vec![
-            ArgValue::Ref(r.clone()),
-            ArgValue::Ref(e),
-        ]),
-        _ => Message::new(out),
+/// How a pipeline replica schedules the requests routed to it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Start every admitted request immediately: stage N of one request
+    /// runs while stage M of another is still in flight on the same
+    /// device's in-order queue, so the queue never drains between stages
+    /// of a single request (the default, and what the interleaving gate
+    /// asserts via [`ExecStats::inflight_peak`](crate::runtime::ExecStats)).
+    #[default]
+    Interleaved,
+    /// One request end-to-end at a time per replica; later arrivals wait
+    /// in the driver until the current request's last stage replied. The
+    /// composed-actor behavior, kept as the bench baseline.
+    LockStep,
+}
+
+/// Spawn configuration for a placement-tier pipeline: per-stage
+/// [`KernelSpawn`]s in flow order plus a pipeline-wide [`Placement`] knob.
+/// Accepted by [`Manager::spawn_pipeline`](super::manager::Manager) — under
+/// [`Placement::Replicated`] every stage is compiled and spawned on every
+/// replica device and the whole pipeline routes, fails, respawns, and is
+/// admission-gated as one unit (see [`super::placement`]).
+///
+/// Per-stage `placement`, `admission`, and `batching` knobs inside the
+/// stage configs are ignored/overridden by the pipeline spawn: the unit of
+/// placement is the pipeline.
+#[derive(Clone)]
+pub struct PipelineSpawn {
+    /// Stage spawn configs, flow order.
+    pub stages: Vec<KernelSpawn>,
+    /// Where the pipeline runs (the stage-level placement knobs are
+    /// overridden — a pipeline places as a unit).
+    pub placement: Placement,
+    /// Stage scheduling on each replica ([`PipelineMode::Interleaved`] is
+    /// the default).
+    pub mode: PipelineMode,
+}
+
+impl PipelineSpawn {
+    pub fn new() -> PipelineSpawn {
+        PipelineSpawn {
+            stages: Vec::new(),
+            placement: Placement::Pinned,
+            mode: PipelineMode::default(),
+        }
+    }
+
+    /// Append a stage (flow order).
+    pub fn stage(mut self, cfg: KernelSpawn) -> Self {
+        self.stages.push(cfg);
+        self
+    }
+
+    /// Set the pipeline-wide placement.
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    /// Set the per-replica stage scheduling mode.
+    pub fn mode(mut self, m: PipelineMode) -> Self {
+        self.mode = m;
+        self
     }
 }
 
-/// A shared, set-once slot for plumbing a `MemRef` across stage boundaries
-/// (the paper does this with custom pre/post functions).
-#[derive(Clone, Default)]
-pub struct MemRefSlot {
-    inner: Arc<std::sync::Mutex<Option<super::mem_ref::MemRef>>>,
+impl Default for PipelineSpawn {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
-impl MemRefSlot {
-    pub fn new() -> Self {
-        Self::default()
-    }
+/// Display label for a pipeline spawn (error messages, logs):
+/// `pipeline[a>b>c]`.
+pub(crate) fn pipeline_label(stages: &[KernelSpawn]) -> String {
+    let names: Vec<&str> = stages.iter().map(|s| s.kernel.as_str()).collect();
+    format!("pipeline[{}]", names.join(">"))
+}
 
-    pub fn set(&self, r: super::mem_ref::MemRef) {
-        *self.inner.lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
+/// Postprocess helper: fan a stage's `Ref` output into a tuple with the
+/// `idx`-th `Ref` argument of that stage's *incoming* message (stages whose
+/// successor needs several operands, e.g. `lut(fillslit, sorted)` in the
+/// WAH pipeline). The pairing source is the request currently being served
+/// — not a shared slot — so concurrent requests and pipeline replicas can
+/// never observe each other's references (the `MemRefSlot` set-once hazard
+/// this replaced: a per-process slot was clobbered by whichever request or
+/// replica wrote last).
+pub fn post_pair_from(idx: usize) -> impl Fn(ArgValue, &Message) -> Message + Send + Sync {
+    move |out, incoming| {
+        let paired = extract_args(incoming).and_then(|args| {
+            args.into_iter()
+                .filter_map(|a| match a {
+                    ArgValue::Ref(r) => Some(r),
+                    _ => None,
+                })
+                .nth(idx)
+        });
+        match (&out, paired) {
+            (ArgValue::Ref(r), Some(e)) => {
+                Message::new(vec![ArgValue::Ref(r.clone()), ArgValue::Ref(e)])
+            }
+            _ => Message::new(out),
+        }
     }
+}
 
-    pub fn get(&self) -> Option<super::mem_ref::MemRef> {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner()).clone()
-    }
+/// One-shot continuation fired when a request's last stage replied (or any
+/// stage failed).
+type StageFinish = Box<dyn FnOnce(&mut Ctx, Result<Message, ErrorMsg>) + Send>;
 
-    pub fn take(&self) -> Option<super::mem_ref::MemRef> {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner()).take()
+/// Chain one request through the stages from index `i` with request
+/// continuations: stage `i`'s reply becomes stage `i+1`'s input; the first
+/// error short-circuits to `finish`. A stage that dies mid-request resolves
+/// through the same path — its closing mailbox (or its dropped promise)
+/// produces an error reply, so the requester always hears back exactly
+/// once.
+fn drive_stage(
+    ctx: &mut Ctx,
+    stages: Arc<Vec<ActorRef>>,
+    i: usize,
+    msg: Message,
+    finish: StageFinish,
+) {
+    if i >= stages.len() {
+        finish(ctx, Ok(msg));
+        return;
     }
+    let next = stages[i].clone();
+    ctx.request_msg(&next, msg).then(move |ctx, res| match res {
+        Ok(m) => drive_stage(ctx, stages, i + 1, m, finish),
+        Err(e) => finish(ctx, Err(e)),
+    });
+}
+
+/// Requests a lock-step replica has accepted but not started (the current
+/// request must finish its last stage first).
+#[derive(Default)]
+struct LockStepQueue {
+    busy: bool,
+    waiting: VecDeque<(Message, ResponsePromise, Instant)>,
+}
+
+/// Start one request under [`PipelineMode::LockStep`]; its finish
+/// continuation delivers the reply, retires the occupancy gauge, and pulls
+/// the next waiting request (if any) — one request end-to-end at a time.
+fn lockstep_start(
+    ctx: &mut Ctx,
+    stages: Arc<Vec<ActorRef>>,
+    device: Arc<Device>,
+    q: Arc<Mutex<LockStepQueue>>,
+    msg: Message,
+    promise: ResponsePromise,
+    t0: Instant,
+) {
+    let fin_stages = stages.clone();
+    let finish: StageFinish = Box::new(move |ctx, res| {
+        {
+            let stats = device.queue.stats();
+            stats.note_pipe_service(t0.elapsed());
+            stats.note_pipe_retired(1);
+        }
+        promise.deliver_result(res);
+        let next = {
+            let mut g = q.lock().unwrap_or_else(|p| p.into_inner());
+            match g.waiting.pop_front() {
+                Some(job) => Some(job),
+                None => {
+                    g.busy = false;
+                    None
+                }
+            }
+        };
+        if let Some((m, p, t)) = next {
+            lockstep_start(ctx, fin_stages.clone(), device, q, m, p, t);
+        }
+    });
+    drive_stage(ctx, stages, 0, msg, finish);
+}
+
+/// Spawn the per-replica pipeline driver: the actor the dispatcher
+/// delegates routed requests to. It chains the request through the stage
+/// facades (all bound to `device`) and answers the original requester via
+/// a response promise, accounting occupancy
+/// ([`ExecStats::pipe_occupancy`](crate::runtime::ExecStats)) and
+/// end-to-end service time (the pipeline EWMA) on the device's stats — the
+/// signals pipeline pools steer by. Queue-wait deadlines (`Stamped`
+/// requests under an admission `max_queue_wait`) are enforced here, at the
+/// replica boundary, exactly like a single-kernel facade's mailbox check;
+/// the stage facades behind the driver never see stamps or admission.
+pub(crate) fn spawn_pipeline_driver(
+    sys: &ActorSystem,
+    stages: Vec<ActorRef>,
+    device: Arc<Device>,
+    mode: PipelineMode,
+    admission: Option<Arc<Admission>>,
+    label: String,
+) -> ActorRef {
+    let stages = Arc::new(stages);
+    sys.spawn(move |_ctx| {
+        let stages = stages.clone();
+        let device = device.clone();
+        let admission = admission.clone();
+        let label = label.clone();
+        let lockstep: Arc<Mutex<LockStepQueue>> = Arc::new(Mutex::new(LockStepQueue::default()));
+        Behavior::new().on_any(move |ctx, raw| {
+            let (stamp, msg) = unstamp(raw);
+            if let (Some(at), Some(budget)) = (
+                stamp,
+                admission.as_ref().and_then(|a| a.cfg().max_queue_wait),
+            ) {
+                let waited = at.elapsed();
+                if waited > budget {
+                    // expired in the mailbox: fail fast instead of running
+                    // a whole stage chain nobody is waiting for
+                    device.queue.stats().note_deadline_failed(1);
+                    if let Some(a) = &admission {
+                        a.stats
+                            .deadline
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    let promise = ctx.make_promise();
+                    promise.deliver_err(deadline_error(&label, waited, budget));
+                    return Reply::Promised;
+                }
+            }
+            // occupancy rises at admission (lock-step waiters count — they
+            // are committed work the steering must see) and falls in the
+            // finish continuation, request-for-request
+            device.queue.stats().note_pipe_admitted(1);
+            let t0 = Instant::now();
+            let promise = ctx.make_promise();
+            match mode {
+                PipelineMode::Interleaved => {
+                    let fin_device = device.clone();
+                    let finish: StageFinish = Box::new(move |_ctx, res| {
+                        {
+                            let stats = fin_device.queue.stats();
+                            stats.note_pipe_service(t0.elapsed());
+                            stats.note_pipe_retired(1);
+                        }
+                        promise.deliver_result(res);
+                    });
+                    drive_stage(ctx, stages.clone(), 0, msg.clone(), finish);
+                }
+                PipelineMode::LockStep => {
+                    let start = {
+                        let mut g = lockstep.lock().unwrap_or_else(|p| p.into_inner());
+                        if g.busy {
+                            g.waiting.push_back((msg.clone(), promise, t0));
+                            None
+                        } else {
+                            g.busy = true;
+                            Some(promise)
+                        }
+                    };
+                    if let Some(promise) = start {
+                        lockstep_start(
+                            ctx,
+                            stages.clone(),
+                            device.clone(),
+                            lockstep.clone(),
+                            msg.clone(),
+                            promise,
+                            t0,
+                        );
+                    }
+                }
+            }
+            Reply::Promised
+        })
+    })
 }

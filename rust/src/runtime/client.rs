@@ -296,6 +296,10 @@ pub enum QueueCmd {
     Free { id: u64 },
     /// Completes when every previously enqueued command retired (clFinish).
     Barrier { done: Event },
+    /// Fault injection: the queue thread sleeps for the duration, stalling
+    /// every later command behind it — a slow/hung device, as opposed to
+    /// `Stop`'s clean death. Only the chaos harness pushes this.
+    Stall { dur: Duration },
     Stop,
 }
 
@@ -326,6 +330,28 @@ pub struct ExecStats {
     /// never reconcile there, and `launched`/`inflight` alone undercount a
     /// window that has not flushed yet.
     pub batch_pending: AtomicU64,
+    /// Occupancy published by pipeline drivers bound to this device, in
+    /// REQUESTS: requests admitted into any stage of a device-resident
+    /// pipeline and not yet resolved (reply or error). This is the
+    /// placement tier's queue-depth signal for *pipeline* replicas — a
+    /// request routed once fans out into one launch per stage, so the
+    /// dispatcher's routed-minus-retired estimate and the raw
+    /// `launched`/`inflight` gauges both miscount pipeline depth.
+    pub pipe_pending: AtomicU64,
+    /// EWMA of end-to-end pipeline service time in nanoseconds (α = 1/8),
+    /// sampled by the pipeline driver as each request's final stage
+    /// resolves — the `depth × service` term of cost-aware steering for
+    /// pipeline replicas. Single-writer (the driver's mailbox serializes
+    /// its continuations); 0 until the first request resolves.
+    pub pipe_ewma_ns: AtomicU64,
+    /// High-water mark of `inflight` (updated via `fetch_max` at submit
+    /// time): how many launches this queue ever held concurrently. The
+    /// stage-interleaving gate asserts on it — lock-step composition can
+    /// never push it past 1, interleaved stages of different requests can.
+    pub inflight_peak: AtomicU64,
+    /// Buffers migrated OFF this device by the dispatcher's explicit
+    /// device-to-device transfer path (download-from-src + upload-to-dst).
+    pub migrations: AtomicU64,
     /// Requests bound to this device that the admission layer failed
     /// fast for exceeding their `max_queue_wait` deadline (from a batch
     /// window or a facade mailbox) — per-device counterpart of the
@@ -387,6 +413,65 @@ impl ExecStats {
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
                 Some(v.saturating_sub(n))
             });
+    }
+
+    /// Pipeline-driver-published occupancy in requests (see
+    /// [`ExecStats::pipe_pending`]).
+    pub fn pipe_occupancy(&self) -> u64 {
+        self.pipe_pending.load(Ordering::Relaxed)
+    }
+
+    /// Record `n` requests admitted into a pipeline replica on this device.
+    pub(crate) fn note_pipe_admitted(&self, n: u64) {
+        self.pipe_pending.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` pipeline requests resolved (reply or error). Saturating
+    /// for the same reason as [`ExecStats::note_batch_retired`]: the gauge
+    /// is a routing heuristic, and wrapping it on an accounting bug would
+    /// freeze a replica out of rotation forever.
+    pub(crate) fn note_pipe_retired(&self, n: u64) {
+        let _ = self
+            .pipe_pending
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(n))
+            });
+    }
+
+    /// EWMA of end-to-end pipeline service time (zero until a pipeline
+    /// request resolved).
+    pub fn pipe_ewma(&self) -> Duration {
+        Duration::from_nanos(self.pipe_ewma_ns.load(Ordering::Relaxed))
+    }
+
+    /// Fold one resolved pipeline request's end-to-end time into the
+    /// pipeline EWMA. Single logical writer: the owning driver's mailbox
+    /// serializes its continuations, so load/store suffices (same
+    /// justification as [`ExecStats::note_service`]).
+    pub(crate) fn note_pipe_service(&self, d: Duration) {
+        let sample = (d.as_nanos() as u64).max(1);
+        let old = self.pipe_ewma_ns.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            sample
+        } else {
+            (old.saturating_mul(7).saturating_add(sample) / 8).max(1)
+        };
+        self.pipe_ewma_ns.store(new, Ordering::Relaxed);
+    }
+
+    /// High-water mark of concurrent launches on this queue.
+    pub fn inflight_peak(&self) -> u64 {
+        self.inflight_peak.load(Ordering::Relaxed)
+    }
+
+    /// Buffers migrated off this device so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    /// Record one buffer migrated off this device.
+    pub(crate) fn note_migration(&self) {
+        self.migrations.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Requests failed fast on this device by the deadline check.
@@ -621,7 +706,8 @@ impl DeviceQueue {
     /// could race a fast retirement into an underflow.
     fn pre_launch(&self) {
         self.stats.launched.fetch_add(1, Ordering::Relaxed);
-        self.stats.inflight.fetch_add(1, Ordering::Relaxed);
+        let depth = self.stats.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.stats.inflight_peak.fetch_max(depth, Ordering::Relaxed);
     }
 
     /// Undo the accounting for a submission the closed queue refused: the
@@ -774,6 +860,58 @@ impl DeviceQueue {
             .pop_timeout(timeout)
             .ok_or_else(|| anyhow!("download timed out"))?
             .map_err(|e| anyhow!(e))
+    }
+
+    /// Explicit device-to-device transfer: download buffer `id` from this
+    /// queue and upload the bytes into a fresh buffer on `dst`. Returns the
+    /// destination buffer id and the completion event of the *upload* —
+    /// wait on (or chain from) that event before using the new buffer.
+    ///
+    /// The hop is staged through host memory (download-from-src +
+    /// upload-to-dst), which is what both the stub and emulated backends
+    /// can do; a real backend with peer-to-peer copies would hook in here,
+    /// gated like the rest of the backend surface. Cost-wise the hop pays
+    /// both queues' [`PadModel::transfer_time`] pads, exactly the terms the
+    /// cost-aware policy prices a cross-device move at.
+    ///
+    /// The download rides this in-order queue, so it observes every
+    /// previously enqueued command on the source buffer (a producer that
+    /// failed propagates its error through the download). The upload is
+    /// pushed from the source queue thread's completion callback — a
+    /// lock-free channel push, never a blocking wait.
+    pub fn transfer_to(&self, id: u64, dst: &Arc<DeviceQueue>) -> (u64, Event) {
+        let new_id = dst.fresh_buffer_id();
+        let done = Event::new();
+        done.mark_enqueued();
+        self.stats.note_migration();
+        let ev = done.clone();
+        let dst = dst.clone();
+        let accepted = self.download_with(id, move |res| match res {
+            Ok(host) => {
+                // push_or_fail fails `ev` itself if dst closed meanwhile
+                dst.push_or_fail(
+                    QueueCmd::Upload {
+                        id: new_id,
+                        data: UploadSrc::Owned(host),
+                        done: ev.clone(),
+                    },
+                    &ev,
+                );
+            }
+            Err(e) => ev.fail(format!("migration download failed: {e}")),
+        });
+        if !accepted {
+            // closed source queue dropped the callback un-run
+            done.fail(format!("device queue {} is closed", self.name));
+        }
+        (new_id, done)
+    }
+
+    /// Fault injection for the chaos harness: stall the queue thread for
+    /// `dur`, delaying every command enqueued behind the stall (a slow
+    /// replica, not a dead one). Returns whether the queue accepted it.
+    pub fn inject_stall(&self, dur: Duration) -> bool {
+        self.push(QueueCmd::Stall { dur })
     }
 
     pub fn free(&self, id: u64) {
@@ -1238,6 +1376,7 @@ fn queue_loop(
             QueueCmd::Download { id, and_then } => and_then(st.download(id)),
             QueueCmd::Free { id } => st.free(id),
             QueueCmd::Barrier { done } => done.complete(),
+            QueueCmd::Stall { dur } => std::thread::sleep(dur),
             QueueCmd::Stop => break,
         }
     }

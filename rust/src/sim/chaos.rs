@@ -15,6 +15,14 @@
 //! `(pool size, seed, liveness history)` picks the same victims. Timing is
 //! wall-clock and therefore not deterministic — the schedule is a soak
 //! tool, not a replay log.
+//!
+//! Clean kills are not the only failure mode worth soaking: a wedged
+//! driver or a thermally-throttled device *stalls* without dying, and no
+//! `Down` ever fires. [`ChaosFault::Stall`] injects exactly that — the
+//! victim's device-queue thread sleeps for the configured duration, the
+//! replica stays "alive", and recovery must come from deadlines,
+//! cost-aware steering away from the ballooning queue, or migration —
+//! never from the supervisor.
 
 use crate::actor::{Exit, Message};
 use crate::opencl::placement::DevicePool;
@@ -24,18 +32,34 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+/// The fault one chaos tick injects into its victim.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ChaosFault {
+    /// Send the victim's facade `Exit::fault("chaos kill")` — a clean
+    /// actor death the dispatcher's monitor/respawn machinery observes
+    /// and recovers from.
+    #[default]
+    Kill,
+    /// Put the victim's *device queue* to sleep for the given duration:
+    /// the replica stays alive (no `Down` fires), it just stops making
+    /// progress — the grey failure supervision cannot see.
+    Stall(Duration),
+}
+
 /// Knobs for a chaos run.
 #[derive(Clone, Copy, Debug)]
 pub struct ChaosConfig {
-    /// Gap between kill attempts. The first kill fires one `interval`
+    /// Gap between fault injections. The first fault fires one `interval`
     /// after [`ChaosSchedule::start`], not immediately — the soak gets a
     /// healthy warm-up window.
     pub interval: Duration,
-    /// Stop after this many kills; `0` means unlimited (run until
-    /// [`ChaosSchedule::stop`]).
+    /// Stop after this many injected faults; `0` means unlimited (run
+    /// until [`ChaosSchedule::stop`]).
     pub max_kills: u64,
     /// Seed for victim selection.
     pub seed: u64,
+    /// What each tick does to its victim.
+    pub fault: ChaosFault,
 }
 
 impl Default for ChaosConfig {
@@ -44,6 +68,7 @@ impl Default for ChaosConfig {
             interval: Duration::from_millis(500),
             max_kills: 0,
             seed: 0x9e3779b97f4a7c15,
+            fault: ChaosFault::Kill,
         }
     }
 }
@@ -94,12 +119,26 @@ impl ChaosSchedule {
                         continue;
                     }
                     let victim = live[rng.below(live.len() as u64) as usize];
-                    replicas[victim]
-                        .facade()
-                        .send_from(None, Message::new(Exit::fault("chaos kill")));
+                    let injected = match cfg.fault {
+                        ChaosFault::Kill => {
+                            replicas[victim]
+                                .facade()
+                                .send_from(None, Message::new(Exit::fault("chaos kill")));
+                            true
+                        }
+                        ChaosFault::Stall(dur) => {
+                            // false only if the queue already shut down —
+                            // nothing was stalled, don't count it
+                            replicas[victim].device.queue.inject_stall(dur)
+                        }
+                    };
+                    if !injected {
+                        continue;
+                    }
                     let n = thread_kills.fetch_add(1, Ordering::AcqRel) + 1;
                     log::info!(
-                        "chaos: killed replica {victim} (kill #{n} of {})",
+                        "chaos: {:?} on replica {victim} (fault #{n} of {})",
+                        cfg.fault,
                         if cfg.max_kills == 0 {
                             "unlimited".to_string()
                         } else {
@@ -119,7 +158,7 @@ impl ChaosSchedule {
         }
     }
 
-    /// Kills sent so far.
+    /// Faults injected so far (kills sent or stalls landed).
     pub fn kill_count(&self) -> u64 {
         self.kills.load(Ordering::Acquire)
     }
@@ -193,6 +232,7 @@ mod tests {
                 interval: Duration::from_millis(5),
                 max_kills: 2,
                 seed: 7,
+                fault: ChaosFault::Kill,
             },
         );
         assert!(
@@ -201,6 +241,42 @@ mod tests {
         );
         let total = chaos.stop();
         assert_eq!(total, 2, "max_kills must cap the schedule exactly");
+        sys.shutdown();
+    }
+
+    #[test]
+    fn stall_faults_wedge_the_device_queue_without_killing_the_replica() {
+        let sys = ActorSystem::new(SystemConfig::default());
+        let pool = test_pool(&sys, 1);
+        let stall = Duration::from_millis(60);
+        let chaos = ChaosSchedule::start(
+            pool.clone(),
+            ChaosConfig {
+                interval: Duration::from_millis(5),
+                max_kills: 1,
+                seed: 3,
+                fault: ChaosFault::Stall(stall),
+            },
+        );
+        assert!(
+            eventually(|| chaos.kill_count() >= 1, Duration::from_secs(5)),
+            "stall fault never landed"
+        );
+        // the replica is stalled, not dead: supervision sees nothing...
+        assert!(pool.replicas()[0].is_alive(), "a stall must not kill");
+        // ...but the queue thread is asleep — a barrier enqueued behind
+        // the stall waits it out
+        let t0 = std::time::Instant::now();
+        pool.replicas()[0]
+            .device
+            .queue
+            .barrier(Duration::from_secs(5))
+            .expect("barrier after stall"); // lint-ok: test asserts queue drains
+        assert!(
+            t0.elapsed() >= stall / 2,
+            "barrier returned before the stall elapsed — fault not injected?"
+        );
+        chaos.stop();
         sys.shutdown();
     }
 
@@ -214,6 +290,7 @@ mod tests {
                 interval: Duration::from_secs(3600),
                 max_kills: 0,
                 seed: 1,
+                fault: ChaosFault::Kill,
             },
         );
         let start = std::time::Instant::now();

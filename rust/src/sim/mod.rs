@@ -8,9 +8,12 @@
 //! crossover points, transfer-bound regimes, and scaling shapes.
 //!
 //! The [`chaos`] submodule adds timed fault injection for the soak
-//! harness: a [`ChaosSchedule`] kills random live replicas of a
-//! replicated deployment on an interval, exercising the
-//! monitor/respawn path under live load.
+//! harness: a [`ChaosSchedule`] kills — or, with [`ChaosFault::Stall`],
+//! wedges the device queue of — random live replicas of a replicated
+//! deployment on an interval, exercising the monitor/respawn path (and
+//! the grey-failure paths supervision cannot see) under live load.
+//!
+//! [`ChaosFault::Stall`]: chaos::ChaosFault::Stall
 //!
 //! [`DeviceSpec`]: crate::opencl::DeviceSpec
 //! [`PadModel`]: crate::runtime::client::PadModel
@@ -18,5 +21,5 @@
 pub mod chaos;
 pub mod devices;
 
-pub use chaos::{ChaosConfig, ChaosSchedule};
+pub use chaos::{ChaosConfig, ChaosFault, ChaosSchedule};
 pub use devices::{gtx_780m, steering_pair, tesla_c2075, xeon_phi_5110p};

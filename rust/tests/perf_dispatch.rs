@@ -1,8 +1,10 @@
-//! Tier-1 perf probe: runs reduced versions of the three dispatch
-//! scenarios (1-vs-N-device placement, batched vs unbatched sub-capacity
-//! requests, cost-aware vs round-robin steering on the Fig 7b pair) and
-//! records the comparison in `BENCH_dispatch.json` (repo root), so the
-//! file refreshes on every verified build. The full-size measurement is
+//! Tier-1 perf probe: runs reduced versions of the dispatch scenarios
+//! (1-vs-N-device placement, batched vs unbatched sub-capacity requests,
+//! cost-aware vs round-robin steering on the Fig 7b pair, and the
+//! placement-tier pipeline triple — composition overhead, stage
+//! scheduling, stranded-ref recovery) and records the comparison in
+//! `BENCH_dispatch.json` (repo root), so the file refreshes on every
+//! verified build. The full-size measurement is
 //! `cargo bench --bench dispatch`; methodology in PERF.md.
 //!
 //! Like `perf_msgring`, throughput-ratio asserts are opt-in
@@ -15,9 +17,10 @@
 
 use caf_ocl::bench::{
     dispatch_batched_costaware_probe, dispatch_batching_probe, dispatch_costaware_probe,
-    dispatch_placement_probe, write_batched_costaware_manifest, write_costaware_manifest,
-    write_dispatch_json, write_dispatch_manifest, BatchedCostAwareProbeConfig,
-    CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
+    dispatch_pipeline_probe, dispatch_placement_probe, write_batched_costaware_manifest,
+    write_costaware_manifest, write_dispatch_json, write_dispatch_manifest,
+    BatchedCostAwareProbeConfig, CostAwareProbeConfig, DispatchProbeConfig, DispatchResults,
+    PipelineProbeConfig,
 };
 use std::time::Duration;
 
@@ -62,6 +65,15 @@ fn dispatch_records_placement_and_batching_throughput() {
         artifacts_dir: write_batched_costaware_manifest("tier1", 1024),
     };
     let bc = dispatch_batched_costaware_probe(&bc_cfg);
+    // placement-tier pipelines: composition overhead, stage scheduling,
+    // and stranded-ref recovery on the same stub manifest
+    let pipe_cfg = PipelineProbeConfig {
+        launch: cfg.launch,
+        requests: cfg.requests / 2,
+        capacity: cfg.capacity,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+    };
+    let pipe = dispatch_pipeline_probe(&pipe_cfg);
     for v in [
         one_device,
         n_device,
@@ -73,9 +85,36 @@ fn dispatch_records_placement_and_batching_throughput() {
         ca_large.round_robin_reqs_per_sec,
         bc.costaware_reqs_per_sec,
         bc.round_robin_reqs_per_sec,
+        pipe.monolithic_ms_per_req,
+        pipe.composed_ms_per_req,
+        pipe.interleaved_reqs_per_sec,
+        pipe.lockstep_reqs_per_sec,
+        pipe.migration_recovery_ms,
+        pipe.reupload_recovery_ms,
     ] {
-        assert!(v.is_finite() && v > 0.0, "degenerate throughput {v}");
+        assert!(v.is_finite() && v > 0.0, "degenerate measurement {v}");
     }
+    // acceptance (deterministic, so default-on): lock-step serializes a
+    // request end-to-end — its ExecStats high-water mark is pinned at one
+    // in-flight stage launch — while interleaving overlaps stage launches
+    // of different requests. The throughput ordering the overlap buys is
+    // wall-clock and therefore opt-in below.
+    assert_eq!(
+        pipe.lockstep_inflight_peak, 1,
+        "lock-step must never overlap stage launches"
+    );
+    assert!(
+        pipe.interleaved_inflight_peak >= 2,
+        "interleaving must overlap stage launches of different requests (peak {})",
+        pipe.interleaved_inflight_peak
+    );
+    // acceptance: the migration arm recovered by an explicit
+    // device-to-device transfer (counted on the source device), not by a
+    // routed error + re-upload
+    assert!(
+        pipe.migrations >= 1,
+        "the migration arm must count an explicit transfer"
+    );
     // acceptance: the small burst under CostAware must land strictly less
     // work on the high-dispatch-cost device than RoundRobin (which pays
     // the pad on every second request by construction). The comparison is
@@ -137,6 +176,7 @@ fn dispatch_records_placement_and_batching_throughput() {
         cost_aware_small: ca_small,
         cost_aware_large: ca_large,
         batched_costaware: bc,
+        pipeline: pipe,
     };
     let path = write_dispatch_json(&results, "cargo test --test perf_dispatch")
         .expect("write BENCH_dispatch.json");
@@ -146,6 +186,7 @@ fn dispatch_records_placement_and_batching_throughput() {
     assert!(written.contains("\"cost_aware\""));
     assert!(written.contains("\"batched_costaware\""));
     assert!(written.contains("\"multishape\""));
+    assert!(written.contains("\"pipeline\""));
     println!(
         "dispatch: placement {one_device:.1} -> {n_device:.1} req/s ({:.2}x), \
          batching {unbatched:.1} -> {batched:.1} req/s ({:.2}x), \
@@ -165,6 +206,19 @@ fn dispatch_records_placement_and_batching_throughput() {
         bc.multishape_requests,
         bc.multishape_fused_launches,
         path.display()
+    );
+    println!(
+        "pipeline: monolithic {:.2} ms/req vs composed {:.2} ms/req, \
+         lockstep {:.1} req/s (peak {}) vs interleaved {:.1} req/s (peak {}), \
+         recovery migrate {:.2} ms vs re-upload {:.2} ms",
+        pipe.monolithic_ms_per_req,
+        pipe.composed_ms_per_req,
+        pipe.lockstep_reqs_per_sec,
+        pipe.lockstep_inflight_peak,
+        pipe.interleaved_reqs_per_sec,
+        pipe.interleaved_inflight_peak,
+        pipe.migration_recovery_ms,
+        pipe.reupload_recovery_ms
     );
     // Opt-in comparison bounds (see perf_msgring for why they are not in
     // the default gate): with a 2 ms launch pad the padded scenarios are
@@ -193,6 +247,20 @@ fn dispatch_records_placement_and_batching_throughput() {
         assert_eq!(
             bc.costaware_slow_launches, 0,
             "on a quiet machine the batched burst avoids the slow device entirely"
+        );
+        assert!(
+            pipe.composed_ms_per_req > pipe.monolithic_ms_per_req,
+            "three pad-bearing stage launches must cost more than one \
+             ({:.2} vs {:.2} ms/req)",
+            pipe.composed_ms_per_req,
+            pipe.monolithic_ms_per_req
+        );
+        assert!(
+            pipe.interleaved_reqs_per_sec > pipe.lockstep_reqs_per_sec,
+            "overlapping stage launches must beat end-to-end serialization \
+             ({:.1} vs {:.1} req/s)",
+            pipe.interleaved_reqs_per_sec,
+            pipe.lockstep_reqs_per_sec
         );
     }
 }

@@ -12,6 +12,16 @@
 //! `RespawnPolicy::Limited` must retire a crash-looping replica after its
 //! budget.
 //!
+//! The pipeline section covers the placement tier's pipeline unit
+//! (`PipelineSpawn`): whole-pipeline routing (a request's stage launches
+//! never split across devices), per-request ref pairing (the `MemRefSlot`
+//! regression), interleaved-vs-lock-step stage scheduling (via
+//! `ExecStats::inflight_peak`), whole-replica supervision (one stage death
+//! kills and respawns the entire replica pipeline), opt-in migration of
+//! stranded refs off a dead replica, a mid-burst kill under mixed load
+//! (exactly-once resolution), and the WAH indexing pipeline end-to-end
+//! through the placement tier with a chaos kill.
+//!
 //! Everything runs on host-emulated kernels (`emu=` manifest extras) over
 //! simulated devices, so the suite needs no artifacts and no real XLA
 //! backend — it is tier-1 on both feature configurations.
@@ -1326,5 +1336,404 @@ fn chaos_kill_during_overload_never_loses_or_double_resolves() {
         eventually(|| handle.pool.replicas()[0].respawns() >= 1),
         "the killed replica must respawn"
     );
+    teardown(sys, mgr);
+}
+
+// --- placement-tier pipelines ------------------------------------------
+
+/// A 3-stage copy pipeline (Val -> Ref -> Ref -> Val): the smallest shape
+/// that exercises device-resident hand-off between interior stages.
+fn pipeline_3stage(mgr: &Manager, set: ReplicaSet, mode: PipelineMode) -> ReplicatedHandle {
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let stage = |in_mode: Mode, out: Mode| {
+        KernelSpawn::new(program.clone(), "copy_u32")
+            .inputs(in_mode, 1)
+            .output(out)
+    };
+    mgr.spawn_pipeline_replicated(
+        PipelineSpawn::new()
+            .stage(stage(Mode::Val, Mode::Ref))
+            .stage(stage(Mode::Ref, Mode::Ref))
+            .stage(stage(Mode::Ref, Mode::Val))
+            .placement(Placement::Replicated(set))
+            .mode(mode),
+    )
+    .unwrap()
+}
+
+#[test]
+fn pipeline_routes_as_a_unit_and_stays_device_resident() {
+    let (sys, mgr) = system("pipe-unit", 2, Duration::ZERO);
+    let handle = pipeline_3stage(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin),
+        PipelineMode::Interleaved,
+    );
+    let me = sys.scoped();
+    // one request: all three stage launches land on ONE device — the
+    // intermediate refs never cross (the tentpole acceptance)
+    let data: Vec<u32> = (0..CAP as u32).collect();
+    let out: Vec<u32> = me.request(&handle.actor, data.clone()).receive(T).unwrap();
+    assert_eq!(out, data);
+    let (l0, l1) = (launched_on(&mgr, 0), launched_on(&mgr, 1));
+    assert_eq!(l0 + l1, 3, "three stages launch exactly once each");
+    assert!(
+        l0 == 3 || l1 == 3,
+        "a request's stages must not split across devices (got {l0}/{l1})"
+    );
+    // a burst rotates whole pipelines: every device's launch count stays a
+    // multiple of the stage count, and both replicas serve
+    for i in 0..8u32 {
+        let data = vec![i; CAP];
+        let out: Vec<u32> = me.request(&handle.actor, data.clone()).receive(T).unwrap();
+        assert_eq!(out, data);
+    }
+    let (l0, l1) = (launched_on(&mgr, 0), launched_on(&mgr, 1));
+    assert_eq!(l0 + l1, 27, "9 requests x 3 stages, each exactly once");
+    assert_eq!(l0 % 3, 0, "whole pipelines only (got {l0}/{l1})");
+    assert_eq!(l1 % 3, 0, "whole pipelines only (got {l0}/{l1})");
+    assert!(l0 >= 12 && l1 >= 12, "round-robin rotates replicas ({l0}/{l1})");
+    teardown(sys, mgr);
+}
+
+#[test]
+fn pipeline_pairs_refs_per_request_not_per_process() {
+    // the MemRefSlot regression: stage 2 pairs its output with a ref from
+    // ITS OWN incoming request. Concurrent requests through one replica
+    // must never observe each other's references — with the old shared
+    // slot, whichever request wrote last clobbered both pairings.
+    let (sys, mgr) = system("pipe-pair", 1, Duration::from_millis(5));
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let vadd = mgr.create_kernel_program("vadd_u32").unwrap();
+    let driver = mgr
+        .spawn_pipeline(
+            PipelineSpawn::new()
+                .stage(
+                    KernelSpawn::new(program.clone(), "copy_u32")
+                        .inputs(Mode::Val, 1)
+                        .output(Mode::Ref),
+                )
+                .stage(
+                    KernelSpawn::new(program, "copy_u32")
+                        .inputs(Mode::Ref, 1)
+                        .output(Mode::Ref)
+                        .postprocess(post_pair_from(0)),
+                )
+                .stage(
+                    KernelSpawn::new(vadd, "vadd_u32")
+                        .inputs(Mode::Ref, 2)
+                        .output(Mode::Val),
+                )
+                .placement(Placement::Device(0)),
+        )
+        .unwrap();
+    let me = sys.scoped();
+    // interleaved driver keeps both requests in flight at once
+    let pending: Vec<_> = (1..=4u32)
+        .map(|i| me.request(&driver, vec![i; CAP]))
+        .collect();
+    for (i, p) in pending.into_iter().enumerate() {
+        let want = (i as u32 + 1) * 2;
+        let out: Vec<u32> = p.receive(T).unwrap();
+        assert_eq!(
+            out,
+            vec![want; CAP],
+            "request {i} must pair its OWN refs (copy + copy = 2x its data)"
+        );
+    }
+    teardown(sys, mgr);
+}
+
+#[test]
+fn interleaved_stages_overlap_where_lockstep_serializes() {
+    // acceptance: stage interleaving yields more in-flight stage launches
+    // than lock-step composition on the same device, asserted via the
+    // ExecStats high-water mark
+    let run = |tag: &str, mode: PipelineMode| -> u64 {
+        let (sys, mgr) = system(tag, 1, Duration::from_millis(10));
+        let handle =
+            pipeline_3stage(&mgr, ReplicaSet::new(PlacementPolicy::RoundRobin), mode);
+        let me = sys.scoped();
+        let pending: Vec<_> = (0..4u32)
+            .map(|i| me.request(&handle.actor, vec![i; CAP]))
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let out: Vec<u32> = p.receive(T).unwrap();
+            assert_eq!(out, vec![i as u32; CAP]);
+        }
+        let peak = mgr.device(0).unwrap().queue.stats().inflight_peak();
+        teardown(sys, mgr);
+        peak
+    };
+    let lock = run("pipe-lock", PipelineMode::LockStep);
+    let inter = run("pipe-inter", PipelineMode::Interleaved);
+    assert_eq!(
+        lock, 1,
+        "lock-step runs one request end-to-end at a time: stage launches never overlap"
+    );
+    assert!(
+        inter >= 2,
+        "interleaving must overlap stage launches of different requests (peak {inter})"
+    );
+}
+
+#[test]
+fn stage_death_kills_and_respawns_the_whole_replica_pipeline() {
+    let (sys, mgr) = system("pipe-respawn", 2, Duration::ZERO);
+    let handle = pipeline_3stage(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin).respawn(RespawnPolicy::Always),
+        PipelineMode::Interleaved,
+    );
+    let me = sys.scoped();
+    for i in 0..4u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    let old_driver = handle.pool.replicas()[0].facade().id();
+    let old_members = handle.pool.replicas()[0].members();
+    assert_eq!(old_members.len(), 3, "the roster exposes every stage");
+    // kill a MIDDLE STAGE, not the driver: supervision must take the whole
+    // replica pipeline down (no half-pipeline serves continuations against
+    // a dead peer) and respawn recompiles all stages
+    kill(&old_members[1]);
+    assert!(
+        eventually(|| handle.pool.replicas()[0].respawns() >= 1),
+        "a stage death must trigger a whole-pipeline respawn"
+    );
+    assert!(eventually(|| handle.pool.replicas()[0].is_alive()));
+    assert_ne!(
+        handle.pool.replicas()[0].facade().id(),
+        old_driver,
+        "the driver is a fresh incarnation"
+    );
+    let fresh = handle.pool.replicas()[0].members();
+    assert_eq!(fresh.len(), 3);
+    for s in &fresh {
+        assert!(
+            old_members.iter().all(|o| o.id() != s.id()),
+            "every stage facade must be a fresh incarnation"
+        );
+    }
+    // the respawned replica pipeline rejoins the full rotation
+    let (b0, b1) = (launched_on(&mgr, 0), launched_on(&mgr, 1));
+    for i in 0..8u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    let (d0, d1) = (launched_on(&mgr, 0) - b0, launched_on(&mgr, 1) - b1);
+    assert_eq!(d0 + d1, 24, "8 requests x 3 stages after the respawn");
+    assert_eq!(d0, 12, "respawned replica serves its full rotation share");
+    assert_eq!(d1, 12);
+    teardown(sys, mgr);
+}
+
+#[test]
+fn migration_reroutes_stranded_refs_instead_of_erroring() {
+    // the stranded-ref scenario of `stranded_refs_on_a_dead_replica_...`,
+    // with `ReplicaSet::migrate(true)`: instead of the routed error, the
+    // dispatcher device-to-device-copies the ref to a live replica and
+    // reschedules — the request succeeds
+    let (sys, mgr) = system("pipe-migrate", 2, Duration::ZERO);
+    let program = mgr.create_kernel_program("copy_u32").unwrap();
+    let producer = mgr
+        .spawn_cl(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Val, 1)
+                .output(Mode::Ref)
+                .placement(Placement::Device(1)),
+        )
+        .unwrap();
+    let handle = {
+        let program = mgr.create_kernel_program("copy_u32").unwrap();
+        mgr.spawn_cl_replicated(
+            KernelSpawn::new(program, "copy_u32")
+                .inputs(Mode::Ref, 1)
+                .output(Mode::Val)
+                .placement(Placement::Replicated(
+                    ReplicaSet::new(PlacementPolicy::RoundRobin).migrate(true),
+                )),
+        )
+        .unwrap()
+    };
+    let me = sys.scoped();
+    let data = vec![5u32; CAP];
+    let r: MemRef = me.request(&producer, data.clone()).receive(T).unwrap();
+    assert_eq!(r.device_id(), 1);
+    // kill device 1's replica: the ref is stranded there
+    kill(&handle.pool.replicas()[1].facade());
+    assert!(eventually(|| !handle.pool.replicas()[1].is_alive()));
+    let before = launched_on(&mgr, 0);
+    let out: Vec<u32> = me.request(&handle.actor, r).receive(T).unwrap();
+    assert_eq!(out, data, "migration must reroute, not error");
+    assert_eq!(
+        launched_on(&mgr, 0),
+        before + 1,
+        "the rerouted request launches on the survivor"
+    );
+    assert!(
+        mgr.device(1).unwrap().queue.stats().migrations() >= 1,
+        "the source device counts the explicit transfer"
+    );
+    teardown(sys, mgr);
+}
+
+#[test]
+fn pipeline_kill_mid_burst_resolves_every_request_exactly_once() {
+    // acceptance: a replicated pipeline under mixed-request load with one
+    // mid-burst stage kill — every request resolves reply-or-error exactly
+    // once, never by timeout, and Always-respawn restores service
+    let (sys, mgr) = system("pipe-chaos", 2, Duration::from_millis(5));
+    let handle = pipeline_3stage(
+        &mgr,
+        ReplicaSet::new(PlacementPolicy::RoundRobin).respawn(RespawnPolicy::Always),
+        PipelineMode::Interleaved,
+    );
+    let me = sys.scoped();
+    let pending: Vec<_> = (0..16u32)
+        .map(|i| me.request(&handle.actor, vec![i; CAP]))
+        .collect();
+    // mid-burst: a stage of replica 0 dies while requests are in flight
+    kill(&handle.pool.replicas()[0].members()[1]);
+    let (mut ok, mut errs) = (0usize, 0usize);
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.receive_msg(T) {
+            Ok(m) => {
+                assert_eq!(m.downcast_ref::<Vec<u32>>(), Some(&vec![i as u32; CAP]));
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    !e.reason.contains("timed out"),
+                    "request {i} was silently lost: {}",
+                    e.reason
+                );
+                errs += 1;
+            }
+        }
+    }
+    assert_eq!(ok + errs, 16, "every request resolves exactly once");
+    assert!(ok > 0, "the surviving replica pipeline must have served");
+    assert!(
+        eventually(|| handle.pool.replicas()[0].respawns() >= 1),
+        "the killed replica pipeline must respawn"
+    );
+    assert!(eventually(|| handle.pool.replicas()[0].is_alive()));
+    // post-mortem traffic flows on both replicas again
+    for i in 0..4u32 {
+        let out: Vec<u32> = me.request(&handle.actor, vec![i; CAP]).receive(T).unwrap();
+        assert_eq!(out, vec![i; CAP]);
+    }
+    teardown(sys, mgr);
+}
+
+// --- the WAH indexing pipeline through the placement tier ---------------
+
+/// Manifest with host-emulated stand-ins for the eight WAH stage kernels
+/// at capacity 4096 (identity semantics: the structure of the pipeline —
+/// context threading, Ref-mode hand-off, stage count — is real; the
+/// arithmetic is not, which is exactly what the placement-tier assertions
+/// need on the stub backend).
+fn wah_artifacts(tag: &str) -> String {
+    const N: usize = 4096;
+    let dir = std::env::temp_dir().join(format!(
+        "caf-ocl-placement-{}-{tag}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut manifest = String::new();
+    for (stage, n_in) in [
+        ("sort", 1),
+        ("chunklit", 1),
+        ("fillslit", 1),
+        ("interleave", 1),
+        ("count", 1),
+        ("scan", 1),
+        ("move", 2),
+        ("lut", 2),
+    ] {
+        let ins = vec![format!("u32:{N}"); n_in].join(" ");
+        manifest.push_str(&format!(
+            "wah_{stage}_{N}|emu|{ins}|u32:{N}|emu=identity n={N}\n"
+        ));
+    }
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    dir.to_string_lossy().to_string()
+}
+
+#[test]
+fn wah_pipeline_replicates_and_survives_a_chaos_kill() {
+    use caf_ocl::sim::{ChaosConfig, ChaosFault, ChaosSchedule};
+    const N: usize = 4096;
+    let sys = ActorSystem::new(
+        SystemConfig::default()
+            .with_threads(4)
+            .with_artifacts_dir(wah_artifacts("wah")),
+    );
+    let specs = vec![
+        sim_spec("wah-0", Duration::from_millis(2)),
+        sim_spec("wah-1", Duration::from_millis(2)),
+    ];
+    let mgr = Manager::load_with(&sys, specs);
+    let spawn = caf_ocl::indexing::pipeline_spawn(
+        &mgr,
+        0,
+        N,
+        Placement::Replicated(
+            ReplicaSet::new(PlacementPolicy::RoundRobin).respawn(RespawnPolicy::Always),
+        ),
+    )
+    .unwrap();
+    assert_eq!(spawn.stages.len(), 8, "the WAH build is eight stages");
+    let handle = mgr.spawn_pipeline_replicated(spawn).unwrap();
+    assert_eq!(handle.pool.replicas()[0].members().len(), 8);
+    let me = sys.scoped();
+    let pending: Vec<_> = (0..8u32)
+        .map(|i| {
+            let mut values = vec![i; N / 2];
+            values.resize(N, 1023); // pad like GpuIndexer::index
+            me.request(&handle.actor, values)
+        })
+        .collect();
+    // exactly one chaos kill mid-burst, through the production schedule
+    let chaos = ChaosSchedule::start(
+        handle.pool.clone(),
+        ChaosConfig {
+            interval: Duration::from_millis(10),
+            max_kills: 1,
+            seed: 42,
+            fault: ChaosFault::Kill,
+        },
+    );
+    let (mut ok, mut errs) = (0usize, 0usize);
+    for (i, p) in pending.into_iter().enumerate() {
+        match p.receive_msg(T) {
+            Ok(m) => {
+                // [moved, lut]: two device refs, resident on ONE device
+                let ctx = m.downcast_ref::<Vec<ArgValue>>().unwrap();
+                assert_eq!(ctx.len(), 2, "the WAH pipeline returns (index, LUT)");
+                let ids: Vec<usize> = ctx
+                    .iter()
+                    .map(|a| match a {
+                        ArgValue::Ref(r) => r.device_id(),
+                        other => panic!("expected device refs, got {other:?}"),
+                    })
+                    .collect();
+                assert_eq!(ids[0], ids[1], "outputs must share one device");
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    !e.reason.contains("timed out"),
+                    "request {i} was silently lost: {}",
+                    e.reason
+                );
+                errs += 1;
+            }
+        }
+    }
+    assert_eq!(chaos.stop(), 1, "exactly one kill was scheduled");
+    assert_eq!(ok + errs, 8, "every request resolves exactly once");
+    assert!(ok > 0, "the surviving replica must have served");
     teardown(sys, mgr);
 }
